@@ -1,0 +1,82 @@
+//! End-to-end driver (the EXPERIMENTS.md validation run): assemble the BEM
+//! Laplace SLP system on the unit sphere in all three hierarchical formats,
+//! compress, and solve ∫ u/‖x−y‖ = f with CG, logging the residual curve.
+//!
+//! Run: `cargo run --release --example bem_laplace_cg -- --level 4 --eps 1e-6`
+
+use hmatc::prelude::*;
+use hmatc::solver::cg;
+use hmatc::util::args::Args;
+use hmatc::util::{fmt_bytes, fmt_secs, Timer};
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let level = args.num_or("level", 4usize);
+    let eps = args.num_or("eps", 1e-6f64);
+    let tol = args.num_or("tol", 1e-8f64);
+
+    let t = Timer::start();
+    let geom = hmatc::geometry::icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let n = gen.len();
+    let ct = Arc::new(ClusterTree::build(gen.points(), 64));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    println!("setup: n = {n}, {}", fmt_secs(t.elapsed()));
+
+    let t = Timer::start();
+    let h = HMatrix::build(&bt, &gen, &hmatc::lowrank::AcaOptions::with_eps(eps));
+    println!("H build: {} | {}", fmt_secs(t.elapsed()), fmt_bytes(h.byte_size()));
+
+    let t = Timer::start();
+    let uh = hmatc::uniform::build_from_h(&h, eps, hmatc::uniform::CouplingKind::Combined);
+    println!("UH build: {} | {}", fmt_secs(t.elapsed()), fmt_bytes(uh.byte_size()));
+
+    let t = Timer::start();
+    let h2 = hmatc::h2::build_from_h(&h, eps);
+    println!("H2 build: {} | {}", fmt_secs(t.elapsed()), fmt_bytes(h2.byte_size()));
+
+    // right-hand side for f(x) ≡ 1 on Γ: Galerkin load vector b_i = ∫_πi 1 =
+    // A_i, permuted to the internal (cluster tree) ordering
+    let b: Vec<f64> = (0..n).map(|pos| geom.areas[ct.perm[pos]]).collect();
+
+    // solve with each format, uncompressed and AFLP-compressed
+    let solve = |name: &str, apply: &(dyn Fn(&[f64], &mut [f64]) + Sync)| {
+        let op = (n, |x: &[f64], y: &mut [f64]| apply(x, y));
+        let (sol, stats) = cg(&op, &b, tol, 2000);
+        println!(
+            "CG[{name}]: {} iters, residual {:.2e}, {} ({})",
+            stats.iterations,
+            stats.residual,
+            fmt_secs(stats.seconds),
+            if stats.converged { "converged" } else { "NOT converged" }
+        );
+        // residual curve, decimated
+        let hist = &stats.residual_history;
+        let step = (hist.len() / 8).max(1);
+        let curve: Vec<String> = hist.iter().step_by(step).map(|r| format!("{r:.1e}")).collect();
+        println!("  residual curve: {}", curve.join(" → "));
+        sol
+    };
+
+    let x_h = solve("H uncompressed", &|x, y| hmatc::mvm::mvm(1.0, &h, x, y, MvmAlgorithm::ClusterLists));
+    let x_uh = solve("UH row-wise", &|x, y| hmatc::mvm::uniform_mvm(1.0, &uh, x, y, UniMvmAlgorithm::RowWise));
+    let x_h2 = solve("H2 row-wise", &|x, y| hmatc::mvm::h2_mvm(1.0, &h2, x, y, H2MvmAlgorithm::RowWise));
+
+    let mut hz = h.clone();
+    hz.compress(&CompressionConfig::aflp(eps));
+    println!("compressed H: {}", fmt_bytes(hz.byte_size()));
+    let x_hz = solve("H AFLP-compressed", &|x, y| hmatc::mvm::mvm(1.0, &hz, x, y, MvmAlgorithm::ClusterLists));
+
+    // cross-check the four solutions
+    let norm: f64 = x_h.iter().map(|v| v * v).sum::<f64>().sqrt();
+    for (name, other) in [("UH", &x_uh), ("H2", &x_h2), ("zH", &x_hz)] {
+        let d: f64 = x_h.iter().zip(other).map(|(a, c)| (a - c) * (a - c)).sum::<f64>().sqrt();
+        println!("‖x_H − x_{name}‖/‖x_H‖ = {:.2e}", d / norm);
+    }
+
+    // physical sanity: for f ≡ 1 on the unit sphere, the SLP solution is the
+    // constant charge density u = 1 (up to discretization error)
+    let mean: f64 = x_h.iter().sum::<f64>() / n as f64;
+    println!("mean(u) = {mean:.4} (analytic: 1.0 for the unit sphere)");
+}

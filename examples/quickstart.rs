@@ -1,0 +1,44 @@
+//! Quickstart: build an H-matrix for the BEM model problem, compress it with
+//! AFLP + VALR, and compare memory and MVM time.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hmatc::bench::bench_fn;
+use hmatc::prelude::*;
+use hmatc::util::{fmt_bytes, fmt_secs, Rng};
+use std::sync::Arc;
+
+fn main() {
+    // 1. Geometry + matrix generator: Laplace single layer potential on the
+    //    unit sphere (paper §2.1), n = 5120 piecewise-constant DoF.
+    let geom = hmatc::geometry::icosphere(4);
+    let gen = LaplaceSlp::new(&geom);
+    println!("problem: Laplace SLP on S², n = {}", gen.len());
+
+    // 2. Cluster tree + block tree with standard admissibility (η = 2).
+    let ct = Arc::new(ClusterTree::build(gen.points(), 64));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+
+    // 3. H-matrix with ACA at accuracy ε = 1e-6.
+    let eps = 1e-6;
+    let mut h = HMatrix::build(&bt, &gen, &hmatc::lowrank::AcaOptions::with_eps(eps));
+    println!("H-matrix: {} ({:.1} B/dof)", fmt_bytes(h.byte_size()), h.bytes_per_dof());
+
+    // 4. Multiply (collision-free Algorithm 3).
+    let mut rng = Rng::new(1);
+    let x = rng.vector(h.ncols());
+    let mut y = vec![0.0; h.nrows()];
+    let t0 = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &h, &x, &mut y, MvmAlgorithm::ClusterLists));
+    println!("uncompressed MVM: {}", fmt_secs(t0.median));
+
+    // 5. Compress (AFLP + VALR, §4) and multiply again — same API.
+    let before = h.byte_size();
+    h.compress(&CompressionConfig::aflp(eps));
+    println!(
+        "compressed:  {} ({:.2}x smaller)",
+        fmt_bytes(h.byte_size()),
+        before as f64 / h.byte_size() as f64
+    );
+    let t1 = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &h, &x, &mut y, MvmAlgorithm::ClusterLists));
+    println!("compressed MVM:  {} ({:.2}x speedup)", fmt_secs(t1.median), t0.median / t1.median);
+}

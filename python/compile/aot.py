@@ -1,0 +1,72 @@
+"""AOT lowering: JAX/Pallas graphs → HLO *text* artifacts for the rust
+runtime.
+
+HLO text (NOT ``lowered.compile()``/serialized protos) is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+xla_extension 0.5.1 behind the published ``xla`` crate rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage: python -m compile.aot --outdir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# shapes baked into the artifacts (keep in sync with rust/src/runtime/tiles.rs)
+BATCH = 64
+TILE = 64
+RANK = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Return {artifact name: HLO text} for every compiled graph."""
+    f32 = jnp.float32
+    u32 = jnp.uint32
+    tiles = jax.ShapeDtypeStruct((BATCH, TILE, TILE), f32)
+    xs = jax.ShapeDtypeStruct((BATCH, TILE), f32)
+    words = jax.ShapeDtypeStruct((BATCH, TILE * TILE // 2), u32)
+    u = jax.ShapeDtypeStruct((BATCH, TILE, RANK), f32)
+    v = jax.ShapeDtypeStruct((BATCH, TILE, RANK), f32)
+
+    out = {}
+    out["dense_tile_mvm"] = to_hlo_text(jax.jit(model.dense_tile_model).lower(tiles, xs))
+    out["fpx_tile_mvm_b2"] = to_hlo_text(
+        jax.jit(lambda w, x: model.fpx_tile_model_b2(w, x, tile=TILE)).lower(words, xs)
+    )
+    out["lowrank_tile_mvm"] = to_hlo_text(jax.jit(model.lowrank_tile_model).lower(u, v, xs))
+    out["combined_leaf_mvm"] = to_hlo_text(
+        jax.jit(model.combined_leaf_model).lower(tiles, u, v, xs, xs)
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file output (ignored name, writes all)")
+    args = ap.parse_args()
+    outdir = args.outdir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+    for name, text in lower_all().items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

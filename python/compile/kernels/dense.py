@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: batched dense tile matvec y[b] = D[b] @ x[b].
+
+One grid step per tile; the BlockSpec streams one (T, T) tile plus its (T,)
+input vector into VMEM per step. On a real TPU the f32 tile (T=64 → 16 KiB)
+fits VMEM trivially and the contraction maps to the MXU; on this CPU sandbox
+the kernel runs with ``interpret=True`` (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tile_ref, x_ref, y_ref):
+    t = tile_ref[0]  # (T, T) row-major
+    x = x_ref[0]  # (T,)
+    y_ref[0, :] = jnp.dot(t, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dense_tile_mvm(tiles, xs, interpret=True):
+    """tiles: f32[B, T, T] (row-major per tile), xs: f32[B, T] → f32[B, T]."""
+    b, t, t2 = tiles.shape
+    assert t == t2 and xs.shape == (b, t)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t), jnp.float32),
+        interpret=interpret,
+    )(tiles, xs)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: FPX-compressed tile matvec — the paper's §4.3 memory
+accessor as a TPU-style kernel.
+
+The tile lives in HBM as *packed truncated-IEEE half-words* (2-byte FPX32,
+two values per uint32 word, little-endian; same layout as the rust codec's
+byte planes). The BlockSpec streams one compressed tile (T·T/2 words = half
+the bytes of an f32 tile) into VMEM per grid step; integer shift/mask + a
+bitcast widen it in-register; the matvec then runs at f32.
+
+Hardware adaptation (DESIGN.md §Pallas): the paper's AVX512 byte-shuffle
+decode becomes vector integer ops on the VPU — the speedup mechanism (half
+the HBM traffic per tile) is preserved. ``interpret=True`` on this sandbox.
+"""
+
+import functools
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(words_ref, x_ref, y_ref, *, tile):
+    w = words_ref[0].astype(jnp.uint32)  # (T*T//2,)
+    low = (w & jnp.uint32(0xFFFF)) << jnp.uint32(16)
+    high = w & jnp.uint32(0xFFFF0000)
+    lo_f = lax.bitcast_convert_type(low, jnp.float32)
+    hi_f = lax.bitcast_convert_type(high, jnp.float32)
+    vals = jnp.stack([lo_f, hi_f], axis=-1).reshape(tile, tile)  # row-major
+    x = x_ref[0]
+    y_ref[0, :] = jnp.dot(vals, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def fpx2_tile_mvm(words, xs, tile, interpret=True):
+    """words: uint32[B, T*T//2] packed FPX-2 tiles, xs: f32[B, T] → f32[B, T]."""
+    b, nw = words.shape
+    assert nw == tile * tile // 2
+    assert xs.shape == (b, tile)
+    return pl.pallas_call(
+        functools.partial(_kernel, tile=tile),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, nw), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tile), jnp.float32),
+        interpret=interpret,
+    )(words, xs)

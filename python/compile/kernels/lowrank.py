@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: batched low-rank tile matvec y[b] = U[b] (V[b]^T x[b]).
+
+The two slim contractions keep the working set at 2·T·K f32 per grid step —
+the compressed-format analogue of the paper's low-rank block product
+t := V^H x|σ ; y|τ += U t (Algorithm 1's admissible branch).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u_ref, v_ref, x_ref, y_ref):
+    u = u_ref[0]  # (T, K)
+    v = v_ref[0]  # (T, K)
+    x = x_ref[0]  # (T,)
+    t = jnp.dot(v.T, x, preferred_element_type=jnp.float32)  # (K,)
+    y_ref[0, :] = jnp.dot(u, t, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lowrank_tile_mvm(u, v, xs, interpret=True):
+    """u, v: f32[B, T, K]; xs: f32[B, T] → f32[B, T]."""
+    b, t, k = u.shape
+    assert v.shape == (b, t, k) and xs.shape == (b, t)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t), jnp.float32),
+        interpret=interpret,
+    )(u, v, xs)

@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the Pallas kernels (correctness ground
+truth at build time — pytest compares every kernel against these).
+
+Also hosts the FPX byte-layout helpers shared with the rust side: a value is
+the top ``b`` bytes of its IEEE-754 FP32 pattern; for b=2 two half-words are
+packed little-endian into one uint32 (low half = even index), matching
+``rust/src/runtime/engine.rs::execute_mixed``.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_tile_mvm_ref(tiles, xs):
+    """y[b] = tiles[b] @ xs[b] for row-major tiles (B, T, T), xs (B, T)."""
+    return jnp.einsum("bij,bj->bi", tiles, xs)
+
+
+def lowrank_tile_mvm_ref(u, v, xs):
+    """y[b] = U[b] @ (V[b]^T @ xs[b]); U,V: (B, T, K), xs: (B, T)."""
+    t = jnp.einsum("bjk,bj->bk", v, xs)
+    return jnp.einsum("bik,bk->bi", u, t)
+
+
+def fpx2_decode_ref(words, n_values):
+    """Decode 2-byte FPX32 values packed two-per-uint32 word.
+
+    words: uint32[..., W] with W = n_values // 2. Value 2w sits in the low
+    16 bits, value 2w+1 in the high 16 bits; each half-word holds the top
+    two bytes of an f32 (bf16-like truncation).
+    """
+    words = words.astype(jnp.uint32)
+    low = (words & jnp.uint32(0xFFFF)) << jnp.uint32(16)
+    high = words & jnp.uint32(0xFFFF0000)
+    lo_f = lax.bitcast_convert_type(low, jnp.float32)
+    hi_f = lax.bitcast_convert_type(high, jnp.float32)
+    vals = jnp.stack([lo_f, hi_f], axis=-1)
+    return vals.reshape(*words.shape[:-1], n_values)
+
+
+def fpx2_tile_mvm_ref(words, xs, tile):
+    """Reference for the FPX tile kernel: decode then matvec.
+
+    words: uint32 (B, T*T//2); xs: (B, T); returns (B, T).
+    """
+    vals = fpx2_decode_ref(words, tile * tile)
+    tiles = vals.reshape(words.shape[0], tile, tile)
+    return dense_tile_mvm_ref(tiles, xs)
+
+
+# ---------------------------------------------------------------------------
+# numpy-side encode helpers (test/data-prep only)
+# ---------------------------------------------------------------------------
+
+def fpx2_encode_np(values):
+    """Truncate float32 values to their top 2 bytes (round-to-nearest) and
+    pack two per uint32 word, little-endian — the layout the rust runtime
+    ships to the kernel. `values` is a flat float array of even length."""
+    v = np.asarray(values, dtype=np.float32)
+    assert v.size % 2 == 0, "pad to even length"
+    bits = v.view(np.uint32)
+    rounded = bits + np.uint32(0x8000)
+    # avoid carries into inf/nan: fall back to plain truncation there
+    over = ~np.isfinite(((rounded >> np.uint32(16)) << np.uint32(16)).view(np.float32))
+    half = np.where(over, bits >> np.uint32(16), rounded >> np.uint32(16)).astype(np.uint32)
+    lo = half[0::2]
+    hi = half[1::2]
+    return (lo | (hi << np.uint32(16))).astype(np.uint32)
+
+
+def fpx2_decode_np(words, n_values):
+    """numpy inverse of fpx2_encode_np (exact decode of the truncated data)."""
+    w = np.ascontiguousarray(np.asarray(words, dtype=np.uint32))
+    lo = ((w & np.uint32(0xFFFF)) << np.uint32(16)).view(np.float32)
+    hi = (w & np.uint32(0xFFFF0000)).view(np.float32)
+    out = np.empty(n_values, dtype=np.float32)
+    out[0::2] = lo
+    out[1::2] = hi
+    return out

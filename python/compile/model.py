@@ -1,0 +1,37 @@
+"""L2 — JAX compute graphs over the L1 Pallas kernels.
+
+These are the graphs the AOT pipeline lowers to HLO for the rust runtime:
+batched leaf-level H-MVM stages. Python never runs at request time; rust
+feeds gathered tile batches to the compiled executables (see
+rust/src/runtime/tiles.rs).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.dense import dense_tile_mvm
+from .kernels.fpx import fpx2_tile_mvm
+from .kernels.lowrank import lowrank_tile_mvm
+
+
+def dense_tile_model(tiles, xs):
+    """Batched dense near-field stage: y[b] = D[b] x[b]."""
+    return (dense_tile_mvm(tiles, xs),)
+
+
+def fpx_tile_model_b2(words, xs, tile=64):
+    """Batched compressed near-field stage (2-byte FPX storage)."""
+    return (fpx2_tile_mvm(words, xs, tile),)
+
+
+def lowrank_tile_model(u, v, xs):
+    """Batched far-field stage: y[b] = U[b] V[b]^T x[b]."""
+    return (lowrank_tile_mvm(u, v, xs),)
+
+
+def combined_leaf_model(tiles, u, v, x_dense, x_lr):
+    """One leaf-level H-MVM step: dense tiles + low-rank tiles, summed where
+    the rust coordinator scatters them. Demonstrates that the stages fuse
+    into a single HLO module (one executable per batch shape)."""
+    yd = dense_tile_mvm(tiles, x_dense)
+    yl = lowrank_tile_mvm(u, v, x_lr)
+    return (yd, yl, jnp.add(yd, yl))

@@ -1,0 +1,146 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+with hypothesis sweeping shapes and data distributions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense import dense_tile_mvm
+from compile.kernels.fpx import fpx2_tile_mvm
+from compile.kernels.lowrank import lowrank_tile_mvm
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# dense tile kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=8),
+    t=st.sampled_from([4, 8, 16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dense_kernel_matches_ref(b, t, seed):
+    tiles = rand((b, t, t), seed)
+    xs = rand((b, t), seed + 1)
+    got = dense_tile_mvm(tiles, xs)
+    want = ref.dense_tile_mvm_ref(tiles, xs)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_kernel_identity():
+    t = 16
+    tiles = jnp.stack([jnp.eye(t, dtype=jnp.float32)] * 3)
+    xs = rand((3, t), 7)
+    got = dense_tile_mvm(tiles, xs)
+    np.testing.assert_allclose(got, xs, rtol=1e-6)
+
+
+def test_dense_kernel_zero_tiles():
+    got = dense_tile_mvm(jnp.zeros((2, 8, 8), jnp.float32), rand((2, 8), 9))
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# low-rank tile kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=6),
+    t=st.sampled_from([8, 16, 64]),
+    k=st.sampled_from([1, 4, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lowrank_kernel_matches_ref(b, t, k, seed):
+    u = rand((b, t, k), seed)
+    v = rand((b, t, k), seed + 1)
+    xs = rand((b, t), seed + 2)
+    got = lowrank_tile_mvm(u, v, xs)
+    want = ref.lowrank_tile_mvm_ref(u, v, xs)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_lowrank_matches_dense_product():
+    b, t, k = 2, 16, 3
+    u = rand((b, t, k), 11)
+    v = rand((b, t, k), 12)
+    xs = rand((b, t), 13)
+    dense = jnp.einsum("bik,bjk->bij", u, v)
+    want = ref.dense_tile_mvm_ref(dense, xs)
+    got = lowrank_tile_mvm(u, v, xs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# FPX decode-and-multiply kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=4),
+    t=st.sampled_from([8, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_fpx_kernel_matches_ref(b, t, seed, scale):
+    rng = np.random.default_rng(seed)
+    vals = rng.standard_normal((b, t * t), dtype=np.float32) * scale
+    words = np.stack([ref.fpx2_encode_np(row) for row in vals])
+    xs = rand((b, t), seed + 1)
+    got = fpx2_tile_mvm(jnp.asarray(words), xs, t)
+    want = ref.fpx2_tile_mvm_ref(jnp.asarray(words), xs, t)
+    # f32 accumulation-order differences scale with the data magnitude
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * scale * t)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=512),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fpx_encode_decode_error_bound(n, seed):
+    # encode/decode roundtrip has bf16-level relative error (≤ 2^-8 with RTN)
+    rng = np.random.default_rng(seed)
+    vals = rng.standard_normal(2 * n).astype(np.float32)
+    words = ref.fpx2_encode_np(vals)
+    dec = ref.fpx2_decode_np(words, 2 * n)
+    rel = np.abs(dec - vals) / np.maximum(np.abs(vals), 1e-30)
+    assert rel.max() <= 2.0**-8, rel.max()
+
+
+def test_fpx_jnp_decode_matches_np():
+    rng = np.random.default_rng(3)
+    vals = rng.standard_normal(128).astype(np.float32)
+    words = ref.fpx2_encode_np(vals)
+    dec_np = ref.fpx2_decode_np(words, 128)
+    dec_jnp = np.asarray(ref.fpx2_decode_ref(jnp.asarray(words), 128))
+    np.testing.assert_array_equal(dec_np, dec_jnp)
+
+
+def test_fpx_kernel_decodes_exactly_the_truncated_values():
+    # kernel(words) must equal matvec(decoded values) bit-for-bit at f32
+    t = 16
+    rng = np.random.default_rng(5)
+    vals = rng.standard_normal(t * t).astype(np.float32)
+    words = ref.fpx2_encode_np(vals)[None, :]
+    dec = ref.fpx2_decode_np(words[0], t * t).reshape(t, t)
+    xs = rng.standard_normal(t).astype(np.float32)[None, :]
+    got = np.asarray(fpx2_tile_mvm(jnp.asarray(words), jnp.asarray(xs), t))[0]
+    want = dec @ xs[0]
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fpx_compression_halves_bytes():
+    t = 64
+    n = t * t
+    words = ref.fpx2_encode_np(np.ones(n, dtype=np.float32))
+    assert words.nbytes == n * 2  # 2 bytes/value vs 4 for f32

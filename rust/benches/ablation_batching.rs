@@ -1,0 +1,53 @@
+//! Ablation — coordinator batching: multi-RHS MVM amortizes matrix loads
+//! over the batch, raising arithmetic intensity ∝ batch size. Reports
+//! per-request time vs batch size for uncompressed and compressed H.
+
+use hmatc::bench::workloads::Problem;
+use hmatc::bench::{bench_fn, write_result, Table};
+use hmatc::compress::CompressionConfig;
+use hmatc::la::DMatrix;
+use hmatc::mvm::h_mvm_multi;
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+use hmatc::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let level = args.num_or("level", 4usize);
+    let eps = 1e-6;
+    let p = Problem::new(level);
+    let h = p.build_h(eps);
+    let mut hz = h.clone();
+    hz.compress(&CompressionConfig::aflp(eps));
+    let n = p.n();
+    let mut rng = Rng::new(4);
+
+    println!("\n== Ablation: multi-RHS batching (n = {n}, eps = {eps:.0e}) ==");
+    let mut t = Table::new(&["batch", "t/req (unc)", "t/req (aflp)", "unc speedup vs b=1"]);
+    let mut doc = Vec::new();
+    let mut base = 0.0;
+    for &b in &[1usize, 2, 4, 8, 16] {
+        let x = DMatrix::random(n, b, &mut rng);
+        let mut y = DMatrix::zeros(n, b);
+        let r = bench_fn(1, 5, 0.02, || h_mvm_multi(1.0, &h, &x, &mut y));
+        let rz = bench_fn(1, 5, 0.02, || h_mvm_multi(1.0, &hz, &x, &mut y));
+        let per_req = r.median / b as f64;
+        let per_req_z = rz.median / b as f64;
+        if b == 1 {
+            base = per_req;
+        }
+        t.row(vec![
+            b.to_string(),
+            hmatc::util::fmt_secs(per_req),
+            hmatc::util::fmt_secs(per_req_z),
+            format!("{:.2}x", base / per_req),
+        ]);
+        doc.push(Json::obj(vec![
+            ("batch", b.into()),
+            ("per_req_unc", per_req.into()),
+            ("per_req_aflp", per_req_z.into()),
+        ]));
+    }
+    t.print();
+    write_result("ablation_batching", &Json::arr(doc));
+}

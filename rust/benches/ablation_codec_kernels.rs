@@ -1,0 +1,72 @@
+//! Ablation — compressed gemv kernel variants (Remark 4.1 / §4.3): direct
+//! per-entry decode (Algorithm 8 as printed) vs the 64-entry blockwise
+//! scheme, for AFLP and FPX, across block shapes.
+//!
+//! Also measures raw decode throughput per codec: the paper reports FPX
+//! decode up to 50 % faster than AFLP (byte shift vs FP multiply-add).
+
+use hmatc::bench::{bench_fn, write_result, Table};
+use hmatc::compress::{Blob, Codec};
+use hmatc::hmatrix::ZDense;
+use hmatc::la::DMatrix;
+use hmatc::mvm::{zgemv_blocked, zgemv_direct};
+use hmatc::util::json::Json;
+use hmatc::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(8);
+    let eps = 1e-6;
+
+    println!("\n== Ablation: raw decode throughput (GB/s of decoded f64) ==");
+    let data = {
+        let mut v = vec![0.0; 1 << 20];
+        rng.fill_normal(&mut v);
+        v
+    };
+    let mut out = vec![0.0; data.len()];
+    let mut t = Table::new(&["codec", "bytes/val", "decode GB/s (output)"]);
+    let mut doc = Vec::new();
+    for codec in [Codec::Aflp, Codec::Fpx] {
+        let blob = Blob::compress(codec, &data, eps);
+        let r = bench_fn(1, 5, 0.05, || blob.decompress_into(&mut out));
+        let gbs = (data.len() * 8) as f64 / r.median / 1e9;
+        t.row(vec![codec.name().into(), blob.bytes_per_value().to_string(), format!("{gbs:.2}")]);
+        doc.push(Json::obj(vec![
+            ("codec", codec.name().into()),
+            ("bytes_per_value", blob.bytes_per_value().into()),
+            ("decode_gbs", gbs.into()),
+        ]));
+    }
+    t.print();
+
+    println!("\n== Ablation: zgemv direct vs blockwise ==");
+    let mut t2 = Table::new(&["codec", "shape", "direct", "blocked", "blocked speedup"]);
+    let mut doc2 = Vec::new();
+    for (m, n) in [(64usize, 64usize), (256, 256), (1024, 256)] {
+        let mat = DMatrix::random(m, n, &mut rng);
+        let x = rng.vector(n);
+        let mut y = vec![0.0; m];
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let z = ZDense::compress(&mat, codec, eps);
+            let rd = bench_fn(1, 5, 0.02, || zgemv_direct(1.0, &z, &x, &mut y));
+            let rb = bench_fn(1, 5, 0.02, || zgemv_blocked(1.0, &z, &x, &mut y));
+            t2.row(vec![
+                codec.name().into(),
+                format!("{m}x{n}"),
+                hmatc::util::fmt_secs(rd.median),
+                hmatc::util::fmt_secs(rb.median),
+                format!("{:.2}x", rd.median / rb.median),
+            ]);
+            doc2.push(Json::obj(vec![
+                ("codec", codec.name().into()),
+                ("m", m.into()),
+                ("n", n.into()),
+                ("direct", rd.median.into()),
+                ("blocked", rb.median.into()),
+            ]));
+        }
+    }
+    t2.print();
+
+    write_result("ablation_codec_kernels", &Json::obj(vec![("decode", Json::arr(doc)), ("zgemv", Json::arr(doc2))]));
+}

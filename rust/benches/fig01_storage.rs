@@ -1,0 +1,64 @@
+//! Figure 1 — matrix storage (bytes per DoF) for H, UH and H² formats,
+//! vs problem size (left) and vs accuracy (right).
+//!
+//! Expected shape (paper): H grows fastest with n; UH grows slower; H² is
+//! ~constant per DoF. All grow as ε decreases.
+
+use hmatc::bench::workloads::{Formats, Problem};
+use hmatc::bench::{default_eps, default_levels, write_result, Table};
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let levels = default_levels(args.flag("large"));
+    let eps_fixed = 1e-6;
+
+    println!("\n== Fig. 1 (left): storage per DoF vs n (eps = {eps_fixed:.0e}) ==");
+    let mut t = Table::new(&["n", "H B/dof", "UH B/dof", "H2 B/dof"]);
+    let mut series = Vec::new();
+    for &level in &levels {
+        let p = Problem::new(level);
+        let f = Formats::build(&p, eps_fixed);
+        t.row(vec![
+            p.n().to_string(),
+            format!("{:.1}", f.h.bytes_per_dof()),
+            format!("{:.1}", f.uh.bytes_per_dof()),
+            format!("{:.1}", f.h2.bytes_per_dof()),
+        ]);
+        series.push(Json::obj(vec![
+            ("n", p.n().into()),
+            ("h", f.h.bytes_per_dof().into()),
+            ("uh", f.uh.bytes_per_dof().into()),
+            ("h2", f.h2.bytes_per_dof().into()),
+        ]));
+    }
+    t.print();
+
+    println!("\n== Fig. 1 (right): storage per DoF vs eps (n fixed) ==");
+    let level = *levels.last().unwrap();
+    let p = Problem::new(level);
+    let mut t2 = Table::new(&["eps", "H B/dof", "UH B/dof", "H2 B/dof"]);
+    let mut series_eps = Vec::new();
+    for &eps in &default_eps() {
+        let f = Formats::build(&p, eps);
+        t2.row(vec![
+            format!("{eps:.0e}"),
+            format!("{:.1}", f.h.bytes_per_dof()),
+            format!("{:.1}", f.uh.bytes_per_dof()),
+            format!("{:.1}", f.h2.bytes_per_dof()),
+        ]);
+        series_eps.push(Json::obj(vec![
+            ("eps", eps.into()),
+            ("h", f.h.bytes_per_dof().into()),
+            ("uh", f.uh.bytes_per_dof().into()),
+            ("h2", f.h2.bytes_per_dof().into()),
+        ]));
+    }
+    t2.print();
+
+    write_result(
+        "fig01_storage",
+        &Json::obj(vec![("vs_n", Json::arr(series)), ("vs_eps", Json::arr(series_eps))]),
+    );
+}

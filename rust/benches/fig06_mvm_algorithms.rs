@@ -1,0 +1,111 @@
+//! Figure 6 — runtime of the MVM algorithm variants for H (left), UH
+//! (center) and H² (right), vs n (eps fixed) and vs eps (n fixed).
+//!
+//! Expected shape (paper, on a many-core machine): "cluster lists" ≈
+//! "stacked" ≈ "chunks" fastest; "thread local" slower (reduction overhead);
+//! for UH "row wise" best; for H² "row wise" ≥ "mutex". On this single-core
+//! sandbox the ordering degenerates to per-algorithm bookkeeping overhead —
+//! the reduction overhead of "thread local" and the lock overhead of
+//! mutex/atomic variants remain visible.
+
+use hmatc::bench::workloads::{Formats, Problem};
+use hmatc::bench::{bench_fn, default_eps, default_levels, write_result, Table};
+use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+use hmatc::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let levels = default_levels(args.flag("large"));
+    let eps = 1e-6;
+    let mut out = Vec::new();
+
+    for &level in &levels {
+        let p = Problem::new(level);
+        let f = Formats::build(&p, eps);
+        let n = p.n();
+        let mut rng = Rng::new(1);
+        let x = rng.vector(n);
+        let mut y = vec![0.0; n];
+
+        println!("\n== Fig. 6: n = {n}, eps = {eps:.0e} ==");
+        let mut t = Table::new(&["format", "algorithm", "median", "GB/s"]);
+        let mut doc = vec![("n", Json::from(n))];
+
+        // the stacked layout is precomputed once (like the paper's setup) —
+        // `mvm(.., Stacked)` would rebuild it per product
+        let stacked = hmatc::mvm::hmvm::StackedH::new(&f.h);
+        for algo in MvmAlgorithm::all() {
+            let r = if algo == MvmAlgorithm::Stacked {
+                bench_fn(1, 5, 0.02, || hmatc::mvm::hmvm::stacked_with(&stacked, 1.0, &f.h, &x, &mut y))
+            } else {
+                bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, algo))
+            };
+            t.row(vec![
+                "H".into(),
+                algo.name().into(),
+                hmatc::util::fmt_secs(r.median),
+                format!("{:.2}", f.h.byte_size() as f64 / r.median / 1e9),
+            ]);
+            doc.push((algo.name(), r.median.into()));
+        }
+        for algo in UniMvmAlgorithm::all() {
+            let r = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, algo));
+            t.row(vec![
+                "UH".into(),
+                algo.name().into(),
+                hmatc::util::fmt_secs(r.median),
+                format!("{:.2}", f.uh.byte_size() as f64 / r.median / 1e9),
+            ]);
+            doc.push(match algo {
+                UniMvmAlgorithm::Mutex => ("uh mutex", r.median.into()),
+                UniMvmAlgorithm::RowWise => ("uh row wise", r.median.into()),
+                UniMvmAlgorithm::SepCoupling => ("uh sep coupling", r.median.into()),
+            });
+        }
+        for algo in H2MvmAlgorithm::all() {
+            let r = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, algo));
+            t.row(vec![
+                "H2".into(),
+                algo.name().into(),
+                hmatc::util::fmt_secs(r.median),
+                format!("{:.2}", f.h2.byte_size() as f64 / r.median / 1e9),
+            ]);
+            doc.push(match algo {
+                H2MvmAlgorithm::Mutex => ("h2 mutex", r.median.into()),
+                H2MvmAlgorithm::RowWise => ("h2 row wise", r.median.into()),
+            });
+        }
+        t.print();
+        out.push(Json::obj(doc));
+    }
+
+    // vs eps at the largest default size
+    let p = Problem::new(*levels.last().unwrap());
+    let mut eps_out = Vec::new();
+    for &e in &default_eps() {
+        let f = Formats::build(&p, e);
+        let n = p.n();
+        let mut rng = Rng::new(2);
+        let x = rng.vector(n);
+        let mut y = vec![0.0; n];
+        let rh = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists));
+        let ru = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise));
+        let r2 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise));
+        println!(
+            "eps {e:.0e}: H {} | UH {} | H2 {}",
+            hmatc::util::fmt_secs(rh.median),
+            hmatc::util::fmt_secs(ru.median),
+            hmatc::util::fmt_secs(r2.median)
+        );
+        eps_out.push(Json::obj(vec![
+            ("eps", e.into()),
+            ("h", rh.median.into()),
+            ("uh", ru.median.into()),
+            ("h2", r2.median.into()),
+        ]));
+    }
+
+    write_result("fig06_mvm_algorithms", &Json::obj(vec![("vs_n", Json::arr(out)), ("vs_eps", Json::arr(eps_out))]));
+}

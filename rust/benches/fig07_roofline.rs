@@ -1,0 +1,65 @@
+//! Figure 7 — roofline for the (uncompressed) H-, UH- and H²-MVM: the
+//! algorithms are bandwidth limited; the paper reports ≈79 % / 78 % / 82 %
+//! of peak. We measure peak with a STREAM triad and report achieved
+//! bandwidth fraction at the kernels' arithmetic intensity.
+
+use hmatc::bench::workloads::{Formats, Problem};
+use hmatc::bench::{bench_fn, measure_peak_bandwidth, roofline_point, write_result, Table};
+use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+use hmatc::util::Rng;
+
+/// flop estimate: 2 flops per stored matrix coefficient touched.
+fn flops_for(bytes: usize) -> f64 {
+    2.0 * bytes as f64 / 8.0
+}
+
+fn main() {
+    let args = Args::from_env();
+    let level = args.num_or("level", 4usize);
+    let eps = 1e-6;
+    println!("measuring peak bandwidth (STREAM triad)…");
+    let peak = measure_peak_bandwidth();
+    println!("peak ≈ {peak:.2} GB/s\n");
+
+    let p = Problem::new(level);
+    let f = Formats::build(&p, eps);
+    let n = p.n();
+    let mut rng = Rng::new(1);
+    let x = rng.vector(n);
+    let mut y = vec![0.0; n];
+
+    let mut t = Table::new(&["format", "median", "achieved GB/s", "% of peak", "paper"]);
+    let mut doc = Vec::new();
+    let cases: Vec<(&str, f64, usize, &str)> = {
+        let rh = bench_fn(1, 7, 0.05, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists));
+        let ru = bench_fn(1, 7, 0.05, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise));
+        let r2 = bench_fn(1, 7, 0.05, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise));
+        vec![
+            ("H (Alg 3)", rh.median, f.h.byte_size(), "79%"),
+            ("UH (Alg 5)", ru.median, f.uh.byte_size(), "78%"),
+            ("H2 (Alg 7)", r2.median, f.h2.byte_size(), "82%"),
+        ]
+    };
+    for (name, median, bytes, paper) in cases {
+        let pt = roofline_point(median, flops_for(bytes), bytes as f64, peak);
+        let frac = bytes as f64 / median / 1e9 / peak;
+        t.row(vec![
+            name.into(),
+            hmatc::util::fmt_secs(median),
+            format!("{:.2}", bytes as f64 / median / 1e9),
+            format!("{:.0}%", 100.0 * frac),
+            paper.into(),
+        ]);
+        doc.push(Json::obj(vec![
+            ("format", name.into()),
+            ("median", median.into()),
+            ("achieved_gbs", (bytes as f64 / median / 1e9).into()),
+            ("fraction_of_peak", frac.into()),
+            ("intensity", pt.intensity.into()),
+        ]));
+    }
+    t.print();
+    write_result("fig07_roofline", &Json::obj(vec![("peak_gbs", peak.into()), ("points", Json::arr(doc))]));
+}

@@ -1,0 +1,68 @@
+//! Figure 9 — error of AFLP-compressed H, UH and H² matrices vs the
+//! uncompressed reference H-matrix, for a sweep of accuracies ε.
+//!
+//! Expected shape (paper): all formats closely follow the line error ≈ ε.
+
+use hmatc::bench::workloads::{Formats, Problem};
+use hmatc::bench::{write_result, Table};
+use hmatc::compress::CompressionConfig;
+use hmatc::hmatrix::norms::rel_spectral_error;
+use hmatc::mvm::{h2_mvm, mvm, uniform_mvm, H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let level = args.num_or("level", 3usize);
+    let p = Problem::new(level);
+    let n = p.n();
+
+    println!("\n== Fig. 9: rel. error of AFLP-compressed formats vs uncompressed H (n = {n}) ==");
+    let mut t = Table::new(&["eps", "H", "UH", "H2"]);
+    let mut doc = Vec::new();
+    for &eps in &[1e-4, 1e-6, 1e-8] {
+        let f = Formats::build(&p, eps);
+        // reference: uncompressed H
+        let href = f.h.clone();
+        let mut fh = f.h;
+        let mut fu = f.uh;
+        let mut f2 = f.h2;
+        let cfg = CompressionConfig::aflp(eps);
+        fh.compress(&cfg);
+        fu.compress(&cfg);
+        f2.compress(&cfg);
+
+        let eh = rel_spectral_error(
+            n,
+            |x, y| mvm(1.0, &fh, x, y, MvmAlgorithm::Seq),
+            |x, y| mvm(1.0, &href, x, y, MvmAlgorithm::Seq),
+            30,
+            11,
+        );
+        let eu = rel_spectral_error(
+            n,
+            |x, y| uniform_mvm(1.0, &fu, x, y, UniMvmAlgorithm::RowWise),
+            |x, y| mvm(1.0, &href, x, y, MvmAlgorithm::Seq),
+            30,
+            12,
+        );
+        let e2 = rel_spectral_error(
+            n,
+            |x, y| h2_mvm(1.0, &f2, x, y, H2MvmAlgorithm::RowWise),
+            |x, y| mvm(1.0, &href, x, y, MvmAlgorithm::Seq),
+            30,
+            13,
+        );
+        t.row(vec![format!("{eps:.0e}"), format!("{eh:.2e}"), format!("{eu:.2e}"), format!("{e2:.2e}")]);
+        doc.push(Json::obj(vec![
+            ("eps", eps.into()),
+            ("h", eh.into()),
+            ("uh", eu.into()),
+            ("h2", e2.into()),
+        ]));
+        // sanity for the harness: errors must track eps within 2 orders
+        assert!(eh < 100.0 * eps && eu < 100.0 * eps && e2 < 100.0 * eps, "error does not track eps");
+    }
+    t.print();
+    write_result("fig09_error", &Json::arr(doc));
+}

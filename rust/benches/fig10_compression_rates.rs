@@ -1,0 +1,82 @@
+//! Figure 10 — compression ratios (uncompressed/compressed bytes) of AFLP
+//! and FPX for H, UH and H², vs size (left) and accuracy (right).
+//!
+//! Expected shape (paper): H best, then UH, then H²; ratios grow with n for
+//! H/UH, stay flat for H²; AFLP compresses better than FPX; ratios shrink
+//! as ε gets finer.
+
+use hmatc::bench::workloads::{Formats, Problem};
+use hmatc::bench::{default_eps, default_levels, write_result, Table};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+
+fn ratios(f: &Formats, codec: Codec, eps: f64) -> (f64, f64, f64) {
+    let (h0, u0, t0) = (f.h.byte_size() as f64, f.uh.byte_size() as f64, f.h2.byte_size() as f64);
+    let mut f = Formats { h: f.h.clone(), uh: f.uh.clone(), h2: f.h2.clone() };
+    let cfg = CompressionConfig { codec, eps, valr: true };
+    f.h.compress(&cfg);
+    f.uh.compress(&cfg);
+    f.h2.compress(&cfg);
+    (h0 / f.h.byte_size() as f64, u0 / f.uh.byte_size() as f64, t0 / f.h2.byte_size() as f64)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let levels = default_levels(args.flag("large"));
+    let eps = 1e-6;
+
+    println!("\n== Fig. 10 (left): compression ratio vs n (eps = {eps:.0e}) ==");
+    let mut t = Table::new(&["n", "codec", "H", "UH", "H2"]);
+    let mut vs_n = Vec::new();
+    for &level in &levels {
+        let p = Problem::new(level);
+        let f = Formats::build(&p, eps);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let (rh, ru, r2) = ratios(&f, codec, eps);
+            t.row(vec![
+                p.n().to_string(),
+                codec.name().into(),
+                format!("{rh:.2}x"),
+                format!("{ru:.2}x"),
+                format!("{r2:.2}x"),
+            ]);
+            vs_n.push(Json::obj(vec![
+                ("n", p.n().into()),
+                ("codec", codec.name().into()),
+                ("h", rh.into()),
+                ("uh", ru.into()),
+                ("h2", r2.into()),
+            ]));
+        }
+    }
+    t.print();
+
+    println!("\n== Fig. 10 (right): compression ratio vs eps ==");
+    let p = Problem::new(*levels.last().unwrap());
+    let mut t2 = Table::new(&["eps", "codec", "H", "UH", "H2"]);
+    let mut vs_eps = Vec::new();
+    for &eps in &default_eps() {
+        let f = Formats::build(&p, eps);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let (rh, ru, r2) = ratios(&f, codec, eps);
+            t2.row(vec![
+                format!("{eps:.0e}"),
+                codec.name().into(),
+                format!("{rh:.2}x"),
+                format!("{ru:.2}x"),
+                format!("{r2:.2}x"),
+            ]);
+            vs_eps.push(Json::obj(vec![
+                ("eps", eps.into()),
+                ("codec", codec.name().into()),
+                ("h", rh.into()),
+                ("uh", ru.into()),
+                ("h2", r2.into()),
+            ]));
+        }
+    }
+    t2.print();
+
+    write_result("fig10_compression_rates", &Json::obj(vec![("vs_n", Json::arr(vs_n)), ("vs_eps", Json::arr(vs_eps))]));
+}

@@ -1,0 +1,66 @@
+//! Figure 11 — memory of H and UH relative to H², uncompressed vs
+//! compressed, vs size (left) and accuracy (right).
+//!
+//! Expected shape (paper): compression shrinks the H²-advantage; compressed
+//! UH can even beat compressed H² at small n; asymptotically H² wins.
+
+use hmatc::bench::workloads::{Formats, Problem};
+use hmatc::bench::{default_eps, default_levels, write_result, Table};
+use hmatc::compress::CompressionConfig;
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+
+fn row(f: Formats, eps: f64) -> (f64, f64, f64, f64) {
+    let h2_0 = f.h2.byte_size() as f64;
+    let rh_unc = f.h.byte_size() as f64 / h2_0;
+    let ru_unc = f.uh.byte_size() as f64 / h2_0;
+    let mut f = f;
+    let cfg = CompressionConfig::aflp(eps);
+    f.h.compress(&cfg);
+    f.uh.compress(&cfg);
+    f.h2.compress(&cfg);
+    let h2_z = f.h2.byte_size() as f64;
+    (rh_unc, ru_unc, f.h.byte_size() as f64 / h2_z, f.uh.byte_size() as f64 / h2_z)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let levels = default_levels(args.flag("large"));
+    let eps = 1e-6;
+
+    println!("\n== Fig. 11 (left): memory relative to H² vs n (eps = {eps:.0e}) ==");
+    let mut t = Table::new(&["n", "H/H2 unc", "UH/H2 unc", "H/H2 cmp", "UH/H2 cmp"]);
+    let mut vs_n = Vec::new();
+    for &level in &levels {
+        let p = Problem::new(level);
+        let (a, b, c, d) = row(Formats::build(&p, eps), eps);
+        t.row(vec![p.n().to_string(), format!("{a:.2}"), format!("{b:.2}"), format!("{c:.2}"), format!("{d:.2}")]);
+        vs_n.push(Json::obj(vec![
+            ("n", p.n().into()),
+            ("h_unc", a.into()),
+            ("uh_unc", b.into()),
+            ("h_cmp", c.into()),
+            ("uh_cmp", d.into()),
+        ]));
+    }
+    t.print();
+
+    println!("\n== Fig. 11 (right): memory relative to H² vs eps ==");
+    let p = Problem::new(*levels.last().unwrap());
+    let mut t2 = Table::new(&["eps", "H/H2 unc", "UH/H2 unc", "H/H2 cmp", "UH/H2 cmp"]);
+    let mut vs_eps = Vec::new();
+    for &eps in &default_eps() {
+        let (a, b, c, d) = row(Formats::build(&p, eps), eps);
+        t2.row(vec![format!("{eps:.0e}"), format!("{a:.2}"), format!("{b:.2}"), format!("{c:.2}"), format!("{d:.2}")]);
+        vs_eps.push(Json::obj(vec![
+            ("eps", eps.into()),
+            ("h_unc", a.into()),
+            ("uh_unc", b.into()),
+            ("h_cmp", c.into()),
+            ("uh_cmp", d.into()),
+        ]));
+    }
+    t2.print();
+
+    write_result("fig11_memory_ratio", &Json::obj(vec![("vs_n", Json::arr(vs_n)), ("vs_eps", Json::arr(vs_eps))]));
+}

@@ -1,0 +1,63 @@
+//! Figure 12 — memory of uncompressed and compressed HODLR and BLR formats
+//! (left) and their compression ratios (right).
+//!
+//! Expected shape (paper): HODLR is smaller uncompressed, but the compressed
+//! sizes of HODLR and BLR are essentially identical.
+
+use hmatc::bench::{write_result, Table};
+use hmatc::cluster::{BlockTree, ClusterTree, OffDiagAdmissibility};
+use hmatc::compress::CompressionConfig;
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::lowrank::AcaOptions;
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+use hmatc::util::fmt_bytes;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let level = args.num_or("level", 3usize);
+    let eps = args.num_or("eps", 1e-4f64);
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let n = gen.len();
+
+    // HODLR: deep binary tree + off-diagonal admissibility
+    let ct_h = Arc::new(ClusterTree::build(gen.points(), 64));
+    let bt_h = Arc::new(BlockTree::build(&ct_h, &ct_h, &OffDiagAdmissibility));
+    let mut hodlr = HMatrix::build(&bt_h, &gen, &AcaOptions::with_eps(eps));
+
+    // BLR: flat clustering + off-diagonal admissibility
+    let ct_b = Arc::new(ClusterTree::build_blr(gen.points(), 256));
+    let bt_b = Arc::new(BlockTree::build(&ct_b, &ct_b, &OffDiagAdmissibility));
+    let mut blr = HMatrix::build(&bt_b, &gen, &AcaOptions::with_eps(eps));
+
+    let h0 = hodlr.byte_size();
+    let b0 = blr.byte_size();
+    let cfg = CompressionConfig::aflp(eps);
+    hodlr.compress(&cfg);
+    blr.compress(&cfg);
+    let hz = hodlr.byte_size();
+    let bz = blr.byte_size();
+
+    println!("\n== Fig. 12: HODLR vs BLR (n = {n}, eps = {eps:.0e}) ==");
+    let mut t = Table::new(&["format", "uncompressed", "compressed", "ratio"]);
+    t.row(vec!["HODLR".into(), fmt_bytes(h0), fmt_bytes(hz), format!("{:.2}x", h0 as f64 / hz as f64)]);
+    t.row(vec!["BLR".into(), fmt_bytes(b0), fmt_bytes(bz), format!("{:.2}x", b0 as f64 / bz as f64)]);
+    t.print();
+    println!("compressed HODLR / compressed BLR = {:.2} (paper: ≈1)", hz as f64 / bz as f64);
+
+    write_result(
+        "fig12_hodlr_blr",
+        &Json::obj(vec![
+            ("n", n.into()),
+            ("eps", eps.into()),
+            ("hodlr_unc", h0.into()),
+            ("hodlr_cmp", hz.into()),
+            ("blr_unc", b0.into()),
+            ("blr_cmp", bz.into()),
+        ]),
+    );
+}

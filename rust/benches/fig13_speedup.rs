@@ -1,0 +1,104 @@
+//! Figure 13 — speedup of compressed MVM (AFLP and FPX) over uncompressed
+//! MVM for H, UH and H², vs n and vs ε.
+//!
+//! Expected shape (paper): ≈2–3× for H, 1.5–2.5× for UH, less for H²
+//! (none at the finest ε); AFLP ≥ FPX in total speedup (better ratio beats
+//! cheaper decode); speedups shrink as ε→0 and grow with n.
+
+use hmatc::bench::workloads::{Formats, Problem};
+use hmatc::bench::{bench_fn, default_eps, default_levels, write_result, Table};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+use hmatc::util::Rng;
+
+struct Speedups {
+    h: f64,
+    uh: f64,
+    h2: f64,
+}
+
+fn measure(p: &Problem, f0: &Formats, eps: f64, codec: Codec) -> Speedups {
+    let f = Formats { h: f0.h.clone(), uh: f0.uh.clone(), h2: f0.h2.clone() };
+    let n = p.n();
+    let mut rng = Rng::new(3);
+    let x = rng.vector(n);
+    let mut y = vec![0.0; n];
+
+    let th0 = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists)).median;
+    let tu0 = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise)).median;
+    let t20 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise)).median;
+
+    let mut f = f;
+    let cfg = CompressionConfig { codec, eps, valr: true };
+    f.h.compress(&cfg);
+    f.uh.compress(&cfg);
+    f.h2.compress(&cfg);
+
+    let th1 = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists)).median;
+    let tu1 = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise)).median;
+    let t21 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise)).median;
+
+    Speedups { h: th0 / th1, uh: tu0 / tu1, h2: t20 / t21 }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let levels = default_levels(args.flag("large"));
+    let eps = 1e-6;
+
+    println!("\n== Fig. 13: speedup of compressed vs uncompressed MVM, vs n (eps = {eps:.0e}) ==");
+    let mut t = Table::new(&["n", "codec", "H", "UH", "H2"]);
+    let mut vs_n = Vec::new();
+    for &level in &levels {
+        let p = Problem::new(level);
+        let f0 = Formats::build(&p, eps);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let s = measure(&p, &f0, eps, codec);
+            t.row(vec![
+                p.n().to_string(),
+                codec.name().into(),
+                format!("{:.2}x", s.h),
+                format!("{:.2}x", s.uh),
+                format!("{:.2}x", s.h2),
+            ]);
+            vs_n.push(Json::obj(vec![
+                ("n", p.n().into()),
+                ("codec", codec.name().into()),
+                ("h", s.h.into()),
+                ("uh", s.uh.into()),
+                ("h2", s.h2.into()),
+            ]));
+        }
+    }
+    t.print();
+
+    println!("\n== Fig. 13: speedup vs eps (n fixed) ==");
+    let p = Problem::new(*levels.last().unwrap());
+    let mut t2 = Table::new(&["eps", "codec", "H", "UH", "H2"]);
+    let mut vs_eps = Vec::new();
+    for &eps in &default_eps() {
+        let f0 = Formats::build(&p, eps);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let s = measure(&p, &f0, eps, codec);
+            t2.row(vec![
+                format!("{eps:.0e}"),
+                codec.name().into(),
+                format!("{:.2}x", s.h),
+                format!("{:.2}x", s.uh),
+                format!("{:.2}x", s.h2),
+            ]);
+            vs_eps.push(Json::obj(vec![
+                ("eps", eps.into()),
+                ("codec", codec.name().into()),
+                ("h", s.h.into()),
+                ("uh", s.uh.into()),
+                ("h2", s.h2.into()),
+            ]));
+        }
+    }
+    t2.print();
+
+    write_result("fig13_speedup", &Json::obj(vec![("vs_n", Json::arr(vs_n)), ("vs_eps", Json::arr(vs_eps))]));
+}

@@ -1,0 +1,61 @@
+//! Figure 14 — roofline for the AFLP-compressed MVM: performance improves in
+//! absolute terms but sits further from the (now smaller-footprint) roof due
+//! to decompression overhead (paper: ≈60 % of peak instead of ≈80 %).
+
+use hmatc::bench::workloads::{Formats, Problem};
+use hmatc::bench::{bench_fn, measure_peak_bandwidth, write_result, Table};
+use hmatc::compress::CompressionConfig;
+use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+use hmatc::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let level = args.num_or("level", 4usize);
+    let eps = 1e-6;
+    println!("measuring peak bandwidth (STREAM triad)…");
+    let peak = measure_peak_bandwidth();
+    println!("peak ≈ {peak:.2} GB/s\n");
+
+    let p = Problem::new(level);
+    let mut f = Formats::build(&p, eps);
+    let cfg = CompressionConfig::aflp(eps);
+    f.h.compress(&cfg);
+    f.uh.compress(&cfg);
+    f.h2.compress(&cfg);
+
+    let n = p.n();
+    let mut rng = Rng::new(5);
+    let x = rng.vector(n);
+    let mut y = vec![0.0; n];
+
+    let rh = bench_fn(1, 7, 0.05, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists));
+    let ru = bench_fn(1, 7, 0.05, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise));
+    let r2 = bench_fn(1, 7, 0.05, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise));
+
+    let mut t = Table::new(&["format", "median", "achieved GB/s", "% of peak", "paper"]);
+    let mut doc = Vec::new();
+    for (name, r, bytes, paper) in [
+        ("H zAFLP", &rh, f.h.byte_size(), "~60%"),
+        ("UH zAFLP", &ru, f.uh.byte_size(), "~60%"),
+        ("H2 zAFLP", &r2, f.h2.byte_size(), "~60%"),
+    ] {
+        let gbs = bytes as f64 / r.median / 1e9;
+        t.row(vec![
+            name.into(),
+            hmatc::util::fmt_secs(r.median),
+            format!("{gbs:.2}"),
+            format!("{:.0}%", 100.0 * gbs / peak),
+            paper.into(),
+        ]);
+        doc.push(Json::obj(vec![
+            ("format", name.into()),
+            ("median", r.median.into()),
+            ("achieved_gbs", gbs.into()),
+            ("fraction_of_peak", (gbs / peak).into()),
+        ]));
+    }
+    t.print();
+    write_result("fig14_roofline_compressed", &Json::obj(vec![("peak_gbs", peak.into()), ("points", Json::arr(doc))]));
+}

@@ -1,0 +1,75 @@
+//! Figure 15 — MVM runtime of H and UH relative to H², uncompressed vs
+//! AFLP-compressed, vs n and vs ε.
+//!
+//! Expected shape (paper): compression shrinks the H² performance advantage;
+//! compressed UH comes very close to compressed H².
+
+use hmatc::bench::workloads::{Formats, Problem};
+use hmatc::bench::{bench_fn, default_eps, default_levels, write_result, Table};
+use hmatc::compress::CompressionConfig;
+use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+use hmatc::util::Rng;
+
+fn measure(p: &Problem, eps: f64) -> (f64, f64, f64, f64) {
+    let f = Formats::build(p, eps);
+    let n = p.n();
+    let mut rng = Rng::new(6);
+    let x = rng.vector(n);
+    let mut y = vec![0.0; n];
+    let th0 = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists)).median;
+    let tu0 = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise)).median;
+    let t20 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise)).median;
+    let mut f = f;
+    let cfg = CompressionConfig::aflp(eps);
+    f.h.compress(&cfg);
+    f.uh.compress(&cfg);
+    f.h2.compress(&cfg);
+    let th1 = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists)).median;
+    let tu1 = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise)).median;
+    let t21 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise)).median;
+    (th0 / t20, tu0 / t20, th1 / t21, tu1 / t21)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let levels = default_levels(args.flag("large"));
+    let eps = 1e-6;
+
+    println!("\n== Fig. 15: MVM time relative to H², vs n (eps = {eps:.0e}) ==");
+    let mut t = Table::new(&["n", "H/H2 unc", "UH/H2 unc", "H/H2 cmp", "UH/H2 cmp"]);
+    let mut vs_n = Vec::new();
+    for &level in &levels {
+        let p = Problem::new(level);
+        let (a, b, c, d) = measure(&p, eps);
+        t.row(vec![p.n().to_string(), format!("{a:.2}"), format!("{b:.2}"), format!("{c:.2}"), format!("{d:.2}")]);
+        vs_n.push(Json::obj(vec![
+            ("n", p.n().into()),
+            ("h_unc", a.into()),
+            ("uh_unc", b.into()),
+            ("h_cmp", c.into()),
+            ("uh_cmp", d.into()),
+        ]));
+    }
+    t.print();
+
+    println!("\n== Fig. 15: MVM time relative to H², vs eps ==");
+    let p = Problem::new(*levels.last().unwrap());
+    let mut t2 = Table::new(&["eps", "H/H2 unc", "UH/H2 unc", "H/H2 cmp", "UH/H2 cmp"]);
+    let mut vs_eps = Vec::new();
+    for &eps in &default_eps() {
+        let (a, b, c, d) = measure(&p, eps);
+        t2.row(vec![format!("{eps:.0e}"), format!("{a:.2}"), format!("{b:.2}"), format!("{c:.2}"), format!("{d:.2}")]);
+        vs_eps.push(Json::obj(vec![
+            ("eps", eps.into()),
+            ("h_unc", a.into()),
+            ("uh_unc", b.into()),
+            ("h_cmp", c.into()),
+            ("uh_cmp", d.into()),
+        ]));
+    }
+    t2.print();
+
+    write_result("fig15_runtime_ratio", &Json::obj(vec![("vs_n", Json::arr(vs_n)), ("vs_eps", Json::arr(vs_eps))]));
+}

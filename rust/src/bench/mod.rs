@@ -1,0 +1,40 @@
+//! Benchmark substrate: mini-criterion sampling, roofline measurement, table
+//! output and JSON result files (no criterion crate in the sandbox).
+
+mod roofline;
+mod runner;
+mod table;
+pub mod workloads;
+
+pub use roofline::{measure_peak_bandwidth, roofline_point, RooflinePoint};
+pub use runner::{bench_fn, BenchResult};
+pub use table::Table;
+
+use crate::util::json::Json;
+
+/// Write one JSON result document under `bench_results/` (created on demand).
+pub fn write_result(name: &str, doc: &Json) {
+    let dir = std::path::Path::new("bench_results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let path = dir.join(format!("{name}.json"));
+    let _ = std::fs::write(path, doc.to_string());
+}
+
+/// Standard benchmark problem sizes (icosphere levels → n = 20·4^level).
+/// The default keeps a full `cargo bench` sweep feasible on this single-core
+/// sandbox; pass `--large` (or set `HMATC_BENCH_LARGE=1`) for the paper-style
+/// larger sizes.
+pub fn default_levels(large: bool) -> Vec<usize> {
+    if large || std::env::var("HMATC_BENCH_LARGE").is_ok() {
+        vec![2, 3, 4, 5] // 320 … 20480
+    } else {
+        vec![2, 3, 4] // 320, 1280, 5120
+    }
+}
+
+/// Standard accuracy sweep of the paper's figures.
+pub fn default_eps() -> Vec<f64> {
+    vec![1e-4, 1e-6, 1e-8]
+}

@@ -1,0 +1,85 @@
+//! Roofline measurement (paper Fig. 7/14): the MVM algorithms are memory
+//! bandwidth limited, so "% of peak" means percentage of the *measured*
+//! STREAM-like bandwidth, at the kernel's arithmetic intensity.
+
+use super::runner::bench_fn;
+
+/// One point for a roofline plot.
+#[derive(Clone, Copy, Debug)]
+pub struct RooflinePoint {
+    /// Arithmetic intensity in flop/byte.
+    pub intensity: f64,
+    /// Achieved performance in Gflop/s.
+    pub gflops: f64,
+    /// Achievable performance at this intensity given the measured peak
+    /// bandwidth (bandwidth · intensity), in Gflop/s.
+    pub roof_gflops: f64,
+}
+
+impl RooflinePoint {
+    /// Fraction of the bandwidth roof achieved (the paper's ~80 % / ~60 %).
+    pub fn fraction_of_peak(&self) -> f64 {
+        if self.roof_gflops > 0.0 {
+            (self.gflops / self.roof_gflops).min(10.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Measure sustainable memory bandwidth (GB/s) with a parallel triad
+/// a[i] = b[i] + s·c[i] over a working set far larger than LLC.
+pub fn measure_peak_bandwidth() -> f64 {
+    let n = 1 << 24; // 3 × 128 MiB working set
+    let b = vec![1.0f64; n];
+    let c = vec![2.0f64; n];
+    let mut a = vec![0.0f64; n];
+    let nthreads = (crate::par::num_threads() + 1).max(1);
+    let chunk = n.div_ceil(nthreads);
+    let r = bench_fn(1, 5, 0.05, || {
+        let b = &b;
+        let c = &c;
+        let chunks: Vec<&mut [f64]> = a.chunks_mut(chunk).collect();
+        crate::par::ThreadPool::global().scope(|s| {
+            for (t, ac) in chunks.into_iter().enumerate() {
+                s.spawn(move |_| {
+                    let off = t * chunk;
+                    for i in 0..ac.len() {
+                        ac[i] = b[off + i] + 0.5 * c[off + i];
+                    }
+                });
+            }
+        });
+    });
+    // triad moves 3 doubles per element (2 loads + 1 store)
+    let bytes = 3.0 * 8.0 * n as f64;
+    bytes / r.median / 1e9
+}
+
+/// Build a roofline point from measured time, flops and bytes moved.
+pub fn roofline_point(seconds: f64, flops: f64, bytes: f64, peak_bw_gbs: f64) -> RooflinePoint {
+    let intensity = if bytes > 0.0 { flops / bytes } else { 0.0 };
+    let gflops = if seconds > 0.0 { flops / seconds / 1e9 } else { 0.0 };
+    RooflinePoint { intensity, gflops, roof_gflops: peak_bw_gbs * intensity }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roofline_point_math() {
+        let p = roofline_point(1.0, 2e9, 1e9, 10.0);
+        assert!((p.intensity - 2.0).abs() < 1e-12);
+        assert!((p.gflops - 2.0).abs() < 1e-12);
+        assert!((p.roof_gflops - 20.0).abs() < 1e-12);
+        assert!((p.fraction_of_peak() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    #[ignore] // slow: allocates 384 MiB and saturates memory — run with --ignored
+    fn bandwidth_positive() {
+        let bw = measure_peak_bandwidth();
+        assert!(bw > 0.5, "bw {bw} GB/s");
+    }
+}

@@ -1,0 +1,65 @@
+//! Timing loop: warmup + sampling with median/MAD statistics.
+
+use crate::util::{stats, Timer};
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub samples: Vec<f64>,
+    pub median: f64,
+    pub mad: f64,
+    pub min: f64,
+}
+
+impl BenchResult {
+    /// Throughput in ops/s given work per invocation.
+    pub fn rate(&self, work: f64) -> f64 {
+        if self.median > 0.0 {
+            work / self.median
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run `f` with warmup, then collect `samples` timed runs (each possibly
+/// iterated so one sample lasts ≥ `min_sample_secs`).
+pub fn bench_fn(warmup: usize, samples: usize, min_sample_secs: f64, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // calibrate inner iterations
+    let t = Timer::start();
+    f();
+    let once = t.elapsed().max(1e-9);
+    let iters = (min_sample_secs / once).ceil().max(1.0) as usize;
+
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t = Timer::start();
+        for _ in 0..iters {
+            f();
+        }
+        out.push(t.elapsed() / iters as f64);
+    }
+    BenchResult { median: stats::median(&out), mad: stats::mad(&out), min: stats::min(&out), samples: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench_fn(1, 5, 0.001, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.median > 0.0);
+        assert!(r.min <= r.median);
+        assert_eq!(r.samples.len(), 5);
+        assert!(acc != 12345); // keep the accumulator alive
+    }
+}

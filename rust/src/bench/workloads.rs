@@ -1,0 +1,57 @@
+//! Shared benchmark workloads: the paper's model problem at standard sizes.
+
+use crate::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use crate::geometry::icosphere;
+use crate::h2::H2Matrix;
+use crate::hmatrix::HMatrix;
+use crate::kernelfn::{LaplaceSlp, MatrixGen};
+use crate::lowrank::AcaOptions;
+use crate::uniform::{CouplingKind, UniformHMatrix};
+use std::sync::Arc;
+
+/// The BEM model problem (Laplace SLP on the unit sphere) at a given
+/// icosphere level, clustered with n_min = 64, η = 2 (paper defaults).
+pub struct Problem {
+    pub gen: LaplaceSlp,
+    pub bt: Arc<BlockTree>,
+    pub level: usize,
+}
+
+impl Problem {
+    pub fn new(level: usize) -> Problem {
+        let geom = icosphere(level);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), 64));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        Problem { gen, bt, level }
+    }
+
+    pub fn n(&self) -> usize {
+        self.gen.len()
+    }
+
+    pub fn build_h(&self, eps: f64) -> HMatrix {
+        HMatrix::build(&self.bt, &self.gen, &AcaOptions::with_eps(eps))
+    }
+}
+
+/// All three formats of the same operator.
+pub struct Formats {
+    pub h: HMatrix,
+    pub uh: UniformHMatrix,
+    pub h2: H2Matrix,
+}
+
+impl Formats {
+    pub fn build(p: &Problem, eps: f64) -> Formats {
+        let h = p.build_h(eps);
+        let uh = crate::uniform::build_from_h(&h, eps, CouplingKind::Combined);
+        let h2 = crate::h2::build_from_h(&h, eps);
+        Formats { h, uh, h2 }
+    }
+}
+
+/// Icosphere level → n (20·4^level).
+pub fn level_n(level: usize) -> usize {
+    20 * 4usize.pow(level as u32)
+}

@@ -1,0 +1,137 @@
+//! Admissibility conditions (paper §2.2): standard, weak and off-diagonal
+//! (HODLR/BLR).
+
+use super::tree::ClusterTree;
+
+/// Decides whether a block (τ, σ) can be approximated in low rank.
+pub trait Admissibility: Sync {
+    /// `rt`/`ct` are the row/column cluster trees, `r`/`c` node ids.
+    fn admissible(&self, rt: &ClusterTree, r: usize, ct: &ClusterTree, c: usize) -> bool;
+
+    /// Short name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Standard admissibility: min(diam τ, diam σ) ≤ η · dist(τ, σ).
+#[derive(Clone, Copy, Debug)]
+pub struct StdAdmissibility {
+    pub eta: f64,
+}
+
+impl StdAdmissibility {
+    pub fn new(eta: f64) -> Self {
+        StdAdmissibility { eta }
+    }
+}
+
+impl Admissibility for StdAdmissibility {
+    fn admissible(&self, rt: &ClusterTree, r: usize, ct: &ClusterTree, c: usize) -> bool {
+        let br = &rt.node(r).bbox;
+        let bc = &ct.node(c).bbox;
+        let dist = br.distance(bc);
+        dist > 0.0 && br.diameter().min(bc.diameter()) <= self.eta * dist
+    }
+
+    fn name(&self) -> &'static str {
+        "standard"
+    }
+}
+
+/// Weak admissibility (Hackbusch/Khoromskij/Kriemann 2004): clusters merely
+/// need positive distance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WeakAdmissibility;
+
+impl Admissibility for WeakAdmissibility {
+    fn admissible(&self, rt: &ClusterTree, r: usize, ct: &ClusterTree, c: usize) -> bool {
+        rt.node(r).bbox.distance(&ct.node(c).bbox) > 0.0
+    }
+
+    fn name(&self) -> &'static str {
+        "weak"
+    }
+}
+
+/// Off-diagonal admissibility: τ and σ are disjoint index ranges of the
+/// *same* tree. With a deep binary tree this yields HODLR, with a flat tree
+/// BLR (Remark 2.4).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OffDiagAdmissibility;
+
+impl Admissibility for OffDiagAdmissibility {
+    fn admissible(&self, rt: &ClusterTree, r: usize, _ct: &ClusterTree, c: usize) -> bool {
+        let a = rt.node(r);
+        let b = rt.node(c);
+        a.end <= b.begin || b.end <= a.begin
+    }
+
+    fn name(&self) -> &'static str {
+        "off-diagonal"
+    }
+}
+
+/// HODLR admissibility = off-diagonal on a deep binary tree.
+pub type HodlrAdmissibility = OffDiagAdmissibility;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::fibonacci_sphere;
+
+    #[test]
+    fn std_adm_diagonal_blocks_inadmissible() {
+        let pts = fibonacci_sphere(256);
+        let ct = ClusterTree::build(&pts, 16);
+        let adm = StdAdmissibility::new(2.0);
+        // a node against itself: distance 0 → inadmissible
+        for id in 0..ct.nodes.len() {
+            assert!(!adm.admissible(&ct, id, &ct, id));
+        }
+    }
+
+    #[test]
+    fn std_adm_far_blocks_admissible() {
+        let pts = fibonacci_sphere(512);
+        let ct = ClusterTree::build(&pts, 16);
+        let adm = StdAdmissibility::new(2.0);
+        // find two deep leaves with large distance
+        let mut found = false;
+        for &a in &ct.leaves {
+            for &b in &ct.leaves {
+                let d = ct.node(a).bbox.distance(&ct.node(b).bbox);
+                if d > 1.0 {
+                    assert!(adm.admissible(&ct, a, &ct, b));
+                    found = true;
+                }
+            }
+        }
+        assert!(found);
+    }
+
+    #[test]
+    fn offdiag_adm_by_ranges() {
+        let pts = fibonacci_sphere(128);
+        let ct = ClusterTree::build(&pts, 16);
+        let adm = OffDiagAdmissibility;
+        let root = ct.root();
+        let c = &ct.node(root).children;
+        assert!(c.len() == 2);
+        assert!(adm.admissible(&ct, c[0], &ct, c[1]));
+        assert!(!adm.admissible(&ct, root, &ct, c[0])); // overlapping ranges
+    }
+
+    #[test]
+    fn weak_weaker_than_standard() {
+        let pts = fibonacci_sphere(512);
+        let ct = ClusterTree::build(&pts, 16);
+        let weak = WeakAdmissibility;
+        let std = StdAdmissibility::new(2.0);
+        for &a in &ct.leaves {
+            for &b in &ct.leaves {
+                if std.admissible(&ct, a, &ct, b) {
+                    assert!(weak.admissible(&ct, a, &ct, b));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Axis-aligned bounding boxes for clusters.
+
+use crate::geometry::Point3;
+
+/// Axis-aligned bounding box in R³.
+#[derive(Clone, Copy, Debug)]
+pub struct BBox {
+    pub lo: Point3,
+    pub hi: Point3,
+}
+
+impl BBox {
+    /// Empty box (inverted bounds).
+    pub fn empty() -> Self {
+        BBox {
+            lo: Point3::new(f64::INFINITY, f64::INFINITY, f64::INFINITY),
+            hi: Point3::new(f64::NEG_INFINITY, f64::NEG_INFINITY, f64::NEG_INFINITY),
+        }
+    }
+
+    /// Bounding box of a point set.
+    pub fn of(points: &[Point3]) -> Self {
+        let mut b = Self::empty();
+        for p in points {
+            b.insert(*p);
+        }
+        b
+    }
+
+    /// Expand to contain `p`.
+    pub fn insert(&mut self, p: Point3) {
+        self.lo = Point3::new(self.lo.x.min(p.x), self.lo.y.min(p.y), self.lo.z.min(p.z));
+        self.hi = Point3::new(self.hi.x.max(p.x), self.hi.y.max(p.y), self.hi.z.max(p.z));
+    }
+
+    /// Box diameter (diagonal length).
+    pub fn diameter(&self) -> f64 {
+        if self.lo.x > self.hi.x {
+            return 0.0;
+        }
+        self.hi.sub(self.lo).norm()
+    }
+
+    /// Minimal distance between two boxes (0 if they intersect/touch).
+    pub fn distance(&self, o: &BBox) -> f64 {
+        let d = |alo: f64, ahi: f64, blo: f64, bhi: f64| -> f64 {
+            if ahi < blo {
+                blo - ahi
+            } else if bhi < alo {
+                alo - bhi
+            } else {
+                0.0
+            }
+        };
+        let dx = d(self.lo.x, self.hi.x, o.lo.x, o.hi.x);
+        let dy = d(self.lo.y, self.hi.y, o.lo.y, o.hi.y);
+        let dz = d(self.lo.z, self.hi.z, o.lo.z, o.hi.z);
+        (dx * dx + dy * dy + dz * dz).sqrt()
+    }
+
+    /// Index of the longest axis (0/1/2).
+    pub fn longest_axis(&self) -> usize {
+        let e = self.hi.sub(self.lo);
+        if e.x >= e.y && e.x >= e.z {
+            0
+        } else if e.y >= e.z {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn of_points_and_diameter() {
+        let b = BBox::of(&[Point3::new(0.0, 0.0, 0.0), Point3::new(1.0, 2.0, 2.0)]);
+        assert_eq!(b.diameter(), 3.0);
+        assert_eq!(b.longest_axis(), 1); // y and z tie at 2.0 → y wins
+    }
+
+    #[test]
+    fn distance_disjoint_and_overlap() {
+        let a = BBox::of(&[Point3::new(0.0, 0.0, 0.0), Point3::new(1.0, 1.0, 1.0)]);
+        let b = BBox::of(&[Point3::new(2.0, 0.0, 0.0), Point3::new(3.0, 1.0, 1.0)]);
+        assert_eq!(a.distance(&b), 1.0);
+        let c = BBox::of(&[Point3::new(0.5, 0.5, 0.5), Point3::new(2.0, 2.0, 2.0)]);
+        assert_eq!(a.distance(&c), 0.0);
+    }
+
+    #[test]
+    fn empty_box() {
+        assert_eq!(BBox::empty().diameter(), 0.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Block tree (Definition 2.2) over a pair of cluster trees.
+
+use super::admissibility::Admissibility;
+use super::tree::ClusterTree;
+use std::sync::Arc;
+
+/// A block (τ, σ) in the block tree.
+#[derive(Clone, Debug)]
+pub struct BlockNode {
+    /// Row cluster node id.
+    pub row: usize,
+    /// Column cluster node id.
+    pub col: usize,
+    /// Child block ids.
+    pub children: Vec<usize>,
+    /// Whether the admissibility condition held (leaf → low-rank block).
+    pub admissible: bool,
+    /// Level (distance from the root block).
+    pub level: usize,
+}
+
+impl BlockNode {
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_empty()
+    }
+}
+
+/// The block tree T_{I×J}.
+#[derive(Clone, Debug)]
+pub struct BlockTree {
+    pub row_ct: Arc<ClusterTree>,
+    pub col_ct: Arc<ClusterTree>,
+    /// Node storage; node 0 is the root block (I, J).
+    pub nodes: Vec<BlockNode>,
+    /// Leaf block ids.
+    pub leaves: Vec<usize>,
+    /// Leaf block ids per *row cluster* node id: the sets M_τ^r (Def. 2.5).
+    pub row_blocks: Vec<Vec<usize>>,
+    /// Leaf block ids per *column cluster* node id: the sets M_σ^c.
+    pub col_blocks: Vec<Vec<usize>>,
+}
+
+impl BlockTree {
+    /// Build from cluster trees and an admissibility condition.
+    pub fn build(row_ct: &Arc<ClusterTree>, col_ct: &Arc<ClusterTree>, adm: &dyn Admissibility) -> BlockTree {
+        let mut nodes: Vec<BlockNode> = Vec::new();
+        nodes.push(BlockNode { row: row_ct.root(), col: col_ct.root(), children: vec![], admissible: false, level: 0 });
+        let mut stack = vec![0usize];
+        while let Some(id) = stack.pop() {
+            let (r, c, level) = {
+                let nd = &nodes[id];
+                (nd.row, nd.col, nd.level)
+            };
+            let is_adm = adm.admissible(row_ct, r, col_ct, c);
+            nodes[id].admissible = is_adm;
+            let rleaf = row_ct.node(r).is_leaf();
+            let cleaf = col_ct.node(c).is_leaf();
+            if is_adm || rleaf || cleaf {
+                continue; // leaf block
+            }
+            for &rc in &row_ct.node(r).children {
+                for &cc in &col_ct.node(c).children {
+                    let cid = nodes.len();
+                    nodes.push(BlockNode { row: rc, col: cc, children: vec![], admissible: false, level: level + 1 });
+                    nodes[id].children.push(cid);
+                    stack.push(cid);
+                }
+            }
+        }
+
+        let leaves: Vec<usize> = (0..nodes.len()).filter(|&i| nodes[i].is_leaf()).collect();
+        let mut row_blocks = vec![Vec::new(); row_ct.nodes.len()];
+        let mut col_blocks = vec![Vec::new(); col_ct.nodes.len()];
+        for &l in &leaves {
+            row_blocks[nodes[l].row].push(l);
+            col_blocks[nodes[l].col].push(l);
+        }
+        BlockTree { row_ct: row_ct.clone(), col_ct: col_ct.clone(), nodes, leaves, row_blocks, col_blocks }
+    }
+
+    /// Matrix dimensions (nrows, ncols).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.row_ct.len(), self.col_ct.len())
+    }
+
+    /// Node accessor.
+    pub fn node(&self, id: usize) -> &BlockNode {
+        &self.nodes[id]
+    }
+
+    /// Number of admissible (low-rank) leaves.
+    pub fn num_admissible(&self) -> usize {
+        self.leaves.iter().filter(|&&l| self.nodes[l].admissible).count()
+    }
+
+    /// Number of dense (inadmissible) leaves.
+    pub fn num_dense(&self) -> usize {
+        self.leaves.len() - self.num_admissible()
+    }
+
+    /// Maximum block level.
+    pub fn depth(&self) -> usize {
+        self.nodes.iter().map(|n| n.level).max().unwrap_or(0)
+    }
+
+    /// Check that the leaves tile the full I×J product (used by tests).
+    pub fn validate_partition(&self) -> Result<(), String> {
+        let (m, n) = self.shape();
+        let mut cover = vec![0u8; m * n];
+        for &l in &self.leaves {
+            let nd = &self.nodes[l];
+            let rr = self.row_ct.node(nd.row).range();
+            let cr = self.col_ct.node(nd.col).range();
+            for j in cr {
+                for i in rr.clone() {
+                    let idx = j * m + i;
+                    if cover[idx] != 0 {
+                        return Err(format!("position ({i},{j}) covered twice"));
+                    }
+                    cover[idx] = 1;
+                }
+            }
+        }
+        if cover.iter().any(|&c| c == 0) {
+            return Err("partition does not cover I×J".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::admissibility::{OffDiagAdmissibility, StdAdmissibility};
+    use crate::geometry::fibonacci_sphere;
+
+    fn sphere_tree(n: usize, n_min: usize) -> Arc<ClusterTree> {
+        Arc::new(ClusterTree::build(&fibonacci_sphere(n), n_min))
+    }
+
+    #[test]
+    fn leaves_partition_product() {
+        let ct = sphere_tree(200, 16);
+        let bt = BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0));
+        bt.validate_partition().unwrap();
+    }
+
+    #[test]
+    fn has_admissible_and_dense_blocks() {
+        let ct = sphere_tree(400, 16);
+        let bt = BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0));
+        assert!(bt.num_admissible() > 0, "no low-rank blocks");
+        assert!(bt.num_dense() > 0, "no dense blocks");
+    }
+
+    #[test]
+    fn hodlr_structure() {
+        // off-diagonal admissibility: every leaf off the diagonal is
+        // admissible, diagonal leaves are dense
+        let ct = sphere_tree(256, 32);
+        let bt = BlockTree::build(&ct, &ct, &OffDiagAdmissibility);
+        bt.validate_partition().unwrap();
+        for &l in &bt.leaves {
+            let nd = bt.node(l);
+            if nd.admissible {
+                let a = ct.node(nd.row);
+                let b = ct.node(nd.col);
+                assert!(a.end <= b.begin || b.end <= a.begin);
+            } else {
+                assert_eq!(nd.row, nd.col); // diagonal
+            }
+        }
+    }
+
+    #[test]
+    fn row_block_lists_consistent() {
+        let ct = sphere_tree(300, 16);
+        let bt = BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0));
+        let total: usize = bt.row_blocks.iter().map(|v| v.len()).sum();
+        assert_eq!(total, bt.leaves.len());
+        for (tau, blocks) in bt.row_blocks.iter().enumerate() {
+            for &b in blocks {
+                assert_eq!(bt.node(b).row, tau);
+            }
+        }
+    }
+}

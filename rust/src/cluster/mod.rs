@@ -1,0 +1,15 @@
+//! Cluster trees, block trees and admissibility conditions (paper §2.2).
+
+mod admissibility;
+mod bbox;
+mod block;
+mod tree;
+
+pub use admissibility::{Admissibility, HodlrAdmissibility, OffDiagAdmissibility, StdAdmissibility, WeakAdmissibility};
+pub use bbox::BBox;
+pub use block::{BlockNode, BlockTree};
+pub use tree::{ClusterNode, ClusterTree};
+
+/// Alias kept for BLR construction: with a flat (depth-1) cluster tree, the
+/// off-diagonal condition yields exactly the BLR p×q block partition.
+pub type BlkAdmissibility = OffDiagAdmissibility;

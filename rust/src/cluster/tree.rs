@@ -1,0 +1,274 @@
+//! Cluster tree (Definition 2.1): hierarchical disjoint partition of the
+//! index set, built by cardinality-balanced bisection along the longest
+//! bounding-box axis.
+
+use super::bbox::BBox;
+use crate::geometry::Point3;
+
+/// A cluster: contiguous range of *internal* (permuted) positions.
+#[derive(Clone, Debug)]
+pub struct ClusterNode {
+    /// Half-open range in the permuted ordering.
+    pub begin: usize,
+    pub end: usize,
+    /// Bounding box of the cluster's points.
+    pub bbox: BBox,
+    /// Child node ids (empty for leaves).
+    pub children: Vec<usize>,
+    /// Distance from the root.
+    pub level: usize,
+    /// Parent node id (root: usize::MAX).
+    pub parent: usize,
+}
+
+impl ClusterNode {
+    /// Number of indices in the cluster.
+    pub fn size(&self) -> usize {
+        self.end - self.begin
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Internal index range.
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.begin..self.end
+    }
+}
+
+/// Cluster tree over an index set with geometry.
+#[derive(Clone, Debug)]
+pub struct ClusterTree {
+    /// Node storage; node 0 is the root.
+    pub nodes: Vec<ClusterNode>,
+    /// perm[internal position] = external (original) index.
+    pub perm: Vec<usize>,
+    /// inv_perm[external index] = internal position.
+    pub inv_perm: Vec<usize>,
+    /// Leaf node ids.
+    pub leaves: Vec<usize>,
+    /// Node ids grouped by level.
+    pub levels: Vec<Vec<usize>>,
+}
+
+impl ClusterTree {
+    /// Build by recursive median bisection until clusters have ≤ `n_min`
+    /// indices.
+    pub fn build(points: &[Point3], n_min: usize) -> ClusterTree {
+        Self::build_with_depth(points, n_min, usize::MAX)
+    }
+
+    /// Build a flat (BLR) clustering: order the indices geometrically, then
+    /// cut the root into equal chunks of ≈`block_size` — a depth-1 tree.
+    pub fn build_blr(points: &[Point3], block_size: usize) -> ClusterTree {
+        // Geometric ordering from a deep tree, then re-chunk.
+        let deep = Self::build(points, block_size.max(1));
+        let n = points.len();
+        let perm = deep.perm.clone();
+        let mut inv_perm = vec![0; n];
+        for (pos, &e) in perm.iter().enumerate() {
+            inv_perm[e] = pos;
+        }
+        let mut nodes = Vec::new();
+        let root_bbox = BBox::of(points);
+        nodes.push(ClusterNode { begin: 0, end: n, bbox: root_bbox, children: vec![], level: 0, parent: usize::MAX });
+        let nblocks = n.div_ceil(block_size.max(1));
+        let mut leaves = Vec::new();
+        for b in 0..nblocks {
+            let begin = b * block_size;
+            let end = ((b + 1) * block_size).min(n);
+            let bbox = BBox::of(&perm[begin..end].iter().map(|&e| points[e]).collect::<Vec<_>>());
+            let id = nodes.len();
+            nodes.push(ClusterNode { begin, end, bbox, children: vec![], level: 1, parent: 0 });
+            nodes[0].children.push(id);
+            leaves.push(id);
+        }
+        let levels = vec![vec![0], leaves.clone()];
+        ClusterTree { nodes, perm, inv_perm, leaves, levels }
+    }
+
+    /// Build with a maximum depth (used in tests and HODLR setups).
+    pub fn build_with_depth(points: &[Point3], n_min: usize, max_depth: usize) -> ClusterTree {
+        let n = points.len();
+        assert!(n > 0, "empty point set");
+        let n_min = n_min.max(1);
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut nodes: Vec<ClusterNode> = Vec::new();
+
+        // Iterative recursion with an explicit stack: (node id to fill).
+        struct Work {
+            id: usize,
+            begin: usize,
+            end: usize,
+            level: usize,
+        }
+        let bbox = BBox::of(points);
+        nodes.push(ClusterNode { begin: 0, end: n, bbox, children: vec![], level: 0, parent: usize::MAX });
+        let mut stack = vec![Work { id: 0, begin: 0, end: n, level: 0 }];
+        while let Some(w) = stack.pop() {
+            let size = w.end - w.begin;
+            if size <= n_min || w.level >= max_depth {
+                continue; // leaf
+            }
+            // Median split along longest axis of the node's bbox.
+            let axis = nodes[w.id].bbox.longest_axis();
+            let mid = w.begin + size / 2;
+            perm[w.begin..w.end].select_nth_unstable_by(mid - w.begin, |&a, &b| {
+                points[a].coord(axis).partial_cmp(&points[b].coord(axis)).unwrap()
+            });
+            for (b, e) in [(w.begin, mid), (mid, w.end)] {
+                if b == e {
+                    continue;
+                }
+                let cb = BBox::of(&perm[b..e].iter().map(|&i| points[i]).collect::<Vec<_>>());
+                let cid = nodes.len();
+                nodes.push(ClusterNode { begin: b, end: e, bbox: cb, children: vec![], level: w.level + 1, parent: w.id });
+                nodes[w.id].children.push(cid);
+                stack.push(Work { id: cid, begin: b, end: e, level: w.level + 1 });
+            }
+        }
+
+        let mut inv_perm = vec![0; n];
+        for (pos, &e) in perm.iter().enumerate() {
+            inv_perm[e] = pos;
+        }
+        let leaves: Vec<usize> = (0..nodes.len()).filter(|&i| nodes[i].is_leaf()).collect();
+        let depth = nodes.iter().map(|nd| nd.level).max().unwrap_or(0);
+        let mut levels = vec![Vec::new(); depth + 1];
+        for (i, nd) in nodes.iter().enumerate() {
+            levels[nd.level].push(i);
+        }
+        ClusterTree { nodes, perm, inv_perm, leaves, levels }
+    }
+
+    /// Number of indices.
+    pub fn len(&self) -> usize {
+        self.nodes[0].size()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tree depth (levels - 1).
+    pub fn depth(&self) -> usize {
+        self.levels.len() - 1
+    }
+
+    /// Root node id.
+    pub fn root(&self) -> usize {
+        0
+    }
+
+    /// Node accessor.
+    pub fn node(&self, id: usize) -> &ClusterNode {
+        &self.nodes[id]
+    }
+
+    /// External indices covered by a node, in internal order.
+    pub fn indices(&self, id: usize) -> &[usize] {
+        let nd = &self.nodes[id];
+        &self.perm[nd.begin..nd.end]
+    }
+
+    /// Permute an external-ordering vector into internal ordering.
+    pub fn to_internal(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.len());
+        (0..x.len()).map(|pos| x[self.perm[pos]]).collect()
+    }
+
+    /// Permute an internal-ordering vector back to external ordering.
+    pub fn to_external(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.len());
+        let mut out = vec![0.0; x.len()];
+        for (pos, &e) in self.perm.iter().enumerate() {
+            out[e] = x[pos];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::fibonacci_sphere;
+    use crate::util::Rng;
+
+    #[test]
+    fn partition_property() {
+        // every node is the disjoint union of its children (Def. 2.1)
+        let pts = fibonacci_sphere(500);
+        let ct = ClusterTree::build(&pts, 32);
+        for nd in &ct.nodes {
+            if nd.is_leaf() {
+                continue;
+            }
+            let mut covered: Vec<std::ops::Range<usize>> = nd.children.iter().map(|&c| ct.nodes[c].range()).collect();
+            covered.sort_by_key(|r| r.start);
+            assert_eq!(covered.first().unwrap().start, nd.begin);
+            assert_eq!(covered.last().unwrap().end, nd.end);
+            for w in covered.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn perm_is_permutation() {
+        let pts = fibonacci_sphere(300);
+        let ct = ClusterTree::build(&pts, 16);
+        let mut seen = vec![false; 300];
+        for &e in &ct.perm {
+            assert!(!seen[e]);
+            seen[e] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        for e in 0..300 {
+            assert_eq!(ct.perm[ct.inv_perm[e]], e);
+        }
+    }
+
+    #[test]
+    fn leaves_small() {
+        let pts = fibonacci_sphere(1000);
+        let ct = ClusterTree::build(&pts, 64);
+        for &l in &ct.leaves {
+            assert!(ct.nodes[l].size() <= 64);
+            assert!(ct.nodes[l].size() > 0);
+        }
+    }
+
+    #[test]
+    fn permutation_roundtrip() {
+        let pts = fibonacci_sphere(128);
+        let ct = ClusterTree::build(&pts, 8);
+        let mut rng = Rng::new(1);
+        let x = rng.vector(128);
+        let xi = ct.to_internal(&x);
+        let xe = ct.to_external(&xi);
+        assert_eq!(x, xe);
+    }
+
+    #[test]
+    fn blr_is_flat() {
+        let pts = fibonacci_sphere(520);
+        let ct = ClusterTree::build_blr(&pts, 64);
+        assert_eq!(ct.depth(), 1);
+        assert_eq!(ct.leaves.len(), 520usize.div_ceil(64));
+        let total: usize = ct.leaves.iter().map(|&l| ct.nodes[l].size()).sum();
+        assert_eq!(total, 520);
+    }
+
+    #[test]
+    fn bbox_contains_points() {
+        let pts = fibonacci_sphere(200);
+        let ct = ClusterTree::build(&pts, 20);
+        for (id, nd) in ct.nodes.iter().enumerate() {
+            for &e in ct.indices(id) {
+                let p = pts[e];
+                assert!(p.x >= nd.bbox.lo.x - 1e-12 && p.x <= nd.bbox.hi.x + 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! AFLP — adaptive floating point compression (paper §4.1, Fig. 8 left).
+//!
+//! Layout per value (little-endian words of 1..8 bytes):
+//!
+//! ```text
+//!   bit 8B-1 : sign
+//!   bits e..8B-2 : mantissa (m' = 8B − 1 − e_bits bits, hidden leading 1)
+//!   bits 0..e : biased exponent (value scaled by 1/v_min so exponent ≥ 0)
+//! ```
+//!
+//! The exponent field value `(1<<e_bits)−1` is reserved as the zero marker.
+//! Rounding is round-to-nearest on the mantissa with carry into the exponent.
+
+use super::formats::{exponent_bits_for, mantissa_bits_for};
+use super::{Blob, CodecParams};
+
+/// Compress with relative per-value accuracy ≤ `eps`.
+pub fn compress(data: &[f64], eps: f64) -> Blob {
+    let n = data.len();
+    // dynamic range over nonzero magnitudes
+    let mut vmin = f64::INFINITY;
+    let mut vmax = 0.0f64;
+    for &x in data {
+        let a = x.abs();
+        if a > 0.0 {
+            vmin = vmin.min(a);
+            vmax = vmax.max(a);
+        }
+    }
+    if vmax == 0.0 {
+        return Blob { params: CodecParams::Zero, n, bytes: Vec::new() };
+    }
+
+    let e_bits = exponent_bits_for(vmin, vmax);
+    let m_eps = mantissa_bits_for(eps.clamp(f64::MIN_POSITIVE, 0.5)) + 1; // +1: RTN gives u = 2^-(m+1)
+    // byte-align: 1 + m' + e_bits multiple of 8
+    let total_bits = (1 + m_eps + e_bits).div_ceil(8) * 8;
+    let total_bits = total_bits.min(64);
+    let bytes_per = (total_bits / 8) as u8;
+    let m_bits = total_bits - 1 - e_bits;
+
+    let zero_marker: u64 = (1u64 << e_bits) - 1;
+    let e_max = zero_marker - 1; // largest storable exponent
+    let mant_max: u64 = if m_bits >= 64 { u64::MAX } else { (1u64 << m_bits) - 1 };
+
+    let mut bytes = vec![0u8; n * bytes_per as usize];
+    let inv_scale = 1.0 / vmin;
+    for (i, &x) in data.iter().enumerate() {
+        let word: u64 = if x == 0.0 {
+            zero_marker
+        } else {
+            let sign = if x < 0.0 { 1u64 } else { 0 };
+            let y = x.abs() * inv_scale; // ≥ 1 up to fp rounding
+            let mut e = y.log2().floor().max(0.0) as u64;
+            let mut frac = y / f64::powi(2.0, e as i32);
+            // guard against log/pow edge cases
+            if frac < 1.0 {
+                if e > 0 {
+                    e -= 1;
+                }
+                frac = y / f64::powi(2.0, e as i32);
+            } else if frac >= 2.0 {
+                e += 1;
+                frac = y / f64::powi(2.0, e as i32);
+            }
+            // round-to-nearest mantissa
+            let mut mant = ((frac - 1.0) * (mant_max as f64 + 1.0)).round() as u64;
+            if mant > mant_max {
+                mant = 0;
+                e += 1;
+            }
+            if e > e_max {
+                e = e_max;
+                mant = mant_max;
+            }
+            (sign << (total_bits - 1)) | (mant << e_bits) | e
+        };
+        let off = i * bytes_per as usize;
+        bytes[off..off + bytes_per as usize].copy_from_slice(&word.to_le_bytes()[..bytes_per as usize]);
+    }
+
+    Blob { params: CodecParams::Aflp { bytes_per, e_bits: e_bits as u8, scale: vmin }, n, bytes }
+}
+
+/// Decode one packed word by direct IEEE-754 bit assembly: the stored
+/// mantissa becomes the f64 fraction field, the (non-negative) stored
+/// exponent is rebiased, one multiply applies the block scale. No
+/// transcendentals on the decode path (this is the MVM hot loop).
+#[inline(always)]
+fn decode_word(word: u64, e_bits: u32, total_bits: u32, scale: f64, zero_marker: u64, _mant_scale: f64) -> f64 {
+    let e = word & zero_marker; // zero_marker == exponent mask
+    if e == zero_marker {
+        return 0.0;
+    }
+    let m_bits = total_bits - 1 - e_bits;
+    let mant = (word >> e_bits) & ((1u64 << m_bits) - 1);
+    let sign = (word >> (total_bits - 1)) & 1;
+    if e <= 1023 {
+        // common case: assemble the f64 directly
+        let frac_bits = if m_bits <= 52 { mant << (52 - m_bits) } else { mant >> (m_bits - 52) };
+        let bits = (sign << 63) | ((1023 + e) << 52) | frac_bits;
+        f64::from_bits(bits) * scale
+    } else {
+        // extreme dynamic range: fall back to explicit scaling
+        let frac = 1.0 + mant as f64 / (1u64 << m_bits.min(52)) as f64;
+        let v = frac * f64::powi(2.0, e as i32) * scale;
+        if sign == 1 {
+            -v
+        } else {
+            v
+        }
+    }
+}
+
+fn params(blob: &Blob) -> (usize, u32, f64) {
+    match blob.params {
+        CodecParams::Aflp { bytes_per, e_bits, scale } => (bytes_per as usize, e_bits as u32, scale),
+        _ => unreachable!("not an AFLP blob"),
+    }
+}
+
+/// Bulk decode.
+pub fn decompress_into(blob: &Blob, out: &mut [f64]) {
+    decompress_range(blob, 0, blob.n, out);
+}
+
+/// Decode values [begin, end) — branchless direct bit assembly on the fast
+/// path (8-byte masked loads, arithmetic zero-select) so the compiler can
+/// vectorize; byte-assembled tail + rare-parameter fallback via
+/// [`decode_word`].
+pub fn decompress_range(blob: &Blob, begin: usize, end: usize, out: &mut [f64]) {
+    let (b, e_bits, scale) = params(blob);
+    let total_bits = (b * 8) as u32;
+    let m_bits = total_bits - 1 - e_bits;
+    let zero_marker = (1u64 << e_bits) - 1;
+    let bytes = &blob.bytes;
+    let n = end - begin;
+    debug_assert_eq!(out.len(), n);
+
+    if e_bits >= 11 || m_bits > 52 {
+        // extreme dynamic range / over-wide mantissa: generic path
+        let mut it = out.iter_mut();
+        crate::compress::for_each_word(bytes, b, begin, end, |w| {
+            *it.next().unwrap() = decode_word(w, e_bits, total_bits, scale, zero_marker, 0.0);
+        });
+        return;
+    }
+
+    let word_mask: u64 = if b >= 8 { u64::MAX } else { (1u64 << (8 * b)) - 1 };
+    let mant_mask: u64 = (1u64 << m_bits) - 1;
+    let mshift = 52 - m_bits;
+    // values whose 8-byte load stays in bounds
+    let fast_total = if bytes.len() >= 8 { (bytes.len() - 8) / b + 1 } else { 0 };
+    let fast = fast_total.min(end).saturating_sub(begin);
+
+    let mut k0 = 0usize;
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+    {
+        // SIMD decode, 4 values per iteration (the CPU analogue of the
+        // paper's AVX512 conversion kernels): byte-offset gather, vector
+        // mask/shift bit assembly, one mul_pd for the block scale.
+        use std::arch::x86_64::*;
+        unsafe {
+            let base = bytes.as_ptr() as *const i64;
+            let wmask_v = _mm256_set1_epi64x(word_mask as i64);
+            let emask_v = _mm256_set1_epi64x(zero_marker as i64);
+            let mantmask_v = _mm256_set1_epi64x(mant_mask as i64);
+            let c1023 = _mm256_set1_epi64x(1023);
+            let scale_v = _mm256_set1_pd(scale);
+            let cnt_e = _mm_cvtsi32_si128(e_bits as i32);
+            let cnt_top = _mm_cvtsi32_si128(total_bits as i32 - 1);
+            let cnt_63 = _mm_cvtsi32_si128(63);
+            let cnt_52 = _mm_cvtsi32_si128(52);
+            let cnt_m = _mm_cvtsi32_si128(mshift as i32);
+            let step = _mm256_set1_epi64x(4 * b as i64);
+            let mut off_v = _mm256_setr_epi64x(
+                (begin * b) as i64,
+                ((begin + 1) * b) as i64,
+                ((begin + 2) * b) as i64,
+                ((begin + 3) * b) as i64,
+            );
+            while k0 + 4 <= fast {
+                let w = _mm256_and_si256(_mm256_i64gather_epi64::<1>(base, off_v), wmask_v);
+                let e = _mm256_and_si256(w, emask_v);
+                let is_zero = _mm256_cmpeq_epi64(e, emask_v);
+                let mant = _mm256_and_si256(_mm256_srl_epi64(w, cnt_e), mantmask_v);
+                let sign = _mm256_sll_epi64(_mm256_srl_epi64(w, cnt_top), cnt_63);
+                let expf = _mm256_sll_epi64(_mm256_add_epi64(e, c1023), cnt_52);
+                let frac = _mm256_sll_epi64(mant, cnt_m);
+                let bits = _mm256_andnot_si256(is_zero, _mm256_or_si256(sign, _mm256_or_si256(expf, frac)));
+                let v = _mm256_mul_pd(_mm256_castsi256_pd(bits), scale_v);
+                _mm256_storeu_pd(out.as_mut_ptr().add(k0), v);
+                off_v = _mm256_add_epi64(off_v, step);
+                k0 += 4;
+            }
+        }
+    }
+
+    for (k, o) in out[k0..fast].iter_mut().enumerate() {
+        let off = (begin + k0 + k) * b;
+        let arr: [u8; 8] = unsafe { bytes.get_unchecked(off..off + 8) }.try_into().unwrap();
+        let w = u64::from_le_bytes(arr) & word_mask;
+        let e = w & zero_marker;
+        let mant = (w >> e_bits) & mant_mask;
+        let sign = w >> (total_bits - 1);
+        let keep = ((e != zero_marker) as u64).wrapping_neg();
+        let bits = ((sign << 63) | ((1023 + e) << 52) | (mant << mshift)) & keep;
+        *o = f64::from_bits(bits) * scale;
+    }
+    for (k, o) in out[fast..n].iter_mut().enumerate() {
+        let i = begin + fast + k;
+        let mut buf = [0u8; 8];
+        buf[..b].copy_from_slice(&bytes[i * b..i * b + b]);
+        *o = decode_word(u64::from_le_bytes(buf), e_bits, total_bits, scale, zero_marker, 0.0);
+    }
+}
+
+/// Random access.
+#[inline]
+pub fn get(blob: &Blob, i: usize) -> f64 {
+    let (b, e_bits, scale) = params(blob);
+    let total_bits = (b * 8) as u32;
+    let zero_marker = (1u64 << e_bits) - 1;
+    let w = crate::compress::load_word_at(&blob.bytes, b, i);
+    decode_word(w, e_bits, total_bits, scale, zero_marker, 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::max_rel_error;
+    use crate::util::Rng;
+
+    #[test]
+    fn accuracy_across_eps() {
+        let mut rng = Rng::new(41);
+        let data: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        for eps in [1e-1, 1e-3, 1e-5, 1e-7, 1e-9, 1e-12] {
+            let blob = compress(&data, eps);
+            assert!(max_rel_error(&blob, &data) <= eps, "eps {eps}");
+        }
+    }
+
+    #[test]
+    fn narrow_range_small_exponent() {
+        let data: Vec<f64> = (0..100).map(|i| 1.0 + i as f64 / 100.0).collect();
+        let blob = compress(&data, 1e-6);
+        match blob.params {
+            CodecParams::Aflp { e_bits, bytes_per, .. } => {
+                assert!(e_bits <= 2, "e_bits {e_bits}");
+                assert!(bytes_per <= 3);
+            }
+            _ => panic!("wrong params"),
+        }
+    }
+
+    #[test]
+    fn wide_dynamic_range() {
+        let data: Vec<f64> = (0..200).map(|i| 2f64.powi(i - 100) * 1.3).collect();
+        let blob = compress(&data, 1e-4);
+        assert!(max_rel_error(&blob, &data) <= 1e-4);
+    }
+
+    #[test]
+    fn negative_values() {
+        let data = vec![-1.5, 2.5, -3.25, 4.125];
+        let blob = compress(&data, 1e-8);
+        let dec = blob.to_vec();
+        for (d, o) in dec.iter().zip(&data) {
+            assert!((d - o).abs() <= 1e-8 * o.abs());
+            assert_eq!(d.signum(), o.signum());
+        }
+    }
+
+    #[test]
+    fn coarse_eps_small_footprint() {
+        let mut rng = Rng::new(42);
+        let data: Vec<f64> = (0..1024).map(|_| rng.normal()).collect();
+        let blob = compress(&data, 1e-2);
+        // 1 sign + 8 mantissa-ish + few exponent bits → ≤ 2 bytes/value
+        assert!(blob.bytes.len() <= 2 * data.len(), "{} bytes", blob.bytes.len());
+    }
+
+    #[test]
+    fn boundary_magnitudes_roundtrip() {
+        // exactly vmin and vmax must decode within eps
+        let data = vec![0.001, 1000.0, -0.001, -1000.0, 0.5];
+        let blob = compress(&data, 1e-6);
+        assert!(max_rel_error(&blob, &data) <= 1e-6);
+    }
+}

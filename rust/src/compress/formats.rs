@@ -1,0 +1,70 @@
+//! IEEE-754 (and related) format parameters — paper Table 1.
+
+/// Unit roundoff u = 2^−(m+1) for a format with `m` stored mantissa bits
+/// (round to nearest).
+pub fn unit_roundoff(mantissa_bits: u32) -> f64 {
+    0.5f64.powi(mantissa_bits as i32 + 1)
+}
+
+/// Mantissa bits of the named formats from Table 1.
+pub mod mantissa_bits {
+    pub const FP64: u32 = 52;
+    pub const FP32: u32 = 23;
+    pub const TF32: u32 = 10;
+    pub const BF16: u32 = 7;
+    pub const FP16: u32 = 10;
+    /// FP8 in the E4M3 variant.
+    pub const FP8_E4M3: u32 = 3;
+}
+
+/// Number of mantissa bits needed for accuracy ε: m_ε = ⌈−log₂ ε⌉ (paper §4.1).
+pub fn mantissa_bits_for(eps: f64) -> u32 {
+    assert!(eps > 0.0 && eps < 1.0, "eps must be in (0,1), got {eps}");
+    (-eps.log2()).ceil() as u32
+}
+
+/// Number of exponent bits needed for a dynamic range v_max/v_min:
+/// e_dr = ⌈log₂ log₂ (v_max/v_min)⌉ — we additionally guarantee that the
+/// value range 0..=E+1 (E = ⌊log₂(v_max/v_min)⌋, +1 rounding margin) plus a
+/// zero marker fits, which is the operational requirement.
+pub fn exponent_bits_for(vmin: f64, vmax: f64) -> u32 {
+    debug_assert!(vmin > 0.0 && vmax >= vmin);
+    let e_max = (vmax / vmin).log2().floor() as i64 + 1; // +1 rounding margin
+    // values 0..=e_max plus reserved zero marker must fit in e_bits
+    let needed = (e_max + 2) as u64;
+    (64 - needed.leading_zeros()).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Validates Table 1 of the paper.
+    #[test]
+    fn table1_unit_roundoffs() {
+        let close = |a: f64, b: f64| (a - b).abs() < 0.01 * b;
+        assert!(close(unit_roundoff(mantissa_bits::FP64), 1.11e-16));
+        assert!(close(unit_roundoff(mantissa_bits::FP32), 5.96e-8));
+        assert!(close(unit_roundoff(mantissa_bits::TF32), 4.88e-4));
+        assert!(close(unit_roundoff(mantissa_bits::BF16), 3.91e-3));
+        assert!(close(unit_roundoff(mantissa_bits::FP16), 4.88e-4));
+        assert!(close(unit_roundoff(mantissa_bits::FP8_E4M3), 6.25e-2));
+    }
+
+    #[test]
+    fn mantissa_bits_monotone() {
+        assert_eq!(mantissa_bits_for(0.5), 1);
+        assert!(mantissa_bits_for(1e-4) < mantissa_bits_for(1e-8));
+        assert_eq!(mantissa_bits_for(2f64.powi(-20)), 20);
+    }
+
+    #[test]
+    fn exponent_bits_cover_range() {
+        // single magnitude: minimal bits
+        assert!(exponent_bits_for(1.0, 1.0) >= 1);
+        // wide range needs more bits
+        assert!(exponent_bits_for(1e-10, 1e10) > exponent_bits_for(0.5, 2.0));
+        // e_bits for range 2^40: E=41, need ceil(log2(43)) = 6
+        assert_eq!(exponent_bits_for(1.0, 2f64.powi(40)), 6);
+    }
+}

@@ -1,0 +1,320 @@
+//! Error-adaptive floating point compression (paper §4).
+//!
+//! Two byte-aligned codecs with *random access* to individual values — the
+//! property that enables the tightly-coupled compressed MVM of §4.3:
+//!
+//! * [`aflp`] — **AFLP**: adaptive mantissa length `m_ε = ⌈−log₂ ε⌉` *and*
+//!   adaptive exponent width from the dynamic range of the data, values
+//!   scaled so the exponent is non-negative (paper Fig. 8 left, from
+//!   Kriemann SISC 2025).
+//! * [`fpx`] — **FPX**: byte-aligned truncation of the IEEE-754 FP32/FP64
+//!   formats with round-to-nearest; decompression is pure byte shifting
+//!   (paper Fig. 8 right, after Amestoy et al. 2025).
+//!
+//! [`valr`] implements the **VALR** scheme for low-rank data: each column of
+//! the (orthogonal) factors is stored with its own accuracy δᵢ = δ/σᵢ
+//! (Eq. 6/7).
+
+pub mod aflp;
+pub mod formats;
+pub mod fpx;
+pub mod valr;
+
+pub use formats::unit_roundoff;
+pub use valr::ZLowRankValr;
+
+/// Compression codec selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Adaptive floating point (mantissa + exponent adaptive).
+    Aflp,
+    /// Truncated IEEE-754 (FP32/FP64 prefix, byte aligned).
+    Fpx,
+}
+
+impl Codec {
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Aflp => "aflp",
+            Codec::Fpx => "fpx",
+        }
+    }
+}
+
+impl std::str::FromStr for Codec {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "aflp" => Ok(Codec::Aflp),
+            "fpx" => Ok(Codec::Fpx),
+            other => Err(format!("unknown codec '{other}' (aflp|fpx)")),
+        }
+    }
+}
+
+/// Per-blob codec parameters (the decode "header").
+#[derive(Clone, Copy, Debug)]
+pub enum CodecParams {
+    /// AFLP: `bytes_per` value, `e_bits` exponent bits, scale = v_min.
+    Aflp { bytes_per: u8, e_bits: u8, scale: f64 },
+    /// FPX over FP32: top `bytes_per` bytes of the f32 pattern.
+    Fpx32 { bytes_per: u8 },
+    /// FPX over FP64: top `bytes_per` bytes of the f64 pattern.
+    Fpx64 { bytes_per: u8 },
+    /// All-zero data (no payload).
+    Zero,
+}
+
+/// A compressed array of f64 values with random access.
+#[derive(Clone, Debug)]
+pub struct Blob {
+    pub params: CodecParams,
+    /// Number of values.
+    pub n: usize,
+    /// Packed little-endian payload, `n * bytes_per` bytes.
+    pub bytes: Vec<u8>,
+}
+
+/// Fixed per-blob header overhead charged in memory accounting
+/// (params + length + vec bookkeeping).
+pub const BLOB_OVERHEAD: usize = 24;
+
+impl Blob {
+    /// Compress `data` so that the *relative* error per value is ≤ `eps`
+    /// (values of magnitude far below the block maximum may carry larger
+    /// relative error under FPX64 denormal-free truncation — see codec docs).
+    pub fn compress(codec: Codec, data: &[f64], eps: f64) -> Blob {
+        match codec {
+            Codec::Aflp => aflp::compress(data, eps),
+            Codec::Fpx => fpx::compress(data, eps),
+        }
+    }
+
+    /// Decompress everything into `out` (len == n).
+    pub fn decompress_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.n);
+        match self.params {
+            CodecParams::Aflp { .. } => aflp::decompress_into(self, out),
+            CodecParams::Fpx32 { .. } | CodecParams::Fpx64 { .. } => fpx::decompress_into(self, out),
+            CodecParams::Zero => out.fill(0.0),
+        }
+    }
+
+    /// Decompress the half-open value range [begin, end) into `out`.
+    pub fn decompress_range(&self, begin: usize, end: usize, out: &mut [f64]) {
+        debug_assert!(begin <= end && end <= self.n);
+        debug_assert_eq!(out.len(), end - begin);
+        match self.params {
+            CodecParams::Aflp { .. } => aflp::decompress_range(self, begin, end, out),
+            CodecParams::Fpx32 { .. } | CodecParams::Fpx64 { .. } => fpx::decompress_range(self, begin, end, out),
+            CodecParams::Zero => out.fill(0.0),
+        }
+    }
+
+    /// Random access to value `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        debug_assert!(i < self.n);
+        match self.params {
+            CodecParams::Aflp { .. } => aflp::get(self, i),
+            CodecParams::Fpx32 { .. } | CodecParams::Fpx64 { .. } => fpx::get(self, i),
+            CodecParams::Zero => 0.0,
+        }
+    }
+
+    /// Decompress to a fresh vector.
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut v = vec![0.0; self.n];
+        self.decompress_into(&mut v);
+        v
+    }
+
+    /// Bytes per stored value.
+    pub fn bytes_per_value(&self) -> usize {
+        match self.params {
+            CodecParams::Aflp { bytes_per, .. } => bytes_per as usize,
+            CodecParams::Fpx32 { bytes_per } | CodecParams::Fpx64 { bytes_per } => bytes_per as usize,
+            CodecParams::Zero => 0,
+        }
+    }
+
+    /// Memory footprint (payload + header overhead).
+    pub fn byte_size(&self) -> usize {
+        self.bytes.len() + BLOB_OVERHEAD
+    }
+}
+
+/// How a hierarchical matrix should be compressed.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressionConfig {
+    pub codec: Codec,
+    /// Block accuracy ε (drives mantissa widths).
+    pub eps: f64,
+    /// Use VALR (per-column adaptive accuracy) for low-rank factors and
+    /// cluster bases; otherwise compress factors with fixed precision.
+    pub valr: bool,
+}
+
+impl CompressionConfig {
+    pub fn aflp(eps: f64) -> Self {
+        CompressionConfig { codec: Codec::Aflp, eps, valr: true }
+    }
+
+    pub fn fpx(eps: f64) -> Self {
+        CompressionConfig { codec: Codec::Fpx, eps, valr: true }
+    }
+}
+
+/// Iterate packed little-endian words of width `b` bytes for value indices
+/// [begin, end): a masked unaligned 8-byte load on the fast path (one `mov`
+/// + `and` instead of a variable-length memcpy per value — this is the MVM
+/// decode hot loop), byte-assembly only for the last values of the buffer.
+#[inline(always)]
+pub(crate) fn for_each_word(bytes: &[u8], b: usize, begin: usize, end: usize, mut f: impl FnMut(u64)) {
+    let mask: u64 = if b >= 8 { u64::MAX } else { (1u64 << (8 * b)) - 1 };
+    let fast_end_off = bytes.len().saturating_sub(8);
+    let mut off = begin * b;
+    for _ in begin..end {
+        let w = if off <= fast_end_off {
+            let arr: [u8; 8] = bytes[off..off + 8].try_into().unwrap();
+            u64::from_le_bytes(arr) & mask
+        } else {
+            let mut buf = [0u8; 8];
+            buf[..b].copy_from_slice(&bytes[off..off + b]);
+            u64::from_le_bytes(buf)
+        };
+        f(w);
+        off += b;
+    }
+}
+
+/// Single-word random access (same layout as [`for_each_word`]).
+#[inline(always)]
+pub(crate) fn load_word_at(bytes: &[u8], b: usize, i: usize) -> u64 {
+    let off = i * b;
+    if off + 8 <= bytes.len() {
+        let arr: [u8; 8] = bytes[off..off + 8].try_into().unwrap();
+        let mask: u64 = if b >= 8 { u64::MAX } else { (1u64 << (8 * b)) - 1 };
+        u64::from_le_bytes(arr) & mask
+    } else {
+        let mut buf = [0u8; 8];
+        buf[..b].copy_from_slice(&bytes[off..off + b]);
+        u64::from_le_bytes(buf)
+    }
+}
+
+/// Maximum relative error of a compressed blob vs the original data
+/// (test/diagnostic helper).
+pub fn max_rel_error(blob: &Blob, data: &[f64]) -> f64 {
+    let dec = blob.to_vec();
+    let mut worst = 0.0f64;
+    for (d, o) in dec.iter().zip(data) {
+        if *o != 0.0 {
+            worst = worst.max((d - o).abs() / o.abs());
+        } else {
+            worst = worst.max(d.abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_data(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * 10f64.powf(rng.range(-2.0, 2.0))).collect()
+    }
+
+    #[test]
+    fn both_codecs_meet_eps() {
+        let data = sample_data(1000, 7);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            for eps in [1e-2, 1e-4, 1e-6, 1e-8, 1e-10] {
+                let blob = Blob::compress(codec, &data, eps);
+                let err = max_rel_error(&blob, &data);
+                assert!(err <= eps, "{codec:?} eps={eps} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn byte_sizes_shrink_with_eps() {
+        let data = sample_data(4096, 8);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let coarse = Blob::compress(codec, &data, 1e-2).byte_size();
+            let fine = Blob::compress(codec, &data, 1e-10).byte_size();
+            assert!(coarse < fine, "{codec:?}: {coarse} !< {fine}");
+            assert!(fine <= data.len() * 8 + BLOB_OVERHEAD);
+        }
+    }
+
+    #[test]
+    fn aflp_beats_fpx_on_narrow_range() {
+        // values of similar magnitude: AFLP needs almost no exponent bits
+        let mut rng = Rng::new(9);
+        let data: Vec<f64> = (0..2048).map(|_| 1.0 + 0.5 * rng.uniform()).collect();
+        let eps = 1e-6;
+        let a = Blob::compress(Codec::Aflp, &data, eps).byte_size();
+        let f = Blob::compress(Codec::Fpx, &data, eps).byte_size();
+        assert!(a <= f, "aflp {a} vs fpx {f}");
+    }
+
+    #[test]
+    fn random_access_matches_bulk() {
+        let data = sample_data(257, 10);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let blob = Blob::compress(codec, &data, 1e-6);
+            let bulk = blob.to_vec();
+            for i in [0usize, 1, 100, 255, 256] {
+                assert_eq!(blob.get(i), bulk[i], "{codec:?} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn range_decompress() {
+        let data = sample_data(500, 11);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let blob = Blob::compress(codec, &data, 1e-7);
+            let bulk = blob.to_vec();
+            let mut part = vec![0.0; 100];
+            blob.decompress_range(123, 223, &mut part);
+            assert_eq!(&part[..], &bulk[123..223]);
+        }
+    }
+
+    #[test]
+    fn zero_data() {
+        let data = vec![0.0; 64];
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let blob = Blob::compress(codec, &data, 1e-6);
+            assert_eq!(blob.to_vec(), data);
+        }
+    }
+
+    #[test]
+    fn handles_zeros_mixed_with_values() {
+        let mut data = sample_data(100, 12);
+        data[0] = 0.0;
+        data[50] = 0.0;
+        data[99] = 0.0;
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let blob = Blob::compress(codec, &data, 1e-6);
+            let dec = blob.to_vec();
+            assert_eq!(dec[0], 0.0, "{codec:?}");
+            assert_eq!(dec[50], 0.0);
+            assert_eq!(dec[99], 0.0);
+            assert!(max_rel_error(&blob, &data) <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn codec_from_str() {
+        assert_eq!("aflp".parse::<Codec>().unwrap(), Codec::Aflp);
+        assert_eq!("FPX".parse::<Codec>().unwrap(), Codec::Fpx);
+        assert!("zfp".parse::<Codec>().is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! VALR — Variable Accuracy per Low-Rank column (paper §4.2, Eq. 6/7).
+//!
+//! A low-rank block M ≈ U·Vᵀ is re-factored as W·diag(σ)·Xᵀ with orthonormal
+//! W, X (SVD of the factored product). Column i of W and X is then compressed
+//! with its *own* accuracy δᵢ = δ/(k·σᵢ): directions with small singular
+//! values tolerate coarse storage, so the total footprint is far below a
+//! fixed-precision encoding at the same block error δ.
+
+use super::{Blob, Codec, BLOB_OVERHEAD};
+use crate::la::DMatrix;
+use crate::lowrank::LowRank;
+
+/// VALR-compressed low-rank block (or cluster basis): per-column blobs plus
+/// FP64 singular values.
+#[derive(Clone, Debug)]
+pub struct ZLowRankValr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Singular values σ₀ ≥ σ₁ ≥ … (kept in FP64: k values are negligible).
+    pub sigma: Vec<f64>,
+    /// Columns of W (nrows each), compressed with accuracy δ/(k·σᵢ).
+    pub wcols: Vec<Blob>,
+    /// Columns of X (ncols each).
+    pub xcols: Vec<Blob>,
+}
+
+impl ZLowRankValr {
+    /// Compress a factored block with total accuracy `eps` relative to the
+    /// block's spectral norm (σ₀).
+    pub fn compress_lowrank(lr: &LowRank, codec: Codec, eps: f64) -> ZLowRankValr {
+        let svd = crate::lowrank::truncated_svd_of_product(lr, eps);
+        Self::from_svd_parts(&svd.u, &svd.s, &svd.v, codec, eps)
+    }
+
+    /// Compress explicit orthonormal factors W (m×k), X (n×k) with weights σ.
+    pub fn from_svd_parts(w: &DMatrix, sigma: &[f64], x: &DMatrix, codec: Codec, eps: f64) -> ZLowRankValr {
+        let k = sigma.len();
+        assert_eq!(w.ncols(), k);
+        assert_eq!(x.ncols(), k);
+        let s0 = sigma.first().copied().unwrap_or(0.0);
+        let mut wcols = Vec::with_capacity(k);
+        let mut xcols = Vec::with_capacity(k);
+        for i in 0..k {
+            // per-column accuracy δ_i = ε σ₀ / (2k σ_i); the 2k compensates the
+            // error accumulation of Eq. (7) over both factors.
+            let delta_i = if sigma[i] > 0.0 && s0 > 0.0 {
+                (eps * s0 / (2.0 * k as f64 * sigma[i])).clamp(1e-16, 0.25)
+            } else {
+                0.25
+            };
+            wcols.push(Blob::compress(codec, w.col(i), delta_i));
+            xcols.push(Blob::compress(codec, x.col(i), delta_i));
+        }
+        ZLowRankValr { nrows: w.nrows(), ncols: x.nrows(), sigma: sigma.to_vec(), wcols, xcols }
+    }
+
+    /// Compress a *cluster basis* (orthonormal columns with singular weights):
+    /// only one factor, same per-column rule (Eq. 7).
+    pub fn compress_basis(w: &DMatrix, sigma: &[f64], codec: Codec, eps: f64) -> ZLowRankValr {
+        let k = w.ncols();
+        let s0 = sigma.first().copied().unwrap_or(0.0);
+        let mut wcols = Vec::with_capacity(k);
+        for i in 0..k {
+            let si = sigma.get(i).copied().unwrap_or(s0);
+            let delta_i = if si > 0.0 && s0 > 0.0 { (eps * s0 / (k as f64 * si)).clamp(1e-16, 0.25) } else { 0.25 };
+            wcols.push(Blob::compress(codec, w.col(i), delta_i));
+        }
+        ZLowRankValr { nrows: w.nrows(), ncols: 0, sigma: sigma.to_vec(), wcols, xcols: Vec::new() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.wcols.len()
+    }
+
+    /// Reconstruct the dense block W·diag(σ)·Xᵀ (tests / error measurement).
+    pub fn to_dense(&self) -> DMatrix {
+        let mut out = DMatrix::zeros(self.nrows, self.ncols);
+        let mut wbuf = vec![0.0; self.nrows];
+        let mut xbuf = vec![0.0; self.ncols];
+        for i in 0..self.rank() {
+            self.wcols[i].decompress_into(&mut wbuf);
+            self.xcols[i].decompress_into(&mut xbuf);
+            for j in 0..self.ncols {
+                let sx = self.sigma[i] * xbuf[j];
+                if sx != 0.0 {
+                    let col = out.col_mut(j);
+                    for r in 0..self.nrows {
+                        col[r] += wbuf[r] * sx;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Decompress to factored form U·Vᵀ with σ folded into V (for algorithms
+    /// that need explicit factors, e.g. the stacked MVM).
+    pub fn to_lowrank(&self) -> LowRank {
+        let u = self.w_to_dense();
+        let mut v = DMatrix::zeros(self.ncols, self.rank());
+        for i in 0..self.rank() {
+            self.xcols[i].decompress_into(v.col_mut(i));
+            let s = self.sigma[i];
+            for x in v.col_mut(i) {
+                *x *= s;
+            }
+        }
+        LowRank { u, v }
+    }
+
+    /// Decompress the basis factor W (as a matrix, σ NOT applied).
+    pub fn w_to_dense(&self) -> DMatrix {
+        let mut w = DMatrix::zeros(self.nrows, self.rank());
+        for i in 0..self.rank() {
+            self.wcols[i].decompress_into(w.col_mut(i));
+        }
+        w
+    }
+
+    /// Memory footprint.
+    pub fn byte_size(&self) -> usize {
+        let cols: usize = self.wcols.iter().chain(self.xcols.iter()).map(|b| b.byte_size()).sum();
+        cols + self.sigma.len() * 8 + BLOB_OVERHEAD
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::{matmul, Trans};
+    use crate::util::Rng;
+
+    /// A low-rank block with prescribed singular value decay σ_i = decay^i.
+    fn decaying_block(m: usize, n: usize, k: usize, decay: f64, seed: u64) -> LowRank {
+        let mut rng = Rng::new(seed);
+        let (qu, _) = crate::la::qr_thin(&DMatrix::random(m, k, &mut rng));
+        let (qv, _) = crate::la::qr_thin(&DMatrix::random(n, k, &mut rng));
+        let mut v = qv;
+        for i in 0..k {
+            let s = decay.powi(i as i32);
+            for x in v.col_mut(i) {
+                *x *= s;
+            }
+        }
+        LowRank { u: qu, v }
+    }
+
+    #[test]
+    fn valr_meets_block_accuracy() {
+        let lr = decaying_block(60, 50, 10, 0.3, 61);
+        let dense = lr.to_dense();
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            for eps in [1e-4, 1e-6, 1e-8] {
+                let z = ZLowRankValr::compress_lowrank(&lr, codec, eps);
+                let mut d = z.to_dense();
+                d.add_scaled(-1.0, &dense);
+                let err = d.fro_norm() / dense.fro_norm();
+                assert!(err <= eps, "{codec:?} eps={eps} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn valr_smaller_than_fixed_precision() {
+        // strong decay → the tail columns cost almost nothing under VALR
+        let lr = decaying_block(256, 256, 20, 0.25, 62);
+        let eps = 1e-8;
+        let z = ZLowRankValr::compress_lowrank(&lr, Codec::Aflp, eps);
+        // fixed-precision alternative: both factors at eps
+        let svd = crate::lowrank::truncated_svd_of_product(&lr, eps);
+        let fixed = Blob::compress(Codec::Aflp, svd.u.data(), eps).byte_size()
+            + Blob::compress(Codec::Aflp, svd.v.data(), eps).byte_size()
+            + svd.s.len() * 8;
+        assert!(z.byte_size() < fixed, "valr {} !< fixed {}", z.byte_size(), fixed);
+    }
+
+    #[test]
+    fn tail_columns_coarser_than_head() {
+        let lr = decaying_block(128, 128, 12, 0.2, 63);
+        let z = ZLowRankValr::compress_lowrank(&lr, Codec::Aflp, 1e-10);
+        let first = z.wcols.first().unwrap().bytes_per_value();
+        let last = z.wcols.last().unwrap().bytes_per_value();
+        assert!(last < first, "head {first} tail {last}");
+    }
+
+    #[test]
+    fn basis_compression_error_bound() {
+        // Eq. (7): ‖WΣ − W̃Σ‖_F ≤ Σ δ_i σ_i ≤ ε σ₀
+        let mut rng = Rng::new(64);
+        let (w, _) = crate::la::qr_thin(&DMatrix::random(80, 8, &mut rng));
+        let sigma: Vec<f64> = (0..8).map(|i| 0.4f64.powi(i)).collect();
+        let eps = 1e-6;
+        let z = ZLowRankValr::compress_basis(&w, &sigma, Codec::Aflp, eps);
+        let wd = z.w_to_dense();
+        // scaled difference
+        let mut diff = 0.0f64;
+        for i in 0..8 {
+            let mut col_err2 = 0.0;
+            for r in 0..80 {
+                let d = w[(r, i)] - wd[(r, i)];
+                col_err2 += d * d;
+            }
+            diff += col_err2.sqrt() * sigma[i];
+        }
+        assert!(diff <= eps * sigma[0] * 1.001, "diff {diff}");
+    }
+
+    #[test]
+    fn to_dense_matches_factored_product() {
+        let lr = decaying_block(30, 25, 5, 0.5, 65);
+        let z = ZLowRankValr::compress_lowrank(&lr, Codec::Fpx, 1e-12);
+        let svd = crate::lowrank::truncated_svd_of_product(&lr, 1e-12);
+        let mut us = svd.u.clone();
+        for (j, &s) in svd.s.iter().enumerate() {
+            for x in us.col_mut(j) {
+                *x *= s;
+            }
+        }
+        let direct = matmul(&us, Trans::No, &svd.v, Trans::Yes);
+        let zd = z.to_dense();
+        for j in 0..25 {
+            for i in 0..30 {
+                assert!((zd[(i, j)] - direct[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Coordinator metrics: request counts, latency percentiles, effective
+//! bandwidth.
+
+use crate::util::stats;
+use std::sync::Mutex;
+
+/// Accumulated metrics (thread safe).
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    requests: usize,
+    batches: usize,
+    batch_sizes: Vec<f64>,
+    latencies: Vec<f64>,
+    mvm_seconds: f64,
+    bytes_touched: f64,
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: usize,
+    pub batches: usize,
+    pub avg_batch: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub mvm_seconds: f64,
+    pub effective_gbs: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, batch_size: usize, mvm_seconds: f64, bytes: usize, latencies: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += batch_size;
+        g.batches += 1;
+        g.batch_sizes.push(batch_size as f64);
+        g.latencies.extend_from_slice(latencies);
+        g.mvm_seconds += mvm_seconds;
+        g.bytes_touched += bytes as f64;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            avg_batch: stats::mean(&g.batch_sizes),
+            p50_latency: stats::percentile(&g.latencies, 50.0),
+            p99_latency: stats::percentile(&g.latencies, 99.0),
+            mvm_seconds: g.mvm_seconds,
+            effective_gbs: if g.mvm_seconds > 0.0 { g.bytes_touched / g.mvm_seconds / 1e9 } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::new();
+        m.record_batch(4, 0.1, 1_000_000_000, &[0.01, 0.02, 0.03, 0.04]);
+        m.record_batch(2, 0.1, 1_000_000_000, &[0.05, 0.06]);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert!((s.avg_batch - 3.0).abs() < 1e-12);
+        assert!((s.effective_gbs - 10.0).abs() < 1e-9);
+        assert!(s.p99_latency >= s.p50_latency);
+    }
+}

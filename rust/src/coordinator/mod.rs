@@ -1,0 +1,14 @@
+//! MVM request coordinator (L3): queue → dynamic batcher → worker loop.
+//!
+//! The paper motivates MVM as the kernel of iterative solvers; in a serving
+//! setting many independent right-hand sides arrive concurrently. The
+//! coordinator batches them (up to `max_batch`, with a short linger window)
+//! and executes one *multi-RHS* traversal per batch — amortizing every load
+//! of (compressed) matrix data over the whole batch, exactly the
+//! bandwidth-oriented optimization the paper targets.
+
+mod metrics;
+mod server;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{BatchPolicy, MvmServer, Request, Response};

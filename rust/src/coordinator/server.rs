@@ -1,0 +1,195 @@
+//! The MVM server: request queue, dynamic batcher, synchronous worker loop.
+//!
+//! No tokio in the sandbox — the server uses std threads + channels, which is
+//! adequate: the hot path is the batched MVM itself, and the coordinator adds
+//! only queueing.
+
+use super::metrics::Metrics;
+use crate::hmatrix::HMatrix;
+use crate::la::DMatrix;
+use crate::mvm::h_mvm_multi;
+use crate::util::Timer;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// An MVM request: a right-hand side in internal ordering.
+pub struct Request {
+    pub id: u64,
+    pub x: Vec<f64>,
+    pub submitted: Instant,
+    /// Channel the response is delivered on.
+    pub reply: Sender<Response>,
+}
+
+/// The response: y = A x plus timing.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub y: Vec<f64>,
+    /// Seconds from submission to completion.
+    pub latency: f64,
+    /// Batch this request was served in.
+    pub batch_size: usize,
+}
+
+/// Dynamic batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// How long to wait for more requests once one is pending.
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, linger: Duration::from_micros(200) }
+    }
+}
+
+/// A synchronous MVM server over an H-matrix.
+pub struct MvmServer {
+    tx: Sender<Request>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: Mutex<u64>,
+}
+
+impl MvmServer {
+    /// Start the worker loop for matrix `m`.
+    pub fn start(m: Arc<HMatrix>, policy: BatchPolicy) -> MvmServer {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::new());
+        let met = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("hmatc-mvm-server".into())
+            .spawn(move || worker_loop(m, policy, rx, met))
+            .expect("spawn server worker");
+        MvmServer { tx, worker: Some(worker), metrics, next_id: Mutex::new(0) }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, x: Vec<f64>) -> Receiver<Response> {
+        let (reply, rx) = channel();
+        let id = {
+            let mut g = self.next_id.lock().unwrap();
+            *g += 1;
+            *g
+        };
+        self.tx.send(Request { id, x, submitted: Instant::now(), reply }).expect("server gone");
+        rx
+    }
+
+    /// Blocking convenience call.
+    pub fn call(&self, x: Vec<f64>) -> Response {
+        self.submit(x).recv().expect("server dropped response")
+    }
+}
+
+impl Drop for MvmServer {
+    fn drop(&mut self) {
+        // close the queue, then join the worker
+        let (dead_tx, _) = channel();
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(m: Arc<HMatrix>, policy: BatchPolicy, rx: Receiver<Request>, metrics: Arc<Metrics>) {
+    let n = m.nrows();
+    let bytes = m.byte_size();
+    loop {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped
+        };
+        let mut batch = vec![first];
+        // linger for more
+        let deadline = Instant::now() + policy.linger;
+        while batch.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+
+        // assemble the multivector
+        let b = batch.len();
+        let mut x = DMatrix::zeros(n, b);
+        for (c, r) in batch.iter().enumerate() {
+            x.col_mut(c).copy_from_slice(&r.x);
+        }
+        let mut y = DMatrix::zeros(n, b);
+        let t = Timer::start();
+        h_mvm_multi(1.0, &m, &x, &mut y);
+        let mvm_secs = t.elapsed();
+
+        // record metrics BEFORE delivering replies: clients may snapshot the
+        // metrics immediately after receiving their response
+        let latencies: Vec<f64> = batch.iter().map(|r| r.submitted.elapsed().as_secs_f64()).collect();
+        metrics.record_batch(b, mvm_secs, bytes, &latencies);
+        for (c, r) in batch.into_iter().enumerate() {
+            let latency = r.submitted.elapsed().as_secs_f64();
+            let _ = r.reply.send(Response { id: r.id, y: y.col(c).to_vec(), latency, batch_size: b });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+    use crate::geometry::icosphere;
+    use crate::kernelfn::{LaplaceSlp, MatrixGen};
+    use crate::lowrank::AcaOptions;
+    use crate::util::Rng;
+
+    fn small_h() -> Arc<HMatrix> {
+        let geom = icosphere(1);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), 8));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        Arc::new(HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-6)))
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let h = small_h();
+        let server = MvmServer::start(h.clone(), BatchPolicy::default());
+        let mut rng = Rng::new(161);
+        for _ in 0..5 {
+            let x = rng.vector(h.ncols());
+            let resp = server.call(x.clone());
+            let mut want = vec![0.0; h.nrows()];
+            crate::mvm::mvm(1.0, &h, &x, &mut want, crate::mvm::MvmAlgorithm::Seq);
+            for i in 0..want.len() {
+                assert!((resp.y[i] - want[i]).abs() < 1e-10);
+            }
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 5);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let h = small_h();
+        let server = Arc::new(MvmServer::start(h.clone(), BatchPolicy { max_batch: 16, linger: Duration::from_millis(20) }));
+        let mut rng = Rng::new(162);
+        let xs: Vec<Vec<f64>> = (0..12).map(|_| rng.vector(h.ncols())).collect();
+        let rxs: Vec<_> = xs.iter().map(|x| server.submit(x.clone())).collect();
+        let resps: Vec<Response> = rxs.into_iter().map(|r| r.recv().unwrap()).collect();
+        // at least some requests must have shared a batch
+        assert!(resps.iter().any(|r| r.batch_size > 1), "no batching happened");
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 12);
+        assert!(snap.batches < 12);
+    }
+}

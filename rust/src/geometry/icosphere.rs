@@ -1,0 +1,124 @@
+//! Recursively subdivided icosahedron ("icosphere") triangulation of the unit
+//! sphere — the paper's model geometry Γ = S². Level d has 20·4^d triangles:
+//! d = 3 → 1280, d = 4 → 5120, d = 5 → 20480, d = 6 → 81920.
+
+use super::{Geometry, Point3};
+use std::collections::HashMap;
+
+/// Build an icosphere triangulation at subdivision level `level`.
+pub fn icosphere(level: usize) -> Geometry {
+    // Icosahedron vertices from the golden ratio construction.
+    let phi = (1.0 + 5.0f64.sqrt()) / 2.0;
+    let mut vertices: Vec<Point3> = vec![
+        Point3::new(-1.0, phi, 0.0),
+        Point3::new(1.0, phi, 0.0),
+        Point3::new(-1.0, -phi, 0.0),
+        Point3::new(1.0, -phi, 0.0),
+        Point3::new(0.0, -1.0, phi),
+        Point3::new(0.0, 1.0, phi),
+        Point3::new(0.0, -1.0, -phi),
+        Point3::new(0.0, 1.0, -phi),
+        Point3::new(phi, 0.0, -1.0),
+        Point3::new(phi, 0.0, 1.0),
+        Point3::new(-phi, 0.0, -1.0),
+        Point3::new(-phi, 0.0, 1.0),
+    ]
+    .into_iter()
+    .map(|p| p.normalized())
+    .collect();
+
+    let mut triangles: Vec<[usize; 3]> = vec![
+        [0, 11, 5],
+        [0, 5, 1],
+        [0, 1, 7],
+        [0, 7, 10],
+        [0, 10, 11],
+        [1, 5, 9],
+        [5, 11, 4],
+        [11, 10, 2],
+        [10, 7, 6],
+        [7, 1, 8],
+        [3, 9, 4],
+        [3, 4, 2],
+        [3, 2, 6],
+        [3, 6, 8],
+        [3, 8, 9],
+        [4, 9, 5],
+        [2, 4, 11],
+        [6, 2, 10],
+        [8, 6, 7],
+        [9, 8, 1],
+    ];
+
+    for _ in 0..level {
+        let mut midpoint_cache: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut next = Vec::with_capacity(triangles.len() * 4);
+        let mut midpoint = |a: usize, b: usize, vertices: &mut Vec<Point3>| -> usize {
+            let key = (a.min(b), a.max(b));
+            *midpoint_cache.entry(key).or_insert_with(|| {
+                let m = vertices[a].add(vertices[b]).scale(0.5).normalized();
+                vertices.push(m);
+                vertices.len() - 1
+            })
+        };
+        for t in &triangles {
+            let ab = midpoint(t[0], t[1], &mut vertices);
+            let bc = midpoint(t[1], t[2], &mut vertices);
+            let ca = midpoint(t[2], t[0], &mut vertices);
+            next.push([t[0], ab, ca]);
+            next.push([t[1], bc, ab]);
+            next.push([t[2], ca, bc]);
+            next.push([ab, bc, ca]);
+        }
+        triangles = next;
+    }
+
+    Geometry { vertices, triangles, centroids: vec![], areas: vec![] }.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangle_counts() {
+        assert_eq!(icosphere(0).len(), 20);
+        assert_eq!(icosphere(1).len(), 80);
+        assert_eq!(icosphere(3).len(), 1280);
+    }
+
+    #[test]
+    fn euler_characteristic() {
+        // V - E + F = 2 for a sphere; E = 3F/2 for a closed triangulation.
+        let g = icosphere(2);
+        let f = g.triangles.len();
+        let v = g.vertices.len();
+        let e = 3 * f / 2;
+        assert_eq!(v as i64 - e as i64 + f as i64, 2);
+    }
+
+    #[test]
+    fn area_approaches_sphere() {
+        // total area → 4π as the triangulation refines
+        let a2 = icosphere(2).total_area();
+        let a4 = icosphere(4).total_area();
+        let sphere = 4.0 * std::f64::consts::PI;
+        assert!((a4 - sphere).abs() < (a2 - sphere).abs());
+        assert!((a4 - sphere).abs() / sphere < 0.01, "area {a4} vs {sphere}");
+    }
+
+    #[test]
+    fn vertices_on_sphere() {
+        let g = icosphere(2);
+        for v in &g.vertices {
+            assert!((v.norm() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn centroids_and_areas_positive() {
+        let g = icosphere(1);
+        assert_eq!(g.centroids.len(), g.len());
+        assert!(g.areas.iter().all(|&a| a > 0.0));
+    }
+}

@@ -1,0 +1,77 @@
+//! Geometry for the BEM model problem: icosphere triangulations and generic
+//! point clouds.
+
+mod icosphere;
+mod points;
+
+pub use icosphere::icosphere;
+pub use points::{circle_points, fibonacci_sphere, random_cube, Point3};
+
+/// A triangulated surface with per-triangle centroids and areas — the
+/// discrete data the Galerkin matrix generator needs.
+#[derive(Clone, Debug)]
+pub struct Geometry {
+    /// Vertex coordinates.
+    pub vertices: Vec<Point3>,
+    /// Triangles as vertex index triples.
+    pub triangles: Vec<[usize; 3]>,
+    /// Per-triangle centroid.
+    pub centroids: Vec<Point3>,
+    /// Per-triangle area.
+    pub areas: Vec<f64>,
+}
+
+impl Geometry {
+    /// Number of triangles (= degrees of freedom for piecewise-constant
+    /// ansatz functions).
+    pub fn len(&self) -> usize {
+        self.triangles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.triangles.is_empty()
+    }
+
+    /// Total surface area.
+    pub fn total_area(&self) -> f64 {
+        self.areas.iter().sum()
+    }
+
+    /// Recompute centroids/areas from vertices+triangles.
+    pub(crate) fn finalize(mut self) -> Self {
+        self.centroids.clear();
+        self.areas.clear();
+        for t in &self.triangles {
+            let (a, b, c) = (self.vertices[t[0]], self.vertices[t[1]], self.vertices[t[2]]);
+            self.centroids.push(Point3::new((a.x + b.x + c.x) / 3.0, (a.y + b.y + c.y) / 3.0, (a.z + b.z + c.z) / 3.0));
+            self.areas.push(triangle_area(a, b, c));
+        }
+        self
+    }
+
+    /// The three corner points of triangle `i`.
+    pub fn corners(&self, i: usize) -> [Point3; 3] {
+        let t = self.triangles[i];
+        [self.vertices[t[0]], self.vertices[t[1]], self.vertices[t[2]]]
+    }
+}
+
+/// Area of a 3D triangle.
+pub fn triangle_area(a: Point3, b: Point3, c: Point3) -> f64 {
+    let u = b.sub(a);
+    let v = c.sub(a);
+    u.cross(v).norm() * 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangle_area_unit() {
+        let a = Point3::new(0.0, 0.0, 0.0);
+        let b = Point3::new(1.0, 0.0, 0.0);
+        let c = Point3::new(0.0, 1.0, 0.0);
+        assert!((triangle_area(a, b, c) - 0.5).abs() < 1e-15);
+    }
+}

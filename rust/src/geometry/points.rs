@@ -1,0 +1,143 @@
+//! 3D points and synthetic point-cloud generators (for covariance-matrix
+//! examples and clustering tests).
+
+use crate::util::Rng;
+
+/// A point in R³.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Point3 {
+    pub fn new(x: f64, y: f64, z: f64) -> Self {
+        Point3 { x, y, z }
+    }
+
+    pub fn zero() -> Self {
+        Point3::new(0.0, 0.0, 0.0)
+    }
+
+    #[inline]
+    pub fn add(self, o: Point3) -> Point3 {
+        Point3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+
+    #[inline]
+    pub fn sub(self, o: Point3) -> Point3 {
+        Point3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+
+    #[inline]
+    pub fn scale(self, a: f64) -> Point3 {
+        Point3::new(a * self.x, a * self.y, a * self.z)
+    }
+
+    #[inline]
+    pub fn dot(self, o: Point3) -> f64 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    #[inline]
+    pub fn cross(self, o: Point3) -> Point3 {
+        Point3::new(self.y * o.z - self.z * o.y, self.z * o.x - self.x * o.z, self.x * o.y - self.y * o.x)
+    }
+
+    #[inline]
+    pub fn norm(self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    #[inline]
+    pub fn dist(self, o: Point3) -> f64 {
+        self.sub(o).norm()
+    }
+
+    /// Normalize to unit length.
+    pub fn normalized(self) -> Point3 {
+        let n = self.norm();
+        if n == 0.0 {
+            self
+        } else {
+            self.scale(1.0 / n)
+        }
+    }
+
+    /// Coordinate by axis index 0/1/2.
+    #[inline]
+    pub fn coord(self, axis: usize) -> f64 {
+        match axis {
+            0 => self.x,
+            1 => self.y,
+            _ => self.z,
+        }
+    }
+}
+
+/// `n` points quasi-uniform on the unit sphere (Fibonacci lattice).
+pub fn fibonacci_sphere(n: usize) -> Vec<Point3> {
+    let golden = std::f64::consts::PI * (3.0 - 5.0f64.sqrt());
+    (0..n)
+        .map(|i| {
+            let y = 1.0 - 2.0 * (i as f64 + 0.5) / n as f64;
+            let r = (1.0 - y * y).max(0.0).sqrt();
+            let th = golden * i as f64;
+            Point3::new(r * th.cos(), y, r * th.sin())
+        })
+        .collect()
+}
+
+/// `n` points uniform in the unit cube.
+pub fn random_cube(n: usize, rng: &mut Rng) -> Vec<Point3> {
+    (0..n).map(|_| Point3::new(rng.uniform(), rng.uniform(), rng.uniform())).collect()
+}
+
+/// `n` points on the unit circle in the z=0 plane (1D geometry: produces
+/// HODLR-friendly orderings).
+pub fn circle_points(n: usize) -> Vec<Point3> {
+    (0..n)
+        .map(|i| {
+            let t = std::f64::consts::TAU * i as f64 / n as f64;
+            Point3::new(t.cos(), t.sin(), 0.0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_ops() {
+        let a = Point3::new(1.0, 0.0, 0.0);
+        let b = Point3::new(0.0, 1.0, 0.0);
+        assert_eq!(a.cross(b), Point3::new(0.0, 0.0, 1.0));
+        assert_eq!(a.dot(b), 0.0);
+        assert!((a.dist(b) - std::f64::consts::SQRT_2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fibonacci_on_sphere() {
+        for p in fibonacci_sphere(100) {
+            assert!((p.norm() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn circle_on_circle() {
+        for p in circle_points(64) {
+            assert!((p.norm() - 1.0).abs() < 1e-12);
+            assert_eq!(p.z, 0.0);
+        }
+    }
+
+    #[test]
+    fn coord_axis() {
+        let p = Point3::new(1.0, 2.0, 3.0);
+        assert_eq!(p.coord(0), 1.0);
+        assert_eq!(p.coord(1), 2.0);
+        assert_eq!(p.coord(2), 3.0);
+    }
+}

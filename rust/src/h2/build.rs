@@ -1,0 +1,235 @@
+//! H² construction from an H-matrix (paper §2.4; Börm-style bottom-up
+//! compression with top-down accumulated block rows).
+//!
+//! Phase A (top-down): per cluster τ an *explicit* total basis Ŵ_τ is the
+//! truncated SVD basis of [own-level low-rank factors | σ-scaled parent
+//! basis restricted to τ] — the restriction carries all ancestor block rows.
+//! Phase B (bottom-up): nested conversion, E_c = W_cᵀ·Ŵ_τ|rows(c).
+//! Phase C: couplings S = (W̃_τᵀ U)(X̃_σᵀ V)ᵀ against the *nested* bases so
+//! format and data are consistent.
+
+use super::nested::{NestedBasis, TransferMat};
+use super::H2Matrix;
+use crate::cluster::BlockTree;
+use crate::hmatrix::{BlockData, HMatrix};
+use crate::la::{blas, qr_thin, svd_adaptive, DMatrix};
+use crate::par::ThreadPool;
+use crate::uniform::{BasisData, CouplingMat, UniBlock};
+use std::sync::{Arc, Mutex};
+
+/// Build an H²-matrix from an (uncompressed) H-matrix with basis accuracy
+/// `eps`.
+pub fn build_from_h(h: &HMatrix, eps: f64) -> H2Matrix {
+    let bt = h.bt.clone();
+    let (row_w, row_sigma) = accumulated_bases(h, &bt, eps, true);
+    let (col_w, col_sigma) = accumulated_bases(h, &bt, eps, false);
+    let row_basis = nest(&bt, &row_w, row_sigma, true);
+    let col_basis = nest(&bt, &col_w, col_sigma, false);
+    // consistent couplings against the nested (projected) bases
+    let row_nested = row_basis.expand(&bt.row_ct);
+    let col_nested = col_basis.expand(&bt.col_ct);
+    let blocks = build_blocks(h, &bt, &row_nested, &col_nested);
+    H2Matrix { bt, row_basis, col_basis, blocks }
+}
+
+/// Phase A: explicit accumulated bases, top-down by level.
+fn accumulated_bases(h: &HMatrix, bt: &Arc<BlockTree>, eps: f64, row_side: bool) -> (Vec<DMatrix>, Vec<Vec<f64>>) {
+    let ct = if row_side { &bt.row_ct } else { &bt.col_ct };
+    let nc = ct.nodes.len();
+    let w: Mutex<Vec<Option<(DMatrix, Vec<f64>)>>> = Mutex::new(vec![None; nc]);
+    let pool = ThreadPool::global();
+
+    for level in 0..ct.levels.len() {
+        // parents of this level are complete; process the level in parallel
+        pool.scope(|s| {
+            for &tau in &ct.levels[level] {
+                let w = &w;
+                s.spawn(move |_| {
+                    let nd = ct.node(tau);
+                    let mut pieces: Vec<DMatrix> = Vec::new();
+                    // own-level admissible blocks
+                    let list = if row_side { &bt.row_blocks[tau] } else { &bt.col_blocks[tau] };
+                    for &b in list {
+                        if !bt.node(b).admissible {
+                            continue;
+                        }
+                        if let Some(BlockData::LowRank(lr)) = h.block(b) {
+                            if lr.rank() == 0 {
+                                continue;
+                            }
+                            let (own, other) = if row_side { (&lr.u, &lr.v) } else { (&lr.v, &lr.u) };
+                            let (_, r) = qr_thin(other);
+                            pieces.push(blas::matmul(own, blas::Trans::No, &r, blas::Trans::Yes));
+                        }
+                    }
+                    // inherited: parent basis restricted to τ, σ-scaled
+                    if nd.parent != usize::MAX {
+                        let guard = w.lock().unwrap();
+                        if let Some((wp, sp)) = guard[nd.parent].as_ref() {
+                            if wp.ncols() > 0 {
+                                let pnd = ct.node(nd.parent);
+                                let off = nd.begin - pnd.begin;
+                                let mut restr = wp.sub(off..off + nd.size(), 0..wp.ncols());
+                                for (j, &sj) in sp.iter().enumerate() {
+                                    for x in restr.col_mut(j) {
+                                        *x *= sj;
+                                    }
+                                }
+                                drop(guard);
+                                pieces.push(restr);
+                            }
+                        }
+                    }
+                    let result = if pieces.is_empty() {
+                        (DMatrix::zeros(nd.size(), 0), Vec::new())
+                    } else {
+                        let mut a = pieces[0].clone();
+                        for p in &pieces[1..] {
+                            a = a.hcat(p);
+                        }
+                        let svd = svd_adaptive(&a, eps);
+                        let k = svd.rank(eps).max(1).min(svd.s.len());
+                        let t = svd.truncate(k);
+                        (t.u, t.s)
+                    };
+                    w.lock().unwrap()[tau] = Some(result);
+                });
+            }
+        });
+    }
+
+    let all = w.into_inner().unwrap();
+    let mut ws = Vec::with_capacity(nc);
+    let mut sigmas = Vec::with_capacity(nc);
+    for entry in all {
+        let (wm, s) = entry.expect("basis not computed");
+        ws.push(wm);
+        sigmas.push(s);
+    }
+    (ws, sigmas)
+}
+
+/// Phase B: convert explicit bases to nested form.
+fn nest(bt: &Arc<BlockTree>, explicit: &[DMatrix], sigma: Vec<Vec<f64>>, row_side: bool) -> NestedBasis {
+    let ct = if row_side { &bt.row_ct } else { &bt.col_ct };
+    let mut nb = NestedBasis::empty(ct.nodes.len());
+    nb.sigma = sigma;
+    for (tau, nd) in ct.nodes.iter().enumerate() {
+        let k = explicit[tau].ncols();
+        nb.rank[tau] = k;
+        if nd.is_leaf() {
+            if k > 0 {
+                nb.leaf[tau] = Some(BasisData::Plain(explicit[tau].clone()));
+            }
+        } else if k > 0 {
+            for &c in &nd.children {
+                let kc = explicit[c].ncols();
+                if kc == 0 {
+                    nb.transfer[c] = Some(TransferMat::Plain(DMatrix::zeros(0, k)));
+                    continue;
+                }
+                let off = ct.node(c).begin - nd.begin;
+                let restr = explicit[tau].sub(off..off + ct.node(c).size(), 0..k);
+                let e = blas::matmul(&explicit[c], blas::Trans::Yes, &restr, blas::Trans::No);
+                nb.transfer[c] = Some(TransferMat::Plain(e));
+            }
+        } else {
+            for &c in &nd.children {
+                nb.transfer[c] = Some(TransferMat::Plain(DMatrix::zeros(explicit[c].ncols(), 0)));
+            }
+        }
+    }
+    nb
+}
+
+/// Phase C: couplings against the nested bases; dense leaves copied.
+fn build_blocks(h: &HMatrix, bt: &Arc<BlockTree>, row_w: &[DMatrix], col_w: &[DMatrix]) -> Vec<Option<UniBlock>> {
+    let out: Mutex<Vec<Option<UniBlock>>> = Mutex::new(vec![None; bt.nodes.len()]);
+    let pool = ThreadPool::global();
+    pool.scope(|s| {
+        for &leaf in &bt.leaves {
+            let out = &out;
+            s.spawn(move |_| {
+                let nd = bt.node(leaf);
+                let blk = match h.block(leaf) {
+                    Some(BlockData::Dense(m)) => UniBlock::Dense(m.clone()),
+                    Some(BlockData::LowRank(lr)) => {
+                        let w = &row_w[nd.row];
+                        let x = &col_w[nd.col];
+                        let sr = blas::matmul(w, blas::Trans::Yes, &lr.u, blas::Trans::No);
+                        let sc = blas::matmul(x, blas::Trans::Yes, &lr.v, blas::Trans::No);
+                        UniBlock::Coupling(CouplingMat::Plain(blas::matmul(&sr, blas::Trans::No, &sc, blas::Trans::Yes)))
+                    }
+                    other => panic!("H2 build requires an uncompressed H-matrix, got {other:?}"),
+                };
+                out.lock().unwrap()[leaf] = Some(blk);
+            });
+        }
+    });
+    out.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterTree, StdAdmissibility};
+    use crate::geometry::icosphere;
+    use crate::kernelfn::{LaplaceSlp, MatrixGen};
+    use crate::lowrank::AcaOptions;
+
+    fn problem(level: usize, n_min: usize, eps: f64) -> (HMatrix, H2Matrix) {
+        let geom = icosphere(level);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), n_min));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps));
+        let h2 = build_from_h(&h, eps);
+        (h, h2)
+    }
+
+    #[test]
+    fn h2_approximates_h() {
+        let (h, h2) = problem(1, 8, 1e-6);
+        let hd = h.to_dense();
+        let hd2 = h2.to_dense();
+        let mut diff = hd2.clone();
+        diff.add_scaled(-1.0, &hd);
+        let rel = diff.fro_norm() / hd.fro_norm();
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn h2_basis_is_nested_only() {
+        let (_, h2) = problem(2, 16, 1e-4);
+        let ct = &h2.bt.row_ct;
+        for (tau, nd) in ct.nodes.iter().enumerate() {
+            if nd.is_leaf() {
+                assert!(h2.row_basis.transfer[tau].is_some() || nd.parent == usize::MAX || h2.row_basis.rank[ct.nodes[tau].parent] == 0 || h2.row_basis.rank[tau] == 0);
+            } else {
+                // inner clusters never hold explicit bases
+                assert!(h2.row_basis.leaf[tau].is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn h2_storage_leq_h_for_larger_problems() {
+        let (h, h2) = problem(2, 16, 1e-4);
+        // H² per-dof storage should not exceed H (usually much smaller)
+        assert!(h2.byte_size() as f64 <= 1.1 * h.byte_size() as f64, "h2 {} vs h {}", h2.byte_size(), h.byte_size());
+    }
+
+    #[test]
+    fn compression_keeps_accuracy() {
+        let (_, mut h2) = problem(1, 8, 1e-6);
+        let before = h2.to_dense();
+        let bytes_before = h2.byte_size();
+        h2.compress(&crate::compress::CompressionConfig::aflp(1e-6));
+        let after = h2.to_dense();
+        assert!(h2.byte_size() < bytes_before);
+        let mut diff = after.clone();
+        diff.add_scaled(-1.0, &before);
+        let rel = diff.fro_norm() / before.fro_norm();
+        assert!(rel < 1e-5, "rel {rel}");
+    }
+}

@@ -1,0 +1,115 @@
+//! H²-matrices (paper §2.4): nested cluster bases — explicit bases only at
+//! leaf clusters, transfer matrices E everywhere else — giving O(n) storage.
+
+mod build;
+mod nested;
+
+pub use build::build_from_h;
+pub use nested::{NestedBasis, TransferMat};
+
+use crate::cluster::BlockTree;
+use crate::compress::CompressionConfig;
+use crate::hmatrix::ZDense;
+use crate::la::{blas, DMatrix};
+use crate::uniform::UniBlock;
+use std::sync::Arc;
+
+/// Memory statistics for the H² format.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct H2Stats {
+    pub dense_bytes: usize,
+    pub coupling_bytes: usize,
+    pub basis_bytes: usize,
+}
+
+impl H2Stats {
+    pub fn total_bytes(&self) -> usize {
+        self.dense_bytes + self.coupling_bytes + self.basis_bytes
+    }
+}
+
+/// H²-matrix: nested row/column bases + couplings + dense near field.
+#[derive(Clone)]
+pub struct H2Matrix {
+    pub bt: Arc<BlockTree>,
+    pub row_basis: NestedBasis,
+    pub col_basis: NestedBasis,
+    /// Per block node id: dense or coupling leaves (same container as UH).
+    pub blocks: Vec<Option<UniBlock>>,
+}
+
+impl H2Matrix {
+    pub fn nrows(&self) -> usize {
+        self.bt.shape().0
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.bt.shape().1
+    }
+
+    /// Compress leaf bases (VALR), transfer matrices, couplings and dense
+    /// blocks (direct) — §4.1/§4.2: for H² only the leaf bases admit VALR.
+    pub fn compress(&mut self, cfg: &CompressionConfig) {
+        self.row_basis.compress(cfg);
+        self.col_basis.compress(cfg);
+        for b in self.blocks.iter_mut() {
+            if let Some(blk) = b.take() {
+                *b = Some(match blk {
+                    UniBlock::Dense(m) => UniBlock::ZDense(ZDense::compress(&m, cfg.codec, cfg.eps)),
+                    UniBlock::Coupling(c) => UniBlock::Coupling(c.compress(cfg)),
+                    other => other,
+                });
+            }
+        }
+    }
+
+    pub fn stats(&self) -> H2Stats {
+        let mut st = H2Stats { basis_bytes: self.row_basis.byte_size() + self.col_basis.byte_size(), ..Default::default() };
+        for b in self.blocks.iter().flatten() {
+            match b {
+                UniBlock::Dense(_) | UniBlock::ZDense(_) => st.dense_bytes += b.byte_size(),
+                UniBlock::Coupling(_) => st.coupling_bytes += b.byte_size(),
+            }
+        }
+        st
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.stats().total_bytes()
+    }
+
+    pub fn bytes_per_dof(&self) -> f64 {
+        self.byte_size() as f64 / self.nrows() as f64
+    }
+
+    /// Dense reconstruction in internal ordering (tests only). Expands the
+    /// nested bases to explicit per-cluster matrices first.
+    pub fn to_dense(&self) -> DMatrix {
+        let (m, n) = self.bt.shape();
+        let wr = self.row_basis.expand(&self.bt.row_ct);
+        let wc = self.col_basis.expand(&self.bt.col_ct);
+        let mut out = DMatrix::zeros(m, n);
+        for &leaf in &self.bt.leaves {
+            let nd = self.bt.node(leaf);
+            let rr = self.bt.row_ct.node(nd.row).range();
+            let cr = self.bt.col_ct.node(nd.col).range();
+            let d = match self.blocks[leaf].as_ref().expect("missing leaf") {
+                UniBlock::Dense(mm) => mm.clone(),
+                UniBlock::ZDense(z) => z.to_dense(),
+                UniBlock::Coupling(c) => {
+                    let w = &wr[nd.row];
+                    let x = &wc[nd.col];
+                    let s = c.to_dense();
+                    let ws = blas::matmul(w, blas::Trans::No, &s, blas::Trans::No);
+                    blas::matmul(&ws, blas::Trans::No, x, blas::Trans::Yes)
+                }
+            };
+            for (jj, j) in cr.enumerate() {
+                for (ii, i) in rr.clone().enumerate() {
+                    out[(i, j)] = d[(ii, jj)];
+                }
+            }
+        }
+        out
+    }
+}

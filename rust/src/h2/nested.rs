@@ -1,0 +1,331 @@
+//! Nested cluster basis: explicit matrices at the leaves, transfer matrices
+//! E_{τ'} (k_{τ'} × k_τ) linking each child τ' to its parent τ:
+//!
+//!   W_τ = [ W_{τ₀} E_{τ₀} ; W_{τ₁} E_{τ₁} ]   (paper §2.4)
+
+use crate::cluster::ClusterTree;
+use crate::compress::{Blob, Codec, CompressionConfig, ZLowRankValr, BLOB_OVERHEAD};
+use crate::la::{blas, DMatrix};
+use crate::uniform::BasisData;
+
+/// A (possibly compressed) transfer matrix.
+#[derive(Clone, Debug)]
+pub enum TransferMat {
+    Plain(DMatrix),
+    Z { nrows: usize, ncols: usize, blob: Blob },
+}
+
+impl TransferMat {
+    pub fn nrows(&self) -> usize {
+        match self {
+            TransferMat::Plain(m) => m.nrows(),
+            TransferMat::Z { nrows, .. } => *nrows,
+        }
+    }
+
+    pub fn ncols(&self) -> usize {
+        match self {
+            TransferMat::Plain(m) => m.ncols(),
+            TransferMat::Z { ncols, .. } => *ncols,
+        }
+    }
+
+    pub fn to_dense(&self) -> DMatrix {
+        match self {
+            TransferMat::Plain(m) => m.clone(),
+            TransferMat::Z { nrows, ncols, blob } => {
+                let mut m = DMatrix::zeros(*nrows, *ncols);
+                blob.decompress_into(m.data_mut());
+                m
+            }
+        }
+    }
+
+    /// out += Eᵀ s (forward transformation: child coefficients → parent).
+    pub fn apply_transposed_add(&self, s: &[f64], out: &mut [f64]) {
+        match self {
+            TransferMat::Plain(m) => blas::gemv_transposed(1.0, m, s, out),
+            TransferMat::Z { .. } => {
+                let m = self.to_dense();
+                blas::gemv_transposed(1.0, &m, s, out);
+            }
+        }
+    }
+
+    /// out += E t (backward transformation: parent coefficients → child).
+    pub fn apply_add(&self, t: &[f64], out: &mut [f64]) {
+        match self {
+            TransferMat::Plain(m) => blas::gemv(1.0, m, t, out),
+            TransferMat::Z { .. } => {
+                let m = self.to_dense();
+                blas::gemv(1.0, &m, t, out);
+            }
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        match self {
+            TransferMat::Plain(m) => m.byte_size(),
+            TransferMat::Z { blob, .. } => blob.byte_size(),
+        }
+    }
+}
+
+/// Nested basis over a cluster tree.
+#[derive(Clone)]
+pub struct NestedBasis {
+    /// Rank k_τ per cluster node id.
+    pub rank: Vec<usize>,
+    /// Explicit leaf bases (per cluster id, leaves only).
+    pub leaf: Vec<Option<BasisData>>,
+    /// Transfer matrix E_τ (k_τ × k_parent) per non-root cluster id.
+    pub transfer: Vec<Option<TransferMat>>,
+    /// Construction singular values per cluster (drives VALR of leaf bases).
+    pub sigma: Vec<Vec<f64>>,
+}
+
+impl NestedBasis {
+    pub fn empty(nclusters: usize) -> NestedBasis {
+        NestedBasis { rank: vec![0; nclusters], leaf: vec![None; nclusters], transfer: vec![None; nclusters], sigma: vec![Vec::new(); nclusters] }
+    }
+
+    /// s += Wᵀ x for a *leaf* cluster (explicit basis).
+    pub fn leaf_apply_transposed(&self, tau: usize, x: &[f64], s: &mut [f64]) {
+        match self.leaf[tau].as_ref() {
+            None => {}
+            Some(BasisData::Plain(w)) => {
+                for j in 0..w.ncols() {
+                    s[j] += blas::dot(w.col(j), x);
+                }
+            }
+            Some(BasisData::Z { nrows, ncols, blob }) => {
+                let mut buf = [0.0f64; 256];
+                for j in 0..*ncols {
+                    let base = j * nrows;
+                    let mut acc = 0.0;
+                    let mut i = 0;
+                    while i < *nrows {
+                        let len = 256.min(nrows - i);
+                        blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
+                        acc += blas::dot(&buf[..len], &x[i..i + len]);
+                        i += len;
+                    }
+                    s[j] += acc;
+                }
+            }
+            Some(BasisData::Valr(z)) => {
+                let mut buf = [0.0f64; 256];
+                for j in 0..z.rank() {
+                    let col = &z.wcols[j];
+                    let mut acc = 0.0;
+                    let mut i = 0;
+                    while i < z.nrows {
+                        let len = 256.min(z.nrows - i);
+                        col.decompress_range(i, i + len, &mut buf[..len]);
+                        acc += blas::dot(&buf[..len], &x[i..i + len]);
+                        i += len;
+                    }
+                    s[j] += acc;
+                }
+            }
+        }
+    }
+
+    /// y += W t for a *leaf* cluster.
+    pub fn leaf_apply_add(&self, tau: usize, t: &[f64], y: &mut [f64]) {
+        match self.leaf[tau].as_ref() {
+            None => {}
+            Some(BasisData::Plain(w)) => {
+                for j in 0..w.ncols() {
+                    if t[j] != 0.0 {
+                        blas::axpy(t[j], w.col(j), y);
+                    }
+                }
+            }
+            Some(BasisData::Z { nrows, ncols, blob }) => {
+                let mut buf = [0.0f64; 256];
+                for j in 0..*ncols {
+                    if t[j] == 0.0 {
+                        continue;
+                    }
+                    let base = j * nrows;
+                    let mut i = 0;
+                    while i < *nrows {
+                        let len = 256.min(nrows - i);
+                        blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
+                        blas::axpy(t[j], &buf[..len], &mut y[i..i + len]);
+                        i += len;
+                    }
+                }
+            }
+            Some(BasisData::Valr(z)) => {
+                let mut buf = [0.0f64; 256];
+                for j in 0..z.rank() {
+                    if t[j] == 0.0 {
+                        continue;
+                    }
+                    let col = &z.wcols[j];
+                    let mut i = 0;
+                    while i < z.nrows {
+                        let len = 256.min(z.nrows - i);
+                        col.decompress_range(i, i + len, &mut buf[..len]);
+                        blas::axpy(t[j], &buf[..len], &mut y[i..i + len]);
+                        i += len;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Expand to explicit per-cluster bases (tests / coupling construction).
+    pub fn expand(&self, ct: &ClusterTree) -> Vec<DMatrix> {
+        let mut out: Vec<DMatrix> = vec![DMatrix::zeros(0, 0); ct.nodes.len()];
+        // bottom-up over levels
+        for level in (0..ct.levels.len()).rev() {
+            for &tau in &ct.levels[level] {
+                let nd = ct.node(tau);
+                if nd.is_leaf() {
+                    out[tau] = match self.leaf[tau].as_ref() {
+                        None => DMatrix::zeros(nd.size(), 0),
+                        Some(BasisData::Plain(w)) => w.clone(),
+                        Some(BasisData::Z { nrows, ncols, blob }) => {
+                            let mut m = DMatrix::zeros(*nrows, *ncols);
+                            blob.decompress_into(m.data_mut());
+                            m
+                        }
+                        Some(BasisData::Valr(z)) => z.w_to_dense(),
+                    };
+                } else {
+                    let k = self.rank[tau];
+                    let mut w = DMatrix::zeros(nd.size(), k);
+                    if k > 0 {
+                        for &c in &nd.children {
+                            let e = match self.transfer[c].as_ref() {
+                                Some(t) => t.to_dense(),
+                                None => continue,
+                            };
+                            let child_w = &out[c];
+                            // rows of child within parent
+                            let off = ct.node(c).begin - nd.begin;
+                            let piece = blas::matmul(child_w, blas::Trans::No, &e, blas::Trans::No);
+                            for j in 0..k {
+                                let dst = &mut w.col_mut(j)[off..off + piece.nrows()];
+                                for (d, s) in dst.iter_mut().zip(piece.col(j)) {
+                                    *d += s;
+                                }
+                            }
+                        }
+                    }
+                    out[tau] = w;
+                }
+            }
+        }
+        out
+    }
+
+    /// Compress leaf bases (VALR when configured) and transfer matrices
+    /// (direct).
+    pub fn compress(&mut self, cfg: &CompressionConfig) {
+        for (tau, l) in self.leaf.iter_mut().enumerate() {
+            if let Some(BasisData::Plain(w)) = l {
+                if w.ncols() == 0 {
+                    continue;
+                }
+                *l = Some(if cfg.valr {
+                    BasisData::Valr(ZLowRankValr::compress_basis(w, &self.sigma[tau], cfg.codec, cfg.eps))
+                } else {
+                    BasisData::Z { nrows: w.nrows(), ncols: w.ncols(), blob: Blob::compress(cfg.codec, w.data(), cfg.eps) }
+                });
+            }
+        }
+        for t in self.transfer.iter_mut() {
+            if let Some(TransferMat::Plain(m)) = t {
+                if m.nrows() * m.ncols() == 0 {
+                    continue;
+                }
+                *t = Some(TransferMat::Z { nrows: m.nrows(), ncols: m.ncols(), blob: compress_mat(m, cfg.codec, cfg.eps) });
+            }
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        let mut b = 0;
+        for l in self.leaf.iter().flatten() {
+            b += match l {
+                BasisData::Plain(w) => w.byte_size(),
+                BasisData::Z { blob, .. } => blob.byte_size(),
+                BasisData::Valr(z) => z.byte_size(),
+            } + BLOB_OVERHEAD;
+        }
+        for t in self.transfer.iter().flatten() {
+            b += t.byte_size() + BLOB_OVERHEAD;
+        }
+        b
+    }
+}
+
+fn compress_mat(m: &DMatrix, codec: Codec, eps: f64) -> Blob {
+    Blob::compress(codec, m.data(), eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::fibonacci_sphere;
+    use crate::util::Rng;
+
+    #[test]
+    fn expand_reconstructs_nested_product() {
+        // two-level tree: root with two leaf children; W_root = diag(W_c) E
+        let pts = fibonacci_sphere(32);
+        let ct = ClusterTree::build_with_depth(&pts, 16, 1);
+        assert_eq!(ct.depth(), 1);
+        let mut nb = NestedBasis::empty(ct.nodes.len());
+        let mut rng = Rng::new(91);
+        let kids = ct.node(0).children.clone();
+        let k = 3;
+        nb.rank[0] = k;
+        for &c in &kids {
+            let n = ct.node(c).size();
+            let (q, _) = crate::la::qr_thin(&DMatrix::random(n, k, &mut rng));
+            nb.rank[c] = k;
+            nb.leaf[c] = Some(BasisData::Plain(q));
+            nb.transfer[c] = Some(TransferMat::Plain(DMatrix::random(k, k, &mut rng)));
+        }
+        let expanded = nb.expand(&ct);
+        // manual: root basis = [W0 E0; W1 E1]
+        let w0 = nb.leaf[kids[0]].as_ref().map(|b| match b {
+            BasisData::Plain(w) => w.clone(),
+            _ => unreachable!(),
+        }).unwrap();
+        let e0 = nb.transfer[kids[0]].as_ref().unwrap().to_dense();
+        let top = blas::matmul(&w0, blas::Trans::No, &e0, blas::Trans::No);
+        for j in 0..k {
+            for i in 0..top.nrows() {
+                assert!((expanded[0][(i, j)] - top[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_apply_matches_dense() {
+        let mut rng = Rng::new(92);
+        let e = DMatrix::random(4, 3, &mut rng);
+        let t = TransferMat::Plain(e.clone());
+        let s = rng.vector(4);
+        let mut out = vec![0.0; 3];
+        t.apply_transposed_add(&s, &mut out);
+        for j in 0..3 {
+            let want = blas::dot(e.col(j), &s);
+            assert!((out[j] - want).abs() < 1e-12);
+        }
+        let tvec = rng.vector(3);
+        let mut y = vec![0.0; 4];
+        t.apply_add(&tvec, &mut y);
+        let mut want = vec![0.0; 4];
+        blas::gemv(1.0, &e, &tvec, &mut want);
+        for i in 0..4 {
+            assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Leaf block storage: dense / low-rank, uncompressed / compressed.
+
+use crate::compress::{Blob, Codec, CompressionConfig, ZLowRankValr, BLOB_OVERHEAD};
+use crate::la::DMatrix;
+use crate::lowrank::LowRank;
+
+/// Compressed dense matrix (column-major value order inside the blob).
+#[derive(Clone, Debug)]
+pub struct ZDense {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub blob: Blob,
+}
+
+impl ZDense {
+    pub fn compress(m: &DMatrix, codec: Codec, eps: f64) -> ZDense {
+        ZDense { nrows: m.nrows(), ncols: m.ncols(), blob: Blob::compress(codec, m.data(), eps) }
+    }
+
+    pub fn to_dense(&self) -> DMatrix {
+        let mut d = DMatrix::zeros(self.nrows, self.ncols);
+        self.blob.decompress_into(d.data_mut());
+        d
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.blob.byte_size()
+    }
+}
+
+/// Fixed-precision compressed low-rank factors (non-VALR baseline).
+#[derive(Clone, Debug)]
+pub struct ZLowRankDirect {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rank: usize,
+    pub u: Blob,
+    pub v: Blob,
+}
+
+impl ZLowRankDirect {
+    pub fn compress(lr: &LowRank, codec: Codec, eps: f64) -> ZLowRankDirect {
+        ZLowRankDirect {
+            nrows: lr.nrows(),
+            ncols: lr.ncols(),
+            rank: lr.rank(),
+            u: Blob::compress(codec, lr.u.data(), eps),
+            v: Blob::compress(codec, lr.v.data(), eps),
+        }
+    }
+
+    pub fn to_lowrank(&self) -> LowRank {
+        let mut u = DMatrix::zeros(self.nrows, self.rank);
+        let mut v = DMatrix::zeros(self.ncols, self.rank);
+        self.u.decompress_into(u.data_mut());
+        self.v.decompress_into(v.data_mut());
+        LowRank { u, v }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.u.byte_size() + self.v.byte_size() + BLOB_OVERHEAD
+    }
+}
+
+/// A leaf block of a hierarchical matrix.
+#[derive(Clone, Debug)]
+pub enum BlockData {
+    /// Inadmissible: dense FP64.
+    Dense(DMatrix),
+    /// Admissible: factored U·Vᵀ in FP64.
+    LowRank(LowRank),
+    /// Inadmissible, compressed (direct compression, Alg. 8 kernels).
+    ZDense(ZDense),
+    /// Admissible, compressed with fixed precision.
+    ZLowRank(ZLowRankDirect),
+    /// Admissible, compressed with VALR (per-column accuracy).
+    ZLowRankValr(ZLowRankValr),
+}
+
+impl BlockData {
+    pub fn nrows(&self) -> usize {
+        match self {
+            BlockData::Dense(m) => m.nrows(),
+            BlockData::LowRank(lr) => lr.nrows(),
+            BlockData::ZDense(z) => z.nrows,
+            BlockData::ZLowRank(z) => z.nrows,
+            BlockData::ZLowRankValr(z) => z.nrows,
+        }
+    }
+
+    pub fn ncols(&self) -> usize {
+        match self {
+            BlockData::Dense(m) => m.ncols(),
+            BlockData::LowRank(lr) => lr.ncols(),
+            BlockData::ZDense(z) => z.ncols,
+            BlockData::ZLowRank(z) => z.ncols,
+            BlockData::ZLowRankValr(z) => z.ncols,
+        }
+    }
+
+    pub fn is_lowrank(&self) -> bool {
+        matches!(self, BlockData::LowRank(_) | BlockData::ZLowRank(_) | BlockData::ZLowRankValr(_))
+    }
+
+    pub fn is_compressed(&self) -> bool {
+        matches!(self, BlockData::ZDense(_) | BlockData::ZLowRank(_) | BlockData::ZLowRankValr(_))
+    }
+
+    /// Rank of low-rank blocks, 0 for dense.
+    pub fn rank(&self) -> usize {
+        match self {
+            BlockData::LowRank(lr) => lr.rank(),
+            BlockData::ZLowRank(z) => z.rank,
+            BlockData::ZLowRankValr(z) => z.rank(),
+            _ => 0,
+        }
+    }
+
+    /// Memory footprint in bytes.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            BlockData::Dense(m) => m.byte_size(),
+            BlockData::LowRank(lr) => lr.byte_size(),
+            BlockData::ZDense(z) => z.byte_size(),
+            BlockData::ZLowRank(z) => z.byte_size(),
+            BlockData::ZLowRankValr(z) => z.byte_size(),
+        }
+    }
+
+    /// Compress an uncompressed block per the config (no-op when already
+    /// compressed).
+    pub fn compress(&self, cfg: &CompressionConfig) -> BlockData {
+        match self {
+            BlockData::Dense(m) => BlockData::ZDense(ZDense::compress(m, cfg.codec, cfg.eps)),
+            BlockData::LowRank(lr) => {
+                if cfg.valr {
+                    BlockData::ZLowRankValr(ZLowRankValr::compress_lowrank(lr, cfg.codec, cfg.eps))
+                } else {
+                    BlockData::ZLowRank(ZLowRankDirect::compress(lr, cfg.codec, cfg.eps))
+                }
+            }
+            other => other.clone(),
+        }
+    }
+
+    /// Dense reconstruction (tests / error measurement).
+    pub fn to_dense(&self) -> DMatrix {
+        match self {
+            BlockData::Dense(m) => m.clone(),
+            BlockData::LowRank(lr) => lr.to_dense(),
+            BlockData::ZDense(z) => z.to_dense(),
+            BlockData::ZLowRank(z) => z.to_lowrank().to_dense(),
+            BlockData::ZLowRankValr(z) => z.to_dense(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zdense_roundtrip_error() {
+        let mut rng = Rng::new(71);
+        let m = DMatrix::random(32, 24, &mut rng);
+        let z = ZDense::compress(&m, Codec::Aflp, 1e-7);
+        let d = z.to_dense();
+        let mut diff = d.clone();
+        diff.add_scaled(-1.0, &m);
+        assert!(diff.fro_norm() <= 1e-7 * m.fro_norm() * 4.0);
+        assert!(z.byte_size() < m.byte_size());
+    }
+
+    #[test]
+    fn block_compress_dispatch() {
+        let mut rng = Rng::new(72);
+        let dense = BlockData::Dense(DMatrix::random(16, 16, &mut rng));
+        let lr = BlockData::LowRank(LowRank { u: DMatrix::random(16, 3, &mut rng), v: DMatrix::random(16, 3, &mut rng) });
+        let cfg = CompressionConfig::aflp(1e-6);
+        assert!(matches!(dense.compress(&cfg), BlockData::ZDense(_)));
+        assert!(matches!(lr.compress(&cfg), BlockData::ZLowRankValr(_)));
+        let cfg_fixed = CompressionConfig { valr: false, ..cfg };
+        assert!(matches!(lr.compress(&cfg_fixed), BlockData::ZLowRank(_)));
+    }
+
+    #[test]
+    fn compressed_blocks_smaller() {
+        let mut rng = Rng::new(73);
+        let lr = LowRank { u: DMatrix::random(64, 8, &mut rng), v: DMatrix::random(64, 8, &mut rng) };
+        let b = BlockData::LowRank(lr);
+        let zb = b.compress(&CompressionConfig::aflp(1e-4));
+        assert!(zb.byte_size() < b.byte_size(), "{} !< {}", zb.byte_size(), b.byte_size());
+    }
+}

@@ -1,0 +1,268 @@
+//! H-matrix construction and bookkeeping.
+
+use super::block::BlockData;
+use crate::cluster::BlockTree;
+use crate::compress::CompressionConfig;
+use crate::kernelfn::MatrixGen;
+use crate::la::DMatrix;
+use crate::lowrank::{aca, AcaOptions, BlockAccess};
+use crate::par::ThreadPool;
+use std::sync::{Arc, Mutex};
+
+/// Hierarchical matrix: block tree + leaf data.
+///
+/// Vectors interacting with an `HMatrix` use the *internal* (cluster tree)
+/// ordering; use [`crate::cluster::ClusterTree::to_internal`] /
+/// [`crate::cluster::ClusterTree::to_external`] at the boundary.
+#[derive(Clone)]
+pub struct HMatrix {
+    pub bt: Arc<BlockTree>,
+    /// Leaf data indexed by block-tree node id.
+    pub blocks: Vec<Option<BlockData>>,
+}
+
+/// Memory/structure statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HMatrixStats {
+    pub n_dense: usize,
+    pub n_lowrank: usize,
+    pub dense_bytes: usize,
+    pub lowrank_bytes: usize,
+    pub max_rank: usize,
+    pub sum_rank: usize,
+}
+
+impl HMatrixStats {
+    pub fn total_bytes(&self) -> usize {
+        self.dense_bytes + self.lowrank_bytes
+    }
+
+    pub fn avg_rank(&self) -> f64 {
+        if self.n_lowrank == 0 {
+            0.0
+        } else {
+            self.sum_rank as f64 / self.n_lowrank as f64
+        }
+    }
+}
+
+impl HMatrix {
+    /// Build from a generator: ACA on admissible leaves, dense assembly on
+    /// inadmissible ones; leaves constructed in parallel.
+    pub fn build(bt: &Arc<BlockTree>, gen: &dyn MatrixGen, opts: &AcaOptions) -> HMatrix {
+        let nblocks = bt.nodes.len();
+        let out: Mutex<Vec<Option<BlockData>>> = Mutex::new(vec![None; nblocks]);
+        let pool = ThreadPool::global();
+        let leaves = &bt.leaves;
+        pool.scope(|s| {
+            for &leaf in leaves {
+                let out = &out;
+                s.spawn(move |_| {
+                    let data = build_leaf(bt, leaf, gen, opts);
+                    out.lock().unwrap()[leaf] = Some(data);
+                });
+            }
+        });
+        HMatrix { bt: bt.clone(), blocks: out.into_inner().unwrap() }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.bt.shape().0
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.bt.shape().1
+    }
+
+    /// Leaf block data for a block-tree node id.
+    pub fn block(&self, id: usize) -> Option<&BlockData> {
+        self.blocks[id].as_ref()
+    }
+
+    /// Compress all leaves in place (direct + VALR per the config, §4).
+    pub fn compress(&mut self, cfg: &CompressionConfig) {
+        let pool = ThreadPool::global();
+        let blocks = std::mem::take(&mut self.blocks);
+        let compressed: Mutex<Vec<Option<BlockData>>> = Mutex::new(vec![None; blocks.len()]);
+        pool.scope(|s| {
+            for (id, b) in blocks.iter().enumerate() {
+                if let Some(data) = b {
+                    let compressed = &compressed;
+                    s.spawn(move |_| {
+                        let z = data.compress(cfg);
+                        compressed.lock().unwrap()[id] = Some(z);
+                    });
+                }
+            }
+        });
+        self.blocks = compressed.into_inner().unwrap();
+    }
+
+    /// Memory statistics.
+    pub fn stats(&self) -> HMatrixStats {
+        let mut st = HMatrixStats::default();
+        for b in self.blocks.iter().flatten() {
+            if b.is_lowrank() {
+                st.n_lowrank += 1;
+                st.lowrank_bytes += b.byte_size();
+                let r = b.rank();
+                st.max_rank = st.max_rank.max(r);
+                st.sum_rank += r;
+            } else {
+                st.n_dense += 1;
+                st.dense_bytes += b.byte_size();
+            }
+        }
+        st
+    }
+
+    /// Total bytes of leaf data.
+    pub fn byte_size(&self) -> usize {
+        self.stats().total_bytes()
+    }
+
+    /// Bytes per degree of freedom (paper Fig. 1 y-axis).
+    pub fn bytes_per_dof(&self) -> f64 {
+        self.byte_size() as f64 / self.nrows() as f64
+    }
+
+    /// Dense reconstruction in internal ordering (tests, small n only).
+    pub fn to_dense(&self) -> DMatrix {
+        let (m, n) = self.bt.shape();
+        let mut out = DMatrix::zeros(m, n);
+        for &leaf in &self.bt.leaves {
+            let nd = self.bt.node(leaf);
+            let rr = self.bt.row_ct.node(nd.row).range();
+            let cr = self.bt.col_ct.node(nd.col).range();
+            let d = self.blocks[leaf].as_ref().expect("missing leaf").to_dense();
+            for (jj, j) in cr.enumerate() {
+                for (ii, i) in rr.clone().enumerate() {
+                    out[(i, j)] = d[(ii, jj)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm (exact, from the block representation).
+    pub fn fro_norm(&self) -> f64 {
+        let mut sum = 0.0;
+        for b in self.blocks.iter().flatten() {
+            sum += block_fro2(b);
+        }
+        sum.sqrt()
+    }
+}
+
+fn block_fro2(b: &BlockData) -> f64 {
+    match b {
+        BlockData::Dense(m) => m.fro_norm().powi(2),
+        BlockData::LowRank(lr) => {
+            // ||U V^T||_F^2 = trace((U^T U)(V^T V))
+            let uu = crate::la::matmul(&lr.u, crate::la::Trans::Yes, &lr.u, crate::la::Trans::No);
+            let vv = crate::la::matmul(&lr.v, crate::la::Trans::Yes, &lr.v, crate::la::Trans::No);
+            let k = uu.nrows();
+            let mut tr = 0.0;
+            for i in 0..k {
+                for j in 0..k {
+                    tr += uu[(i, j)] * vv[(j, i)];
+                }
+            }
+            tr
+        }
+        other => other.to_dense().fro_norm().powi(2),
+    }
+}
+
+fn build_leaf(bt: &BlockTree, leaf: usize, gen: &dyn MatrixGen, opts: &AcaOptions) -> BlockData {
+    let nd = bt.node(leaf);
+    let rows = bt.row_ct.indices(nd.row);
+    let cols = bt.col_ct.indices(nd.col);
+    if nd.admissible {
+        let lr = aca(&BlockAccess { gen, rows, cols }, opts);
+        BlockData::LowRank(lr)
+    } else {
+        let mut m = DMatrix::zeros(rows.len(), cols.len());
+        gen.fill(rows, cols, &mut m);
+        BlockData::Dense(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterTree, StdAdmissibility};
+    use crate::geometry::icosphere;
+    use crate::kernelfn::LaplaceSlp;
+
+    fn small_problem(level: usize, n_min: usize) -> (LaplaceSlp, Arc<BlockTree>) {
+        let geom = icosphere(level);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), n_min));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        (gen, bt)
+    }
+
+    #[test]
+    fn build_approximates_dense() {
+        let (gen, bt) = small_problem(1, 8); // n = 80
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-6));
+        // assemble reference in internal ordering
+        let ct = &bt.row_ct;
+        let n = ct.len();
+        let mut dense = DMatrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                dense[(i, j)] = gen.entry(ct.perm[i], ct.perm[j]);
+            }
+        }
+        let hd = h.to_dense();
+        let mut diff = hd.clone();
+        diff.add_scaled(-1.0, &dense);
+        let rel = diff.fro_norm() / dense.fro_norm();
+        assert!(rel < 1e-5, "rel err {rel}");
+    }
+
+    #[test]
+    fn lowrank_blocks_save_memory() {
+        let (gen, bt) = small_problem(2, 16); // n = 320
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-4));
+        let st = h.stats();
+        assert!(st.n_lowrank > 0);
+        let densebytes = h.nrows() * h.ncols() * 8;
+        assert!(h.byte_size() < densebytes, "H {} !< dense {}", h.byte_size(), densebytes);
+    }
+
+    #[test]
+    fn compression_reduces_memory_keeps_error() {
+        let (gen, bt) = small_problem(1, 8);
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-6));
+        let before = h.byte_size();
+        let dense_before = h.to_dense();
+        let mut hz = h.clone();
+        hz.compress(&CompressionConfig::aflp(1e-6));
+        assert!(hz.byte_size() < before);
+        let dense_after = hz.to_dense();
+        let mut diff = dense_after.clone();
+        diff.add_scaled(-1.0, &dense_before);
+        let rel = diff.fro_norm() / dense_before.fro_norm();
+        assert!(rel < 1e-5, "compression changed matrix too much: {rel}");
+    }
+
+    #[test]
+    fn fro_norm_matches_dense() {
+        let (gen, bt) = small_problem(1, 8);
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-8));
+        let nd = h.to_dense().fro_norm();
+        assert!((h.fro_norm() - nd).abs() < 1e-8 * nd);
+    }
+
+    #[test]
+    fn finer_eps_higher_rank() {
+        let (gen, bt) = small_problem(2, 16);
+        let h4 = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-4));
+        let h8 = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-8));
+        assert!(h8.stats().avg_rank() > h4.stats().avg_rank());
+        assert!(h8.byte_size() > h4.byte_size());
+    }
+}

@@ -1,0 +1,10 @@
+//! H-matrices (Definition 2.3): block-tree structured storage with dense
+//! inadmissible and factored low-rank admissible leaves, plus their
+//! compressed representations (§4).
+
+mod block;
+mod hmat;
+pub mod norms;
+
+pub use block::{BlockData, ZDense, ZLowRankDirect};
+pub use hmat::{HMatrix, HMatrixStats};

@@ -1,0 +1,110 @@
+//! Operator-norm error estimation between two linear operators given only
+//! their `apply` closures (used for Fig. 9: compressed vs reference error).
+
+use crate::util::Rng;
+
+/// Estimate ‖A − B‖₂ / ‖B‖₂ by power iteration on (A−B)ᵀ(A−B) using only
+/// matrix-vector products. `apply_*`(x, y) must compute y = M x.
+pub fn rel_spectral_error<FA, FB>(n: usize, apply_a: FA, apply_b: FB, iters: usize, seed: u64) -> f64
+where
+    FA: Fn(&[f64], &mut [f64]),
+    FB: Fn(&[f64], &mut [f64]),
+{
+    let norm_b = spectral_norm(n, &apply_b, iters, seed ^ 0x9e37);
+    if norm_b == 0.0 {
+        return 0.0;
+    }
+    let diff = |x: &[f64], y: &mut [f64]| {
+        let mut ya = vec![0.0; n];
+        let mut yb = vec![0.0; n];
+        apply_a(x, &mut ya);
+        apply_b(x, &mut yb);
+        for i in 0..n {
+            y[i] = ya[i] - yb[i];
+        }
+    };
+    spectral_norm(n, &diff, iters, seed) / norm_b
+}
+
+/// Spectral norm estimate of a symmetric-or-not operator by power iteration
+/// on MᵀM — we only have M·x, so we use ‖Mx‖/‖x‖ maximization over iterated
+/// normalized vectors (valid for symmetric M; for general M this
+/// underestimates slightly, which is fine for the error *ratio* plots).
+pub fn spectral_norm<F>(n: usize, apply: &F, iters: usize, seed: u64) -> f64
+where
+    F: Fn(&[f64], &mut [f64]),
+{
+    let mut rng = Rng::new(seed);
+    let mut x = rng.vector(n);
+    normalize(&mut x);
+    let mut y = vec![0.0; n];
+    let mut est = 0.0;
+    for _ in 0..iters.max(2) {
+        y.fill(0.0);
+        apply(&x, &mut y);
+        est = norm(&y);
+        if est == 0.0 {
+            return 0.0;
+        }
+        x.copy_from_slice(&y);
+        normalize(&mut x);
+    }
+    est
+}
+
+fn norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+fn normalize(x: &mut [f64]) {
+    let n = norm(x);
+    if n > 0.0 {
+        for v in x.iter_mut() {
+            *v /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::{gemv, DMatrix};
+    use crate::util::Rng;
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let n = 20;
+        let mut d = DMatrix::zeros(n, n);
+        for i in 0..n {
+            d[(i, i)] = (i + 1) as f64;
+        }
+        let apply = |x: &[f64], y: &mut [f64]| gemv(1.0, &d, x, y);
+        let est = spectral_norm(n, &apply, 50, 1);
+        assert!((est - n as f64).abs() < 0.2, "est {est}");
+    }
+
+    #[test]
+    fn rel_error_of_perturbation() {
+        let n = 30;
+        let mut rng = Rng::new(5);
+        let a = DMatrix::random(n, n, &mut rng);
+        // b = a + small symmetric-ish perturbation
+        let mut b = a.clone();
+        b[(0, 0)] += 1e-3;
+        let fa = |x: &[f64], y: &mut [f64]| gemv(1.0, &a, x, y);
+        let fb = |x: &[f64], y: &mut [f64]| gemv(1.0, &b, x, y);
+        let err = rel_spectral_error(n, fa, fb, 40, 2);
+        assert!(err > 1e-6 && err < 1e-2, "err {err}");
+    }
+
+    #[test]
+    fn identical_operators_zero_error() {
+        let n = 10;
+        let mut rng = Rng::new(6);
+        let a = DMatrix::random(n, n, &mut rng);
+        let fa = |x: &[f64], y: &mut [f64]| gemv(1.0, &a, x, y);
+        let fb = |x: &[f64], y: &mut [f64]| gemv(1.0, &a, x, y);
+        let err = rel_spectral_error(n, fa, fb, 20, 3);
+        assert!(err < 1e-12);
+    }
+}

@@ -1,0 +1,112 @@
+//! Covariance kernels (geostatistics workload, cf. Abdulah et al. [1] in the
+//! paper): exponential and Matérn-3/2 over scattered points.
+
+use super::MatrixGen;
+use crate::geometry::Point3;
+
+/// Exponential covariance C(r) = σ² exp(−r/ℓ) + nugget δ_ij.
+pub struct ExpCovariance {
+    pts: Vec<Point3>,
+    pub sigma2: f64,
+    pub length: f64,
+    pub nugget: f64,
+}
+
+impl ExpCovariance {
+    pub fn new(pts: Vec<Point3>, length: f64) -> Self {
+        ExpCovariance { pts, sigma2: 1.0, length, nugget: 1e-4 }
+    }
+}
+
+impl MatrixGen for ExpCovariance {
+    fn nrows(&self) -> usize {
+        self.pts.len()
+    }
+
+    fn ncols(&self) -> usize {
+        self.pts.len()
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        let r = self.pts[i].dist(self.pts[j]);
+        let c = self.sigma2 * (-r / self.length).exp();
+        if i == j {
+            c + self.nugget
+        } else {
+            c
+        }
+    }
+
+    fn points(&self) -> &[Point3] {
+        &self.pts
+    }
+}
+
+/// Matérn ν=3/2 covariance C(r) = σ² (1 + √3 r/ℓ) exp(−√3 r/ℓ) + nugget.
+pub struct Matern32Covariance {
+    pts: Vec<Point3>,
+    pub sigma2: f64,
+    pub length: f64,
+    pub nugget: f64,
+}
+
+impl Matern32Covariance {
+    pub fn new(pts: Vec<Point3>, length: f64) -> Self {
+        Matern32Covariance { pts, sigma2: 1.0, length, nugget: 1e-4 }
+    }
+}
+
+impl MatrixGen for Matern32Covariance {
+    fn nrows(&self) -> usize {
+        self.pts.len()
+    }
+
+    fn ncols(&self) -> usize {
+        self.pts.len()
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        let r = self.pts[i].dist(self.pts[j]);
+        let s = 3f64.sqrt() * r / self.length;
+        let c = self.sigma2 * (1.0 + s) * (-s).exp();
+        if i == j {
+            c + self.nugget
+        } else {
+            c
+        }
+    }
+
+    fn points(&self) -> &[Point3] {
+        &self.pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::random_cube;
+    use crate::util::Rng;
+
+    #[test]
+    fn exp_cov_properties() {
+        let mut rng = Rng::new(3);
+        let pts = random_cube(50, &mut rng);
+        let c = ExpCovariance::new(pts, 0.5);
+        for i in 0..10 {
+            assert!(c.entry(i, i) >= 1.0); // σ² + nugget
+            for j in 0..10 {
+                assert_eq!(c.entry(i, j), c.entry(j, i));
+                if i != j {
+                    assert!(c.entry(i, j) < c.entry(i, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matern_decays_with_distance() {
+        let pts = vec![Point3::zero(), Point3::new(0.1, 0.0, 0.0), Point3::new(2.0, 0.0, 0.0)];
+        let c = Matern32Covariance::new(pts, 0.5);
+        assert!(c.entry(0, 1) > c.entry(0, 2));
+    }
+}

@@ -1,0 +1,69 @@
+//! 2D Laplace (log) kernel on a curve — a second integral-equation workload
+//! with different singular-value decay than the 3D SLP.
+
+use super::MatrixGen;
+use crate::geometry::Point3;
+
+/// Nyström-style log-kernel matrix on a closed curve:
+/// m_ij = −w² · log‖x_i − x_j‖ (off-diagonal), with the standard
+/// self-interaction limit on the diagonal (w = arclength weight).
+pub struct LogKernel {
+    pts: Vec<Point3>,
+    w: f64,
+}
+
+impl LogKernel {
+    /// Points should lie on a curve (e.g. [`crate::geometry::circle_points`]).
+    pub fn new(pts: Vec<Point3>) -> Self {
+        let n = pts.len();
+        let w = std::f64::consts::TAU / n as f64;
+        LogKernel { pts, w }
+    }
+}
+
+impl MatrixGen for LogKernel {
+    fn nrows(&self) -> usize {
+        self.pts.len()
+    }
+
+    fn ncols(&self) -> usize {
+        self.pts.len()
+    }
+
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        if i == j {
+            // panel self term: -w^2 (log(w/2) - 1) keeps the diagonal finite
+            // and consistent with the panel size.
+            return -self.w * self.w * ((self.w / 2.0).ln() - 1.0);
+        }
+        let d = self.pts[i].dist(self.pts[j]);
+        -self.w * self.w * d.ln()
+    }
+
+    fn points(&self) -> &[Point3] {
+        &self.pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::circle_points;
+
+    #[test]
+    fn symmetric() {
+        let k = LogKernel::new(circle_points(64));
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(k.entry(i, j), k.entry(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_finite_positive() {
+        let k = LogKernel::new(circle_points(128));
+        assert!(k.entry(5, 5).is_finite());
+        assert!(k.entry(5, 5) > 0.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Matrix generators: entry-wise access to the (never fully assembled) dense
+//! system matrix. The BEM Laplace single layer potential is the paper's model
+//! problem (§2.1); a log-kernel and covariance kernels serve as additional
+//! example applications.
+
+mod covariance;
+mod laplace;
+mod logkernel;
+
+pub use covariance::{ExpCovariance, Matern32Covariance};
+pub use laplace::LaplaceSlp;
+pub use logkernel::LogKernel;
+
+use crate::geometry::Point3;
+use crate::la::DMatrix;
+
+/// Entry-wise generator for an implicit dense matrix, indexed by *external*
+/// (original) indices.
+pub trait MatrixGen: Sync {
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+
+    /// Matrix entry m_{ij}, external indexing.
+    fn entry(&self, i: usize, j: usize) -> f64;
+
+    /// Geometry used for clustering (row side = column side for all our
+    /// generators).
+    fn points(&self) -> &[Point3];
+
+    /// Assemble a sub-block for given external row/column index lists.
+    fn fill(&self, rows: &[usize], cols: &[usize], out: &mut DMatrix) {
+        debug_assert_eq!(out.nrows(), rows.len());
+        debug_assert_eq!(out.ncols(), cols.len());
+        for (jj, &j) in cols.iter().enumerate() {
+            let col = out.col_mut(jj);
+            for (ii, &i) in rows.iter().enumerate() {
+                col[ii] = self.entry(i, j);
+            }
+        }
+    }
+
+    /// One row restricted to a column list.
+    fn fill_row(&self, i: usize, cols: &[usize], out: &mut [f64]) {
+        for (jj, &j) in cols.iter().enumerate() {
+            out[jj] = self.entry(i, j);
+        }
+    }
+
+    /// One column restricted to a row list.
+    fn fill_col(&self, j: usize, rows: &[usize], out: &mut [f64]) {
+        for (ii, &i) in rows.iter().enumerate() {
+            out[ii] = self.entry(i, j);
+        }
+    }
+}
+
+/// A fully assembled matrix as a generator (tests, small reference problems).
+pub struct DenseGen {
+    m: DMatrix,
+    pts: Vec<Point3>,
+}
+
+impl DenseGen {
+    /// Wrap a matrix; `pts` drive the clustering (must have nrows entries).
+    pub fn new(m: DMatrix, pts: Vec<Point3>) -> Self {
+        assert_eq!(m.nrows(), pts.len());
+        DenseGen { m, pts }
+    }
+}
+
+impl MatrixGen for DenseGen {
+    fn nrows(&self) -> usize {
+        self.m.nrows()
+    }
+    fn ncols(&self) -> usize {
+        self.m.ncols()
+    }
+    fn entry(&self, i: usize, j: usize) -> f64 {
+        self.m[(i, j)]
+    }
+    fn points(&self) -> &[Point3] {
+        &self.pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fill_matches_entry() {
+        let mut rng = Rng::new(9);
+        let m = DMatrix::random(6, 6, &mut rng);
+        let pts = crate::geometry::fibonacci_sphere(6);
+        let g = DenseGen::new(m.clone(), pts);
+        let rows = [1usize, 3, 5];
+        let cols = [0usize, 2];
+        let mut out = DMatrix::zeros(3, 2);
+        g.fill(&rows, &cols, &mut out);
+        for (jj, &j) in cols.iter().enumerate() {
+            for (ii, &i) in rows.iter().enumerate() {
+                assert_eq!(out[(ii, jj)], m[(i, j)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Hand-written BLAS-like kernels (levels 1–3), column-major.
+//!
+//! These replace oneMKL from the paper's testbed. The MVM hot path only needs
+//! `gemv` on column-major data — which is the axpy-per-column form below and
+//! auto-vectorizes with `target-cpu=native`. `gemm` is used at construction
+//! time (basis products, recompression) and by the multi-RHS coordinator path.
+
+use super::DMatrix;
+
+/// y += a * x (slices of equal length).
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way unrolled to break the fp-add dependency chain.
+    let n = x.len();
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let mut i = 0;
+    while i + 4 <= n {
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    while i < n {
+        s0 += x[i] * y[i];
+        i += 1;
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// y += alpha * A * x  (A: nrows×ncols column-major).
+pub fn gemv(alpha: f64, a: &DMatrix, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), a.ncols());
+    debug_assert_eq!(y.len(), a.nrows());
+    for j in 0..a.ncols() {
+        let axj = alpha * x[j];
+        if axj != 0.0 {
+            axpy(axj, a.col(j), y);
+        }
+    }
+}
+
+/// y += alpha * A^T * x  (A: nrows×ncols column-major, y has ncols entries).
+pub fn gemv_transposed(alpha: f64, a: &DMatrix, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), a.nrows());
+    debug_assert_eq!(y.len(), a.ncols());
+    for j in 0..a.ncols() {
+        y[j] += alpha * dot(a.col(j), x);
+    }
+}
+
+/// Transpose flag for [`gemm`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+/// C += alpha * op(A) * op(B). Shapes: op(A) m×k, op(B) k×n, C m×n.
+pub fn gemm(alpha: f64, a: &DMatrix, ta: Trans, b: &DMatrix, tb: Trans, c: &mut DMatrix) {
+    let (m, ka) = match ta {
+        Trans::No => (a.nrows(), a.ncols()),
+        Trans::Yes => (a.ncols(), a.nrows()),
+    };
+    let (kb, n) = match tb {
+        Trans::No => (b.nrows(), b.ncols()),
+        Trans::Yes => (b.ncols(), b.nrows()),
+    };
+    assert_eq!(ka, kb, "gemm inner dimension mismatch");
+    assert_eq!(c.nrows(), m);
+    assert_eq!(c.ncols(), n);
+    let k = ka;
+    match (ta, tb) {
+        (Trans::No, Trans::No) => {
+            // C(:,j) += alpha * sum_l A(:,l) * B(l,j)
+            for j in 0..n {
+                let bcol = b.col(j);
+                let ccol = c.col_mut(j);
+                for l in 0..k {
+                    let w = alpha * bcol[l];
+                    if w != 0.0 {
+                        axpy(w, a.col(l), ccol);
+                    }
+                }
+            }
+        }
+        (Trans::Yes, Trans::No) => {
+            // C(i,j) += alpha * dot(A(:,i), B(:,j))
+            for j in 0..n {
+                let bcol = b.col(j);
+                let ccol = c.col_mut(j);
+                for i in 0..m {
+                    ccol[i] += alpha * dot(a.col(i), bcol);
+                }
+            }
+        }
+        (Trans::No, Trans::Yes) => {
+            // C(:,j) += alpha * sum_l A(:,l) * B(j,l)
+            for j in 0..n {
+                let ccol = c.col_mut(j);
+                for l in 0..k {
+                    let w = alpha * b[(j, l)];
+                    if w != 0.0 {
+                        axpy(w, a.col(l), ccol);
+                    }
+                }
+            }
+        }
+        (Trans::Yes, Trans::Yes) => {
+            for j in 0..n {
+                let ccol = c.col_mut(j);
+                for i in 0..m {
+                    let acol = a.col(i);
+                    let mut s = 0.0;
+                    for l in 0..k {
+                        s += acol[l] * b[(j, l)];
+                    }
+                    ccol[i] += alpha * s;
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: C = op(A)*op(B) freshly allocated.
+pub fn matmul(a: &DMatrix, ta: Trans, b: &DMatrix, tb: Trans) -> DMatrix {
+    let m = match ta {
+        Trans::No => a.nrows(),
+        Trans::Yes => a.ncols(),
+    };
+    let n = match tb {
+        Trans::No => b.ncols(),
+        Trans::Yes => b.nrows(),
+    };
+    let mut c = DMatrix::zeros(m, n);
+    gemm(1.0, a, ta, b, tb, &mut c);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_mm(a: &DMatrix, b: &DMatrix) -> DMatrix {
+        let mut c = DMatrix::zeros(a.nrows(), b.ncols());
+        for i in 0..a.nrows() {
+            for j in 0..b.ncols() {
+                let mut s = 0.0;
+                for l in 0..a.ncols() {
+                    s += a[(i, l)] * b[(l, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &DMatrix, b: &DMatrix, tol: f64) {
+        assert_eq!((a.nrows(), a.ncols()), (b.nrows(), b.ncols()));
+        for j in 0..a.ncols() {
+            for i in 0..a.nrows() {
+                assert!((a[(i, j)] - b[(i, j)]).abs() < tol, "({i},{j}): {} vs {}", a[(i, j)], b[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut y = [1.0; 5];
+        assert_eq!(dot(&x, &x), 55.0);
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0, 9.0, 11.0]);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let mut rng = Rng::new(3);
+        let a = DMatrix::random(7, 5, &mut rng);
+        let x = rng.vector(5);
+        let mut y = rng.vector(7);
+        let mut y2 = y.clone();
+        gemv(1.5, &a, &x, &mut y);
+        for i in 0..7 {
+            let mut s = 0.0;
+            for j in 0..5 {
+                s += a[(i, j)] * x[j];
+            }
+            y2[i] += 1.5 * s;
+        }
+        for i in 0..7 {
+            assert!((y[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemv_t_matches_naive() {
+        let mut rng = Rng::new(4);
+        let a = DMatrix::random(7, 5, &mut rng);
+        let x = rng.vector(7);
+        let mut y = vec![0.0; 5];
+        gemv_transposed(2.0, &a, &x, &mut y);
+        for j in 0..5 {
+            let mut s = 0.0;
+            for i in 0..7 {
+                s += a[(i, j)] * x[i];
+            }
+            assert!((y[j] - 2.0 * s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemm_all_transpose_combos() {
+        let mut rng = Rng::new(5);
+        let a = DMatrix::random(4, 6, &mut rng);
+        let b = DMatrix::random(6, 3, &mut rng);
+        assert_close(&matmul(&a, Trans::No, &b, Trans::No), &naive_mm(&a, &b), 1e-12);
+
+        let at = a.transpose();
+        assert_close(&matmul(&at, Trans::Yes, &b, Trans::No), &naive_mm(&a, &b), 1e-12);
+
+        let bt = b.transpose();
+        assert_close(&matmul(&a, Trans::No, &bt, Trans::Yes), &naive_mm(&a, &b), 1e-12);
+        assert_close(&matmul(&at, Trans::Yes, &bt, Trans::Yes), &naive_mm(&a, &b), 1e-12);
+    }
+}

@@ -1,0 +1,248 @@
+//! Column-major dense matrix.
+
+use crate::util::Rng;
+
+/// Dense matrix, column-major storage (like Fortran/BLAS).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DMatrix {
+    nrows: usize,
+    ncols: usize,
+    data: Vec<f64>,
+}
+
+impl DMatrix {
+    /// All-zero matrix.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        DMatrix { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a generator f(i, j).
+    pub fn from_fn(nrows: usize, ncols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(nrows, ncols);
+        for j in 0..ncols {
+            for i in 0..nrows {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Wrap existing column-major data.
+    pub fn from_vec(nrows: usize, ncols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), nrows * ncols, "data length mismatch");
+        DMatrix { nrows, ncols, data }
+    }
+
+    /// Random matrix with standard normal entries.
+    pub fn random(nrows: usize, ncols: usize, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(nrows, ncols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Underlying column-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable underlying data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Column `j` as a slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.ncols);
+        &self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    /// Column `j` as a mutable slice.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.ncols);
+        &mut self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    /// Two distinct mutable columns (for Jacobi rotations).
+    pub fn cols_mut2(&mut self, j0: usize, j1: usize) -> (&mut [f64], &mut [f64]) {
+        assert!(j0 < j1 && j1 < self.ncols);
+        let (a, b) = self.data.split_at_mut(j1 * self.nrows);
+        (&mut a[j0 * self.nrows..(j0 + 1) * self.nrows], &mut b[..self.nrows])
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> DMatrix {
+        let mut t = DMatrix::zeros(self.ncols, self.nrows);
+        for j in 0..self.ncols {
+            for i in 0..self.nrows {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Scale all entries.
+    pub fn scale(&mut self, a: f64) {
+        for v in &mut self.data {
+            *v *= a;
+        }
+    }
+
+    /// self += a * other (same shape).
+    pub fn add_scaled(&mut self, a: f64, other: &DMatrix) {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += a * y;
+        }
+    }
+
+    /// Copy of the sub-matrix rows×cols given by half-open ranges.
+    pub fn sub(&self, rows: std::ops::Range<usize>, cols: std::ops::Range<usize>) -> DMatrix {
+        let mut m = DMatrix::zeros(rows.len(), cols.len());
+        for (jj, j) in cols.clone().enumerate() {
+            let src = &self.col(j)[rows.clone()];
+            m.col_mut(jj).copy_from_slice(src);
+        }
+        m
+    }
+
+    /// Keep only the first `k` columns.
+    pub fn take_cols(mut self, k: usize) -> DMatrix {
+        assert!(k <= self.ncols);
+        self.data.truncate(k * self.nrows);
+        self.ncols = k;
+        self
+    }
+
+    /// Horizontal concatenation [self | other].
+    pub fn hcat(&self, other: &DMatrix) -> DMatrix {
+        assert_eq!(self.nrows, other.nrows);
+        let mut data = Vec::with_capacity((self.ncols + other.ncols) * self.nrows);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        DMatrix { nrows: self.nrows, ncols: self.ncols + other.ncols, data }
+    }
+
+    /// Vertical concatenation [self; other].
+    pub fn vcat(&self, other: &DMatrix) -> DMatrix {
+        assert_eq!(self.ncols, other.ncols);
+        let mut m = DMatrix::zeros(self.nrows + other.nrows, self.ncols);
+        for j in 0..self.ncols {
+            m.col_mut(j)[..self.nrows].copy_from_slice(self.col(j));
+            m.col_mut(j)[self.nrows..].copy_from_slice(other.col(j));
+        }
+        m
+    }
+
+    /// Number of stored bytes (FP64).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Max-abs entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, x| m.max(x.abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DMatrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        &self.data[j * self.nrows + i]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DMatrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        &mut self.data[j * self.nrows + i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_col_major() {
+        let m = DMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(1, 0)], 2.0);
+        assert_eq!(m[(0, 1)], 3.0);
+        assert_eq!(m[(1, 1)], 4.0);
+        assert_eq!(m.col(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = DMatrix::random(5, 3, &mut rng);
+        let t = m.transpose().transpose();
+        assert_eq!(m, t);
+    }
+
+    #[test]
+    fn concat_shapes() {
+        let a = DMatrix::zeros(3, 2);
+        let b = DMatrix::zeros(3, 4);
+        assert_eq!(a.hcat(&b).ncols(), 6);
+        let c = DMatrix::zeros(5, 2);
+        assert_eq!(a.vcat(&c).nrows(), 8);
+    }
+
+    #[test]
+    fn vcat_values() {
+        let a = DMatrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = DMatrix::from_vec(2, 2, vec![3.0, 4.0, 5.0, 6.0]);
+        let v = a.vcat(&b);
+        assert_eq!(v[(0, 0)], 1.0);
+        assert_eq!(v[(1, 0)], 3.0);
+        assert_eq!(v[(2, 0)], 4.0);
+        assert_eq!(v[(0, 1)], 2.0);
+        assert_eq!(v[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn sub_block() {
+        let m = DMatrix::from_fn(4, 4, |i, j| (i * 10 + j) as f64);
+        let s = m.sub(1..3, 2..4);
+        assert_eq!(s[(0, 0)], 12.0);
+        assert_eq!(s[(1, 1)], 23.0);
+    }
+
+    #[test]
+    fn eye_and_norm() {
+        let i = DMatrix::eye(4);
+        assert_eq!(i.fro_norm(), 2.0);
+    }
+}

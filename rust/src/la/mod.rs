@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate (no BLAS/LAPACK in the sandbox).
+//!
+//! Column-major [`DMatrix`], hand-written level-1/2/3 kernels ([`blas`]),
+//! Householder QR ([`qr`]) and one-sided Jacobi SVD ([`svd`]) — everything the
+//! hierarchical formats need: the matrices involved are either tall-skinny
+//! low-rank factors or small (≤ a few hundred) square coupling blocks, for
+//! which Jacobi SVD is accurate and fast enough.
+
+pub mod blas;
+pub mod matrix;
+pub mod qr;
+pub mod svd;
+
+pub use blas::{axpy, dot, gemm, gemv, gemv_transposed, matmul, nrm2, Trans};
+pub use matrix::DMatrix;
+pub use qr::qr_thin;
+pub use svd::{svd_adaptive, svd_jacobi, svd_of_product, Svd};

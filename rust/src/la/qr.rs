@@ -1,0 +1,150 @@
+//! Thin Householder QR for tall-skinny matrices (low-rank factors).
+
+use super::{blas, DMatrix};
+
+/// Thin QR factorization A = Q·R with Q (m×k) having orthonormal columns and
+/// R (k×k) upper triangular, k = min(m, n) = n for our tall-skinny uses.
+///
+/// Classical Householder with explicit Q accumulation; m and n are small
+/// (n ≤ a few hundred) in all call sites.
+pub fn qr_thin(a: &DMatrix) -> (DMatrix, DMatrix) {
+    let m = a.nrows();
+    let n = a.ncols();
+    let k = m.min(n);
+    let mut r = a.clone();
+    // Householder vectors stored per step.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+
+    for j in 0..k {
+        // Build Householder vector for column j, rows j..m.
+        let col = &r.col(j)[j..m];
+        let alpha = blas::nrm2(col);
+        if alpha == 0.0 {
+            vs.push(vec![0.0; m - j]);
+            continue;
+        }
+        let mut v: Vec<f64> = col.to_vec();
+        let beta = if v[0] >= 0.0 { -alpha } else { alpha };
+        v[0] -= beta;
+        let vnorm = blas::nrm2(&v);
+        if vnorm > 0.0 {
+            for x in &mut v {
+                *x /= vnorm;
+            }
+        }
+        // Apply H = I - 2 v v^T to R[j.., j..].
+        for jj in j..n {
+            let cjj = &mut r.col_mut(jj)[j..m];
+            let w = 2.0 * blas::dot(&v, cjj);
+            for (ci, vi) in cjj.iter_mut().zip(&v) {
+                *ci -= w * vi;
+            }
+        }
+        vs.push(v);
+    }
+
+    // Zero strictly-lower part of R, keep top k rows.
+    let mut rk = DMatrix::zeros(k, n);
+    for j in 0..n {
+        for i in 0..k.min(j + 1) {
+            rk[(i, j)] = r[(i, j)];
+        }
+    }
+
+    // Accumulate Q = H_0 H_1 ... H_{k-1} * [I_k; 0].
+    let mut q = DMatrix::zeros(m, k);
+    for i in 0..k {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        if v.iter().all(|x| *x == 0.0) {
+            continue;
+        }
+        for jj in 0..k {
+            let cjj = &mut q.col_mut(jj)[j..m];
+            let w = 2.0 * blas::dot(v, cjj);
+            for (ci, vi) in cjj.iter_mut().zip(v) {
+                *ci -= w * vi;
+            }
+        }
+    }
+    (q, rk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas::{matmul, Trans};
+    use crate::util::Rng;
+
+    fn check_qr(m: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = DMatrix::random(m, n, &mut rng);
+        let (q, r) = qr_thin(&a);
+        let k = m.min(n);
+        assert_eq!(q.ncols(), k);
+        assert_eq!(r.nrows(), k);
+        // Q^T Q = I
+        let qtq = matmul(&q, Trans::Yes, &q, Trans::No);
+        for i in 0..k {
+            for j in 0..k {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq[(i, j)] - want).abs() < 1e-10, "qtq({i},{j})={}", qtq[(i, j)]);
+            }
+        }
+        // QR = A
+        let qr = matmul(&q, Trans::No, &r, Trans::No);
+        for j in 0..n {
+            for i in 0..m {
+                assert!((qr[(i, j)] - a[(i, j)]).abs() < 1e-10);
+            }
+        }
+        // R upper triangular
+        for j in 0..n {
+            for i in (j + 1)..k {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_tall() {
+        check_qr(20, 5, 1);
+    }
+
+    #[test]
+    fn qr_square() {
+        check_qr(8, 8, 2);
+    }
+
+    #[test]
+    fn qr_wide() {
+        check_qr(4, 9, 3);
+    }
+
+    #[test]
+    fn qr_rank_deficient() {
+        // Two identical columns.
+        let mut rng = Rng::new(4);
+        let c = rng.vector(10);
+        let mut a = DMatrix::zeros(10, 2);
+        a.col_mut(0).copy_from_slice(&c);
+        a.col_mut(1).copy_from_slice(&c);
+        let (q, r) = qr_thin(&a);
+        let qr = matmul(&q, Trans::No, &r, Trans::No);
+        for j in 0..2 {
+            for i in 0..10 {
+                assert!((qr[(i, j)] - a[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_zero_matrix() {
+        let a = DMatrix::zeros(6, 3);
+        let (q, r) = qr_thin(&a);
+        assert_eq!(q.nrows(), 6);
+        assert_eq!(r.fro_norm(), 0.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! One-sided Jacobi SVD.
+//!
+//! Accurate for the small/skinny matrices appearing in low-rank arithmetic
+//! (coupling blocks, k×k products of QR factors). For tall matrices we first
+//! reduce with a thin QR so Jacobi operates on a k×k matrix.
+
+use super::{blas, qr::qr_thin, DMatrix};
+
+/// Singular value decomposition A = U · diag(s) · Vᵀ with U (m×k), V (n×k),
+/// k = min(m,n), singular values descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: DMatrix,
+    pub s: Vec<f64>,
+    pub v: DMatrix,
+}
+
+impl Svd {
+    /// Rank for relative tolerance `eps`: smallest r with s[r] <= eps * s[0].
+    pub fn rank(&self, eps: f64) -> usize {
+        if self.s.is_empty() || self.s[0] == 0.0 {
+            return 0;
+        }
+        let cutoff = eps * self.s[0];
+        self.s.iter().take_while(|&&x| x > cutoff).count()
+    }
+
+    /// Truncate to the first `k` singular triplets.
+    pub fn truncate(mut self, k: usize) -> Svd {
+        let k = k.min(self.s.len());
+        self.s.truncate(k);
+        Svd { u: self.u.take_cols(k), s: self.s, v: self.v.take_cols(k) }
+    }
+}
+
+/// One-sided Jacobi on a square-ish matrix: returns SVD of `a`.
+/// For m > 2n, a thin QR reduction is applied first.
+pub fn svd_jacobi(a: &DMatrix) -> Svd {
+    let m = a.nrows();
+    let n = a.ncols();
+    if m < n {
+        // SVD of transpose, swap factors.
+        let t = svd_jacobi(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    if m > 2 * n && n > 0 {
+        // QR reduction: A = Q R, SVD(R) = Ur S V^T, U = Q Ur.
+        let (q, r) = qr_thin(a);
+        let inner = svd_jacobi(&r);
+        let u = blas::matmul(&q, blas::Trans::No, &inner.u, blas::Trans::No);
+        return Svd { u, s: inner.s, v: inner.v };
+    }
+
+    // Work matrix W := A; accumulate V as product of rotations.
+    let mut w = a.clone();
+    let mut v = DMatrix::eye(n);
+    let eps = 1e-15;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 Gram sub-matrix of W^T W.
+                let (wp, wq) = w.cols_mut2(p, q);
+                let app = blas::dot(wp, wp);
+                let aqq = blas::dot(wq, wq);
+                let apq = blas::dot(wp, wq);
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(f64::MIN_POSITIVE));
+                // Jacobi rotation zeroing apq.
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wi = wp[i];
+                    let wj = wq[i];
+                    wp[i] = c * wi - s * wj;
+                    wq[i] = s * wi + c * wj;
+                }
+                let (vp, vq) = v.cols_mut2(p, q);
+                for i in 0..n {
+                    let vi = vp[i];
+                    let vj = vq[i];
+                    vp[i] = c * vi - s * vj;
+                    vq[i] = s * vi + c * vj;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    // Singular values = column norms of W; U = W / s.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n).map(|j| blas::nrm2(w.col(j))).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    let mut u = DMatrix::zeros(m, n);
+    let mut vv = DMatrix::zeros(n, n);
+    let mut s = vec![0.0; n];
+    for (jj, &j) in order.iter().enumerate() {
+        s[jj] = norms[j];
+        if norms[j] > 0.0 {
+            let src = w.col(j);
+            let dst = u.col_mut(jj);
+            for i in 0..m {
+                dst[i] = src[i] / norms[j];
+            }
+        }
+        vv.col_mut(jj).copy_from_slice(v.col(j));
+    }
+    Svd { u, s, v: vv }
+}
+
+/// Accuracy-aware SVD for tall concatenations (basis construction): exact
+/// Jacobi for small problems, randomized range finder with one power
+/// iteration for large ones, with an exact fallback when the requested
+/// accuracy would exhaust the sample space.
+pub fn svd_adaptive(a: &DMatrix, eps: f64) -> Svd {
+    let m = a.nrows();
+    let c = a.ncols();
+    if c <= 128 || m <= 2 * c {
+        return svd_jacobi(a);
+    }
+    let s = (c / 4).max(96).min(c);
+    let mut rng = crate::util::Rng::new(0x5eed ^ ((m as u64) << 20) ^ c as u64);
+    let omega = DMatrix::random(c, s, &mut rng);
+    // Y = A Ω, one power iteration: Q = qr(A · qr(Aᵀ · qr(Y).Q).Q)
+    let y = blas::matmul(a, blas::Trans::No, &omega, blas::Trans::No);
+    let (q0, _) = qr_thin(&y);
+    let z = blas::matmul(a, blas::Trans::Yes, &q0, blas::Trans::No);
+    let (q1, _) = qr_thin(&z);
+    let y2 = blas::matmul(a, blas::Trans::No, &q1, blas::Trans::No);
+    let (q, _) = qr_thin(&y2);
+    // B = Qᵀ A (s×c), small SVD
+    let b = blas::matmul(&q, blas::Trans::Yes, a, blas::Trans::No);
+    let inner = svd_jacobi(&b);
+    // if the eps-rank saturates the sample, the sketch may be lossy: redo exact
+    if inner.rank(eps) * 10 >= s * 9 {
+        return svd_jacobi(a);
+    }
+    let u = blas::matmul(&q, blas::Trans::No, &inner.u, blas::Trans::No);
+    Svd { u, s: inner.s, v: inner.v }
+}
+
+/// SVD of a low-rank product U·Vᵀ without forming it: QR both factors, Jacobi
+/// on the small k×k core. Returns (W, s, X) with U·Vᵀ = W·diag(s)·Xᵀ.
+pub fn svd_of_product(u: &DMatrix, v: &DMatrix) -> Svd {
+    assert_eq!(u.ncols(), v.ncols());
+    if u.ncols() == 0 {
+        return Svd { u: DMatrix::zeros(u.nrows(), 0), s: vec![], v: DMatrix::zeros(v.nrows(), 0) };
+    }
+    let (qu, ru) = qr_thin(u);
+    let (qv, rv) = qr_thin(v);
+    // core = R_u * R_v^T  (k×k)
+    let core = blas::matmul(&ru, blas::Trans::No, &rv, blas::Trans::Yes);
+    let inner = svd_jacobi(&core);
+    let w = blas::matmul(&qu, blas::Trans::No, &inner.u, blas::Trans::No);
+    let x = blas::matmul(&qv, blas::Trans::No, &inner.v, blas::Trans::No);
+    Svd { u: w, s: inner.s, v: x }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas::{matmul, Trans};
+    use crate::util::Rng;
+
+    fn reconstruct(svd: &Svd) -> DMatrix {
+        let mut us = svd.u.clone();
+        for j in 0..svd.s.len() {
+            let sj = svd.s[j];
+            for x in us.col_mut(j) {
+                *x *= sj;
+            }
+        }
+        matmul(&us, Trans::No, &svd.v, Trans::Yes)
+    }
+
+    fn check_svd(a: &DMatrix, tol: f64) {
+        let svd = svd_jacobi(a);
+        // descending singular values
+        for i in 1..svd.s.len() {
+            assert!(svd.s[i - 1] >= svd.s[i] - 1e-14);
+        }
+        // reconstruction
+        let r = reconstruct(&svd);
+        for j in 0..a.ncols() {
+            for i in 0..a.nrows() {
+                assert!((r[(i, j)] - a[(i, j)]).abs() < tol, "({i},{j}) {} vs {}", r[(i, j)], a[(i, j)]);
+            }
+        }
+        // orthogonality of V
+        let vtv = matmul(&svd.v, Trans::Yes, &svd.v, Trans::No);
+        for i in 0..vtv.nrows() {
+            for j in 0..vtv.ncols() {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_random_square() {
+        let mut rng = Rng::new(11);
+        check_svd(&DMatrix::random(8, 8, &mut rng), 1e-9);
+    }
+
+    #[test]
+    fn svd_tall_with_qr_reduction() {
+        let mut rng = Rng::new(12);
+        check_svd(&DMatrix::random(50, 6, &mut rng), 1e-9);
+    }
+
+    #[test]
+    fn svd_wide() {
+        let mut rng = Rng::new(13);
+        check_svd(&DMatrix::random(5, 12, &mut rng), 1e-9);
+    }
+
+    #[test]
+    fn svd_known_singular_values() {
+        // diag(3, 2, 1) has singular values 3, 2, 1.
+        let mut a = DMatrix::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 2.0;
+        a[(2, 2)] = 1.0;
+        let svd = svd_jacobi(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-12);
+        assert!((svd.s[1] - 2.0).abs() < 1e-12);
+        assert!((svd.s[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn svd_rank_and_truncate() {
+        // rank-2 matrix from outer products
+        let mut rng = Rng::new(14);
+        let u = DMatrix::random(10, 2, &mut rng);
+        let v = DMatrix::random(7, 2, &mut rng);
+        let a = matmul(&u, Trans::No, &v, Trans::Yes);
+        let svd = svd_jacobi(&a);
+        assert_eq!(svd.rank(1e-10), 2);
+        let t = svd.truncate(2);
+        let r = reconstruct(&t);
+        for j in 0..7 {
+            for i in 0..10 {
+                assert!((r[(i, j)] - a[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_of_product_matches_direct() {
+        let mut rng = Rng::new(15);
+        let u = DMatrix::random(20, 4, &mut rng);
+        let v = DMatrix::random(15, 4, &mut rng);
+        let direct = matmul(&u, Trans::No, &v, Trans::Yes);
+        let svd = svd_of_product(&u, &v);
+        let r = reconstruct(&svd);
+        for j in 0..15 {
+            for i in 0..20 {
+                assert!((r[(i, j)] - direct[(i, j)]).abs() < 1e-9);
+            }
+        }
+        let dsvd = svd_jacobi(&direct);
+        for i in 0..4 {
+            assert!((svd.s[i] - dsvd.s[i]).abs() < 1e-9 * dsvd.s[0].max(1.0));
+        }
+    }
+
+    #[test]
+    fn svd_zero_matrix() {
+        let a = DMatrix::zeros(4, 3);
+        let svd = svd_jacobi(&a);
+        assert!(svd.s.iter().all(|&x| x == 0.0));
+        assert_eq!(svd.rank(1e-10), 0);
+    }
+}

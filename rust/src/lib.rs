@@ -1,0 +1,73 @@
+//! # hmatc — compressed hierarchical matrix formats and fast MVM
+//!
+//! Reproduction of R. Kriemann, *"Floating Point Compression of Hierarchical
+//! Matrix Formats and its Impact on Matrix-Vector Multiplication"*.
+//!
+//! The crate implements, from scratch:
+//!
+//! * the three hierarchical matrix formats of the paper — [`hmatrix`] (H),
+//!   [`uniform`] (uniform-H with shared cluster bases) and [`h2`] (H² with
+//!   nested bases) — over geometric cluster trees ([`cluster`]) built for a
+//!   BEM model problem ([`geometry`], [`kernelfn`]);
+//! * the error-adaptive floating point codecs of §4 — AFLP, FPX and the
+//!   per-column VALR scheme — in [`compress`];
+//! * every matrix-vector multiplication algorithm of §3/§4 (Algorithms 1–8)
+//!   in [`mvm`], running on a custom work-stealing fork-join pool ([`par`]);
+//! * a PJRT [`runtime`] that executes AOT-lowered JAX/Pallas tile kernels and
+//!   a request-batching MVM server in [`coordinator`];
+//! * the measurement substrate ([`bench`]) used by the per-figure benchmark
+//!   binaries under `rust/benches/`.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hmatc::prelude::*;
+//! use std::sync::Arc;
+//!
+//! // BEM model problem: Laplace SLP on the unit sphere, n = 1280 triangles.
+//! let geom = hmatc::geometry::icosphere(3);
+//! let gen = hmatc::kernelfn::LaplaceSlp::new(&geom);
+//! let ct = Arc::new(ClusterTree::build(gen.points(), 64));
+//! let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+//! let mut h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-6));
+//!
+//! // Compress with AFLP + VALR and multiply.
+//! h.compress(&CompressionConfig::aflp(1e-6));
+//! let x = vec![1.0; h.ncols()];
+//! let mut y = vec![0.0; h.nrows()];
+//! hmatc::mvm::mvm(1.0, &h, &x, &mut y, MvmAlgorithm::ClusterLists);
+//! ```
+#![allow(clippy::needless_range_loop)]
+
+pub mod util;
+pub mod par;
+pub mod la;
+pub mod geometry;
+pub mod cluster;
+pub mod kernelfn;
+pub mod lowrank;
+pub mod compress;
+pub mod hmatrix;
+pub mod uniform;
+pub mod h2;
+pub mod mvm;
+pub mod solver;
+pub mod bench;
+pub mod coordinator;
+#[cfg(feature = "pjrt")]
+pub mod runtime;
+
+/// Commonly used types, re-exported for examples and benches.
+pub mod prelude {
+    pub use crate::cluster::{Admissibility, BlkAdmissibility, BlockTree, ClusterTree, HodlrAdmissibility, StdAdmissibility, WeakAdmissibility};
+    pub use crate::compress::{Codec, CompressionConfig};
+    pub use crate::geometry::{icosphere, Geometry};
+    pub use crate::h2::H2Matrix;
+    pub use crate::hmatrix::HMatrix;
+    pub use crate::kernelfn::{LaplaceSlp, MatrixGen};
+    pub use crate::la::DMatrix;
+    pub use crate::lowrank::AcaOptions;
+    pub use crate::mvm::{mvm, H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+    pub use crate::solver::cg;
+    pub use crate::uniform::UniformHMatrix;
+}

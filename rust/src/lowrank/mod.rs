@@ -1,0 +1,41 @@
+//! Low-rank approximation: adaptive cross approximation (ACA) with SVD
+//! recompression.
+
+mod aca;
+mod truncation;
+
+pub use aca::{aca, AcaOptions, BlockAccess};
+pub use truncation::{truncate_factors, truncated_svd_of_product};
+
+use crate::la::DMatrix;
+
+/// A factored low-rank matrix M ≈ U·Vᵀ (U: m×k, V: n×k).
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    pub u: DMatrix,
+    pub v: DMatrix,
+}
+
+impl LowRank {
+    pub fn rank(&self) -> usize {
+        self.u.ncols()
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.u.nrows()
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.v.nrows()
+    }
+
+    /// Dense reconstruction (tests / small blocks only).
+    pub fn to_dense(&self) -> DMatrix {
+        crate::la::matmul(&self.u, crate::la::Trans::No, &self.v, crate::la::Trans::Yes)
+    }
+
+    /// Bytes in FP64 representation.
+    pub fn byte_size(&self) -> usize {
+        self.u.byte_size() + self.v.byte_size()
+    }
+}

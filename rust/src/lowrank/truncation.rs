@@ -1,0 +1,77 @@
+//! SVD-based recompression of factored low-rank matrices.
+
+use super::aca::AcaOptions;
+use super::LowRank;
+use crate::la::{svd_of_product, Svd};
+
+/// Recompress U·Vᵀ via QR+SVD to the accuracy / rank in `opts`.
+/// The singular values are folded into V (U keeps orthonormal columns) so the
+/// VALR compressor can later recover them from the column norms of V — but we
+/// also return them explicitly through [`truncated_svd_of_product`] where
+/// needed.
+pub fn truncate_factors(lr: LowRank, opts: &AcaOptions) -> LowRank {
+    if lr.rank() == 0 {
+        return lr;
+    }
+    let svd = svd_of_product(&lr.u, &lr.v);
+    let k = match opts.fixed_rank {
+        Some(k) => k.min(svd.s.len()),
+        None => svd.rank(opts.eps),
+    }
+    .max(1);
+    let t = svd.truncate(k);
+    let mut v = t.v;
+    for (j, &s) in t.s.iter().enumerate() {
+        for x in v.col_mut(j) {
+            *x *= s;
+        }
+    }
+    LowRank { u: t.u, v }
+}
+
+/// Truncated SVD of a factored product (exposed for VALR compression which
+/// needs the singular values separately).
+pub fn truncated_svd_of_product(lr: &LowRank, eps: f64) -> Svd {
+    let svd = svd_of_product(&lr.u, &lr.v);
+    let k = svd.rank(eps).max(1).min(svd.s.len().max(1));
+    svd.truncate(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::{matmul, DMatrix, Trans};
+    use crate::util::Rng;
+
+    #[test]
+    fn truncation_reduces_inflated_rank() {
+        // build rank-3 matrix represented with rank 10 factors
+        let mut rng = Rng::new(31);
+        let u3 = DMatrix::random(30, 3, &mut rng);
+        let v3 = DMatrix::random(25, 3, &mut rng);
+        let a = matmul(&u3, Trans::No, &v3, Trans::Yes);
+        // redundant factorization: U = [u3 u3 u3 pad], V matching
+        let mut u = u3.hcat(&u3).hcat(&u3);
+        let mut v = v3.clone();
+        let mut v2 = v3.clone();
+        v2.scale(0.0);
+        v = v.hcat(&v2).hcat(&v2);
+        u.scale(1.0);
+        let lr = LowRank { u, v };
+        let t = truncate_factors(lr, &AcaOptions::with_eps(1e-10));
+        assert!(t.rank() <= 3, "rank {}", t.rank());
+        let mut d = t.to_dense();
+        d.add_scaled(-1.0, &a);
+        assert!(d.fro_norm() < 1e-8 * a.fro_norm());
+    }
+
+    #[test]
+    fn svd_of_product_has_descending_values() {
+        let mut rng = Rng::new(32);
+        let lr = LowRank { u: DMatrix::random(20, 6, &mut rng), v: DMatrix::random(18, 6, &mut rng) };
+        let svd = truncated_svd_of_product(&lr, 1e-14);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+}

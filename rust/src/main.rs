@@ -1,0 +1,264 @@
+//! hmatc CLI — build, compress, multiply and serve hierarchical matrices.
+//!
+//! ```text
+//! hmatc info
+//! hmatc build   --level 4 --eps 1e-6 [--fmt h|uh|h2] [--codec aflp|fpx] [--compress]
+//! hmatc mvm     --level 4 --eps 1e-6 --fmt h2 --algo "row wise" [--compress --codec aflp]
+//! hmatc serve   --level 4 --eps 1e-6 --requests 256 --batch 8
+//! hmatc solve   --level 3 --eps 1e-6 [--compress]
+//! hmatc roofline
+//! ```
+
+use hmatc::bench::{bench_fn, measure_peak_bandwidth};
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::coordinator::{BatchPolicy, MvmServer};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::lowrank::AcaOptions;
+use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::solver::cg;
+use hmatc::util::args::Args;
+use hmatc::util::{fmt_bytes, fmt_secs, Rng, Timer};
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => info(),
+        "build" => build_cmd(&args),
+        "mvm" => mvm_cmd(&args),
+        "serve" => serve_cmd(&args),
+        "solve" => solve_cmd(&args),
+        "roofline" => roofline_cmd(),
+        other => {
+            eprintln!("unknown command '{other}'. Commands: info build mvm serve solve roofline");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() {
+    println!("hmatc — compressed hierarchical matrix formats (H / UH / H²)");
+    println!("threads: {}", hmatc::par::num_threads() + 1);
+    #[cfg(feature = "pjrt")]
+    {
+        match hmatc::runtime::PjrtEngine::new(hmatc::runtime::DEFAULT_ARTIFACTS_DIR) {
+            Ok(e) => println!("pjrt: available ({})", e.platform()),
+            Err(e) => println!("pjrt: unavailable ({e})"),
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt: disabled at build time");
+}
+
+struct Problem {
+    gen: LaplaceSlp,
+    bt: Arc<BlockTree>,
+}
+
+fn problem(args: &Args) -> Problem {
+    let level = args.num_or("level", 3usize);
+    let nmin = args.num_or("nmin", 64usize);
+    let eta = args.num_or("eta", 2.0f64);
+    let t = Timer::start();
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), nmin));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(eta)));
+    println!("geometry: n = {} triangles (icosphere level {level}), setup {}", gen.len(), fmt_secs(t.elapsed()));
+    Problem { gen, bt }
+}
+
+fn build_h(args: &Args, p: &Problem) -> HMatrix {
+    let eps = args.num_or("eps", 1e-6f64);
+    let t = Timer::start();
+    let h = HMatrix::build(&p.bt, &p.gen, &AcaOptions::with_eps(eps));
+    let st = h.stats();
+    println!(
+        "H-matrix: eps = {eps:.0e}, built in {}, {} ({:.1} B/dof), {} dense / {} low-rank blocks, avg rank {:.1}",
+        fmt_secs(t.elapsed()),
+        fmt_bytes(h.byte_size()),
+        h.bytes_per_dof(),
+        st.n_dense,
+        st.n_lowrank,
+        st.avg_rank()
+    );
+    h
+}
+
+fn cfg_from(args: &Args) -> CompressionConfig {
+    let codec: Codec = args.str_or("codec", "aflp").parse().unwrap_or(Codec::Aflp);
+    let eps = args.num_or("eps", 1e-6f64);
+    CompressionConfig { codec, eps, valr: !args.flag("no-valr") }
+}
+
+fn build_cmd(args: &Args) {
+    let p = problem(args);
+    let h = build_h(args, &p);
+    let eps = args.num_or("eps", 1e-6f64);
+    let fmt = args.str_or("fmt", "h");
+    let compress = args.flag("compress");
+    let cfg = cfg_from(args);
+    match fmt.as_str() {
+        "h" => {
+            let mut h = h;
+            if compress {
+                let t = Timer::start();
+                h.compress(&cfg);
+                println!("compressed ({}): {} ({:.1} B/dof) in {}", cfg.codec.name(), fmt_bytes(h.byte_size()), h.bytes_per_dof(), fmt_secs(t.elapsed()));
+            }
+        }
+        "uh" => {
+            let t = Timer::start();
+            let mut uh = hmatc::uniform::build_from_h(&h, eps, hmatc::uniform::CouplingKind::Combined);
+            println!("UH-matrix: built in {}, {} ({:.1} B/dof)", fmt_secs(t.elapsed()), fmt_bytes(uh.byte_size()), uh.bytes_per_dof());
+            if compress {
+                uh.compress(&cfg);
+                println!("compressed ({}): {} ({:.1} B/dof)", cfg.codec.name(), fmt_bytes(uh.byte_size()), uh.bytes_per_dof());
+            }
+        }
+        "h2" => {
+            let t = Timer::start();
+            let mut h2 = hmatc::h2::build_from_h(&h, eps);
+            println!("H²-matrix: built in {}, {} ({:.1} B/dof)", fmt_secs(t.elapsed()), fmt_bytes(h2.byte_size()), h2.bytes_per_dof());
+            if compress {
+                h2.compress(&cfg);
+                println!("compressed ({}): {} ({:.1} B/dof)", cfg.codec.name(), fmt_bytes(h2.byte_size()), h2.bytes_per_dof());
+            }
+        }
+        other => {
+            eprintln!("unknown format '{other}' (h|uh|h2)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn mvm_cmd(args: &Args) {
+    let p = problem(args);
+    let h = build_h(args, &p);
+    let eps = args.num_or("eps", 1e-6f64);
+    let fmt = args.str_or("fmt", "h");
+    let compress = args.flag("compress");
+    let cfg = cfg_from(args);
+    let n = h.nrows();
+    let mut rng = Rng::new(7);
+    let x = rng.vector(n);
+    let mut y = vec![0.0; n];
+
+    let report = |name: &str, bytes: usize, median: f64| {
+        println!("mvm[{name}]: median {} | {:.2} GB/s effective", fmt_secs(median), bytes as f64 / median / 1e9);
+    };
+
+    match fmt.as_str() {
+        "h" => {
+            let mut h = h;
+            if compress {
+                h.compress(&cfg);
+            }
+            let algo_name = args.str_or("algo", "cluster lists");
+            let algo = MvmAlgorithm::all().into_iter().find(|a| a.name() == algo_name).unwrap_or(MvmAlgorithm::ClusterLists);
+            let r = bench_fn(2, 7, 0.05, || hmatc::mvm::mvm(1.0, &h, &x, &mut y, algo));
+            report(algo.name(), h.byte_size(), r.median);
+        }
+        "uh" => {
+            let mut uh = hmatc::uniform::build_from_h(&h, eps, hmatc::uniform::CouplingKind::Combined);
+            if compress {
+                uh.compress(&cfg);
+            }
+            let algo_name = args.str_or("algo", "row wise");
+            let algo = UniMvmAlgorithm::all().into_iter().find(|a| a.name() == algo_name).unwrap_or(UniMvmAlgorithm::RowWise);
+            let r = bench_fn(2, 7, 0.05, || hmatc::mvm::uniform_mvm(1.0, &uh, &x, &mut y, algo));
+            report(algo.name(), uh.byte_size(), r.median);
+        }
+        "h2" => {
+            let mut h2 = hmatc::h2::build_from_h(&h, eps);
+            if compress {
+                h2.compress(&cfg);
+            }
+            let algo_name = args.str_or("algo", "row wise");
+            let algo = H2MvmAlgorithm::all().into_iter().find(|a| a.name() == algo_name).unwrap_or(H2MvmAlgorithm::RowWise);
+            let r = bench_fn(2, 7, 0.05, || hmatc::mvm::h2_mvm(1.0, &h2, &x, &mut y, algo));
+            report(algo.name(), h2.byte_size(), r.median);
+        }
+        other => {
+            eprintln!("unknown format '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve_cmd(args: &Args) {
+    let p = problem(args);
+    let mut h = build_h(args, &p);
+    if args.flag("compress") {
+        h.compress(&cfg_from(args));
+        println!("compressed: {}", fmt_bytes(h.byte_size()));
+    }
+    let h = Arc::new(h);
+    let nreq = args.num_or("requests", 256usize);
+    let batch = args.num_or("batch", 8usize);
+    let server = Arc::new(MvmServer::start(
+        h.clone(),
+        BatchPolicy { max_batch: batch, linger: std::time::Duration::from_micros(args.num_or("linger-us", 200u64)) },
+    ));
+    let n = h.nrows();
+    let t = Timer::start();
+    // closed-loop clients from a few threads
+    let nclients = 4usize;
+    std::thread::scope(|s| {
+        for c in 0..nclients {
+            let server = server.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(1000 + c as u64);
+                for _ in 0..nreq / nclients {
+                    let x = rng.vector(n);
+                    let _ = server.call(x);
+                }
+            });
+        }
+    });
+    let wall = t.elapsed();
+    let m = server.metrics.snapshot();
+    println!(
+        "served {} requests in {} ({:.1} req/s) | batches: {} (avg {:.2}) | p50 {} p99 {} | effective {:.2} GB/s",
+        m.requests,
+        fmt_secs(wall),
+        m.requests as f64 / wall,
+        m.batches,
+        m.avg_batch,
+        fmt_secs(m.p50_latency),
+        fmt_secs(m.p99_latency),
+        m.effective_gbs
+    );
+}
+
+fn solve_cmd(args: &Args) {
+    let p = problem(args);
+    let mut h = build_h(args, &p);
+    if args.flag("compress") {
+        h.compress(&cfg_from(args));
+        println!("compressed: {}", fmt_bytes(h.byte_size()));
+    }
+    let n = h.nrows();
+    let op = (n, move |x: &[f64], y: &mut [f64]| hmatc::mvm::mvm(1.0, &h, x, y, MvmAlgorithm::ClusterLists));
+    let mut rng = Rng::new(3);
+    let b = rng.vector(n);
+    let (x, stats) = cg(&op, &b, args.num_or("tol", 1e-8f64), args.num_or("max-iter", 500usize));
+    println!(
+        "CG: {} iterations, residual {:.2e}, {} ({})",
+        stats.iterations,
+        stats.residual,
+        fmt_secs(stats.seconds),
+        if stats.converged { "converged" } else { "NOT converged" }
+    );
+    let _ = x;
+}
+
+fn roofline_cmd() {
+    println!("measuring peak memory bandwidth (STREAM triad)…");
+    let bw = measure_peak_bandwidth();
+    println!("peak bandwidth ≈ {bw:.2} GB/s on {} threads", hmatc::par::num_threads() + 1);
+}

@@ -1,0 +1,106 @@
+//! Adjoint product y += α·Mᵀ·x (Remark 3.2): the collision-free traversal of
+//! Algorithm 3 applied to the *column* cluster tree — block columns play the
+//! role of block rows, every leaf kernel runs transposed.
+
+use super::kernels::apply_block_transposed;
+use super::{SharedVec, SPAWN_LEVELS};
+use crate::hmatrix::HMatrix;
+use crate::par::ThreadPool;
+
+/// y += alpha · Mᵀ · x, collision free over block columns.
+pub fn mvm_transposed(alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), m.nrows());
+    assert_eq!(y.len(), m.ncols());
+    let yy = SharedVec::new(y);
+    let pool = ThreadPool::global();
+    pool.scope(|s| rec(s, alpha, m, x, m.bt.col_ct.root(), yy, 0));
+}
+
+fn rec<'e>(s: &crate::par::Scope<'e>, alpha: f64, m: &'e HMatrix, x: &'e [f64], sigma: usize, y: SharedVec, depth: usize) {
+    let bt = &m.bt;
+    let ct = &bt.col_ct;
+    let cr = ct.node(sigma).range();
+    // SAFETY: same traversal invariant as Algorithm 3, over block columns.
+    let yt = unsafe { y.range_mut(cr) };
+    for &b in &bt.col_blocks[sigma] {
+        let nd = bt.node(b);
+        let rr = bt.row_ct.node(nd.row).range();
+        let blk = m.blocks[b].as_ref().expect("missing leaf");
+        apply_block_transposed(alpha, blk, &x[rr], yt);
+    }
+    for &c in &ct.node(sigma).children {
+        if depth < SPAWN_LEVELS {
+            s.spawn(move |s2| rec(s2, alpha, m, x, c, y, depth + 1));
+        } else {
+            rec(s, alpha, m, x, c, y, depth + 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+    use crate::compress::CompressionConfig;
+    use crate::geometry::icosphere;
+    use crate::kernelfn::{LaplaceSlp, MatrixGen};
+    use crate::lowrank::AcaOptions;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn problem() -> HMatrix {
+        let geom = icosphere(2);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-8))
+    }
+
+    #[test]
+    fn adjoint_matches_dense_transpose() {
+        let h = problem();
+        let d = h.to_dense();
+        let mut rng = Rng::new(171);
+        let x = rng.vector(h.nrows());
+        let mut y = vec![0.0; h.ncols()];
+        mvm_transposed(1.5, &h, &x, &mut y);
+        let dt = d.transpose();
+        let mut want = vec![0.0; h.ncols()];
+        crate::la::gemv(1.5, &dt, &x, &mut want);
+        for i in 0..y.len() {
+            assert!((y[i] - want[i]).abs() < 1e-10, "i={i}");
+        }
+    }
+
+    #[test]
+    fn adjoint_of_symmetric_operator_matches_forward() {
+        // Laplace SLP with symmetric quadrature: Mᵀ ≈ M
+        let h = problem();
+        let mut rng = Rng::new(172);
+        let x = rng.vector(h.nrows());
+        let mut y1 = vec![0.0; h.nrows()];
+        let mut y2 = vec![0.0; h.nrows()];
+        crate::mvm::mvm(1.0, &h, &x, &mut y1, crate::mvm::MvmAlgorithm::Seq);
+        mvm_transposed(1.0, &h, &x, &mut y2);
+        let n1: f64 = y1.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let d: f64 = y1.iter().zip(&y2).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        // symmetric up to the low-rank approximation error
+        assert!(d < 1e-5 * n1, "d={d} n={n1}");
+    }
+
+    #[test]
+    fn adjoint_works_compressed() {
+        let h = problem();
+        let mut hz = h.clone();
+        hz.compress(&CompressionConfig::aflp(1e-10));
+        let mut rng = Rng::new(173);
+        let x = rng.vector(h.nrows());
+        let mut y1 = vec![0.0; h.ncols()];
+        let mut y2 = vec![0.0; h.ncols()];
+        mvm_transposed(1.0, &h, &x, &mut y1);
+        mvm_transposed(1.0, &hz, &x, &mut y2);
+        let n1: f64 = y1.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let d: f64 = y1.iter().zip(&y2).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(d < 1e-6 * n1);
+    }
+}

@@ -1,0 +1,289 @@
+//! H²-matrix MVM (paper §3.3, Algorithms 6 & 7, Fig. 6 right).
+
+use super::{update_chunks, SharedSlots, SharedVec, SPAWN_LEVELS};
+use crate::h2::H2Matrix;
+use crate::la::blas;
+use crate::par::ThreadPool;
+use crate::uniform::UniBlock;
+use std::sync::Mutex;
+
+/// Algorithm 6: forward transformation with nested bases — strict
+/// leaves-to-root dependency (Remark 3.4), realised level-wise bottom-up
+/// with parallelism inside each level.
+fn forward(m: &H2Matrix, x: &[f64]) -> Vec<Vec<f64>> {
+    let ct = &m.bt.col_ct;
+    let nb = &m.col_basis;
+    let mut s: Vec<Vec<f64>> = (0..ct.nodes.len()).map(|i| vec![0.0; nb.rank[i]]).collect();
+    let pool = ThreadPool::global();
+    for level in (0..ct.levels.len()).rev() {
+        let slots = SharedSlots::new(&mut s);
+        pool.scope(|sc| {
+            for &sigma in &ct.levels[level] {
+                if nb.rank[sigma] == 0 {
+                    continue;
+                }
+                let slots = &slots;
+                sc.spawn(move |_| {
+                    let nd = ct.node(sigma);
+                    // SAFETY: one task per slot; children slots belong to a
+                    // deeper level, already complete and only read here.
+                    let dst = unsafe { slots.get_mut(sigma) };
+                    if nd.is_leaf() {
+                        nb.leaf_apply_transposed(sigma, &x[nd.range()], dst);
+                    } else {
+                        for &c in &nd.children {
+                            if nb.rank[c] == 0 {
+                                continue;
+                            }
+                            let sc_child = unsafe { &*(slots.get_mut(c) as *const Vec<f64>) };
+                            if let Some(e) = m.col_basis.transfer[c].as_ref() {
+                                e.apply_transposed_add(sc_child, dst);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+    s
+}
+
+/// Algorithm 7: combined coupling application and backward transformation,
+/// collision free by root-to-leaf traversal; y is written only through
+/// exclusive cluster ranges.
+pub fn row_wise(alpha: f64, m: &H2Matrix, x: &[f64], y: &mut [f64]) {
+    let s = forward(m, x);
+    let ct = &m.bt.row_ct;
+    let mut t: Vec<Vec<f64>> = (0..ct.nodes.len()).map(|i| vec![0.0; m.row_basis.rank[i]]).collect();
+    let yy = SharedVec::new(y);
+    let tslots = SharedSlots::new(&mut t);
+    let pool = ThreadPool::global();
+    pool.scope(|sc| rec_row_wise(sc, alpha, m, x, &s, &tslots, ct.root(), yy, 0));
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rec_row_wise<'e>(
+    sc: &crate::par::Scope<'e>,
+    alpha: f64,
+    m: &'e H2Matrix,
+    x: &'e [f64],
+    s: &'e [Vec<f64>],
+    t: &'e SharedSlots<Vec<f64>>,
+    tau: usize,
+    y: SharedVec,
+    depth: usize,
+) {
+    let bt = &m.bt;
+    let ct = &bt.row_ct;
+    let nd = ct.node(tau);
+    let rr = nd.range();
+    // SAFETY: τ's slot is written by the parent before this task ran and by
+    // this task only from here on.
+    let t_tau = unsafe { t.get_mut(tau) };
+    // coupling accumulation t_τ += S_b s_σ
+    for &b in &bt.row_blocks[tau] {
+        if let Some(UniBlock::Coupling(c)) = m.blocks[b].as_ref() {
+            c.apply_add(&s[bt.node(b).col], t_tau);
+        }
+    }
+    let has_dense = bt.row_blocks[tau].iter().any(|&b| matches!(m.blocks[b].as_ref(), Some(UniBlock::Dense(_)) | Some(UniBlock::ZDense(_))));
+
+    if nd.is_leaf() {
+        if t_tau.iter().any(|&v| v != 0.0) || has_dense {
+            // SAFETY: leaf ranges are disjoint; ancestors wrote y|τ only
+            // through dense blocks before spawning children.
+            let yt = unsafe { y.range_mut(rr) };
+            let tv: Vec<f64> = t_tau.iter().map(|&v| alpha * v).collect();
+            m.row_basis.leaf_apply_add(tau, &tv, yt);
+            if has_dense {
+                dense_blocks(alpha, m, tau, x, yt);
+            }
+        }
+    } else {
+        // shift coefficients to the children: t_c += E_c t_τ
+        for &c in &nd.children {
+            if m.row_basis.rank[c] == 0 || m.row_basis.rank[tau] == 0 {
+                continue;
+            }
+            // SAFETY: child slot not yet owned by any task.
+            let t_c = unsafe { t.get_mut(c) };
+            if let Some(e) = m.row_basis.transfer[c].as_ref() {
+                e.apply_add(t_tau, t_c);
+            }
+        }
+        if has_dense {
+            // SAFETY: traversal invariant as in Algorithm 3.
+            let yt = unsafe { y.range_mut(rr) };
+            dense_blocks(alpha, m, tau, x, yt);
+        }
+        for &c in &nd.children {
+            if depth < SPAWN_LEVELS {
+                sc.spawn(move |s2| rec_row_wise(s2, alpha, m, x, s, t, c, y, depth + 1));
+            } else {
+                rec_row_wise(sc, alpha, m, x, s, t, c, y, depth + 1);
+            }
+        }
+    }
+}
+
+fn dense_blocks(alpha: f64, m: &H2Matrix, tau: usize, x: &[f64], yt: &mut [f64]) {
+    let bt = &m.bt;
+    for &b in &bt.row_blocks[tau] {
+        let cr = bt.col_ct.node(bt.node(b).col).range();
+        match m.blocks[b].as_ref() {
+            Some(UniBlock::Dense(d)) => blas::gemv(alpha, d, &x[cr], yt),
+            Some(UniBlock::ZDense(z)) => super::kernels::zgemv_blocked(alpha, z, &x[cr], yt),
+            _ => {}
+        }
+    }
+}
+
+/// Mutex variant: coefficient updates of Eq. (5) guarded by a mutex per t_τ,
+/// followed by a top-down transfer pass and chunk-guarded dense updates.
+pub fn mutex(alpha: f64, m: &H2Matrix, x: &[f64], y: &mut [f64]) {
+    let s = forward(m, x);
+    let bt = &m.bt;
+    let ct = &bt.row_ct;
+    let pool = ThreadPool::global();
+
+    // phase 1: parallel over low-rank leaves, mutex-guarded t accumulation;
+    // dense leaves via chunk updates
+    let t: Vec<Mutex<Vec<f64>>> = (0..ct.nodes.len()).map(|i| Mutex::new(vec![0.0; m.row_basis.rank[i]])).collect();
+    let locks: Vec<Mutex<()>> = (0..ct.nodes.len()).map(|_| Mutex::new(())).collect();
+    let yy = SharedVec::new(y);
+    pool.scope(|sc| {
+        for &leaf in &bt.leaves {
+            let t = &t;
+            let locks = &locks;
+            let s = &s;
+            let yy = yy;
+            sc.spawn(move |_| {
+                let nd = bt.node(leaf);
+                match m.blocks[leaf].as_ref() {
+                    Some(UniBlock::Coupling(c)) => {
+                        let mut guard = t[nd.row].lock().unwrap();
+                        c.apply_add(&s[nd.col], &mut guard);
+                    }
+                    Some(UniBlock::Dense(d)) => {
+                        let cr = bt.col_ct.node(nd.col).range();
+                        let rr = bt.row_ct.node(nd.row).range();
+                        let mut tmp = vec![0.0; rr.len()];
+                        blas::gemv(alpha, d, &x[cr], &mut tmp);
+                        update_chunks(ct, nd.row, rr.start, &tmp, &yy, locks);
+                    }
+                    Some(UniBlock::ZDense(z)) => {
+                        let cr = bt.col_ct.node(nd.col).range();
+                        let rr = bt.row_ct.node(nd.row).range();
+                        let mut tmp = vec![0.0; rr.len()];
+                        super::kernels::zgemv_blocked(alpha, z, &x[cr], &mut tmp);
+                        update_chunks(ct, nd.row, rr.start, &tmp, &yy, locks);
+                    }
+                    _ => {}
+                }
+            });
+        }
+    });
+
+    // phase 2: top-down transfer of coefficients, level by level
+    for level in 0..ct.levels.len() {
+        pool.scope(|sc| {
+            for &tau in &ct.levels[level] {
+                if m.row_basis.rank[tau] == 0 || ct.node(tau).is_leaf() {
+                    continue;
+                }
+                let t = &t;
+                sc.spawn(move |_| {
+                    let tv = t[tau].lock().unwrap().clone();
+                    if tv.iter().all(|&v| v == 0.0) {
+                        return;
+                    }
+                    for &c in &ct.node(tau).children {
+                        if m.row_basis.rank[c] == 0 {
+                            continue;
+                        }
+                        if let Some(e) = m.row_basis.transfer[c].as_ref() {
+                            let mut guard = t[c].lock().unwrap();
+                            e.apply_add(&tv, &mut guard);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    // phase 3: leaf application (disjoint leaf ranges → collision free)
+    pool.scope(|sc| {
+        for &tau in &ct.leaves {
+            if m.row_basis.rank[tau] == 0 {
+                continue;
+            }
+            let t = &t;
+            let yy = yy;
+            sc.spawn(move |_| {
+                let tv: Vec<f64> = t[tau].lock().unwrap().iter().map(|&v| alpha * v).collect();
+                if tv.iter().all(|&v| v == 0.0) {
+                    return;
+                }
+                // SAFETY: leaf cluster ranges are disjoint.
+                let yt = unsafe { yy.range_mut(ct.node(tau).range()) };
+                m.row_basis.leaf_apply_add(tau, &tv, yt);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+    use crate::geometry::icosphere;
+    use crate::hmatrix::HMatrix;
+    use crate::kernelfn::{LaplaceSlp, MatrixGen};
+    use crate::lowrank::AcaOptions;
+    use crate::mvm::H2MvmAlgorithm;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn problem() -> (H2Matrix, crate::la::DMatrix) {
+        let geom = icosphere(2);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-7));
+        let h2 = crate::h2::build_from_h(&h, 1e-7);
+        let d = h2.to_dense();
+        (h2, d)
+    }
+
+    #[test]
+    fn algorithms_match_dense() {
+        let (h2, d) = problem();
+        let mut rng = Rng::new(131);
+        let x = rng.vector(h2.ncols());
+        let mut y_ref = vec![0.25; h2.nrows()];
+        crate::la::gemv(2.0, &d, &x, &mut y_ref);
+        for algo in H2MvmAlgorithm::all() {
+            let mut y = vec![0.25; h2.nrows()];
+            crate::mvm::h2_mvm(2.0, &h2, &x, &mut y, algo);
+            let err: f64 = y.iter().zip(&y_ref).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-9, "{algo:?} max err {err}");
+        }
+    }
+
+    #[test]
+    fn compressed_h2_mvm_agrees() {
+        let (mut h2, d) = problem();
+        h2.compress(&crate::compress::CompressionConfig::aflp(1e-10));
+        let mut rng = Rng::new(132);
+        let x = rng.vector(h2.ncols());
+        let mut y_ref = vec![0.0; h2.nrows()];
+        crate::la::gemv(1.0, &d, &x, &mut y_ref);
+        let ynorm: f64 = y_ref.iter().map(|v| v * v).sum::<f64>().sqrt();
+        for algo in H2MvmAlgorithm::all() {
+            let mut y = vec![0.0; h2.nrows()];
+            crate::mvm::h2_mvm(1.0, &h2, &x, &mut y, algo);
+            let err: f64 = y.iter().zip(&y_ref).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+            assert!(err < 1e-6 * ynorm, "{algo:?} err {err}");
+        }
+    }
+}

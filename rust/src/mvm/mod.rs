@@ -1,0 +1,220 @@
+//! Matrix-vector multiplication y := α·M·x + y for all hierarchical formats
+//! (paper §3) and their compressed variants (§4.3).
+//!
+//! All vectors are in *internal* (cluster tree) ordering.
+
+pub mod adjoint;
+pub mod h2mvm;
+pub mod hmvm;
+pub mod kernels;
+pub mod multi;
+pub mod unimvm;
+
+pub use kernels::{apply_block, apply_block_multi, apply_block_transposed, zgemv_blocked, zgemv_direct};
+pub use adjoint::mvm_transposed;
+pub use multi::h_mvm_multi;
+
+use crate::h2::H2Matrix;
+use crate::hmatrix::HMatrix;
+use crate::uniform::UniformHMatrix;
+
+/// H-matrix MVM algorithm selector (paper Fig. 6 left).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MvmAlgorithm {
+    /// Sequential reference (Algorithm 1).
+    Seq,
+    /// Task per leaf block, per-chunk mutexes (Algorithm 2, HLIBpro style).
+    Chunks,
+    /// Collision-free root-to-leaf block-row traversal (Algorithm 3).
+    ClusterLists,
+    /// Per-level stacked low-rank factors (Ltaief et al. adaptation).
+    Stacked,
+    /// Thread-local result vectors with a final reduction.
+    ThreadLocal,
+    /// Atomic per-coefficient updates (Ida et al.).
+    Atomic,
+}
+
+impl MvmAlgorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            MvmAlgorithm::Seq => "seq",
+            MvmAlgorithm::Chunks => "chunks",
+            MvmAlgorithm::ClusterLists => "cluster lists",
+            MvmAlgorithm::Stacked => "stacked",
+            MvmAlgorithm::ThreadLocal => "thread local",
+            MvmAlgorithm::Atomic => "atomic",
+        }
+    }
+
+    pub fn all() -> [MvmAlgorithm; 6] {
+        [
+            MvmAlgorithm::Seq,
+            MvmAlgorithm::Chunks,
+            MvmAlgorithm::ClusterLists,
+            MvmAlgorithm::Stacked,
+            MvmAlgorithm::ThreadLocal,
+            MvmAlgorithm::Atomic,
+        ]
+    }
+}
+
+/// Uniform-H MVM algorithm selector (paper Fig. 6 center).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UniMvmAlgorithm {
+    /// Per-block tasks, mutex-guarded coefficient updates.
+    Mutex,
+    /// Algorithm 5: row-wise traversal, collision free.
+    RowWise,
+    /// Separate row/column coupling matrices (Bruyninckx et al.).
+    SepCoupling,
+}
+
+impl UniMvmAlgorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            UniMvmAlgorithm::Mutex => "mutex",
+            UniMvmAlgorithm::RowWise => "row wise",
+            UniMvmAlgorithm::SepCoupling => "sep. coupling",
+        }
+    }
+
+    pub fn all() -> [UniMvmAlgorithm; 3] {
+        [UniMvmAlgorithm::Mutex, UniMvmAlgorithm::RowWise, UniMvmAlgorithm::SepCoupling]
+    }
+}
+
+/// H² MVM algorithm selector (paper Fig. 6 right).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum H2MvmAlgorithm {
+    /// Mutex-guarded coefficient accumulation.
+    Mutex,
+    /// Algorithm 7: combined coupling + backward transform, collision free.
+    RowWise,
+}
+
+impl H2MvmAlgorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            H2MvmAlgorithm::Mutex => "mutex",
+            H2MvmAlgorithm::RowWise => "row wise",
+        }
+    }
+
+    pub fn all() -> [H2MvmAlgorithm; 2] {
+        [H2MvmAlgorithm::Mutex, H2MvmAlgorithm::RowWise]
+    }
+}
+
+/// H-matrix product y += α·M·x.
+pub fn mvm(alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64], algo: MvmAlgorithm) {
+    assert_eq!(x.len(), m.ncols());
+    assert_eq!(y.len(), m.nrows());
+    match algo {
+        MvmAlgorithm::Seq => hmvm::seq(alpha, m, x, y),
+        MvmAlgorithm::Chunks => hmvm::chunks(alpha, m, x, y),
+        MvmAlgorithm::ClusterLists => hmvm::cluster_lists(alpha, m, x, y),
+        MvmAlgorithm::Stacked => hmvm::stacked(alpha, m, x, y),
+        MvmAlgorithm::ThreadLocal => hmvm::thread_local(alpha, m, x, y),
+        MvmAlgorithm::Atomic => hmvm::atomic(alpha, m, x, y),
+    }
+}
+
+/// Uniform-H product y += α·M·x.
+pub fn uniform_mvm(alpha: f64, m: &UniformHMatrix, x: &[f64], y: &mut [f64], algo: UniMvmAlgorithm) {
+    assert_eq!(x.len(), m.ncols());
+    assert_eq!(y.len(), m.nrows());
+    match algo {
+        UniMvmAlgorithm::Mutex => unimvm::mutex(alpha, m, x, y),
+        UniMvmAlgorithm::RowWise => unimvm::row_wise(alpha, m, x, y),
+        UniMvmAlgorithm::SepCoupling => unimvm::sep_coupling(alpha, m, x, y),
+    }
+}
+
+/// H² product y += α·M·x.
+pub fn h2_mvm(alpha: f64, m: &H2Matrix, x: &[f64], y: &mut [f64], algo: H2MvmAlgorithm) {
+    assert_eq!(x.len(), m.ncols());
+    assert_eq!(y.len(), m.nrows());
+    match algo {
+        H2MvmAlgorithm::Mutex => h2mvm::mutex(alpha, m, x, y),
+        H2MvmAlgorithm::RowWise => h2mvm::row_wise(alpha, m, x, y),
+    }
+}
+
+/// Shared mutable vector handle for the collision-free traversals: tasks
+/// write disjoint ranges, the traversal order is the safety argument
+/// (paper §3.1: parents complete their block row before children start, and
+/// same-level clusters are disjoint).
+#[derive(Clone, Copy)]
+pub(crate) struct SharedVec {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for SharedVec {}
+unsafe impl Sync for SharedVec {}
+
+impl SharedVec {
+    pub fn new(v: &mut [f64]) -> SharedVec {
+        SharedVec { ptr: v.as_mut_ptr(), len: v.len() }
+    }
+
+    /// SAFETY: caller must guarantee no concurrent overlapping access.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, r: std::ops::Range<usize>) -> &mut [f64] {
+        debug_assert!(r.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+}
+
+/// Shared slot array: tasks write *distinct* indices of a pre-sized Vec.
+pub(crate) struct SharedSlots<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SharedSlots<T> {}
+unsafe impl<T: Send> Sync for SharedSlots<T> {}
+
+impl<T> SharedSlots<T> {
+    pub fn new(v: &mut [T]) -> SharedSlots<T> {
+        SharedSlots { ptr: v.as_mut_ptr(), len: v.len() }
+    }
+
+    /// SAFETY: caller must guarantee each index is accessed by one task at a
+    /// time.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// Spawn-depth cutoff: below this subtree level the traversals run
+/// sequentially (task granularity control).
+pub(crate) const SPAWN_LEVELS: usize = 6;
+
+/// Chunk-wise scatter of a local block-row result into y (Algorithm 2): one
+/// mutex per *leaf* cluster of the row cluster tree.
+pub(crate) fn update_chunks(
+    ct: &crate::cluster::ClusterTree,
+    tau: usize,
+    t_offset: usize,
+    t: &[f64],
+    y: &SharedVec,
+    locks: &[std::sync::Mutex<()>],
+) {
+    let nd = ct.node(tau);
+    if nd.is_leaf() {
+        let _g = locks[tau].lock().unwrap();
+        // SAFETY: the mutex serializes writers of this chunk; chunks are
+        // disjoint leaf-cluster ranges.
+        let dst = unsafe { y.range_mut(nd.range()) };
+        let src = &t[nd.begin - t_offset..nd.end - t_offset];
+        crate::la::axpy(1.0, src, dst);
+    } else {
+        for &c in &nd.children {
+            update_chunks(ct, c, t_offset, t, y, locks);
+        }
+    }
+}

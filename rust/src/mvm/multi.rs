@@ -1,0 +1,101 @@
+//! Multi-RHS H-matrix product Y += α·M·X — the coordinator's batched path.
+//! Batching b requests into one traversal amortizes every matrix-data load
+//! over b vectors, raising arithmetic intensity by ~b (ablation bench
+//! `ablation_batching`).
+
+use super::kernels::apply_block_multi;
+use super::{SharedVec, SPAWN_LEVELS};
+use crate::hmatrix::HMatrix;
+use crate::la::DMatrix;
+use crate::par::ThreadPool;
+
+/// Y += alpha · M · X with X (ncols × b), Y (nrows × b), cluster-list
+/// traversal (Algorithm 3 generalized to multivectors).
+pub fn h_mvm_multi(alpha: f64, m: &HMatrix, x: &DMatrix, y: &mut DMatrix) {
+    assert_eq!(x.nrows(), m.ncols());
+    assert_eq!(y.nrows(), m.nrows());
+    assert_eq!(x.ncols(), y.ncols());
+    let b = x.ncols();
+    let n = y.nrows();
+    let yy = SharedVec::new(y.data_mut());
+    let pool = ThreadPool::global();
+    pool.scope(|s| rec(s, alpha, m, x, m.bt.row_ct.root(), yy, n, b, 0));
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rec<'e>(
+    s: &crate::par::Scope<'e>,
+    alpha: f64,
+    m: &'e HMatrix,
+    x: &'e DMatrix,
+    tau: usize,
+    y: SharedVec,
+    ylen: usize,
+    nrhs: usize,
+    depth: usize,
+) {
+    let bt = &m.bt;
+    let ct = &bt.row_ct;
+    let rr = ct.node(tau).range();
+    if !bt.row_blocks[tau].is_empty() {
+        // local multivector views: copy the row stripe, multiply, scatter back
+        // (stripe copy keeps the kernels dense-column based)
+        let mut ystripe = DMatrix::zeros(rr.len(), nrhs);
+        for c in 0..nrhs {
+            // SAFETY: traversal invariant (same as single-RHS Algorithm 3).
+            let ycol = unsafe { y.range_mut(c * ylen + rr.start..c * ylen + rr.end) };
+            ystripe.col_mut(c).copy_from_slice(ycol);
+        }
+        for &bid in &bt.row_blocks[tau] {
+            let nd = bt.node(bid);
+            let cr = bt.col_ct.node(nd.col).range();
+            let blk = m.blocks[bid].as_ref().expect("missing leaf");
+            let xstripe = x.sub(cr, 0..nrhs);
+            apply_block_multi(alpha, blk, &xstripe, &mut ystripe);
+        }
+        for c in 0..nrhs {
+            let ycol = unsafe { y.range_mut(c * ylen + rr.start..c * ylen + rr.end) };
+            ycol.copy_from_slice(ystripe.col(c));
+        }
+    }
+    for &child in &ct.node(tau).children {
+        if depth < SPAWN_LEVELS {
+            s.spawn(move |s2| rec(s2, alpha, m, x, child, y, ylen, nrhs, depth + 1));
+        } else {
+            rec(s, alpha, m, x, child, y, ylen, nrhs, depth + 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+    use crate::geometry::icosphere;
+    use crate::kernelfn::{LaplaceSlp, MatrixGen};
+    use crate::lowrank::AcaOptions;
+    use crate::mvm::MvmAlgorithm;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn multi_matches_repeated_single() {
+        let geom = icosphere(1);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), 8));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-8));
+        let mut rng = Rng::new(141);
+        let nrhs = 5;
+        let x = DMatrix::random(h.ncols(), nrhs, &mut rng);
+        let mut y = DMatrix::zeros(h.nrows(), nrhs);
+        h_mvm_multi(1.5, &h, &x, &mut y);
+        for c in 0..nrhs {
+            let mut yc = vec![0.0; h.nrows()];
+            crate::mvm::mvm(1.5, &h, x.col(c), &mut yc, MvmAlgorithm::Seq);
+            for i in 0..h.nrows() {
+                assert!((y[(i, c)] - yc[i]).abs() < 1e-10, "col {c} row {i}");
+            }
+        }
+    }
+}

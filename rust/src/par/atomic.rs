@@ -1,0 +1,51 @@
+//! Atomic f64 accumulation, used by the "atomic updates" MVM variant
+//! (Ida et al. [21] in the paper).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Add `val` to the f64 stored in `slot` with a CAS loop.
+#[inline]
+pub fn atomic_add_f64(slot: &AtomicU64, val: f64) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    loop {
+        let new = f64::from_bits(cur) + val;
+        match slot.compare_exchange_weak(cur, new.to_bits(), Ordering::AcqRel, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// Reinterpret an exclusive f64 slice as atomic words for concurrent
+/// accumulation. Sound: `AtomicU64` has the same size/alignment as `u64`/`f64`
+/// and the exclusive borrow guarantees no other non-atomic access.
+pub fn as_atomic_f64(xs: &mut [f64]) -> &[AtomicU64] {
+    unsafe { std::slice::from_raw_parts(xs.as_mut_ptr() as *const AtomicU64, xs.len()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::pool::parallel_for;
+
+    #[test]
+    fn atomic_add_basic() {
+        let slot = AtomicU64::new(1.5f64.to_bits());
+        atomic_add_f64(&slot, 2.25);
+        assert_eq!(f64::from_bits(slot.load(Ordering::Relaxed)), 3.75);
+    }
+
+    #[test]
+    fn concurrent_accumulation_is_exact_for_integers() {
+        let mut y = vec![0.0f64; 8];
+        {
+            let ay = as_atomic_f64(&mut y);
+            parallel_for(0..10_000, 64, |i| {
+                atomic_add_f64(&ay[i % 8], 1.0);
+            });
+        }
+        for v in &y {
+            assert_eq!(*v, 1250.0);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Fork-join task parallelism substrate.
+//!
+//! The sandbox has no rayon/TBB, and the paper's parallel MVM algorithms
+//! (Alg. 3, 5, 7) are precisely *task scheduling* algorithms, so the pool is a
+//! first-class substrate here: a fixed set of workers, a shared injector
+//! queue, and a help-first scoped fork-join API (waiters execute queued tasks
+//! instead of blocking, so recursive spawning can never deadlock).
+
+pub mod atomic;
+pub mod pool;
+
+pub use atomic::{as_atomic_f64, atomic_add_f64};
+pub use pool::{parallel_for, Scope, ThreadPool};
+
+/// Number of worker threads used by the global pool.
+pub fn num_threads() -> usize {
+    ThreadPool::global().num_threads()
+}

@@ -1,0 +1,341 @@
+//! Work-sharing fork-join thread pool with a scoped spawn API.
+//!
+//! Design: one global injector deque (mutex + condvar) served by N workers.
+//! [`ThreadPool::scope`] provides structured parallelism: tasks may borrow
+//! from the enclosing stack frame because `scope` does not return until every
+//! spawned task has completed. While waiting, the scoping thread *helps*:
+//! it pops and runs queued tasks, so even `ThreadPool::new(0)` makes progress
+//! and recursive spawns cannot deadlock.
+//!
+//! Granularity guidance: tasks should be ≥ a few µs (one H-matrix block row
+//! easily qualifies); the queue lock is not a bottleneck below ~10⁶ tasks/s.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A fixed-size worker pool.
+pub struct ThreadPool {
+    shared: std::sync::Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    nthreads: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` workers (0 is allowed: all work is done by
+    /// scoping threads).
+    pub fn new(n: usize) -> Self {
+        let shared = std::sync::Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let sh = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("hmatc-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { shared, workers: Mutex::new(workers), nthreads: n }
+    }
+
+    /// The process-wide pool. Worker count from `HMATC_THREADS` or the number
+    /// of available cores minus one (the scoping thread helps).
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::env::var("HMATC_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4));
+            ThreadPool::new(n.saturating_sub(1))
+        })
+    }
+
+    /// Number of worker threads (excluding helping scope threads).
+    pub fn num_threads(&self) -> usize {
+        self.nthreads
+    }
+
+    fn push_task(&self, t: Task) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(t);
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<Task> {
+        self.shared.queue.lock().unwrap().pop_front()
+    }
+
+    /// Structured fork-join: run `f` with a [`Scope`] handle; returns after
+    /// all tasks spawned into the scope (transitively) have finished.
+    /// Panics in tasks are surfaced as a panic here.
+    pub fn scope<'env, F, R>(&'env self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'env>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            pending: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            _env: std::marker::PhantomData,
+        };
+        let r = f(&scope);
+        scope.wait();
+        if scope.panicked.load(Ordering::Acquire) {
+            panic!("a task spawned in ThreadPool::scope panicked");
+        }
+        r
+    }
+
+    /// Run two closures potentially in parallel, returning both results.
+    pub fn join<RA, RB>(&self, a: impl FnOnce() -> RA + Send, b: impl FnOnce() -> RB + Send) -> (RA, RB)
+    where
+        RA: Send,
+        RB: Send,
+    {
+        let mut rb: Option<RB> = None;
+        let ra = self.scope(|s| {
+            s.spawn(|_| rb = Some(b()));
+            a()
+        });
+        (ra, rb.expect("join: task b did not run"))
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let task = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if sh.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        match task {
+            Some(t) => t(),
+            None => return,
+        }
+    }
+}
+
+/// Handle for spawning borrowing tasks inside [`ThreadPool::scope`].
+pub struct Scope<'env> {
+    pool: &'env ThreadPool,
+    pending: AtomicUsize,
+    panicked: AtomicBool,
+    _env: std::marker::PhantomData<fn(&'env ()) -> &'env ()>,
+}
+
+/// Raw pointer wrapper so the task closure (which must be `Send`) can carry
+/// the scope address across threads. Safe because `scope` outlives all tasks.
+struct SendPtr<T>(*const T);
+unsafe impl<T: Sync> Send for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Method (not field) access so closures capture the whole wrapper —
+    /// capturing the raw-pointer *field* would lose the `Send` impl.
+    fn get(&self) -> *const T {
+        self.0
+    }
+}
+
+impl<'env> Scope<'env> {
+    /// Spawn a task that may borrow the environment of the scope and may
+    /// itself spawn further tasks into the same scope.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce(&Scope<'env>) + Send + 'env,
+    {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+        let ptr = SendPtr(self as *const Scope<'env>);
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            // SAFETY: `scope` blocks in `wait()` until pending == 0, so the
+            // Scope outlives this task; the decrement below is the last
+            // access this task makes to the scope.
+            let scope: &Scope<'env> = unsafe { &*ptr.get() };
+            let result = catch_unwind(AssertUnwindSafe(|| f(scope)));
+            if result.is_err() {
+                scope.panicked.store(true, Ordering::Release);
+            }
+            scope.pending.fetch_sub(1, Ordering::AcqRel);
+        });
+        // SAFETY: lifetime erasure to 'static. Sound because `wait()` ensures
+        // the task has finished before any 'env borrow expires.
+        let task: Task = unsafe { std::mem::transmute(task) };
+        self.pool.push_task(task);
+    }
+
+    /// Help-first wait: execute queued tasks until this scope drains.
+    fn wait(&self) {
+        let mut idle_spins = 0u32;
+        while self.pending.load(Ordering::Acquire) > 0 {
+            if let Some(t) = self.pool.try_pop() {
+                t();
+                idle_spins = 0;
+            } else {
+                idle_spins += 1;
+                if idle_spins < 64 {
+                    std::thread::yield_now();
+                } else {
+                    // Tasks are in flight on workers; nap briefly.
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+            }
+        }
+    }
+}
+
+/// Parallel loop over `range` with grain size `grain`, executed on the global
+/// pool. `f` is called once per index, in unspecified order.
+pub fn parallel_for<F>(range: std::ops::Range<usize>, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let grain = grain.max(1);
+    let pool = ThreadPool::global();
+    pool.scope(|s| split_range(s, range, grain, &f));
+}
+
+fn split_range<'env, F>(s: &Scope<'env>, range: std::ops::Range<usize>, grain: usize, f: &'env F)
+where
+    F: Fn(usize) + Sync,
+{
+    let len = range.end.saturating_sub(range.start);
+    if len <= grain {
+        for i in range {
+            f(i);
+        }
+    } else {
+        let mid = range.start + len / 2;
+        let right = mid..range.end;
+        s.spawn(move |s2| split_range(s2, right, grain, f));
+        split_range(s, range.start..mid, grain, f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scope_runs_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..100 {
+                s.spawn(|_| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn zero_worker_pool_progresses() {
+        let pool = ThreadPool::new(0);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..10 {
+                s.spawn(|_| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn recursive_spawn() {
+        let pool = ThreadPool::new(2);
+        let counter = AtomicUsize::new(0);
+        fn rec<'e>(s: &Scope<'e>, depth: usize, c: &'e AtomicUsize) {
+            c.fetch_add(1, Ordering::Relaxed);
+            if depth > 0 {
+                s.spawn(move |s2| rec(s2, depth - 1, c));
+                s.spawn(move |s2| rec(s2, depth - 1, c));
+            }
+        }
+        pool.scope(|s| rec(s, 6, &counter));
+        assert_eq!(counter.load(Ordering::Relaxed), (1 << 7) - 1);
+    }
+
+    #[test]
+    fn borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let mut out = vec![0usize; 64];
+        {
+            let chunks: Vec<&mut [usize]> = out.chunks_mut(8).collect();
+            pool.scope(|s| {
+                for (i, chunk) in chunks.into_iter().enumerate() {
+                    s.spawn(move |_| {
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            *v = i * 8 + j;
+                        }
+                    });
+                }
+            });
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+
+    #[test]
+    fn join_returns_both() {
+        let pool = ThreadPool::new(2);
+        let (a, b) = pool.join(|| 1 + 1, || "x".to_string());
+        assert_eq!(a, 2);
+        assert_eq!(b, "x");
+    }
+
+    #[test]
+    fn parallel_for_covers_range() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(0..1000, 16, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn panic_propagates() {
+        let pool = ThreadPool::new(2);
+        pool.scope(|s| {
+            s.spawn(|_| panic!("boom"));
+        });
+    }
+}

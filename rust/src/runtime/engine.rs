@@ -1,0 +1,108 @@
+//! PJRT CPU client wrapper: HLO text → compile → execute.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory produced by `make artifacts`.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Loads `*.hlo.txt` artifacts and executes them on the PJRT CPU client.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine rooted at an artifact directory.
+    pub fn new(dir: &str) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtEngine { client, exes: HashMap::new(), dir: PathBuf::from(dir) })
+    }
+
+    /// Platform string of the underlying client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Whether an artifact file exists.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.path_of(name).exists()
+    }
+
+    fn path_of(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load + compile an artifact (cached by name).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.path_of(name);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile artifact '{name}'"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact on f32 input buffers with shapes.
+    /// Returns the flattened f32 outputs (the artifact returns a tuple; see
+    /// gen_hlo.py — lowered with `return_tuple=True`).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let exe = self.exes.get(name).expect("just loaded");
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims).context("reshape input literal")?;
+            lits.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&lits).context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let tuple = result.to_tuple().context("untuple result")?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>().context("read f32 output")?);
+        }
+        Ok(out)
+    }
+
+    /// Execute an artifact whose inputs include uint32 *packed byte-plane*
+    /// tensors (the FPX-compressed tile kernel; the xla crate has no u8
+    /// literal type, so 4 bytes are packed little-endian per u32 word and
+    /// the kernel unpacks with shifts).
+    pub fn execute_mixed(&mut self, name: &str, u32_inputs: &[(&[u32], &[usize])], f32_inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let exe = self.exes.get(name).expect("just loaded");
+        let mut lits = Vec::new();
+        for (data, shape) in u32_inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims).context("reshape u32 literal")?;
+            lits.push(lit);
+        }
+        for (data, shape) in f32_inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims).context("reshape f32 literal")?;
+            lits.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&lits).context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let tuple = result.to_tuple().context("untuple result")?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>().context("read f32 output")?);
+        }
+        Ok(out)
+    }
+
+    /// Check whether `path` points at a usable artifacts directory.
+    pub fn artifacts_available(dir: &str) -> bool {
+        Path::new(dir).is_dir()
+    }
+}

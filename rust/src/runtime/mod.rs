@@ -1,0 +1,10 @@
+//! PJRT runtime (feature `pjrt`): load AOT-lowered JAX/Pallas HLO artifacts
+//! and execute them from the rust hot path. Python never runs at request
+//! time — `make artifacts` lowers the L2/L1 graphs to HLO *text* once (see
+//! `python/compile/aot.py` and /opt/xla-example for the interchange rules).
+
+mod engine;
+mod tiles;
+
+pub use engine::{PjrtEngine, DEFAULT_ARTIFACTS_DIR};
+pub use tiles::TileEngine;

@@ -1,0 +1,112 @@
+//! Tile engine: offload the dense near-field of an H-matrix MVM to the AOT
+//! JAX/Pallas tile kernel through PJRT. Dense leaves are padded into fixed
+//! T×T f32 tiles, processed in batches of B by one compiled executable
+//! (`artifacts/dense_tile_mvm.hlo.txt`, lowered by python/compile/aot.py),
+//! while the low-rank far field stays on the rust kernels.
+
+use super::engine::PjrtEngine;
+use crate::hmatrix::{BlockData, HMatrix};
+use anyhow::{bail, Result};
+
+/// Tile size the AOT artifact was lowered for (see python/compile/aot.py).
+pub const TILE: usize = 64;
+/// Batch size of the artifact.
+pub const BATCH: usize = 64;
+
+/// Offload engine for uniform dense tiles.
+pub struct TileEngine {
+    engine: PjrtEngine,
+    artifact: String,
+}
+
+impl TileEngine {
+    /// `artifact` is e.g. "dense_tile_mvm" (without .hlo.txt).
+    pub fn new(dir: &str, artifact: &str) -> Result<TileEngine> {
+        let mut engine = PjrtEngine::new(dir)?;
+        if !engine.has_artifact(artifact) {
+            bail!("artifact '{artifact}' not found in {dir} — run `make artifacts`");
+        }
+        engine.load(artifact)?;
+        Ok(TileEngine { engine, artifact: artifact.to_string() })
+    }
+
+    /// y += alpha · (dense part of M) · x executed on PJRT; returns the
+    /// number of tiles processed. Low-rank blocks are untouched — combine
+    /// with [`crate::mvm::mvm`] over a matrix whose dense part is skipped, or
+    /// use [`Self::full_mvm`].
+    pub fn dense_mvm(&mut self, alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64]) -> Result<usize> {
+        let bt = &m.bt;
+        // gather dense leaves
+        struct TileJob {
+            row_begin: usize,
+            nrows: usize,
+            ncols: usize,
+            leaf: usize,
+        }
+        let mut jobs: Vec<TileJob> = Vec::new();
+        for &leaf in &bt.leaves {
+            if let Some(BlockData::Dense(d)) = m.blocks[leaf].as_ref() {
+                if d.nrows() > TILE || d.ncols() > TILE {
+                    bail!("dense leaf {}x{} exceeds tile size {TILE}", d.nrows(), d.ncols());
+                }
+                let nd = bt.node(leaf);
+                jobs.push(TileJob { row_begin: bt.row_ct.node(nd.row).begin, nrows: d.nrows(), ncols: d.ncols(), leaf });
+            }
+        }
+        let ntiles = jobs.len();
+
+        // process in batches of BATCH
+        let mut tiles = vec![0f32; BATCH * TILE * TILE];
+        let mut xs = vec![0f32; BATCH * TILE];
+        for chunk in jobs.chunks(BATCH) {
+            tiles.fill(0.0);
+            xs.fill(0.0);
+            for (b, job) in chunk.iter().enumerate() {
+                let nd = bt.node(job.leaf);
+                let d = match m.blocks[job.leaf].as_ref() {
+                    Some(BlockData::Dense(d)) => d,
+                    _ => unreachable!(),
+                };
+                // row-major tile layout (jax convention)
+                for i in 0..job.nrows {
+                    for j in 0..job.ncols {
+                        tiles[b * TILE * TILE + i * TILE + j] = d[(i, j)] as f32;
+                    }
+                }
+                let cr = bt.col_ct.node(nd.col).range();
+                for (j, &xv) in x[cr].iter().enumerate() {
+                    xs[b * TILE + j] = xv as f32;
+                }
+            }
+            let out = self.engine.execute_f32(
+                &self.artifact,
+                &[(&tiles, &[BATCH, TILE, TILE]), (&xs, &[BATCH, TILE])],
+            )?;
+            let ys = &out[0]; // [BATCH, TILE]
+            for (b, job) in chunk.iter().enumerate() {
+                for i in 0..job.nrows {
+                    y[job.row_begin + i] += alpha * ys[b * TILE + i] as f64;
+                }
+            }
+        }
+        Ok(ntiles)
+    }
+
+    /// Full MVM: dense part on PJRT, low-rank part on the rust kernels.
+    pub fn full_mvm(&mut self, alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64]) -> Result<usize> {
+        let ntiles = self.dense_mvm(alpha, m, x, y)?;
+        // low-rank remainder on the CPU kernels
+        let bt = &m.bt;
+        for &leaf in &bt.leaves {
+            let b = m.blocks[leaf].as_ref().expect("missing leaf");
+            if matches!(b, BlockData::Dense(_)) {
+                continue;
+            }
+            let nd = bt.node(leaf);
+            let rr = bt.row_ct.node(nd.row).range();
+            let cr = bt.col_ct.node(nd.col).range();
+            crate::mvm::apply_block(alpha, b, &x[cr], &mut y[rr]);
+        }
+        Ok(ntiles)
+    }
+}

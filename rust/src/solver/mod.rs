@@ -1,0 +1,140 @@
+//! Iterative solvers on hierarchical-matrix operators — the e2e validation
+//! path (the paper's motivation: MVM is the kernel of iterative methods).
+
+mod gmres;
+
+pub use gmres::gmres;
+
+use crate::util::Timer;
+
+/// A linear operator y = A x (vectors in internal ordering).
+pub trait LinOp: Sync {
+    fn dim(&self) -> usize;
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+}
+
+impl<F: Fn(&[f64], &mut [f64]) + Sync> LinOp for (usize, F) {
+    fn dim(&self) -> usize {
+        self.0
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        (self.1)(x, y)
+    }
+}
+
+/// Convergence report of an iterative solve.
+#[derive(Clone, Debug)]
+pub struct SolveStats {
+    pub iterations: usize,
+    pub residual: f64,
+    pub residual_history: Vec<f64>,
+    pub seconds: f64,
+    pub converged: bool,
+}
+
+/// Conjugate gradients for SPD operators. Returns the solution and stats.
+pub fn cg(op: &dyn LinOp, b: &[f64], tol: f64, max_iter: usize) -> (Vec<f64>, SolveStats) {
+    let n = op.dim();
+    assert_eq!(b.len(), n);
+    let timer = Timer::start();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let bnorm = norm(b).max(f64::MIN_POSITIVE);
+    let mut rr = dot(&r, &r);
+    let mut history = vec![rr.sqrt() / bnorm];
+    let mut converged = false;
+    let mut it = 0;
+    while it < max_iter {
+        ap.fill(0.0);
+        op.apply(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 {
+            break; // not SPD (or numerical breakdown)
+        }
+        let alpha = rr / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rr_new = dot(&r, &r);
+        it += 1;
+        let rel = rr_new.sqrt() / bnorm;
+        history.push(rel);
+        if rel < tol {
+            converged = true;
+            break;
+        }
+        let beta = rr_new / rr;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rr = rr_new;
+    }
+    let stats = SolveStats { iterations: it, residual: *history.last().unwrap(), residual_history: history, seconds: timer.elapsed(), converged };
+    (x, stats)
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    crate::la::dot(a, b)
+}
+
+fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::{gemv, DMatrix};
+    use crate::util::Rng;
+
+    #[test]
+    fn cg_solves_spd_system() {
+        // SPD matrix A = Q D Q^T implicit via B^T B + I
+        let n = 40;
+        let mut rng = Rng::new(151);
+        let b_mat = DMatrix::random(n, n, &mut rng);
+        let apply = |x: &[f64], y: &mut [f64]| {
+            let mut t = vec![0.0; n];
+            gemv(1.0, &b_mat, x, &mut t);
+            let bt = b_mat.transpose();
+            gemv(1.0, &bt, &t, y);
+            for i in 0..n {
+                y[i] += x[i];
+            }
+        };
+        let op = (n, apply);
+        let xstar = rng.vector(n);
+        let mut rhs = vec![0.0; n];
+        op.apply(&xstar, &mut rhs);
+        let (x, stats) = cg(&op, &rhs, 1e-12, 500);
+        assert!(stats.converged, "residual {}", stats.residual);
+        for i in 0..n {
+            assert!((x[i] - xstar[i]).abs() < 1e-6, "{} vs {}", x[i], xstar[i]);
+        }
+    }
+
+    #[test]
+    fn residual_history_is_decreasing_overall() {
+        let n = 30;
+        let mut rng = Rng::new(152);
+        let b_mat = DMatrix::random(n, n, &mut rng);
+        let apply = |x: &[f64], y: &mut [f64]| {
+            let mut t = vec![0.0; n];
+            gemv(1.0, &b_mat, x, &mut t);
+            let bt = b_mat.transpose();
+            gemv(1.0, &bt, &t, y);
+            for i in 0..n {
+                y[i] += 0.1 * x[i];
+            }
+        };
+        let op = (n, apply);
+        let rhs = rng.vector(n);
+        let (_, stats) = cg(&op, &rhs, 1e-10, 1000);
+        let first = stats.residual_history[0];
+        let last = *stats.residual_history.last().unwrap();
+        assert!(last < first * 1e-6);
+    }
+}

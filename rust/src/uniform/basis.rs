@@ -1,0 +1,252 @@
+//! Shared cluster bases W_τ (orthonormal columns) with the singular weights
+//! retained for VALR compression (paper §4.2, Eq. 7).
+
+use crate::compress::{Blob, CompressionConfig, ZLowRankValr, BLOB_OVERHEAD};
+use crate::la::{blas, DMatrix};
+
+/// Basis storage: FP64, fixed-precision compressed, or VALR compressed.
+#[derive(Clone, Debug)]
+pub enum BasisData {
+    Plain(DMatrix),
+    /// Fixed-precision direct compression of the basis matrix.
+    Z { nrows: usize, ncols: usize, blob: Blob },
+    /// Per-column VALR compression (uses the singular weights).
+    Valr(ZLowRankValr),
+}
+
+/// A cluster basis: rank-k orthonormal matrix over the cluster's rows plus
+/// the singular values of its construction (σ drives VALR accuracy).
+#[derive(Clone, Debug)]
+pub struct ClusterBasis {
+    pub data: BasisData,
+    pub sigma: Vec<f64>,
+}
+
+impl ClusterBasis {
+    /// Empty basis (clusters without low-rank blocks, rank 0).
+    pub fn empty(nrows: usize) -> ClusterBasis {
+        ClusterBasis { data: BasisData::Plain(DMatrix::zeros(nrows, 0)), sigma: Vec::new() }
+    }
+
+    pub fn new(w: DMatrix, sigma: Vec<f64>) -> ClusterBasis {
+        debug_assert_eq!(w.ncols(), sigma.len());
+        ClusterBasis { data: BasisData::Plain(w), sigma }
+    }
+
+    pub fn rank(&self) -> usize {
+        match &self.data {
+            BasisData::Plain(w) => w.ncols(),
+            BasisData::Z { ncols, .. } => *ncols,
+            BasisData::Valr(z) => z.rank(),
+        }
+    }
+
+    pub fn nrows(&self) -> usize {
+        match &self.data {
+            BasisData::Plain(w) => w.nrows(),
+            BasisData::Z { nrows, .. } => *nrows,
+            BasisData::Valr(z) => z.nrows,
+        }
+    }
+
+    /// s = Wᵀ x (forward transformation contribution). `s` has rank() slots.
+    pub fn apply_transposed(&self, x: &[f64], s: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.nrows());
+        debug_assert_eq!(s.len(), self.rank());
+        match &self.data {
+            BasisData::Plain(w) => {
+                for j in 0..w.ncols() {
+                    s[j] += blas::dot(w.col(j), x);
+                }
+            }
+            BasisData::Z { nrows, ncols, blob } => {
+                // column-major decode, 64-entry chunks
+                let mut buf = [0.0f64; 256];
+                for j in 0..*ncols {
+                    let base = j * nrows;
+                    let mut acc = 0.0;
+                    let mut i = 0;
+                    while i < *nrows {
+                        let len = 256.min(nrows - i);
+                        blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
+                        acc += blas::dot(&buf[..len], &x[i..i + len]);
+                        i += len;
+                    }
+                    s[j] += acc;
+                }
+            }
+            BasisData::Valr(z) => {
+                let mut buf = [0.0f64; 256];
+                for j in 0..z.rank() {
+                    let col = &z.wcols[j];
+                    let mut acc = 0.0;
+                    let mut i = 0;
+                    while i < z.nrows {
+                        let len = 256.min(z.nrows - i);
+                        col.decompress_range(i, i + len, &mut buf[..len]);
+                        acc += blas::dot(&buf[..len], &x[i..i + len]);
+                        i += len;
+                    }
+                    s[j] += acc;
+                }
+            }
+        }
+    }
+
+    /// y += W t (backward transformation contribution).
+    pub fn apply_add(&self, t: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(t.len(), self.rank());
+        debug_assert_eq!(y.len(), self.nrows());
+        match &self.data {
+            BasisData::Plain(w) => {
+                for j in 0..w.ncols() {
+                    if t[j] != 0.0 {
+                        blas::axpy(t[j], w.col(j), y);
+                    }
+                }
+            }
+            BasisData::Z { nrows, ncols, blob } => {
+                let mut buf = [0.0f64; 256];
+                for j in 0..*ncols {
+                    if t[j] == 0.0 {
+                        continue;
+                    }
+                    let base = j * nrows;
+                    let mut i = 0;
+                    while i < *nrows {
+                        let len = 256.min(nrows - i);
+                        blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
+                        blas::axpy(t[j], &buf[..len], &mut y[i..i + len]);
+                        i += len;
+                    }
+                }
+            }
+            BasisData::Valr(z) => {
+                let mut buf = [0.0f64; 256];
+                for j in 0..z.rank() {
+                    if t[j] == 0.0 {
+                        continue;
+                    }
+                    let col = &z.wcols[j];
+                    let mut i = 0;
+                    while i < z.nrows {
+                        let len = 256.min(z.nrows - i);
+                        col.decompress_range(i, i + len, &mut buf[..len]);
+                        blas::axpy(t[j], &buf[..len], &mut y[i..i + len]);
+                        i += len;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dense copy of W.
+    pub fn to_dense(&self) -> DMatrix {
+        match &self.data {
+            BasisData::Plain(w) => w.clone(),
+            BasisData::Z { nrows, ncols, blob } => {
+                let mut w = DMatrix::zeros(*nrows, *ncols);
+                blob.decompress_into(w.data_mut());
+                w
+            }
+            BasisData::Valr(z) => z.w_to_dense(),
+        }
+    }
+
+    /// Compress in place per config.
+    pub fn compress(&mut self, cfg: &CompressionConfig) {
+        if let BasisData::Plain(w) = &self.data {
+            if w.ncols() == 0 {
+                return;
+            }
+            self.data = if cfg.valr {
+                BasisData::Valr(ZLowRankValr::compress_basis(w, &self.sigma, cfg.codec, cfg.eps))
+            } else {
+                BasisData::Z { nrows: w.nrows(), ncols: w.ncols(), blob: Blob::compress(cfg.codec, w.data(), cfg.eps) }
+            };
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        let d = match &self.data {
+            BasisData::Plain(w) => w.byte_size(),
+            BasisData::Z { blob, .. } => blob.byte_size(),
+            BasisData::Valr(z) => z.byte_size(),
+        };
+        d + self.sigma.len() * 8 + BLOB_OVERHEAD
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::util::Rng;
+
+    fn ortho_basis(n: usize, k: usize, seed: u64) -> (DMatrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let (q, _) = crate::la::qr_thin(&DMatrix::random(n, k, &mut rng));
+        let sigma: Vec<f64> = (0..k).map(|i| 0.5f64.powi(i as i32)).collect();
+        (q, sigma)
+    }
+
+    #[test]
+    fn apply_matches_dense_paths() {
+        let (w, sigma) = ortho_basis(100, 6, 81);
+        let mut rng = Rng::new(82);
+        let x = rng.vector(100);
+        let mut s_ref = vec![0.0; 6];
+        for j in 0..6 {
+            s_ref[j] = blas::dot(w.col(j), &x);
+        }
+
+        for cfg in [
+            None,
+            Some(CompressionConfig { codec: Codec::Aflp, eps: 1e-10, valr: false }),
+            Some(CompressionConfig { codec: Codec::Aflp, eps: 1e-10, valr: true }),
+            Some(CompressionConfig { codec: Codec::Fpx, eps: 1e-10, valr: true }),
+        ] {
+            let mut cb = ClusterBasis::new(w.clone(), sigma.clone());
+            if let Some(c) = cfg {
+                cb.compress(&c);
+            }
+            let mut s = vec![0.0; 6];
+            cb.apply_transposed(&x, &mut s);
+            for j in 0..6 {
+                assert!((s[j] - s_ref[j]).abs() < 1e-6, "{cfg:?} s[{j}]");
+            }
+            // backward
+            let t = vec![1.0; 6];
+            let mut y = vec![0.0; 100];
+            cb.apply_add(&t, &mut y);
+            let mut y_ref = vec![0.0; 100];
+            for j in 0..6 {
+                blas::axpy(1.0, w.col(j), &mut y_ref);
+            }
+            for i in 0..100 {
+                assert!((y[i] - y_ref[i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn compression_shrinks_basis() {
+        let (w, sigma) = ortho_basis(512, 12, 83);
+        let mut cb = ClusterBasis::new(w, sigma);
+        let before = cb.byte_size();
+        cb.compress(&CompressionConfig::aflp(1e-6));
+        assert!(cb.byte_size() < before);
+    }
+
+    #[test]
+    fn empty_basis_is_inert() {
+        let cb = ClusterBasis::empty(10);
+        assert_eq!(cb.rank(), 0);
+        let x = vec![1.0; 10];
+        let mut s: Vec<f64> = vec![];
+        cb.apply_transposed(&x, &mut s);
+        let mut y = vec![0.0; 10];
+        cb.apply_add(&[], &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,186 @@
+//! Construction of shared cluster bases from an H-matrix (paper §2.3; basis
+//! algorithm after Bruyninckx/Huybrechs/Meerbergen and Börm: per block row,
+//! SVD of the weighted concatenation of the low-rank factors).
+
+use super::basis::ClusterBasis;
+use super::uhmat::{CouplingKind, CouplingMat, UniBlock, UniformHMatrix};
+use crate::cluster::BlockTree;
+use crate::hmatrix::{BlockData, HMatrix};
+use crate::la::{blas, qr_thin, svd_adaptive, DMatrix};
+use crate::par::ThreadPool;
+use std::sync::{Arc, Mutex};
+
+/// Build a uniform H-matrix from an H-matrix with basis truncation accuracy
+/// `eps` (relative, per cluster).
+pub fn build_from_h(h: &HMatrix, eps: f64, kind: CouplingKind) -> UniformHMatrix {
+    let bt = h.bt.clone();
+    let row_basis = build_bases(h, &bt, eps, true);
+    let col_basis = build_bases(h, &bt, eps, false);
+    let blocks = build_blocks(h, &bt, &row_basis, &col_basis, kind);
+    UniformHMatrix { bt, row_basis, col_basis, blocks }
+}
+
+/// Shared basis for every cluster of the row (or column) tree.
+fn build_bases(h: &HMatrix, bt: &Arc<BlockTree>, eps: f64, row_side: bool) -> Vec<ClusterBasis> {
+    let ct = if row_side { &bt.row_ct } else { &bt.col_ct };
+    let nclusters = ct.nodes.len();
+    let out: Mutex<Vec<Option<ClusterBasis>>> = Mutex::new(vec![None; nclusters]);
+    let pool = ThreadPool::global();
+    pool.scope(|s| {
+        for tau in 0..nclusters {
+            let out = &out;
+            s.spawn(move |_| {
+                let basis = cluster_basis(h, bt, tau, eps, row_side);
+                out.lock().unwrap()[tau] = Some(basis);
+            });
+        }
+    });
+    out.into_inner().unwrap().into_iter().map(|b| b.unwrap()).collect()
+}
+
+/// Basis of a single cluster: SVD of [U₁R₁ᵀ | U₂R₂ᵀ | …] over the low-rank
+/// blocks of the block row (weighted by the QR factors of the opposite side
+/// so the singular values reflect the true block norms).
+fn cluster_basis(h: &HMatrix, bt: &BlockTree, tau: usize, eps: f64, row_side: bool) -> ClusterBasis {
+    let ct = if row_side { &bt.row_ct } else { &bt.col_ct };
+    let block_list = if row_side { &bt.row_blocks[tau] } else { &bt.col_blocks[tau] };
+    let nrows = ct.node(tau).size();
+
+    let mut pieces: Vec<DMatrix> = Vec::new();
+    for &b in block_list {
+        if !bt.node(b).admissible {
+            continue;
+        }
+        if let Some(BlockData::LowRank(lr)) = h.block(b) {
+            if lr.rank() == 0 {
+                continue;
+            }
+            let (own, other) = if row_side { (&lr.u, &lr.v) } else { (&lr.v, &lr.u) };
+            let (_, r) = qr_thin(other);
+            // own · Rᵀ: |τ| × k, carries the block's singular weights
+            pieces.push(blas::matmul(own, blas::Trans::No, &r, blas::Trans::Yes));
+        }
+    }
+    if pieces.is_empty() {
+        return ClusterBasis::empty(nrows);
+    }
+    let mut a = pieces[0].clone();
+    for p in &pieces[1..] {
+        a = a.hcat(p);
+    }
+    let svd = svd_adaptive(&a, eps);
+    let k = svd.rank(eps).max(1);
+    let t = svd.truncate(k);
+    ClusterBasis::new(t.u, t.s)
+}
+
+/// Couplings S = (W_τᵀ U)(X_σᵀ V)ᵀ for all low-rank leaves, dense leaves
+/// copied.
+fn build_blocks(
+    h: &HMatrix,
+    bt: &Arc<BlockTree>,
+    row_basis: &[ClusterBasis],
+    col_basis: &[ClusterBasis],
+    kind: CouplingKind,
+) -> Vec<Option<UniBlock>> {
+    let out: Mutex<Vec<Option<UniBlock>>> = Mutex::new(vec![None; bt.nodes.len()]);
+    let pool = ThreadPool::global();
+    pool.scope(|s| {
+        for &leaf in &bt.leaves {
+            let out = &out;
+            s.spawn(move |_| {
+                let nd = bt.node(leaf);
+                let blk = match h.block(leaf) {
+                    Some(BlockData::Dense(m)) => UniBlock::Dense(m.clone()),
+                    Some(BlockData::LowRank(lr)) => {
+                        let w = row_basis[nd.row].to_dense();
+                        let x = col_basis[nd.col].to_dense();
+                        // Sr = Wᵀ U (k_τ × k_b), Sc = Xᵀ V (k_σ × k_b)
+                        let sr = blas::matmul(&w, blas::Trans::Yes, &lr.u, blas::Trans::No);
+                        let sc = blas::matmul(&x, blas::Trans::Yes, &lr.v, blas::Trans::No);
+                        match kind {
+                            CouplingKind::Combined => {
+                                UniBlock::Coupling(CouplingMat::Plain(blas::matmul(&sr, blas::Trans::No, &sc, blas::Trans::Yes)))
+                            }
+                            CouplingKind::Separate => UniBlock::Coupling(CouplingMat::SepPlain { sr, sc }),
+                        }
+                    }
+                    other => panic!("uniform build requires an uncompressed H-matrix, got {other:?}"),
+                };
+                out.lock().unwrap()[leaf] = Some(blk);
+            });
+        }
+    });
+    out.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterTree, StdAdmissibility};
+    use crate::geometry::icosphere;
+    use crate::kernelfn::{LaplaceSlp, MatrixGen};
+    use crate::lowrank::AcaOptions;
+
+    fn problem(level: usize, n_min: usize, eps: f64) -> (HMatrix, UniformHMatrix) {
+        let geom = icosphere(level);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), n_min));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps));
+        let uh = build_from_h(&h, eps, CouplingKind::Combined);
+        (h, uh)
+    }
+
+    #[test]
+    fn uniform_approximates_h() {
+        let (h, uh) = problem(1, 8, 1e-6);
+        let hd = h.to_dense();
+        let ud = uh.to_dense();
+        let mut diff = ud.clone();
+        diff.add_scaled(-1.0, &hd);
+        let rel = diff.fro_norm() / hd.fro_norm();
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn coupling_storage_is_small() {
+        let (h, uh) = problem(2, 16, 1e-4);
+        let st = uh.stats();
+        // coupling matrices are k×k — far smaller than the H low-rank factors
+        assert!(st.coupling_bytes < h.stats().lowrank_bytes);
+        assert!(st.basis_bytes > 0);
+    }
+
+    #[test]
+    fn separate_coupling_equivalent() {
+        let geom = icosphere(1);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), 8));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-6));
+        let c = build_from_h(&h, 1e-6, CouplingKind::Combined).to_dense();
+        let s = build_from_h(&h, 1e-6, CouplingKind::Separate).to_dense();
+        let mut diff = c.clone();
+        diff.add_scaled(-1.0, &s);
+        assert!(diff.fro_norm() < 1e-10 * c.fro_norm().max(1.0));
+    }
+
+    #[test]
+    fn bases_are_orthonormal() {
+        let (_, uh) = problem(1, 8, 1e-6);
+        for b in &uh.row_basis {
+            if b.rank() == 0 {
+                continue;
+            }
+            let w = b.to_dense();
+            let wtw = blas::matmul(&w, blas::Trans::Yes, &w, blas::Trans::No);
+            for i in 0..w.ncols() {
+                for j in 0..w.ncols() {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((wtw[(i, j)] - want).abs() < 1e-8);
+                }
+            }
+        }
+    }
+}

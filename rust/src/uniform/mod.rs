@@ -1,0 +1,11 @@
+//! Uniform H-matrices (paper §2.3): one shared cluster basis per block row /
+//! block column; low-rank blocks store only a small coupling matrix
+//! S with M_{τ,σ} = W_τ · S_{τ,σ} · X_σᵀ.
+
+mod basis;
+mod build;
+mod uhmat;
+
+pub use basis::{BasisData, ClusterBasis};
+pub use build::build_from_h;
+pub use uhmat::{CouplingKind, CouplingMat, UniBlock, UniformHMatrix, UniformStats};

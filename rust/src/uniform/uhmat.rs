@@ -1,0 +1,224 @@
+//! Uniform H-matrix container.
+
+use super::basis::ClusterBasis;
+use crate::cluster::BlockTree;
+use crate::compress::CompressionConfig;
+use crate::hmatrix::ZDense;
+use crate::la::{blas, DMatrix};
+use crate::par::ThreadPool;
+use std::sync::Arc;
+
+/// How coupling matrices are stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CouplingKind {
+    /// Single matrix S = Sr·Scᵀ (default).
+    Combined,
+    /// Separate row/column coupling Sr, Sc (Bruyninckx et al. variant,
+    /// paper §3.2 "sep. coupling").
+    Separate,
+}
+
+/// Coupling matrix storage.
+#[derive(Clone, Debug)]
+pub enum CouplingMat {
+    Plain(DMatrix),
+    Z(ZDense),
+    SepPlain { sr: DMatrix, sc: DMatrix },
+    SepZ { sr: ZDense, sc: ZDense },
+}
+
+impl CouplingMat {
+    /// t += S · s  (t: row-basis rank slots, s: column coefficients).
+    pub fn apply_add(&self, s: &[f64], t: &mut [f64]) {
+        match self {
+            CouplingMat::Plain(m) => blas::gemv(1.0, m, s, t),
+            CouplingMat::Z(z) => {
+                let m = z.to_dense();
+                blas::gemv(1.0, &m, s, t);
+            }
+            CouplingMat::SepPlain { sr, sc } => {
+                // t += Sr (Scᵀ s)
+                let mut tmp = vec![0.0; sc.ncols()];
+                blas::gemv_transposed(1.0, sc, s, &mut tmp);
+                blas::gemv(1.0, sr, &tmp, t);
+            }
+            CouplingMat::SepZ { sr, sc } => {
+                let scd = sc.to_dense();
+                let srd = sr.to_dense();
+                let mut tmp = vec![0.0; scd.ncols()];
+                blas::gemv_transposed(1.0, &scd, s, &mut tmp);
+                blas::gemv(1.0, &srd, &tmp, t);
+            }
+        }
+    }
+
+    /// First stage of the separate-coupling scheme: c = Scᵀ s (falls back to
+    /// the full product for combined storage — used only by the sep-coupling
+    /// MVM variant).
+    pub fn sep_parts(&self) -> Option<(&DMatrix, &DMatrix)> {
+        match self {
+            CouplingMat::SepPlain { sr, sc } => Some((sr, sc)),
+            _ => None,
+        }
+    }
+
+    pub fn to_dense(&self) -> DMatrix {
+        match self {
+            CouplingMat::Plain(m) => m.clone(),
+            CouplingMat::Z(z) => z.to_dense(),
+            CouplingMat::SepPlain { sr, sc } => blas::matmul(sr, blas::Trans::No, sc, blas::Trans::Yes),
+            CouplingMat::SepZ { sr, sc } => blas::matmul(&sr.to_dense(), blas::Trans::No, &sc.to_dense(), blas::Trans::Yes),
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        match self {
+            CouplingMat::Plain(m) => m.byte_size(),
+            CouplingMat::Z(z) => z.byte_size(),
+            CouplingMat::SepPlain { sr, sc } => sr.byte_size() + sc.byte_size(),
+            CouplingMat::SepZ { sr, sc } => sr.byte_size() + sc.byte_size(),
+        }
+    }
+
+    pub fn compress(&self, cfg: &CompressionConfig) -> CouplingMat {
+        match self {
+            CouplingMat::Plain(m) => CouplingMat::Z(ZDense::compress(m, cfg.codec, cfg.eps)),
+            CouplingMat::SepPlain { sr, sc } => {
+                CouplingMat::SepZ { sr: ZDense::compress(sr, cfg.codec, cfg.eps), sc: ZDense::compress(sc, cfg.codec, cfg.eps) }
+            }
+            other => other.clone(),
+        }
+    }
+}
+
+/// Leaf data of a uniform H-matrix.
+#[derive(Clone, Debug)]
+pub enum UniBlock {
+    Dense(DMatrix),
+    ZDense(ZDense),
+    Coupling(CouplingMat),
+}
+
+impl UniBlock {
+    pub fn byte_size(&self) -> usize {
+        match self {
+            UniBlock::Dense(m) => m.byte_size(),
+            UniBlock::ZDense(z) => z.byte_size(),
+            UniBlock::Coupling(c) => c.byte_size(),
+        }
+    }
+}
+
+/// Memory statistics (split into the paper's categories).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UniformStats {
+    pub dense_bytes: usize,
+    pub coupling_bytes: usize,
+    pub basis_bytes: usize,
+}
+
+impl UniformStats {
+    pub fn total_bytes(&self) -> usize {
+        self.dense_bytes + self.coupling_bytes + self.basis_bytes
+    }
+}
+
+/// Uniform H-matrix: shared row/column cluster bases + per-block couplings.
+#[derive(Clone)]
+pub struct UniformHMatrix {
+    pub bt: Arc<BlockTree>,
+    /// Per row-cluster node id.
+    pub row_basis: Vec<ClusterBasis>,
+    /// Per column-cluster node id.
+    pub col_basis: Vec<ClusterBasis>,
+    /// Per block node id (leaves only).
+    pub blocks: Vec<Option<UniBlock>>,
+}
+
+impl UniformHMatrix {
+    pub fn nrows(&self) -> usize {
+        self.bt.shape().0
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.bt.shape().1
+    }
+
+    /// Compress bases, couplings and dense blocks (§4.1/4.2).
+    pub fn compress(&mut self, cfg: &CompressionConfig) {
+        let pool = ThreadPool::global();
+        pool.scope(|s| {
+            for b in self.row_basis.iter_mut().chain(self.col_basis.iter_mut()) {
+                s.spawn(move |_| b.compress(cfg));
+            }
+        });
+        let blocks = std::mem::take(&mut self.blocks);
+        let out: std::sync::Mutex<Vec<Option<UniBlock>>> = std::sync::Mutex::new(vec![None; blocks.len()]);
+        pool.scope(|s| {
+            for (id, b) in blocks.iter().enumerate() {
+                let out = &out;
+                s.spawn(move |_| {
+                    let z = b.as_ref().map(|blk| match blk {
+                        UniBlock::Dense(m) => UniBlock::ZDense(ZDense::compress(m, cfg.codec, cfg.eps)),
+                        UniBlock::Coupling(c) => UniBlock::Coupling(c.compress(cfg)),
+                        other => other.clone(),
+                    });
+                    out.lock().unwrap()[id] = z;
+                });
+            }
+        });
+        self.blocks = out.into_inner().unwrap();
+    }
+
+    pub fn stats(&self) -> UniformStats {
+        let mut st = UniformStats::default();
+        for b in self.row_basis.iter().chain(self.col_basis.iter()) {
+            if b.rank() > 0 {
+                st.basis_bytes += b.byte_size();
+            }
+        }
+        for b in self.blocks.iter().flatten() {
+            match b {
+                UniBlock::Dense(_) | UniBlock::ZDense(_) => st.dense_bytes += b.byte_size(),
+                UniBlock::Coupling(_) => st.coupling_bytes += b.byte_size(),
+            }
+        }
+        st
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.stats().total_bytes()
+    }
+
+    pub fn bytes_per_dof(&self) -> f64 {
+        self.byte_size() as f64 / self.nrows() as f64
+    }
+
+    /// Dense reconstruction in internal ordering (tests only).
+    pub fn to_dense(&self) -> DMatrix {
+        let (m, n) = self.bt.shape();
+        let mut out = DMatrix::zeros(m, n);
+        for &leaf in &self.bt.leaves {
+            let nd = self.bt.node(leaf);
+            let rr = self.bt.row_ct.node(nd.row).range();
+            let cr = self.bt.col_ct.node(nd.col).range();
+            let d = match self.blocks[leaf].as_ref().expect("missing leaf") {
+                UniBlock::Dense(mm) => mm.clone(),
+                UniBlock::ZDense(z) => z.to_dense(),
+                UniBlock::Coupling(c) => {
+                    let w = self.row_basis[nd.row].to_dense();
+                    let x = self.col_basis[nd.col].to_dense();
+                    let s = c.to_dense();
+                    let ws = blas::matmul(&w, blas::Trans::No, &s, blas::Trans::No);
+                    blas::matmul(&ws, blas::Trans::No, &x, blas::Trans::Yes)
+                }
+            };
+            for (jj, j) in cr.enumerate() {
+                for (ii, i) in rr.clone().enumerate() {
+                    out[(i, j)] = d[(ii, jj)];
+                }
+            }
+        }
+        out
+    }
+}

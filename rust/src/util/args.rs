@@ -1,0 +1,128 @@
+//! Minimal CLI argument parsing (no clap in the sandbox).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments. Typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Named options: `--key value` or `--key=value`.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclude argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut a = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    a.opts.insert(rest.to_string(), v);
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a clear message on parse error.
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|e| panic!("--{key}={s}: {e}")),
+        }
+    }
+
+    /// List option: comma-separated values.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s.split(',').map(|t| t.trim().parse().unwrap_or_else(|e| panic!("--{key}: '{t}': {e}"))).collect(),
+        }
+    }
+
+    /// Boolean switch: present as `--flag` (or `--flag true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn options_and_flags() {
+        // positionals come first: a bare `--flag` followed by a non-dash
+        // token would consume it as a value (documented CLI convention)
+        let a = parse(&["cmd", "--n", "1024", "--eps=1e-6", "--verbose"]);
+        assert_eq!(a.num_or("n", 0usize), 1024);
+        assert_eq!(a.num_or("eps", 0.0f64), 1e-6);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.num_or("n", 7usize), 7);
+        assert_eq!(a.str_or("fmt", "h"), "h");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--sizes", "128,256,512"]);
+        assert_eq!(a.list_or("sizes", &[1usize]), vec![128, 256, 512]);
+        assert_eq!(a.list_or("eps", &[1e-4]), vec![1e-4]);
+    }
+
+    #[test]
+    fn flag_with_value() {
+        let a = parse(&["--check", "true", "--fast", "false"]);
+        assert!(a.flag("check"));
+        assert!(!a.flag("fast"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Small self-contained utilities: PRNG, statistics, JSON, CLI args, timing.
+//!
+//! The sandbox has no access to crates.io beyond the vendored set, so the
+//! usual suspects (rand, serde, clap, criterion) are replaced by the minimal
+//! implementations in this module.
+
+pub mod args;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod timer;
+
+pub use prng::Rng;
+pub use timer::Timer;
+
+/// Format a byte count as a human readable string (KiB/MiB/GiB).
+pub fn fmt_bytes(b: usize) -> String {
+    let b = b as f64;
+    if b >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    } else if b >= 1024.0 * 1024.0 {
+        format!("{:.2} MiB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.2} KiB", b / 1024.0)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format seconds with an adaptive unit (s/ms/µs).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.5 µs");
+    }
+}

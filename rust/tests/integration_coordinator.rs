@@ -1,0 +1,87 @@
+//! Coordinator (MVM server) integration: correctness under concurrency,
+//! batching behaviour, metrics sanity.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::coordinator::{BatchPolicy, MvmServer};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::lowrank::AcaOptions;
+use hmatc::mvm::{mvm, MvmAlgorithm};
+use hmatc::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn build(level: usize) -> Arc<HMatrix> {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 32));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    Arc::new(HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-6)))
+}
+
+#[test]
+fn concurrent_clients_get_correct_answers() {
+    let h = build(2);
+    let server = Arc::new(MvmServer::start(h.clone(), BatchPolicy { max_batch: 8, linger: Duration::from_micros(500) }));
+    let n = h.nrows();
+    std::thread::scope(|s| {
+        for c in 0..6 {
+            let server = server.clone();
+            let h = h.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(300 + c);
+                for _ in 0..8 {
+                    let x = rng.vector(n);
+                    let resp = server.call(x.clone());
+                    let mut want = vec![0.0; n];
+                    mvm(1.0, &h, &x, &mut want, MvmAlgorithm::Seq);
+                    for i in 0..n {
+                        assert!((resp.y[i] - want[i]).abs() < 1e-9, "client {c}");
+                    }
+                }
+            });
+        }
+    });
+    let m = server.metrics.snapshot();
+    assert_eq!(m.requests, 48);
+    assert!(m.p50_latency > 0.0);
+}
+
+#[test]
+fn compressed_matrix_served_identically() {
+    let h = build(2);
+    let mut hz = (*h).clone();
+    hz.compress(&hmatc::compress::CompressionConfig::aflp(1e-9));
+    let hz = Arc::new(hz);
+    let s1 = MvmServer::start(h.clone(), BatchPolicy::default());
+    let s2 = MvmServer::start(hz, BatchPolicy::default());
+    let mut rng = Rng::new(33);
+    let x = rng.vector(h.ncols());
+    let r1 = s1.call(x.clone());
+    let r2 = s2.call(x);
+    let norm: f64 = r1.y.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let diff: f64 = r1.y.iter().zip(&r2.y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    assert!(diff < 1e-6 * norm);
+}
+
+#[test]
+fn max_batch_respected() {
+    let h = build(1);
+    let server = Arc::new(MvmServer::start(h.clone(), BatchPolicy { max_batch: 3, linger: Duration::from_millis(30) }));
+    let mut rng = Rng::new(34);
+    let rxs: Vec<_> = (0..9).map(|_| server.submit(rng.vector(h.ncols()))).collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.batch_size <= 3, "batch {}", resp.batch_size);
+    }
+}
+
+#[test]
+fn server_shuts_down_cleanly() {
+    let h = build(1);
+    let server = MvmServer::start(h.clone(), BatchPolicy::default());
+    let mut rng = Rng::new(35);
+    let _ = server.call(rng.vector(h.ncols()));
+    drop(server); // must not hang
+}

@@ -1,0 +1,117 @@
+//! Cross-format consistency: H vs UH vs H² represent the same operator, with
+//! the storage ordering the paper reports (Fig. 1).
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::geometry::icosphere;
+use hmatc::h2::build_from_h as build_h2;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::lowrank::AcaOptions;
+use hmatc::mvm::{h2_mvm, mvm, uniform_mvm, H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::uniform::{build_from_h as build_uh, CouplingKind};
+use hmatc::util::Rng;
+use std::sync::Arc;
+
+struct AllFormats {
+    h: HMatrix,
+    uh: hmatc::uniform::UniformHMatrix,
+    h2: hmatc::h2::H2Matrix,
+}
+
+fn build_all(level: usize, eps: f64) -> AllFormats {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 32));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps));
+    let uh = build_uh(&h, eps, CouplingKind::Combined);
+    let h2 = build_h2(&h, eps);
+    AllFormats { h, uh, h2 }
+}
+
+#[test]
+fn formats_agree_via_mvm() {
+    let f = build_all(2, 1e-6);
+    let n = f.h.nrows();
+    let mut rng = Rng::new(7);
+    let x = rng.vector(n);
+    let mut yh = vec![0.0; n];
+    let mut yu = vec![0.0; n];
+    let mut y2 = vec![0.0; n];
+    mvm(1.0, &f.h, &x, &mut yh, MvmAlgorithm::Seq);
+    uniform_mvm(1.0, &f.uh, &x, &mut yu, UniMvmAlgorithm::RowWise);
+    h2_mvm(1.0, &f.h2, &x, &mut y2, H2MvmAlgorithm::RowWise);
+    let ynorm: f64 = yh.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let du: f64 = yh.iter().zip(&yu).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    let d2: f64 = yh.iter().zip(&y2).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+    assert!(du < 1e-4 * ynorm, "UH deviates: {du} / {ynorm}");
+    assert!(d2 < 1e-4 * ynorm, "H2 deviates: {d2} / {ynorm}");
+}
+
+#[test]
+fn coupling_storage_ordering() {
+    // the *matrix data* (couplings) of UH/H² is much smaller than H's
+    // low-rank factors — this is §2.3/2.4's storage argument.
+    let f = build_all(3, 1e-4);
+    let h_lr_bytes = f.h.stats().lowrank_bytes;
+    let uh_coupling = f.uh.stats().coupling_bytes;
+    let h2_coupling = f.h2.stats().coupling_bytes;
+    assert!(uh_coupling < h_lr_bytes, "uh coupling {uh_coupling} !< h lowrank {h_lr_bytes}");
+    assert!(h2_coupling < h_lr_bytes);
+}
+
+#[test]
+fn h2_basis_smaller_than_uh_basis() {
+    // nested bases beat shared bases in storage for growing n (Fig. 1)
+    let f = build_all(3, 1e-4);
+    let uh_basis = f.uh.stats().basis_bytes;
+    let h2_basis = f.h2.stats().basis_bytes;
+    assert!(h2_basis < uh_basis, "h2 basis {h2_basis} !< uh basis {uh_basis}");
+}
+
+#[test]
+fn all_formats_compress_and_stay_consistent() {
+    let mut f = build_all(2, 1e-5);
+    let n = f.h.nrows();
+    let mut rng = Rng::new(9);
+    let x = rng.vector(n);
+    let mut y_ref = vec![0.0; n];
+    mvm(1.0, &f.h, &x, &mut y_ref, MvmAlgorithm::Seq);
+    let ynorm: f64 = y_ref.iter().map(|v| v * v).sum::<f64>().sqrt();
+
+    let cfg = hmatc::compress::CompressionConfig::aflp(1e-5);
+    f.h.compress(&cfg);
+    f.uh.compress(&cfg);
+    f.h2.compress(&cfg);
+
+    let mut yh = vec![0.0; n];
+    let mut yu = vec![0.0; n];
+    let mut y2 = vec![0.0; n];
+    mvm(1.0, &f.h, &x, &mut yh, MvmAlgorithm::ClusterLists);
+    uniform_mvm(1.0, &f.uh, &x, &mut yu, UniMvmAlgorithm::RowWise);
+    h2_mvm(1.0, &f.h2, &x, &mut y2, H2MvmAlgorithm::RowWise);
+    for (name, y) in [("h", &yh), ("uh", &yu), ("h2", &y2)] {
+        let d: f64 = y.iter().zip(&y_ref).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(d < 1e-3 * ynorm, "{name}: {d} vs {ynorm}");
+    }
+}
+
+#[test]
+fn compression_ratio_ordering_matches_paper() {
+    // Fig. 10: H compresses best, H² least (VALR applies to ever less data)
+    let mut f = build_all(3, 1e-6);
+    let h0 = f.h.byte_size() as f64;
+    let u0 = f.uh.byte_size() as f64;
+    let t0 = f.h2.byte_size() as f64;
+    let cfg = hmatc::compress::CompressionConfig::aflp(1e-6);
+    f.h.compress(&cfg);
+    f.uh.compress(&cfg);
+    f.h2.compress(&cfg);
+    let rh = h0 / f.h.byte_size() as f64;
+    let ru = u0 / f.uh.byte_size() as f64;
+    let r2 = t0 / f.h2.byte_size() as f64;
+    assert!(rh > 1.5, "H ratio {rh}");
+    assert!(ru > 1.2, "UH ratio {ru}");
+    assert!(r2 > 1.0, "H2 ratio {r2}");
+    assert!(rh >= r2 * 0.95, "H ({rh}) should compress at least as well as H2 ({r2})");
+}

@@ -1,0 +1,124 @@
+//! End-to-end H-matrix construction accuracy + memory behaviour across
+//! kernels, admissibility conditions and accuracies.
+
+use hmatc::cluster::{BlockTree, ClusterTree, OffDiagAdmissibility, StdAdmissibility, WeakAdmissibility};
+use hmatc::geometry::{circle_points, icosphere, random_cube};
+use hmatc::kernelfn::{ExpCovariance, LaplaceSlp, LogKernel, Matern32Covariance, MatrixGen};
+use hmatc::hmatrix::HMatrix;
+use hmatc::la::DMatrix;
+use hmatc::lowrank::AcaOptions;
+use hmatc::util::Rng;
+use std::sync::Arc;
+
+fn dense_reference(gen: &dyn MatrixGen, ct: &ClusterTree) -> DMatrix {
+    let n = ct.len();
+    let mut d = DMatrix::zeros(n, n);
+    for j in 0..n {
+        for i in 0..n {
+            d[(i, j)] = gen.entry(ct.perm[i], ct.perm[j]);
+        }
+    }
+    d
+}
+
+fn check_accuracy(gen: &dyn MatrixGen, eps: f64, tol_factor: f64) {
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    let h = HMatrix::build(&bt, gen, &AcaOptions::with_eps(eps));
+    let dref = dense_reference(gen, &ct);
+    let mut diff = h.to_dense();
+    diff.add_scaled(-1.0, &dref);
+    let rel = diff.fro_norm() / dref.fro_norm();
+    assert!(rel < tol_factor * eps, "rel err {rel} (eps {eps})");
+}
+
+#[test]
+fn laplace_slp_accuracy_sweep() {
+    let geom = icosphere(2); // n = 320
+    let gen = LaplaceSlp::new(&geom);
+    for eps in [1e-4, 1e-6] {
+        check_accuracy(&gen, eps, 30.0);
+    }
+}
+
+#[test]
+fn log_kernel_accuracy() {
+    let gen = LogKernel::new(circle_points(256));
+    check_accuracy(&gen, 1e-6, 30.0);
+}
+
+#[test]
+fn covariance_kernels_accuracy() {
+    let mut rng = Rng::new(42);
+    let pts = random_cube(300, &mut rng);
+    check_accuracy(&ExpCovariance::new(pts.clone(), 0.3), 1e-5, 50.0);
+    check_accuracy(&Matern32Covariance::new(pts, 0.3), 1e-5, 50.0);
+}
+
+#[test]
+fn weak_admissibility_coarser_partition() {
+    let geom = icosphere(2);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt_std = BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0));
+    let bt_weak = BlockTree::build(&ct, &ct, &WeakAdmissibility);
+    // weak admissibility admits more blocks earlier → fewer leaves
+    assert!(bt_weak.leaves.len() <= bt_std.leaves.len());
+    bt_weak.validate_partition().unwrap();
+}
+
+#[test]
+fn hodlr_construction_works() {
+    let geom = icosphere(2);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 32));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &OffDiagAdmissibility));
+    let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-4));
+    let dref = dense_reference(&gen, &ct);
+    let mut diff = h.to_dense();
+    diff.add_scaled(-1.0, &dref);
+    let rel = diff.fro_norm() / dref.fro_norm();
+    assert!(rel < 1e-3, "HODLR rel err {rel}");
+}
+
+#[test]
+fn blr_construction_works() {
+    let geom = icosphere(2);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build_blr(gen.points(), 64));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &OffDiagAdmissibility));
+    assert_eq!(bt.depth(), 1);
+    let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-4));
+    let dref = dense_reference(&gen, &ct);
+    let mut diff = h.to_dense();
+    diff.add_scaled(-1.0, &dref);
+    let rel = diff.fro_norm() / dref.fro_norm();
+    assert!(rel < 1e-3, "BLR rel err {rel}");
+}
+
+#[test]
+fn memory_grows_subquadratically() {
+    // bytes/dof must grow far slower than n (Fig. 1 left behaviour)
+    let mut per_dof = Vec::new();
+    for level in [1usize, 2, 3] {
+        let geom = icosphere(level);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), 32));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-4));
+        per_dof.push(h.bytes_per_dof());
+    }
+    // dense would quadruple per level; H-matrix per-dof growth should be mild
+    assert!(per_dof[2] < 2.5 * per_dof[1], "per-dof {per_dof:?}");
+}
+
+#[test]
+fn fixed_rank_construction() {
+    let geom = icosphere(2);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    let h = HMatrix::build(&bt, &gen, &AcaOptions::with_rank(5));
+    let st = h.stats();
+    assert!(st.max_rank <= 5, "max rank {}", st.max_rank);
+}

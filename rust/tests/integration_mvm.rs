@@ -1,0 +1,139 @@
+//! MVM algorithm equivalence across formats, codecs and thread counts, plus
+//! the CG end-to-end solve.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::lowrank::AcaOptions;
+use hmatc::mvm::{h2_mvm, mvm, uniform_mvm, H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::solver::cg;
+use hmatc::util::Rng;
+use std::sync::Arc;
+
+fn build(level: usize, eps: f64) -> HMatrix {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 32));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps))
+}
+
+fn l2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+#[test]
+fn h_algorithms_equivalent_on_larger_problem() {
+    let h = build(3, 1e-6); // n = 1280
+    let n = h.nrows();
+    let mut rng = Rng::new(21);
+    let x = rng.vector(n);
+    let mut y_ref = vec![0.0; n];
+    mvm(1.0, &h, &x, &mut y_ref, MvmAlgorithm::Seq);
+    let norm: f64 = y_ref.iter().map(|v| v * v).sum::<f64>().sqrt();
+    for algo in MvmAlgorithm::all() {
+        let mut y = vec![0.0; n];
+        mvm(1.0, &h, &x, &mut y, algo);
+        assert!(l2(&y, &y_ref) < 1e-11 * norm, "{algo:?}");
+    }
+}
+
+#[test]
+fn compressed_algorithms_equivalent_both_codecs() {
+    let h = build(2, 1e-6);
+    let n = h.nrows();
+    let mut rng = Rng::new(22);
+    let x = rng.vector(n);
+    let mut y_ref = vec![0.0; n];
+    mvm(1.0, &h, &x, &mut y_ref, MvmAlgorithm::Seq);
+    let norm: f64 = y_ref.iter().map(|v| v * v).sum::<f64>().sqrt();
+    for codec in [Codec::Aflp, Codec::Fpx] {
+        let mut hz = h.clone();
+        hz.compress(&CompressionConfig { codec, eps: 1e-9, valr: true });
+        for algo in MvmAlgorithm::all() {
+            let mut y = vec![0.0; n];
+            mvm(1.0, &hz, &x, &mut y, algo);
+            assert!(l2(&y, &y_ref) < 1e-6 * norm, "{codec:?} {algo:?}: {}", l2(&y, &y_ref));
+        }
+    }
+}
+
+#[test]
+fn uniform_and_h2_cross_algorithm_equivalence() {
+    let h = build(2, 1e-7);
+    let uh = hmatc::uniform::build_from_h(&h, 1e-7, hmatc::uniform::CouplingKind::Separate);
+    let h2 = hmatc::h2::build_from_h(&h, 1e-7);
+    let n = h.nrows();
+    let mut rng = Rng::new(23);
+    let x = rng.vector(n);
+    let mut y_ref = vec![0.0; n];
+    uniform_mvm(1.0, &uh, &x, &mut y_ref, UniMvmAlgorithm::RowWise);
+    let norm: f64 = y_ref.iter().map(|v| v * v).sum::<f64>().sqrt();
+    for algo in UniMvmAlgorithm::all() {
+        let mut y = vec![0.0; n];
+        uniform_mvm(1.0, &uh, &x, &mut y, algo);
+        assert!(l2(&y, &y_ref) < 1e-10 * norm, "uh {algo:?}");
+    }
+    let mut y2_ref = vec![0.0; n];
+    h2_mvm(1.0, &h2, &x, &mut y2_ref, H2MvmAlgorithm::RowWise);
+    for algo in H2MvmAlgorithm::all() {
+        let mut y = vec![0.0; n];
+        h2_mvm(1.0, &h2, &x, &mut y, algo);
+        assert!(l2(&y, &y2_ref) < 1e-10 * norm, "h2 {algo:?}");
+    }
+}
+
+#[test]
+fn alpha_scaling_and_accumulation() {
+    let h = build(1, 1e-8);
+    let n = h.nrows();
+    let mut rng = Rng::new(24);
+    let x = rng.vector(n);
+    // y := 2Ax computed as two accumulations of alpha=1
+    let mut y1 = vec![0.0; n];
+    mvm(1.0, &h, &x, &mut y1, MvmAlgorithm::ClusterLists);
+    mvm(1.0, &h, &x, &mut y1, MvmAlgorithm::ClusterLists);
+    let mut y2 = vec![0.0; n];
+    mvm(2.0, &h, &x, &mut y2, MvmAlgorithm::ClusterLists);
+    assert!(l2(&y1, &y2) < 1e-12 * y2.iter().map(|v| v * v).sum::<f64>().sqrt());
+}
+
+/// End-to-end: BEM system solve with CG on the H-matrix operator, compressed
+/// and uncompressed — solutions must agree; the SLP operator is SPD.
+#[test]
+fn cg_solve_end_to_end() {
+    let h = build(2, 1e-8);
+    let n = h.nrows();
+    let mut rng = Rng::new(25);
+    let b = rng.vector(n);
+
+    let op = (n, |x: &[f64], y: &mut [f64]| mvm(1.0, &h, x, y, MvmAlgorithm::ClusterLists));
+    let (x1, s1) = cg(&op, &b, 1e-10, 2000);
+    assert!(s1.converged, "uncompressed CG residual {}", s1.residual);
+
+    let mut hz = h.clone();
+    hz.compress(&CompressionConfig::aflp(1e-8));
+    let opz = (n, |x: &[f64], y: &mut [f64]| mvm(1.0, &hz, x, y, MvmAlgorithm::ClusterLists));
+    let (x2, s2) = cg(&opz, &b, 1e-8, 2000);
+    assert!(s2.converged, "compressed CG residual {}", s2.residual);
+
+    let xnorm: f64 = x1.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(l2(&x1, &x2) < 1e-3 * xnorm, "solutions diverge: {}", l2(&x1, &x2) / xnorm);
+}
+
+#[test]
+fn single_threaded_pool_still_correct() {
+    // HMATC_THREADS is read once per process; instead verify via a dedicated
+    // small pool by running the sequential algorithm against parallel ones
+    let h = build(2, 1e-6);
+    let n = h.nrows();
+    let mut rng = Rng::new(26);
+    let x = rng.vector(n);
+    let mut ys = vec![0.0; n];
+    mvm(1.0, &h, &x, &mut ys, MvmAlgorithm::Seq);
+    let mut yp = vec![0.0; n];
+    mvm(1.0, &h, &x, &mut yp, MvmAlgorithm::ClusterLists);
+    assert!(l2(&ys, &yp) < 1e-12 * ys.iter().map(|v| v * v).sum::<f64>().sqrt().max(1.0));
+}

@@ -1,0 +1,155 @@
+//! Property-based tests (seeded PRNG sweeps — no proptest in the sandbox):
+//! codec round-trip bounds, cluster/block tree invariants, MVM linearity.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::compress::{max_rel_error, Blob, Codec};
+use hmatc::geometry::{fibonacci_sphere, random_cube};
+use hmatc::util::Rng;
+use std::sync::Arc;
+
+/// Codec round-trip: for ANY data distribution and ANY eps in range, the
+/// per-value relative error stays ≤ eps (100 random cases per codec).
+#[test]
+fn prop_codec_roundtrip_error_bound() {
+    let mut rng = Rng::new(777);
+    for case in 0..100 {
+        let n = 1 + rng.below(400);
+        let scale = 10f64.powf(rng.range(-12.0, 12.0));
+        let spread = 10f64.powf(rng.range(0.0, 6.0));
+        let data: Vec<f64> = (0..n)
+            .map(|_| {
+                let v = rng.normal() * scale * spread.powf(rng.uniform());
+                if rng.below(20) == 0 {
+                    0.0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let eps = 10f64.powf(rng.range(-12.0, -1.0));
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let blob = Blob::compress(codec, &data, eps);
+            let err = max_rel_error(&blob, &data);
+            assert!(err <= eps, "case {case} {codec:?}: n={n} eps={eps} err={err}");
+        }
+    }
+}
+
+/// Random access equals bulk decode at arbitrary indices.
+#[test]
+fn prop_random_access_consistency() {
+    let mut rng = Rng::new(778);
+    for _ in 0..50 {
+        let n = 1 + rng.below(1000);
+        let data: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let eps = 10f64.powf(rng.range(-10.0, -2.0));
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let blob = Blob::compress(codec, &data, eps);
+            let bulk = blob.to_vec();
+            for _ in 0..20 {
+                let i = rng.below(n);
+                assert_eq!(blob.get(i), bulk[i]);
+            }
+        }
+    }
+}
+
+/// Cluster tree invariants over random point clouds: permutation validity,
+/// disjoint children covering the parent, leaf size bound.
+#[test]
+fn prop_cluster_tree_invariants() {
+    let mut rng = Rng::new(779);
+    for case in 0..30 {
+        let n = 10 + rng.below(2000);
+        let n_min = 1 + rng.below(100);
+        let pts = if case % 2 == 0 { random_cube(n, &mut rng) } else { fibonacci_sphere(n) };
+        let ct = ClusterTree::build(&pts, n_min);
+        // permutation property
+        let mut seen = vec![false; n];
+        for &e in &ct.perm {
+            assert!(!seen[e], "case {case}: duplicate perm entry");
+            seen[e] = true;
+        }
+        // children partition parents
+        for nd in &ct.nodes {
+            if nd.is_leaf() {
+                assert!(nd.size() <= n_min.max(1), "case {case}: leaf too big");
+                continue;
+            }
+            let mut ranges: Vec<_> = nd.children.iter().map(|&c| ct.node(c).range()).collect();
+            ranges.sort_by_key(|r| r.start);
+            assert_eq!(ranges.first().unwrap().start, nd.begin);
+            assert_eq!(ranges.last().unwrap().end, nd.end);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "case {case}: gap/overlap");
+            }
+        }
+    }
+}
+
+/// Block tree tiles the product index set exactly, for random geometries and
+/// admissibility parameters.
+#[test]
+fn prop_block_tree_partition() {
+    let mut rng = Rng::new(780);
+    for case in 0..10 {
+        let n = 50 + rng.below(400);
+        let pts = random_cube(n, &mut rng);
+        let n_min = 8 + rng.below(32);
+        let eta = rng.range(0.5, 4.0);
+        let ct = Arc::new(ClusterTree::build(&pts, n_min));
+        let bt = BlockTree::build(&ct, &ct, &StdAdmissibility::new(eta));
+        bt.validate_partition().unwrap_or_else(|e| panic!("case {case}: {e}"));
+    }
+}
+
+/// MVM is linear: A(ax + by) = aAx + bAy for random H-matrices.
+#[test]
+fn prop_mvm_linearity() {
+    use hmatc::hmatrix::HMatrix;
+    use hmatc::kernelfn::{ExpCovariance, MatrixGen};
+    use hmatc::lowrank::AcaOptions;
+    use hmatc::mvm::{mvm, MvmAlgorithm};
+
+    let mut rng = Rng::new(781);
+    for _ in 0..5 {
+        let n = 100 + rng.below(300);
+        let pts = random_cube(n, &mut rng);
+        let gen = ExpCovariance::new(pts, rng.range(0.1, 1.0));
+        let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-8));
+
+        let x1 = rng.vector(n);
+        let x2 = rng.vector(n);
+        let (a, b) = (rng.range(-2.0, 2.0), rng.range(-2.0, 2.0));
+        let xc: Vec<f64> = x1.iter().zip(&x2).map(|(u, v)| a * u + b * v).collect();
+
+        let mut y_combined = vec![0.0; n];
+        mvm(1.0, &h, &xc, &mut y_combined, MvmAlgorithm::ClusterLists);
+        let mut y_sep = vec![0.0; n];
+        mvm(a, &h, &x1, &mut y_sep, MvmAlgorithm::ClusterLists);
+        mvm(b, &h, &x2, &mut y_sep, MvmAlgorithm::ClusterLists);
+
+        let norm: f64 = y_combined.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-30);
+        let diff: f64 = y_combined.iter().zip(&y_sep).map(|(u, v)| (u - v) * (u - v)).sum::<f64>().sqrt();
+        assert!(diff < 1e-10 * norm, "linearity violated: {diff} vs {norm}");
+    }
+}
+
+/// Byte size monotonicity: coarser eps never needs more bytes.
+#[test]
+fn prop_bytes_monotone_in_eps() {
+    let mut rng = Rng::new(782);
+    for _ in 0..30 {
+        let n = 64 + rng.below(512);
+        let data: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let e1 = 10f64.powf(rng.range(-6.0, -1.0));
+        let e2 = e1 * 10f64.powf(rng.range(-6.0, -1.0)); // strictly finer
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let b1 = Blob::compress(codec, &data, e1).byte_size();
+            let b2 = Blob::compress(codec, &data, e2).byte_size();
+            assert!(b1 <= b2, "{codec:?}: eps {e1} → {b1} bytes, eps {e2} → {b2} bytes");
+        }
+    }
+}
