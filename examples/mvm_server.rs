@@ -1,6 +1,9 @@
 //! Coordinator demo: the MVM server batches concurrent right-hand sides and
-//! executes one multi-RHS traversal per batch; optionally offloads the dense
-//! near-field to the AOT JAX/Pallas tile kernel via PJRT.
+//! executes one multi-RHS product per batch. The server is generic over the
+//! `HOperator` trait, so the same loop serves all three hierarchical formats
+//! (H, uniform-H, H²) — here each behind a precomputed execution plan
+//! (`hmatc::plan`) for zero-allocation steady-state serving. Optionally
+//! offloads the dense near-field to the AOT JAX/Pallas tile kernel via PJRT.
 //!
 //! Run: `cargo run --release --example mvm_server -- --requests 128 --batch 8`
 //! (PJRT offload check requires `make artifacts` first.)
@@ -12,27 +15,11 @@ use hmatc::util::{fmt_bytes, fmt_secs, Rng, Timer};
 use std::sync::Arc;
 use std::time::Duration;
 
-fn main() {
-    let args = Args::from_env();
-    let level = args.num_or("level", 4usize);
-    let eps = args.num_or("eps", 1e-6f64);
-    let nreq = args.num_or("requests", 128usize);
-    let max_batch = args.num_or("batch", 8usize);
-
-    let geom = hmatc::geometry::icosphere(level);
-    let gen = LaplaceSlp::new(&geom);
-    let ct = Arc::new(ClusterTree::build(gen.points(), 64));
-    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
-    let mut h = HMatrix::build(&bt, &gen, &hmatc::lowrank::AcaOptions::with_eps(eps));
-    h.compress(&CompressionConfig::aflp(eps));
-    let h = Arc::new(h);
-    let n = h.nrows();
-    println!("serving compressed H-matrix: n = {n}, {}", fmt_bytes(h.byte_size()));
-
-    let server = Arc::new(MvmServer::start(
-        h.clone(),
-        BatchPolicy { max_batch, linger: Duration::from_micros(300) },
-    ));
+fn serve(op: Arc<dyn HOperator>, nreq: usize, max_batch: usize) {
+    let name = op.format_name();
+    let n = op.ncols();
+    println!("\nserving {} operator: n = {}, {}", name, n, fmt_bytes(op.byte_size()));
+    let server = Arc::new(MvmServer::start(op, BatchPolicy { max_batch, linger: Duration::from_micros(300) }));
 
     // closed-loop clients
     let nclients = 4;
@@ -52,7 +39,8 @@ fn main() {
     let wall = t.elapsed();
     let m = server.metrics.snapshot();
     println!(
-        "{} requests in {} → {:.1} req/s | {} batches (avg size {:.2}) | p50 {} p99 {} | {:.2} GB/s effective",
+        "{}: {} requests in {} → {:.1} req/s | {} batches (avg size {:.2}) | p50 {} p99 {} | {:.2} GB/s effective",
+        name,
         m.requests,
         fmt_secs(wall),
         m.requests as f64 / wall,
@@ -62,6 +50,39 @@ fn main() {
         fmt_secs(m.p99_latency),
         m.effective_gbs
     );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let level = args.num_or("level", 4usize);
+    let eps = args.num_or("eps", 1e-6f64);
+    let nreq = args.num_or("requests", 128usize);
+    let max_batch = args.num_or("batch", 8usize);
+
+    let geom = hmatc::geometry::icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 64));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    let h = HMatrix::build(&bt, &gen, &hmatc::lowrank::AcaOptions::with_eps(eps));
+
+    // all three formats of the same compressed operator, each behind a plan
+    let cfg = CompressionConfig::aflp(eps);
+    let mut uh = hmatc::uniform::build_from_h(&h, eps, hmatc::uniform::CouplingKind::Combined);
+    let mut h2 = hmatc::h2::build_from_h(&h, eps);
+    let mut hz = h;
+    hz.compress(&cfg);
+    uh.compress(&cfg);
+    h2.compress(&cfg);
+
+    let planned = PlannedOperator::from_h(Arc::new(hz));
+    let st = planned.plan_stats();
+    println!(
+        "H plan: {} tasks, {} levels, ≤{} shards, {} scratch f64",
+        st.tasks, st.levels, st.max_shards, st.scratch_f64
+    );
+    serve(Arc::new(planned), nreq, max_batch);
+    serve(Arc::new(PlannedOperator::from_uniform(Arc::new(uh))), nreq, max_batch);
+    serve(Arc::new(PlannedOperator::from_h2(Arc::new(h2))), nreq, max_batch);
 
     // PJRT offload demo (dense near-field on the AOT Pallas tile kernel)
     #[cfg(feature = "pjrt")]

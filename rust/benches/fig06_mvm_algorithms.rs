@@ -9,8 +9,9 @@
 //! mutex/atomic variants remain visible.
 
 use hmatc::bench::workloads::{Formats, Problem};
-use hmatc::bench::{bench_fn, default_eps, default_levels, write_result, Table};
+use hmatc::bench::{bench_fn, default_eps, default_levels, write_bench_json, write_result, Table};
 use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::plan::{Arena, H2Plan, HPlan, UniPlan};
 use hmatc::util::args::Args;
 use hmatc::util::json::Json;
 use hmatc::util::Rng;
@@ -33,14 +34,18 @@ fn main() {
         let mut t = Table::new(&["format", "algorithm", "median", "GB/s"]);
         let mut doc = vec![("n", Json::from(n))];
 
-        // the stacked layout is precomputed once (like the paper's setup) —
-        // `mvm(.., Stacked)` would rebuild it per product
+        // precomputed layouts/plans are built once (like the paper's setup) —
+        // the enum dispatch in `mvm(..)` would rebuild them per product
         let stacked = hmatc::mvm::hmvm::StackedH::new(&f.h);
+        let h_plan = HPlan::build(&f.h);
+        let uh_plan = UniPlan::build(&f.uh);
+        let h2_plan = H2Plan::build(&f.h2);
+        let mut arena = Arena::new();
         for algo in MvmAlgorithm::all() {
-            let r = if algo == MvmAlgorithm::Stacked {
-                bench_fn(1, 5, 0.02, || hmatc::mvm::hmvm::stacked_with(&stacked, 1.0, &f.h, &x, &mut y))
-            } else {
-                bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, algo))
+            let r = match algo {
+                MvmAlgorithm::Stacked => bench_fn(1, 5, 0.02, || hmatc::mvm::hmvm::stacked_with(&stacked, 1.0, &f.h, &x, &mut y)),
+                MvmAlgorithm::Plan => bench_fn(1, 5, 0.02, || h_plan.execute(&f.h, 1.0, &x, &mut y, &mut arena)),
+                _ => bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, algo)),
             };
             t.row(vec![
                 "H".into(),
@@ -51,7 +56,10 @@ fn main() {
             doc.push((algo.name(), r.median.into()));
         }
         for algo in UniMvmAlgorithm::all() {
-            let r = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, algo));
+            let r = match algo {
+                UniMvmAlgorithm::Plan => bench_fn(1, 5, 0.02, || uh_plan.execute(&f.uh, 1.0, &x, &mut y, &mut arena)),
+                _ => bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, algo)),
+            };
             t.row(vec![
                 "UH".into(),
                 algo.name().into(),
@@ -62,10 +70,14 @@ fn main() {
                 UniMvmAlgorithm::Mutex => ("uh mutex", r.median.into()),
                 UniMvmAlgorithm::RowWise => ("uh row wise", r.median.into()),
                 UniMvmAlgorithm::SepCoupling => ("uh sep coupling", r.median.into()),
+                UniMvmAlgorithm::Plan => ("uh plan", r.median.into()),
             });
         }
         for algo in H2MvmAlgorithm::all() {
-            let r = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, algo));
+            let r = match algo {
+                H2MvmAlgorithm::Plan => bench_fn(1, 5, 0.02, || h2_plan.execute(&f.h2, 1.0, &x, &mut y, &mut arena)),
+                _ => bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, algo)),
+            };
             t.row(vec![
                 "H2".into(),
                 algo.name().into(),
@@ -75,6 +87,7 @@ fn main() {
             doc.push(match algo {
                 H2MvmAlgorithm::Mutex => ("h2 mutex", r.median.into()),
                 H2MvmAlgorithm::RowWise => ("h2 row wise", r.median.into()),
+                H2MvmAlgorithm::Plan => ("h2 plan", r.median.into()),
             });
         }
         t.print();
@@ -90,22 +103,29 @@ fn main() {
         let mut rng = Rng::new(2);
         let x = rng.vector(n);
         let mut y = vec![0.0; n];
+        let h_plan = HPlan::build(&f.h);
+        let mut arena = Arena::new();
         let rh = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists));
+        let rp = bench_fn(1, 5, 0.02, || h_plan.execute(&f.h, 1.0, &x, &mut y, &mut arena));
         let ru = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise));
         let r2 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise));
         println!(
-            "eps {e:.0e}: H {} | UH {} | H2 {}",
+            "eps {e:.0e}: H {} | H plan {} | UH {} | H2 {}",
             hmatc::util::fmt_secs(rh.median),
+            hmatc::util::fmt_secs(rp.median),
             hmatc::util::fmt_secs(ru.median),
             hmatc::util::fmt_secs(r2.median)
         );
         eps_out.push(Json::obj(vec![
             ("eps", e.into()),
             ("h", rh.median.into()),
+            ("h plan", rp.median.into()),
             ("uh", ru.median.into()),
             ("h2", r2.median.into()),
         ]));
     }
 
-    write_result("fig06_mvm_algorithms", &Json::obj(vec![("vs_n", Json::arr(out)), ("vs_eps", Json::arr(eps_out))]));
+    let doc = Json::obj(vec![("vs_n", Json::arr(out)), ("vs_eps", Json::arr(eps_out))]);
+    write_result("fig06_mvm_algorithms", &doc);
+    write_bench_json("fig06", &doc);
 }

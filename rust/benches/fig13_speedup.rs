@@ -1,46 +1,91 @@
 //! Figure 13 — speedup of compressed MVM (AFLP and FPX) over uncompressed
-//! MVM for H, UH and H², vs n and vs ε.
+//! MVM for H, UH and H², vs n and vs ε. Each format is measured through its
+//! fastest recursive traversal *and* through the precomputed execution plan
+//! (`hmatc::plan`), so the plan layer shows up in the speedup trajectory.
 //!
 //! Expected shape (paper): ≈2–3× for H, 1.5–2.5× for UH, less for H²
 //! (none at the finest ε); AFLP ≥ FPX in total speedup (better ratio beats
 //! cheaper decode); speedups shrink as ε→0 and grow with n.
 
 use hmatc::bench::workloads::{Formats, Problem};
-use hmatc::bench::{bench_fn, default_eps, default_levels, write_result, Table};
+use hmatc::bench::{bench_fn, default_eps, default_levels, write_bench_json, write_result, Table};
 use hmatc::compress::{Codec, CompressionConfig};
 use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::plan::{Arena, H2Plan, HPlan, UniPlan};
 use hmatc::util::args::Args;
 use hmatc::util::json::Json;
 use hmatc::util::Rng;
 
 struct Speedups {
     h: f64,
+    h_plan: f64,
     uh: f64,
+    uh_plan: f64,
     h2: f64,
+    h2_plan: f64,
+}
+
+struct Timings {
+    h: f64,
+    h_plan: f64,
+    uh: f64,
+    uh_plan: f64,
+    h2: f64,
+    h2_plan: f64,
+}
+
+fn time_formats(f: &Formats, x: &[f64], y: &mut [f64]) -> Timings {
+    let h_plan = HPlan::build(&f.h);
+    let uh_plan = UniPlan::build(&f.uh);
+    let h2_plan = H2Plan::build(&f.h2);
+    let mut arena = Arena::new();
+    Timings {
+        h: bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, x, y, MvmAlgorithm::ClusterLists)).median,
+        h_plan: bench_fn(1, 5, 0.02, || h_plan.execute(&f.h, 1.0, x, y, &mut arena)).median,
+        uh: bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, x, y, UniMvmAlgorithm::RowWise)).median,
+        uh_plan: bench_fn(1, 5, 0.02, || uh_plan.execute(&f.uh, 1.0, x, y, &mut arena)).median,
+        h2: bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, x, y, H2MvmAlgorithm::RowWise)).median,
+        h2_plan: bench_fn(1, 5, 0.02, || h2_plan.execute(&f.h2, 1.0, x, y, &mut arena)).median,
+    }
 }
 
 fn measure(p: &Problem, f0: &Formats, eps: f64, codec: Codec) -> Speedups {
-    let f = Formats { h: f0.h.clone(), uh: f0.uh.clone(), h2: f0.h2.clone() };
     let n = p.n();
     let mut rng = Rng::new(3);
     let x = rng.vector(n);
     let mut y = vec![0.0; n];
 
-    let th0 = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists)).median;
-    let tu0 = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise)).median;
-    let t20 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise)).median;
+    let t0 = time_formats(f0, &x, &mut y);
 
-    let mut f = f;
+    let mut f = Formats { h: f0.h.clone(), uh: f0.uh.clone(), h2: f0.h2.clone() };
     let cfg = CompressionConfig { codec, eps, valr: true };
     f.h.compress(&cfg);
     f.uh.compress(&cfg);
     f.h2.compress(&cfg);
 
-    let th1 = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists)).median;
-    let tu1 = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise)).median;
-    let t21 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise)).median;
+    let t1 = time_formats(&f, &x, &mut y);
 
-    Speedups { h: th0 / th1, uh: tu0 / tu1, h2: t20 / t21 }
+    Speedups {
+        h: t0.h / t1.h,
+        h_plan: t0.h_plan / t1.h_plan,
+        uh: t0.uh / t1.uh,
+        uh_plan: t0.uh_plan / t1.uh_plan,
+        h2: t0.h2 / t1.h2,
+        h2_plan: t0.h2_plan / t1.h2_plan,
+    }
+}
+
+fn row_json(n_or_eps: (&str, Json), codec: Codec, s: &Speedups) -> Json {
+    Json::obj(vec![
+        n_or_eps,
+        ("codec", codec.name().into()),
+        ("h", s.h.into()),
+        ("h plan", s.h_plan.into()),
+        ("uh", s.uh.into()),
+        ("uh plan", s.uh_plan.into()),
+        ("h2", s.h2.into()),
+        ("h2 plan", s.h2_plan.into()),
+    ])
 }
 
 fn main() {
@@ -49,7 +94,7 @@ fn main() {
     let eps = 1e-6;
 
     println!("\n== Fig. 13: speedup of compressed vs uncompressed MVM, vs n (eps = {eps:.0e}) ==");
-    let mut t = Table::new(&["n", "codec", "H", "UH", "H2"]);
+    let mut t = Table::new(&["n", "codec", "H", "H plan", "UH", "UH plan", "H2", "H2 plan"]);
     let mut vs_n = Vec::new();
     for &level in &levels {
         let p = Problem::new(level);
@@ -60,23 +105,20 @@ fn main() {
                 p.n().to_string(),
                 codec.name().into(),
                 format!("{:.2}x", s.h),
+                format!("{:.2}x", s.h_plan),
                 format!("{:.2}x", s.uh),
+                format!("{:.2}x", s.uh_plan),
                 format!("{:.2}x", s.h2),
+                format!("{:.2}x", s.h2_plan),
             ]);
-            vs_n.push(Json::obj(vec![
-                ("n", p.n().into()),
-                ("codec", codec.name().into()),
-                ("h", s.h.into()),
-                ("uh", s.uh.into()),
-                ("h2", s.h2.into()),
-            ]));
+            vs_n.push(row_json(("n", p.n().into()), codec, &s));
         }
     }
     t.print();
 
     println!("\n== Fig. 13: speedup vs eps (n fixed) ==");
     let p = Problem::new(*levels.last().unwrap());
-    let mut t2 = Table::new(&["eps", "codec", "H", "UH", "H2"]);
+    let mut t2 = Table::new(&["eps", "codec", "H", "H plan", "UH", "UH plan", "H2", "H2 plan"]);
     let mut vs_eps = Vec::new();
     for &eps in &default_eps() {
         let f0 = Formats::build(&p, eps);
@@ -86,19 +128,18 @@ fn main() {
                 format!("{eps:.0e}"),
                 codec.name().into(),
                 format!("{:.2}x", s.h),
+                format!("{:.2}x", s.h_plan),
                 format!("{:.2}x", s.uh),
+                format!("{:.2}x", s.uh_plan),
                 format!("{:.2}x", s.h2),
+                format!("{:.2}x", s.h2_plan),
             ]);
-            vs_eps.push(Json::obj(vec![
-                ("eps", eps.into()),
-                ("codec", codec.name().into()),
-                ("h", s.h.into()),
-                ("uh", s.uh.into()),
-                ("h2", s.h2.into()),
-            ]));
+            vs_eps.push(row_json(("eps", eps.into()), codec, &s));
         }
     }
     t2.print();
 
-    write_result("fig13_speedup", &Json::obj(vec![("vs_n", Json::arr(vs_n)), ("vs_eps", Json::arr(vs_eps))]));
+    let doc = Json::obj(vec![("vs_n", Json::arr(vs_n)), ("vs_eps", Json::arr(vs_eps))]);
+    write_result("fig13_speedup", &doc);
+    write_bench_json("fig13", &doc);
 }

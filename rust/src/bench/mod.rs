@@ -22,6 +22,13 @@ pub fn write_result(name: &str, doc: &Json) {
     let _ = std::fs::write(path, doc.to_string());
 }
 
+/// Write a machine-readable result file `BENCH_<tag>.json` in the working
+/// directory — a stable filename the perf-trajectory tooling scrapes across
+/// runs (in addition to the archive under `bench_results/`).
+pub fn write_bench_json(tag: &str, doc: &Json) {
+    let _ = std::fs::write(format!("BENCH_{tag}.json"), doc.to_string());
+}
+
 /// Standard benchmark problem sizes (icosphere levels → n = 20·4^level).
 /// The default keeps a full `cargo bench` sweep feasible on this single-core
 /// sandbox; pass `--large` (or set `HMATC_BENCH_LARGE=1`) for the paper-style

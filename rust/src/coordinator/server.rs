@@ -3,11 +3,14 @@
 //! No tokio in the sandbox — the server uses std threads + channels, which is
 //! adequate: the hot path is the batched MVM itself, and the coordinator adds
 //! only queueing.
+//!
+//! The server is generic over [`HOperator`]: it serves any hierarchical
+//! format (H, uniform-H, H²; compressed or not), either directly or through a
+//! [`crate::plan::PlannedOperator`] for the zero-allocation schedule path.
 
 use super::metrics::Metrics;
-use crate::hmatrix::HMatrix;
 use crate::la::DMatrix;
-use crate::mvm::h_mvm_multi;
+use crate::plan::HOperator;
 use crate::util::Timer;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -48,7 +51,7 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A synchronous MVM server over an H-matrix.
+/// A synchronous MVM server over any hierarchical matrix operator.
 pub struct MvmServer {
     tx: Sender<Request>,
     worker: Option<std::thread::JoinHandle<()>>,
@@ -57,8 +60,9 @@ pub struct MvmServer {
 }
 
 impl MvmServer {
-    /// Start the worker loop for matrix `m`.
-    pub fn start(m: Arc<HMatrix>, policy: BatchPolicy) -> MvmServer {
+    /// Start the worker loop for operator `m` (an `Arc` of any
+    /// [`HOperator`] — `Arc<HMatrix>` and friends coerce directly).
+    pub fn start(m: Arc<dyn HOperator>, policy: BatchPolicy) -> MvmServer {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Metrics::new());
         let met = metrics.clone();
@@ -98,8 +102,9 @@ impl Drop for MvmServer {
     }
 }
 
-fn worker_loop(m: Arc<HMatrix>, policy: BatchPolicy, rx: Receiver<Request>, metrics: Arc<Metrics>) {
-    let n = m.nrows();
+fn worker_loop(m: Arc<dyn HOperator>, policy: BatchPolicy, rx: Receiver<Request>, metrics: Arc<Metrics>) {
+    let n_in = m.ncols();
+    let n_out = m.nrows();
     let bytes = m.byte_size();
     loop {
         // block for the first request
@@ -123,13 +128,13 @@ fn worker_loop(m: Arc<HMatrix>, policy: BatchPolicy, rx: Receiver<Request>, metr
 
         // assemble the multivector
         let b = batch.len();
-        let mut x = DMatrix::zeros(n, b);
+        let mut x = DMatrix::zeros(n_in, b);
         for (c, r) in batch.iter().enumerate() {
             x.col_mut(c).copy_from_slice(&r.x);
         }
-        let mut y = DMatrix::zeros(n, b);
+        let mut y = DMatrix::zeros(n_out, b);
         let t = Timer::start();
-        h_mvm_multi(1.0, &m, &x, &mut y);
+        m.apply_multi(1.0, &x, &mut y);
         let mvm_secs = t.elapsed();
 
         // record metrics BEFORE delivering replies: clients may snapshot the
@@ -148,6 +153,7 @@ mod tests {
     use super::*;
     use crate::cluster::{BlockTree, ClusterTree, StdAdmissibility};
     use crate::geometry::icosphere;
+    use crate::hmatrix::HMatrix;
     use crate::kernelfn::{LaplaceSlp, MatrixGen};
     use crate::lowrank::AcaOptions;
     use crate::util::Rng;

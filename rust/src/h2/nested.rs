@@ -42,23 +42,23 @@ impl TransferMat {
     }
 
     /// out += Eᵀ s (forward transformation: child coefficients → parent).
+    /// Compressed transfers are streamed chunk-wise; no heap allocation.
     pub fn apply_transposed_add(&self, s: &[f64], out: &mut [f64]) {
         match self {
             TransferMat::Plain(m) => blas::gemv_transposed(1.0, m, s, out),
-            TransferMat::Z { .. } => {
-                let m = self.to_dense();
-                blas::gemv_transposed(1.0, &m, s, out);
+            TransferMat::Z { nrows, ncols, blob } => {
+                crate::mvm::kernels::stream_dot_cols(blob, *nrows, *ncols, s, out);
             }
         }
     }
 
     /// out += E t (backward transformation: parent coefficients → child).
+    /// Compressed transfers are streamed chunk-wise; no heap allocation.
     pub fn apply_add(&self, t: &[f64], out: &mut [f64]) {
         match self {
             TransferMat::Plain(m) => blas::gemv(1.0, m, t, out),
-            TransferMat::Z { .. } => {
-                let m = self.to_dense();
-                blas::gemv(1.0, &m, t, out);
+            TransferMat::Z { nrows, ncols, blob } => {
+                crate::mvm::kernels::stream_axpy_cols(blob, *nrows, *ncols, 1.0, t, out);
             }
         }
     }

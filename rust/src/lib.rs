@@ -13,6 +13,9 @@
 //!   per-column VALR scheme — in [`compress`];
 //! * every matrix-vector multiplication algorithm of §3/§4 (Algorithms 1–8)
 //!   in [`mvm`], running on a custom work-stealing fork-join pool ([`par`]);
+//! * a format-agnostic execution-[`plan`] layer: an operator trait over all
+//!   three formats plus precomputed, statically load-balanced task schedules
+//!   with zero steady-state allocation;
 //! * a PJRT [`runtime`] that executes AOT-lowered JAX/Pallas tile kernels and
 //!   a request-batching MVM server in [`coordinator`];
 //! * the measurement substrate ([`bench`]) used by the per-figure benchmark
@@ -51,6 +54,7 @@ pub mod hmatrix;
 pub mod uniform;
 pub mod h2;
 pub mod mvm;
+pub mod plan;
 pub mod solver;
 pub mod bench;
 pub mod coordinator;
@@ -68,6 +72,7 @@ pub mod prelude {
     pub use crate::la::DMatrix;
     pub use crate::lowrank::AcaOptions;
     pub use crate::mvm::{mvm, H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+    pub use crate::plan::{HOperator, PlannedOperator};
     pub use crate::solver::cg;
     pub use crate::uniform::UniformHMatrix;
 }

@@ -4,7 +4,7 @@
 //! hmatc info
 //! hmatc build   --level 4 --eps 1e-6 [--fmt h|uh|h2] [--codec aflp|fpx] [--compress]
 //! hmatc mvm     --level 4 --eps 1e-6 --fmt h2 --algo "row wise" [--compress --codec aflp]
-//! hmatc serve   --level 4 --eps 1e-6 --requests 256 --batch 8
+//! hmatc serve   --level 4 --eps 1e-6 --requests 256 --batch 8 [--fmt h|uh|h2] [--plan] [--compress]
 //! hmatc solve   --level 3 --eps 1e-6 [--compress]
 //! hmatc roofline
 //! ```
@@ -18,6 +18,7 @@ use hmatc::hmatrix::HMatrix;
 use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
 use hmatc::lowrank::AcaOptions;
 use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::plan::{HOperator, PlannedOperator};
 use hmatc::solver::cg;
 use hmatc::util::args::Args;
 use hmatc::util::{fmt_bytes, fmt_secs, Rng, Timer};
@@ -192,19 +193,62 @@ fn mvm_cmd(args: &Args) {
 
 fn serve_cmd(args: &Args) {
     let p = problem(args);
-    let mut h = build_h(args, &p);
-    if args.flag("compress") {
-        h.compress(&cfg_from(args));
-        println!("compressed: {}", fmt_bytes(h.byte_size()));
-    }
-    let h = Arc::new(h);
+    let h = build_h(args, &p);
+    let eps = args.num_or("eps", 1e-6f64);
+    // any format serves through the HOperator trait; --plan puts the
+    // precomputed zero-allocation schedule executor in front of it
+    let fmt = args.str_or("fmt", "h");
+    let plan = args.flag("plan");
+    let op: Arc<dyn HOperator> = match fmt.as_str() {
+        "h" => {
+            let mut h = h;
+            if args.flag("compress") {
+                h.compress(&cfg_from(args));
+            }
+            let h = Arc::new(h);
+            if plan {
+                Arc::new(PlannedOperator::from_h(h))
+            } else {
+                h
+            }
+        }
+        "uh" => {
+            let mut uh = hmatc::uniform::build_from_h(&h, eps, hmatc::uniform::CouplingKind::Combined);
+            if args.flag("compress") {
+                uh.compress(&cfg_from(args));
+            }
+            let uh = Arc::new(uh);
+            if plan {
+                Arc::new(PlannedOperator::from_uniform(uh))
+            } else {
+                uh
+            }
+        }
+        "h2" => {
+            let mut h2 = hmatc::h2::build_from_h(&h, eps);
+            if args.flag("compress") {
+                h2.compress(&cfg_from(args));
+            }
+            let h2 = Arc::new(h2);
+            if plan {
+                Arc::new(PlannedOperator::from_h2(h2))
+            } else {
+                h2
+            }
+        }
+        other => {
+            eprintln!("unknown format '{other}' (h|uh|h2)");
+            std::process::exit(2);
+        }
+    };
+    println!("serving {} operator ({})", op.format_name(), fmt_bytes(op.byte_size()));
     let nreq = args.num_or("requests", 256usize);
     let batch = args.num_or("batch", 8usize);
+    let n = op.ncols();
     let server = Arc::new(MvmServer::start(
-        h.clone(),
+        op,
         BatchPolicy { max_batch: batch, linger: std::time::Duration::from_micros(args.num_or("linger-us", 200u64)) },
     ));
-    let n = h.nrows();
     let t = Timer::start();
     // closed-loop clients from a few threads
     let nclients = 4usize;

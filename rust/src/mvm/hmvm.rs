@@ -1,10 +1,11 @@
 //! H-matrix MVM algorithms (paper §3.1, Fig. 6 left).
 
-use super::kernels::apply_block;
+use super::kernels::{apply_block, apply_block_scratch};
 use super::{update_chunks, SharedVec, SPAWN_LEVELS};
 use crate::hmatrix::{BlockData, HMatrix};
 use crate::la::{blas, DMatrix};
 use crate::par::{as_atomic_f64, atomic_add_f64, ThreadPool};
+use crate::plan::BufferPool;
 use std::sync::Mutex;
 
 /// Algorithm 1: sequential iteration over all leaf blocks.
@@ -21,7 +22,8 @@ pub fn seq(alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64]) {
 
 /// Algorithm 2: one task per leaf block; the local result is scattered into
 /// `y` chunk-by-chunk (leaf clusters of the row cluster tree), each chunk
-/// guarded by a mutex (HLIBpro scheme [23]).
+/// guarded by a mutex (HLIBpro scheme [23]). Per-task temporaries come from
+/// the global [`BufferPool`] — steady state performs no heap allocation.
 pub fn chunks(alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64]) {
     let bt = &m.bt;
     let ct = &bt.row_ct;
@@ -38,10 +40,14 @@ pub fn chunks(alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64]) {
                 let rr = bt.row_ct.node(nd.row).range();
                 let cr = bt.col_ct.node(nd.col).range();
                 let b = m.blocks[leaf].as_ref().expect("missing leaf");
-                let mut t = vec![0.0; rr.len()];
-                apply_block(alpha, b, &x[cr], &mut t);
+                let bufs = BufferPool::global();
+                let mut t = bufs.take(rr.len());
+                let mut scratch = bufs.take(b.rank());
+                apply_block_scratch(alpha, b, &x[cr], &mut t, &mut scratch);
                 // scatter into y per leaf-cluster chunk (recursive descent)
                 update_chunks(ct, nd.row, rr.start, &t, &yy, locks);
+                bufs.put(t);
+                bufs.put(scratch);
             });
         }
     });
@@ -232,7 +238,8 @@ pub fn thread_local(alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// Atomic updates per coefficient (Ida et al. [21]).
+/// Atomic updates per coefficient (Ida et al. [21]). Pooled temporaries, as
+/// in [`chunks`].
 pub fn atomic(alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64]) {
     let bt = &m.bt;
     let ay = as_atomic_f64(y);
@@ -244,13 +251,17 @@ pub fn atomic(alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64]) {
                 let rr = bt.row_ct.node(nd.row).range();
                 let cr = bt.col_ct.node(nd.col).range();
                 let b = m.blocks[leaf].as_ref().unwrap();
-                let mut t = vec![0.0; rr.len()];
-                apply_block(alpha, b, &x[cr], &mut t);
-                for (i, v) in rr.zip(t) {
-                    if v != 0.0 {
-                        atomic_add_f64(&ay[i], v);
+                let bufs = BufferPool::global();
+                let mut t = bufs.take(rr.len());
+                let mut scratch = bufs.take(b.rank());
+                apply_block_scratch(alpha, b, &x[cr], &mut t, &mut scratch);
+                for (i, v) in rr.zip(t.iter()) {
+                    if *v != 0.0 {
+                        atomic_add_f64(&ay[i], *v);
                     }
                 }
+                bufs.put(t);
+                bufs.put(scratch);
             });
         }
     });

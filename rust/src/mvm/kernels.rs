@@ -13,32 +13,60 @@ use crate::lowrank::LowRank;
 pub const CHUNK: usize = 64;
 
 /// y += alpha · B · x for any block representation.
+///
+/// Thin wrapper around [`apply_block_scratch`] that allocates the rank-sized
+/// temporary itself — hot paths (the plan executor) pass a reusable buffer
+/// instead.
 pub fn apply_block(alpha: f64, b: &BlockData, x: &[f64], y: &mut [f64]) {
+    let mut t = vec![0.0; b.rank()];
+    apply_block_scratch(alpha, b, x, y, &mut t);
+}
+
+/// y += alpha · B · x with a caller-provided scratch buffer of at least
+/// `b.rank()` values; performs no heap allocation for any representation.
+pub fn apply_block_scratch(alpha: f64, b: &BlockData, x: &[f64], y: &mut [f64], scratch: &mut [f64]) {
     match b {
         BlockData::Dense(m) => blas::gemv(alpha, m, x, y),
-        BlockData::LowRank(lr) => lowrank_mvm(alpha, lr, x, y),
+        BlockData::LowRank(lr) => lowrank_mvm_scratch(alpha, lr, x, y, scratch),
         BlockData::ZDense(z) => zgemv_blocked(alpha, z, x, y),
-        BlockData::ZLowRank(z) => zlowrank_mvm(alpha, z, x, y),
+        BlockData::ZLowRank(z) => zlowrank_mvm_scratch(alpha, z, x, y, scratch),
         BlockData::ZLowRankValr(z) => valr_mvm(alpha, z, x, y),
     }
 }
 
-/// y += alpha · Bᵀ · x (adjoint product, Remark 3.2).
+/// y += alpha · Bᵀ · x (adjoint product, Remark 3.2). Thin allocating wrapper
+/// around [`apply_block_transposed_scratch`].
 pub fn apply_block_transposed(alpha: f64, b: &BlockData, x: &[f64], y: &mut [f64]) {
+    let mut t = vec![0.0; b.rank()];
+    apply_block_transposed_scratch(alpha, b, x, y, &mut t);
+}
+
+/// y += alpha · Bᵀ · x with caller-provided scratch (≥ `b.rank()` values);
+/// allocation free.
+pub fn apply_block_transposed_scratch(alpha: f64, b: &BlockData, x: &[f64], y: &mut [f64], scratch: &mut [f64]) {
     match b {
         BlockData::Dense(m) => blas::gemv_transposed(alpha, m, x, y),
         BlockData::LowRank(lr) => {
             // (U Vᵀ)ᵀ x = V (Uᵀ x)
-            let mut t = vec![0.0; lr.rank()];
-            blas::gemv_transposed(1.0, &lr.u, x, &mut t);
-            blas::gemv(alpha, &lr.v, &t, y);
+            let k = lr.rank();
+            if k == 0 {
+                return;
+            }
+            let t = &mut scratch[..k];
+            t.fill(0.0);
+            blas::gemv_transposed(1.0, &lr.u, x, t);
+            blas::gemv(alpha, &lr.v, t, y);
         }
         BlockData::ZDense(z) => zgemv_t_blocked(alpha, z, x, y),
         BlockData::ZLowRank(z) => {
             let k = z.rank;
-            let mut t = vec![0.0; k];
-            stream_dot_cols(&z.u, z.nrows, k, x, &mut t);
-            stream_axpy_cols(&z.v, z.ncols, k, alpha, &t, y);
+            if k == 0 {
+                return;
+            }
+            let t = &mut scratch[..k];
+            t.fill(0.0);
+            stream_dot_cols(&z.u, z.nrows, k, x, t);
+            stream_axpy_cols(&z.v, z.ncols, k, alpha, t, y);
         }
         BlockData::ZLowRankValr(z) => {
             let k = z.rank();
@@ -54,14 +82,23 @@ pub fn apply_block_transposed(alpha: f64, b: &BlockData, x: &[f64], y: &mut [f64
     }
 }
 
-/// y += alpha · U Vᵀ x (two slim gemvs).
+/// y += alpha · U Vᵀ x (two slim gemvs). Thin allocating wrapper around
+/// [`lowrank_mvm_scratch`].
 pub fn lowrank_mvm(alpha: f64, lr: &LowRank, x: &[f64], y: &mut [f64]) {
-    if lr.rank() == 0 {
+    let mut t = vec![0.0; lr.rank()];
+    lowrank_mvm_scratch(alpha, lr, x, y, &mut t);
+}
+
+/// y += alpha · U Vᵀ x with caller-provided scratch (≥ rank values).
+pub fn lowrank_mvm_scratch(alpha: f64, lr: &LowRank, x: &[f64], y: &mut [f64], scratch: &mut [f64]) {
+    let k = lr.rank();
+    if k == 0 {
         return;
     }
-    let mut t = vec![0.0; lr.rank()];
-    blas::gemv_transposed(1.0, &lr.v, x, &mut t);
-    blas::gemv(alpha, &lr.u, &t, y);
+    let t = &mut scratch[..k];
+    t.fill(0.0);
+    blas::gemv_transposed(1.0, &lr.v, x, t);
+    blas::gemv(alpha, &lr.u, t, y);
 }
 
 /// Algorithm 8, *direct* variant: per-entry random-access decompression.
@@ -126,14 +163,22 @@ pub fn zgemv_t_blocked(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
 }
 
 /// y += alpha · U Vᵀ x with fixed-precision compressed factors, streamed.
+/// Thin allocating wrapper around [`zlowrank_mvm_scratch`].
 pub fn zlowrank_mvm(alpha: f64, z: &ZLowRankDirect, x: &[f64], y: &mut [f64]) {
+    let mut t = vec![0.0; z.rank];
+    zlowrank_mvm_scratch(alpha, z, x, y, &mut t);
+}
+
+/// Streamed compressed low-rank MVM with caller-provided scratch (≥ rank).
+pub fn zlowrank_mvm_scratch(alpha: f64, z: &ZLowRankDirect, x: &[f64], y: &mut [f64], scratch: &mut [f64]) {
     let k = z.rank;
     if k == 0 {
         return;
     }
-    let mut t = vec![0.0; k];
-    stream_dot_cols(&z.v, z.ncols, k, x, &mut t);
-    stream_axpy_cols(&z.u, z.nrows, k, alpha, &t, y);
+    let t = &mut scratch[..k];
+    t.fill(0.0);
+    stream_dot_cols(&z.v, z.ncols, k, x, t);
+    stream_axpy_cols(&z.u, z.nrows, k, alpha, t, y);
 }
 
 /// y += alpha · W diag(σ) Xᵀ x with VALR storage, streamed column-wise.
@@ -149,7 +194,7 @@ pub fn valr_mvm(alpha: f64, z: &ZLowRankValr, x: &[f64], y: &mut [f64]) {
 }
 
 /// t[j] += dot(col_j, x) for a column-major compressed matrix blob.
-fn stream_dot_cols(blob: &Blob, nrows: usize, ncols: usize, x: &[f64], t: &mut [f64]) {
+pub(crate) fn stream_dot_cols(blob: &Blob, nrows: usize, ncols: usize, x: &[f64], t: &mut [f64]) {
     let mut buf = [0.0f64; CHUNK];
     for j in 0..ncols {
         let base = j * nrows;
@@ -166,7 +211,7 @@ fn stream_dot_cols(blob: &Blob, nrows: usize, ncols: usize, x: &[f64], t: &mut [
 }
 
 /// y += alpha * Σ_j t[j] * col_j for a column-major compressed matrix blob.
-fn stream_axpy_cols(blob: &Blob, nrows: usize, ncols: usize, alpha: f64, t: &[f64], y: &mut [f64]) {
+pub(crate) fn stream_axpy_cols(blob: &Blob, nrows: usize, ncols: usize, alpha: f64, t: &[f64], y: &mut [f64]) {
     let mut buf = [0.0f64; CHUNK];
     for j in 0..ncols {
         let w = alpha * t[j];
@@ -305,6 +350,36 @@ mod tests {
             for i in 0..35 {
                 assert!((y[i] - y_ref[i]).abs() < 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn scratch_variants_match_allocating_wrappers() {
+        let mut rng = Rng::new(107);
+        let mlr = rand_lr(33, 27, 5, 108);
+        let cfg_valr = CompressionConfig { codec: Codec::Aflp, eps: 1e-10, valr: true };
+        let cfg_fixed = CompressionConfig { codec: Codec::Fpx, eps: 1e-10, valr: false };
+        let reps = vec![
+            BlockData::Dense(mlr.to_dense()),
+            BlockData::LowRank(mlr.clone()),
+            BlockData::Dense(mlr.to_dense()).compress(&CompressionConfig::aflp(1e-10)),
+            BlockData::LowRank(mlr.clone()).compress(&cfg_valr),
+            BlockData::LowRank(mlr.clone()).compress(&cfg_fixed),
+        ];
+        let x = rng.vector(27);
+        let xt = rng.vector(33);
+        let mut scratch = vec![0.0; 16];
+        for (ri, rep) in reps.iter().enumerate() {
+            let mut y1 = vec![0.0; 33];
+            let mut y2 = vec![0.0; 33];
+            apply_block(1.25, rep, &x, &mut y1);
+            apply_block_scratch(1.25, rep, &x, &mut y2, &mut scratch);
+            assert_eq!(y1, y2, "forward rep {ri}");
+            let mut z1 = vec![0.0; 27];
+            let mut z2 = vec![0.0; 27];
+            apply_block_transposed(0.5, rep, &xt, &mut z1);
+            apply_block_transposed_scratch(0.5, rep, &xt, &mut z2, &mut scratch);
+            assert_eq!(z1, z2, "adjoint rep {ri}");
         }
     }
 

@@ -33,6 +33,11 @@ pub enum MvmAlgorithm {
     ThreadLocal,
     /// Atomic per-coefficient updates (Ida et al.).
     Atomic,
+    /// Precomputed execution plan: flattened level-ordered task lists with
+    /// static load balancing and a reusable scratch arena ([`crate::plan`]).
+    /// This variant rebuilds the plan per call; hot paths should hold a
+    /// [`crate::plan::PlannedOperator`] instead.
+    Plan,
 }
 
 impl MvmAlgorithm {
@@ -44,10 +49,11 @@ impl MvmAlgorithm {
             MvmAlgorithm::Stacked => "stacked",
             MvmAlgorithm::ThreadLocal => "thread local",
             MvmAlgorithm::Atomic => "atomic",
+            MvmAlgorithm::Plan => "plan",
         }
     }
 
-    pub fn all() -> [MvmAlgorithm; 6] {
+    pub fn all() -> [MvmAlgorithm; 7] {
         [
             MvmAlgorithm::Seq,
             MvmAlgorithm::Chunks,
@@ -55,6 +61,7 @@ impl MvmAlgorithm {
             MvmAlgorithm::Stacked,
             MvmAlgorithm::ThreadLocal,
             MvmAlgorithm::Atomic,
+            MvmAlgorithm::Plan,
         ]
     }
 }
@@ -68,6 +75,8 @@ pub enum UniMvmAlgorithm {
     RowWise,
     /// Separate row/column coupling matrices (Bruyninckx et al.).
     SepCoupling,
+    /// Precomputed execution plan ([`crate::plan`], rebuilt per call here).
+    Plan,
 }
 
 impl UniMvmAlgorithm {
@@ -76,11 +85,12 @@ impl UniMvmAlgorithm {
             UniMvmAlgorithm::Mutex => "mutex",
             UniMvmAlgorithm::RowWise => "row wise",
             UniMvmAlgorithm::SepCoupling => "sep. coupling",
+            UniMvmAlgorithm::Plan => "plan",
         }
     }
 
-    pub fn all() -> [UniMvmAlgorithm; 3] {
-        [UniMvmAlgorithm::Mutex, UniMvmAlgorithm::RowWise, UniMvmAlgorithm::SepCoupling]
+    pub fn all() -> [UniMvmAlgorithm; 4] {
+        [UniMvmAlgorithm::Mutex, UniMvmAlgorithm::RowWise, UniMvmAlgorithm::SepCoupling, UniMvmAlgorithm::Plan]
     }
 }
 
@@ -91,6 +101,8 @@ pub enum H2MvmAlgorithm {
     Mutex,
     /// Algorithm 7: combined coupling + backward transform, collision free.
     RowWise,
+    /// Precomputed execution plan ([`crate::plan`], rebuilt per call here).
+    Plan,
 }
 
 impl H2MvmAlgorithm {
@@ -98,11 +110,12 @@ impl H2MvmAlgorithm {
         match self {
             H2MvmAlgorithm::Mutex => "mutex",
             H2MvmAlgorithm::RowWise => "row wise",
+            H2MvmAlgorithm::Plan => "plan",
         }
     }
 
-    pub fn all() -> [H2MvmAlgorithm; 2] {
-        [H2MvmAlgorithm::Mutex, H2MvmAlgorithm::RowWise]
+    pub fn all() -> [H2MvmAlgorithm; 3] {
+        [H2MvmAlgorithm::Mutex, H2MvmAlgorithm::RowWise, H2MvmAlgorithm::Plan]
     }
 }
 
@@ -117,6 +130,11 @@ pub fn mvm(alpha: f64, m: &HMatrix, x: &[f64], y: &mut [f64], algo: MvmAlgorithm
         MvmAlgorithm::Stacked => hmvm::stacked(alpha, m, x, y),
         MvmAlgorithm::ThreadLocal => hmvm::thread_local(alpha, m, x, y),
         MvmAlgorithm::Atomic => hmvm::atomic(alpha, m, x, y),
+        MvmAlgorithm::Plan => {
+            let plan = crate::plan::HPlan::lazy(m);
+            let mut arena = crate::plan::Arena::new();
+            plan.execute(m, alpha, x, y, &mut arena);
+        }
     }
 }
 
@@ -128,6 +146,11 @@ pub fn uniform_mvm(alpha: f64, m: &UniformHMatrix, x: &[f64], y: &mut [f64], alg
         UniMvmAlgorithm::Mutex => unimvm::mutex(alpha, m, x, y),
         UniMvmAlgorithm::RowWise => unimvm::row_wise(alpha, m, x, y),
         UniMvmAlgorithm::SepCoupling => unimvm::sep_coupling(alpha, m, x, y),
+        UniMvmAlgorithm::Plan => {
+            let plan = crate::plan::UniPlan::lazy(m);
+            let mut arena = crate::plan::Arena::new();
+            plan.execute(m, alpha, x, y, &mut arena);
+        }
     }
 }
 
@@ -138,6 +161,11 @@ pub fn h2_mvm(alpha: f64, m: &H2Matrix, x: &[f64], y: &mut [f64], algo: H2MvmAlg
     match algo {
         H2MvmAlgorithm::Mutex => h2mvm::mutex(alpha, m, x, y),
         H2MvmAlgorithm::RowWise => h2mvm::row_wise(alpha, m, x, y),
+        H2MvmAlgorithm::Plan => {
+            let plan = crate::plan::H2Plan::lazy(m);
+            let mut arena = crate::plan::Arena::new();
+            plan.execute(m, alpha, x, y, &mut arena);
+        }
     }
 }
 
@@ -164,6 +192,14 @@ impl SharedVec {
     pub unsafe fn range_mut(&self, r: std::ops::Range<usize>) -> &mut [f64] {
         debug_assert!(r.end <= self.len);
         std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+
+    /// SAFETY: caller must guarantee no concurrent *write* to the range (the
+    /// plan executor reads coefficient slots written in an earlier, already
+    /// joined level).
+    pub unsafe fn range(&self, r: std::ops::Range<usize>) -> &[f64] {
+        debug_assert!(r.end <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(r.start), r.end - r.start)
     }
 }
 

@@ -1,0 +1,137 @@
+//! Reusable scratch storage for plan execution, plus a per-worker buffer
+//! pool for the legacy per-task traversals.
+//!
+//! [`Arena`] buffers only ever grow ([`Arena::ensure`]), so after the first
+//! product on a given plan, steady-state execution performs zero heap
+//! allocations.
+
+use std::cell::RefCell;
+
+/// Scratch storage reused across plan executions: per-shard kernel scratch
+/// plus flat coefficient buffers for the forward (`s`) and backward (`t`)
+/// transform slots of the uniform/H² schedules.
+#[derive(Default)]
+pub struct Arena {
+    shard: Vec<Vec<f64>>,
+    s: Vec<f64>,
+    t: Vec<f64>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Grow (never shrink) to at least `nshards` shard buffers of `scratch`
+    /// values each, an `s` buffer of `s_len` and a `t` buffer of `t_len`.
+    pub fn ensure(&mut self, nshards: usize, scratch: usize, s_len: usize, t_len: usize) {
+        if self.shard.len() < nshards {
+            self.shard.resize_with(nshards, Vec::new);
+        }
+        for b in &mut self.shard {
+            if b.len() < scratch {
+                b.resize(scratch, 0.0);
+            }
+        }
+        if self.s.len() < s_len {
+            self.s.resize(s_len, 0.0);
+        }
+        if self.t.len() < t_len {
+            self.t.resize(t_len, 0.0);
+        }
+    }
+
+    /// Disjoint mutable views of (shard buffers, s slots, t slots).
+    pub fn split(&mut self) -> (&mut [Vec<f64>], &mut [f64], &mut [f64]) {
+        (&mut self.shard, &mut self.s, &mut self.t)
+    }
+
+    /// Currently reserved f64 values (diagnostics).
+    pub fn reserved(&self) -> usize {
+        self.shard.iter().map(|b| b.len()).sum::<usize>() + self.s.len() + self.t.len()
+    }
+}
+
+/// A pool of reusable `Vec<f64>` buffers for transient per-task temporaries
+/// in the legacy traversals (`chunks`, `atomic`). Free lists are
+/// **per worker thread** (the pool's workers are long-lived), so check-out /
+/// check-in touch no shared lock — a global mutex here would serialize
+/// exactly the fine-grained parallel loops this pool serves. Buffers are
+/// recycled with their capacity, so the steady state allocates nothing.
+pub struct BufferPool {
+    _priv: (),
+}
+
+thread_local! {
+    static FREE: RefCell<Vec<Vec<f64>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Per-thread bound on pooled buffers — beyond this, returned buffers are
+/// dropped (bounds memory under bursty task counts).
+const POOL_CAP: usize = 32;
+
+impl BufferPool {
+    pub fn global() -> &'static BufferPool {
+        static POOL: BufferPool = BufferPool { _priv: () };
+        &POOL
+    }
+
+    /// Check out a zeroed buffer of exactly `len` values.
+    pub fn take(&self, len: usize) -> Vec<f64> {
+        let mut v = FREE.with(|f| f.borrow_mut().pop()).unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer to this thread's free list.
+    pub fn put(&self, v: Vec<f64>) {
+        FREE.with(|f| {
+            let mut g = f.borrow_mut();
+            if g.len() < POOL_CAP {
+                g.push(v);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_only_grows() {
+        let mut a = Arena::new();
+        a.ensure(4, 16, 100, 50);
+        let r = a.reserved();
+        assert_eq!(r, 4 * 16 + 100 + 50);
+        a.ensure(2, 8, 10, 5); // smaller request: no shrink
+        assert_eq!(a.reserved(), r);
+        a.ensure(4, 32, 100, 50);
+        assert_eq!(a.reserved(), 4 * 32 + 100 + 50);
+    }
+
+    #[test]
+    fn arena_split_disjoint() {
+        let mut a = Arena::new();
+        a.ensure(2, 4, 8, 8);
+        let (sh, s, t) = a.split();
+        sh[0][0] = 1.0;
+        s[0] = 2.0;
+        t[0] = 3.0;
+        assert_eq!(sh[1][0], 0.0);
+    }
+
+    #[test]
+    fn buffer_pool_recycles_capacity() {
+        let pool = BufferPool::global();
+        let mut v = pool.take(100);
+        v[99] = 7.0;
+        let cap = v.capacity();
+        pool.put(v);
+        // same thread → same free list; the recycled buffer keeps capacity
+        let v2 = pool.take(50);
+        assert!(v2.capacity() >= cap.min(50));
+        assert!(v2.iter().all(|&x| x == 0.0), "buffer not zeroed");
+    }
+}

@@ -1,0 +1,893 @@
+//! Per-format execution plans: flattened level-ordered schedules plus the
+//! zero-allocation executors for single-vector, adjoint and multi-RHS
+//! products.
+//!
+//! Correctness argument (same as the collision-free traversals of §3, made
+//! static): clusters of one tree level have pairwise disjoint index ranges,
+//! so all tasks of a level may write `y` (or their coefficient slots)
+//! concurrently without synchronization; consecutive levels are separated by
+//! fork-join barriers, which realises the parent-before-children ordering the
+//! recursive traversals obtain implicitly.
+
+use super::arena::Arena;
+use super::schedule::{balance, block_cost, default_shards, uni_block_cost, Shard};
+use crate::h2::H2Matrix;
+use crate::hmatrix::HMatrix;
+use crate::la::{blas, DMatrix};
+use crate::mvm::{kernels, SharedVec};
+use crate::par::ThreadPool;
+use crate::uniform::{UniBlock, UniformHMatrix};
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Summary of a built plan (diagnostics / logging).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanStats {
+    /// Flattened tasks over all schedules (forward + adjoint).
+    pub tasks: usize,
+    /// Barrier-separated levels of the forward schedule.
+    pub levels: usize,
+    /// Maximum concurrently running shards.
+    pub max_shards: usize,
+    /// Per-shard kernel scratch (f64 values).
+    pub scratch_f64: usize,
+    /// Coefficient slots (f64 values, forward + backward).
+    pub coeff_f64: usize,
+}
+
+/// Balance one level's task ids by their costs, remapping shard-local indices
+/// back to schedule-global task ids.
+fn balance_level(ids: &[usize], costs: &[f64], scratch: &[usize], nshards: usize) -> Vec<Shard> {
+    let local_costs: Vec<f64> = ids.iter().map(|&i| costs[i]).collect();
+    let local_scratch: Vec<usize> = ids.iter().map(|&i| scratch[i]).collect();
+    let mut shards = balance(&local_costs, &local_scratch, nshards);
+    for s in &mut shards {
+        for t in &mut s.tasks {
+            *t = ids[*t];
+        }
+    }
+    shards
+}
+
+fn max_shard_stats(levels: &[Vec<Shard>]) -> (usize, usize) {
+    let mut max_shards = 0;
+    let mut scratch = 0;
+    for level in levels {
+        max_shards = max_shards.max(level.len());
+        for s in level {
+            scratch = scratch.max(s.scratch);
+        }
+    }
+    (max_shards, scratch)
+}
+
+// ---------------------------------------------------------------------------
+// H-matrix plan
+// ---------------------------------------------------------------------------
+
+/// One block row (forward) or block column (adjoint): the full list of leaf
+/// blocks writing into one cluster's disjoint range.
+struct HTask {
+    /// Write range in `y`.
+    dst: Range<usize>,
+    /// (block id, read range in `x`) per leaf block.
+    blocks: Vec<(usize, Range<usize>)>,
+}
+
+struct HSchedule {
+    tasks: Vec<HTask>,
+    /// Execution order: root level first.
+    levels: Vec<Vec<Shard>>,
+    max_shards: usize,
+    scratch: usize,
+}
+
+impl HSchedule {
+    fn build(m: &HMatrix, adjoint: bool) -> HSchedule {
+        let bt = &m.bt;
+        let (ct, other_ct, lists) = if adjoint {
+            (&bt.col_ct, &bt.row_ct, &bt.col_blocks)
+        } else {
+            (&bt.row_ct, &bt.col_ct, &bt.row_blocks)
+        };
+        let mut tasks = Vec::new();
+        let mut costs = Vec::new();
+        let mut scratch = Vec::new();
+        let mut level_ids: Vec<Vec<usize>> = vec![Vec::new(); ct.levels.len()];
+        for (tau, blocks) in lists.iter().enumerate() {
+            if blocks.is_empty() {
+                continue;
+            }
+            let mut refs = Vec::with_capacity(blocks.len());
+            let mut cost = 0.0;
+            let mut scr = 0usize;
+            for &b in blocks {
+                let nd = bt.node(b);
+                let src = if adjoint { other_ct.node(nd.row).range() } else { other_ct.node(nd.col).range() };
+                let blk = m.blocks[b].as_ref().expect("missing leaf");
+                cost += block_cost(blk);
+                scr = scr.max(blk.rank());
+                refs.push((b, src));
+            }
+            let id = tasks.len();
+            tasks.push(HTask { dst: ct.node(tau).range(), blocks: refs });
+            costs.push(cost);
+            scratch.push(scr);
+            level_ids[ct.node(tau).level].push(id);
+        }
+        let nshards = default_shards();
+        let levels: Vec<Vec<Shard>> = level_ids
+            .iter()
+            .filter(|ids| !ids.is_empty())
+            .map(|ids| balance_level(ids, &costs, &scratch, nshards))
+            .collect();
+        let (max_shards, scratch) = max_shard_stats(&levels);
+        HSchedule { tasks, levels, max_shards, scratch }
+    }
+
+    fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        arena.ensure(self.max_shards, self.scratch, 0, 0);
+        let (bufs, _, _) = arena.split();
+        let yy = SharedVec::new(y);
+        let pool = ThreadPool::global();
+        for level in &self.levels {
+            pool.scope(|s| {
+                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
+                    let yy = yy;
+                    s.spawn(move |_| {
+                        for &ti in &shard.tasks {
+                            let task = &self.tasks[ti];
+                            // SAFETY: same-level clusters are disjoint; levels
+                            // are separated by join barriers (parents first).
+                            let yt = unsafe { yy.range_mut(task.dst.clone()) };
+                            for (b, src) in &task.blocks {
+                                let blk = m.blocks[*b].as_ref().expect("missing leaf");
+                                if adjoint {
+                                    kernels::apply_block_transposed_scratch(alpha, blk, &x[src.clone()], yt, buf);
+                                } else {
+                                    kernels::apply_block_scratch(alpha, blk, &x[src.clone()], yt, buf);
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        let ylen = y.nrows();
+        let nrhs = y.ncols();
+        arena.ensure(self.max_shards, self.scratch, 0, 0);
+        let (bufs, _, _) = arena.split();
+        let yy = SharedVec::new(y.data_mut());
+        let pool = ThreadPool::global();
+        for level in &self.levels {
+            pool.scope(|s| {
+                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
+                    let yy = yy;
+                    s.spawn(move |_| {
+                        for &ti in &shard.tasks {
+                            let task = &self.tasks[ti];
+                            for (b, src) in &task.blocks {
+                                let blk = m.blocks[*b].as_ref().expect("missing leaf");
+                                for c in 0..nrhs {
+                                    // SAFETY: per-column copies of the same
+                                    // disjoint range argument.
+                                    let yt = unsafe {
+                                        yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end)
+                                    };
+                                    let xc = &x.col(c)[src.clone()];
+                                    if adjoint {
+                                        kernels::apply_block_transposed_scratch(alpha, blk, xc, yt, buf);
+                                    } else {
+                                        kernels::apply_block_scratch(alpha, blk, xc, yt, buf);
+                                    }
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Precomputed execution plan for an [`HMatrix`]. The forward and adjoint
+/// schedules are independent halves, built on first use — [`HPlan::build`]
+/// pre-builds the forward half (the serving hot path), [`HPlan::lazy`]
+/// builds nothing until executed (the one-shot dispatch paths).
+pub struct HPlan {
+    fwd: OnceLock<HSchedule>,
+    adj: OnceLock<HSchedule>,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl HPlan {
+    pub fn build(m: &HMatrix) -> HPlan {
+        let plan = HPlan::lazy(m);
+        plan.fwd.get_or_init(|| HSchedule::build(m, false));
+        plan
+    }
+
+    /// A plan whose schedule halves are built on first execution.
+    pub fn lazy(m: &HMatrix) -> HPlan {
+        HPlan { fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+    }
+
+    fn fwd(&self, m: &HMatrix) -> &HSchedule {
+        self.fwd.get_or_init(|| HSchedule::build(m, false))
+    }
+
+    fn adj(&self, m: &HMatrix) -> &HSchedule {
+        self.adj.get_or_init(|| HSchedule::build(m, true))
+    }
+
+    /// y += alpha · M · x.
+    pub fn execute(&self, m: &HMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        self.fwd(m).exec(m, false, alpha, x, y, arena);
+    }
+
+    /// y += alpha · Mᵀ · x.
+    pub fn execute_adjoint(&self, m: &HMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        assert_eq!(x.len(), self.nrows);
+        assert_eq!(y.len(), self.ncols);
+        self.adj(m).exec(m, true, alpha, x, y, arena);
+    }
+
+    /// Y += alpha · M · X (column-major multivectors).
+    pub fn execute_multi(&self, m: &HMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        assert_eq!(x.nrows(), self.ncols);
+        assert_eq!(y.nrows(), self.nrows);
+        assert_eq!(x.ncols(), y.ncols());
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena);
+    }
+
+    /// Aggregate over the schedule halves built so far.
+    pub fn stats(&self) -> PlanStats {
+        let mut st = PlanStats::default();
+        for sched in [self.fwd.get(), self.adj.get()].into_iter().flatten() {
+            st.tasks += sched.tasks.len();
+            st.max_shards = st.max_shards.max(sched.max_shards);
+            st.scratch_f64 = st.scratch_f64.max(sched.scratch);
+        }
+        if let Some(f) = self.fwd.get() {
+            st.levels = f.levels.len();
+        }
+        st
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared pieces of the uniform / H² schedules
+// ---------------------------------------------------------------------------
+
+/// Reference from a coupling block into the flat forward-coefficient buffer.
+struct CRef {
+    block: usize,
+    off: usize,
+    len: usize,
+}
+
+fn apply_dense_oriented(m_blocks: &[Option<UniBlock>], b: usize, adjoint: bool, alpha: f64, xs: &[f64], yt: &mut [f64]) {
+    match m_blocks[b].as_ref() {
+        Some(UniBlock::Dense(d)) => {
+            if adjoint {
+                blas::gemv_transposed(alpha, d, xs, yt);
+            } else {
+                blas::gemv(alpha, d, xs, yt);
+            }
+        }
+        Some(UniBlock::ZDense(z)) => {
+            if adjoint {
+                kernels::zgemv_t_blocked(alpha, z, xs, yt);
+            } else {
+                kernels::zgemv_blocked(alpha, z, xs, yt);
+            }
+        }
+        _ => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Uniform-H plan
+// ---------------------------------------------------------------------------
+
+/// Forward-transform task: one input cluster's coefficient slot.
+struct CoeffTask {
+    cluster: usize,
+    src: Range<usize>,
+    off: usize,
+    len: usize,
+}
+
+/// Output-side task: couplings into a local rank buffer, one basis apply,
+/// dense blocks straight into `y`.
+struct UniRowTask {
+    cluster: usize,
+    dst: Range<usize>,
+    rank: usize,
+    couplings: Vec<CRef>,
+    dense: Vec<(usize, Range<usize>)>,
+}
+
+struct UniSchedule {
+    ftasks: Vec<CoeffTask>,
+    fshards: Vec<Shard>,
+    tasks: Vec<UniRowTask>,
+    levels: Vec<Vec<Shard>>,
+    s_len: usize,
+    max_shards: usize,
+    scratch: usize,
+}
+
+impl UniSchedule {
+    fn build(m: &UniformHMatrix, adjoint: bool) -> UniSchedule {
+        let bt = &m.bt;
+        let (in_ct, in_basis, out_ct, out_basis, out_lists) = if adjoint {
+            (&bt.row_ct, &m.row_basis, &bt.col_ct, &m.col_basis, &bt.col_blocks)
+        } else {
+            (&bt.col_ct, &m.col_basis, &bt.row_ct, &m.row_basis, &bt.row_blocks)
+        };
+
+        // forward coefficient slots, one per input cluster with rank > 0
+        let mut s_off = vec![0usize; in_ct.nodes.len()];
+        let mut s_len = 0usize;
+        let mut ftasks = Vec::new();
+        let mut fcosts = Vec::new();
+        for (sigma, basis) in in_basis.iter().enumerate() {
+            let k = basis.rank();
+            s_off[sigma] = s_len;
+            if k == 0 {
+                continue;
+            }
+            ftasks.push(CoeffTask { cluster: sigma, src: in_ct.node(sigma).range(), off: s_len, len: k });
+            fcosts.push(basis.byte_size() as f64);
+            s_len += k;
+        }
+        let nshards = default_shards();
+        let fscratch = vec![0usize; fcosts.len()];
+        let fshards = balance(&fcosts, &fscratch, nshards);
+
+        // output-side tasks, level ordered
+        let mut tasks = Vec::new();
+        let mut costs = Vec::new();
+        let mut scratch = Vec::new();
+        let mut level_ids: Vec<Vec<usize>> = vec![Vec::new(); out_ct.levels.len()];
+        for (tau, blocks) in out_lists.iter().enumerate() {
+            if blocks.is_empty() {
+                continue;
+            }
+            let rank = out_basis[tau].rank();
+            let mut couplings = Vec::new();
+            let mut dense = Vec::new();
+            let mut cost = 0.0;
+            let mut scr = rank;
+            for &b in blocks {
+                let nd = bt.node(b);
+                let in_cluster = if adjoint { nd.row } else { nd.col };
+                match m.blocks[b].as_ref() {
+                    Some(UniBlock::Coupling(c)) => {
+                        scr = scr.max(rank + c.scratch_len());
+                        cost += uni_block_cost(m.blocks[b].as_ref().unwrap());
+                        couplings.push(CRef { block: b, off: s_off[in_cluster], len: in_basis[in_cluster].rank() });
+                    }
+                    Some(_) => {
+                        cost += uni_block_cost(m.blocks[b].as_ref().unwrap());
+                        let src = if adjoint { bt.row_ct.node(nd.row).range() } else { bt.col_ct.node(nd.col).range() };
+                        dense.push((b, src));
+                    }
+                    None => panic!("missing leaf"),
+                }
+            }
+            if couplings.is_empty() && dense.is_empty() {
+                continue;
+            }
+            if !couplings.is_empty() {
+                cost += out_basis[tau].byte_size() as f64;
+            }
+            let id = tasks.len();
+            tasks.push(UniRowTask { cluster: tau, dst: out_ct.node(tau).range(), rank, couplings, dense });
+            costs.push(cost);
+            scratch.push(scr);
+            level_ids[out_ct.node(tau).level].push(id);
+        }
+        let levels: Vec<Vec<Shard>> = level_ids
+            .iter()
+            .filter(|ids| !ids.is_empty())
+            .map(|ids| balance_level(ids, &costs, &scratch, nshards))
+            .collect();
+        let (max_shards, scratch) = max_shard_stats(&levels);
+        UniSchedule { ftasks, fshards, tasks, levels, s_len, max_shards: max_shards.max(fshards.len()), scratch }
+    }
+
+    fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
+        arena.ensure(self.max_shards, self.scratch, self.s_len, 0);
+        let (bufs, s_all, _) = arena.split();
+        let pool = ThreadPool::global();
+
+        // phase 1: forward transformation s_σ = Bᵀ x|σ (independent slots)
+        {
+            s_all[..self.s_len].fill(0.0);
+            let slots = SharedVec::new(&mut s_all[..self.s_len]);
+            pool.scope(|sc| {
+                for shard in &self.fshards {
+                    let slots = slots;
+                    sc.spawn(move |_| {
+                        for &ti in &shard.tasks {
+                            let t = &self.ftasks[ti];
+                            // SAFETY: one task per disjoint slot range.
+                            let dst = unsafe { slots.range_mut(t.off..t.off + t.len) };
+                            in_basis[t.cluster].apply_transposed(&x[t.src.clone()], dst);
+                        }
+                    });
+                }
+            });
+        }
+
+        // phase 2: level-ordered output pass
+        let sref: &[f64] = &s_all[..self.s_len];
+        let yy = SharedVec::new(y);
+        for level in &self.levels {
+            pool.scope(|sc| {
+                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
+                    let yy = yy;
+                    sc.spawn(move |_| {
+                        for &ti in &shard.tasks {
+                            let task = &self.tasks[ti];
+                            // SAFETY: same-level clusters are disjoint; levels
+                            // are barrier separated.
+                            let yt = unsafe { yy.range_mut(task.dst.clone()) };
+                            let (tv, cscratch) = buf.split_at_mut(task.rank);
+                            tv.fill(0.0);
+                            let mut have = false;
+                            for cr in &task.couplings {
+                                if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
+                                    let sv = &sref[cr.off..cr.off + cr.len];
+                                    if adjoint {
+                                        cm.apply_transposed_add_scratch(sv, tv, cscratch);
+                                    } else {
+                                        cm.apply_add_scratch(sv, tv, cscratch);
+                                    }
+                                    have = true;
+                                }
+                            }
+                            if have && task.rank > 0 {
+                                for v in tv.iter_mut() {
+                                    *v *= alpha;
+                                }
+                                out_basis[task.cluster].apply_add(tv, yt);
+                            }
+                            for (b, src) in &task.dense {
+                                apply_dense_oriented(&m.blocks, *b, adjoint, alpha, &x[src.clone()], yt);
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Precomputed execution plan for a [`UniformHMatrix`]; schedule halves are
+/// built on first use (see [`HPlan`] for the build/lazy distinction).
+pub struct UniPlan {
+    fwd: OnceLock<UniSchedule>,
+    adj: OnceLock<UniSchedule>,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl UniPlan {
+    pub fn build(m: &UniformHMatrix) -> UniPlan {
+        let plan = UniPlan::lazy(m);
+        plan.fwd.get_or_init(|| UniSchedule::build(m, false));
+        plan
+    }
+
+    /// A plan whose schedule halves are built on first execution.
+    pub fn lazy(m: &UniformHMatrix) -> UniPlan {
+        UniPlan { fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+    }
+
+    fn fwd(&self, m: &UniformHMatrix) -> &UniSchedule {
+        self.fwd.get_or_init(|| UniSchedule::build(m, false))
+    }
+
+    fn adj(&self, m: &UniformHMatrix) -> &UniSchedule {
+        self.adj.get_or_init(|| UniSchedule::build(m, true))
+    }
+
+    /// y += alpha · M · x.
+    pub fn execute(&self, m: &UniformHMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        self.fwd(m).exec(m, false, alpha, x, y, arena);
+    }
+
+    /// y += alpha · Mᵀ · x.
+    pub fn execute_adjoint(&self, m: &UniformHMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        assert_eq!(x.len(), self.nrows);
+        assert_eq!(y.len(), self.ncols);
+        self.adj(m).exec(m, true, alpha, x, y, arena);
+    }
+
+    /// Y += alpha · M · X, one schedule pass per column over the reused
+    /// coefficient buffers.
+    pub fn execute_multi(&self, m: &UniformHMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        assert_eq!(x.nrows(), self.ncols);
+        assert_eq!(y.nrows(), self.nrows);
+        assert_eq!(x.ncols(), y.ncols());
+        let sched = self.fwd(m);
+        for c in 0..x.ncols() {
+            sched.exec(m, false, alpha, x.col(c), y.col_mut(c), arena);
+        }
+    }
+
+    /// Aggregate over the schedule halves built so far.
+    pub fn stats(&self) -> PlanStats {
+        let mut st = PlanStats::default();
+        for sched in [self.fwd.get(), self.adj.get()].into_iter().flatten() {
+            st.tasks += sched.ftasks.len() + sched.tasks.len();
+            st.max_shards = st.max_shards.max(sched.max_shards);
+            st.scratch_f64 = st.scratch_f64.max(sched.scratch);
+            st.coeff_f64 = st.coeff_f64.max(sched.s_len);
+        }
+        if let Some(f) = self.fwd.get() {
+            st.levels = f.levels.len() + 1;
+        }
+        st
+    }
+}
+
+// ---------------------------------------------------------------------------
+// H² plan
+// ---------------------------------------------------------------------------
+
+/// Upward-pass task: one input cluster's coefficient slot, computed from the
+/// leaf basis or from already-complete child slots through transfer matrices.
+struct UpTask {
+    cluster: usize,
+    off: usize,
+    len: usize,
+    leaf: bool,
+    src: Range<usize>,
+    /// (child cluster id, child slot offset, child rank).
+    children: Vec<(usize, usize, usize)>,
+}
+
+/// Downward-pass task: couplings into the cluster's backward slot, transfer
+/// to child slots (interior) or basis application into `y` (leaf), plus dense
+/// blocks.
+struct DownTask {
+    cluster: usize,
+    dst: Range<usize>,
+    t_off: usize,
+    rank: usize,
+    leaf: bool,
+    couplings: Vec<CRef>,
+    dense: Vec<(usize, Range<usize>)>,
+    /// (child cluster id, child slot offset, child rank).
+    children: Vec<(usize, usize, usize)>,
+}
+
+struct H2Schedule {
+    up_tasks: Vec<UpTask>,
+    /// Execution order: deepest level first (children before parents).
+    up_levels: Vec<Vec<Shard>>,
+    down_tasks: Vec<DownTask>,
+    /// Execution order: root level first (parents before children).
+    down_levels: Vec<Vec<Shard>>,
+    s_len: usize,
+    t_len: usize,
+    max_shards: usize,
+    scratch: usize,
+}
+
+impl H2Schedule {
+    fn build(m: &H2Matrix, adjoint: bool) -> H2Schedule {
+        let bt = &m.bt;
+        let (in_ct, in_nb, out_ct, out_nb, out_lists) = if adjoint {
+            (&bt.row_ct, &m.row_basis, &bt.col_ct, &m.col_basis, &bt.col_blocks)
+        } else {
+            (&bt.col_ct, &m.col_basis, &bt.row_ct, &m.row_basis, &bt.row_blocks)
+        };
+        let nshards = default_shards();
+
+        // ---- upward pass over the input tree ----
+        let mut s_off = vec![0usize; in_ct.nodes.len()];
+        let mut s_len = 0usize;
+        for sigma in 0..in_ct.nodes.len() {
+            s_off[sigma] = s_len;
+            s_len += in_nb.rank[sigma];
+        }
+        let mut up_tasks = Vec::new();
+        let mut up_costs = Vec::new();
+        let mut up_levels = Vec::new();
+        for lvl in (0..in_ct.levels.len()).rev() {
+            let mut ids = Vec::new();
+            for &sigma in &in_ct.levels[lvl] {
+                let k = in_nb.rank[sigma];
+                if k == 0 {
+                    continue;
+                }
+                let nd = in_ct.node(sigma);
+                let (children, cost) = if nd.is_leaf() {
+                    (Vec::new(), (8 * nd.size() * k) as f64)
+                } else {
+                    let mut ch = Vec::new();
+                    let mut cost = 0.0;
+                    for &c in &nd.children {
+                        if in_nb.rank[c] == 0 || in_nb.transfer[c].is_none() {
+                            continue;
+                        }
+                        cost += in_nb.transfer[c].as_ref().unwrap().byte_size() as f64;
+                        ch.push((c, s_off[c], in_nb.rank[c]));
+                    }
+                    (ch, cost)
+                };
+                ids.push(up_tasks.len());
+                up_tasks.push(UpTask { cluster: sigma, off: s_off[sigma], len: k, leaf: nd.is_leaf(), src: nd.range(), children });
+                up_costs.push(cost);
+            }
+            if !ids.is_empty() {
+                up_levels.push(ids);
+            }
+        }
+        let up_scratch = vec![0usize; up_tasks.len()];
+        let up_levels: Vec<Vec<Shard>> =
+            up_levels.iter().map(|ids| balance_level(ids, &up_costs, &up_scratch, nshards)).collect();
+
+        // ---- downward pass over the output tree ----
+        let mut t_off = vec![0usize; out_ct.nodes.len()];
+        let mut t_len = 0usize;
+        for tau in 0..out_ct.nodes.len() {
+            t_off[tau] = t_len;
+            t_len += out_nb.rank[tau];
+        }
+        let mut down_tasks = Vec::new();
+        let mut down_costs = Vec::new();
+        let mut down_scratch = Vec::new();
+        let mut down_levels = Vec::new();
+        for lvl in 0..out_ct.levels.len() {
+            let mut ids = Vec::new();
+            for &tau in &out_ct.levels[lvl] {
+                let rank = out_nb.rank[tau];
+                let nd = out_ct.node(tau);
+                let mut couplings = Vec::new();
+                let mut dense = Vec::new();
+                let mut cost = 0.0;
+                let mut scr = rank;
+                for &b in &out_lists[tau] {
+                    let bn = bt.node(b);
+                    let in_cluster = if adjoint { bn.row } else { bn.col };
+                    match m.blocks[b].as_ref() {
+                        Some(UniBlock::Coupling(c)) => {
+                            scr = scr.max(rank + c.scratch_len());
+                            cost += uni_block_cost(m.blocks[b].as_ref().unwrap());
+                            couplings.push(CRef { block: b, off: s_off[in_cluster], len: in_nb.rank[in_cluster] });
+                        }
+                        Some(_) => {
+                            cost += uni_block_cost(m.blocks[b].as_ref().unwrap());
+                            let src = if adjoint { bt.row_ct.node(bn.row).range() } else { bt.col_ct.node(bn.col).range() };
+                            dense.push((b, src));
+                        }
+                        None => panic!("missing leaf"),
+                    }
+                }
+                let mut children = Vec::new();
+                if !nd.is_leaf() && rank > 0 {
+                    for &c in &nd.children {
+                        if out_nb.rank[c] == 0 || out_nb.transfer[c].is_none() {
+                            continue;
+                        }
+                        cost += out_nb.transfer[c].as_ref().unwrap().byte_size() as f64;
+                        children.push((c, t_off[c], out_nb.rank[c]));
+                    }
+                }
+                if nd.is_leaf() && rank > 0 {
+                    cost += (8 * nd.size() * rank) as f64;
+                }
+                // a task is needed to relay or apply coefficients, or for
+                // dense blocks — skip clusters with nothing to do
+                if rank == 0 && dense.is_empty() {
+                    continue;
+                }
+                ids.push(down_tasks.len());
+                down_tasks.push(DownTask { cluster: tau, dst: nd.range(), t_off: t_off[tau], rank, leaf: nd.is_leaf(), couplings, dense, children });
+                down_costs.push(cost);
+                down_scratch.push(scr);
+            }
+            if !ids.is_empty() {
+                down_levels.push(ids);
+            }
+        }
+        let down_levels: Vec<Vec<Shard>> =
+            down_levels.iter().map(|ids| balance_level(ids, &down_costs, &down_scratch, nshards)).collect();
+
+        let (up_max, _) = max_shard_stats(&up_levels);
+        let (down_max, scratch) = max_shard_stats(&down_levels);
+        H2Schedule {
+            up_tasks,
+            up_levels,
+            down_tasks,
+            down_levels,
+            s_len,
+            t_len,
+            max_shards: up_max.max(down_max),
+            scratch,
+        }
+    }
+
+    fn exec(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
+        arena.ensure(self.max_shards, self.scratch, self.s_len, self.t_len);
+        let (bufs, s_all, t_all) = arena.split();
+        let pool = ThreadPool::global();
+
+        // upward pass: forward transformation, children before parents
+        {
+            s_all[..self.s_len].fill(0.0);
+            let slots = SharedVec::new(&mut s_all[..self.s_len]);
+            for level in &self.up_levels {
+                pool.scope(|sc| {
+                    for shard in level {
+                        let slots = slots;
+                        sc.spawn(move |_| {
+                            for &ti in &shard.tasks {
+                                let t = &self.up_tasks[ti];
+                                // SAFETY: one slot per cluster; child slots were
+                                // filled in an earlier, already joined level.
+                                let dst = unsafe { slots.range_mut(t.off..t.off + t.len) };
+                                if t.leaf {
+                                    in_nb.leaf_apply_transposed(t.cluster, &x[t.src.clone()], dst);
+                                } else {
+                                    for &(c, coff, clen) in &t.children {
+                                        let sc_child = unsafe { slots.range(coff..coff + clen) };
+                                        if let Some(e) = in_nb.transfer[c].as_ref() {
+                                            e.apply_transposed_add(sc_child, dst);
+                                        }
+                                    }
+                                }
+                            }
+                        });
+                    }
+                });
+            }
+        }
+
+        // downward pass: couplings + transfer to children + leaf application
+        let sref: &[f64] = &s_all[..self.s_len];
+        t_all[..self.t_len].fill(0.0);
+        let tslots = SharedVec::new(&mut t_all[..self.t_len]);
+        let yy = SharedVec::new(y);
+        for level in &self.down_levels {
+            pool.scope(|sc| {
+                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
+                    let yy = yy;
+                    let tslots = tslots;
+                    sc.spawn(move |_| {
+                        for &ti in &shard.tasks {
+                            let task = &self.down_tasks[ti];
+                            // SAFETY: τ's slot was written only by its parent in
+                            // an earlier level; same-level clusters are disjoint.
+                            let tv = unsafe { tslots.range_mut(task.t_off..task.t_off + task.rank) };
+                            let (sbuf, cscratch) = buf.split_at_mut(task.rank);
+                            for cr in &task.couplings {
+                                if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
+                                    let sv = &sref[cr.off..cr.off + cr.len];
+                                    if adjoint {
+                                        cm.apply_transposed_add_scratch(sv, tv, cscratch);
+                                    } else {
+                                        cm.apply_add_scratch(sv, tv, cscratch);
+                                    }
+                                }
+                            }
+                            if task.leaf {
+                                if task.rank > 0 && tv.iter().any(|&v| v != 0.0) {
+                                    for (d, &v) in sbuf.iter_mut().zip(tv.iter()) {
+                                        *d = alpha * v;
+                                    }
+                                    // SAFETY: leaf ranges are disjoint; ancestor
+                                    // dense writes happened in earlier levels.
+                                    let yt = unsafe { yy.range_mut(task.dst.clone()) };
+                                    out_nb.leaf_apply_add(task.cluster, sbuf, yt);
+                                }
+                            } else {
+                                for &(c, ctoff, crank) in &task.children {
+                                    // SAFETY: each child has exactly one parent.
+                                    let tc = unsafe { tslots.range_mut(ctoff..ctoff + crank) };
+                                    if let Some(e) = out_nb.transfer[c].as_ref() {
+                                        e.apply_add(tv, tc);
+                                    }
+                                }
+                            }
+                            if !task.dense.is_empty() {
+                                // SAFETY: same disjointness/barrier argument.
+                                let yt = unsafe { yy.range_mut(task.dst.clone()) };
+                                for (b, src) in &task.dense {
+                                    apply_dense_oriented(&m.blocks, *b, adjoint, alpha, &x[src.clone()], yt);
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Precomputed execution plan for an [`H2Matrix`]; schedule halves are built
+/// on first use (see [`HPlan`] for the build/lazy distinction).
+pub struct H2Plan {
+    fwd: OnceLock<H2Schedule>,
+    adj: OnceLock<H2Schedule>,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl H2Plan {
+    pub fn build(m: &H2Matrix) -> H2Plan {
+        let plan = H2Plan::lazy(m);
+        plan.fwd.get_or_init(|| H2Schedule::build(m, false));
+        plan
+    }
+
+    /// A plan whose schedule halves are built on first execution.
+    pub fn lazy(m: &H2Matrix) -> H2Plan {
+        H2Plan { fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+    }
+
+    fn fwd(&self, m: &H2Matrix) -> &H2Schedule {
+        self.fwd.get_or_init(|| H2Schedule::build(m, false))
+    }
+
+    fn adj(&self, m: &H2Matrix) -> &H2Schedule {
+        self.adj.get_or_init(|| H2Schedule::build(m, true))
+    }
+
+    /// y += alpha · M · x.
+    pub fn execute(&self, m: &H2Matrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        self.fwd(m).exec(m, false, alpha, x, y, arena);
+    }
+
+    /// y += alpha · Mᵀ · x.
+    pub fn execute_adjoint(&self, m: &H2Matrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        assert_eq!(x.len(), self.nrows);
+        assert_eq!(y.len(), self.ncols);
+        self.adj(m).exec(m, true, alpha, x, y, arena);
+    }
+
+    /// Y += alpha · M · X, one schedule pass per column over the reused
+    /// coefficient buffers.
+    pub fn execute_multi(&self, m: &H2Matrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        assert_eq!(x.nrows(), self.ncols);
+        assert_eq!(y.nrows(), self.nrows);
+        assert_eq!(x.ncols(), y.ncols());
+        let sched = self.fwd(m);
+        for c in 0..x.ncols() {
+            sched.exec(m, false, alpha, x.col(c), y.col_mut(c), arena);
+        }
+    }
+
+    /// Aggregate over the schedule halves built so far.
+    pub fn stats(&self) -> PlanStats {
+        let mut st = PlanStats::default();
+        for sched in [self.fwd.get(), self.adj.get()].into_iter().flatten() {
+            st.tasks += sched.up_tasks.len() + sched.down_tasks.len();
+            st.max_shards = st.max_shards.max(sched.max_shards);
+            st.scratch_f64 = st.scratch_f64.max(sched.scratch);
+            st.coeff_f64 = st.coeff_f64.max(sched.s_len + sched.t_len);
+        }
+        if let Some(f) = self.fwd.get() {
+            st.levels = f.up_levels.len() + f.down_levels.len();
+        }
+        st
+    }
+}

@@ -1,0 +1,41 @@
+//! Unified MVM execution-plan layer.
+//!
+//! The recursive traversals in [`crate::mvm`] re-walk the block tree on every
+//! product and allocate per-block temporaries inside the hot loop. Since the
+//! paper's central observation is that (compressed) H-MVM is *memory-bandwidth
+//! bound*, that bookkeeping directly eats the bandwidth win. This module
+//! flattens each format's traversal **once per matrix** into an MvmPlan
+//! ([`HPlan`], [`UniPlan`], [`H2Plan`]):
+//!
+//! * **level-ordered task lists** — tasks at one cluster-tree level have
+//!   pairwise disjoint write ranges (clusters of a level partition disjoint
+//!   index sets), levels are separated by fork-join barriers, so execution is
+//!   collision free without locks or atomics, exactly like the collision-free
+//!   traversals of §3 but without the per-call tree walk;
+//! * **a cost model + static load balancing** — every task carries an
+//!   estimated cost (bytes of matrix data streamed plus vector traffic) and
+//!   the tasks of a level are packed into `num_threads + 1` shards by
+//!   longest-processing-time-first scheduling ([`schedule::balance`]), so one
+//!   spawn per shard replaces one spawn per block;
+//! * **a reusable scratch [`Arena`]** — coefficient buffers (forward/backward
+//!   transform slots for UH/H²) and per-shard kernel scratch are sized at
+//!   plan-build time and reused across calls: steady-state execution performs
+//!   zero heap allocations.
+//!
+//! The [`HOperator`] trait makes all three formats (compressed or not)
+//! interchangeable behind one object-safe interface — the batching
+//! [`crate::coordinator::MvmServer`] is generic over `Arc<dyn HOperator>`.
+//! [`PlannedOperator`] pairs a matrix with its plan and serves single-vector,
+//! multi-RHS and adjoint products through the same schedules.
+//!
+//! Build plans **after** compressing a matrix: schedules record block ranks
+//! and scratch sizes of the representation they were built from.
+
+pub mod arena;
+pub mod exec;
+pub mod operator;
+pub mod schedule;
+
+pub use arena::{Arena, BufferPool};
+pub use exec::{H2Plan, HPlan, PlanStats, UniPlan};
+pub use operator::{HOperator, PlannedOperator};

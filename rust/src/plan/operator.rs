@@ -1,0 +1,238 @@
+//! The format-agnostic operator trait and the planned-operator wrapper.
+//!
+//! [`HOperator`] is object safe: the coordinator holds `Arc<dyn HOperator>`
+//! and serves any hierarchical format, compressed or not. The direct trait
+//! impls on the matrix types use the collision-free recursive traversals;
+//! [`PlannedOperator`] pairs a matrix with its precomputed plan schedules
+//! ([`HPlan`]/[`UniPlan`]/[`H2Plan`]) and a reusable arena — the
+//! steady-state serving configuration.
+
+use super::arena::Arena;
+use super::exec::{H2Plan, HPlan, PlanStats, UniPlan};
+use crate::h2::H2Matrix;
+use crate::hmatrix::HMatrix;
+use crate::la::DMatrix;
+use crate::mvm;
+use crate::uniform::UniformHMatrix;
+use std::sync::{Arc, Mutex};
+
+/// A hierarchical matrix operator: the common surface of H, uniform-H and H²
+/// matrices (compressed or not) that the serving stack programs against.
+pub trait HOperator: Send + Sync {
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+    /// Memory footprint of the operator data (effective-bandwidth metrics).
+    fn byte_size(&self) -> usize;
+    fn format_name(&self) -> &'static str;
+    /// y += alpha · M · x (internal ordering).
+    fn apply(&self, alpha: f64, x: &[f64], y: &mut [f64]);
+    /// y += alpha · Mᵀ · x.
+    fn apply_adjoint(&self, alpha: f64, x: &[f64], y: &mut [f64]);
+    /// Y += alpha · M · X (column-major multivectors, batched serving path).
+    fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix);
+}
+
+impl HOperator for HMatrix {
+    fn nrows(&self) -> usize {
+        HMatrix::nrows(self)
+    }
+
+    fn ncols(&self) -> usize {
+        HMatrix::ncols(self)
+    }
+
+    fn byte_size(&self) -> usize {
+        HMatrix::byte_size(self)
+    }
+
+    fn format_name(&self) -> &'static str {
+        "H"
+    }
+
+    fn apply(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        mvm::mvm(alpha, self, x, y, mvm::MvmAlgorithm::ClusterLists);
+    }
+
+    fn apply_adjoint(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        mvm::mvm_transposed(alpha, self, x, y);
+    }
+
+    fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        mvm::h_mvm_multi(alpha, self, x, y);
+    }
+}
+
+impl HOperator for UniformHMatrix {
+    fn nrows(&self) -> usize {
+        UniformHMatrix::nrows(self)
+    }
+
+    fn ncols(&self) -> usize {
+        UniformHMatrix::ncols(self)
+    }
+
+    fn byte_size(&self) -> usize {
+        UniformHMatrix::byte_size(self)
+    }
+
+    fn format_name(&self) -> &'static str {
+        "UH"
+    }
+
+    fn apply(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        mvm::uniform_mvm(alpha, self, x, y, mvm::UniMvmAlgorithm::RowWise);
+    }
+
+    fn apply_adjoint(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        // one-shot plan (adjoint half only): hot paths hold a PlannedOperator
+        let plan = UniPlan::lazy(self);
+        let mut arena = Arena::new();
+        plan.execute_adjoint(self, alpha, x, y, &mut arena);
+    }
+
+    fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        assert_eq!(x.ncols(), y.ncols());
+        for c in 0..x.ncols() {
+            mvm::uniform_mvm(alpha, self, x.col(c), y.col_mut(c), mvm::UniMvmAlgorithm::RowWise);
+        }
+    }
+}
+
+impl HOperator for H2Matrix {
+    fn nrows(&self) -> usize {
+        H2Matrix::nrows(self)
+    }
+
+    fn ncols(&self) -> usize {
+        H2Matrix::ncols(self)
+    }
+
+    fn byte_size(&self) -> usize {
+        H2Matrix::byte_size(self)
+    }
+
+    fn format_name(&self) -> &'static str {
+        "H2"
+    }
+
+    fn apply(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        mvm::h2_mvm(alpha, self, x, y, mvm::H2MvmAlgorithm::RowWise);
+    }
+
+    fn apply_adjoint(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        let plan = H2Plan::lazy(self);
+        let mut arena = Arena::new();
+        plan.execute_adjoint(self, alpha, x, y, &mut arena);
+    }
+
+    fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        assert_eq!(x.ncols(), y.ncols());
+        for c in 0..x.ncols() {
+            mvm::h2_mvm(alpha, self, x.col(c), y.col_mut(c), mvm::H2MvmAlgorithm::RowWise);
+        }
+    }
+}
+
+enum Inner {
+    H { m: Arc<HMatrix>, plan: HPlan },
+    Uniform { m: Arc<UniformHMatrix>, plan: UniPlan },
+    H2 { m: Arc<H2Matrix>, plan: H2Plan },
+}
+
+/// A matrix paired with its precomputed execution plan and a reusable scratch
+/// arena: single-vector, adjoint and multi-RHS products all run through the
+/// flattened schedules with zero steady-state allocation.
+///
+/// Build it **after** compressing the matrix — schedules record block ranks
+/// and scratch sizes of the representation they were built from.
+pub struct PlannedOperator {
+    inner: Inner,
+    arena: Mutex<Arena>,
+    bytes: usize,
+}
+
+impl PlannedOperator {
+    pub fn from_h(m: Arc<HMatrix>) -> PlannedOperator {
+        let plan = HPlan::build(&m);
+        let bytes = m.byte_size();
+        PlannedOperator { inner: Inner::H { m, plan }, arena: Mutex::new(Arena::new()), bytes }
+    }
+
+    pub fn from_uniform(m: Arc<UniformHMatrix>) -> PlannedOperator {
+        let plan = UniPlan::build(&m);
+        let bytes = m.byte_size();
+        PlannedOperator { inner: Inner::Uniform { m, plan }, arena: Mutex::new(Arena::new()), bytes }
+    }
+
+    pub fn from_h2(m: Arc<H2Matrix>) -> PlannedOperator {
+        let plan = H2Plan::build(&m);
+        let bytes = m.byte_size();
+        PlannedOperator { inner: Inner::H2 { m, plan }, arena: Mutex::new(Arena::new()), bytes }
+    }
+
+    /// Schedule summary (task/level/shard counts, scratch sizes).
+    pub fn plan_stats(&self) -> PlanStats {
+        match &self.inner {
+            Inner::H { plan, .. } => plan.stats(),
+            Inner::Uniform { plan, .. } => plan.stats(),
+            Inner::H2 { plan, .. } => plan.stats(),
+        }
+    }
+}
+
+impl HOperator for PlannedOperator {
+    fn nrows(&self) -> usize {
+        match &self.inner {
+            Inner::H { m, .. } => m.nrows(),
+            Inner::Uniform { m, .. } => m.nrows(),
+            Inner::H2 { m, .. } => m.nrows(),
+        }
+    }
+
+    fn ncols(&self) -> usize {
+        match &self.inner {
+            Inner::H { m, .. } => m.ncols(),
+            Inner::Uniform { m, .. } => m.ncols(),
+            Inner::H2 { m, .. } => m.ncols(),
+        }
+    }
+
+    fn byte_size(&self) -> usize {
+        self.bytes
+    }
+
+    fn format_name(&self) -> &'static str {
+        match &self.inner {
+            Inner::H { .. } => "H+plan",
+            Inner::Uniform { .. } => "UH+plan",
+            Inner::H2 { .. } => "H2+plan",
+        }
+    }
+
+    fn apply(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        let mut arena = self.arena.lock().unwrap();
+        match &self.inner {
+            Inner::H { m, plan } => plan.execute(m, alpha, x, y, &mut arena),
+            Inner::Uniform { m, plan } => plan.execute(m, alpha, x, y, &mut arena),
+            Inner::H2 { m, plan } => plan.execute(m, alpha, x, y, &mut arena),
+        }
+    }
+
+    fn apply_adjoint(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        let mut arena = self.arena.lock().unwrap();
+        match &self.inner {
+            Inner::H { m, plan } => plan.execute_adjoint(m, alpha, x, y, &mut arena),
+            Inner::Uniform { m, plan } => plan.execute_adjoint(m, alpha, x, y, &mut arena),
+            Inner::H2 { m, plan } => plan.execute_adjoint(m, alpha, x, y, &mut arena),
+        }
+    }
+
+    fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        let mut arena = self.arena.lock().unwrap();
+        match &self.inner {
+            Inner::H { m, plan } => plan.execute_multi(m, alpha, x, y, &mut arena),
+            Inner::Uniform { m, plan } => plan.execute_multi(m, alpha, x, y, &mut arena),
+            Inner::H2 { m, plan } => plan.execute_multi(m, alpha, x, y, &mut arena),
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Schedule primitives shared by the per-format plan builders: the cost
+//! model and the static load balancer.
+//!
+//! The cost model is deliberately simple: MVM is bandwidth bound (paper §3,
+//! Fig. 7), so the cost of applying a leaf block is dominated by the bytes of
+//! matrix data streamed plus the vector traffic of its row/column ranges.
+//! That estimate is exact enough for static balancing — the imbalance left
+//! over is far below the per-task spawn overhead it replaces.
+
+use crate::hmatrix::BlockData;
+use crate::uniform::UniBlock;
+
+/// A shard: the subset of one level's tasks executed by a single spawned
+/// task, plus its aggregate cost and the scratch it needs.
+#[derive(Clone, Debug, Default)]
+pub struct Shard {
+    /// Indices into the schedule's task array.
+    pub tasks: Vec<usize>,
+    /// Sum of task costs (model bytes).
+    pub cost: f64,
+    /// Max scratch length (f64 values) over the shard's tasks.
+    pub scratch: usize,
+}
+
+/// Pack `costs.len()` tasks into at most `nshards` shards, balancing the
+/// total cost per shard: longest-processing-time-first greedy (sort by cost
+/// descending, always append to the currently lightest shard). `scratch[i]`
+/// is the per-task scratch requirement folded into `Shard::scratch`.
+pub fn balance(costs: &[f64], scratch: &[usize], nshards: usize) -> Vec<Shard> {
+    let n = costs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = nshards.max(1).min(n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut shards: Vec<Shard> = (0..k).map(|_| Shard::default()).collect();
+    for i in order {
+        let mut lightest = 0;
+        for j in 1..k {
+            if shards[j].cost < shards[lightest].cost {
+                lightest = j;
+            }
+        }
+        let sh = &mut shards[lightest];
+        sh.tasks.push(i);
+        sh.cost += costs[i];
+        sh.scratch = sh.scratch.max(scratch[i]);
+    }
+    shards.retain(|s| !s.tasks.is_empty());
+    shards
+}
+
+/// Default shard count: pool workers plus the helping scope thread.
+pub fn default_shards() -> usize {
+    crate::par::num_threads() + 1
+}
+
+/// Model cost (bytes) of applying one H-matrix leaf block to a vector.
+pub fn block_cost(b: &BlockData) -> f64 {
+    (b.byte_size() + 8 * (b.nrows() + b.ncols())) as f64
+}
+
+/// Model cost (bytes) of one uniform/H² leaf (coupling or dense block).
+pub fn uni_block_cost(b: &UniBlock) -> f64 {
+    let vec_traffic = match b {
+        UniBlock::Dense(m) => 8 * (m.nrows() + m.ncols()),
+        UniBlock::ZDense(z) => 8 * (z.nrows + z.ncols),
+        UniBlock::Coupling(_) => 0, // coefficient slots, tiny
+    };
+    (b.byte_size() + vec_traffic) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balance_covers_all_tasks_once() {
+        let costs: Vec<f64> = (0..97).map(|i| (i % 13) as f64 + 1.0).collect();
+        let scratch = vec![0usize; costs.len()];
+        let shards = balance(&costs, &scratch, 8);
+        assert!(shards.len() <= 8);
+        let mut seen = vec![false; costs.len()];
+        for s in &shards {
+            for &t in &s.tasks {
+                assert!(!seen[t], "task {t} scheduled twice");
+                seen[t] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn balance_is_roughly_even() {
+        let costs = vec![5.0, 4.0, 3.0, 3.0, 2.0, 2.0, 1.0];
+        let scratch = vec![0usize; 7];
+        let shards = balance(&costs, &scratch, 2);
+        assert_eq!(shards.len(), 2);
+        let (a, b) = (shards[0].cost, shards[1].cost);
+        // LPT guarantees ≤ 4/3 · OPT for 2 machines on this instance
+        assert!((a - b).abs() <= 2.0, "{a} vs {b}");
+    }
+
+    #[test]
+    fn balance_tracks_scratch_max() {
+        let costs = vec![1.0, 1.0, 1.0];
+        let scratch = vec![4, 9, 2];
+        let shards = balance(&costs, &scratch, 1);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].scratch, 9);
+    }
+
+    #[test]
+    fn balance_empty_and_single() {
+        assert!(balance(&[], &[], 4).is_empty());
+        let shards = balance(&[1.0], &[3], 4);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].tasks, vec![0]);
+    }
+}

@@ -28,27 +28,70 @@ pub enum CouplingMat {
 }
 
 impl CouplingMat {
-    /// t += S · s  (t: row-basis rank slots, s: column coefficients).
+    /// t += S · s  (t: row-basis rank slots, s: column coefficients). Thin
+    /// allocating wrapper around [`CouplingMat::apply_add_scratch`].
     pub fn apply_add(&self, s: &[f64], t: &mut [f64]) {
+        let mut tmp = vec![0.0; self.scratch_len()];
+        self.apply_add_scratch(s, t, &mut tmp);
+    }
+
+    /// t += S · s with caller-provided scratch (≥ [`CouplingMat::scratch_len`]
+    /// values). Compressed couplings are streamed chunk-wise — never fully
+    /// decompressed — so this performs no heap allocation.
+    pub fn apply_add_scratch(&self, s: &[f64], t: &mut [f64], scratch: &mut [f64]) {
         match self {
             CouplingMat::Plain(m) => blas::gemv(1.0, m, s, t),
-            CouplingMat::Z(z) => {
-                let m = z.to_dense();
-                blas::gemv(1.0, &m, s, t);
-            }
+            CouplingMat::Z(z) => crate::mvm::kernels::zgemv_blocked(1.0, z, s, t),
             CouplingMat::SepPlain { sr, sc } => {
                 // t += Sr (Scᵀ s)
-                let mut tmp = vec![0.0; sc.ncols()];
-                blas::gemv_transposed(1.0, sc, s, &mut tmp);
-                blas::gemv(1.0, sr, &tmp, t);
+                let tmp = &mut scratch[..sc.ncols()];
+                tmp.fill(0.0);
+                blas::gemv_transposed(1.0, sc, s, tmp);
+                blas::gemv(1.0, sr, tmp, t);
             }
             CouplingMat::SepZ { sr, sc } => {
-                let scd = sc.to_dense();
-                let srd = sr.to_dense();
-                let mut tmp = vec![0.0; scd.ncols()];
-                blas::gemv_transposed(1.0, &scd, s, &mut tmp);
-                blas::gemv(1.0, &srd, &tmp, t);
+                let tmp = &mut scratch[..sc.ncols];
+                tmp.fill(0.0);
+                crate::mvm::kernels::zgemv_t_blocked(1.0, sc, s, tmp);
+                crate::mvm::kernels::zgemv_blocked(1.0, sr, tmp, t);
             }
+        }
+    }
+
+    /// t += Sᵀ · s (adjoint product: column coefficients from row
+    /// coefficients). Thin allocating wrapper.
+    pub fn apply_transposed_add(&self, s: &[f64], t: &mut [f64]) {
+        let mut tmp = vec![0.0; self.scratch_len()];
+        self.apply_transposed_add_scratch(s, t, &mut tmp);
+    }
+
+    /// t += Sᵀ · s with caller-provided scratch; Sᵀ = Sc·Srᵀ for separate
+    /// coupling storage.
+    pub fn apply_transposed_add_scratch(&self, s: &[f64], t: &mut [f64], scratch: &mut [f64]) {
+        match self {
+            CouplingMat::Plain(m) => blas::gemv_transposed(1.0, m, s, t),
+            CouplingMat::Z(z) => crate::mvm::kernels::zgemv_t_blocked(1.0, z, s, t),
+            CouplingMat::SepPlain { sr, sc } => {
+                let tmp = &mut scratch[..sr.ncols()];
+                tmp.fill(0.0);
+                blas::gemv_transposed(1.0, sr, s, tmp);
+                blas::gemv(1.0, sc, tmp, t);
+            }
+            CouplingMat::SepZ { sr, sc } => {
+                let tmp = &mut scratch[..sr.ncols];
+                tmp.fill(0.0);
+                crate::mvm::kernels::zgemv_t_blocked(1.0, sr, s, tmp);
+                crate::mvm::kernels::zgemv_blocked(1.0, sc, tmp, t);
+            }
+        }
+    }
+
+    /// Scratch values needed by the `_scratch` apply variants.
+    pub fn scratch_len(&self) -> usize {
+        match self {
+            CouplingMat::Plain(_) | CouplingMat::Z(_) => 0,
+            CouplingMat::SepPlain { sr, sc } => sr.ncols().max(sc.ncols()),
+            CouplingMat::SepZ { sr, sc } => sr.ncols.max(sc.ncols),
         }
     }
 

@@ -1,0 +1,289 @@
+//! Execution-plan layer integration: plan executors must match the
+//! sequential/recursive reference algorithms for all three formats ×
+//! {uncompressed, AFLP+VALR, FPX+VALR, AFLP fixed-precision} × {forward,
+//! adjoint, multi-RHS}, and the batching server must serve every format
+//! end-to-end through the `HOperator` trait.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::coordinator::{BatchPolicy, MvmServer};
+use hmatc::geometry::icosphere;
+use hmatc::h2::H2Matrix;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::la::DMatrix;
+use hmatc::lowrank::AcaOptions;
+use hmatc::mvm::{h2_mvm, mvm, uniform_mvm, H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::plan::{Arena, H2Plan, HOperator, HPlan, PlannedOperator, UniPlan};
+use hmatc::uniform::{CouplingKind, UniformHMatrix};
+use hmatc::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn build_h(level: usize, eps: f64) -> HMatrix {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps))
+}
+
+fn rel_l2(a: &[f64], b: &[f64]) -> f64 {
+    let norm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let diff: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt();
+    diff / norm
+}
+
+/// The compression sweep of the acceptance criteria. `None` = uncompressed.
+fn configs() -> Vec<Option<CompressionConfig>> {
+    vec![
+        None,
+        Some(CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true }),
+        Some(CompressionConfig { codec: Codec::Fpx, eps: 1e-9, valr: true }),
+        Some(CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: false }),
+    ]
+}
+
+#[test]
+fn h_plan_matches_seq_all_configs() {
+    let h0 = build_h(2, 1e-7); // n = 320
+    let n = h0.nrows();
+    let mut rng = Rng::new(901);
+    let x = rng.vector(n);
+    for (ci, cfg) in configs().iter().enumerate() {
+        let mut h = h0.clone();
+        if let Some(c) = cfg {
+            h.compress(c);
+        }
+        // same data, same block kernels, different traversal → 1e-12 relative
+        let mut y_ref = rng.vector(n);
+        let y0 = y_ref.clone();
+        mvm(1.5, &h, &x, &mut y_ref, MvmAlgorithm::Seq);
+        let mut y = y0.clone();
+        mvm(1.5, &h, &x, &mut y, MvmAlgorithm::Plan);
+        assert!(rel_l2(&y, &y_ref) < 1e-12, "config {ci}: rel {}", rel_l2(&y, &y_ref));
+    }
+}
+
+#[test]
+fn uniform_plan_matches_row_wise_all_configs() {
+    let h = build_h(2, 1e-7);
+    for kind in [CouplingKind::Combined, CouplingKind::Separate] {
+        let uh0 = hmatc::uniform::build_from_h(&h, 1e-7, kind);
+        let n = uh0.nrows();
+        let mut rng = Rng::new(902);
+        let x = rng.vector(n);
+        for (ci, cfg) in configs().iter().enumerate() {
+            let mut uh = uh0.clone();
+            if let Some(c) = cfg {
+                uh.compress(c);
+            }
+            let mut y_ref = vec![0.25; n];
+            uniform_mvm(2.0, &uh, &x, &mut y_ref, UniMvmAlgorithm::RowWise);
+            let mut y = vec![0.25; n];
+            uniform_mvm(2.0, &uh, &x, &mut y, UniMvmAlgorithm::Plan);
+            assert!(rel_l2(&y, &y_ref) < 1e-12, "{kind:?} config {ci}: rel {}", rel_l2(&y, &y_ref));
+        }
+    }
+}
+
+#[test]
+fn h2_plan_matches_row_wise_all_configs() {
+    let h = build_h(2, 1e-7);
+    let h20 = hmatc::h2::build_from_h(&h, 1e-7);
+    let n = h20.nrows();
+    let mut rng = Rng::new(903);
+    let x = rng.vector(n);
+    for (ci, cfg) in configs().iter().enumerate() {
+        let mut h2 = h20.clone();
+        if let Some(c) = cfg {
+            h2.compress(c);
+        }
+        let mut y_ref = vec![0.0; n];
+        h2_mvm(1.0, &h2, &x, &mut y_ref, H2MvmAlgorithm::RowWise);
+        let mut y = vec![0.0; n];
+        h2_mvm(1.0, &h2, &x, &mut y, H2MvmAlgorithm::Plan);
+        assert!(rel_l2(&y, &y_ref) < 1e-12, "config {ci}: rel {}", rel_l2(&y, &y_ref));
+    }
+}
+
+#[test]
+fn h_plan_adjoint_matches_recursive_adjoint() {
+    let h0 = build_h(2, 1e-7);
+    let n = h0.nrows();
+    let mut rng = Rng::new(904);
+    let x = rng.vector(n);
+    for (ci, cfg) in configs().iter().enumerate() {
+        let mut h = h0.clone();
+        if let Some(c) = cfg {
+            h.compress(c);
+        }
+        let mut y_ref = vec![0.0; h.ncols()];
+        hmatc::mvm::mvm_transposed(1.0, &h, &x, &mut y_ref);
+        let plan = HPlan::build(&h);
+        let mut arena = Arena::new();
+        let mut y = vec![0.0; h.ncols()];
+        plan.execute_adjoint(&h, 1.0, &x, &mut y, &mut arena);
+        assert!(rel_l2(&y, &y_ref) < 1e-12, "config {ci}: rel {}", rel_l2(&y, &y_ref));
+    }
+}
+
+#[test]
+fn uniform_and_h2_plan_adjoint_match_dense_transpose() {
+    let h = build_h(2, 1e-8);
+    let uh = hmatc::uniform::build_from_h(&h, 1e-8, CouplingKind::Combined);
+    let h2 = hmatc::h2::build_from_h(&h, 1e-8);
+    let n = h.nrows();
+    let mut rng = Rng::new(905);
+    let x = rng.vector(n);
+
+    let dt_u = uh.to_dense().transpose();
+    let mut want_u = vec![0.0; n];
+    hmatc::la::gemv(1.5, &dt_u, &x, &mut want_u);
+    let plan_u = UniPlan::build(&uh);
+    let mut arena = Arena::new();
+    let mut y_u = vec![0.0; n];
+    plan_u.execute_adjoint(&uh, 1.5, &x, &mut y_u, &mut arena);
+    assert!(rel_l2(&y_u, &want_u) < 1e-10, "uniform adjoint rel {}", rel_l2(&y_u, &want_u));
+
+    let dt_2 = h2.to_dense().transpose();
+    let mut want_2 = vec![0.0; n];
+    hmatc::la::gemv(1.5, &dt_2, &x, &mut want_2);
+    let plan_2 = H2Plan::build(&h2);
+    let mut y_2 = vec![0.0; n];
+    plan_2.execute_adjoint(&h2, 1.5, &x, &mut y_2, &mut arena);
+    assert!(rel_l2(&y_2, &want_2) < 1e-10, "h2 adjoint rel {}", rel_l2(&y_2, &want_2));
+}
+
+#[test]
+fn compressed_adjoint_close_to_uncompressed() {
+    let h = build_h(2, 1e-8);
+    let uh = hmatc::uniform::build_from_h(&h, 1e-8, CouplingKind::Combined);
+    let h2 = hmatc::h2::build_from_h(&h, 1e-8);
+    let n = h.nrows();
+    let mut rng = Rng::new(906);
+    let x = rng.vector(n);
+    let cfg = CompressionConfig::aflp(1e-10);
+
+    let mut uhz = uh.clone();
+    uhz.compress(&cfg);
+    let mut y0 = vec![0.0; n];
+    let mut y1 = vec![0.0; n];
+    let mut arena = Arena::new();
+    UniPlan::build(&uh).execute_adjoint(&uh, 1.0, &x, &mut y0, &mut arena);
+    UniPlan::build(&uhz).execute_adjoint(&uhz, 1.0, &x, &mut y1, &mut arena);
+    assert!(rel_l2(&y1, &y0) < 1e-6, "uniform compressed adjoint rel {}", rel_l2(&y1, &y0));
+
+    let mut h2z = h2.clone();
+    h2z.compress(&cfg);
+    let mut z0 = vec![0.0; n];
+    let mut z1 = vec![0.0; n];
+    H2Plan::build(&h2).execute_adjoint(&h2, 1.0, &x, &mut z0, &mut arena);
+    H2Plan::build(&h2z).execute_adjoint(&h2z, 1.0, &x, &mut z1, &mut arena);
+    assert!(rel_l2(&z1, &z0) < 1e-6, "h2 compressed adjoint rel {}", rel_l2(&z1, &z0));
+}
+
+#[test]
+fn plan_multi_rhs_matches_repeated_single() {
+    let h = build_h(2, 1e-7);
+    let uh = hmatc::uniform::build_from_h(&h, 1e-7, CouplingKind::Combined);
+    let h2 = hmatc::h2::build_from_h(&h, 1e-7);
+    let n = h.nrows();
+    let nrhs = 4;
+    let mut rng = Rng::new(907);
+    let x = DMatrix::random(n, nrhs, &mut rng);
+
+    let ops: Vec<Box<dyn HOperator>> = vec![
+        Box::new(PlannedOperator::from_h(Arc::new(h))),
+        Box::new(PlannedOperator::from_uniform(Arc::new(uh))),
+        Box::new(PlannedOperator::from_h2(Arc::new(h2))),
+    ];
+    for op in &ops {
+        let mut y = DMatrix::zeros(n, nrhs);
+        op.apply_multi(1.25, &x, &mut y);
+        for c in 0..nrhs {
+            let mut yc = vec![0.0; n];
+            op.apply(1.25, x.col(c), &mut yc);
+            let rel = rel_l2(y.col(c), &yc);
+            assert!(rel < 1e-12, "{} col {c}: rel {rel}", op.format_name());
+        }
+    }
+}
+
+#[test]
+fn planned_operator_is_deterministic_across_calls() {
+    // reused arena ⇒ repeated calls must be bitwise identical (collision-free
+    // schedules have a fixed summation order)
+    let h = build_h(1, 1e-8);
+    let n = h.nrows();
+    let op = PlannedOperator::from_h(Arc::new(h));
+    let mut rng = Rng::new(908);
+    let x = rng.vector(n);
+    let mut y1 = vec![0.0; n];
+    let mut y2 = vec![0.0; n];
+    op.apply(1.0, &x, &mut y1);
+    op.apply(1.0, &x, &mut y2);
+    assert_eq!(y1, y2);
+}
+
+fn small_formats() -> (Arc<UniformHMatrix>, Arc<H2Matrix>, Arc<HMatrix>) {
+    let h = build_h(1, 1e-6); // n = 80
+    let uh = Arc::new(hmatc::uniform::build_from_h(&h, 1e-6, CouplingKind::Combined));
+    let h2 = Arc::new(hmatc::h2::build_from_h(&h, 1e-6));
+    (uh, h2, Arc::new(h))
+}
+
+#[test]
+fn server_serves_uniform_matrix_end_to_end() {
+    let (uh, _, _) = small_formats();
+    let server = MvmServer::start(uh.clone(), BatchPolicy { max_batch: 4, linger: Duration::from_micros(200) });
+    let mut rng = Rng::new(909);
+    for _ in 0..4 {
+        let x = rng.vector(uh.ncols());
+        let resp = server.call(x.clone());
+        let mut want = vec![0.0; uh.nrows()];
+        uniform_mvm(1.0, &uh, &x, &mut want, UniMvmAlgorithm::RowWise);
+        assert!(rel_l2(&resp.y, &want) < 1e-12);
+    }
+    assert_eq!(server.metrics.snapshot().requests, 4);
+}
+
+#[test]
+fn server_serves_h2_matrix_end_to_end() {
+    let (_, h2, _) = small_formats();
+    let server = MvmServer::start(h2.clone(), BatchPolicy { max_batch: 4, linger: Duration::from_micros(200) });
+    let mut rng = Rng::new(910);
+    for _ in 0..4 {
+        let x = rng.vector(h2.ncols());
+        let resp = server.call(x.clone());
+        let mut want = vec![0.0; h2.nrows()];
+        h2_mvm(1.0, &h2, &x, &mut want, H2MvmAlgorithm::RowWise);
+        assert!(rel_l2(&resp.y, &want) < 1e-12);
+    }
+}
+
+#[test]
+fn server_serves_planned_operators_all_formats() {
+    let (uh, h2, h) = small_formats();
+    let mut rng = Rng::new(911);
+    let x = rng.vector(h.ncols());
+
+    let mut want_h = vec![0.0; h.nrows()];
+    mvm(1.0, &h, &x, &mut want_h, MvmAlgorithm::Seq);
+    let mut want_u = vec![0.0; uh.nrows()];
+    uniform_mvm(1.0, &uh, &x, &mut want_u, UniMvmAlgorithm::RowWise);
+    let mut want_2 = vec![0.0; h2.nrows()];
+    h2_mvm(1.0, &h2, &x, &mut want_2, H2MvmAlgorithm::RowWise);
+
+    let cases: Vec<(Arc<dyn HOperator>, Vec<f64>)> = vec![
+        (Arc::new(PlannedOperator::from_h(h)), want_h),
+        (Arc::new(PlannedOperator::from_uniform(uh)), want_u),
+        (Arc::new(PlannedOperator::from_h2(h2)), want_2),
+    ];
+    for (op, want) in cases {
+        let name = op.format_name();
+        let server = MvmServer::start(op, BatchPolicy::default());
+        let resp = server.call(x.clone());
+        assert!(rel_l2(&resp.y, &want) < 1e-12, "{name}: rel {}", rel_l2(&resp.y, &want));
+    }
+}

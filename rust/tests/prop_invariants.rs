@@ -137,6 +137,84 @@ fn prop_mvm_linearity() {
     }
 }
 
+/// Plan executors agree with the sequential/recursive references for random
+/// geometries, formats, compression configs and alpha — forward, adjoint and
+/// multi-RHS all through the same plan.
+#[test]
+fn prop_plan_matches_reference_all_formats() {
+    use hmatc::compress::CompressionConfig;
+    use hmatc::hmatrix::HMatrix;
+    use hmatc::kernelfn::{ExpCovariance, MatrixGen};
+    use hmatc::la::DMatrix;
+    use hmatc::lowrank::AcaOptions;
+    use hmatc::mvm::{h2_mvm, mvm, uniform_mvm, H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+    use hmatc::plan::{HOperator, PlannedOperator};
+    use hmatc::uniform::CouplingKind;
+
+    let mut rng = Rng::new(783);
+    for case in 0..4 {
+        let n = 80 + rng.below(200);
+        let pts = random_cube(n, &mut rng);
+        let gen = ExpCovariance::new(pts, rng.range(0.2, 1.0));
+        let ct = Arc::new(ClusterTree::build(gen.points(), 8 + rng.below(24)));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(rng.range(1.0, 3.0))));
+        let h = HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-9));
+        let mut uh = hmatc::uniform::build_from_h(&h, 1e-9, CouplingKind::Combined);
+        let mut h2 = hmatc::h2::build_from_h(&h, 1e-9);
+        let mut hc = h.clone();
+        if case % 2 == 1 {
+            let codec = if case % 4 == 1 { Codec::Aflp } else { Codec::Fpx };
+            let cfg = CompressionConfig { codec, eps: 1e-10, valr: case % 4 == 1 };
+            hc.compress(&cfg);
+            uh.compress(&cfg);
+            h2.compress(&cfg);
+        }
+        let alpha = rng.range(-2.0, 2.0);
+        let x = rng.vector(n);
+
+        let rel = |a: &[f64], b: &[f64]| {
+            let norm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-30);
+            a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt() / norm
+        };
+
+        // forward, all three formats
+        let mut y_ref = vec![0.0; n];
+        mvm(alpha, &hc, &x, &mut y_ref, MvmAlgorithm::Seq);
+        let mut y = vec![0.0; n];
+        mvm(alpha, &hc, &x, &mut y, MvmAlgorithm::Plan);
+        assert!(rel(&y, &y_ref) < 1e-12, "case {case} H: {}", rel(&y, &y_ref));
+
+        let mut yu_ref = vec![0.0; n];
+        uniform_mvm(alpha, &uh, &x, &mut yu_ref, UniMvmAlgorithm::RowWise);
+        let mut yu = vec![0.0; n];
+        uniform_mvm(alpha, &uh, &x, &mut yu, UniMvmAlgorithm::Plan);
+        assert!(rel(&yu, &yu_ref) < 1e-12, "case {case} UH: {}", rel(&yu, &yu_ref));
+
+        let mut y2_ref = vec![0.0; n];
+        h2_mvm(alpha, &h2, &x, &mut y2_ref, H2MvmAlgorithm::RowWise);
+        let mut y2 = vec![0.0; n];
+        h2_mvm(alpha, &h2, &x, &mut y2, H2MvmAlgorithm::Plan);
+        assert!(rel(&y2, &y2_ref) < 1e-12, "case {case} H2: {}", rel(&y2, &y2_ref));
+
+        // adjoint and multi-RHS through the planned operator (H format)
+        let op = PlannedOperator::from_h(Arc::new(hc.clone()));
+        let mut ya_ref = vec![0.0; n];
+        hmatc::mvm::mvm_transposed(alpha, &hc, &x, &mut ya_ref);
+        let mut ya = vec![0.0; n];
+        op.apply_adjoint(alpha, &x, &mut ya);
+        assert!(rel(&ya, &ya_ref) < 1e-12, "case {case} adjoint: {}", rel(&ya, &ya_ref));
+
+        let xm = DMatrix::random(n, 3, &mut rng);
+        let mut ym = DMatrix::zeros(n, 3);
+        op.apply_multi(alpha, &xm, &mut ym);
+        for c in 0..3 {
+            let mut yc = vec![0.0; n];
+            mvm(alpha, &hc, xm.col(c), &mut yc, MvmAlgorithm::Seq);
+            assert!(rel(ym.col(c), &yc) < 1e-12, "case {case} multi col {c}");
+        }
+    }
+}
+
 /// Byte size monotonicity: coarser eps never needs more bytes.
 #[test]
 fn prop_bytes_monotone_in_eps() {
