@@ -74,15 +74,21 @@ fn main() {
     uh.compress(&cfg);
     h2.compress(&cfg);
 
-    let planned = PlannedOperator::from_h(Arc::new(hz));
+    // external ordering: clients submit vectors in the original point
+    // ordering; the permutation fold runs inside the plan execution
+    let planned = PlannedOperator::from_h(Arc::new(hz)).with_external_ordering();
     let st = planned.plan_stats();
     println!(
-        "H plan: {} tasks, {} levels, ≤{} shards, {} scratch f64",
-        st.tasks, st.levels, st.max_shards, st.scratch_f64
+        "H plan: {} tasks, {} levels, ≤{} shards, {} scratch f64 (external ordering: {})",
+        st.tasks,
+        st.levels,
+        st.max_shards,
+        st.scratch_f64,
+        planned.is_external_ordering()
     );
     serve(Arc::new(planned), nreq, max_batch);
-    serve(Arc::new(PlannedOperator::from_uniform(Arc::new(uh))), nreq, max_batch);
-    serve(Arc::new(PlannedOperator::from_h2(Arc::new(h2))), nreq, max_batch);
+    serve(Arc::new(PlannedOperator::from_uniform(Arc::new(uh)).with_external_ordering()), nreq, max_batch);
+    serve(Arc::new(PlannedOperator::from_h2(Arc::new(h2)).with_external_ordering()), nreq, max_batch);
 
     // PJRT offload demo (dense near-field on the AOT Pallas tile kernel)
     #[cfg(feature = "pjrt")]

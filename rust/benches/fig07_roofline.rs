@@ -1,23 +1,35 @@
-//! Figure 7 — roofline for the (uncompressed) H-, UH- and H²-MVM: the
-//! algorithms are bandwidth limited; the paper reports ≈79 % / 78 % / 82 %
-//! of peak. We measure peak with a STREAM triad and report achieved
-//! bandwidth fraction at the kernels' arithmetic intensity.
+//! Figure 7 — roofline for the (uncompressed) H-, UH- and H²-MVM, plus the
+//! batched multi-RHS sweep. The single-vector algorithms are bandwidth
+//! limited (paper: ≈79 % / 78 % / 82 % of peak); batching b right-hand sides
+//! into one gemm-shaped plan traversal multiplies the arithmetic per matrix
+//! byte by ~b, which is exactly the paper's Fig. 7 argument for raising
+//! arithmetic intensity. We measure peak with a STREAM triad and report both
+//! achieved bandwidth fraction and per-b GFLOP/s + bytes touched
+//! (compressed and uncompressed), emitting `BENCH_fig07.json`.
+//!
+//! `--quick` shrinks the problem and sampling so CI can smoke-run this bench.
 
 use hmatc::bench::workloads::{Formats, Problem};
-use hmatc::bench::{bench_fn, measure_peak_bandwidth, roofline_point, write_result, Table};
+use hmatc::bench::{bench_fn, measure_peak_bandwidth, roofline_point, write_bench_json, write_result, Table};
+use hmatc::compress::CompressionConfig;
+use hmatc::la::DMatrix;
 use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::plan::{HOperator, PlannedOperator};
 use hmatc::util::args::Args;
 use hmatc::util::json::Json;
 use hmatc::util::Rng;
+use std::sync::Arc;
 
-/// flop estimate: 2 flops per stored matrix coefficient touched.
+/// flop estimate: 2 flops per stored (logical FP64) matrix coefficient.
 fn flops_for(bytes: usize) -> f64 {
     2.0 * bytes as f64 / 8.0
 }
 
 fn main() {
     let args = Args::from_env();
-    let level = args.num_or("level", 4usize);
+    let quick = args.flag("quick");
+    let level = args.num_or("level", if quick { 2usize } else { 4 });
+    let (warm, samples, min_secs) = if quick { (0, 2, 0.002) } else { (1, 7, 0.05) };
     let eps = 1e-6;
     println!("measuring peak bandwidth (STREAM triad)…");
     let peak = measure_peak_bandwidth();
@@ -33,9 +45,11 @@ fn main() {
     let mut t = Table::new(&["format", "median", "achieved GB/s", "% of peak", "paper"]);
     let mut doc = Vec::new();
     let cases: Vec<(&str, f64, usize, &str)> = {
-        let rh = bench_fn(1, 7, 0.05, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists));
-        let ru = bench_fn(1, 7, 0.05, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise));
-        let r2 = bench_fn(1, 7, 0.05, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise));
+        let rh = bench_fn(warm, samples, min_secs, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists));
+        let ru = bench_fn(warm, samples, min_secs, || {
+            hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise)
+        });
+        let r2 = bench_fn(warm, samples, min_secs, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise));
         vec![
             ("H (Alg 3)", rh.median, f.h.byte_size(), "79%"),
             ("UH (Alg 5)", ru.median, f.uh.byte_size(), "78%"),
@@ -61,5 +75,54 @@ fn main() {
         ]));
     }
     t.print();
-    write_result("fig07_roofline", &Json::obj(vec![("peak_gbs", peak.into()), ("points", Json::arr(doc))]));
+
+    // ---- batched multi-RHS sweep (gemm-shaped plan schedules) ----
+    let coeffs = f.h.byte_size() as f64 / 8.0; // logical FP64 coefficients
+    let mut hz = f.h.clone();
+    hz.compress(&CompressionConfig::aflp(eps));
+    let ops: Vec<(&str, PlannedOperator)> = vec![
+        ("H fp64", PlannedOperator::from_h(Arc::new(f.h.clone()))),
+        ("H aflp", PlannedOperator::from_h(Arc::new(hz))),
+    ];
+    let bs = args.list_or("batch", &[1usize, 2, 4, 8, 16]);
+    let mut bt = Table::new(&["operator", "b", "median", "GFLOP/s", "bytes touched", "GB/s (matrix)"]);
+    let mut brows = Vec::new();
+    for (name, op) in &ops {
+        for &b in &bs {
+            let xm = DMatrix::random(n, b, &mut rng);
+            let mut ym = DMatrix::zeros(n, b);
+            let r = bench_fn(warm, samples, min_secs, || op.apply_multi(1.0, &xm, &mut ym));
+            let flops = 2.0 * coeffs * b as f64;
+            let bytes_touched = op.byte_size() as f64 + 8.0 * (2 * n * b) as f64;
+            let gflops = flops / r.median / 1e9;
+            bt.row(vec![
+                (*name).into(),
+                format!("{b}"),
+                hmatc::util::fmt_secs(r.median),
+                format!("{gflops:.2}"),
+                hmatc::util::fmt_bytes(bytes_touched as usize),
+                format!("{:.2}", op.byte_size() as f64 / r.median / 1e9),
+            ]);
+            brows.push(Json::obj(vec![
+                ("operator", (*name).into()),
+                ("b", (b as f64).into()),
+                ("median", r.median.into()),
+                ("gflops", gflops.into()),
+                ("bytes_touched", bytes_touched.into()),
+                ("matrix_gbs", (op.byte_size() as f64 / r.median / 1e9).into()),
+            ]));
+        }
+    }
+    println!();
+    bt.print();
+
+    let out = Json::obj(vec![
+        ("peak_gbs", peak.into()),
+        ("n", n.into()),
+        ("quick", quick.into()),
+        ("points", Json::arr(doc)),
+        ("batched", Json::arr(brows)),
+    ]);
+    write_result("fig07_roofline", &out);
+    write_bench_json("fig07", &out);
 }

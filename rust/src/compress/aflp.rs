@@ -45,23 +45,51 @@ pub fn compress(data: &[f64], eps: f64) -> Blob {
 
     let mut bytes = vec![0u8; n * bytes_per as usize];
     let inv_scale = 1.0 / vmin;
+    // extreme dynamic range: the scaled value v/v_min (and 2^e) can overflow
+    // an f64, so the normalized fraction must be computed stepwise; a
+    // subnormal v_min would likewise overflow 1/v_min
+    let wide = vmax.log2() - vmin.log2() > 1020.0 || vmin < f64::MIN_POSITIVE;
     for (i, &x) in data.iter().enumerate() {
         let word: u64 = if x == 0.0 {
             zero_marker
         } else {
             let sign = if x < 0.0 { 1u64 } else { 0 };
-            let y = x.abs() * inv_scale; // ≥ 1 up to fp rounding
-            let mut e = y.log2().floor().max(0.0) as u64;
-            let mut frac = y / f64::powi(2.0, e as i32);
+            let a = x.abs();
+            // fraction a / (v_min · 2^e) ∈ [1, 2): direct on the common path,
+            // bounded power-of-two steps on the wide path (e may exceed 1023)
+            let frac_at = |e: u64| -> f64 {
+                if wide {
+                    // build v_min·2^e upward (stays normal, exact powers of
+                    // two), then divide: scaling `a` *down* instead would
+                    // round it onto the subnormal grid when v_min is
+                    // subnormal and destroy the fraction
+                    let mut s = vmin;
+                    let mut rem = e;
+                    while rem > 0 {
+                        let step = rem.min(512);
+                        s *= f64::powi(2.0, step as i32);
+                        rem -= step;
+                    }
+                    a / s
+                } else {
+                    a * inv_scale / f64::powi(2.0, e as i32)
+                }
+            };
+            let mut e = if wide {
+                (a.log2() - vmin.log2()).floor().max(0.0) as u64
+            } else {
+                (a * inv_scale).log2().floor().max(0.0) as u64
+            };
+            let mut frac = frac_at(e);
             // guard against log/pow edge cases
             if frac < 1.0 {
                 if e > 0 {
                     e -= 1;
                 }
-                frac = y / f64::powi(2.0, e as i32);
+                frac = frac_at(e);
             } else if frac >= 2.0 {
                 e += 1;
-                frac = y / f64::powi(2.0, e as i32);
+                frac = frac_at(e);
             }
             // round-to-nearest mantissa
             let mut mant = ((frac - 1.0) * (mant_max as f64 + 1.0)).round() as u64;
@@ -87,7 +115,7 @@ pub fn compress(data: &[f64], eps: f64) -> Blob {
 /// exponent is rebiased, one multiply applies the block scale. No
 /// transcendentals on the decode path (this is the MVM hot loop).
 #[inline(always)]
-fn decode_word(word: u64, e_bits: u32, total_bits: u32, scale: f64, zero_marker: u64, _mant_scale: f64) -> f64 {
+fn decode_word(word: u64, e_bits: u32, total_bits: u32, scale: f64, zero_marker: u64) -> f64 {
     let e = word & zero_marker; // zero_marker == exponent mask
     if e == zero_marker {
         return 0.0;
@@ -101,9 +129,19 @@ fn decode_word(word: u64, e_bits: u32, total_bits: u32, scale: f64, zero_marker:
         let bits = (sign << 63) | ((1023 + e) << 52) | frac_bits;
         f64::from_bits(bits) * scale
     } else {
-        // extreme dynamic range: fall back to explicit scaling
-        let frac = 1.0 + mant as f64 / (1u64 << m_bits.min(52)) as f64;
-        let v = frac * f64::powi(2.0, e as i32) * scale;
+        // extreme dynamic range (e > 1023): 2^e itself overflows an f64, so
+        // fold the exponent into the block scale in bounded steps; the
+        // mantissa is scaled by its true width 2^-m_bits (a plain division
+        // by 2^min(m_bits,52) produced wrong magnitudes for m_bits > 52)
+        let frac = 1.0 + mant as f64 * 0.5f64.powi(m_bits as i32);
+        let mut sc = scale;
+        let mut rem = e;
+        while rem > 0 {
+            let step = rem.min(512);
+            sc *= f64::powi(2.0, step as i32);
+            rem -= step;
+        }
+        let v = frac * sc;
         if sign == 1 {
             -v
         } else {
@@ -141,7 +179,7 @@ pub fn decompress_range(blob: &Blob, begin: usize, end: usize, out: &mut [f64]) 
         // extreme dynamic range / over-wide mantissa: generic path
         let mut it = out.iter_mut();
         crate::compress::for_each_word(bytes, b, begin, end, |w| {
-            *it.next().unwrap() = decode_word(w, e_bits, total_bits, scale, zero_marker, 0.0);
+            *it.next().unwrap() = decode_word(w, e_bits, total_bits, scale, zero_marker);
         });
         return;
     }
@@ -211,7 +249,7 @@ pub fn decompress_range(blob: &Blob, begin: usize, end: usize, out: &mut [f64]) 
         let i = begin + fast + k;
         let mut buf = [0u8; 8];
         buf[..b].copy_from_slice(&bytes[i * b..i * b + b]);
-        *o = decode_word(u64::from_le_bytes(buf), e_bits, total_bits, scale, zero_marker, 0.0);
+        *o = decode_word(u64::from_le_bytes(buf), e_bits, total_bits, scale, zero_marker);
     }
 }
 
@@ -222,7 +260,7 @@ pub fn get(blob: &Blob, i: usize) -> f64 {
     let total_bits = (b * 8) as u32;
     let zero_marker = (1u64 << e_bits) - 1;
     let w = crate::compress::load_word_at(&blob.bytes, b, i);
-    decode_word(w, e_bits, total_bits, scale, zero_marker, 0.0)
+    decode_word(w, e_bits, total_bits, scale, zero_marker)
 }
 
 #[cfg(test)]
@@ -259,6 +297,71 @@ mod tests {
         let data: Vec<f64> = (0..200).map(|i| 2f64.powi(i - 100) * 1.3).collect();
         let blob = compress(&data, 1e-4);
         assert!(max_rel_error(&blob, &data) <= 1e-4);
+    }
+
+    #[test]
+    fn extreme_dynamic_range_roundtrip() {
+        // forces e_bits ≥ 11 (stored exponents beyond 1023) — regression for
+        // the decode fallback that formed 2^e directly (inf) and for the
+        // encoder's overflowing v/v_min normalization
+        let data = vec![1e-250, -3.7e-120, 1.0, 4.2e80, -9.9e249, 1e250];
+        let blob = compress(&data, 1e-3);
+        match blob.params {
+            CodecParams::Aflp { e_bits, .. } => assert!(e_bits >= 11, "e_bits {e_bits}"),
+            _ => panic!("wrong params"),
+        }
+        let err = max_rel_error(&blob, &data);
+        assert!(err <= 1e-3, "err {err}");
+        // sign survives the fallback path
+        let dec = blob.to_vec();
+        for (d, o) in dec.iter().zip(&data) {
+            assert_eq!(d.signum(), o.signum());
+        }
+        // random access must agree with bulk decode on the fallback path
+        for i in 0..data.len() {
+            assert_eq!(blob.get(i), dec[i], "idx {i}");
+        }
+    }
+
+    #[test]
+    fn subnormal_vmin_roundtrip() {
+        // a subnormal v_min must not destroy the other values' fractions:
+        // the encoder builds v_min·2^e upward instead of scaling the value
+        // down onto the subnormal grid (and 1/v_min would overflow to inf)
+        let data = vec![5e-324, 1.5, -2.25e10, 7.0e-310];
+        let blob = compress(&data, 1e-6);
+        let dec = blob.to_vec();
+        // the subnormal anchor itself decodes exactly (frac = 1, e = 0)
+        assert_eq!(dec[0], 5e-324);
+        // normal-range values keep the eps guarantee
+        for (d, o) in dec.iter().zip(&data).skip(1) {
+            assert!((d - o).abs() <= 1e-6 * o.abs(), "{d:e} vs {o:e}");
+        }
+        for i in 0..data.len() {
+            assert_eq!(blob.get(i), dec[i], "idx {i}");
+        }
+    }
+
+    #[test]
+    fn wide_mantissa_roundtrip() {
+        // eps at the FP64 limit with a tiny dynamic range → more than 52
+        // stored mantissa bits; pins the m_bits > 52 down-shift in both
+        // decode paths
+        let data: Vec<f64> = (0..64).map(|i| 1.0 + i as f64 / 64.0).collect();
+        let blob = compress(&data, 1e-16);
+        match blob.params {
+            CodecParams::Aflp { bytes_per, e_bits, .. } => {
+                let m_bits = 8 * bytes_per as u32 - 1 - e_bits as u32;
+                assert!(m_bits > 52, "m_bits {m_bits}");
+            }
+            _ => panic!("wrong params"),
+        }
+        let err = max_rel_error(&blob, &data);
+        assert!(err <= 1e-15, "err {err}");
+        let dec = blob.to_vec();
+        for i in 0..data.len() {
+            assert_eq!(blob.get(i), dec[i], "idx {i}");
+        }
     }
 
     #[test]

@@ -30,38 +30,69 @@ pub fn compress(data: &[f64], eps: f64) -> Blob {
     // FP32 base format feasible: mantissa fits and values are normal in f32
     let fp32_ok = m <= 23 && vmax < f32::MAX as f64 / 2.0 && vmin > 2.0 * f32::MIN_POSITIVE as f64;
     if fp32_ok {
-        let bytes_per = (9 + m).div_ceil(8).max(2) as usize; // sign+8 exp+m mantissa
-        let shift = 32 - 8 * bytes_per as u32;
-        let mut bytes = vec![0u8; n * bytes_per];
-        for (i, &x) in data.iter().enumerate() {
-            let f = x as f32; // RTN to FP32 first
-            let mut bits = f.to_bits();
-            if shift > 0 {
-                let rounded = bits.wrapping_add(1u32 << (shift - 1));
-                // guard: rounding carry must not overflow into inf/nan
-                bits = if f32::from_bits((rounded >> shift) << shift).is_finite() { rounded } else { bits };
+        // widen on a rejected rounding carry: keeping the unrounded bits
+        // would silently degrade RTN to truncation (error up to 1 ulp where
+        // bytes_per was sized for 0.5 ulp), so retry at the next byte width
+        let mut bytes_per = (9 + m).div_ceil(8).max(2) as usize; // sign+8 exp+m mantissa
+        while bytes_per <= 4 {
+            if let Some(bytes) = pack32(data, bytes_per) {
+                return Blob { params: CodecParams::Fpx32 { bytes_per: bytes_per as u8 }, n, bytes };
             }
-            let word = bits >> shift;
-            let off = i * bytes_per;
-            bytes[off..off + bytes_per].copy_from_slice(&word.to_le_bytes()[..bytes_per]);
+            bytes_per += 1;
         }
-        Blob { params: CodecParams::Fpx32 { bytes_per: bytes_per as u8 }, n, bytes }
-    } else {
-        let bytes_per = (12 + m).div_ceil(8).clamp(3, 8) as usize; // sign+11 exp+m mantissa
-        let shift = 64 - 8 * bytes_per as u32;
-        let mut bytes = vec![0u8; n * bytes_per];
-        for (i, &x) in data.iter().enumerate() {
-            let mut bits = x.to_bits();
-            if shift > 0 {
-                let rounded = bits.wrapping_add(1u64 << (shift - 1));
-                bits = if f64::from_bits((rounded >> shift) << shift).is_finite() { rounded } else { bits };
-            }
-            let word = bits >> shift;
-            let off = i * bytes_per;
-            bytes[off..off + bytes_per].copy_from_slice(&word.to_le_bytes()[..bytes_per]);
-        }
-        Blob { params: CodecParams::Fpx64 { bytes_per: bytes_per as u8 }, n, bytes }
+        // unreachable in practice (bytes_per = 4 has no rounding step) —
+        // fall through to the FP64 path for safety
     }
+    let mut bytes_per = (12 + m).div_ceil(8).clamp(3, 8) as usize; // sign+11 exp+m mantissa
+    loop {
+        if let Some(bytes) = pack64(data, bytes_per) {
+            return Blob { params: CodecParams::Fpx64 { bytes_per: bytes_per as u8 }, n, bytes };
+        }
+        bytes_per += 1; // bytes_per = 8 has no rounding step, so this ends
+    }
+}
+
+/// Pack the top `bytes_per` bytes of the FP32 patterns with RTN; `None` when
+/// some value's rounding carry would overflow into inf/nan at this width
+/// (the caller widens instead of silently truncating).
+fn pack32(data: &[f64], bytes_per: usize) -> Option<Vec<u8>> {
+    let shift = 32 - 8 * bytes_per as u32;
+    let mut bytes = vec![0u8; data.len() * bytes_per];
+    for (i, &x) in data.iter().enumerate() {
+        let f = x as f32; // RTN to FP32 first
+        let mut bits = f.to_bits();
+        if shift > 0 {
+            let rounded = bits.wrapping_add(1u32 << (shift - 1));
+            if !f32::from_bits((rounded >> shift) << shift).is_finite() {
+                return None;
+            }
+            bits = rounded;
+        }
+        let word = bits >> shift;
+        let off = i * bytes_per;
+        bytes[off..off + bytes_per].copy_from_slice(&word.to_le_bytes()[..bytes_per]);
+    }
+    Some(bytes)
+}
+
+/// FP64 analogue of [`pack32`].
+fn pack64(data: &[f64], bytes_per: usize) -> Option<Vec<u8>> {
+    let shift = 64 - 8 * bytes_per as u32;
+    let mut bytes = vec![0u8; data.len() * bytes_per];
+    for (i, &x) in data.iter().enumerate() {
+        let mut bits = x.to_bits();
+        if shift > 0 {
+            let rounded = bits.wrapping_add(1u64 << (shift - 1));
+            if !f64::from_bits((rounded >> shift) << shift).is_finite() {
+                return None;
+            }
+            bits = rounded;
+        }
+        let word = bits >> shift;
+        let off = i * bytes_per;
+        bytes[off..off + bytes_per].copy_from_slice(&word.to_le_bytes()[..bytes_per]);
+    }
+    Some(bytes)
 }
 
 /// Bulk decode.
@@ -253,5 +284,32 @@ mod tests {
         let blob = compress(&data, 1e-3);
         let dec = blob.to_vec();
         assert!(dec.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rounding_guard_widens_at_format_max() {
+        // regression: values within half a stored-ulp of the format maximum
+        // hit the rounding-overflow guard, which used to keep the unrounded
+        // bits — silently degrading RTN to truncation with error ≈ 1 ulp of
+        // the stored width (double the 0.5-ulp budget the width was sized
+        // for). The fix widens to the next byte width, so the error must now
+        // be strictly better than the truncation fallback (~eps/2).
+        let eps = 2f64.powi(-12); // → 3 bytes on the FP64 path, 12 stored mantissa bits
+        let data = vec![f64::MAX, -f64::MAX, 3.4e38, -3.4e38, 1.0];
+        let blob = compress(&data, eps);
+        let dec = blob.to_vec();
+        assert!(dec.iter().all(|v| v.is_finite()));
+        let err = max_rel_error(&blob, &data);
+        assert!(err <= eps / 4.0, "err {err} vs eps/4 {}", eps / 4.0);
+    }
+
+    #[test]
+    fn no_widening_when_guard_never_trips() {
+        // sanity: ordinary data keeps the eps-derived byte width
+        let mut rng = Rng::new(55);
+        let data: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let blob = compress(&data, 2f64.powi(-12));
+        assert_eq!(blob.bytes_per_value(), 3);
+        assert!(max_rel_error(&blob, &data) <= 2f64.powi(-12));
     }
 }

@@ -7,6 +7,11 @@
 //! The server is generic over [`HOperator`]: it serves any hierarchical
 //! format (H, uniform-H, H²; compressed or not), either directly or through a
 //! [`crate::plan::PlannedOperator`] for the zero-allocation schedule path.
+//! Each batch runs as **one gemm-shaped multi-RHS product** (`apply_multi`),
+//! so every matrix byte loaded is amortized over the whole batch. Behind a
+//! `PlannedOperator::with_external_ordering`, requests may be submitted in
+//! the original (external) point ordering — the permutation fold happens
+//! inside the plan execution, not per client.
 
 use super::metrics::Metrics;
 use crate::la::DMatrix;
@@ -182,6 +187,33 @@ mod tests {
         }
         let snap = server.metrics.snapshot();
         assert_eq!(snap.requests, 5);
+    }
+
+    #[test]
+    fn serves_external_ordering_requests_behind_plan() {
+        // clients submit right-hand sides in the ORIGINAL point ordering; the
+        // operator folds the cluster-tree permutations into the plan run
+        let geom = icosphere(1);
+        let gen = LaplaceSlp::new(&geom);
+        let ct = Arc::new(ClusterTree::build(gen.points(), 8));
+        let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+        let h = Arc::new(HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-8)));
+        let op = Arc::new(crate::plan::PlannedOperator::from_h(h.clone()).with_external_ordering());
+        assert!(op.is_external_ordering());
+        let server = MvmServer::start(op, BatchPolicy::default());
+        let mut rng = Rng::new(163);
+        for _ in 0..3 {
+            let x_ext = rng.vector(h.ncols());
+            let resp = server.call(x_ext.clone());
+            // reference: permute manually, run internal MVM, permute back
+            let xi = ct.to_internal(&x_ext);
+            let mut yi = vec![0.0; h.nrows()];
+            crate::mvm::mvm(1.0, &h, &xi, &mut yi, crate::mvm::MvmAlgorithm::Seq);
+            let want = ct.to_external(&yi);
+            for i in 0..want.len() {
+                assert!((resp.y[i] - want[i]).abs() < 1e-10, "row {i}: {} vs {}", resp.y[i], want[i]);
+            }
+        }
     }
 
     #[test]

@@ -63,6 +63,29 @@ impl TransferMat {
         }
     }
 
+    /// Panel variant of [`TransferMat::apply_transposed_add`]: OUT += Eᵀ S on
+    /// contiguous column-major panels (s: nrows×nrhs, out: ncols×nrhs), one
+    /// decode pass for all `nrhs` columns.
+    pub fn apply_transposed_add_panel(&self, s: &[f64], out: &mut [f64], nrhs: usize) {
+        match self {
+            TransferMat::Plain(m) => crate::mvm::kernels::gemm_tn_panel(1.0, m, s, out, nrhs),
+            TransferMat::Z { nrows, ncols, blob } => {
+                crate::mvm::kernels::stream_dot_cols_panel(blob, *nrows, *ncols, s, nrhs, out);
+            }
+        }
+    }
+
+    /// Panel variant of [`TransferMat::apply_add`]: OUT += E T on contiguous
+    /// panels (t: ncols×nrhs, out: nrows×nrhs).
+    pub fn apply_add_panel(&self, t: &[f64], out: &mut [f64], nrhs: usize) {
+        match self {
+            TransferMat::Plain(m) => crate::mvm::kernels::gemm_nn_panel(1.0, m, t, out, nrhs),
+            TransferMat::Z { nrows, ncols, blob } => {
+                crate::mvm::kernels::stream_axpy_cols_panel(blob, *nrows, *ncols, 1.0, t, nrhs, out);
+            }
+        }
+    }
+
     pub fn byte_size(&self) -> usize {
         match self {
             TransferMat::Plain(m) => m.byte_size(),
@@ -174,6 +197,22 @@ impl NestedBasis {
                     }
                 }
             }
+        }
+    }
+
+    /// Panel variant of [`NestedBasis::leaf_apply_transposed`]: S += Wᵀ X on
+    /// contiguous panels for a *leaf* cluster.
+    pub fn leaf_apply_transposed_panel(&self, tau: usize, x: &[f64], s: &mut [f64], nrhs: usize) {
+        if let Some(data) = self.leaf[tau].as_ref() {
+            data.apply_transposed_panel(x, s, nrhs);
+        }
+    }
+
+    /// Panel variant of [`NestedBasis::leaf_apply_add`]: Y += W T on
+    /// contiguous panels for a *leaf* cluster.
+    pub fn leaf_apply_add_panel(&self, tau: usize, t: &[f64], y: &mut [f64], nrhs: usize) {
+        if let Some(data) = self.leaf[tau].as_ref() {
+            data.apply_add_panel(t, y, nrhs);
         }
     }
 

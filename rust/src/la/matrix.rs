@@ -161,6 +161,12 @@ impl DMatrix {
         m
     }
 
+    /// Recover the underlying column-major storage (buffer reuse in pooled
+    /// paths: wrap with [`DMatrix::from_vec`], unwrap with this).
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
     /// Number of stored bytes (FP64).
     pub fn byte_size(&self) -> usize {
         self.data.len() * std::mem::size_of::<f64>()

@@ -255,28 +255,280 @@ fn stream_axpy(blob: &Blob, w: f64, y: &mut [f64]) {
     }
 }
 
-/// Multi-RHS: Y += alpha · B · X (column-major multivectors, used by the
-/// coordinator's batched path; raises arithmetic intensity).
-pub fn apply_block_multi(alpha: f64, b: &BlockData, x: &DMatrix, y: &mut DMatrix) {
-    debug_assert_eq!(x.ncols(), y.ncols());
-    match b {
-        BlockData::Dense(m) => blas::gemm(alpha, m, blas::Trans::No, x, blas::Trans::No, y),
-        BlockData::LowRank(lr) => {
-            if lr.rank() == 0 {
-                return;
-            }
-            let mut t = DMatrix::zeros(lr.rank(), x.ncols());
-            blas::gemm(1.0, &lr.v, blas::Trans::Yes, x, blas::Trans::No, &mut t);
-            blas::gemm(alpha, &lr.u, blas::Trans::No, &t, blas::Trans::No, y);
-        }
-        compressed => {
-            // stream once per RHS; chunk reuse across RHS would need a
-            // transposed layout — single-RHS streaming is sufficient here.
-            for c in 0..x.ncols() {
-                apply_block(alpha, compressed, x.col(c), y.col_mut(c));
+// ---------------------------------------------------------------------------
+// Panel (multi-RHS) kernels — gemm-shaped: every matrix byte (compressed or
+// not) is loaded/decoded once and applied to all `nrhs` right-hand sides,
+// raising arithmetic intensity by ~b (paper Fig. 7).
+//
+// A *panel* is a contiguous column-major multivector: `x` has `ncols × nrhs`
+// values (column c at `x[c*ncols..]`), `y` has `nrows × nrhs`.
+// ---------------------------------------------------------------------------
+
+/// Y += alpha · A · X on contiguous panels: each matrix column is loaded once
+/// and applied to all `nrhs` columns of X.
+pub fn gemm_nn_panel(alpha: f64, a: &DMatrix, x: &[f64], y: &mut [f64], nrhs: usize) {
+    let (m, n) = (a.nrows(), a.ncols());
+    debug_assert_eq!(x.len(), n * nrhs);
+    debug_assert_eq!(y.len(), m * nrhs);
+    for j in 0..n {
+        let col = a.col(j);
+        for c in 0..nrhs {
+            let w = alpha * x[c * n + j];
+            if w != 0.0 {
+                blas::axpy(w, col, &mut y[c * m..c * m + m]);
             }
         }
     }
+}
+
+/// Y += alpha · Aᵀ · X on contiguous panels (X: nrows×nrhs, Y: ncols×nrhs).
+pub fn gemm_tn_panel(alpha: f64, a: &DMatrix, x: &[f64], y: &mut [f64], nrhs: usize) {
+    let (m, n) = (a.nrows(), a.ncols());
+    debug_assert_eq!(x.len(), m * nrhs);
+    debug_assert_eq!(y.len(), n * nrhs);
+    for j in 0..n {
+        let col = a.col(j);
+        for c in 0..nrhs {
+            y[c * n + j] += alpha * blas::dot(col, &x[c * m..c * m + m]);
+        }
+    }
+}
+
+/// Y += alpha · D · X with compressed dense D: each 64-entry column chunk is
+/// decoded once and FMA'd into all `nrhs` output columns.
+pub fn zgemm_blocked_panel(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64], nrhs: usize) {
+    let (m, n) = (z.nrows, z.ncols);
+    debug_assert_eq!(x.len(), n * nrhs);
+    debug_assert_eq!(y.len(), m * nrhs);
+    let mut buf = [0.0f64; CHUNK];
+    for j in 0..n {
+        if (0..nrhs).all(|c| x[c * n + j] == 0.0) {
+            continue;
+        }
+        let base = j * m;
+        let mut i = 0;
+        while i < m {
+            let len = CHUNK.min(m - i);
+            z.blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
+            for c in 0..nrhs {
+                let axj = alpha * x[c * n + j];
+                if axj != 0.0 {
+                    blas::axpy(axj, &buf[..len], &mut y[c * m + i..c * m + i + len]);
+                }
+            }
+            i += len;
+        }
+    }
+}
+
+/// Y += alpha · Dᵀ · X with compressed dense D (X: nrows×nrhs, Y: ncols×nrhs);
+/// one decode pass over D serves all `nrhs` columns.
+pub fn zgemm_t_blocked_panel(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64], nrhs: usize) {
+    let (m, n) = (z.nrows, z.ncols);
+    debug_assert_eq!(x.len(), m * nrhs);
+    debug_assert_eq!(y.len(), n * nrhs);
+    let mut buf = [0.0f64; CHUNK];
+    for j in 0..n {
+        let base = j * m;
+        let mut i = 0;
+        while i < m {
+            let len = CHUNK.min(m - i);
+            z.blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
+            for c in 0..nrhs {
+                y[c * n + j] += alpha * blas::dot(&buf[..len], &x[c * m + i..c * m + i + len]);
+            }
+            i += len;
+        }
+    }
+}
+
+/// t[c*ncols + j] += dot(col_j, x_c) for a column-major compressed factor:
+/// one decode pass per factor column, `nrhs` dots per chunk.
+pub(crate) fn stream_dot_cols_panel(blob: &Blob, nrows: usize, ncols: usize, x: &[f64], nrhs: usize, t: &mut [f64]) {
+    debug_assert_eq!(x.len(), nrows * nrhs);
+    debug_assert!(t.len() >= ncols * nrhs);
+    let mut buf = [0.0f64; CHUNK];
+    for j in 0..ncols {
+        let base = j * nrows;
+        let mut i = 0;
+        while i < nrows {
+            let len = CHUNK.min(nrows - i);
+            blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
+            for c in 0..nrhs {
+                t[c * ncols + j] += blas::dot(&buf[..len], &x[c * nrows + i..c * nrows + i + len]);
+            }
+            i += len;
+        }
+    }
+}
+
+/// y_c += alpha * Σ_j t[c*ncols + j] * col_j for a compressed factor: one
+/// decode pass per factor column, `nrhs` axpys per chunk.
+pub(crate) fn stream_axpy_cols_panel(blob: &Blob, nrows: usize, ncols: usize, alpha: f64, t: &[f64], nrhs: usize, y: &mut [f64]) {
+    debug_assert!(t.len() >= ncols * nrhs);
+    debug_assert_eq!(y.len(), nrows * nrhs);
+    let mut buf = [0.0f64; CHUNK];
+    for j in 0..ncols {
+        if (0..nrhs).all(|c| alpha * t[c * ncols + j] == 0.0) {
+            continue;
+        }
+        let base = j * nrows;
+        let mut i = 0;
+        while i < nrows {
+            let len = CHUNK.min(nrows - i);
+            blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
+            for c in 0..nrhs {
+                let w = alpha * t[c * ncols + j];
+                if w != 0.0 {
+                    blas::axpy(w, &buf[..len], &mut y[c * nrows + i..c * nrows + i + len]);
+                }
+            }
+            i += len;
+        }
+    }
+}
+
+/// acc[c] += dot(blob, x_c) over a compressed vector, one decode pass.
+fn stream_dot_vec_panel(blob: &Blob, x: &[f64], nrhs: usize, acc: &mut [f64]) {
+    let n = blob.n;
+    debug_assert_eq!(x.len(), n * nrhs);
+    let mut buf = [0.0f64; CHUNK];
+    let mut i = 0;
+    while i < n {
+        let len = CHUNK.min(n - i);
+        blob.decompress_range(i, i + len, &mut buf[..len]);
+        for c in 0..nrhs {
+            acc[c] += blas::dot(&buf[..len], &x[c * n + i..c * n + i + len]);
+        }
+        i += len;
+    }
+}
+
+/// y_c += w[c] * blob over a compressed vector, one decode pass.
+fn stream_axpy_vec_panel(blob: &Blob, w: &[f64], nrhs: usize, y: &mut [f64]) {
+    let n = blob.n;
+    debug_assert_eq!(y.len(), n * nrhs);
+    let mut buf = [0.0f64; CHUNK];
+    let mut i = 0;
+    while i < n {
+        let len = CHUNK.min(n - i);
+        blob.decompress_range(i, i + len, &mut buf[..len]);
+        for c in 0..nrhs {
+            if w[c] != 0.0 {
+                blas::axpy(w[c], &buf[..len], &mut y[c * n + i..c * n + i + len]);
+            }
+        }
+        i += len;
+    }
+}
+
+/// Panel scratch (f64 values per right-hand side) needed by
+/// [`apply_block_panel`] / [`apply_block_panel_transposed`] for block `b`.
+pub fn block_panel_scratch(b: &BlockData) -> usize {
+    b.rank().max(1)
+}
+
+/// Y += alpha · B · X on contiguous column-major panels (X: ncols×nrhs,
+/// Y: nrows×nrhs) with caller-provided scratch of at least
+/// [`block_panel_scratch`]`(b) * nrhs` values. Gemm-shaped: block data —
+/// compressed factors included — is streamed once and applied to all columns.
+pub fn apply_block_panel(alpha: f64, b: &BlockData, x: &[f64], y: &mut [f64], nrhs: usize, scratch: &mut [f64]) {
+    match b {
+        BlockData::Dense(m) => gemm_nn_panel(alpha, m, x, y, nrhs),
+        BlockData::LowRank(lr) => {
+            let k = lr.rank();
+            if k == 0 {
+                return;
+            }
+            let t = &mut scratch[..k * nrhs];
+            t.fill(0.0);
+            gemm_tn_panel(1.0, &lr.v, x, t, nrhs);
+            gemm_nn_panel(alpha, &lr.u, t, y, nrhs);
+        }
+        BlockData::ZDense(z) => zgemm_blocked_panel(alpha, z, x, y, nrhs),
+        BlockData::ZLowRank(z) => {
+            let k = z.rank;
+            if k == 0 {
+                return;
+            }
+            let t = &mut scratch[..k * nrhs];
+            t.fill(0.0);
+            stream_dot_cols_panel(&z.v, z.ncols, k, x, nrhs, t);
+            stream_axpy_cols_panel(&z.u, z.nrows, k, alpha, t, nrhs, y);
+        }
+        BlockData::ZLowRankValr(z) => {
+            let s = &mut scratch[..nrhs];
+            for i in 0..z.rank() {
+                s.fill(0.0);
+                stream_dot_vec_panel(&z.xcols[i], x, nrhs, s);
+                let mut any = false;
+                for v in s.iter_mut() {
+                    *v *= alpha * z.sigma[i];
+                    any |= *v != 0.0;
+                }
+                if any {
+                    stream_axpy_vec_panel(&z.wcols[i], s, nrhs, y);
+                }
+            }
+        }
+    }
+}
+
+/// Y += alpha · Bᵀ · X on contiguous panels (X: nrows×nrhs, Y: ncols×nrhs);
+/// scratch as for [`apply_block_panel`].
+pub fn apply_block_panel_transposed(alpha: f64, b: &BlockData, x: &[f64], y: &mut [f64], nrhs: usize, scratch: &mut [f64]) {
+    match b {
+        BlockData::Dense(m) => gemm_tn_panel(alpha, m, x, y, nrhs),
+        BlockData::LowRank(lr) => {
+            // (U Vᵀ)ᵀ X = V (Uᵀ X)
+            let k = lr.rank();
+            if k == 0 {
+                return;
+            }
+            let t = &mut scratch[..k * nrhs];
+            t.fill(0.0);
+            gemm_tn_panel(1.0, &lr.u, x, t, nrhs);
+            gemm_nn_panel(alpha, &lr.v, t, y, nrhs);
+        }
+        BlockData::ZDense(z) => zgemm_t_blocked_panel(alpha, z, x, y, nrhs),
+        BlockData::ZLowRank(z) => {
+            let k = z.rank;
+            if k == 0 {
+                return;
+            }
+            let t = &mut scratch[..k * nrhs];
+            t.fill(0.0);
+            stream_dot_cols_panel(&z.u, z.nrows, k, x, nrhs, t);
+            stream_axpy_cols_panel(&z.v, z.ncols, k, alpha, t, nrhs, y);
+        }
+        BlockData::ZLowRankValr(z) => {
+            let s = &mut scratch[..nrhs];
+            for i in 0..z.rank() {
+                s.fill(0.0);
+                stream_dot_vec_panel(&z.wcols[i], x, nrhs, s);
+                let mut any = false;
+                for v in s.iter_mut() {
+                    *v *= alpha * z.sigma[i];
+                    any |= *v != 0.0;
+                }
+                if any {
+                    stream_axpy_vec_panel(&z.xcols[i], s, nrhs, y);
+                }
+            }
+        }
+    }
+}
+
+/// Multi-RHS: Y += alpha · B · X (column-major multivectors). Thin allocating
+/// wrapper around [`apply_block_panel`] — hot paths (the plan executor,
+/// [`crate::mvm::h_mvm_multi`]) pass pooled panels and scratch instead.
+pub fn apply_block_multi(alpha: f64, b: &BlockData, x: &DMatrix, y: &mut DMatrix) {
+    debug_assert_eq!(x.ncols(), y.ncols());
+    debug_assert_eq!(x.nrows(), b.ncols());
+    debug_assert_eq!(y.nrows(), b.nrows());
+    let nrhs = x.ncols();
+    let mut scratch = vec![0.0; block_panel_scratch(b) * nrhs];
+    apply_block_panel(alpha, b, x.data(), y.data_mut(), nrhs, &mut scratch);
 }
 
 #[cfg(test)]
@@ -380,6 +632,78 @@ mod tests {
             apply_block_transposed(0.5, rep, &xt, &mut z1);
             apply_block_transposed_scratch(0.5, rep, &xt, &mut z2, &mut scratch);
             assert_eq!(z1, z2, "adjoint rep {ri}");
+        }
+    }
+
+    #[test]
+    fn panel_kernels_match_per_column_all_representations() {
+        let mut rng = Rng::new(109);
+        let mlr = rand_lr(34, 26, 5, 110);
+        let cfg_valr = CompressionConfig { codec: Codec::Aflp, eps: 1e-10, valr: true };
+        let cfg_fixed = CompressionConfig { codec: Codec::Fpx, eps: 1e-10, valr: false };
+        let reps = vec![
+            BlockData::Dense(mlr.to_dense()),
+            BlockData::LowRank(mlr.clone()),
+            BlockData::Dense(mlr.to_dense()).compress(&CompressionConfig::aflp(1e-10)),
+            BlockData::Dense(mlr.to_dense()).compress(&CompressionConfig::fpx(1e-10)),
+            BlockData::LowRank(mlr.clone()).compress(&cfg_valr),
+            BlockData::LowRank(mlr.clone()).compress(&cfg_fixed),
+        ];
+        let nrhs = 3;
+        let x = DMatrix::random(26, nrhs, &mut rng);
+        let xt = DMatrix::random(34, nrhs, &mut rng);
+        let mut scratch = vec![0.0; 6 * nrhs];
+        for (ri, rep) in reps.iter().enumerate() {
+            let mut y = vec![0.0; 34 * nrhs];
+            apply_block_panel(1.25, rep, x.data(), &mut y, nrhs, &mut scratch);
+            for c in 0..nrhs {
+                let mut yc = vec![0.0; 34];
+                apply_block(1.25, rep, x.col(c), &mut yc);
+                for i in 0..34 {
+                    assert!(
+                        (y[c * 34 + i] - yc[i]).abs() < 1e-12,
+                        "forward rep {ri} col {c} row {i}: {} vs {}",
+                        y[c * 34 + i],
+                        yc[i]
+                    );
+                }
+            }
+            let mut z = vec![0.0; 26 * nrhs];
+            apply_block_panel_transposed(0.75, rep, xt.data(), &mut z, nrhs, &mut scratch);
+            for c in 0..nrhs {
+                let mut zc = vec![0.0; 26];
+                apply_block_transposed(0.75, rep, xt.col(c), &mut zc);
+                for i in 0..26 {
+                    assert!(
+                        (z[c * 26 + i] - zc[i]).abs() < 1e-12,
+                        "adjoint rep {ri} col {c} row {i}: {} vs {}",
+                        z[c * 26 + i],
+                        zc[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_panels_match_blas_gemm() {
+        let mut rng = Rng::new(111);
+        let a = DMatrix::random(9, 7, &mut rng);
+        let x = DMatrix::random(7, 4, &mut rng);
+        let mut y = DMatrix::zeros(9, 4);
+        blas::gemm(2.0, &a, blas::Trans::No, &x, blas::Trans::No, &mut y);
+        let mut yp = vec![0.0; 9 * 4];
+        gemm_nn_panel(2.0, &a, x.data(), &mut yp, 4);
+        for (i, v) in y.data().iter().enumerate() {
+            assert!((yp[i] - v).abs() < 1e-13);
+        }
+        let xt = DMatrix::random(9, 4, &mut rng);
+        let mut z = DMatrix::zeros(7, 4);
+        blas::gemm(1.5, &a, blas::Trans::Yes, &xt, blas::Trans::No, &mut z);
+        let mut zp = vec![0.0; 7 * 4];
+        gemm_tn_panel(1.5, &a, xt.data(), &mut zp, 4);
+        for (i, v) in z.data().iter().enumerate() {
+            assert!((zp[i] - v).abs() < 1e-13);
         }
     }
 

@@ -3,11 +3,12 @@
 //! over b vectors, raising arithmetic intensity by ~b (ablation bench
 //! `ablation_batching`).
 
-use super::kernels::apply_block_multi;
+use super::kernels;
 use super::{SharedVec, SPAWN_LEVELS};
 use crate::hmatrix::HMatrix;
 use crate::la::DMatrix;
 use crate::par::ThreadPool;
+use crate::plan::BufferPool;
 
 /// Y += alpha · M · X with X (ncols × b), Y (nrows × b), cluster-list
 /// traversal (Algorithm 3 generalized to multivectors).
@@ -38,25 +39,43 @@ fn rec<'e>(
     let ct = &bt.row_ct;
     let rr = ct.node(tau).range();
     if !bt.row_blocks[tau].is_empty() {
-        // local multivector views: copy the row stripe, multiply, scatter back
-        // (stripe copy keeps the kernels dense-column based)
-        let mut ystripe = DMatrix::zeros(rr.len(), nrhs);
+        // pooled panel buffers (per-worker free lists): gather the row stripe
+        // once, stream every block's data once through the gemm-shaped panel
+        // kernels, scatter back — zero heap allocation in steady state
+        let pool_b = BufferPool::global();
+        let dl = rr.len();
+        let mut ystripe = pool_b.take(dl * nrhs);
         for c in 0..nrhs {
             // SAFETY: traversal invariant (same as single-RHS Algorithm 3).
-            let ycol = unsafe { y.range_mut(c * ylen + rr.start..c * ylen + rr.end) };
-            ystripe.col_mut(c).copy_from_slice(ycol);
+            let ycol = unsafe { y.range(c * ylen + rr.start..c * ylen + rr.end) };
+            ystripe[c * dl..(c + 1) * dl].copy_from_slice(ycol);
         }
+        let mut xstripe = pool_b.take(0);
+        let mut scratch = pool_b.take(0);
         for &bid in &bt.row_blocks[tau] {
             let nd = bt.node(bid);
             let cr = bt.col_ct.node(nd.col).range();
             let blk = m.blocks[bid].as_ref().expect("missing leaf");
-            let xstripe = x.sub(cr, 0..nrhs);
-            apply_block_multi(alpha, blk, &xstripe, &mut ystripe);
+            let sl = cr.len();
+            xstripe.clear();
+            xstripe.resize(sl * nrhs, 0.0);
+            for c in 0..nrhs {
+                xstripe[c * sl..(c + 1) * sl].copy_from_slice(&x.col(c)[cr.clone()]);
+            }
+            let need = kernels::block_panel_scratch(blk) * nrhs;
+            if scratch.len() < need {
+                scratch.resize(need, 0.0);
+            }
+            kernels::apply_block_panel(alpha, blk, &xstripe, &mut ystripe, nrhs, &mut scratch);
         }
         for c in 0..nrhs {
+            // SAFETY: as above.
             let ycol = unsafe { y.range_mut(c * ylen + rr.start..c * ylen + rr.end) };
-            ycol.copy_from_slice(ystripe.col(c));
+            ycol.copy_from_slice(&ystripe[c * dl..(c + 1) * dl]);
         }
+        pool_b.put(ystripe);
+        pool_b.put(xstripe);
+        pool_b.put(scratch);
     }
     for &child in &ct.node(tau).children {
         if depth < SPAWN_LEVELS {

@@ -15,6 +15,10 @@ pub struct Arena {
     shard: Vec<Vec<f64>>,
     s: Vec<f64>,
     t: Vec<f64>,
+    /// External-ordering staging buffers (input / output side); capacity is
+    /// retained across calls like every other arena buffer.
+    xio: Vec<f64>,
+    yio: Vec<f64>,
 }
 
 impl Arena {
@@ -46,9 +50,27 @@ impl Arena {
         (&mut self.shard, &mut self.s, &mut self.t)
     }
 
+    /// Take the external-ordering staging buffers out of the arena so they
+    /// can be used alongside a plan execution that itself borrows the arena.
+    /// Return them with [`Arena::put_io`] — their capacity is what makes the
+    /// permutation fold allocation free in steady state.
+    pub fn take_io(&mut self) -> (Vec<f64>, Vec<f64>) {
+        (std::mem::take(&mut self.xio), std::mem::take(&mut self.yio))
+    }
+
+    /// Hand the staging buffers back (pairs with [`Arena::take_io`]).
+    pub fn put_io(&mut self, x: Vec<f64>, y: Vec<f64>) {
+        self.xio = x;
+        self.yio = y;
+    }
+
     /// Currently reserved f64 values (diagnostics).
     pub fn reserved(&self) -> usize {
-        self.shard.iter().map(|b| b.len()).sum::<usize>() + self.s.len() + self.t.len()
+        self.shard.iter().map(|b| b.len()).sum::<usize>()
+            + self.s.len()
+            + self.t.len()
+            + self.xio.len()
+            + self.yio.len()
     }
 }
 

@@ -8,9 +8,18 @@
 //! concurrently without synchronization; consecutive levels are separated by
 //! fork-join barriers, which realises the parent-before-children ordering the
 //! recursive traversals obtain implicitly.
+//!
+//! **Multi-RHS** products run through *gemm-shaped* variants of the same
+//! schedules: each task gathers its disjoint write range into a contiguous
+//! `n×b` panel from the scratch arena, streams every block's matrix data —
+//! compressed CouplingMat/TransferMat included — exactly once, and applies it
+//! to all `b` columns (panel kernels in [`crate::mvm::kernels`]). Task costs
+//! are rescaled by `b` for LPT balancing (matrix bytes amortize across the
+//! batch, vector traffic scales with it); the per-width shard packings are
+//! cached, so steady-state batched execution allocates nothing.
 
 use super::arena::Arena;
-use super::schedule::{balance, block_cost, default_shards, uni_block_cost, Shard};
+use super::schedule::{balance, block_cost_split, default_shards, uni_block_cost_split, Shard};
 use crate::h2::H2Matrix;
 use crate::hmatrix::HMatrix;
 use crate::la::{blas, DMatrix};
@@ -18,7 +27,7 @@ use crate::mvm::{kernels, SharedVec};
 use crate::par::ThreadPool;
 use crate::uniform::{UniBlock, UniformHMatrix};
 use std::ops::Range;
-use std::sync::OnceLock;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Summary of a built plan (diagnostics / logging).
 #[derive(Clone, Copy, Debug, Default)]
@@ -29,9 +38,9 @@ pub struct PlanStats {
     pub levels: usize,
     /// Maximum concurrently running shards.
     pub max_shards: usize,
-    /// Per-shard kernel scratch (f64 values).
+    /// Per-shard kernel scratch (f64 values, single-RHS packing).
     pub scratch_f64: usize,
-    /// Coefficient slots (f64 values, forward + backward).
+    /// Coefficient slots (f64 values, forward + backward, single-RHS).
     pub coeff_f64: usize,
 }
 
@@ -61,6 +70,50 @@ fn max_shard_stats(levels: &[Vec<Shard>]) -> (usize, usize) {
     (max_shards, scratch)
 }
 
+/// Shard packings per batch width, built on first use: LPT is re-run with
+/// per-task costs rescaled by the number of right-hand sides `b` (matrix
+/// bytes amortize across the batch, vector traffic and panel scratch scale
+/// with it). A serving deployment sees a handful of distinct widths, so the
+/// cache stays tiny; it is capped to keep pathological clients bounded.
+struct MultiCache<T> {
+    cache: Mutex<Vec<(usize, Arc<T>)>>,
+}
+
+impl<T> MultiCache<T> {
+    fn new() -> MultiCache<T> {
+        MultiCache { cache: Mutex::new(Vec::new()) }
+    }
+
+    fn get(&self, nrhs: usize, build: impl FnOnce() -> T) -> Arc<T> {
+        let mut g = self.cache.lock().unwrap();
+        if let Some((_, l)) = g.iter().find(|(b, _)| *b == nrhs) {
+            return l.clone();
+        }
+        let l = Arc::new(build());
+        if g.len() < 32 {
+            g.push((nrhs, l.clone()));
+        }
+        l
+    }
+}
+
+/// Balance every level's tasks for batch width `nrhs`: cost = fixed +
+/// nrhs · per_rhs, shard scratch = per-RHS panel scratch · nrhs.
+fn balance_levels_for(level_ids: &[Vec<usize>], fixed: &[f64], per_rhs: &[f64], pscratch: &[usize], nrhs: usize, nshards: usize) -> Vec<Vec<Shard>> {
+    let costs: Vec<f64> = fixed.iter().zip(per_rhs).map(|(f, v)| f + nrhs as f64 * v).collect();
+    let scratch: Vec<usize> = pscratch.iter().map(|s| s * nrhs).collect();
+    level_ids.iter().map(|ids| balance_level(ids, &costs, &scratch, nshards)).collect()
+}
+
+/// Gather rows `rows` of every column of `x` into the contiguous column-major
+/// panel `xp` (rows.len() × x.ncols()).
+fn gather_panel(x: &DMatrix, rows: &Range<usize>, xp: &mut [f64]) {
+    let l = rows.len();
+    for c in 0..x.ncols() {
+        xp[c * l..(c + 1) * l].copy_from_slice(&x.col(c)[rows.clone()]);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // H-matrix plan
 // ---------------------------------------------------------------------------
@@ -76,8 +129,17 @@ struct HTask {
 
 struct HSchedule {
     tasks: Vec<HTask>,
-    /// Execution order: root level first.
+    /// Task ids of each (non-empty) cluster-tree level, root level first.
+    level_ids: Vec<Vec<usize>>,
+    /// Split cost model per task: matrix bytes / vector bytes per RHS.
+    fixed: Vec<f64>,
+    per_rhs: Vec<f64>,
+    /// Per-RHS panel scratch per task (y panel + x stripe + kernel scratch).
+    pscratch: Vec<usize>,
+    /// Execution order for single-vector products: root level first.
     levels: Vec<Vec<Shard>>,
+    /// Per-batch-width panel shard packings.
+    multi: MultiCache<Vec<Vec<Shard>>>,
     max_shards: usize,
     scratch: usize,
 }
@@ -91,38 +153,48 @@ impl HSchedule {
             (&bt.row_ct, &bt.col_ct, &bt.row_blocks)
         };
         let mut tasks = Vec::new();
-        let mut costs = Vec::new();
-        let mut scratch = Vec::new();
+        let mut fixed = Vec::new();
+        let mut per_rhs = Vec::new();
+        let mut scratch1 = Vec::new();
+        let mut pscratch = Vec::new();
         let mut level_ids: Vec<Vec<usize>> = vec![Vec::new(); ct.levels.len()];
         for (tau, blocks) in lists.iter().enumerate() {
             if blocks.is_empty() {
                 continue;
             }
             let mut refs = Vec::with_capacity(blocks.len());
-            let mut cost = 0.0;
+            let mut fx = 0.0;
+            let mut vr = 0.0;
             let mut scr = 0usize;
+            let mut pan = 0usize;
             for &b in blocks {
                 let nd = bt.node(b);
                 let src = if adjoint { other_ct.node(nd.row).range() } else { other_ct.node(nd.col).range() };
                 let blk = m.blocks[b].as_ref().expect("missing leaf");
-                cost += block_cost(blk);
+                let (f, v) = block_cost_split(blk);
+                fx += f;
+                vr += v;
                 scr = scr.max(blk.rank());
+                pan = pan.max(src.len() + kernels::block_panel_scratch(blk));
                 refs.push((b, src));
             }
+            let dst = ct.node(tau).range();
+            pan += dst.len();
             let id = tasks.len();
-            tasks.push(HTask { dst: ct.node(tau).range(), blocks: refs });
-            costs.push(cost);
-            scratch.push(scr);
+            tasks.push(HTask { dst, blocks: refs });
+            fixed.push(fx);
+            per_rhs.push(vr);
+            scratch1.push(scr);
+            pscratch.push(pan);
             level_ids[ct.node(tau).level].push(id);
         }
+        let level_ids: Vec<Vec<usize>> = level_ids.into_iter().filter(|ids| !ids.is_empty()).collect();
         let nshards = default_shards();
-        let levels: Vec<Vec<Shard>> = level_ids
-            .iter()
-            .filter(|ids| !ids.is_empty())
-            .map(|ids| balance_level(ids, &costs, &scratch, nshards))
-            .collect();
+        let costs: Vec<f64> = fixed.iter().zip(&per_rhs).map(|(f, v)| f + v).collect();
+        let levels: Vec<Vec<Shard>> =
+            level_ids.iter().map(|ids| balance_level(ids, &costs, &scratch1, nshards)).collect();
         let (max_shards, scratch) = max_shard_stats(&levels);
-        HSchedule { tasks, levels, max_shards, scratch }
+        HSchedule { tasks, level_ids, fixed, per_rhs, pscratch, levels, multi: MultiCache::new(), max_shards, scratch }
     }
 
     fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
@@ -155,35 +227,52 @@ impl HSchedule {
         }
     }
 
+    /// Gemm-shaped batched execution: every task gathers its disjoint y rows
+    /// into a contiguous `rows×b` panel, each block's (possibly compressed)
+    /// data is streamed once and applied to all `b` columns.
     fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
         let ylen = y.nrows();
         let nrhs = y.ncols();
-        arena.ensure(self.max_shards, self.scratch, 0, 0);
+        let nshards = default_shards();
+        let levels = self
+            .multi
+            .get(nrhs, || balance_levels_for(&self.level_ids, &self.fixed, &self.per_rhs, &self.pscratch, nrhs, nshards));
+        let (max_shards, scratch) = max_shard_stats(&levels);
+        arena.ensure(max_shards, scratch, 0, 0);
         let (bufs, _, _) = arena.split();
         let yy = SharedVec::new(y.data_mut());
         let pool = ThreadPool::global();
-        for level in &self.levels {
+        for level in levels.iter() {
             pool.scope(|s| {
                 for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
                     let yy = yy;
                     s.spawn(move |_| {
                         for &ti in &shard.tasks {
                             let task = &self.tasks[ti];
+                            let dl = task.dst.len();
+                            let (yp, rest) = buf.split_at_mut(dl * nrhs);
+                            // gather the task's disjoint y rows into a panel
+                            for c in 0..nrhs {
+                                // SAFETY: same-level clusters are disjoint;
+                                // levels are barrier separated (per column).
+                                let src = unsafe { yy.range(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                                yp[c * dl..(c + 1) * dl].copy_from_slice(src);
+                            }
                             for (b, src) in &task.blocks {
                                 let blk = m.blocks[*b].as_ref().expect("missing leaf");
-                                for c in 0..nrhs {
-                                    // SAFETY: per-column copies of the same
-                                    // disjoint range argument.
-                                    let yt = unsafe {
-                                        yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end)
-                                    };
-                                    let xc = &x.col(c)[src.clone()];
-                                    if adjoint {
-                                        kernels::apply_block_transposed_scratch(alpha, blk, xc, yt, buf);
-                                    } else {
-                                        kernels::apply_block_scratch(alpha, blk, xc, yt, buf);
-                                    }
+                                let sl = src.len();
+                                let (xp, kscratch) = rest.split_at_mut(sl * nrhs);
+                                gather_panel(x, src, xp);
+                                if adjoint {
+                                    kernels::apply_block_panel_transposed(alpha, blk, xp, yp, nrhs, kscratch);
+                                } else {
+                                    kernels::apply_block_panel(alpha, blk, xp, yp, nrhs, kscratch);
                                 }
+                            }
+                            for c in 0..nrhs {
+                                // SAFETY: as above.
+                                let dst = unsafe { yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                                dst.copy_from_slice(&yp[c * dl..(c + 1) * dl]);
                             }
                         }
                     });
@@ -238,12 +327,20 @@ impl HPlan {
         self.adj(m).exec(m, true, alpha, x, y, arena);
     }
 
-    /// Y += alpha · M · X (column-major multivectors).
+    /// Y += alpha · M · X (column-major multivectors, gemm-shaped tasks).
     pub fn execute_multi(&self, m: &HMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
         self.fwd(m).exec_multi(m, false, alpha, x, y, arena);
+    }
+
+    /// Y += alpha · Mᵀ · X (column-major multivectors, gemm-shaped tasks).
+    pub fn execute_multi_adjoint(&self, m: &HMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        assert_eq!(x.nrows(), self.nrows);
+        assert_eq!(y.nrows(), self.ncols);
+        assert_eq!(x.ncols(), y.ncols());
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena);
     }
 
     /// Aggregate over the schedule halves built so far.
@@ -265,7 +362,8 @@ impl HPlan {
 // Shared pieces of the uniform / H² schedules
 // ---------------------------------------------------------------------------
 
-/// Reference from a coupling block into the flat forward-coefficient buffer.
+/// Reference from a coupling block into the flat forward-coefficient buffer
+/// (offsets in rank units; the panel executors scale by the batch width).
 struct CRef {
     block: usize,
     off: usize,
@@ -292,6 +390,28 @@ fn apply_dense_oriented(m_blocks: &[Option<UniBlock>], b: usize, adjoint: bool, 
     }
 }
 
+/// Panel variant of [`apply_dense_oriented`]: contiguous column-major panels,
+/// matrix data streamed once for all columns.
+fn apply_dense_oriented_panel(m_blocks: &[Option<UniBlock>], b: usize, adjoint: bool, alpha: f64, xs: &[f64], yt: &mut [f64], nrhs: usize) {
+    match m_blocks[b].as_ref() {
+        Some(UniBlock::Dense(d)) => {
+            if adjoint {
+                kernels::gemm_tn_panel(alpha, d, xs, yt, nrhs);
+            } else {
+                kernels::gemm_nn_panel(alpha, d, xs, yt, nrhs);
+            }
+        }
+        Some(UniBlock::ZDense(z)) => {
+            if adjoint {
+                kernels::zgemm_t_blocked_panel(alpha, z, xs, yt, nrhs);
+            } else {
+                kernels::zgemm_blocked_panel(alpha, z, xs, yt, nrhs);
+            }
+        }
+        _ => {}
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Uniform-H plan
 // ---------------------------------------------------------------------------
@@ -310,15 +430,26 @@ struct UniRowTask {
     cluster: usize,
     dst: Range<usize>,
     rank: usize,
+    /// Coupling scratch (f64 per RHS) needed by the task's couplings.
+    cscratch: usize,
     couplings: Vec<CRef>,
     dense: Vec<(usize, Range<usize>)>,
 }
 
 struct UniSchedule {
     ftasks: Vec<CoeffTask>,
+    ffixed: Vec<f64>,
+    fper_rhs: Vec<f64>,
+    fpscratch: Vec<usize>,
     fshards: Vec<Shard>,
     tasks: Vec<UniRowTask>,
+    level_ids: Vec<Vec<usize>>,
+    fixed: Vec<f64>,
+    per_rhs: Vec<f64>,
+    pscratch: Vec<usize>,
     levels: Vec<Vec<Shard>>,
+    /// Per-batch-width (forward shards, level shards) packings.
+    multi: MultiCache<(Vec<Shard>, Vec<Vec<Shard>>)>,
     s_len: usize,
     max_shards: usize,
     scratch: usize,
@@ -337,25 +468,33 @@ impl UniSchedule {
         let mut s_off = vec![0usize; in_ct.nodes.len()];
         let mut s_len = 0usize;
         let mut ftasks = Vec::new();
-        let mut fcosts = Vec::new();
+        let mut ffixed = Vec::new();
+        let mut fper_rhs = Vec::new();
+        let mut fpscratch = Vec::new();
         for (sigma, basis) in in_basis.iter().enumerate() {
             let k = basis.rank();
             s_off[sigma] = s_len;
             if k == 0 {
                 continue;
             }
-            ftasks.push(CoeffTask { cluster: sigma, src: in_ct.node(sigma).range(), off: s_len, len: k });
-            fcosts.push(basis.byte_size() as f64);
+            let src = in_ct.node(sigma).range();
+            ffixed.push(basis.byte_size() as f64);
+            fper_rhs.push((8 * (src.len() + k)) as f64);
+            fpscratch.push(src.len());
+            ftasks.push(CoeffTask { cluster: sigma, src, off: s_len, len: k });
             s_len += k;
         }
         let nshards = default_shards();
-        let fscratch = vec![0usize; fcosts.len()];
+        let fscratch = vec![0usize; ffixed.len()];
+        let fcosts: Vec<f64> = ffixed.iter().zip(&fper_rhs).map(|(f, v)| f + v).collect();
         let fshards = balance(&fcosts, &fscratch, nshards);
 
         // output-side tasks, level ordered
         let mut tasks = Vec::new();
-        let mut costs = Vec::new();
-        let mut scratch = Vec::new();
+        let mut fixed = Vec::new();
+        let mut per_rhs = Vec::new();
+        let mut scratch1 = Vec::new();
+        let mut pscratch = Vec::new();
         let mut level_ids: Vec<Vec<usize>> = vec![Vec::new(); out_ct.levels.len()];
         for (tau, blocks) in out_lists.iter().enumerate() {
             if blocks.is_empty() {
@@ -364,20 +503,28 @@ impl UniSchedule {
             let rank = out_basis[tau].rank();
             let mut couplings = Vec::new();
             let mut dense = Vec::new();
-            let mut cost = 0.0;
+            let mut fx = 0.0;
+            let mut vr = 0.0;
             let mut scr = rank;
+            let mut csl = 0usize;
+            let mut xmax = 0usize;
             for &b in blocks {
                 let nd = bt.node(b);
                 let in_cluster = if adjoint { nd.row } else { nd.col };
+                let (f, v) = uni_block_cost_split(m.blocks[b].as_ref().expect("missing leaf"));
                 match m.blocks[b].as_ref() {
                     Some(UniBlock::Coupling(c)) => {
                         scr = scr.max(rank + c.scratch_len());
-                        cost += uni_block_cost(m.blocks[b].as_ref().unwrap());
+                        csl = csl.max(c.scratch_len());
+                        fx += f;
+                        vr += v;
                         couplings.push(CRef { block: b, off: s_off[in_cluster], len: in_basis[in_cluster].rank() });
                     }
                     Some(_) => {
-                        cost += uni_block_cost(m.blocks[b].as_ref().unwrap());
+                        fx += f;
+                        vr += v;
                         let src = if adjoint { bt.row_ct.node(nd.row).range() } else { bt.col_ct.node(nd.col).range() };
+                        xmax = xmax.max(src.len());
                         dense.push((b, src));
                     }
                     None => panic!("missing leaf"),
@@ -386,22 +533,41 @@ impl UniSchedule {
             if couplings.is_empty() && dense.is_empty() {
                 continue;
             }
+            let dst = out_ct.node(tau).range();
             if !couplings.is_empty() {
-                cost += out_basis[tau].byte_size() as f64;
+                fx += out_basis[tau].byte_size() as f64;
+                vr += (8 * dst.len()) as f64;
             }
             let id = tasks.len();
-            tasks.push(UniRowTask { cluster: tau, dst: out_ct.node(tau).range(), rank, couplings, dense });
-            costs.push(cost);
-            scratch.push(scr);
+            pscratch.push(rank + csl + dst.len() + xmax);
+            tasks.push(UniRowTask { cluster: tau, dst, rank, cscratch: csl, couplings, dense });
+            fixed.push(fx);
+            per_rhs.push(vr);
+            scratch1.push(scr);
             level_ids[out_ct.node(tau).level].push(id);
         }
-        let levels: Vec<Vec<Shard>> = level_ids
-            .iter()
-            .filter(|ids| !ids.is_empty())
-            .map(|ids| balance_level(ids, &costs, &scratch, nshards))
-            .collect();
+        let level_ids: Vec<Vec<usize>> = level_ids.into_iter().filter(|ids| !ids.is_empty()).collect();
+        let costs: Vec<f64> = fixed.iter().zip(&per_rhs).map(|(f, v)| f + v).collect();
+        let levels: Vec<Vec<Shard>> =
+            level_ids.iter().map(|ids| balance_level(ids, &costs, &scratch1, nshards)).collect();
         let (max_shards, scratch) = max_shard_stats(&levels);
-        UniSchedule { ftasks, fshards, tasks, levels, s_len, max_shards: max_shards.max(fshards.len()), scratch }
+        UniSchedule {
+            ftasks,
+            ffixed,
+            fper_rhs,
+            fpscratch,
+            fshards: fshards.clone(),
+            tasks,
+            level_ids,
+            fixed,
+            per_rhs,
+            pscratch,
+            levels,
+            multi: MultiCache::new(),
+            s_len,
+            max_shards: max_shards.max(fshards.len()),
+            scratch,
+        }
     }
 
     fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
@@ -471,6 +637,108 @@ impl UniSchedule {
             });
         }
     }
+
+    /// Gemm-shaped batched execution: slot-major coefficient panels (slot σ
+    /// occupies `s_off[σ]·b .. (s_off[σ]+k)·b`), y gathered per task into a
+    /// contiguous `rows×b` panel, all block/basis/coupling data streamed once.
+    fn exec_multi(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
+        let ylen = y.nrows();
+        let nrhs = y.ncols();
+        let nshards = default_shards();
+        let packed = self.multi.get(nrhs, || {
+            let fcosts: Vec<f64> = self.ffixed.iter().zip(&self.fper_rhs).map(|(f, v)| f + nrhs as f64 * v).collect();
+            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
+            let fsh = balance(&fcosts, &fscratch, nshards);
+            let lv = balance_levels_for(&self.level_ids, &self.fixed, &self.per_rhs, &self.pscratch, nrhs, nshards);
+            (fsh, lv)
+        });
+        let (fshards, levels) = (&packed.0, &packed.1);
+        let (lmax, lscr) = max_shard_stats(levels);
+        let max_shards = fshards.len().max(lmax);
+        let scratch = fshards.iter().map(|s| s.scratch).max().unwrap_or(0).max(lscr);
+        arena.ensure(max_shards, scratch, self.s_len * nrhs, 0);
+        let (bufs, s_all, _) = arena.split();
+        let pool = ThreadPool::global();
+
+        // phase 1: forward transformation panels S_σ = Bᵀ X|σ
+        {
+            s_all[..self.s_len * nrhs].fill(0.0);
+            let slots = SharedVec::new(&mut s_all[..self.s_len * nrhs]);
+            pool.scope(|sc| {
+                for (shard, buf) in fshards.iter().zip(bufs.iter_mut()) {
+                    let slots = slots;
+                    sc.spawn(move |_| {
+                        for &ti in &shard.tasks {
+                            let t = &self.ftasks[ti];
+                            let sl = t.src.len();
+                            let xp = &mut buf[..sl * nrhs];
+                            gather_panel(x, &t.src, xp);
+                            // SAFETY: one task per disjoint slot-panel range.
+                            let dst = unsafe { slots.range_mut(t.off * nrhs..(t.off + t.len) * nrhs) };
+                            in_basis[t.cluster].apply_transposed_panel(xp, dst, nrhs);
+                        }
+                    });
+                }
+            });
+        }
+
+        // phase 2: level-ordered output pass on panels
+        let sref: &[f64] = &s_all[..self.s_len * nrhs];
+        let yy = SharedVec::new(y.data_mut());
+        for level in levels.iter() {
+            pool.scope(|sc| {
+                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
+                    let yy = yy;
+                    sc.spawn(move |_| {
+                        for &ti in &shard.tasks {
+                            let task = &self.tasks[ti];
+                            let dl = task.dst.len();
+                            let (tv, rest) = buf.split_at_mut(task.rank * nrhs);
+                            let (cscratch, rest) = rest.split_at_mut(task.cscratch * nrhs);
+                            let (yp, xarea) = rest.split_at_mut(dl * nrhs);
+                            for c in 0..nrhs {
+                                // SAFETY: same-level clusters are disjoint;
+                                // levels are barrier separated (per column).
+                                let src = unsafe { yy.range(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                                yp[c * dl..(c + 1) * dl].copy_from_slice(src);
+                            }
+                            if !task.couplings.is_empty() {
+                                tv.fill(0.0);
+                                for cr in &task.couplings {
+                                    if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
+                                        let sv = &sref[cr.off * nrhs..(cr.off + cr.len) * nrhs];
+                                        if adjoint {
+                                            cm.apply_transposed_add_panel(sv, tv, nrhs, cscratch);
+                                        } else {
+                                            cm.apply_add_panel(sv, tv, nrhs, cscratch);
+                                        }
+                                    }
+                                }
+                                if task.rank > 0 {
+                                    for v in tv.iter_mut() {
+                                        *v *= alpha;
+                                    }
+                                    out_basis[task.cluster].apply_add_panel(tv, yp, nrhs);
+                                }
+                            }
+                            for (b, src) in &task.dense {
+                                let sl = src.len();
+                                let (xp, _) = xarea.split_at_mut(sl * nrhs);
+                                gather_panel(x, src, xp);
+                                apply_dense_oriented_panel(&m.blocks, *b, adjoint, alpha, xp, yp, nrhs);
+                            }
+                            for c in 0..nrhs {
+                                // SAFETY: as above.
+                                let dst = unsafe { yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                                dst.copy_from_slice(&yp[c * dl..(c + 1) * dl]);
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
 }
 
 /// Precomputed execution plan for a [`UniformHMatrix`]; schedule halves are
@@ -516,16 +784,22 @@ impl UniPlan {
         self.adj(m).exec(m, true, alpha, x, y, arena);
     }
 
-    /// Y += alpha · M · X, one schedule pass per column over the reused
-    /// coefficient buffers.
+    /// Y += alpha · M · X: one gemm-shaped schedule pass for the whole batch
+    /// (coefficient slots and couplings are streamed once per block, not once
+    /// per column).
     pub fn execute_multi(&self, m: &UniformHMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        let sched = self.fwd(m);
-        for c in 0..x.ncols() {
-            sched.exec(m, false, alpha, x.col(c), y.col_mut(c), arena);
-        }
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena);
+    }
+
+    /// Y += alpha · Mᵀ · X (gemm-shaped batched adjoint).
+    pub fn execute_multi_adjoint(&self, m: &UniformHMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        assert_eq!(x.nrows(), self.nrows);
+        assert_eq!(y.nrows(), self.ncols);
+        assert_eq!(x.ncols(), y.ncols());
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena);
     }
 
     /// Aggregate over the schedule halves built so far.
@@ -569,6 +843,8 @@ struct DownTask {
     t_off: usize,
     rank: usize,
     leaf: bool,
+    /// Coupling scratch (f64 per RHS) needed by the task's couplings.
+    cscratch: usize,
     couplings: Vec<CRef>,
     dense: Vec<(usize, Range<usize>)>,
     /// (child cluster id, child slot offset, child rank).
@@ -577,11 +853,21 @@ struct DownTask {
 
 struct H2Schedule {
     up_tasks: Vec<UpTask>,
+    up_level_ids: Vec<Vec<usize>>,
+    up_fixed: Vec<f64>,
+    up_per_rhs: Vec<f64>,
+    up_pscratch: Vec<usize>,
     /// Execution order: deepest level first (children before parents).
     up_levels: Vec<Vec<Shard>>,
     down_tasks: Vec<DownTask>,
+    down_level_ids: Vec<Vec<usize>>,
+    down_fixed: Vec<f64>,
+    down_per_rhs: Vec<f64>,
+    down_pscratch: Vec<usize>,
     /// Execution order: root level first (parents before children).
     down_levels: Vec<Vec<Shard>>,
+    /// Per-batch-width (up levels, down levels) packings.
+    multi: MultiCache<(Vec<Vec<Shard>>, Vec<Vec<Shard>>)>,
     s_len: usize,
     t_len: usize,
     max_shards: usize,
@@ -606,8 +892,10 @@ impl H2Schedule {
             s_len += in_nb.rank[sigma];
         }
         let mut up_tasks = Vec::new();
-        let mut up_costs = Vec::new();
-        let mut up_levels = Vec::new();
+        let mut up_fixed = Vec::new();
+        let mut up_per_rhs = Vec::new();
+        let mut up_pscratch = Vec::new();
+        let mut up_level_ids = Vec::new();
         for lvl in (0..in_ct.levels.len()).rev() {
             let mut ids = Vec::new();
             for &sigma in &in_ct.levels[lvl] {
@@ -616,31 +904,36 @@ impl H2Schedule {
                     continue;
                 }
                 let nd = in_ct.node(sigma);
-                let (children, cost) = if nd.is_leaf() {
-                    (Vec::new(), (8 * nd.size() * k) as f64)
+                let (children, fx, vr, pan) = if nd.is_leaf() {
+                    (Vec::new(), (8 * nd.size() * k) as f64, (8 * (nd.size() + k)) as f64, nd.size())
                 } else {
                     let mut ch = Vec::new();
-                    let mut cost = 0.0;
+                    let mut fx = 0.0;
+                    let mut vr = 0.0;
                     for &c in &nd.children {
                         if in_nb.rank[c] == 0 || in_nb.transfer[c].is_none() {
                             continue;
                         }
-                        cost += in_nb.transfer[c].as_ref().unwrap().byte_size() as f64;
+                        fx += in_nb.transfer[c].as_ref().unwrap().byte_size() as f64;
+                        vr += (8 * (in_nb.rank[c] + k)) as f64;
                         ch.push((c, s_off[c], in_nb.rank[c]));
                     }
-                    (ch, cost)
+                    (ch, fx, vr, 0)
                 };
                 ids.push(up_tasks.len());
                 up_tasks.push(UpTask { cluster: sigma, off: s_off[sigma], len: k, leaf: nd.is_leaf(), src: nd.range(), children });
-                up_costs.push(cost);
+                up_fixed.push(fx);
+                up_per_rhs.push(vr);
+                up_pscratch.push(pan);
             }
             if !ids.is_empty() {
-                up_levels.push(ids);
+                up_level_ids.push(ids);
             }
         }
         let up_scratch = vec![0usize; up_tasks.len()];
+        let up_costs: Vec<f64> = up_fixed.iter().zip(&up_per_rhs).map(|(f, v)| f + v).collect();
         let up_levels: Vec<Vec<Shard>> =
-            up_levels.iter().map(|ids| balance_level(ids, &up_costs, &up_scratch, nshards)).collect();
+            up_level_ids.iter().map(|ids| balance_level(ids, &up_costs, &up_scratch, nshards)).collect();
 
         // ---- downward pass over the output tree ----
         let mut t_off = vec![0usize; out_ct.nodes.len()];
@@ -650,9 +943,11 @@ impl H2Schedule {
             t_len += out_nb.rank[tau];
         }
         let mut down_tasks = Vec::new();
-        let mut down_costs = Vec::new();
+        let mut down_fixed = Vec::new();
+        let mut down_per_rhs = Vec::new();
         let mut down_scratch = Vec::new();
-        let mut down_levels = Vec::new();
+        let mut down_pscratch = Vec::new();
+        let mut down_level_ids = Vec::new();
         for lvl in 0..out_ct.levels.len() {
             let mut ids = Vec::new();
             for &tau in &out_ct.levels[lvl] {
@@ -660,20 +955,28 @@ impl H2Schedule {
                 let nd = out_ct.node(tau);
                 let mut couplings = Vec::new();
                 let mut dense = Vec::new();
-                let mut cost = 0.0;
+                let mut fx = 0.0;
+                let mut vr = 0.0;
                 let mut scr = rank;
+                let mut csl = 0usize;
+                let mut xmax = 0usize;
                 for &b in &out_lists[tau] {
                     let bn = bt.node(b);
                     let in_cluster = if adjoint { bn.row } else { bn.col };
+                    let (f, v) = uni_block_cost_split(m.blocks[b].as_ref().expect("missing leaf"));
                     match m.blocks[b].as_ref() {
                         Some(UniBlock::Coupling(c)) => {
                             scr = scr.max(rank + c.scratch_len());
-                            cost += uni_block_cost(m.blocks[b].as_ref().unwrap());
+                            csl = csl.max(c.scratch_len());
+                            fx += f;
+                            vr += v;
                             couplings.push(CRef { block: b, off: s_off[in_cluster], len: in_nb.rank[in_cluster] });
                         }
                         Some(_) => {
-                            cost += uni_block_cost(m.blocks[b].as_ref().unwrap());
+                            fx += f;
+                            vr += v;
                             let src = if adjoint { bt.row_ct.node(bn.row).range() } else { bt.col_ct.node(bn.col).range() };
+                            xmax = xmax.max(src.len());
                             dense.push((b, src));
                         }
                         None => panic!("missing leaf"),
@@ -685,12 +988,14 @@ impl H2Schedule {
                         if out_nb.rank[c] == 0 || out_nb.transfer[c].is_none() {
                             continue;
                         }
-                        cost += out_nb.transfer[c].as_ref().unwrap().byte_size() as f64;
+                        fx += out_nb.transfer[c].as_ref().unwrap().byte_size() as f64;
+                        vr += (8 * (rank + out_nb.rank[c])) as f64;
                         children.push((c, t_off[c], out_nb.rank[c]));
                     }
                 }
                 if nd.is_leaf() && rank > 0 {
-                    cost += (8 * nd.size() * rank) as f64;
+                    fx += (8 * nd.size() * rank) as f64;
+                    vr += (8 * nd.size()) as f64;
                 }
                 // a task is needed to relay or apply coefficients, or for
                 // dense blocks — skip clusters with nothing to do
@@ -698,24 +1003,46 @@ impl H2Schedule {
                     continue;
                 }
                 ids.push(down_tasks.len());
-                down_tasks.push(DownTask { cluster: tau, dst: nd.range(), t_off: t_off[tau], rank, leaf: nd.is_leaf(), couplings, dense, children });
-                down_costs.push(cost);
+                down_pscratch.push(rank + csl + nd.size() + xmax);
+                down_tasks.push(DownTask {
+                    cluster: tau,
+                    dst: nd.range(),
+                    t_off: t_off[tau],
+                    rank,
+                    leaf: nd.is_leaf(),
+                    cscratch: csl,
+                    couplings,
+                    dense,
+                    children,
+                });
+                down_fixed.push(fx);
+                down_per_rhs.push(vr);
                 down_scratch.push(scr);
             }
             if !ids.is_empty() {
-                down_levels.push(ids);
+                down_level_ids.push(ids);
             }
         }
+        let down_costs: Vec<f64> = down_fixed.iter().zip(&down_per_rhs).map(|(f, v)| f + v).collect();
         let down_levels: Vec<Vec<Shard>> =
-            down_levels.iter().map(|ids| balance_level(ids, &down_costs, &down_scratch, nshards)).collect();
+            down_level_ids.iter().map(|ids| balance_level(ids, &down_costs, &down_scratch, nshards)).collect();
 
         let (up_max, _) = max_shard_stats(&up_levels);
         let (down_max, scratch) = max_shard_stats(&down_levels);
         H2Schedule {
             up_tasks,
+            up_level_ids,
+            up_fixed,
+            up_per_rhs,
+            up_pscratch,
             up_levels,
             down_tasks,
+            down_level_ids,
+            down_fixed,
+            down_per_rhs,
+            down_pscratch,
             down_levels,
+            multi: MultiCache::new(),
             s_len,
             t_len,
             max_shards: up_max.max(down_max),
@@ -819,6 +1146,137 @@ impl H2Schedule {
             });
         }
     }
+
+    /// Gemm-shaped batched execution: slot-major coefficient panels for both
+    /// transform directions, leaf/dense y rows gathered into contiguous
+    /// panels; transfer and coupling matrices are streamed once per batch.
+    fn exec_multi(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
+        let ylen = y.nrows();
+        let nrhs = y.ncols();
+        let nshards = default_shards();
+        let packed = self.multi.get(nrhs, || {
+            (
+                balance_levels_for(&self.up_level_ids, &self.up_fixed, &self.up_per_rhs, &self.up_pscratch, nrhs, nshards),
+                balance_levels_for(&self.down_level_ids, &self.down_fixed, &self.down_per_rhs, &self.down_pscratch, nrhs, nshards),
+            )
+        });
+        let (up_levels, down_levels) = (&packed.0, &packed.1);
+        let (umax, uscr) = max_shard_stats(up_levels);
+        let (dmax, dscr) = max_shard_stats(down_levels);
+        arena.ensure(umax.max(dmax), uscr.max(dscr), self.s_len * nrhs, self.t_len * nrhs);
+        let (bufs, s_all, t_all) = arena.split();
+        let pool = ThreadPool::global();
+
+        // upward pass: forward transformation panels, children before parents
+        {
+            s_all[..self.s_len * nrhs].fill(0.0);
+            let slots = SharedVec::new(&mut s_all[..self.s_len * nrhs]);
+            for level in up_levels.iter() {
+                pool.scope(|sc| {
+                    for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
+                        let slots = slots;
+                        sc.spawn(move |_| {
+                            for &ti in &shard.tasks {
+                                let t = &self.up_tasks[ti];
+                                // SAFETY: one slot panel per cluster; child
+                                // slots joined in an earlier level.
+                                let dst = unsafe { slots.range_mut(t.off * nrhs..(t.off + t.len) * nrhs) };
+                                if t.leaf {
+                                    let sl = t.src.len();
+                                    let xp = &mut buf[..sl * nrhs];
+                                    gather_panel(x, &t.src, xp);
+                                    in_nb.leaf_apply_transposed_panel(t.cluster, xp, dst, nrhs);
+                                } else {
+                                    for &(c, coff, clen) in &t.children {
+                                        let sc_child = unsafe { slots.range(coff * nrhs..(coff + clen) * nrhs) };
+                                        if let Some(e) = in_nb.transfer[c].as_ref() {
+                                            e.apply_transposed_add_panel(sc_child, dst, nrhs);
+                                        }
+                                    }
+                                }
+                            }
+                        });
+                    }
+                });
+            }
+        }
+
+        // downward pass on panels
+        let sref: &[f64] = &s_all[..self.s_len * nrhs];
+        t_all[..self.t_len * nrhs].fill(0.0);
+        let tslots = SharedVec::new(&mut t_all[..self.t_len * nrhs]);
+        let yy = SharedVec::new(y.data_mut());
+        for level in down_levels.iter() {
+            pool.scope(|sc| {
+                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
+                    let yy = yy;
+                    let tslots = tslots;
+                    sc.spawn(move |_| {
+                        for &ti in &shard.tasks {
+                            let task = &self.down_tasks[ti];
+                            let dl = task.dst.len();
+                            // SAFETY: τ's slot panel was written only by its
+                            // parent in an earlier level.
+                            let tv = unsafe { tslots.range_mut(task.t_off * nrhs..(task.t_off + task.rank) * nrhs) };
+                            let (sbuf, rest) = buf.split_at_mut(task.rank * nrhs);
+                            let (cscratch, rest) = rest.split_at_mut(task.cscratch * nrhs);
+                            let (yp, xarea) = rest.split_at_mut(dl * nrhs);
+                            for cr in &task.couplings {
+                                if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
+                                    let sv = &sref[cr.off * nrhs..(cr.off + cr.len) * nrhs];
+                                    if adjoint {
+                                        cm.apply_transposed_add_panel(sv, tv, nrhs, cscratch);
+                                    } else {
+                                        cm.apply_add_panel(sv, tv, nrhs, cscratch);
+                                    }
+                                }
+                            }
+                            let leaf_write = task.leaf && task.rank > 0 && tv.iter().any(|&v| v != 0.0);
+                            let need_y = leaf_write || !task.dense.is_empty();
+                            if need_y {
+                                for c in 0..nrhs {
+                                    // SAFETY: leaf/dense ranges are disjoint
+                                    // within a level; levels are barriers.
+                                    let src = unsafe { yy.range(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                                    yp[c * dl..(c + 1) * dl].copy_from_slice(src);
+                                }
+                            }
+                            if task.leaf {
+                                if leaf_write {
+                                    for (d, &v) in sbuf.iter_mut().zip(tv.iter()) {
+                                        *d = alpha * v;
+                                    }
+                                    out_nb.leaf_apply_add_panel(task.cluster, sbuf, yp, nrhs);
+                                }
+                            } else {
+                                for &(c, ctoff, crank) in &task.children {
+                                    // SAFETY: each child has exactly one parent.
+                                    let tc = unsafe { tslots.range_mut(ctoff * nrhs..(ctoff + crank) * nrhs) };
+                                    if let Some(e) = out_nb.transfer[c].as_ref() {
+                                        e.apply_add_panel(tv, tc, nrhs);
+                                    }
+                                }
+                            }
+                            for (b, src) in &task.dense {
+                                let sl = src.len();
+                                let (xp, _) = xarea.split_at_mut(sl * nrhs);
+                                gather_panel(x, src, xp);
+                                apply_dense_oriented_panel(&m.blocks, *b, adjoint, alpha, xp, yp, nrhs);
+                            }
+                            if need_y {
+                                for c in 0..nrhs {
+                                    // SAFETY: as above.
+                                    let dst = unsafe { yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                                    dst.copy_from_slice(&yp[c * dl..(c + 1) * dl]);
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
 }
 
 /// Precomputed execution plan for an [`H2Matrix`]; schedule halves are built
@@ -864,16 +1322,20 @@ impl H2Plan {
         self.adj(m).exec(m, true, alpha, x, y, arena);
     }
 
-    /// Y += alpha · M · X, one schedule pass per column over the reused
-    /// coefficient buffers.
+    /// Y += alpha · M · X: one gemm-shaped schedule pass for the whole batch.
     pub fn execute_multi(&self, m: &H2Matrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        let sched = self.fwd(m);
-        for c in 0..x.ncols() {
-            sched.exec(m, false, alpha, x.col(c), y.col_mut(c), arena);
-        }
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena);
+    }
+
+    /// Y += alpha · Mᵀ · X (gemm-shaped batched adjoint).
+    pub fn execute_multi_adjoint(&self, m: &H2Matrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        assert_eq!(x.nrows(), self.nrows);
+        assert_eq!(y.nrows(), self.ncols);
+        assert_eq!(x.ncols(), y.ncols());
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena);
     }
 
     /// Aggregate over the schedule halves built so far.

@@ -20,13 +20,21 @@
 //! * **a reusable scratch [`Arena`]** — coefficient buffers (forward/backward
 //!   transform slots for UH/H²) and per-shard kernel scratch are sized at
 //!   plan-build time and reused across calls: steady-state execution performs
-//!   zero heap allocations.
+//!   zero heap allocations;
+//! * **gemm-shaped multi-RHS schedules** — batched products execute the same
+//!   level-ordered task lists over contiguous `rows×b` panels: each block's
+//!   matrix data (compressed coupling/transfer matrices included) is decoded
+//!   once and applied to all `b` columns, per-task costs are rescaled by `b`
+//!   for LPT balancing, and per-width shard packings are cached.
 //!
 //! The [`HOperator`] trait makes all three formats (compressed or not)
 //! interchangeable behind one object-safe interface — the batching
 //! [`crate::coordinator::MvmServer`] is generic over `Arc<dyn HOperator>`.
 //! [`PlannedOperator`] pairs a matrix with its plan and serves single-vector,
-//! multi-RHS and adjoint products through the same schedules.
+//! multi-RHS (forward and adjoint) products through the same schedules, and
+//! can fold the cluster-tree permutations into execution
+//! ([`PlannedOperator::with_external_ordering`]) so clients work entirely in
+//! the original point ordering.
 //!
 //! Build plans **after** compressing a matrix: schedules record block ranks
 //! and scratch sizes of the representation they were built from.

@@ -2,13 +2,20 @@
 //!
 //! [`HOperator`] is object safe: the coordinator holds `Arc<dyn HOperator>`
 //! and serves any hierarchical format, compressed or not. The direct trait
-//! impls on the matrix types use the collision-free recursive traversals;
-//! [`PlannedOperator`] pairs a matrix with its precomputed plan schedules
-//! ([`HPlan`]/[`UniPlan`]/[`H2Plan`]) and a reusable arena — the
-//! steady-state serving configuration.
+//! impls on the matrix types use the collision-free recursive traversals (or
+//! one-shot plans for the batched paths); [`PlannedOperator`] pairs a matrix
+//! with its precomputed plan schedules ([`HPlan`]/[`UniPlan`]/[`H2Plan`]) and
+//! a reusable arena — the steady-state serving configuration.
+//!
+//! [`PlannedOperator::with_external_ordering`] folds the
+//! [`crate::cluster::ClusterTree`] `to_internal`/`to_external` permutations
+//! into the execution as a gather first level and a scatter-add last level
+//! over pooled staging buffers, so the serving stack can accept batches in
+//! the original (external) point ordering without per-call allocation.
 
 use super::arena::Arena;
 use super::exec::{H2Plan, HPlan, PlanStats, UniPlan};
+use crate::cluster::ClusterTree;
 use crate::h2::H2Matrix;
 use crate::hmatrix::HMatrix;
 use crate::la::DMatrix;
@@ -30,6 +37,14 @@ pub trait HOperator: Send + Sync {
     fn apply_adjoint(&self, alpha: f64, x: &[f64], y: &mut [f64]);
     /// Y += alpha · M · X (column-major multivectors, batched serving path).
     fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix);
+    /// Y += alpha · Mᵀ · X (column-major multivectors). Default: per-column
+    /// loop; [`PlannedOperator`] overrides with gemm-shaped plan schedules.
+    fn apply_multi_adjoint(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        assert_eq!(x.ncols(), y.ncols());
+        for c in 0..x.ncols() {
+            self.apply_adjoint(alpha, x.col(c), y.col_mut(c));
+        }
+    }
 }
 
 impl HOperator for HMatrix {
@@ -91,10 +106,20 @@ impl HOperator for UniformHMatrix {
     }
 
     fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
-        assert_eq!(x.ncols(), y.ncols());
-        for c in 0..x.ncols() {
-            mvm::uniform_mvm(alpha, self, x.col(c), y.col_mut(c), mvm::UniMvmAlgorithm::RowWise);
-        }
+        // one-shot gemm-shaped plan pass: one traversal for the whole batch.
+        // Deliberately NOT cached inside the matrix: UniformHMatrix is Clone
+        // and mutable (compress() changes block representations), so an
+        // embedded plan could go stale — repeat callers hold a
+        // PlannedOperator, which owns plan + arena for the matrix snapshot.
+        let plan = UniPlan::lazy(self);
+        let mut arena = Arena::new();
+        plan.execute_multi(self, alpha, x, y, &mut arena);
+    }
+
+    fn apply_multi_adjoint(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        let plan = UniPlan::lazy(self);
+        let mut arena = Arena::new();
+        plan.execute_multi_adjoint(self, alpha, x, y, &mut arena);
     }
 }
 
@@ -126,10 +151,15 @@ impl HOperator for H2Matrix {
     }
 
     fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
-        assert_eq!(x.ncols(), y.ncols());
-        for c in 0..x.ncols() {
-            mvm::h2_mvm(alpha, self, x.col(c), y.col_mut(c), mvm::H2MvmAlgorithm::RowWise);
-        }
+        let plan = H2Plan::lazy(self);
+        let mut arena = Arena::new();
+        plan.execute_multi(self, alpha, x, y, &mut arena);
+    }
+
+    fn apply_multi_adjoint(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        let plan = H2Plan::lazy(self);
+        let mut arena = Arena::new();
+        plan.execute_multi_adjoint(self, alpha, x, y, &mut arena);
     }
 }
 
@@ -139,9 +169,17 @@ enum Inner {
     H2 { m: Arc<H2Matrix>, plan: H2Plan },
 }
 
+/// Row/column cluster trees whose permutations are folded into execution.
+struct ExtOrder {
+    row: Arc<ClusterTree>,
+    col: Arc<ClusterTree>,
+}
+
 /// A matrix paired with its precomputed execution plan and a reusable scratch
 /// arena: single-vector, adjoint and multi-RHS products all run through the
-/// flattened schedules with zero steady-state allocation.
+/// flattened schedules with zero steady-state allocation. Multi-RHS products
+/// use gemm-shaped panel tasks (one decode of every block for the whole
+/// batch).
 ///
 /// Build it **after** compressing the matrix — schedules record block ranks
 /// and scratch sizes of the representation they were built from.
@@ -149,25 +187,46 @@ pub struct PlannedOperator {
     inner: Inner,
     arena: Mutex<Arena>,
     bytes: usize,
+    external: Option<ExtOrder>,
 }
 
 impl PlannedOperator {
     pub fn from_h(m: Arc<HMatrix>) -> PlannedOperator {
         let plan = HPlan::build(&m);
         let bytes = m.byte_size();
-        PlannedOperator { inner: Inner::H { m, plan }, arena: Mutex::new(Arena::new()), bytes }
+        PlannedOperator { inner: Inner::H { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
     }
 
     pub fn from_uniform(m: Arc<UniformHMatrix>) -> PlannedOperator {
         let plan = UniPlan::build(&m);
         let bytes = m.byte_size();
-        PlannedOperator { inner: Inner::Uniform { m, plan }, arena: Mutex::new(Arena::new()), bytes }
+        PlannedOperator { inner: Inner::Uniform { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
     }
 
     pub fn from_h2(m: Arc<H2Matrix>) -> PlannedOperator {
         let plan = H2Plan::build(&m);
         let bytes = m.byte_size();
-        PlannedOperator { inner: Inner::H2 { m, plan }, arena: Mutex::new(Arena::new()), bytes }
+        PlannedOperator { inner: Inner::H2 { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
+    }
+
+    /// Accept and produce vectors in *external* (original point) ordering:
+    /// the cluster-tree permutations are folded into execution as a gather
+    /// first level and a scatter-add last level over pooled staging buffers,
+    /// so callers (e.g. [`crate::coordinator::MvmServer`] clients) never run
+    /// `ClusterTree::to_internal`/`to_external` themselves.
+    pub fn with_external_ordering(mut self) -> PlannedOperator {
+        let (row, col) = match &self.inner {
+            Inner::H { m, .. } => (m.bt.row_ct.clone(), m.bt.col_ct.clone()),
+            Inner::Uniform { m, .. } => (m.bt.row_ct.clone(), m.bt.col_ct.clone()),
+            Inner::H2 { m, .. } => (m.bt.row_ct.clone(), m.bt.col_ct.clone()),
+        };
+        self.external = Some(ExtOrder { row, col });
+        self
+    }
+
+    /// Whether this operator expects external-ordering vectors.
+    pub fn is_external_ordering(&self) -> bool {
+        self.external.is_some()
     }
 
     /// Schedule summary (task/level/shard counts, scratch sizes).
@@ -177,6 +236,89 @@ impl PlannedOperator {
             Inner::Uniform { plan, .. } => plan.stats(),
             Inner::H2 { plan, .. } => plan.stats(),
         }
+    }
+
+    fn run(&self, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+        match (&self.inner, adjoint) {
+            (Inner::H { m, plan }, false) => plan.execute(m, alpha, x, y, arena),
+            (Inner::H { m, plan }, true) => plan.execute_adjoint(m, alpha, x, y, arena),
+            (Inner::Uniform { m, plan }, false) => plan.execute(m, alpha, x, y, arena),
+            (Inner::Uniform { m, plan }, true) => plan.execute_adjoint(m, alpha, x, y, arena),
+            (Inner::H2 { m, plan }, false) => plan.execute(m, alpha, x, y, arena),
+            (Inner::H2 { m, plan }, true) => plan.execute_adjoint(m, alpha, x, y, arena),
+        }
+    }
+
+    fn run_multi(&self, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+        match (&self.inner, adjoint) {
+            (Inner::H { m, plan }, false) => plan.execute_multi(m, alpha, x, y, arena),
+            (Inner::H { m, plan }, true) => plan.execute_multi_adjoint(m, alpha, x, y, arena),
+            (Inner::Uniform { m, plan }, false) => plan.execute_multi(m, alpha, x, y, arena),
+            (Inner::Uniform { m, plan }, true) => plan.execute_multi_adjoint(m, alpha, x, y, arena),
+            (Inner::H2 { m, plan }, false) => plan.execute_multi(m, alpha, x, y, arena),
+            (Inner::H2 { m, plan }, true) => plan.execute_multi_adjoint(m, alpha, x, y, arena),
+        }
+    }
+
+    /// Single-vector product with the permutation fold: gather x into
+    /// internal ordering, execute, scatter-add back. `in_perm`/`out_perm`
+    /// are the cluster-tree permutations of the input/output side.
+    fn apply_external(&self, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64]) {
+        let ext = self.external.as_ref().expect("external ordering not enabled");
+        let (in_perm, out_perm) =
+            if adjoint { (&ext.row.perm, &ext.col.perm) } else { (&ext.col.perm, &ext.row.perm) };
+        assert_eq!(x.len(), in_perm.len());
+        assert_eq!(y.len(), out_perm.len());
+        let mut arena = self.arena.lock().unwrap();
+        let (mut xi, mut yi) = arena.take_io();
+        xi.clear();
+        xi.resize(x.len(), 0.0);
+        yi.clear();
+        yi.resize(y.len(), 0.0);
+        for (pos, &e) in in_perm.iter().enumerate() {
+            xi[pos] = x[e];
+        }
+        self.run(adjoint, alpha, &xi, &mut yi, &mut arena);
+        for (pos, &e) in out_perm.iter().enumerate() {
+            y[e] += yi[pos];
+        }
+        arena.put_io(xi, yi);
+    }
+
+    /// Batched product with the permutation fold over pooled panels.
+    fn apply_multi_external(&self, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        let ext = self.external.as_ref().expect("external ordering not enabled");
+        let (in_perm, out_perm) =
+            if adjoint { (&ext.row.perm, &ext.col.perm) } else { (&ext.col.perm, &ext.row.perm) };
+        let (n_in, n_out, nrhs) = (x.nrows(), y.nrows(), x.ncols());
+        assert_eq!(n_in, in_perm.len());
+        assert_eq!(n_out, out_perm.len());
+        assert_eq!(nrhs, y.ncols());
+        let mut arena = self.arena.lock().unwrap();
+        let (mut xi, mut yi) = arena.take_io();
+        xi.clear();
+        xi.resize(n_in * nrhs, 0.0);
+        yi.clear();
+        yi.resize(n_out * nrhs, 0.0);
+        for c in 0..nrhs {
+            let xc = x.col(c);
+            let dst = &mut xi[c * n_in..(c + 1) * n_in];
+            for (pos, &e) in in_perm.iter().enumerate() {
+                dst[pos] = xc[e];
+            }
+        }
+        let xm = DMatrix::from_vec(n_in, nrhs, xi);
+        let mut ym = DMatrix::from_vec(n_out, nrhs, yi);
+        self.run_multi(adjoint, alpha, &xm, &mut ym, &mut arena);
+        let yi = ym.into_vec();
+        for c in 0..nrhs {
+            let yc = y.col_mut(c);
+            let src = &yi[c * n_out..(c + 1) * n_out];
+            for (pos, &e) in out_perm.iter().enumerate() {
+                yc[e] += src[pos];
+            }
+        }
+        arena.put_io(xm.into_vec(), yi);
     }
 }
 
@@ -210,29 +352,34 @@ impl HOperator for PlannedOperator {
     }
 
     fn apply(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
-        let mut arena = self.arena.lock().unwrap();
-        match &self.inner {
-            Inner::H { m, plan } => plan.execute(m, alpha, x, y, &mut arena),
-            Inner::Uniform { m, plan } => plan.execute(m, alpha, x, y, &mut arena),
-            Inner::H2 { m, plan } => plan.execute(m, alpha, x, y, &mut arena),
+        if self.external.is_some() {
+            return self.apply_external(false, alpha, x, y);
         }
+        let mut arena = self.arena.lock().unwrap();
+        self.run(false, alpha, x, y, &mut arena);
     }
 
     fn apply_adjoint(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
-        let mut arena = self.arena.lock().unwrap();
-        match &self.inner {
-            Inner::H { m, plan } => plan.execute_adjoint(m, alpha, x, y, &mut arena),
-            Inner::Uniform { m, plan } => plan.execute_adjoint(m, alpha, x, y, &mut arena),
-            Inner::H2 { m, plan } => plan.execute_adjoint(m, alpha, x, y, &mut arena),
+        if self.external.is_some() {
+            return self.apply_external(true, alpha, x, y);
         }
+        let mut arena = self.arena.lock().unwrap();
+        self.run(true, alpha, x, y, &mut arena);
     }
 
     fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
-        let mut arena = self.arena.lock().unwrap();
-        match &self.inner {
-            Inner::H { m, plan } => plan.execute_multi(m, alpha, x, y, &mut arena),
-            Inner::Uniform { m, plan } => plan.execute_multi(m, alpha, x, y, &mut arena),
-            Inner::H2 { m, plan } => plan.execute_multi(m, alpha, x, y, &mut arena),
+        if self.external.is_some() {
+            return self.apply_multi_external(false, alpha, x, y);
         }
+        let mut arena = self.arena.lock().unwrap();
+        self.run_multi(false, alpha, x, y, &mut arena);
+    }
+
+    fn apply_multi_adjoint(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        if self.external.is_some() {
+            return self.apply_multi_external(true, alpha, x, y);
+        }
+        let mut arena = self.arena.lock().unwrap();
+        self.run_multi(true, alpha, x, y, &mut arena);
     }
 }

@@ -56,19 +56,24 @@ pub fn default_shards() -> usize {
     crate::par::num_threads() + 1
 }
 
-/// Model cost (bytes) of applying one H-matrix leaf block to a vector.
-pub fn block_cost(b: &BlockData) -> f64 {
-    (b.byte_size() + 8 * (b.nrows() + b.ncols())) as f64
+/// Model cost of one H-matrix leaf block, split into (matrix bytes, vector
+/// bytes per right-hand side). A batch of `b` RHS streams the matrix data
+/// once but the vector traffic `b` times, so the cost at batch width `b` is
+/// `fixed + b · per_rhs` — the rescaling the multi-RHS schedules balance
+/// with.
+pub fn block_cost_split(b: &BlockData) -> (f64, f64) {
+    (b.byte_size() as f64, (8 * (b.nrows() + b.ncols())) as f64)
 }
 
-/// Model cost (bytes) of one uniform/H² leaf (coupling or dense block).
-pub fn uni_block_cost(b: &UniBlock) -> f64 {
+/// Split model cost of one uniform/H² leaf (coupling or dense block); see
+/// [`block_cost_split`]. The single-vector cost is `fixed + per_rhs`.
+pub fn uni_block_cost_split(b: &UniBlock) -> (f64, f64) {
     let vec_traffic = match b {
         UniBlock::Dense(m) => 8 * (m.nrows() + m.ncols()),
         UniBlock::ZDense(z) => 8 * (z.nrows + z.ncols),
         UniBlock::Coupling(_) => 0, // coefficient slots, tiny
     };
-    (b.byte_size() + vec_traffic) as f64
+    (b.byte_size() as f64, vec_traffic as f64)
 }
 
 #[cfg(test)]

@@ -71,15 +71,24 @@ pub fn gmres(op: &dyn LinOp, b: &[f64], tol: f64, restart: usize, max_iter: usiz
             }
             // new rotation to eliminate h[k+1,k]
             let denom = (h[(k, k)] * h[(k, k)] + h[(k + 1, k)] * h[(k + 1, k)]).sqrt();
-            if denom > 0.0 {
-                cs[k] = h[(k, k)] / denom;
-                sn[k] = h[(k + 1, k)] / denom;
-                h[(k, k)] = denom;
-                h[(k + 1, k)] = 0.0;
-                g[k + 1] = -sn[k] * g[k];
-                g[k] *= cs[k];
+            if denom == 0.0 {
+                // the Krylov direction contributed nothing (rank-deficient
+                // operator): the rotation was NOT applied, so g[k+1] still
+                // holds its initial 0.0 and the cheap residual estimate is
+                // stale — it must not be trusted (it used to read as
+                // "converged"). Leave this cycle; the outer loop recomputes
+                // the true residual ‖b − A x‖.
+                break;
             }
+            cs[k] = h[(k, k)] / denom;
+            sn[k] = h[(k + 1, k)] / denom;
+            h[(k, k)] = denom;
+            h[(k + 1, k)] = 0.0;
+            g[k + 1] = -sn[k] * g[k];
+            g[k] *= cs[k];
             k_used = k + 1;
+            // the residual estimate is valid only because the rotation above
+            // was applied — it is the one spot g[k+1] is written
             let rel = g[k + 1].abs() / bnorm;
             history.push(rel);
             if rel < tol {
@@ -164,6 +173,65 @@ mod tests {
         // tiny restart forces several outer cycles
         let (_, stats) = gmres(&op, &b, 1e-8, 5, 2000);
         assert!(stats.converged, "residual {}", stats.residual);
+    }
+
+    #[test]
+    fn gmres_zero_operator_does_not_spuriously_converge() {
+        // regression: A = 0 makes the whole Hessenberg column zero, the
+        // Givens update is skipped, and the stale g[k+1] = 0.0 used to be
+        // read as the residual — reporting convergence with x = 0 although
+        // r = b ≠ 0
+        let n = 8;
+        let apply = |_x: &[f64], _y: &mut [f64]| {};
+        let op = (n, apply);
+        let b = vec![1.0; n];
+        let (x, stats) = gmres(&op, &b, 1e-10, 5, 50);
+        assert!(!stats.converged, "spurious convergence on the zero operator");
+        assert!((stats.residual - 1.0).abs() < 1e-12, "residual {}", stats.residual);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gmres_rank_deficient_consistent_system_converges() {
+        // A = diag(d_0..d_{n-2}, 0) with b in range(A): the Krylov space
+        // stays inside the range, so GMRES must still converge after the
+        // stale-residual restructuring
+        let n = 12;
+        let apply = move |x: &[f64], y: &mut [f64]| {
+            for i in 0..n - 1 {
+                y[i] += (1.0 + i as f64 / n as f64) * x[i];
+            }
+        };
+        let op = (n, apply);
+        let mut b = vec![0.0; n];
+        for v in b.iter_mut().take(n - 1) {
+            *v = 1.0;
+        }
+        let (x, stats) = gmres(&op, &b, 1e-10, n, 200);
+        assert!(stats.converged, "residual {}", stats.residual);
+        let mut ax = vec![0.0; n];
+        op.apply(&x, &mut ax);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-8, "row {i}: {} vs {}", ax[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn gmres_singular_inconsistent_reports_nonconvergence() {
+        // b has a component outside range(A): the residual cannot go below
+        // that component's share — the solver must not claim convergence
+        let n = 6;
+        let apply = move |x: &[f64], y: &mut [f64]| {
+            for i in 0..n - 1 {
+                y[i] += x[i];
+            }
+        };
+        let op = (n, apply);
+        let mut b = vec![0.0; n];
+        b[n - 1] = 1.0; // entirely outside the range
+        let (_, stats) = gmres(&op, &b, 1e-10, 6, 60);
+        assert!(!stats.converged, "residual {}", stats.residual);
+        assert!(stats.residual > 0.5);
     }
 
     #[test]

@@ -153,6 +153,22 @@ impl ClusterBasis {
         }
     }
 
+    /// Panel (multi-RHS) forward transformation S += Wᵀ X on contiguous
+    /// column-major panels (X: nrows×nrhs, S: rank×nrhs). Basis data —
+    /// compressed included — is streamed once for all `nrhs` columns.
+    pub fn apply_transposed_panel(&self, x: &[f64], s: &mut [f64], nrhs: usize) {
+        debug_assert_eq!(x.len(), self.nrows() * nrhs);
+        debug_assert_eq!(s.len(), self.rank() * nrhs);
+        self.data.apply_transposed_panel(x, s, nrhs);
+    }
+
+    /// Panel backward transformation Y += W T (T: rank×nrhs, Y: nrows×nrhs).
+    pub fn apply_add_panel(&self, t: &[f64], y: &mut [f64], nrhs: usize) {
+        debug_assert_eq!(t.len(), self.rank() * nrhs);
+        debug_assert_eq!(y.len(), self.nrows() * nrhs);
+        self.data.apply_add_panel(t, y, nrhs);
+    }
+
     /// Compress in place per config.
     pub fn compress(&mut self, cfg: &CompressionConfig) {
         if let BasisData::Plain(w) = &self.data {
@@ -174,6 +190,71 @@ impl ClusterBasis {
             BasisData::Valr(z) => z.byte_size(),
         };
         d + self.sigma.len() * 8 + BLOB_OVERHEAD
+    }
+}
+
+impl BasisData {
+    /// S += Wᵀ X on contiguous panels (X: nrows×nrhs, S: rank×nrhs): every
+    /// basis column is decoded once per chunk and dotted with all `nrhs`
+    /// input columns (shared by [`ClusterBasis`] and the H² nested-basis
+    /// leaves).
+    pub(crate) fn apply_transposed_panel(&self, x: &[f64], s: &mut [f64], nrhs: usize) {
+        match self {
+            BasisData::Plain(w) => crate::mvm::kernels::gemm_tn_panel(1.0, w, x, s, nrhs),
+            BasisData::Z { nrows, ncols, blob } => {
+                crate::mvm::kernels::stream_dot_cols_panel(blob, *nrows, *ncols, x, nrhs, s);
+            }
+            BasisData::Valr(z) => {
+                let k = z.rank();
+                let n = z.nrows;
+                let mut buf = [0.0f64; 256];
+                for j in 0..k {
+                    let col = &z.wcols[j];
+                    let mut i = 0;
+                    while i < n {
+                        let len = 256.min(n - i);
+                        col.decompress_range(i, i + len, &mut buf[..len]);
+                        for c in 0..nrhs {
+                            s[c * k + j] += blas::dot(&buf[..len], &x[c * n + i..c * n + i + len]);
+                        }
+                        i += len;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Y += W T on contiguous panels (T: rank×nrhs, Y: nrows×nrhs).
+    pub(crate) fn apply_add_panel(&self, t: &[f64], y: &mut [f64], nrhs: usize) {
+        match self {
+            BasisData::Plain(w) => crate::mvm::kernels::gemm_nn_panel(1.0, w, t, y, nrhs),
+            BasisData::Z { nrows, ncols, blob } => {
+                crate::mvm::kernels::stream_axpy_cols_panel(blob, *nrows, *ncols, 1.0, t, nrhs, y);
+            }
+            BasisData::Valr(z) => {
+                let k = z.rank();
+                let n = z.nrows;
+                let mut buf = [0.0f64; 256];
+                for j in 0..k {
+                    if (0..nrhs).all(|c| t[c * k + j] == 0.0) {
+                        continue;
+                    }
+                    let col = &z.wcols[j];
+                    let mut i = 0;
+                    while i < n {
+                        let len = 256.min(n - i);
+                        col.decompress_range(i, i + len, &mut buf[..len]);
+                        for c in 0..nrhs {
+                            let w = t[c * k + j];
+                            if w != 0.0 {
+                                blas::axpy(w, &buf[..len], &mut y[c * n + i..c * n + i + len]);
+                            }
+                        }
+                        i += len;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -225,6 +306,42 @@ mod tests {
             }
             for i in 0..100 {
                 assert!((y[i] - y_ref[i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn panel_applies_match_per_column() {
+        let (w, sigma) = ortho_basis(90, 5, 84);
+        let mut rng = Rng::new(85);
+        let nrhs = 3;
+        let x: Vec<f64> = (0..90 * nrhs).map(|_| rng.normal()).collect();
+        let t: Vec<f64> = (0..5 * nrhs).map(|_| rng.normal()).collect();
+        for cfg in [
+            None,
+            Some(CompressionConfig { codec: Codec::Aflp, eps: 1e-10, valr: false }),
+            Some(CompressionConfig { codec: Codec::Aflp, eps: 1e-10, valr: true }),
+            Some(CompressionConfig { codec: Codec::Fpx, eps: 1e-10, valr: true }),
+        ] {
+            let mut cb = ClusterBasis::new(w.clone(), sigma.clone());
+            if let Some(c) = cfg {
+                cb.compress(&c);
+            }
+            let mut s = vec![0.0; 5 * nrhs];
+            cb.apply_transposed_panel(&x, &mut s, nrhs);
+            let mut y = vec![0.0; 90 * nrhs];
+            cb.apply_add_panel(&t, &mut y, nrhs);
+            for c in 0..nrhs {
+                let mut sc = vec![0.0; 5];
+                cb.apply_transposed(&x[c * 90..(c + 1) * 90], &mut sc);
+                for j in 0..5 {
+                    assert!((s[c * 5 + j] - sc[j]).abs() < 1e-12, "{cfg:?} fwd col {c} j {j}");
+                }
+                let mut yc = vec![0.0; 90];
+                cb.apply_add(&t[c * 5..(c + 1) * 5], &mut yc);
+                for i in 0..90 {
+                    assert!((y[c * 90 + i] - yc[i]).abs() < 1e-12, "{cfg:?} bwd col {c} i {i}");
+                }
             }
         }
     }

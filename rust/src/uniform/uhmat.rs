@@ -86,6 +86,52 @@ impl CouplingMat {
         }
     }
 
+    /// Panel variant of [`CouplingMat::apply_add_scratch`]: T += S · Spanel on
+    /// contiguous column-major panels (s: ncols×nrhs, t: nrows×nrhs), with
+    /// scratch of at least [`CouplingMat::scratch_len`]` * nrhs` values.
+    /// Compressed couplings are decoded once per chunk for all `nrhs` columns.
+    pub fn apply_add_panel(&self, s: &[f64], t: &mut [f64], nrhs: usize, scratch: &mut [f64]) {
+        use crate::mvm::kernels::{gemm_nn_panel, gemm_tn_panel, zgemm_blocked_panel, zgemm_t_blocked_panel};
+        match self {
+            CouplingMat::Plain(m) => gemm_nn_panel(1.0, m, s, t, nrhs),
+            CouplingMat::Z(z) => zgemm_blocked_panel(1.0, z, s, t, nrhs),
+            CouplingMat::SepPlain { sr, sc } => {
+                let tmp = &mut scratch[..sc.ncols() * nrhs];
+                tmp.fill(0.0);
+                gemm_tn_panel(1.0, sc, s, tmp, nrhs);
+                gemm_nn_panel(1.0, sr, tmp, t, nrhs);
+            }
+            CouplingMat::SepZ { sr, sc } => {
+                let tmp = &mut scratch[..sc.ncols * nrhs];
+                tmp.fill(0.0);
+                zgemm_t_blocked_panel(1.0, sc, s, tmp, nrhs);
+                zgemm_blocked_panel(1.0, sr, tmp, t, nrhs);
+            }
+        }
+    }
+
+    /// Panel variant of [`CouplingMat::apply_transposed_add_scratch`]:
+    /// T += Sᵀ · Spanel on contiguous panels.
+    pub fn apply_transposed_add_panel(&self, s: &[f64], t: &mut [f64], nrhs: usize, scratch: &mut [f64]) {
+        use crate::mvm::kernels::{gemm_nn_panel, gemm_tn_panel, zgemm_blocked_panel, zgemm_t_blocked_panel};
+        match self {
+            CouplingMat::Plain(m) => gemm_tn_panel(1.0, m, s, t, nrhs),
+            CouplingMat::Z(z) => zgemm_t_blocked_panel(1.0, z, s, t, nrhs),
+            CouplingMat::SepPlain { sr, sc } => {
+                let tmp = &mut scratch[..sr.ncols() * nrhs];
+                tmp.fill(0.0);
+                gemm_tn_panel(1.0, sr, s, tmp, nrhs);
+                gemm_nn_panel(1.0, sc, tmp, t, nrhs);
+            }
+            CouplingMat::SepZ { sr, sc } => {
+                let tmp = &mut scratch[..sr.ncols * nrhs];
+                tmp.fill(0.0);
+                zgemm_t_blocked_panel(1.0, sr, s, tmp, nrhs);
+                zgemm_blocked_panel(1.0, sc, tmp, t, nrhs);
+            }
+        }
+    }
+
     /// Scratch values needed by the `_scratch` apply variants.
     pub fn scratch_len(&self) -> usize {
         match self {

@@ -1,0 +1,111 @@
+//! Exhaustive `decompress_range(begin, end)` sweeps over tiny buffers: pins
+//! the `fast4`-vs-`fast` 4/8-byte-load window logic in `fpx.rs` and the
+//! `fast` cutoffs in `aflp.rs` against the scalar random-access reference
+//! (`Blob::get`, robust byte assembly), for every reachable value width.
+//! The same source runs on AVX2 and non-AVX2 builds — CI exercises both —
+//! so the SIMD gather paths are pinned bit-for-bit against the scalar tails.
+
+use hmatc::compress::{Blob, Codec};
+use hmatc::util::Rng;
+use std::collections::BTreeSet;
+
+/// Every (begin, end) pair must decode bit-identically to per-index random
+/// access, which never takes the vectorized fast paths' window shortcuts.
+fn check_all_ranges(blob: &Blob, tag: &str) {
+    let n = blob.n;
+    let mut reference = vec![0.0f64; n];
+    for (i, r) in reference.iter_mut().enumerate() {
+        *r = blob.get(i);
+    }
+    for begin in 0..=n {
+        for end in begin..=n {
+            let mut out = vec![0.0f64; end - begin];
+            blob.decompress_range(begin, end, &mut out);
+            for (k, v) in out.iter().enumerate() {
+                let want = reference[begin + k];
+                assert!(
+                    v.to_bits() == want.to_bits(),
+                    "{tag}: n={n} range {begin}..{end} idx {}: {v:e} vs {want:e}",
+                    begin + k
+                );
+            }
+        }
+    }
+}
+
+/// Sweep n ∈ 0..16 × the given accuracies; returns the distinct value widths
+/// (bytes per value) that were exercised.
+fn sweep(codec: Codec, eps_list: &[f64], make: impl Fn(usize, u64) -> Vec<f64>) -> BTreeSet<usize> {
+    let mut widths = BTreeSet::new();
+    for (ei, &eps) in eps_list.iter().enumerate() {
+        for n in 0..16 {
+            let data = make(n, (ei * 100 + n) as u64);
+            let blob = Blob::compress(codec, &data, eps);
+            if n > 0 {
+                widths.insert(blob.bytes_per_value());
+            }
+            check_all_ranges(&blob, &format!("{codec:?} eps={eps} n={n}"));
+        }
+    }
+    widths
+}
+
+#[test]
+fn aflp_range_sweep_all_widths() {
+    // narrow-range data keeps e_bits small so eps drives bytes_per across
+    // the whole 1..=8 span; zeros exercise the zero-marker select
+    let eps = [1e-1, 1e-3, 1e-5, 1e-7, 1e-9, 1e-11, 1e-13, 1e-15];
+    let widths = sweep(Codec::Aflp, &eps, |n, seed| {
+        let mut rng = Rng::new(1000 + seed);
+        (0..n).map(|i| if i % 5 == 4 { 0.0 } else { 1.0 + rng.uniform() }).collect()
+    });
+    assert!(widths.len() >= 5, "aflp bytes_per coverage too thin: {widths:?}");
+}
+
+#[test]
+fn aflp_extreme_range_sweep() {
+    // wide dynamic range routes through the generic decode path (e_bits ≥ 11)
+    for n in 1..12usize {
+        let data: Vec<f64> = (0..n)
+            .map(|i| if i % 2 == 0 { 1e-200 * (i + 1) as f64 } else { 1e200 / i as f64 })
+            .collect();
+        let blob = Blob::compress(Codec::Aflp, &data, 1e-4);
+        check_all_ranges(&blob, &format!("aflp wide n={n}"));
+    }
+}
+
+#[test]
+fn aflp_wide_mantissa_sweep() {
+    // eps beyond FP64 precision → m_bits > 52, generic decode path
+    for n in 1..12usize {
+        let data: Vec<f64> = (0..n).map(|i| 1.0 + i as f64 / 16.0).collect();
+        let blob = Blob::compress(Codec::Aflp, &data, 1e-16);
+        check_all_ranges(&blob, &format!("aflp wide-mantissa n={n}"));
+    }
+}
+
+#[test]
+fn fpx32_range_sweep_all_widths() {
+    // FP32 base format: 2, 3 and 4 bytes per value
+    let eps = [1e-2, 1e-4, 1.2e-7];
+    let widths = sweep(Codec::Fpx, &eps, |n, seed| {
+        let mut rng = Rng::new(2000 + seed);
+        (0..n).map(|i| if i % 7 == 6 { 0.0 } else { rng.normal() }).collect()
+    });
+    for w in [2usize, 3, 4] {
+        assert!(widths.contains(&w), "fpx32 width {w} not exercised: {widths:?}");
+    }
+}
+
+#[test]
+fn fpx64_range_sweep_all_widths() {
+    // a 1e40-scale sentinel forces the FP64 base format; eps drives 3..=8
+    let eps = [1e-2, 1e-6, 4e-9, 1.5e-11, 6e-14, 1e-16];
+    let widths = sweep(Codec::Fpx, &eps, |n, seed| {
+        let mut rng = Rng::new(3000 + seed);
+        (0..n).map(|i| if i == 0 { 1.0e40 } else { rng.normal() }).collect()
+    });
+    for w in [3usize, 4, 5, 6, 7, 8] {
+        assert!(widths.contains(&w), "fpx64 width {w} not exercised: {widths:?}");
+    }
+}

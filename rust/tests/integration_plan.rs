@@ -183,30 +183,122 @@ fn compressed_adjoint_close_to_uncompressed() {
     assert!(rel_l2(&z1, &z0) < 1e-6, "h2 compressed adjoint rel {}", rel_l2(&z1, &z0));
 }
 
+/// Acceptance sweep for the gemm-shaped batched schedules: `apply_multi` (and
+/// the adjoint variant) for H, UH and H² must match repeated single-RHS
+/// products to 1e-10, uncompressed and compressed, at several batch widths.
 #[test]
-fn plan_multi_rhs_matches_repeated_single() {
+fn gemm_plan_multi_rhs_matches_single_all_formats_and_configs() {
+    let h0 = build_h(2, 1e-7);
+    let uh0 = hmatc::uniform::build_from_h(&h0, 1e-7, CouplingKind::Combined);
+    let h20 = hmatc::h2::build_from_h(&h0, 1e-7);
+    let n = h0.nrows();
+    let mut rng = Rng::new(907);
+    for (ci, cfg) in configs().iter().enumerate() {
+        let mut h = h0.clone();
+        let mut uh = uh0.clone();
+        let mut h2 = h20.clone();
+        if let Some(c) = cfg {
+            h.compress(c);
+            uh.compress(c);
+            h2.compress(c);
+        }
+        let ops: Vec<Box<dyn HOperator>> = vec![
+            Box::new(PlannedOperator::from_h(Arc::new(h))),
+            Box::new(PlannedOperator::from_uniform(Arc::new(uh))),
+            Box::new(PlannedOperator::from_h2(Arc::new(h2))),
+        ];
+        // several widths: re-balanced LPT packings + panel scratch per width
+        for &nrhs in &[1usize, 3, 5] {
+            let x = DMatrix::random(n, nrhs, &mut rng);
+            for op in &ops {
+                let mut y = DMatrix::zeros(n, nrhs);
+                op.apply_multi(1.25, &x, &mut y);
+                for c in 0..nrhs {
+                    let mut yc = vec![0.0; n];
+                    op.apply(1.25, x.col(c), &mut yc);
+                    let rel = rel_l2(y.col(c), &yc);
+                    assert!(rel < 1e-10, "{} cfg {ci} b={nrhs} col {c}: rel {rel}", op.format_name());
+                }
+                let mut z = DMatrix::zeros(n, nrhs);
+                op.apply_multi_adjoint(0.75, &x, &mut z);
+                for c in 0..nrhs {
+                    let mut zc = vec![0.0; n];
+                    op.apply_adjoint(0.75, x.col(c), &mut zc);
+                    let rel = rel_l2(z.col(c), &zc);
+                    assert!(rel < 1e-10, "{} cfg {ci} b={nrhs} adjoint col {c}: rel {rel}", op.format_name());
+                }
+            }
+        }
+    }
+}
+
+/// The direct (un-planned) trait impls for UH and H² also batch through the
+/// gemm-shaped plan pass — no per-column fallback anywhere.
+#[test]
+fn direct_operator_apply_multi_matches_single() {
     let h = build_h(2, 1e-7);
     let uh = hmatc::uniform::build_from_h(&h, 1e-7, CouplingKind::Combined);
     let h2 = hmatc::h2::build_from_h(&h, 1e-7);
     let n = h.nrows();
     let nrhs = 4;
-    let mut rng = Rng::new(907);
+    let mut rng = Rng::new(913);
     let x = DMatrix::random(n, nrhs, &mut rng);
-
-    let ops: Vec<Box<dyn HOperator>> = vec![
-        Box::new(PlannedOperator::from_h(Arc::new(h))),
-        Box::new(PlannedOperator::from_uniform(Arc::new(uh))),
-        Box::new(PlannedOperator::from_h2(Arc::new(h2))),
-    ];
+    let ops: Vec<Box<dyn HOperator>> = vec![Box::new(h), Box::new(uh), Box::new(h2)];
     for op in &ops {
         let mut y = DMatrix::zeros(n, nrhs);
-        op.apply_multi(1.25, &x, &mut y);
+        op.apply_multi(1.5, &x, &mut y);
         for c in 0..nrhs {
             let mut yc = vec![0.0; n];
-            op.apply(1.25, x.col(c), &mut yc);
+            op.apply(1.5, x.col(c), &mut yc);
             let rel = rel_l2(y.col(c), &yc);
-            assert!(rel < 1e-12, "{} col {c}: rel {rel}", op.format_name());
+            assert!(rel < 1e-10, "{} col {c}: rel {rel}", op.format_name());
         }
+    }
+}
+
+/// Permutation folding: a `PlannedOperator::with_external_ordering` accepts
+/// external-ordering vectors and must match the manual
+/// to_internal → product → to_external chain (forward, adjoint, multi).
+#[test]
+fn external_ordering_fold_matches_manual_permutation() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    let row_ct = h.bt.row_ct.clone();
+    let col_ct = h.bt.col_ct.clone();
+    let op = PlannedOperator::from_h(Arc::new(h.clone())).with_external_ordering();
+    assert!(op.is_external_ordering());
+    let mut rng = Rng::new(914);
+    let x_ext = rng.vector(n);
+
+    // forward, with a nonzero initial y (scatter must ADD, not overwrite)
+    let mut y_ext = vec![0.25; n];
+    op.apply(2.0, &x_ext, &mut y_ext);
+    let xi = col_ct.to_internal(&x_ext);
+    let mut yi = vec![0.0; n];
+    mvm(2.0, &h, &xi, &mut yi, MvmAlgorithm::Seq);
+    let want: Vec<f64> = row_ct.to_external(&yi).iter().map(|v| v + 0.25).collect();
+    assert!(rel_l2(&y_ext, &want) < 1e-12, "forward rel {}", rel_l2(&y_ext, &want));
+
+    // adjoint
+    let mut z_ext = vec![0.0; n];
+    op.apply_adjoint(1.0, &x_ext, &mut z_ext);
+    let xri = row_ct.to_internal(&x_ext);
+    let mut zi = vec![0.0; n];
+    hmatc::mvm::mvm_transposed(1.0, &h, &xri, &mut zi);
+    let wantz = col_ct.to_external(&zi);
+    assert!(rel_l2(&z_ext, &wantz) < 1e-12, "adjoint rel {}", rel_l2(&z_ext, &wantz));
+
+    // batched
+    let nrhs = 3;
+    let xm = DMatrix::random(n, nrhs, &mut rng);
+    let mut ym = DMatrix::zeros(n, nrhs);
+    op.apply_multi(1.0, &xm, &mut ym);
+    for c in 0..nrhs {
+        let xi = col_ct.to_internal(xm.col(c));
+        let mut yi = vec![0.0; n];
+        mvm(1.0, &h, &xi, &mut yi, MvmAlgorithm::Seq);
+        let want = row_ct.to_external(&yi);
+        assert!(rel_l2(ym.col(c), &want) < 1e-12, "multi col {c}");
     }
 }
 
