@@ -7,18 +7,44 @@
 //! sandbox the ordering degenerates to per-algorithm bookkeeping overhead —
 //! the reduction overhead of "thread local" and the lock overhead of
 //! mutex/atomic variants remain visible.
+//!
+//! The plan rows are emitted **once per execution backend** (`plan`,
+//! `plan steal`, `plan sharded:2`) on the same matrix, so the LPT-vs-stealing
+//! comparison lands in `BENCH_fig06.json` directly. `--quick` restricts to
+//! the smallest size and skips the eps sweep (CI smoke).
 
 use hmatc::bench::workloads::{Formats, Problem};
 use hmatc::bench::{bench_fn, default_eps, default_levels, write_bench_json, write_result, Table};
 use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
-use hmatc::plan::{Arena, H2Plan, HPlan, UniPlan};
+use hmatc::plan::{Arena, ExecutorKind, H2Plan, HPlan, UniPlan};
 use hmatc::util::args::Args;
 use hmatc::util::json::Json;
 use hmatc::util::Rng;
 
+/// The backends compared: the LPT baseline, work stealing, two sub-pools.
+fn kinds() -> [ExecutorKind; 3] {
+    ExecutorKind::all(2)
+}
+
+/// Row/key label for a plan row: the baseline keeps the historical "plan"
+/// key so the perf trajectory stays continuous.
+fn plan_label(kind: ExecutorKind) -> String {
+    match kind {
+        ExecutorKind::StaticLpt => "plan".to_string(),
+        other => format!("plan {other}"),
+    }
+}
+
+/// Append a table row and the matching JSON key (`<fmt-prefix><name>`).
+fn push_row(t: &mut Table, doc: &mut Vec<(String, Json)>, fmt: &str, prefix: &str, name: &str, bytes: usize, median: f64) {
+    t.row(vec![fmt.into(), name.into(), hmatc::util::fmt_secs(median), format!("{:.2}", bytes as f64 / median / 1e9)]);
+    doc.push((format!("{prefix}{name}"), median.into()));
+}
+
 fn main() {
     let args = Args::from_env();
-    let levels = default_levels(args.flag("large"));
+    let quick = args.flag("quick");
+    let levels = if quick { vec![2] } else { default_levels(args.flag("large")) };
     let eps = 1e-6;
     let mut out = Vec::new();
 
@@ -32,97 +58,109 @@ fn main() {
 
         println!("\n== Fig. 6: n = {n}, eps = {eps:.0e} ==");
         let mut t = Table::new(&["format", "algorithm", "median", "GB/s"]);
-        let mut doc = vec![("n", Json::from(n))];
+        let mut doc: Vec<(String, Json)> = vec![("n".to_string(), Json::from(n))];
 
         // precomputed layouts/plans are built once (like the paper's setup) —
-        // the enum dispatch in `mvm(..)` would rebuild them per product
+        // the enum dispatch in `mvm(..)` would rebuild them per product.
+        // One plan per execution backend: schedules are packed for it.
         let stacked = hmatc::mvm::hmvm::StackedH::new(&f.h);
-        let h_plan = HPlan::build(&f.h);
-        let uh_plan = UniPlan::build(&f.uh);
-        let h2_plan = H2Plan::build(&f.h2);
+        let h_plans: Vec<(ExecutorKind, HPlan)> = kinds().iter().map(|&k| (k, HPlan::build_with(&f.h, k.build()))).collect();
+        let uh_plans: Vec<(ExecutorKind, UniPlan)> = kinds().iter().map(|&k| (k, UniPlan::build_with(&f.uh, k.build()))).collect();
+        let h2_plans: Vec<(ExecutorKind, H2Plan)> = kinds().iter().map(|&k| (k, H2Plan::build_with(&f.h2, k.build()))).collect();
         let mut arena = Arena::new();
+
         for algo in MvmAlgorithm::all() {
-            let r = match algo {
-                MvmAlgorithm::Stacked => bench_fn(1, 5, 0.02, || hmatc::mvm::hmvm::stacked_with(&stacked, 1.0, &f.h, &x, &mut y)),
-                MvmAlgorithm::Plan => bench_fn(1, 5, 0.02, || h_plan.execute(&f.h, 1.0, &x, &mut y, &mut arena)),
-                _ => bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, algo)),
-            };
-            t.row(vec![
-                "H".into(),
-                algo.name().into(),
-                hmatc::util::fmt_secs(r.median),
-                format!("{:.2}", f.h.byte_size() as f64 / r.median / 1e9),
-            ]);
-            doc.push((algo.name(), r.median.into()));
+            match algo {
+                MvmAlgorithm::Stacked => {
+                    let r = bench_fn(1, 5, 0.02, || hmatc::mvm::hmvm::stacked_with(&stacked, 1.0, &f.h, &x, &mut y));
+                    push_row(&mut t, &mut doc, "H", "", algo.name(), f.h.byte_size(), r.median);
+                }
+                MvmAlgorithm::Plan => {
+                    for (kind, plan) in &h_plans {
+                        let r = bench_fn(1, 5, 0.02, || plan.execute(&f.h, 1.0, &x, &mut y, &mut arena));
+                        push_row(&mut t, &mut doc, "H", "", &plan_label(*kind), f.h.byte_size(), r.median);
+                    }
+                }
+                _ => {
+                    let r = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, algo));
+                    push_row(&mut t, &mut doc, "H", "", algo.name(), f.h.byte_size(), r.median);
+                }
+            }
         }
         for algo in UniMvmAlgorithm::all() {
-            let r = match algo {
-                UniMvmAlgorithm::Plan => bench_fn(1, 5, 0.02, || uh_plan.execute(&f.uh, 1.0, &x, &mut y, &mut arena)),
-                _ => bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, algo)),
-            };
-            t.row(vec![
-                "UH".into(),
-                algo.name().into(),
-                hmatc::util::fmt_secs(r.median),
-                format!("{:.2}", f.uh.byte_size() as f64 / r.median / 1e9),
-            ]);
-            doc.push(match algo {
-                UniMvmAlgorithm::Mutex => ("uh mutex", r.median.into()),
-                UniMvmAlgorithm::RowWise => ("uh row wise", r.median.into()),
-                UniMvmAlgorithm::SepCoupling => ("uh sep coupling", r.median.into()),
-                UniMvmAlgorithm::Plan => ("uh plan", r.median.into()),
-            });
+            match algo {
+                UniMvmAlgorithm::Plan => {
+                    for (kind, plan) in &uh_plans {
+                        let r = bench_fn(1, 5, 0.02, || plan.execute(&f.uh, 1.0, &x, &mut y, &mut arena));
+                        push_row(&mut t, &mut doc, "UH", "uh ", &plan_label(*kind), f.uh.byte_size(), r.median);
+                    }
+                }
+                _ => {
+                    let r = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, algo));
+                    let name = match algo {
+                        UniMvmAlgorithm::Mutex => "mutex",
+                        UniMvmAlgorithm::RowWise => "row wise",
+                        UniMvmAlgorithm::SepCoupling => "sep coupling",
+                        UniMvmAlgorithm::Plan => unreachable!(),
+                    };
+                    push_row(&mut t, &mut doc, "UH", "uh ", name, f.uh.byte_size(), r.median);
+                }
+            }
         }
         for algo in H2MvmAlgorithm::all() {
-            let r = match algo {
-                H2MvmAlgorithm::Plan => bench_fn(1, 5, 0.02, || h2_plan.execute(&f.h2, 1.0, &x, &mut y, &mut arena)),
-                _ => bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, algo)),
-            };
-            t.row(vec![
-                "H2".into(),
-                algo.name().into(),
-                hmatc::util::fmt_secs(r.median),
-                format!("{:.2}", f.h2.byte_size() as f64 / r.median / 1e9),
-            ]);
-            doc.push(match algo {
-                H2MvmAlgorithm::Mutex => ("h2 mutex", r.median.into()),
-                H2MvmAlgorithm::RowWise => ("h2 row wise", r.median.into()),
-                H2MvmAlgorithm::Plan => ("h2 plan", r.median.into()),
-            });
+            match algo {
+                H2MvmAlgorithm::Plan => {
+                    for (kind, plan) in &h2_plans {
+                        let r = bench_fn(1, 5, 0.02, || plan.execute(&f.h2, 1.0, &x, &mut y, &mut arena));
+                        push_row(&mut t, &mut doc, "H2", "h2 ", &plan_label(*kind), f.h2.byte_size(), r.median);
+                    }
+                }
+                _ => {
+                    let r = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, algo));
+                    let name = match algo {
+                        H2MvmAlgorithm::Mutex => "mutex",
+                        H2MvmAlgorithm::RowWise => "row wise",
+                        H2MvmAlgorithm::Plan => unreachable!(),
+                    };
+                    push_row(&mut t, &mut doc, "H2", "h2 ", name, f.h2.byte_size(), r.median);
+                }
+            }
         }
         t.print();
-        out.push(Json::obj(doc));
+        out.push(Json::obj(doc.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()));
     }
 
-    // vs eps at the largest default size
-    let p = Problem::new(*levels.last().unwrap());
+    // vs eps at the largest default size (skipped in --quick)
     let mut eps_out = Vec::new();
-    for &e in &default_eps() {
-        let f = Formats::build(&p, e);
-        let n = p.n();
-        let mut rng = Rng::new(2);
-        let x = rng.vector(n);
-        let mut y = vec![0.0; n];
-        let h_plan = HPlan::build(&f.h);
-        let mut arena = Arena::new();
-        let rh = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists));
-        let rp = bench_fn(1, 5, 0.02, || h_plan.execute(&f.h, 1.0, &x, &mut y, &mut arena));
-        let ru = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise));
-        let r2 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise));
-        println!(
-            "eps {e:.0e}: H {} | H plan {} | UH {} | H2 {}",
-            hmatc::util::fmt_secs(rh.median),
-            hmatc::util::fmt_secs(rp.median),
-            hmatc::util::fmt_secs(ru.median),
-            hmatc::util::fmt_secs(r2.median)
-        );
-        eps_out.push(Json::obj(vec![
-            ("eps", e.into()),
-            ("h", rh.median.into()),
-            ("h plan", rp.median.into()),
-            ("uh", ru.median.into()),
-            ("h2", r2.median.into()),
-        ]));
+    if !quick {
+        let p = Problem::new(*levels.last().unwrap());
+        for &e in &default_eps() {
+            let f = Formats::build(&p, e);
+            let n = p.n();
+            let mut rng = Rng::new(2);
+            let x = rng.vector(n);
+            let mut y = vec![0.0; n];
+            let h_plan = HPlan::build(&f.h);
+            let mut arena = Arena::new();
+            let rh = bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, &x, &mut y, MvmAlgorithm::ClusterLists));
+            let rp = bench_fn(1, 5, 0.02, || h_plan.execute(&f.h, 1.0, &x, &mut y, &mut arena));
+            let ru = bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, &x, &mut y, UniMvmAlgorithm::RowWise));
+            let r2 = bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, &x, &mut y, H2MvmAlgorithm::RowWise));
+            println!(
+                "eps {e:.0e}: H {} | H plan {} | UH {} | H2 {}",
+                hmatc::util::fmt_secs(rh.median),
+                hmatc::util::fmt_secs(rp.median),
+                hmatc::util::fmt_secs(ru.median),
+                hmatc::util::fmt_secs(r2.median)
+            );
+            eps_out.push(Json::obj(vec![
+                ("eps", e.into()),
+                ("h", rh.median.into()),
+                ("h plan", rp.median.into()),
+                ("uh", ru.median.into()),
+                ("h2", r2.median.into()),
+            ]));
+        }
     }
 
     let doc = Json::obj(vec![("vs_n", Json::arr(out)), ("vs_eps", Json::arr(eps_out))]);

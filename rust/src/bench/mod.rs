@@ -7,7 +7,7 @@ mod table;
 pub mod workloads;
 
 pub use roofline::{measure_peak_bandwidth, roofline_point, RooflinePoint};
-pub use runner::{bench_fn, BenchResult};
+pub use runner::{bench_fn, exec_context, BenchResult};
 pub use table::Table;
 
 use crate::util::json::Json;
@@ -19,14 +19,29 @@ pub fn write_result(name: &str, doc: &Json) {
         return;
     }
     let path = dir.join(format!("{name}.json"));
-    let _ = std::fs::write(path, doc.to_string());
+    let _ = std::fs::write(path, with_context(doc).to_string());
 }
 
 /// Write a machine-readable result file `BENCH_<tag>.json` in the working
 /// directory — a stable filename the perf-trajectory tooling scrapes across
-/// runs (in addition to the archive under `bench_results/`).
+/// runs (in addition to the archive under `bench_results/`). Every document
+/// is stamped with the run's `executor` and `threads` ([`exec_context`]) so
+/// rows from different executor/thread configurations stay distinguishable.
 pub fn write_bench_json(tag: &str, doc: &Json) {
-    let _ = std::fs::write(format!("BENCH_{tag}.json"), doc.to_string());
+    let _ = std::fs::write(format!("BENCH_{tag}.json"), with_context(doc).to_string());
+}
+
+/// Stamp `executor` + `threads` into the top level of a result document
+/// (non-object documents are wrapped as `{"data": ..}`).
+fn with_context(doc: &Json) -> Json {
+    let (executor, threads) = exec_context();
+    let mut m = match doc.clone() {
+        Json::Obj(m) => m,
+        other => std::collections::BTreeMap::from([("data".to_string(), other)]),
+    };
+    m.insert("executor".to_string(), Json::Str(executor));
+    m.insert("threads".to_string(), Json::Num(threads as f64));
+    Json::Obj(m)
 }
 
 /// Standard benchmark problem sizes (icosphere levels → n = 20·4^level).

@@ -1,6 +1,16 @@
-//! Timing loop: warmup + sampling with median/MAD statistics.
+//! Timing loop: warmup + sampling with median/MAD statistics, plus the
+//! execution context stamped into every benchmark result file.
 
 use crate::util::{stats, Timer};
+
+/// The run's execution context: default plan-execution backend (from
+/// `HMATC_EXEC`) and total thread count (workers + helping scope thread).
+/// [`crate::bench::write_bench_json`] stamps both into every
+/// `BENCH_*.json` document so perf-trajectory rows are comparable across
+/// executor/thread configurations.
+pub fn exec_context() -> (String, usize) {
+    (crate::plan::ExecutorKind::from_env().to_string(), crate::par::num_threads() + 1)
+}
 
 /// Result of a timed benchmark.
 #[derive(Clone, Debug)]

@@ -12,6 +12,12 @@
 //! `PlannedOperator::with_external_ordering`, requests may be submitted in
 //! the original (external) point ordering — the permutation fold happens
 //! inside the plan execution, not per client.
+//!
+//! The plan-execution backend is likewise the operator's concern: build the
+//! `PlannedOperator` with [`crate::plan::ExecutorKind`] (`--executor` /
+//! `HMATC_EXEC`) to serve on static LPT shards, the work-stealing deques, or
+//! K sharded sub-pools — the server code is identical for all three, and so
+//! are the served results (bitwise).
 
 use super::metrics::Metrics;
 use crate::la::DMatrix;
@@ -212,6 +218,29 @@ mod tests {
             let want = ct.to_external(&yi);
             for i in 0..want.len() {
                 assert!((resp.y[i] - want[i]).abs() < 1e-10, "row {i}: {} vs {}", resp.y[i], want[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn serves_identically_on_every_executor_backend() {
+        // same requests, one server per backend: responses must be bitwise
+        // equal — the executor changes only the thread mapping
+        let h = small_h();
+        let mut rng = Rng::new(164);
+        let xs: Vec<Vec<f64>> = (0..4).map(|_| rng.vector(h.ncols())).collect();
+        let mut per_backend: Vec<Vec<Vec<f64>>> = Vec::new();
+        for kind in crate::plan::ExecutorKind::all(2) {
+            let op = Arc::new(crate::plan::PlannedOperator::from_h_with(h.clone(), kind));
+            assert_eq!(op.executor_name(), kind.to_string());
+            let server = MvmServer::start(op, BatchPolicy::default());
+            per_backend.push(xs.iter().map(|x| server.call(x.clone()).y).collect());
+        }
+        for ys in &per_backend[1..] {
+            for (a, b) in ys.iter().zip(&per_backend[0]) {
+                for (va, vb) in a.iter().zip(b) {
+                    assert_eq!(va.to_bits(), vb.to_bits());
+                }
             }
         }
     }

@@ -12,10 +12,14 @@
 //! * the error-adaptive floating point codecs of §4 — AFLP, FPX and the
 //!   per-column VALR scheme — in [`compress`];
 //! * every matrix-vector multiplication algorithm of §3/§4 (Algorithms 1–8)
-//!   in [`mvm`], running on a custom work-stealing fork-join pool ([`par`]);
+//!   in [`mvm`], running on a custom fork-join substrate ([`par`]): a
+//!   work-sharing scoped thread pool plus a Chase–Lev-deque work-stealing
+//!   layer on top;
 //! * a format-agnostic execution-[`plan`] layer: an operator trait over all
-//!   three formats plus precomputed, statically load-balanced task schedules
-//!   with zero steady-state allocation;
+//!   three formats plus precomputed task schedules with zero steady-state
+//!   allocation, executed by a pluggable backend
+//!   ([`plan::Executor`]: static LPT `lpt`, work-stealing `steal`, or
+//!   sub-pool `sharded:K` — `HMATC_EXEC` / `--executor`);
 //! * a PJRT [`runtime`] that executes AOT-lowered JAX/Pallas tile kernels and
 //!   a request-batching MVM server in [`coordinator`];
 //! * the measurement substrate ([`bench`]) used by the per-figure benchmark

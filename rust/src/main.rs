@@ -4,10 +4,15 @@
 //! hmatc info
 //! hmatc build   --level 4 --eps 1e-6 [--fmt h|uh|h2] [--codec aflp|fpx] [--compress]
 //! hmatc mvm     --level 4 --eps 1e-6 --fmt h2 --algo "row wise" [--compress --codec aflp]
-//! hmatc serve   --level 4 --eps 1e-6 --requests 256 --batch 8 [--fmt h|uh|h2] [--plan] [--compress]
+//! hmatc serve   --level 4 --eps 1e-6 --requests 256 --batch 8 [--fmt h|uh|h2] [--plan]
+//!               [--executor lpt|steal|sharded:K] [--compress]
 //! hmatc solve   --level 3 --eps 1e-6 [--compress]
 //! hmatc roofline
 //! ```
+//!
+//! `--executor` (default: `HMATC_EXEC`, else `lpt`) picks the plan-execution
+//! backend behind `--plan`: static LPT shards, work stealing, or K sharded
+//! sub-pools.
 
 use hmatc::bench::{bench_fn, measure_peak_bandwidth};
 use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
@@ -18,7 +23,7 @@ use hmatc::hmatrix::HMatrix;
 use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
 use hmatc::lowrank::AcaOptions;
 use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
-use hmatc::plan::{HOperator, PlannedOperator};
+use hmatc::plan::{ExecutorKind, HOperator, PlannedOperator};
 use hmatc::solver::cg;
 use hmatc::util::args::Args;
 use hmatc::util::{fmt_bytes, fmt_secs, Rng, Timer};
@@ -44,6 +49,7 @@ fn main() {
 fn info() {
     println!("hmatc — compressed hierarchical matrix formats (H / UH / H²)");
     println!("threads: {}", hmatc::par::num_threads() + 1);
+    println!("executor: {} (HMATC_EXEC=lpt|steal|sharded:K)", ExecutorKind::from_env());
     #[cfg(feature = "pjrt")]
     {
         match hmatc::runtime::PjrtEngine::new(hmatc::runtime::DEFAULT_ARTIFACTS_DIR) {
@@ -196,9 +202,11 @@ fn serve_cmd(args: &Args) {
     let h = build_h(args, &p);
     let eps = args.num_or("eps", 1e-6f64);
     // any format serves through the HOperator trait; --plan puts the
-    // precomputed zero-allocation schedule executor in front of it
+    // precomputed zero-allocation schedule executor in front of it, and
+    // --executor picks the backend the schedules run on
     let fmt = args.str_or("fmt", "h");
     let plan = args.flag("plan");
+    let kind = args.parse_or("executor", ExecutorKind::from_env());
     let op: Arc<dyn HOperator> = match fmt.as_str() {
         "h" => {
             let mut h = h;
@@ -207,7 +215,7 @@ fn serve_cmd(args: &Args) {
             }
             let h = Arc::new(h);
             if plan {
-                Arc::new(PlannedOperator::from_h(h))
+                Arc::new(PlannedOperator::from_h_with(h, kind))
             } else {
                 h
             }
@@ -219,7 +227,7 @@ fn serve_cmd(args: &Args) {
             }
             let uh = Arc::new(uh);
             if plan {
-                Arc::new(PlannedOperator::from_uniform(uh))
+                Arc::new(PlannedOperator::from_uniform_with(uh, kind))
             } else {
                 uh
             }
@@ -231,7 +239,7 @@ fn serve_cmd(args: &Args) {
             }
             let h2 = Arc::new(h2);
             if plan {
-                Arc::new(PlannedOperator::from_h2(h2))
+                Arc::new(PlannedOperator::from_h2_with(h2, kind))
             } else {
                 h2
             }
@@ -241,7 +249,11 @@ fn serve_cmd(args: &Args) {
             std::process::exit(2);
         }
     };
-    println!("serving {} operator ({})", op.format_name(), fmt_bytes(op.byte_size()));
+    if plan {
+        println!("serving {} operator ({}), executor {kind}", op.format_name(), fmt_bytes(op.byte_size()));
+    } else {
+        println!("serving {} operator ({})", op.format_name(), fmt_bytes(op.byte_size()));
+    }
     let nreq = args.num_or("requests", 256usize);
     let batch = args.num_or("batch", 8usize);
     let n = op.ncols();

@@ -121,7 +121,10 @@ impl StackedH {
                         dense.push(b);
                         None
                     }
-                    None => panic!("missing leaf"),
+                    None => {
+                        let nd = bt.node(b);
+                        panic!("stacked layout build: missing leaf data for block {b} (row cluster {}, col cluster {})", nd.row, nd.col)
+                    }
                 };
                 if let Some(lr) = lr {
                     let cr = bt.col_ct.node(bt.node(b).col).range();

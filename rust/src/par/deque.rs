@@ -1,0 +1,191 @@
+//! Chase–Lev-style work-stealing deque over plan-chunk indices.
+//!
+//! The stealing executor never migrates *closures* — a level's work is a
+//! precomputed list of task chunks, so the unit of stealing is just a `usize`
+//! chunk index. That keeps the deque a fixed array of atomics (no boxed jobs,
+//! no garbage): the owner pushes all indices up front, pops from the bottom,
+//! thieves take from the top with a CAS. Memory ordering follows the C11
+//! formulation of Lê, Pop, Cohen, Nardelli, *"Correct and Efficient
+//! Work-Stealing for Weak Memory Models"* (PPoPP 2013).
+
+use std::sync::atomic::{fence, AtomicIsize, AtomicUsize, Ordering};
+
+/// Result of a steal attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Steal {
+    /// Took this item from the top.
+    Taken(usize),
+    /// Deque observed empty.
+    Empty,
+    /// Lost a race with the owner or another thief; worth retrying.
+    Retry,
+}
+
+/// A fixed-capacity work-stealing deque of `usize` items.
+///
+/// Ownership protocol: exactly one thread (the *owner*) calls [`WorkDeque::push`]
+/// and [`WorkDeque::pop`]; any thread may call [`WorkDeque::steal`].
+/// [`WorkDeque::reset`] requires external synchronization (no concurrent
+/// access) — the executor resets between barrier-separated levels, after all
+/// workers of the previous level have joined.
+pub struct WorkDeque {
+    buf: Box<[AtomicUsize]>,
+    mask: usize,
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+}
+
+impl WorkDeque {
+    /// A deque able to hold at least `cap` items (rounded up to a power of
+    /// two; the buffer never grows — size for the largest level up front).
+    pub fn with_capacity(cap: usize) -> WorkDeque {
+        let cap = cap.next_power_of_two().max(4);
+        let buf: Vec<AtomicUsize> = (0..cap).map(|_| AtomicUsize::new(0)).collect();
+        WorkDeque { buf: buf.into_boxed_slice(), mask: cap - 1, top: AtomicIsize::new(0), bottom: AtomicIsize::new(0) }
+    }
+
+    /// Maximum number of items the deque can hold.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Empty the deque. Caller must guarantee no concurrent access (between
+    /// levels, all workers joined).
+    pub fn reset(&self) {
+        self.top.store(0, Ordering::Relaxed);
+        self.bottom.store(0, Ordering::Relaxed);
+    }
+
+    /// Owner-side push onto the bottom. Panics if the deque is full — the
+    /// executor sizes deques for the whole level before seeding.
+    pub fn push(&self, item: usize) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        assert!((b - t) < self.buf.len() as isize, "WorkDeque overflow (capacity {})", self.buf.len());
+        self.buf[(b as usize) & self.mask].store(item, Ordering::Relaxed);
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Release);
+    }
+
+    /// Owner-side pop from the bottom (LIFO: best cache locality for the
+    /// owner's own chunks).
+    pub fn pop(&self) -> Option<usize> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let item = self.buf[(b as usize) & self.mask].load(Ordering::Relaxed);
+            if t == b {
+                // last item: race against thieves for it
+                let won = self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                if won {
+                    Some(item)
+                } else {
+                    None
+                }
+            } else {
+                Some(item)
+            }
+        } else {
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Thief-side steal from the top (FIFO: takes the chunk the owner would
+    /// reach last).
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t < b {
+            let item = self.buf[(t as usize) & self.mask].load(Ordering::Relaxed);
+            if self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok() {
+                Steal::Taken(item)
+            } else {
+                Steal::Retry
+            }
+        } else {
+            Steal::Empty
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize as Counter;
+
+    #[test]
+    fn owner_lifo_order() {
+        let d = WorkDeque::with_capacity(8);
+        for i in 0..5 {
+            d.push(i);
+        }
+        for want in (0..5).rev() {
+            assert_eq!(d.pop(), Some(want));
+        }
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.pop(), None); // empty pop is idempotent
+    }
+
+    #[test]
+    fn thief_fifo_order() {
+        let d = WorkDeque::with_capacity(8);
+        for i in 0..5 {
+            d.push(i);
+        }
+        for want in 0..5 {
+            assert_eq!(d.steal(), Steal::Taken(want));
+        }
+        assert_eq!(d.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn reset_reuses_buffer() {
+        let d = WorkDeque::with_capacity(4);
+        d.push(1);
+        d.push(2);
+        assert_eq!(d.pop(), Some(2));
+        d.reset();
+        assert_eq!(d.pop(), None);
+        d.push(9);
+        assert_eq!(d.steal(), Steal::Taken(9));
+    }
+
+    #[test]
+    fn concurrent_pop_and_steal_take_each_item_once() {
+        // hammer the owner-vs-thief race: every item taken exactly once
+        for round in 0..50 {
+            let n = 64 + round;
+            let d = WorkDeque::with_capacity(n);
+            for i in 0..n {
+                d.push(i);
+            }
+            let seen: Vec<Counter> = (0..n).map(|_| Counter::new(0)).collect();
+            std::thread::scope(|s| {
+                // two thieves
+                for _ in 0..2 {
+                    s.spawn(|| loop {
+                        match d.steal() {
+                            Steal::Taken(i) => {
+                                seen[i].fetch_add(1, Ordering::Relaxed);
+                            }
+                            Steal::Retry => std::hint::spin_loop(),
+                            Steal::Empty => break,
+                        }
+                    });
+                }
+                // the owner pops
+                while let Some(i) = d.pop() {
+                    seen[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, c) in seen.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "item {i} taken {} times", c.load(Ordering::Relaxed));
+            }
+        }
+    }
+}

@@ -2,15 +2,26 @@
 //!
 //! The sandbox has no rayon/TBB, and the paper's parallel MVM algorithms
 //! (Alg. 3, 5, 7) are precisely *task scheduling* algorithms, so the pool is a
-//! first-class substrate here: a fixed set of workers, a shared injector
-//! queue, and a help-first scoped fork-join API (waiters execute queued tasks
-//! instead of blocking, so recursive spawning can never deadlock).
+//! first-class substrate here. Two layers:
+//!
+//! * [`ThreadPool`] — a **work-sharing** pool: a fixed set of workers, one
+//!   shared injector queue, and a help-first scoped fork-join API (waiters
+//!   execute queued tasks instead of blocking, so recursive spawning can
+//!   never deadlock).
+//! * [`StealSet`] + [`deque::WorkDeque`] — a **work-stealing** layer on top:
+//!   per-slot Chase–Lev deques of precomputed chunk indices drained by one
+//!   worker loop per slot, with top-end steals for dynamic rebalancing.
+//!
+//! Which layer executes a plan is chosen per operator through
+//! [`crate::plan::Executor`] (`HMATC_EXEC` / `--executor`).
 
 pub mod atomic;
+pub mod deque;
 pub mod pool;
 
 pub use atomic::{as_atomic_f64, atomic_add_f64};
-pub use pool::{parallel_for, Scope, ThreadPool};
+pub use deque::{Steal, WorkDeque};
+pub use pool::{parallel_for, Scope, StealSet, ThreadPool};
 
 /// Number of worker threads used by the global pool.
 pub fn num_threads() -> usize {

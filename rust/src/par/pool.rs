@@ -1,15 +1,26 @@
-//! Work-sharing fork-join thread pool with a scoped spawn API.
+//! **Work-sharing** fork-join thread pool with a scoped spawn API, plus the
+//! work-stealing execution layer built on top of it.
 //!
-//! Design: one global injector deque (mutex + condvar) served by N workers.
+//! [`ThreadPool`] itself is deliberately a *shared-queue* (work-sharing)
+//! pool: one global injector queue (mutex + condvar) served by N workers.
 //! [`ThreadPool::scope`] provides structured parallelism: tasks may borrow
 //! from the enclosing stack frame because `scope` does not return until every
 //! spawned task has completed. While waiting, the scoping thread *helps*:
 //! it pops and runs queued tasks, so even `ThreadPool::new(0)` makes progress
-//! and recursive spawns cannot deadlock.
+//! and recursive spawns cannot deadlock. The queue lock is not a bottleneck
+//! below ~10⁶ tasks/s — and the plan executors spawn only one task per shard
+//! or per worker slot, far below that.
 //!
-//! Granularity guidance: tasks should be ≥ a few µs (one H-matrix block row
-//! easily qualifies); the queue lock is not a bottleneck below ~10⁶ tasks/s.
+//! **Work stealing** is layered on top as [`StealSet`]: per-slot Chase–Lev
+//! deques ([`crate::par::deque`]) seeded with precomputed chunk indices, and
+//! one long-running *worker-loop task per slot* spawned into a
+//! `ThreadPool::scope`. Each loop drains its own deque bottom-first, then
+//! steals from the other slots' tops — real dynamic rebalancing for workloads
+//! whose per-chunk runtimes vary (codec decode times do), not just a shared
+//! queue. The plan layer selects between the static and stealing backends
+//! through [`crate::plan::Executor`] (`HMATC_EXEC` / `--executor`).
 
+use super::deque::{Steal, WorkDeque};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -244,6 +255,102 @@ where
     }
 }
 
+/// A reusable set of per-slot work-stealing deques plus the stealing worker
+/// loops that drain them.
+///
+/// [`StealSet::run`] executes items `0..nitems` exactly once each on `pool`,
+/// with up to `nslots` concurrently running worker loops. Items are seeded
+/// round-robin across the slots' deques; a loop that drains its own deque
+/// steals from the others, so dynamic imbalance (variable per-item runtimes)
+/// is absorbed without a shared queue. `f(slot, item)` receives the worker
+/// slot id so callers can hand each slot private scratch storage.
+///
+/// Deques are retained (and only ever grow) across calls: steady-state
+/// execution allocates nothing.
+#[derive(Default)]
+pub struct StealSet {
+    deques: Vec<WorkDeque>,
+}
+
+impl StealSet {
+    pub fn new() -> StealSet {
+        StealSet::default()
+    }
+
+    /// Run `f(slot, item)` for every `item` in `0..nitems`, each exactly
+    /// once, with at most `nslots` concurrent invocations; invocations with
+    /// the same `slot` never run concurrently. Returns after all items have
+    /// completed (fork-join barrier). Takes `&mut self` so one `StealSet` is
+    /// never shared by two overlapping runs.
+    pub fn run(&mut self, pool: &ThreadPool, nslots: usize, nitems: usize, f: impl Fn(usize, usize) + Sync) {
+        if nitems == 0 {
+            return;
+        }
+        let nslots = nslots.clamp(1, nitems);
+        let per_slot = nitems.div_ceil(nslots);
+        if self.deques.len() < nslots {
+            self.deques.resize_with(nslots, || WorkDeque::with_capacity(per_slot));
+        }
+        for d in &mut self.deques[..nslots] {
+            if d.capacity() < per_slot {
+                *d = WorkDeque::with_capacity(per_slot);
+            }
+        }
+        // seed round-robin: LPT packing gives the caller's items roughly
+        // equal costs, so this starts every slot with a comparable share
+        // before any stealing (no ordering contract on the items themselves)
+        for d in &self.deques[..nslots] {
+            d.reset();
+        }
+        for item in 0..nitems {
+            self.deques[item % nslots].push(item);
+        }
+        let deques: &[WorkDeque] = &self.deques[..nslots];
+        let f = &f;
+        pool.scope(|s| {
+            // every slot is a pool task (panics stay inside the scope); the
+            // scoping thread picks one up through help-first waiting, so a
+            // zero-worker pool still progresses
+            for slot in 0..nslots {
+                s.spawn(move |_| steal_loop(deques, slot, f));
+            }
+        });
+    }
+}
+
+/// One stealing worker loop: drain the own deque, then sweep the other slots
+/// for steals; exit when every deque is observed empty with no lost race.
+fn steal_loop(deques: &[WorkDeque], slot: usize, f: &(impl Fn(usize, usize) + Sync)) {
+    let n = deques.len();
+    loop {
+        while let Some(item) = deques[slot].pop() {
+            f(slot, item);
+        }
+        let mut stolen = None;
+        let mut raced = false;
+        for off in 1..n {
+            match deques[(slot + off) % n].steal() {
+                Steal::Taken(item) => {
+                    stolen = Some(item);
+                    break;
+                }
+                Steal::Retry => raced = true,
+                Steal::Empty => {}
+            }
+        }
+        match stolen {
+            Some(item) => f(slot, item),
+            // a lost CAS race means another thread is still making progress —
+            // the item it took may spawn nothing, but its deque sibling might
+            // still hold work; spin once more
+            None if raced => std::thread::yield_now(),
+            // every deque empty and no race lost: the level is drained (items
+            // are only seeded before the loops start, never re-pushed)
+            None => return,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,5 +444,52 @@ mod tests {
         pool.scope(|s| {
             s.spawn(|_| panic!("boom"));
         });
+    }
+
+    #[test]
+    fn steal_set_runs_every_item_once() {
+        let pool = ThreadPool::new(3);
+        let mut set = StealSet::new();
+        for &(nslots, nitems) in &[(1usize, 1usize), (4, 7), (4, 100), (8, 3)] {
+            let hits: Vec<AtomicUsize> = (0..nitems).map(|_| AtomicUsize::new(0)).collect();
+            set.run(&pool, nslots, nitems, |_slot, item| {
+                hits[item].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "item {i} ({nslots} slots, {nitems} items)");
+            }
+        }
+    }
+
+    #[test]
+    fn steal_set_slots_never_overlap() {
+        // per-slot counters are mutated WITHOUT atomics through raw pointers:
+        // any two concurrent invocations with the same slot id would race and
+        // lose increments (caught under sum check below, and by miri/tsan)
+        let pool = ThreadPool::new(4);
+        let nslots = 6usize;
+        let mut per_slot = vec![0u64; nslots];
+        struct Cell(*mut u64);
+        unsafe impl Send for Cell {}
+        unsafe impl Sync for Cell {}
+        let cells: Vec<Cell> = per_slot.iter_mut().map(|c| Cell(c as *mut u64)).collect();
+        let mut set = StealSet::new();
+        set.run(&pool, nslots, 500, |slot, _item| {
+            // SAFETY: StealSet guarantees one live invocation per slot
+            unsafe { *cells[slot].0 += 1 };
+        });
+        drop(cells);
+        assert_eq!(per_slot.iter().sum::<u64>(), 500);
+    }
+
+    #[test]
+    fn steal_set_zero_worker_pool_progresses() {
+        let pool = ThreadPool::new(0);
+        let mut set = StealSet::new();
+        let count = AtomicUsize::new(0);
+        set.run(&pool, 5, 37, |_s, _i| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 37);
     }
 }

@@ -17,14 +17,21 @@
 //! are rescaled by `b` for LPT balancing (matrix bytes amortize across the
 //! batch, vector traffic scales with it); the per-width shard packings are
 //! cached, so steady-state batched execution allocates nothing.
+//!
+//! **Execution backends**: *how* a level's shards are mapped onto threads is
+//! delegated to the plan's [`Executor`] (static LPT shards, work stealing, or
+//! K sharded sub-pools — see [`super::executor`]). The schedules are built
+//! *for* their executor: the shard/chunk count comes from
+//! [`Executor::shard_count`], so the packing each backend executes is
+//! precomputed and steady-state products allocate nothing on any backend.
 
 use super::arena::Arena;
-use super::schedule::{balance, block_cost_split, default_shards, uni_block_cost_split, Shard};
+use super::executor::{Executor, ExecutorKind};
+use super::schedule::{balance, block_cost_split, uni_block_cost_split, Shard};
 use crate::h2::H2Matrix;
 use crate::hmatrix::HMatrix;
 use crate::la::{blas, DMatrix};
 use crate::mvm::{kernels, SharedVec};
-use crate::par::ThreadPool;
 use crate::uniform::{UniBlock, UniformHMatrix};
 use std::ops::Range;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -140,12 +147,15 @@ struct HSchedule {
     levels: Vec<Vec<Shard>>,
     /// Per-batch-width panel shard packings.
     multi: MultiCache<Vec<Vec<Shard>>>,
+    /// Shard/chunk bin count the packings were built for (from the
+    /// executor; reused for the cached per-width packings).
+    nshards: usize,
     max_shards: usize,
     scratch: usize,
 }
 
 impl HSchedule {
-    fn build(m: &HMatrix, adjoint: bool) -> HSchedule {
+    fn build(m: &HMatrix, adjoint: bool, exec: &dyn Executor) -> HSchedule {
         let bt = &m.bt;
         let (ct, other_ct, lists) = if adjoint {
             (&bt.col_ct, &bt.row_ct, &bt.col_blocks)
@@ -170,7 +180,9 @@ impl HSchedule {
             for &b in blocks {
                 let nd = bt.node(b);
                 let src = if adjoint { other_ct.node(nd.row).range() } else { other_ct.node(nd.col).range() };
-                let blk = m.blocks[b].as_ref().expect("missing leaf");
+                let blk = m.blocks[b].as_ref().unwrap_or_else(|| {
+                    panic!("H plan build: missing leaf data for block {b} (row cluster {}, col cluster {})", nd.row, nd.col)
+                });
                 let (f, v) = block_cost_split(blk);
                 fx += f;
                 vr += v;
@@ -189,39 +201,31 @@ impl HSchedule {
             level_ids[ct.node(tau).level].push(id);
         }
         let level_ids: Vec<Vec<usize>> = level_ids.into_iter().filter(|ids| !ids.is_empty()).collect();
-        let nshards = default_shards();
+        let nshards = exec.shard_count();
         let costs: Vec<f64> = fixed.iter().zip(&per_rhs).map(|(f, v)| f + v).collect();
         let levels: Vec<Vec<Shard>> =
             level_ids.iter().map(|ids| balance_level(ids, &costs, &scratch1, nshards)).collect();
         let (max_shards, scratch) = max_shard_stats(&levels);
-        HSchedule { tasks, level_ids, fixed, per_rhs, pscratch, levels, multi: MultiCache::new(), max_shards, scratch }
+        HSchedule { tasks, level_ids, fixed, per_rhs, pscratch, levels, multi: MultiCache::new(), nshards, max_shards, scratch }
     }
 
-    fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
-        arena.ensure(self.max_shards, self.scratch, 0, 0);
+    fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor) {
+        arena.ensure(exec.buffers_needed(self.max_shards), self.scratch, 0, 0);
         let (bufs, _, _) = arena.split();
         let yy = SharedVec::new(y);
-        let pool = ThreadPool::global();
         for level in &self.levels {
-            pool.scope(|s| {
-                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
-                    let yy = yy;
-                    s.spawn(move |_| {
-                        for &ti in &shard.tasks {
-                            let task = &self.tasks[ti];
-                            // SAFETY: same-level clusters are disjoint; levels
-                            // are separated by join barriers (parents first).
-                            let yt = unsafe { yy.range_mut(task.dst.clone()) };
-                            for (b, src) in &task.blocks {
-                                let blk = m.blocks[*b].as_ref().expect("missing leaf");
-                                if adjoint {
-                                    kernels::apply_block_transposed_scratch(alpha, blk, &x[src.clone()], yt, buf);
-                                } else {
-                                    kernels::apply_block_scratch(alpha, blk, &x[src.clone()], yt, buf);
-                                }
-                            }
-                        }
-                    });
+            exec.run_level(level, bufs, &|ti, buf| {
+                let task = &self.tasks[ti];
+                // SAFETY: same-level clusters are disjoint; levels are
+                // separated by join barriers (parents first).
+                let yt = unsafe { yy.range_mut(task.dst.clone()) };
+                for (b, src) in &task.blocks {
+                    let blk = m.blocks[*b].as_ref().expect("missing leaf");
+                    if adjoint {
+                        kernels::apply_block_transposed_scratch(alpha, blk, &x[src.clone()], yt, buf);
+                    } else {
+                        kernels::apply_block_scratch(alpha, blk, &x[src.clone()], yt, buf);
+                    }
                 }
             });
         }
@@ -230,52 +234,43 @@ impl HSchedule {
     /// Gemm-shaped batched execution: every task gathers its disjoint y rows
     /// into a contiguous `rows×b` panel, each block's (possibly compressed)
     /// data is streamed once and applied to all `b` columns.
-    fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+    fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor) {
         let ylen = y.nrows();
         let nrhs = y.ncols();
-        let nshards = default_shards();
         let levels = self
             .multi
-            .get(nrhs, || balance_levels_for(&self.level_ids, &self.fixed, &self.per_rhs, &self.pscratch, nrhs, nshards));
+            .get(nrhs, || balance_levels_for(&self.level_ids, &self.fixed, &self.per_rhs, &self.pscratch, nrhs, self.nshards));
         let (max_shards, scratch) = max_shard_stats(&levels);
-        arena.ensure(max_shards, scratch, 0, 0);
+        arena.ensure(exec.buffers_needed(max_shards), scratch, 0, 0);
         let (bufs, _, _) = arena.split();
         let yy = SharedVec::new(y.data_mut());
-        let pool = ThreadPool::global();
         for level in levels.iter() {
-            pool.scope(|s| {
-                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
-                    let yy = yy;
-                    s.spawn(move |_| {
-                        for &ti in &shard.tasks {
-                            let task = &self.tasks[ti];
-                            let dl = task.dst.len();
-                            let (yp, rest) = buf.split_at_mut(dl * nrhs);
-                            // gather the task's disjoint y rows into a panel
-                            for c in 0..nrhs {
-                                // SAFETY: same-level clusters are disjoint;
-                                // levels are barrier separated (per column).
-                                let src = unsafe { yy.range(c * ylen + task.dst.start..c * ylen + task.dst.end) };
-                                yp[c * dl..(c + 1) * dl].copy_from_slice(src);
-                            }
-                            for (b, src) in &task.blocks {
-                                let blk = m.blocks[*b].as_ref().expect("missing leaf");
-                                let sl = src.len();
-                                let (xp, kscratch) = rest.split_at_mut(sl * nrhs);
-                                gather_panel(x, src, xp);
-                                if adjoint {
-                                    kernels::apply_block_panel_transposed(alpha, blk, xp, yp, nrhs, kscratch);
-                                } else {
-                                    kernels::apply_block_panel(alpha, blk, xp, yp, nrhs, kscratch);
-                                }
-                            }
-                            for c in 0..nrhs {
-                                // SAFETY: as above.
-                                let dst = unsafe { yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end) };
-                                dst.copy_from_slice(&yp[c * dl..(c + 1) * dl]);
-                            }
-                        }
-                    });
+            exec.run_level(level, bufs, &|ti, buf| {
+                let task = &self.tasks[ti];
+                let dl = task.dst.len();
+                let (yp, rest) = buf.split_at_mut(dl * nrhs);
+                // gather the task's disjoint y rows into a panel
+                for c in 0..nrhs {
+                    // SAFETY: same-level clusters are disjoint; levels are
+                    // barrier separated (per column).
+                    let src = unsafe { yy.range(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                    yp[c * dl..(c + 1) * dl].copy_from_slice(src);
+                }
+                for (b, src) in &task.blocks {
+                    let blk = m.blocks[*b].as_ref().expect("missing leaf");
+                    let sl = src.len();
+                    let (xp, kscratch) = rest.split_at_mut(sl * nrhs);
+                    gather_panel(x, src, xp);
+                    if adjoint {
+                        kernels::apply_block_panel_transposed(alpha, blk, xp, yp, nrhs, kscratch);
+                    } else {
+                        kernels::apply_block_panel(alpha, blk, xp, yp, nrhs, kscratch);
+                    }
+                }
+                for c in 0..nrhs {
+                    // SAFETY: as above.
+                    let dst = unsafe { yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                    dst.copy_from_slice(&yp[c * dl..(c + 1) * dl]);
                 }
             });
         }
@@ -286,7 +281,12 @@ impl HSchedule {
 /// schedules are independent halves, built on first use — [`HPlan::build`]
 /// pre-builds the forward half (the serving hot path), [`HPlan::lazy`]
 /// builds nothing until executed (the one-shot dispatch paths).
+///
+/// The plan owns its [`Executor`]; schedules are packed for that backend at
+/// build time ([`HPlan::build_with`] / [`HPlan::lazy_with`] select one, the
+/// plain constructors take [`ExecutorKind::from_env`]).
 pub struct HPlan {
+    exec: Arc<dyn Executor>,
     fwd: OnceLock<HSchedule>,
     adj: OnceLock<HSchedule>,
     nrows: usize,
@@ -295,36 +295,51 @@ pub struct HPlan {
 
 impl HPlan {
     pub fn build(m: &HMatrix) -> HPlan {
-        let plan = HPlan::lazy(m);
-        plan.fwd.get_or_init(|| HSchedule::build(m, false));
+        HPlan::build_with(m, ExecutorKind::from_env().build())
+    }
+
+    /// Build the forward half up front on the given backend.
+    pub fn build_with(m: &HMatrix, exec: Arc<dyn Executor>) -> HPlan {
+        let plan = HPlan::lazy_with(m, exec);
+        plan.fwd.get_or_init(|| HSchedule::build(m, false, &*plan.exec));
         plan
     }
 
     /// A plan whose schedule halves are built on first execution.
     pub fn lazy(m: &HMatrix) -> HPlan {
-        HPlan { fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+        HPlan::lazy_with(m, ExecutorKind::from_env().build())
+    }
+
+    /// Lazy plan on the given backend.
+    pub fn lazy_with(m: &HMatrix, exec: Arc<dyn Executor>) -> HPlan {
+        HPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+    }
+
+    /// Backend name (logs / bench rows).
+    pub fn executor_name(&self) -> String {
+        self.exec.name()
     }
 
     fn fwd(&self, m: &HMatrix) -> &HSchedule {
-        self.fwd.get_or_init(|| HSchedule::build(m, false))
+        self.fwd.get_or_init(|| HSchedule::build(m, false, &*self.exec))
     }
 
     fn adj(&self, m: &HMatrix) -> &HSchedule {
-        self.adj.get_or_init(|| HSchedule::build(m, true))
+        self.adj.get_or_init(|| HSchedule::build(m, true, &*self.exec))
     }
 
     /// y += alpha · M · x.
     pub fn execute(&self, m: &HMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        self.fwd(m).exec(m, false, alpha, x, y, arena);
+        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec);
     }
 
     /// y += alpha · Mᵀ · x.
     pub fn execute_adjoint(&self, m: &HMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols);
-        self.adj(m).exec(m, true, alpha, x, y, arena);
+        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec);
     }
 
     /// Y += alpha · M · X (column-major multivectors, gemm-shaped tasks).
@@ -332,7 +347,7 @@ impl HPlan {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        self.fwd(m).exec_multi(m, false, alpha, x, y, arena);
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec);
     }
 
     /// Y += alpha · Mᵀ · X (column-major multivectors, gemm-shaped tasks).
@@ -340,7 +355,7 @@ impl HPlan {
         assert_eq!(x.nrows(), self.nrows);
         assert_eq!(y.nrows(), self.ncols);
         assert_eq!(x.ncols(), y.ncols());
-        self.adj(m).exec_multi(m, true, alpha, x, y, arena);
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec);
     }
 
     /// Aggregate over the schedule halves built so far.
@@ -450,13 +465,15 @@ struct UniSchedule {
     levels: Vec<Vec<Shard>>,
     /// Per-batch-width (forward shards, level shards) packings.
     multi: MultiCache<(Vec<Shard>, Vec<Vec<Shard>>)>,
+    /// Shard/chunk bin count the packings were built for.
+    nshards: usize,
     s_len: usize,
     max_shards: usize,
     scratch: usize,
 }
 
 impl UniSchedule {
-    fn build(m: &UniformHMatrix, adjoint: bool) -> UniSchedule {
+    fn build(m: &UniformHMatrix, adjoint: bool, exec: &dyn Executor) -> UniSchedule {
         let bt = &m.bt;
         let (in_ct, in_basis, out_ct, out_basis, out_lists) = if adjoint {
             (&bt.row_ct, &m.row_basis, &bt.col_ct, &m.col_basis, &bt.col_blocks)
@@ -484,7 +501,7 @@ impl UniSchedule {
             ftasks.push(CoeffTask { cluster: sigma, src, off: s_len, len: k });
             s_len += k;
         }
-        let nshards = default_shards();
+        let nshards = exec.shard_count();
         let fscratch = vec![0usize; ffixed.len()];
         let fcosts: Vec<f64> = ffixed.iter().zip(&fper_rhs).map(|(f, v)| f + v).collect();
         let fshards = balance(&fcosts, &fscratch, nshards);
@@ -511,23 +528,25 @@ impl UniSchedule {
             for &b in blocks {
                 let nd = bt.node(b);
                 let in_cluster = if adjoint { nd.row } else { nd.col };
-                let (f, v) = uni_block_cost_split(m.blocks[b].as_ref().expect("missing leaf"));
-                match m.blocks[b].as_ref() {
-                    Some(UniBlock::Coupling(c)) => {
+                let blk = m.blocks[b].as_ref().unwrap_or_else(|| {
+                    panic!("UH plan build: missing leaf data for block {b} (row cluster {}, col cluster {})", nd.row, nd.col)
+                });
+                let (f, v) = uni_block_cost_split(blk);
+                match blk {
+                    UniBlock::Coupling(c) => {
                         scr = scr.max(rank + c.scratch_len());
                         csl = csl.max(c.scratch_len());
                         fx += f;
                         vr += v;
                         couplings.push(CRef { block: b, off: s_off[in_cluster], len: in_basis[in_cluster].rank() });
                     }
-                    Some(_) => {
+                    _ => {
                         fx += f;
                         vr += v;
                         let src = if adjoint { bt.row_ct.node(nd.row).range() } else { bt.col_ct.node(nd.col).range() };
                         xmax = xmax.max(src.len());
                         dense.push((b, src));
                     }
-                    None => panic!("missing leaf"),
                 }
             }
             if couplings.is_empty() && dense.is_empty() {
@@ -564,34 +583,27 @@ impl UniSchedule {
             pscratch,
             levels,
             multi: MultiCache::new(),
+            nshards,
             s_len,
             max_shards: max_shards.max(fshards.len()),
             scratch,
         }
     }
 
-    fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+    fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor) {
         let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
-        arena.ensure(self.max_shards, self.scratch, self.s_len, 0);
+        arena.ensure(exec.buffers_needed(self.max_shards), self.scratch, self.s_len, 0);
         let (bufs, s_all, _) = arena.split();
-        let pool = ThreadPool::global();
 
         // phase 1: forward transformation s_σ = Bᵀ x|σ (independent slots)
         {
             s_all[..self.s_len].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len]);
-            pool.scope(|sc| {
-                for shard in &self.fshards {
-                    let slots = slots;
-                    sc.spawn(move |_| {
-                        for &ti in &shard.tasks {
-                            let t = &self.ftasks[ti];
-                            // SAFETY: one task per disjoint slot range.
-                            let dst = unsafe { slots.range_mut(t.off..t.off + t.len) };
-                            in_basis[t.cluster].apply_transposed(&x[t.src.clone()], dst);
-                        }
-                    });
-                }
+            exec.run_level(&self.fshards, bufs, &|ti, _buf| {
+                let t = &self.ftasks[ti];
+                // SAFETY: one task per disjoint slot range.
+                let dst = unsafe { slots.range_mut(t.off..t.off + t.len) };
+                in_basis[t.cluster].apply_transposed(&x[t.src.clone()], dst);
             });
         }
 
@@ -599,40 +611,33 @@ impl UniSchedule {
         let sref: &[f64] = &s_all[..self.s_len];
         let yy = SharedVec::new(y);
         for level in &self.levels {
-            pool.scope(|sc| {
-                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
-                    let yy = yy;
-                    sc.spawn(move |_| {
-                        for &ti in &shard.tasks {
-                            let task = &self.tasks[ti];
-                            // SAFETY: same-level clusters are disjoint; levels
-                            // are barrier separated.
-                            let yt = unsafe { yy.range_mut(task.dst.clone()) };
-                            let (tv, cscratch) = buf.split_at_mut(task.rank);
-                            tv.fill(0.0);
-                            let mut have = false;
-                            for cr in &task.couplings {
-                                if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
-                                    let sv = &sref[cr.off..cr.off + cr.len];
-                                    if adjoint {
-                                        cm.apply_transposed_add_scratch(sv, tv, cscratch);
-                                    } else {
-                                        cm.apply_add_scratch(sv, tv, cscratch);
-                                    }
-                                    have = true;
-                                }
-                            }
-                            if have && task.rank > 0 {
-                                for v in tv.iter_mut() {
-                                    *v *= alpha;
-                                }
-                                out_basis[task.cluster].apply_add(tv, yt);
-                            }
-                            for (b, src) in &task.dense {
-                                apply_dense_oriented(&m.blocks, *b, adjoint, alpha, &x[src.clone()], yt);
-                            }
+            exec.run_level(level, bufs, &|ti, buf| {
+                let task = &self.tasks[ti];
+                // SAFETY: same-level clusters are disjoint; levels are
+                // barrier separated.
+                let yt = unsafe { yy.range_mut(task.dst.clone()) };
+                let (tv, cscratch) = buf.split_at_mut(task.rank);
+                tv.fill(0.0);
+                let mut have = false;
+                for cr in &task.couplings {
+                    if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
+                        let sv = &sref[cr.off..cr.off + cr.len];
+                        if adjoint {
+                            cm.apply_transposed_add_scratch(sv, tv, cscratch);
+                        } else {
+                            cm.apply_add_scratch(sv, tv, cscratch);
                         }
-                    });
+                        have = true;
+                    }
+                }
+                if have && task.rank > 0 {
+                    for v in tv.iter_mut() {
+                        *v *= alpha;
+                    }
+                    out_basis[task.cluster].apply_add(tv, yt);
+                }
+                for (b, src) in &task.dense {
+                    apply_dense_oriented(&m.blocks, *b, adjoint, alpha, &x[src.clone()], yt);
                 }
             });
         }
@@ -641,45 +646,36 @@ impl UniSchedule {
     /// Gemm-shaped batched execution: slot-major coefficient panels (slot σ
     /// occupies `s_off[σ]·b .. (s_off[σ]+k)·b`), y gathered per task into a
     /// contiguous `rows×b` panel, all block/basis/coupling data streamed once.
-    fn exec_multi(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+    fn exec_multi(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor) {
         let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
         let ylen = y.nrows();
         let nrhs = y.ncols();
-        let nshards = default_shards();
         let packed = self.multi.get(nrhs, || {
             let fcosts: Vec<f64> = self.ffixed.iter().zip(&self.fper_rhs).map(|(f, v)| f + nrhs as f64 * v).collect();
             let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
-            let fsh = balance(&fcosts, &fscratch, nshards);
-            let lv = balance_levels_for(&self.level_ids, &self.fixed, &self.per_rhs, &self.pscratch, nrhs, nshards);
+            let fsh = balance(&fcosts, &fscratch, self.nshards);
+            let lv = balance_levels_for(&self.level_ids, &self.fixed, &self.per_rhs, &self.pscratch, nrhs, self.nshards);
             (fsh, lv)
         });
         let (fshards, levels) = (&packed.0, &packed.1);
         let (lmax, lscr) = max_shard_stats(levels);
         let max_shards = fshards.len().max(lmax);
         let scratch = fshards.iter().map(|s| s.scratch).max().unwrap_or(0).max(lscr);
-        arena.ensure(max_shards, scratch, self.s_len * nrhs, 0);
+        arena.ensure(exec.buffers_needed(max_shards), scratch, self.s_len * nrhs, 0);
         let (bufs, s_all, _) = arena.split();
-        let pool = ThreadPool::global();
 
         // phase 1: forward transformation panels S_σ = Bᵀ X|σ
         {
             s_all[..self.s_len * nrhs].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len * nrhs]);
-            pool.scope(|sc| {
-                for (shard, buf) in fshards.iter().zip(bufs.iter_mut()) {
-                    let slots = slots;
-                    sc.spawn(move |_| {
-                        for &ti in &shard.tasks {
-                            let t = &self.ftasks[ti];
-                            let sl = t.src.len();
-                            let xp = &mut buf[..sl * nrhs];
-                            gather_panel(x, &t.src, xp);
-                            // SAFETY: one task per disjoint slot-panel range.
-                            let dst = unsafe { slots.range_mut(t.off * nrhs..(t.off + t.len) * nrhs) };
-                            in_basis[t.cluster].apply_transposed_panel(xp, dst, nrhs);
-                        }
-                    });
-                }
+            exec.run_level(fshards, bufs, &|ti, buf| {
+                let t = &self.ftasks[ti];
+                let sl = t.src.len();
+                let xp = &mut buf[..sl * nrhs];
+                gather_panel(x, &t.src, xp);
+                // SAFETY: one task per disjoint slot-panel range.
+                let dst = unsafe { slots.range_mut(t.off * nrhs..(t.off + t.len) * nrhs) };
+                in_basis[t.cluster].apply_transposed_panel(xp, dst, nrhs);
             });
         }
 
@@ -687,54 +683,47 @@ impl UniSchedule {
         let sref: &[f64] = &s_all[..self.s_len * nrhs];
         let yy = SharedVec::new(y.data_mut());
         for level in levels.iter() {
-            pool.scope(|sc| {
-                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
-                    let yy = yy;
-                    sc.spawn(move |_| {
-                        for &ti in &shard.tasks {
-                            let task = &self.tasks[ti];
-                            let dl = task.dst.len();
-                            let (tv, rest) = buf.split_at_mut(task.rank * nrhs);
-                            let (cscratch, rest) = rest.split_at_mut(task.cscratch * nrhs);
-                            let (yp, xarea) = rest.split_at_mut(dl * nrhs);
-                            for c in 0..nrhs {
-                                // SAFETY: same-level clusters are disjoint;
-                                // levels are barrier separated (per column).
-                                let src = unsafe { yy.range(c * ylen + task.dst.start..c * ylen + task.dst.end) };
-                                yp[c * dl..(c + 1) * dl].copy_from_slice(src);
-                            }
-                            if !task.couplings.is_empty() {
-                                tv.fill(0.0);
-                                for cr in &task.couplings {
-                                    if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
-                                        let sv = &sref[cr.off * nrhs..(cr.off + cr.len) * nrhs];
-                                        if adjoint {
-                                            cm.apply_transposed_add_panel(sv, tv, nrhs, cscratch);
-                                        } else {
-                                            cm.apply_add_panel(sv, tv, nrhs, cscratch);
-                                        }
-                                    }
-                                }
-                                if task.rank > 0 {
-                                    for v in tv.iter_mut() {
-                                        *v *= alpha;
-                                    }
-                                    out_basis[task.cluster].apply_add_panel(tv, yp, nrhs);
-                                }
-                            }
-                            for (b, src) in &task.dense {
-                                let sl = src.len();
-                                let (xp, _) = xarea.split_at_mut(sl * nrhs);
-                                gather_panel(x, src, xp);
-                                apply_dense_oriented_panel(&m.blocks, *b, adjoint, alpha, xp, yp, nrhs);
-                            }
-                            for c in 0..nrhs {
-                                // SAFETY: as above.
-                                let dst = unsafe { yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end) };
-                                dst.copy_from_slice(&yp[c * dl..(c + 1) * dl]);
+            exec.run_level(level, bufs, &|ti, buf| {
+                let task = &self.tasks[ti];
+                let dl = task.dst.len();
+                let (tv, rest) = buf.split_at_mut(task.rank * nrhs);
+                let (cscratch, rest) = rest.split_at_mut(task.cscratch * nrhs);
+                let (yp, xarea) = rest.split_at_mut(dl * nrhs);
+                for c in 0..nrhs {
+                    // SAFETY: same-level clusters are disjoint; levels are
+                    // barrier separated (per column).
+                    let src = unsafe { yy.range(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                    yp[c * dl..(c + 1) * dl].copy_from_slice(src);
+                }
+                if !task.couplings.is_empty() {
+                    tv.fill(0.0);
+                    for cr in &task.couplings {
+                        if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
+                            let sv = &sref[cr.off * nrhs..(cr.off + cr.len) * nrhs];
+                            if adjoint {
+                                cm.apply_transposed_add_panel(sv, tv, nrhs, cscratch);
+                            } else {
+                                cm.apply_add_panel(sv, tv, nrhs, cscratch);
                             }
                         }
-                    });
+                    }
+                    if task.rank > 0 {
+                        for v in tv.iter_mut() {
+                            *v *= alpha;
+                        }
+                        out_basis[task.cluster].apply_add_panel(tv, yp, nrhs);
+                    }
+                }
+                for (b, src) in &task.dense {
+                    let sl = src.len();
+                    let (xp, _) = xarea.split_at_mut(sl * nrhs);
+                    gather_panel(x, src, xp);
+                    apply_dense_oriented_panel(&m.blocks, *b, adjoint, alpha, xp, yp, nrhs);
+                }
+                for c in 0..nrhs {
+                    // SAFETY: as above.
+                    let dst = unsafe { yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                    dst.copy_from_slice(&yp[c * dl..(c + 1) * dl]);
                 }
             });
         }
@@ -742,8 +731,10 @@ impl UniSchedule {
 }
 
 /// Precomputed execution plan for a [`UniformHMatrix`]; schedule halves are
-/// built on first use (see [`HPlan`] for the build/lazy distinction).
+/// built on first use (see [`HPlan`] for the build/lazy distinction and
+/// [`HPlan::build_with`] for backend selection).
 pub struct UniPlan {
+    exec: Arc<dyn Executor>,
     fwd: OnceLock<UniSchedule>,
     adj: OnceLock<UniSchedule>,
     nrows: usize,
@@ -752,36 +743,51 @@ pub struct UniPlan {
 
 impl UniPlan {
     pub fn build(m: &UniformHMatrix) -> UniPlan {
-        let plan = UniPlan::lazy(m);
-        plan.fwd.get_or_init(|| UniSchedule::build(m, false));
+        UniPlan::build_with(m, ExecutorKind::from_env().build())
+    }
+
+    /// Build the forward half up front on the given backend.
+    pub fn build_with(m: &UniformHMatrix, exec: Arc<dyn Executor>) -> UniPlan {
+        let plan = UniPlan::lazy_with(m, exec);
+        plan.fwd.get_or_init(|| UniSchedule::build(m, false, &*plan.exec));
         plan
     }
 
     /// A plan whose schedule halves are built on first execution.
     pub fn lazy(m: &UniformHMatrix) -> UniPlan {
-        UniPlan { fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+        UniPlan::lazy_with(m, ExecutorKind::from_env().build())
+    }
+
+    /// Lazy plan on the given backend.
+    pub fn lazy_with(m: &UniformHMatrix, exec: Arc<dyn Executor>) -> UniPlan {
+        UniPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+    }
+
+    /// Backend name (logs / bench rows).
+    pub fn executor_name(&self) -> String {
+        self.exec.name()
     }
 
     fn fwd(&self, m: &UniformHMatrix) -> &UniSchedule {
-        self.fwd.get_or_init(|| UniSchedule::build(m, false))
+        self.fwd.get_or_init(|| UniSchedule::build(m, false, &*self.exec))
     }
 
     fn adj(&self, m: &UniformHMatrix) -> &UniSchedule {
-        self.adj.get_or_init(|| UniSchedule::build(m, true))
+        self.adj.get_or_init(|| UniSchedule::build(m, true, &*self.exec))
     }
 
     /// y += alpha · M · x.
     pub fn execute(&self, m: &UniformHMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        self.fwd(m).exec(m, false, alpha, x, y, arena);
+        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec);
     }
 
     /// y += alpha · Mᵀ · x.
     pub fn execute_adjoint(&self, m: &UniformHMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols);
-        self.adj(m).exec(m, true, alpha, x, y, arena);
+        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec);
     }
 
     /// Y += alpha · M · X: one gemm-shaped schedule pass for the whole batch
@@ -791,7 +797,7 @@ impl UniPlan {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        self.fwd(m).exec_multi(m, false, alpha, x, y, arena);
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec);
     }
 
     /// Y += alpha · Mᵀ · X (gemm-shaped batched adjoint).
@@ -799,7 +805,7 @@ impl UniPlan {
         assert_eq!(x.nrows(), self.nrows);
         assert_eq!(y.nrows(), self.ncols);
         assert_eq!(x.ncols(), y.ncols());
-        self.adj(m).exec_multi(m, true, alpha, x, y, arena);
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec);
     }
 
     /// Aggregate over the schedule halves built so far.
@@ -868,6 +874,8 @@ struct H2Schedule {
     down_levels: Vec<Vec<Shard>>,
     /// Per-batch-width (up levels, down levels) packings.
     multi: MultiCache<(Vec<Vec<Shard>>, Vec<Vec<Shard>>)>,
+    /// Shard/chunk bin count the packings were built for.
+    nshards: usize,
     s_len: usize,
     t_len: usize,
     max_shards: usize,
@@ -875,14 +883,14 @@ struct H2Schedule {
 }
 
 impl H2Schedule {
-    fn build(m: &H2Matrix, adjoint: bool) -> H2Schedule {
+    fn build(m: &H2Matrix, adjoint: bool, exec: &dyn Executor) -> H2Schedule {
         let bt = &m.bt;
         let (in_ct, in_nb, out_ct, out_nb, out_lists) = if adjoint {
             (&bt.row_ct, &m.row_basis, &bt.col_ct, &m.col_basis, &bt.col_blocks)
         } else {
             (&bt.col_ct, &m.col_basis, &bt.row_ct, &m.row_basis, &bt.row_blocks)
         };
-        let nshards = default_shards();
+        let nshards = exec.shard_count();
 
         // ---- upward pass over the input tree ----
         let mut s_off = vec![0usize; in_ct.nodes.len()];
@@ -963,23 +971,25 @@ impl H2Schedule {
                 for &b in &out_lists[tau] {
                     let bn = bt.node(b);
                     let in_cluster = if adjoint { bn.row } else { bn.col };
-                    let (f, v) = uni_block_cost_split(m.blocks[b].as_ref().expect("missing leaf"));
-                    match m.blocks[b].as_ref() {
-                        Some(UniBlock::Coupling(c)) => {
+                    let blk = m.blocks[b].as_ref().unwrap_or_else(|| {
+                        panic!("H2 plan build: missing leaf data for block {b} (row cluster {}, col cluster {})", bn.row, bn.col)
+                    });
+                    let (f, v) = uni_block_cost_split(blk);
+                    match blk {
+                        UniBlock::Coupling(c) => {
                             scr = scr.max(rank + c.scratch_len());
                             csl = csl.max(c.scratch_len());
                             fx += f;
                             vr += v;
                             couplings.push(CRef { block: b, off: s_off[in_cluster], len: in_nb.rank[in_cluster] });
                         }
-                        Some(_) => {
+                        _ => {
                             fx += f;
                             vr += v;
                             let src = if adjoint { bt.row_ct.node(bn.row).range() } else { bt.col_ct.node(bn.col).range() };
                             xmax = xmax.max(src.len());
                             dense.push((b, src));
                         }
-                        None => panic!("missing leaf"),
                     }
                 }
                 let mut children = Vec::new();
@@ -1043,6 +1053,7 @@ impl H2Schedule {
             down_pscratch,
             down_levels,
             multi: MultiCache::new(),
+            nshards,
             s_len,
             t_len,
             max_shards: up_max.max(down_max),
@@ -1050,38 +1061,30 @@ impl H2Schedule {
         }
     }
 
-    fn exec(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
+    fn exec(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor) {
         let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
-        arena.ensure(self.max_shards, self.scratch, self.s_len, self.t_len);
+        arena.ensure(exec.buffers_needed(self.max_shards), self.scratch, self.s_len, self.t_len);
         let (bufs, s_all, t_all) = arena.split();
-        let pool = ThreadPool::global();
 
         // upward pass: forward transformation, children before parents
         {
             s_all[..self.s_len].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len]);
             for level in &self.up_levels {
-                pool.scope(|sc| {
-                    for shard in level {
-                        let slots = slots;
-                        sc.spawn(move |_| {
-                            for &ti in &shard.tasks {
-                                let t = &self.up_tasks[ti];
-                                // SAFETY: one slot per cluster; child slots were
-                                // filled in an earlier, already joined level.
-                                let dst = unsafe { slots.range_mut(t.off..t.off + t.len) };
-                                if t.leaf {
-                                    in_nb.leaf_apply_transposed(t.cluster, &x[t.src.clone()], dst);
-                                } else {
-                                    for &(c, coff, clen) in &t.children {
-                                        let sc_child = unsafe { slots.range(coff..coff + clen) };
-                                        if let Some(e) = in_nb.transfer[c].as_ref() {
-                                            e.apply_transposed_add(sc_child, dst);
-                                        }
-                                    }
-                                }
+                exec.run_level(level, bufs, &|ti, _buf| {
+                    let t = &self.up_tasks[ti];
+                    // SAFETY: one slot per cluster; child slots were filled
+                    // in an earlier, already joined level.
+                    let dst = unsafe { slots.range_mut(t.off..t.off + t.len) };
+                    if t.leaf {
+                        in_nb.leaf_apply_transposed(t.cluster, &x[t.src.clone()], dst);
+                    } else {
+                        for &(c, coff, clen) in &t.children {
+                            let sc_child = unsafe { slots.range(coff..coff + clen) };
+                            if let Some(e) = in_nb.transfer[c].as_ref() {
+                                e.apply_transposed_add(sc_child, dst);
                             }
-                        });
+                        }
                     }
                 });
             }
@@ -1093,55 +1096,47 @@ impl H2Schedule {
         let tslots = SharedVec::new(&mut t_all[..self.t_len]);
         let yy = SharedVec::new(y);
         for level in &self.down_levels {
-            pool.scope(|sc| {
-                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
-                    let yy = yy;
-                    let tslots = tslots;
-                    sc.spawn(move |_| {
-                        for &ti in &shard.tasks {
-                            let task = &self.down_tasks[ti];
-                            // SAFETY: τ's slot was written only by its parent in
-                            // an earlier level; same-level clusters are disjoint.
-                            let tv = unsafe { tslots.range_mut(task.t_off..task.t_off + task.rank) };
-                            let (sbuf, cscratch) = buf.split_at_mut(task.rank);
-                            for cr in &task.couplings {
-                                if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
-                                    let sv = &sref[cr.off..cr.off + cr.len];
-                                    if adjoint {
-                                        cm.apply_transposed_add_scratch(sv, tv, cscratch);
-                                    } else {
-                                        cm.apply_add_scratch(sv, tv, cscratch);
-                                    }
-                                }
-                            }
-                            if task.leaf {
-                                if task.rank > 0 && tv.iter().any(|&v| v != 0.0) {
-                                    for (d, &v) in sbuf.iter_mut().zip(tv.iter()) {
-                                        *d = alpha * v;
-                                    }
-                                    // SAFETY: leaf ranges are disjoint; ancestor
-                                    // dense writes happened in earlier levels.
-                                    let yt = unsafe { yy.range_mut(task.dst.clone()) };
-                                    out_nb.leaf_apply_add(task.cluster, sbuf, yt);
-                                }
-                            } else {
-                                for &(c, ctoff, crank) in &task.children {
-                                    // SAFETY: each child has exactly one parent.
-                                    let tc = unsafe { tslots.range_mut(ctoff..ctoff + crank) };
-                                    if let Some(e) = out_nb.transfer[c].as_ref() {
-                                        e.apply_add(tv, tc);
-                                    }
-                                }
-                            }
-                            if !task.dense.is_empty() {
-                                // SAFETY: same disjointness/barrier argument.
-                                let yt = unsafe { yy.range_mut(task.dst.clone()) };
-                                for (b, src) in &task.dense {
-                                    apply_dense_oriented(&m.blocks, *b, adjoint, alpha, &x[src.clone()], yt);
-                                }
-                            }
+            exec.run_level(level, bufs, &|ti, buf| {
+                let task = &self.down_tasks[ti];
+                // SAFETY: τ's slot was written only by its parent in an
+                // earlier level; same-level clusters are disjoint.
+                let tv = unsafe { tslots.range_mut(task.t_off..task.t_off + task.rank) };
+                let (sbuf, cscratch) = buf.split_at_mut(task.rank);
+                for cr in &task.couplings {
+                    if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
+                        let sv = &sref[cr.off..cr.off + cr.len];
+                        if adjoint {
+                            cm.apply_transposed_add_scratch(sv, tv, cscratch);
+                        } else {
+                            cm.apply_add_scratch(sv, tv, cscratch);
                         }
-                    });
+                    }
+                }
+                if task.leaf {
+                    if task.rank > 0 && tv.iter().any(|&v| v != 0.0) {
+                        for (d, &v) in sbuf.iter_mut().zip(tv.iter()) {
+                            *d = alpha * v;
+                        }
+                        // SAFETY: leaf ranges are disjoint; ancestor dense
+                        // writes happened in earlier levels.
+                        let yt = unsafe { yy.range_mut(task.dst.clone()) };
+                        out_nb.leaf_apply_add(task.cluster, sbuf, yt);
+                    }
+                } else {
+                    for &(c, ctoff, crank) in &task.children {
+                        // SAFETY: each child has exactly one parent.
+                        let tc = unsafe { tslots.range_mut(ctoff..ctoff + crank) };
+                        if let Some(e) = out_nb.transfer[c].as_ref() {
+                            e.apply_add(tv, tc);
+                        }
+                    }
+                }
+                if !task.dense.is_empty() {
+                    // SAFETY: same disjointness/barrier argument.
+                    let yt = unsafe { yy.range_mut(task.dst.clone()) };
+                    for (b, src) in &task.dense {
+                        apply_dense_oriented(&m.blocks, *b, adjoint, alpha, &x[src.clone()], yt);
+                    }
                 }
             });
         }
@@ -1150,53 +1145,44 @@ impl H2Schedule {
     /// Gemm-shaped batched execution: slot-major coefficient panels for both
     /// transform directions, leaf/dense y rows gathered into contiguous
     /// panels; transfer and coupling matrices are streamed once per batch.
-    fn exec_multi(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+    fn exec_multi(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor) {
         let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
         let ylen = y.nrows();
         let nrhs = y.ncols();
-        let nshards = default_shards();
         let packed = self.multi.get(nrhs, || {
             (
-                balance_levels_for(&self.up_level_ids, &self.up_fixed, &self.up_per_rhs, &self.up_pscratch, nrhs, nshards),
-                balance_levels_for(&self.down_level_ids, &self.down_fixed, &self.down_per_rhs, &self.down_pscratch, nrhs, nshards),
+                balance_levels_for(&self.up_level_ids, &self.up_fixed, &self.up_per_rhs, &self.up_pscratch, nrhs, self.nshards),
+                balance_levels_for(&self.down_level_ids, &self.down_fixed, &self.down_per_rhs, &self.down_pscratch, nrhs, self.nshards),
             )
         });
         let (up_levels, down_levels) = (&packed.0, &packed.1);
         let (umax, uscr) = max_shard_stats(up_levels);
         let (dmax, dscr) = max_shard_stats(down_levels);
-        arena.ensure(umax.max(dmax), uscr.max(dscr), self.s_len * nrhs, self.t_len * nrhs);
+        arena.ensure(exec.buffers_needed(umax.max(dmax)), uscr.max(dscr), self.s_len * nrhs, self.t_len * nrhs);
         let (bufs, s_all, t_all) = arena.split();
-        let pool = ThreadPool::global();
 
         // upward pass: forward transformation panels, children before parents
         {
             s_all[..self.s_len * nrhs].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len * nrhs]);
             for level in up_levels.iter() {
-                pool.scope(|sc| {
-                    for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
-                        let slots = slots;
-                        sc.spawn(move |_| {
-                            for &ti in &shard.tasks {
-                                let t = &self.up_tasks[ti];
-                                // SAFETY: one slot panel per cluster; child
-                                // slots joined in an earlier level.
-                                let dst = unsafe { slots.range_mut(t.off * nrhs..(t.off + t.len) * nrhs) };
-                                if t.leaf {
-                                    let sl = t.src.len();
-                                    let xp = &mut buf[..sl * nrhs];
-                                    gather_panel(x, &t.src, xp);
-                                    in_nb.leaf_apply_transposed_panel(t.cluster, xp, dst, nrhs);
-                                } else {
-                                    for &(c, coff, clen) in &t.children {
-                                        let sc_child = unsafe { slots.range(coff * nrhs..(coff + clen) * nrhs) };
-                                        if let Some(e) = in_nb.transfer[c].as_ref() {
-                                            e.apply_transposed_add_panel(sc_child, dst, nrhs);
-                                        }
-                                    }
-                                }
+                exec.run_level(level, bufs, &|ti, buf| {
+                    let t = &self.up_tasks[ti];
+                    // SAFETY: one slot panel per cluster; child slots joined
+                    // in an earlier level.
+                    let dst = unsafe { slots.range_mut(t.off * nrhs..(t.off + t.len) * nrhs) };
+                    if t.leaf {
+                        let sl = t.src.len();
+                        let xp = &mut buf[..sl * nrhs];
+                        gather_panel(x, &t.src, xp);
+                        in_nb.leaf_apply_transposed_panel(t.cluster, xp, dst, nrhs);
+                    } else {
+                        for &(c, coff, clen) in &t.children {
+                            let sc_child = unsafe { slots.range(coff * nrhs..(coff + clen) * nrhs) };
+                            if let Some(e) = in_nb.transfer[c].as_ref() {
+                                e.apply_transposed_add_panel(sc_child, dst, nrhs);
                             }
-                        });
+                        }
                     }
                 });
             }
@@ -1208,71 +1194,63 @@ impl H2Schedule {
         let tslots = SharedVec::new(&mut t_all[..self.t_len * nrhs]);
         let yy = SharedVec::new(y.data_mut());
         for level in down_levels.iter() {
-            pool.scope(|sc| {
-                for (shard, buf) in level.iter().zip(bufs.iter_mut()) {
-                    let yy = yy;
-                    let tslots = tslots;
-                    sc.spawn(move |_| {
-                        for &ti in &shard.tasks {
-                            let task = &self.down_tasks[ti];
-                            let dl = task.dst.len();
-                            // SAFETY: τ's slot panel was written only by its
-                            // parent in an earlier level.
-                            let tv = unsafe { tslots.range_mut(task.t_off * nrhs..(task.t_off + task.rank) * nrhs) };
-                            let (sbuf, rest) = buf.split_at_mut(task.rank * nrhs);
-                            let (cscratch, rest) = rest.split_at_mut(task.cscratch * nrhs);
-                            let (yp, xarea) = rest.split_at_mut(dl * nrhs);
-                            for cr in &task.couplings {
-                                if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
-                                    let sv = &sref[cr.off * nrhs..(cr.off + cr.len) * nrhs];
-                                    if adjoint {
-                                        cm.apply_transposed_add_panel(sv, tv, nrhs, cscratch);
-                                    } else {
-                                        cm.apply_add_panel(sv, tv, nrhs, cscratch);
-                                    }
-                                }
-                            }
-                            let leaf_write = task.leaf && task.rank > 0 && tv.iter().any(|&v| v != 0.0);
-                            let need_y = leaf_write || !task.dense.is_empty();
-                            if need_y {
-                                for c in 0..nrhs {
-                                    // SAFETY: leaf/dense ranges are disjoint
-                                    // within a level; levels are barriers.
-                                    let src = unsafe { yy.range(c * ylen + task.dst.start..c * ylen + task.dst.end) };
-                                    yp[c * dl..(c + 1) * dl].copy_from_slice(src);
-                                }
-                            }
-                            if task.leaf {
-                                if leaf_write {
-                                    for (d, &v) in sbuf.iter_mut().zip(tv.iter()) {
-                                        *d = alpha * v;
-                                    }
-                                    out_nb.leaf_apply_add_panel(task.cluster, sbuf, yp, nrhs);
-                                }
-                            } else {
-                                for &(c, ctoff, crank) in &task.children {
-                                    // SAFETY: each child has exactly one parent.
-                                    let tc = unsafe { tslots.range_mut(ctoff * nrhs..(ctoff + crank) * nrhs) };
-                                    if let Some(e) = out_nb.transfer[c].as_ref() {
-                                        e.apply_add_panel(tv, tc, nrhs);
-                                    }
-                                }
-                            }
-                            for (b, src) in &task.dense {
-                                let sl = src.len();
-                                let (xp, _) = xarea.split_at_mut(sl * nrhs);
-                                gather_panel(x, src, xp);
-                                apply_dense_oriented_panel(&m.blocks, *b, adjoint, alpha, xp, yp, nrhs);
-                            }
-                            if need_y {
-                                for c in 0..nrhs {
-                                    // SAFETY: as above.
-                                    let dst = unsafe { yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end) };
-                                    dst.copy_from_slice(&yp[c * dl..(c + 1) * dl]);
-                                }
-                            }
+            exec.run_level(level, bufs, &|ti, buf| {
+                let task = &self.down_tasks[ti];
+                let dl = task.dst.len();
+                // SAFETY: τ's slot panel was written only by its parent in
+                // an earlier level.
+                let tv = unsafe { tslots.range_mut(task.t_off * nrhs..(task.t_off + task.rank) * nrhs) };
+                let (sbuf, rest) = buf.split_at_mut(task.rank * nrhs);
+                let (cscratch, rest) = rest.split_at_mut(task.cscratch * nrhs);
+                let (yp, xarea) = rest.split_at_mut(dl * nrhs);
+                for cr in &task.couplings {
+                    if let Some(UniBlock::Coupling(cm)) = m.blocks[cr.block].as_ref() {
+                        let sv = &sref[cr.off * nrhs..(cr.off + cr.len) * nrhs];
+                        if adjoint {
+                            cm.apply_transposed_add_panel(sv, tv, nrhs, cscratch);
+                        } else {
+                            cm.apply_add_panel(sv, tv, nrhs, cscratch);
                         }
-                    });
+                    }
+                }
+                let leaf_write = task.leaf && task.rank > 0 && tv.iter().any(|&v| v != 0.0);
+                let need_y = leaf_write || !task.dense.is_empty();
+                if need_y {
+                    for c in 0..nrhs {
+                        // SAFETY: leaf/dense ranges are disjoint within a
+                        // level; levels are barriers.
+                        let src = unsafe { yy.range(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                        yp[c * dl..(c + 1) * dl].copy_from_slice(src);
+                    }
+                }
+                if task.leaf {
+                    if leaf_write {
+                        for (d, &v) in sbuf.iter_mut().zip(tv.iter()) {
+                            *d = alpha * v;
+                        }
+                        out_nb.leaf_apply_add_panel(task.cluster, sbuf, yp, nrhs);
+                    }
+                } else {
+                    for &(c, ctoff, crank) in &task.children {
+                        // SAFETY: each child has exactly one parent.
+                        let tc = unsafe { tslots.range_mut(ctoff * nrhs..(ctoff + crank) * nrhs) };
+                        if let Some(e) = out_nb.transfer[c].as_ref() {
+                            e.apply_add_panel(tv, tc, nrhs);
+                        }
+                    }
+                }
+                for (b, src) in &task.dense {
+                    let sl = src.len();
+                    let (xp, _) = xarea.split_at_mut(sl * nrhs);
+                    gather_panel(x, src, xp);
+                    apply_dense_oriented_panel(&m.blocks, *b, adjoint, alpha, xp, yp, nrhs);
+                }
+                if need_y {
+                    for c in 0..nrhs {
+                        // SAFETY: as above.
+                        let dst = unsafe { yy.range_mut(c * ylen + task.dst.start..c * ylen + task.dst.end) };
+                        dst.copy_from_slice(&yp[c * dl..(c + 1) * dl]);
+                    }
                 }
             });
         }
@@ -1280,8 +1258,10 @@ impl H2Schedule {
 }
 
 /// Precomputed execution plan for an [`H2Matrix`]; schedule halves are built
-/// on first use (see [`HPlan`] for the build/lazy distinction).
+/// on first use (see [`HPlan`] for the build/lazy distinction and
+/// [`HPlan::build_with`] for backend selection).
 pub struct H2Plan {
+    exec: Arc<dyn Executor>,
     fwd: OnceLock<H2Schedule>,
     adj: OnceLock<H2Schedule>,
     nrows: usize,
@@ -1290,36 +1270,51 @@ pub struct H2Plan {
 
 impl H2Plan {
     pub fn build(m: &H2Matrix) -> H2Plan {
-        let plan = H2Plan::lazy(m);
-        plan.fwd.get_or_init(|| H2Schedule::build(m, false));
+        H2Plan::build_with(m, ExecutorKind::from_env().build())
+    }
+
+    /// Build the forward half up front on the given backend.
+    pub fn build_with(m: &H2Matrix, exec: Arc<dyn Executor>) -> H2Plan {
+        let plan = H2Plan::lazy_with(m, exec);
+        plan.fwd.get_or_init(|| H2Schedule::build(m, false, &*plan.exec));
         plan
     }
 
     /// A plan whose schedule halves are built on first execution.
     pub fn lazy(m: &H2Matrix) -> H2Plan {
-        H2Plan { fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+        H2Plan::lazy_with(m, ExecutorKind::from_env().build())
+    }
+
+    /// Lazy plan on the given backend.
+    pub fn lazy_with(m: &H2Matrix, exec: Arc<dyn Executor>) -> H2Plan {
+        H2Plan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+    }
+
+    /// Backend name (logs / bench rows).
+    pub fn executor_name(&self) -> String {
+        self.exec.name()
     }
 
     fn fwd(&self, m: &H2Matrix) -> &H2Schedule {
-        self.fwd.get_or_init(|| H2Schedule::build(m, false))
+        self.fwd.get_or_init(|| H2Schedule::build(m, false, &*self.exec))
     }
 
     fn adj(&self, m: &H2Matrix) -> &H2Schedule {
-        self.adj.get_or_init(|| H2Schedule::build(m, true))
+        self.adj.get_or_init(|| H2Schedule::build(m, true, &*self.exec))
     }
 
     /// y += alpha · M · x.
     pub fn execute(&self, m: &H2Matrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        self.fwd(m).exec(m, false, alpha, x, y, arena);
+        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec);
     }
 
     /// y += alpha · Mᵀ · x.
     pub fn execute_adjoint(&self, m: &H2Matrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols);
-        self.adj(m).exec(m, true, alpha, x, y, arena);
+        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec);
     }
 
     /// Y += alpha · M · X: one gemm-shaped schedule pass for the whole batch.
@@ -1327,7 +1322,7 @@ impl H2Plan {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        self.fwd(m).exec_multi(m, false, alpha, x, y, arena);
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec);
     }
 
     /// Y += alpha · Mᵀ · X (gemm-shaped batched adjoint).
@@ -1335,7 +1330,7 @@ impl H2Plan {
         assert_eq!(x.nrows(), self.nrows);
         assert_eq!(y.nrows(), self.ncols);
         assert_eq!(x.ncols(), y.ncols());
-        self.adj(m).exec_multi(m, true, alpha, x, y, arena);
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec);
     }
 
     /// Aggregate over the schedule halves built so far.

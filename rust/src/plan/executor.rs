@@ -1,0 +1,427 @@
+//! Pluggable plan-execution backends behind one [`Executor`] seam.
+//!
+//! A plan schedule says *what* to run (level-ordered task lists with disjoint
+//! write ranges); the executor says *how* a level's tasks are mapped onto
+//! threads. All backends preserve the plan's correctness contract — every
+//! task runs exactly once per level, levels are fork-join barriers, and
+//! concurrent tasks get distinct scratch buffers — so results are **bitwise
+//! identical** across backends (each task writes only its own disjoint range,
+//! in its own fixed internal order).
+//!
+//! Three backends ship:
+//!
+//! * [`StaticLptExec`] (`lpt`) — the baseline: one spawned task per
+//!   LPT-packed shard on the global work-sharing pool. Cheapest dispatch;
+//!   static balancing only.
+//! * [`WorkStealingExec`] (`steal`) — the level's tasks are chunked finer
+//!   (≈[`super::schedule::STEAL_CHUNKS_PER_SLOT`] chunks per worker slot,
+//!   packed by the same per-task byte costs) and seeded into per-slot
+//!   Chase–Lev deques ([`crate::par::StealSet`]); idle slots steal. Absorbs
+//!   the *dynamic* imbalance of variable codec decode times that a static
+//!   packing cannot see.
+//! * [`ShardedExec`] (`sharded:K`) — the level's shards are partitioned
+//!   contiguously across `K` sub-pools with pinned shard→pool affinity and
+//!   per-shard scratch buffers grouped per pool: the NUMA-shaped layout.
+//!   (The arena is still allocated and zero-filled by the calling thread —
+//!   actual per-domain first-touch/pinning is a ROADMAP follow-on; what this
+//!   backend pins today is the task→pool mapping and the buffer grouping.)
+//!
+//! Selection: [`ExecutorKind::from_env`] reads `HMATC_EXEC`
+//! (`lpt|steal|sharded:K`, default `lpt`); the CLI forwards `--executor`.
+//! Executors are chosen **per plan** at build time because the shard packing
+//! (bin count, chunking) is precomputed into the schedules — steady-state
+//! products stay zero-allocation on every backend.
+
+use super::schedule::{default_shards, part_range, Shard, STEAL_CHUNKS_PER_SLOT};
+use crate::mvm::SharedSlots;
+use crate::par::{StealSet, ThreadPool};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// The task body an executor drives: `run(task_id, scratch)`. The caller
+/// guarantees same-level tasks write disjoint ranges; the executor guarantees
+/// concurrent invocations receive distinct scratch buffers.
+pub type TaskFn<'a> = dyn Fn(usize, &mut [f64]) + Sync + 'a;
+
+/// How one barrier-separated level of a plan schedule is executed.
+///
+/// Contract, relied on for bitwise-identical results across backends:
+/// `run_level` invokes `run(t, buf)` exactly once for every task `t` of every
+/// shard, does not return before all invocations completed, and never runs
+/// two invocations concurrently on the same buffer.
+pub trait Executor: Send + Sync {
+    /// Backend name for logs/bench rows (e.g. `"sharded:4"`).
+    fn name(&self) -> String;
+
+    /// Upper bound on concurrently running task bodies.
+    fn concurrency(&self) -> usize;
+
+    /// How many shards a level's tasks should be packed into for this
+    /// backend (LPT bins for the static backends, finer chunks for
+    /// stealing). Plan builders call this once at schedule-build time.
+    fn shard_count(&self) -> usize;
+
+    /// Execute one level: shards carry indices into the schedule's task
+    /// array. `bufs` must hold at least [`Executor::buffers_needed`] entries
+    /// (each sized for the worst task).
+    fn run_level(&self, shards: &[Shard], bufs: &mut [Vec<f64>], run: &TaskFn);
+
+    /// Scratch buffers required for a schedule whose largest level has
+    /// `max_shards` shards. Static backends pin one buffer per shard
+    /// (default); the stealing backend overrides with one per worker slot.
+    fn buffers_needed(&self, max_shards: usize) -> usize {
+        max_shards.max(1)
+    }
+}
+
+/// Backend selector, parsed from `--executor` / `HMATC_EXEC`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Static LPT shards on the global work-sharing pool (baseline).
+    StaticLpt,
+    /// Chase–Lev deques with chunked tasks and idle-slot stealing.
+    WorkStealing,
+    /// K sub-pools with pinned shard→pool affinity.
+    Sharded(usize),
+}
+
+impl ExecutorKind {
+    /// Read `HMATC_EXEC` (`lpt|steal|sharded:K`); unset or invalid values
+    /// fall back to [`ExecutorKind::StaticLpt`] (invalid ones with a
+    /// warning, so a typo in a job script is visible).
+    pub fn from_env() -> ExecutorKind {
+        match std::env::var("HMATC_EXEC") {
+            Err(_) => ExecutorKind::StaticLpt,
+            Ok(s) => s.parse().unwrap_or_else(|e| {
+                eprintln!("HMATC_EXEC: {e}; using lpt");
+                ExecutorKind::StaticLpt
+            }),
+        }
+    }
+
+    /// Instantiate the backend (sub-pools for `sharded:K` are created once
+    /// per `K` and shared process-wide).
+    pub fn build(self) -> Arc<dyn Executor> {
+        match self {
+            ExecutorKind::StaticLpt => Arc::new(StaticLptExec::new()),
+            ExecutorKind::WorkStealing => Arc::new(WorkStealingExec::new()),
+            ExecutorKind::Sharded(k) => Arc::new(ShardedExec::new(k)),
+        }
+    }
+
+    /// All kinds at a given shard count (benches, equivalence tests).
+    pub fn all(sharded_k: usize) -> [ExecutorKind; 3] {
+        [ExecutorKind::StaticLpt, ExecutorKind::WorkStealing, ExecutorKind::Sharded(sharded_k)]
+    }
+}
+
+impl std::str::FromStr for ExecutorKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ExecutorKind, String> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "lpt" | "static" => Ok(ExecutorKind::StaticLpt),
+            "steal" | "ws" => Ok(ExecutorKind::WorkStealing),
+            "sharded" => Ok(ExecutorKind::Sharded(2)),
+            other => match other.strip_prefix("sharded:") {
+                Some(k) => match k.parse::<usize>() {
+                    Ok(k) if k >= 1 => Ok(ExecutorKind::Sharded(k)),
+                    _ => Err(format!("bad shard count '{k}' (sharded:K, K ≥ 1)")),
+                },
+                None => Err(format!("unknown executor '{other}' (lpt|steal|sharded:K)")),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for ExecutorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecutorKind::StaticLpt => write!(f, "lpt"),
+            ExecutorKind::WorkStealing => write!(f, "steal"),
+            ExecutorKind::Sharded(k) => write!(f, "sharded:{k}"),
+        }
+    }
+}
+
+/// Total execution slots of the global pool: its workers plus the helping
+/// scope thread (the historical `default_shards`).
+fn global_slots() -> usize {
+    default_shards()
+}
+
+// ---------------------------------------------------------------------------
+// StaticLpt — the baseline, extracted unchanged from the pre-seam exec paths
+// ---------------------------------------------------------------------------
+
+/// One spawned task per precomputed LPT shard; shard `i` owns `bufs[i]`.
+pub struct StaticLptExec {
+    slots: usize,
+}
+
+impl StaticLptExec {
+    pub fn new() -> StaticLptExec {
+        StaticLptExec { slots: global_slots() }
+    }
+}
+
+impl Default for StaticLptExec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Executor for StaticLptExec {
+    fn name(&self) -> String {
+        "lpt".into()
+    }
+
+    fn concurrency(&self) -> usize {
+        self.slots
+    }
+
+    fn shard_count(&self) -> usize {
+        self.slots
+    }
+
+    fn run_level(&self, shards: &[Shard], bufs: &mut [Vec<f64>], run: &TaskFn) {
+        assert!(bufs.len() >= shards.len(), "lpt: {} shards, {} buffers", shards.len(), bufs.len());
+        ThreadPool::global().scope(|s| {
+            for (shard, buf) in shards.iter().zip(bufs.iter_mut()) {
+                s.spawn(move |_| {
+                    for &ti in &shard.tasks {
+                        run(ti, buf);
+                    }
+                });
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WorkStealing — chunked tasks on per-slot Chase–Lev deques
+// ---------------------------------------------------------------------------
+
+/// Dynamic rebalancing: the level's (finer) chunks are seeded round-robin
+/// into per-slot deques; each slot drains its own, then steals. Slot `i`
+/// owns `bufs[i]` for whatever chunk it executes.
+pub struct WorkStealingExec {
+    slots: usize,
+    set: Mutex<StealSet>,
+}
+
+impl WorkStealingExec {
+    pub fn new() -> WorkStealingExec {
+        WorkStealingExec { slots: global_slots(), set: Mutex::new(StealSet::new()) }
+    }
+}
+
+impl Default for WorkStealingExec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Executor for WorkStealingExec {
+    fn name(&self) -> String {
+        "steal".into()
+    }
+
+    fn concurrency(&self) -> usize {
+        self.slots
+    }
+
+    fn shard_count(&self) -> usize {
+        self.slots * STEAL_CHUNKS_PER_SLOT
+    }
+
+    fn buffers_needed(&self, max_shards: usize) -> usize {
+        // chunks outnumber slots by design; any chunk may run on any slot,
+        // so one buffer per slot suffices
+        self.concurrency().min(max_shards).max(1)
+    }
+
+    fn run_level(&self, shards: &[Shard], bufs: &mut [Vec<f64>], run: &TaskFn) {
+        if shards.is_empty() {
+            return;
+        }
+        let nslots = self.slots.min(shards.len()).min(bufs.len()).max(1);
+        // executions of one plan are serialized by its arena; the lock only
+        // guards against two *plans* sharing an executor instance
+        let mut set = self.set.lock().unwrap();
+        let slots = SharedSlots::new(bufs);
+        set.run(ThreadPool::global(), nslots, shards.len(), |slot, chunk| {
+            // SAFETY: StealSet never runs two invocations with the same slot
+            // id concurrently, and slot < nslots ≤ bufs.len().
+            let buf = unsafe { slots.get_mut(slot) };
+            for &ti in &shards[chunk].tasks {
+                run(ti, buf);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded — K sub-pools, pinned shard→pool affinity, per-pool arena slices
+// ---------------------------------------------------------------------------
+
+/// Sub-pool sets are created once per `K` and shared by every `sharded:K`
+/// executor in the process (a pool set owns OS threads).
+fn sharded_pools(k: usize, workers_per_pool: usize) -> Arc<Vec<ThreadPool>> {
+    static CACHE: OnceLock<Mutex<Vec<(usize, Arc<Vec<ThreadPool>>)>>> = OnceLock::new();
+    let mut cache = CACHE.get_or_init(|| Mutex::new(Vec::new())).lock().unwrap();
+    if let Some((_, pools)) = cache.iter().find(|(kk, _)| *kk == k) {
+        return pools.clone();
+    }
+    let pools = Arc::new((0..k).map(|_| ThreadPool::new(workers_per_pool)).collect::<Vec<_>>());
+    cache.push((k, pools.clone()));
+    pools
+}
+
+/// The level's shard list is split into K contiguous parts
+/// ([`part_range`]); part `p` always runs on pool `p` (pinned affinity) with
+/// the matching contiguous slice of the scratch buffers (per-pool arena
+/// slice). Within a part, it is the baseline one-task-per-shard dispatch.
+pub struct ShardedExec {
+    pools: Arc<Vec<ThreadPool>>,
+    slots: usize,
+}
+
+impl ShardedExec {
+    pub fn new(k: usize) -> ShardedExec {
+        let k = k.max(1);
+        // every sub-pool gets an equal share of the machine's slots (at
+        // least one worker each; K > cores oversubscribes, which is allowed)
+        let per_pool = global_slots().div_ceil(k).max(1);
+        ShardedExec { pools: sharded_pools(k, per_pool), slots: k * per_pool }
+    }
+
+    pub fn k(&self) -> usize {
+        self.pools.len()
+    }
+}
+
+impl Executor for ShardedExec {
+    fn name(&self) -> String {
+        format!("sharded:{}", self.pools.len())
+    }
+
+    fn concurrency(&self) -> usize {
+        self.slots
+    }
+
+    fn shard_count(&self) -> usize {
+        self.slots
+    }
+
+    fn run_level(&self, shards: &[Shard], bufs: &mut [Vec<f64>], run: &TaskFn) {
+        if shards.is_empty() {
+            return;
+        }
+        assert!(bufs.len() >= shards.len(), "sharded: {} shards, {} buffers", shards.len(), bufs.len());
+        run_parts(&self.pools, shards, &mut bufs[..shards.len()], run);
+    }
+}
+
+/// Nested-scope fan-out: spawn part `p` into pool `p`, recursing *inside*
+/// the scope so all parts are in flight before any barrier wait begins; the
+/// scopes then join innermost-first. Each scope's waiter helps only its own
+/// pool, so affinity is preserved and help-first waiting keeps this
+/// deadlock-free even on zero-worker pools. A panic in an inner pool is
+/// caught and re-raised only after this pool's scope has joined, so no scope
+/// unwinds while tasks borrowing the stack are still in flight.
+fn run_parts(pools: &[ThreadPool], shards: &[Shard], bufs: &mut [Vec<f64>], run: &TaskFn) {
+    let Some((pool, rest)) = pools.split_first() else {
+        return;
+    };
+    let k = pools.len();
+    let cut = part_range(shards.len(), k, 0).end;
+    let (mine, other_shards) = shards.split_at(cut);
+    let (my_bufs, other_bufs) = bufs.split_at_mut(cut);
+    let mut inner_panic = None;
+    pool.scope(|s| {
+        for (shard, buf) in mine.iter().zip(my_bufs.iter_mut()) {
+            s.spawn(move |_| {
+                for &ti in &shard.tasks {
+                    run(ti, buf);
+                }
+            });
+        }
+        if !rest.is_empty() {
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| run_parts(rest, other_shards, other_bufs, run))) {
+                inner_panic = Some(p);
+            }
+        }
+    });
+    if let Some(p) = inner_panic {
+        std::panic::resume_unwind(p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn shards_of(tasks_per_shard: &[usize]) -> Vec<Shard> {
+        let mut next = 0usize;
+        tasks_per_shard
+            .iter()
+            .map(|&n| {
+                let tasks: Vec<usize> = (next..next + n).collect();
+                next += n;
+                Shard { tasks, cost: n as f64, scratch: 4 }
+            })
+            .collect()
+    }
+
+    fn check_executor(exec: &dyn Executor) {
+        let shards = shards_of(&[3, 1, 4, 2, 5, 1, 1, 7]);
+        let ntasks = 24;
+        let mut bufs: Vec<Vec<f64>> = (0..exec.buffers_needed(shards.len())).map(|_| vec![0.0; 4]).collect();
+        let hits: Vec<AtomicUsize> = (0..ntasks).map(|_| AtomicUsize::new(0)).collect();
+        exec.run_level(&shards, &mut bufs, &|ti, buf| {
+            assert_eq!(buf.len(), 4, "scratch buffer not sized");
+            buf[0] += 1.0; // scratch is writable and private
+            hits[ti].fetch_add(1, Ordering::Relaxed);
+        });
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {t} on {}", exec.name());
+        }
+        // empty level is a no-op
+        exec.run_level(&[], &mut bufs, &|_, _| panic!("ran a task of an empty level"));
+    }
+
+    #[test]
+    fn all_backends_run_each_task_once() {
+        check_executor(&StaticLptExec::new());
+        check_executor(&WorkStealingExec::new());
+        check_executor(&ShardedExec::new(1));
+        check_executor(&ShardedExec::new(3));
+    }
+
+    #[test]
+    fn kind_parsing_round_trips() {
+        for (s, k) in [
+            ("lpt", ExecutorKind::StaticLpt),
+            ("steal", ExecutorKind::WorkStealing),
+            ("sharded:2", ExecutorKind::Sharded(2)),
+            ("sharded:16", ExecutorKind::Sharded(16)),
+        ] {
+            assert_eq!(s.parse::<ExecutorKind>().unwrap(), k);
+            assert_eq!(k.to_string(), s);
+        }
+        assert_eq!("sharded".parse::<ExecutorKind>().unwrap(), ExecutorKind::Sharded(2));
+        assert!("sharded:0".parse::<ExecutorKind>().is_err());
+        assert!("bogus".parse::<ExecutorKind>().is_err());
+    }
+
+    #[test]
+    fn stealing_needs_fewer_buffers_than_chunks() {
+        let e = WorkStealingExec::new();
+        assert!(e.shard_count() >= e.concurrency() * STEAL_CHUNKS_PER_SLOT);
+        assert_eq!(e.buffers_needed(1000), e.concurrency());
+        assert_eq!(e.buffers_needed(1), 1);
+    }
+}

@@ -25,7 +25,13 @@
 //!   level-ordered task lists over contiguous `rows×b` panels: each block's
 //!   matrix data (compressed coupling/transfer matrices included) is decoded
 //!   once and applied to all `b` columns, per-task costs are rescaled by `b`
-//!   for LPT balancing, and per-width shard packings are cached.
+//!   for LPT balancing, and per-width shard packings are cached;
+//! * **pluggable execution backends** — *how* a level's shards run is an
+//!   [`Executor`] chosen per plan ([`ExecutorKind`]: `lpt` static shards,
+//!   `steal` work-stealing deques over finer chunks, `sharded:K` sub-pools
+//!   with pinned affinity; `HMATC_EXEC` / `--executor`). All backends
+//!   produce bitwise-identical results — disjoint write ranges and level
+//!   barriers are preserved; only the thread mapping changes.
 //!
 //! The [`HOperator`] trait makes all three formats (compressed or not)
 //! interchangeable behind one object-safe interface — the batching
@@ -41,9 +47,11 @@
 
 pub mod arena;
 pub mod exec;
+pub mod executor;
 pub mod operator;
 pub mod schedule;
 
 pub use arena::{Arena, BufferPool};
 pub use exec::{H2Plan, HPlan, PlanStats, UniPlan};
+pub use executor::{Executor, ExecutorKind, ShardedExec, StaticLptExec, WorkStealingExec};
 pub use operator::{HOperator, PlannedOperator};

@@ -12,9 +12,15 @@
 //! into the execution as a gather first level and a scatter-add last level
 //! over pooled staging buffers, so the serving stack can accept batches in
 //! the original (external) point ordering without per-call allocation.
+//!
+//! The `*_with` constructors pick the plan-execution backend
+//! ([`ExecutorKind`]: static LPT, work stealing, or sharded sub-pools); the
+//! plain constructors read `HMATC_EXEC`. Results are bitwise identical
+//! across backends — only the thread mapping changes.
 
 use super::arena::Arena;
 use super::exec::{H2Plan, HPlan, PlanStats, UniPlan};
+use super::executor::ExecutorKind;
 use crate::cluster::ClusterTree;
 use crate::h2::H2Matrix;
 use crate::hmatrix::HMatrix;
@@ -191,22 +197,50 @@ pub struct PlannedOperator {
 }
 
 impl PlannedOperator {
+    /// Backend from `HMATC_EXEC` (see [`ExecutorKind::from_env`]).
     pub fn from_h(m: Arc<HMatrix>) -> PlannedOperator {
-        let plan = HPlan::build(&m);
+        PlannedOperator::from_h_with(m, ExecutorKind::from_env())
+    }
+
+    /// Build the plan for the given execution backend — the schedules are
+    /// packed for it, so the choice is per operator and fixed at build time.
+    pub fn from_h_with(m: Arc<HMatrix>, kind: ExecutorKind) -> PlannedOperator {
+        let plan = HPlan::build_with(&m, kind.build());
         let bytes = m.byte_size();
         PlannedOperator { inner: Inner::H { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
     }
 
+    /// Backend from `HMATC_EXEC` (see [`ExecutorKind::from_env`]).
     pub fn from_uniform(m: Arc<UniformHMatrix>) -> PlannedOperator {
-        let plan = UniPlan::build(&m);
+        PlannedOperator::from_uniform_with(m, ExecutorKind::from_env())
+    }
+
+    /// Uniform-H plan on the given execution backend.
+    pub fn from_uniform_with(m: Arc<UniformHMatrix>, kind: ExecutorKind) -> PlannedOperator {
+        let plan = UniPlan::build_with(&m, kind.build());
         let bytes = m.byte_size();
         PlannedOperator { inner: Inner::Uniform { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
     }
 
+    /// Backend from `HMATC_EXEC` (see [`ExecutorKind::from_env`]).
     pub fn from_h2(m: Arc<H2Matrix>) -> PlannedOperator {
-        let plan = H2Plan::build(&m);
+        PlannedOperator::from_h2_with(m, ExecutorKind::from_env())
+    }
+
+    /// H² plan on the given execution backend.
+    pub fn from_h2_with(m: Arc<H2Matrix>, kind: ExecutorKind) -> PlannedOperator {
+        let plan = H2Plan::build_with(&m, kind.build());
         let bytes = m.byte_size();
         PlannedOperator { inner: Inner::H2 { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
+    }
+
+    /// Name of the execution backend this operator's plan runs on.
+    pub fn executor_name(&self) -> String {
+        match &self.inner {
+            Inner::H { plan, .. } => plan.executor_name(),
+            Inner::Uniform { plan, .. } => plan.executor_name(),
+            Inner::H2 { plan, .. } => plan.executor_name(),
+        }
     }
 
     /// Accept and produce vectors in *external* (original point) ordering:

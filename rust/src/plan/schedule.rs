@@ -51,9 +51,27 @@ pub fn balance(costs: &[f64], scratch: &[usize], nshards: usize) -> Vec<Shard> {
     shards
 }
 
-/// Default shard count: pool workers plus the helping scope thread.
+/// Default shard count: pool workers plus the helping scope thread. This is
+/// the per-level bin count of the static backends; the stealing backend
+/// multiplies it by [`STEAL_CHUNKS_PER_SLOT`] (see
+/// [`super::Executor::shard_count`]).
 pub fn default_shards() -> usize {
     crate::par::num_threads() + 1
+}
+
+/// Chunking oversubscription for the work-stealing backend: each worker slot
+/// is seeded with about this many (LPT-packed, byte-cost-balanced) chunks, so
+/// idle slots always find something to steal while per-chunk dispatch
+/// overhead stays amortized.
+pub const STEAL_CHUNKS_PER_SLOT: usize = 4;
+
+/// Contiguous partition of `n` shards across `k` parts: part `p` gets
+/// `part_range(n, k, p)`. Deterministic, so a shard (and thus every task in
+/// it) is pinned to the same part on every execution — the affinity the
+/// `sharded:K` backend relies on for per-pool arena locality.
+pub fn part_range(n: usize, k: usize, p: usize) -> std::ops::Range<usize> {
+    let k = k.max(1);
+    (p * n / k)..((p + 1) * n / k)
 }
 
 /// Model cost of one H-matrix leaf block, split into (matrix bytes, vector
@@ -122,5 +140,24 @@ mod tests {
         let shards = balance(&[1.0], &[3], 4);
         assert_eq!(shards.len(), 1);
         assert_eq!(shards[0].tasks, vec![0]);
+    }
+
+    #[test]
+    fn part_range_covers_exactly() {
+        for n in 0..40usize {
+            for k in 1..8usize {
+                let mut total = 0;
+                for p in 0..k {
+                    let r = part_range(n, k, p);
+                    assert!(r.end <= n);
+                    if p > 0 {
+                        assert_eq!(r.start, part_range(n, k, p - 1).end, "gap at n={n} k={k} p={p}");
+                    }
+                    total += r.len();
+                }
+                assert_eq!(total, n, "n={n} k={k}");
+                assert_eq!(part_range(n, k, k - 1).end, n);
+            }
+        }
     }
 }

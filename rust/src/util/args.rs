@@ -53,8 +53,10 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    /// Typed option with default; panics with a clear message on parse error.
-    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    /// Typed option with default; panics with a clear message on parse
+    /// error. Works for any `FromStr` type — numbers, but also enum-like
+    /// selectors such as `--executor=sharded:4`.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
     where
         T::Err: std::fmt::Display,
     {
@@ -62,6 +64,14 @@ impl Args {
             None => default,
             Some(s) => s.parse().unwrap_or_else(|e| panic!("--{key}={s}: {e}")),
         }
+    }
+
+    /// Alias of [`Args::parse_or`] kept for numeric call sites.
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.parse_or(key, default)
     }
 
     /// List option: comma-separated values.

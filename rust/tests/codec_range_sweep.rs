@@ -4,8 +4,15 @@
 //! (`Blob::get`, robust byte assembly), for every reachable value width.
 //! The same source runs on AVX2 and non-AVX2 builds — CI exercises both —
 //! so the SIMD gather paths are pinned bit-for-bit against the scalar tails.
+//!
+//! The VALR sweeps run the same boundary checks over the *per-column* blobs
+//! a `ZLowRankValr` block/basis stores: VALR picks a different accuracy (and
+//! thus value width) per column, so one compressed block exercises many
+//! codec configurations at streaming-kernel-relevant lengths.
 
-use hmatc::compress::{Blob, Codec};
+use hmatc::compress::{Blob, Codec, ZLowRankValr};
+use hmatc::la::DMatrix;
+use hmatc::lowrank::LowRank;
 use hmatc::util::Rng;
 use std::collections::BTreeSet;
 
@@ -95,6 +102,86 @@ fn fpx32_range_sweep_all_widths() {
     for w in [2usize, 3, 4] {
         assert!(widths.contains(&w), "fpx32 width {w} not exercised: {widths:?}");
     }
+}
+
+/// A low-rank block with prescribed singular decay σ_i = decay^i (the regime
+/// VALR is built for: tail columns tolerate coarse storage).
+fn decaying_block(m: usize, n: usize, k: usize, decay: f64, seed: u64) -> LowRank {
+    let mut rng = Rng::new(seed);
+    let (qu, _) = hmatc::la::qr_thin(&DMatrix::random(m, k, &mut rng));
+    let (qv, _) = hmatc::la::qr_thin(&DMatrix::random(n, k, &mut rng));
+    let mut v = qv;
+    for i in 0..k {
+        let s = decay.powi(i as i32);
+        for x in v.col_mut(i) {
+            *x *= s;
+        }
+    }
+    LowRank { u: qu, v }
+}
+
+/// Sweep every per-column blob of a VALR block for all (begin, end) pairs;
+/// returns the distinct value widths exercised across the columns.
+fn check_valr(z: &ZLowRankValr, tag: &str) -> BTreeSet<usize> {
+    let mut widths = BTreeSet::new();
+    for (i, blob) in z.wcols.iter().enumerate() {
+        widths.insert(blob.bytes_per_value());
+        check_all_ranges(blob, &format!("{tag} wcol {i}"));
+    }
+    for (i, blob) in z.xcols.iter().enumerate() {
+        widths.insert(blob.bytes_per_value());
+        check_all_ranges(blob, &format!("{tag} xcol {i}"));
+    }
+    widths
+}
+
+#[test]
+fn valr_lowrank_range_sweep_both_codecs() {
+    // small row/col counts keep the exhaustive (begin, end) sweep cheap while
+    // still crossing the vectorized decoders' window cutoffs
+    for codec in [Codec::Aflp, Codec::Fpx] {
+        let mut widths = BTreeSet::new();
+        for &(m, n, k) in &[(5usize, 4usize, 3usize), (11, 9, 6), (16, 13, 8)] {
+            for &eps in &[1e-4, 1e-8, 1e-12] {
+                let lr = decaying_block(m, n, k, 0.15, 7000 + m as u64);
+                let z = ZLowRankValr::compress_lowrank(&lr, codec, eps);
+                widths.extend(check_valr(&z, &format!("valr {codec:?} m={m} n={n} k={k} eps={eps}")));
+            }
+        }
+        // strong decay + eps sweep must traverse several per-column widths
+        assert!(widths.len() >= 3, "valr {codec:?} width coverage too thin: {widths:?}");
+    }
+}
+
+#[test]
+fn valr_basis_range_sweep() {
+    // cluster-basis variant: only the W factor, same per-column rule
+    let mut rng = Rng::new(7100);
+    let (w, _) = hmatc::la::qr_thin(&DMatrix::random(13, 6, &mut rng));
+    let sigma: Vec<f64> = (0..6).map(|i| 0.2f64.powi(i)).collect();
+    for codec in [Codec::Aflp, Codec::Fpx] {
+        for &eps in &[1e-5, 1e-10] {
+            let z = ZLowRankValr::compress_basis(&w, &sigma, codec, eps);
+            assert!(z.xcols.is_empty());
+            check_valr(&z, &format!("valr basis {codec:?} eps={eps}"));
+        }
+    }
+}
+
+#[test]
+fn valr_zero_and_rank_deficient_columns() {
+    // σ = 0 tail columns get the coarsest accuracy; zero data must round-trip
+    // through the Zero params and every range of an all-zero blob
+    let mut rng = Rng::new(7200);
+    let (qu, _) = hmatc::la::qr_thin(&DMatrix::random(9, 4, &mut rng));
+    let mut v = DMatrix::random(7, 4, &mut rng);
+    for c in [2usize, 3] {
+        for x in v.col_mut(c) {
+            *x = 0.0;
+        }
+    }
+    let z = ZLowRankValr::compress_lowrank(&LowRank { u: qu, v }, Codec::Aflp, 1e-8);
+    check_valr(&z, "valr zero-tail");
 }
 
 #[test]
