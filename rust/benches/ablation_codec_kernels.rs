@@ -1,72 +1,185 @@
-//! Ablation — compressed gemv kernel variants (Remark 4.1 / §4.3): direct
-//! per-entry decode (Algorithm 8 as printed) vs the 64-entry blockwise
-//! scheme, for AFLP and FPX, across block shapes.
+//! Ablation — compressed gemv kernel variants (Remark 4.1 / §4.3):
 //!
-//! Also measures raw decode throughput per codec: the paper reports FPX
-//! decode up to 50 % faster than AFLP (byte shift vs FP multiply-add).
+//! 1. raw decode throughput per codec × byte width, runtime-dispatched SIMD
+//!    vs forced-scalar (pins the "no special `RUSTFLAGS` needed" claim: the
+//!    dispatched build must match the old `target-feature=+avx2` build);
+//! 2. `zgemv` kernel sweep across byte widths: **fused** decode–FMA vs the
+//!    legacy **blockwise** stack-buffer scheme vs **direct** per-entry
+//!    random access (Algorithm 8 as printed);
+//! 3. compressed H-MVM plan execution with fused vs blockwise kernels — the
+//!    end-to-end number the fused path exists for.
+//!
+//! Emits `BENCH_ablation_codec.json` (stamped with `executor` + `threads`
+//! via [`hmatc::bench::write_bench_json`]) plus the `bench_results/` archive
+//! copy. `--quick` shrinks sizes and sampling so CI can smoke-run it.
 
-use hmatc::bench::{bench_fn, write_result, Table};
-use hmatc::compress::{Blob, Codec};
-use hmatc::hmatrix::ZDense;
+use hmatc::bench::workloads::Problem;
+use hmatc::bench::{bench_fn, write_bench_json, write_result, Table};
+use hmatc::compress::dispatch::{self, KernelMode, SimdLevel};
+use hmatc::compress::{Blob, Codec, CompressionConfig};
+use hmatc::hmatrix::{HMatrix, ZDense};
 use hmatc::la::DMatrix;
-use hmatc::mvm::{zgemv_blocked, zgemv_direct};
+use hmatc::mvm::{zgemv_blockwise, zgemv_direct, zgemv_fused};
+use hmatc::plan::{Arena, HPlan};
+use hmatc::util::args::Args;
 use hmatc::util::json::Json;
 use hmatc::util::Rng;
 
-fn main() {
-    let mut rng = Rng::new(8);
-    let eps = 1e-6;
+/// MVM flops of an H-matrix (2mn per dense block, 2k(m+n) per low-rank; a
+/// rank-0 admissible block executes ~nothing and is counted as 0).
+fn h_flops(h: &HMatrix) -> f64 {
+    let mut fl = 0.0;
+    for b in h.blocks.iter().flatten() {
+        let (m, n, k) = (b.nrows() as f64, b.ncols() as f64, b.rank() as f64);
+        fl += if b.is_lowrank() { 2.0 * k * (m + n) } else { 2.0 * m * n };
+    }
+    fl
+}
 
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let (warm, samples, min_secs) = if quick { (0, 2, 0.002) } else { (1, 5, 0.02) };
+    let mut rng = Rng::new(8);
+
+    println!("simd: {} | codec kernels: {}", dispatch::simd_name(), dispatch::kernel_mode_name());
+
+    // -- 1. raw decode throughput across byte widths, dispatched vs scalar --
     println!("\n== Ablation: raw decode throughput (GB/s of decoded f64) ==");
+    let n_decode = if quick { 1 << 16 } else { 1 << 20 };
     let data = {
-        let mut v = vec![0.0; 1 << 20];
+        let mut v = vec![0.0; n_decode];
         rng.fill_normal(&mut v);
         v
     };
     let mut out = vec![0.0; data.len()];
-    let mut t = Table::new(&["codec", "bytes/val", "decode GB/s (output)"]);
-    let mut doc = Vec::new();
+    let mut t = Table::new(&["codec", "eps", "bytes/val", "GB/s (dispatched)", "GB/s (scalar)", "simd gain"]);
+    let mut decode_doc = Vec::new();
     for codec in [Codec::Aflp, Codec::Fpx] {
-        let blob = Blob::compress(codec, &data, eps);
-        let r = bench_fn(1, 5, 0.05, || blob.decompress_into(&mut out));
-        let gbs = (data.len() * 8) as f64 / r.median / 1e9;
-        t.row(vec![codec.name().into(), blob.bytes_per_value().to_string(), format!("{gbs:.2}")]);
-        doc.push(Json::obj(vec![
-            ("codec", codec.name().into()),
-            ("bytes_per_value", blob.bytes_per_value().into()),
-            ("decode_gbs", gbs.into()),
-        ]));
+        for &eps in &[1e-2, 1e-4, 1e-8, 1e-12] {
+            let blob = Blob::compress(codec, &data, eps);
+            let r = bench_fn(warm, samples, min_secs, || blob.decompress_into(&mut out));
+            dispatch::force_simd(Some(SimdLevel::Scalar));
+            let rs = bench_fn(warm, samples, min_secs, || blob.decompress_into(&mut out));
+            dispatch::force_simd(None);
+            let gbs = (data.len() * 8) as f64 / r.median / 1e9;
+            let gbs_s = (data.len() * 8) as f64 / rs.median / 1e9;
+            t.row(vec![
+                codec.name().into(),
+                format!("{eps:.0e}"),
+                blob.bytes_per_value().to_string(),
+                format!("{gbs:.2}"),
+                format!("{gbs_s:.2}"),
+                format!("{:.2}x", gbs / gbs_s),
+            ]);
+            decode_doc.push(Json::obj(vec![
+                ("codec", codec.name().into()),
+                ("eps", eps.into()),
+                ("bytes_per_value", blob.bytes_per_value().into()),
+                ("decode_gbs", gbs.into()),
+                ("decode_gbs_scalar", gbs_s.into()),
+                ("simd", dispatch::simd_name().into()),
+            ]));
+        }
     }
     t.print();
 
-    println!("\n== Ablation: zgemv direct vs blockwise ==");
-    let mut t2 = Table::new(&["codec", "shape", "direct", "blocked", "blocked speedup"]);
-    let mut doc2 = Vec::new();
-    for (m, n) in [(64usize, 64usize), (256, 256), (1024, 256)] {
+    // -- 2. zgemv kernel sweep: fused vs blockwise vs direct, per width --
+    println!("\n== Ablation: zgemv fused vs blockwise vs direct ==");
+    let shapes: &[(usize, usize)] = if quick { &[(256, 128)] } else { &[(64, 64), (256, 256), (1024, 256)] };
+    let mut t2 = Table::new(&["codec", "shape", "bytes/val", "direct", "blockwise", "fused", "fused GF/s", "fused/blockwise"]);
+    let mut zgemv_doc = Vec::new();
+    for &(m, n) in shapes {
         let mat = DMatrix::random(m, n, &mut rng);
         let x = rng.vector(n);
         let mut y = vec![0.0; m];
+        let flops = 2.0 * m as f64 * n as f64;
         for codec in [Codec::Aflp, Codec::Fpx] {
-            let z = ZDense::compress(&mat, codec, eps);
-            let rd = bench_fn(1, 5, 0.02, || zgemv_direct(1.0, &z, &x, &mut y));
-            let rb = bench_fn(1, 5, 0.02, || zgemv_blocked(1.0, &z, &x, &mut y));
-            t2.row(vec![
-                codec.name().into(),
-                format!("{m}x{n}"),
-                hmatc::util::fmt_secs(rd.median),
-                hmatc::util::fmt_secs(rb.median),
-                format!("{:.2}x", rd.median / rb.median),
-            ]);
-            doc2.push(Json::obj(vec![
-                ("codec", codec.name().into()),
-                ("m", m.into()),
-                ("n", n.into()),
-                ("direct", rd.median.into()),
-                ("blocked", rb.median.into()),
-            ]));
+            for &eps in &[1e-2, 1e-6, 1e-10] {
+                let z = ZDense::compress(&mat, codec, eps);
+                let rd = bench_fn(warm, samples, min_secs, || zgemv_direct(1.0, &z, &x, &mut y));
+                let rb = bench_fn(warm, samples, min_secs, || zgemv_blockwise(1.0, &z, &x, &mut y));
+                let rf = bench_fn(warm, samples, min_secs, || zgemv_fused(1.0, &z, &x, &mut y));
+                t2.row(vec![
+                    codec.name().into(),
+                    format!("{m}x{n}"),
+                    z.blob.bytes_per_value().to_string(),
+                    hmatc::util::fmt_secs(rd.median),
+                    hmatc::util::fmt_secs(rb.median),
+                    hmatc::util::fmt_secs(rf.median),
+                    format!("{:.2}", flops / rf.median / 1e9),
+                    format!("{:.2}x", rb.median / rf.median),
+                ]);
+                zgemv_doc.push(Json::obj(vec![
+                    ("codec", codec.name().into()),
+                    ("m", m.into()),
+                    ("n", n.into()),
+                    ("eps", eps.into()),
+                    ("bytes_per_value", z.blob.bytes_per_value().into()),
+                    ("direct", rd.median.into()),
+                    ("blockwise", rb.median.into()),
+                    ("fused", rf.median.into()),
+                    ("fused_gflops", (flops / rf.median / 1e9).into()),
+                    ("blockwise_gflops", (flops / rb.median / 1e9).into()),
+                    ("fused_speedup", (rb.median / rf.median).into()),
+                ]));
+            }
         }
     }
     t2.print();
 
-    write_result("ablation_codec_kernels", &Json::obj(vec![("decode", Json::arr(doc)), ("zgemv", Json::arr(doc2))]));
+    // -- 3. compressed H-MVM plan tasks: fused vs blockwise end to end --
+    println!("\n== Ablation: compressed H-MVM (plan executor), fused vs blockwise ==");
+    let level = if quick { 2 } else { 3 };
+    let eps = 1e-6; // the paper's default block accuracy
+    let p = Problem::new(level);
+    let mut t3 = Table::new(&["codec", "n", "blockwise GF/s", "fused GF/s", "fused/blockwise"]);
+    let mut hmvm_doc = Vec::new();
+    for codec in [Codec::Aflp, Codec::Fpx] {
+        let mut h = p.build_h(eps);
+        h.compress(&CompressionConfig { codec, eps, valr: true });
+        let flops = h_flops(&h);
+        let plan = HPlan::build(&h);
+        let mut arena = Arena::new();
+        let nn = p.n();
+        let x = rng.vector(nn);
+        let mut y = vec![0.0; nn];
+        dispatch::set_kernel_mode(Some(KernelMode::Blockwise));
+        let rb = bench_fn(warm, samples, min_secs, || plan.execute(&h, 1.0, &x, &mut y, &mut arena));
+        dispatch::set_kernel_mode(Some(KernelMode::Fused));
+        let rf = bench_fn(warm, samples, min_secs, || plan.execute(&h, 1.0, &x, &mut y, &mut arena));
+        dispatch::set_kernel_mode(None);
+        let gf_b = flops / rb.median / 1e9;
+        let gf_f = flops / rf.median / 1e9;
+        t3.row(vec![
+            codec.name().into(),
+            nn.to_string(),
+            format!("{gf_b:.2}"),
+            format!("{gf_f:.2}"),
+            format!("{:.2}x", rb.median / rf.median),
+        ]);
+        hmvm_doc.push(Json::obj(vec![
+            ("codec", codec.name().into()),
+            ("n", nn.into()),
+            ("eps", eps.into()),
+            ("flops", flops.into()),
+            ("blockwise", rb.median.into()),
+            ("fused", rf.median.into()),
+            ("blockwise_gflops", gf_b.into()),
+            ("fused_gflops", gf_f.into()),
+            ("fused_speedup", (rb.median / rf.median).into()),
+        ]));
+    }
+    t3.print();
+
+    let doc = Json::obj(vec![
+        ("quick", quick.into()),
+        ("simd", dispatch::simd_name().into()),
+        ("kernels", dispatch::kernels_label().into()),
+        ("decode", Json::arr(decode_doc)),
+        ("zgemv", Json::arr(zgemv_doc)),
+        ("hmvm", Json::arr(hmvm_doc)),
+    ]);
+    write_result("ablation_codec_kernels", &doc);
+    write_bench_json("ablation_codec", &doc);
 }

@@ -110,157 +110,29 @@ pub fn compress(data: &[f64], eps: f64) -> Blob {
     Blob { params: CodecParams::Aflp { bytes_per, e_bits: e_bits as u8, scale: vmin }, n, bytes }
 }
 
-/// Decode one packed word by direct IEEE-754 bit assembly: the stored
-/// mantissa becomes the f64 fraction field, the (non-negative) stored
-/// exponent is rebiased, one multiply applies the block scale. No
-/// transcendentals on the decode path (this is the MVM hot loop).
-#[inline(always)]
-fn decode_word(word: u64, e_bits: u32, total_bits: u32, scale: f64, zero_marker: u64) -> f64 {
-    let e = word & zero_marker; // zero_marker == exponent mask
-    if e == zero_marker {
-        return 0.0;
-    }
-    let m_bits = total_bits - 1 - e_bits;
-    let mant = (word >> e_bits) & ((1u64 << m_bits) - 1);
-    let sign = (word >> (total_bits - 1)) & 1;
-    if e <= 1023 {
-        // common case: assemble the f64 directly
-        let frac_bits = if m_bits <= 52 { mant << (52 - m_bits) } else { mant >> (m_bits - 52) };
-        let bits = (sign << 63) | ((1023 + e) << 52) | frac_bits;
-        f64::from_bits(bits) * scale
-    } else {
-        // extreme dynamic range (e > 1023): 2^e itself overflows an f64, so
-        // fold the exponent into the block scale in bounded steps; the
-        // mantissa is scaled by its true width 2^-m_bits (a plain division
-        // by 2^min(m_bits,52) produced wrong magnitudes for m_bits > 52)
-        let frac = 1.0 + mant as f64 * 0.5f64.powi(m_bits as i32);
-        let mut sc = scale;
-        let mut rem = e;
-        while rem > 0 {
-            let step = rem.min(512);
-            sc *= f64::powi(2.0, step as i32);
-            rem -= step;
-        }
-        let v = frac * sc;
-        if sign == 1 {
-            -v
-        } else {
-            v
-        }
-    }
-}
-
-fn params(blob: &Blob) -> (usize, u32, f64) {
-    match blob.params {
-        CodecParams::Aflp { bytes_per, e_bits, scale } => (bytes_per as usize, e_bits as u32, scale),
-        _ => unreachable!("not an AFLP blob"),
-    }
-}
-
 /// Bulk decode.
 pub fn decompress_into(blob: &Blob, out: &mut [f64]) {
     decompress_range(blob, 0, blob.n, out);
 }
 
-/// Decode values [begin, end) — branchless direct bit assembly on the fast
-/// path (8-byte masked loads, arithmetic zero-select) so the compiler can
-/// vectorize; byte-assembled tail + rare-parameter fallback via
-/// [`decode_word`].
+/// Decode values [begin, end) — branchless direct IEEE-754 bit assembly: the
+/// stored mantissa becomes the f64 fraction field, the (non-negative) stored
+/// exponent is rebiased, one multiply applies the block scale; no
+/// transcendentals on the decode path. The kernel (AVX2 gather bit assembly
+/// vs scalar; extreme-dynamic-range fallback for e_bits ≥ 11 or m_bits > 52)
+/// is picked by the runtime ISA dispatch ([`super::dispatch`]), with all
+/// codec parameters resolved once per call.
 pub fn decompress_range(blob: &Blob, begin: usize, end: usize, out: &mut [f64]) {
-    let (b, e_bits, scale) = params(blob);
-    let total_bits = (b * 8) as u32;
-    let m_bits = total_bits - 1 - e_bits;
-    let zero_marker = (1u64 << e_bits) - 1;
-    let bytes = &blob.bytes;
-    let n = end - begin;
-    debug_assert_eq!(out.len(), n);
-
-    if e_bits >= 11 || m_bits > 52 {
-        // extreme dynamic range / over-wide mantissa: generic path
-        let mut it = out.iter_mut();
-        crate::compress::for_each_word(bytes, b, begin, end, |w| {
-            *it.next().unwrap() = decode_word(w, e_bits, total_bits, scale, zero_marker);
-        });
-        return;
-    }
-
-    let word_mask: u64 = if b >= 8 { u64::MAX } else { (1u64 << (8 * b)) - 1 };
-    let mant_mask: u64 = (1u64 << m_bits) - 1;
-    let mshift = 52 - m_bits;
-    // values whose 8-byte load stays in bounds
-    let fast_total = if bytes.len() >= 8 { (bytes.len() - 8) / b + 1 } else { 0 };
-    let fast = fast_total.min(end).saturating_sub(begin);
-
-    let mut k0 = 0usize;
-    #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
-    {
-        // SIMD decode, 4 values per iteration (the CPU analogue of the
-        // paper's AVX512 conversion kernels): byte-offset gather, vector
-        // mask/shift bit assembly, one mul_pd for the block scale.
-        use std::arch::x86_64::*;
-        unsafe {
-            let base = bytes.as_ptr() as *const i64;
-            let wmask_v = _mm256_set1_epi64x(word_mask as i64);
-            let emask_v = _mm256_set1_epi64x(zero_marker as i64);
-            let mantmask_v = _mm256_set1_epi64x(mant_mask as i64);
-            let c1023 = _mm256_set1_epi64x(1023);
-            let scale_v = _mm256_set1_pd(scale);
-            let cnt_e = _mm_cvtsi32_si128(e_bits as i32);
-            let cnt_top = _mm_cvtsi32_si128(total_bits as i32 - 1);
-            let cnt_63 = _mm_cvtsi32_si128(63);
-            let cnt_52 = _mm_cvtsi32_si128(52);
-            let cnt_m = _mm_cvtsi32_si128(mshift as i32);
-            let step = _mm256_set1_epi64x(4 * b as i64);
-            let mut off_v = _mm256_setr_epi64x(
-                (begin * b) as i64,
-                ((begin + 1) * b) as i64,
-                ((begin + 2) * b) as i64,
-                ((begin + 3) * b) as i64,
-            );
-            while k0 + 4 <= fast {
-                let w = _mm256_and_si256(_mm256_i64gather_epi64::<1>(base, off_v), wmask_v);
-                let e = _mm256_and_si256(w, emask_v);
-                let is_zero = _mm256_cmpeq_epi64(e, emask_v);
-                let mant = _mm256_and_si256(_mm256_srl_epi64(w, cnt_e), mantmask_v);
-                let sign = _mm256_sll_epi64(_mm256_srl_epi64(w, cnt_top), cnt_63);
-                let expf = _mm256_sll_epi64(_mm256_add_epi64(e, c1023), cnt_52);
-                let frac = _mm256_sll_epi64(mant, cnt_m);
-                let bits = _mm256_andnot_si256(is_zero, _mm256_or_si256(sign, _mm256_or_si256(expf, frac)));
-                let v = _mm256_mul_pd(_mm256_castsi256_pd(bits), scale_v);
-                _mm256_storeu_pd(out.as_mut_ptr().add(k0), v);
-                off_v = _mm256_add_epi64(off_v, step);
-                k0 += 4;
-            }
-        }
-    }
-
-    for (k, o) in out[k0..fast].iter_mut().enumerate() {
-        let off = (begin + k0 + k) * b;
-        let arr: [u8; 8] = unsafe { bytes.get_unchecked(off..off + 8) }.try_into().unwrap();
-        let w = u64::from_le_bytes(arr) & word_mask;
-        let e = w & zero_marker;
-        let mant = (w >> e_bits) & mant_mask;
-        let sign = w >> (total_bits - 1);
-        let keep = ((e != zero_marker) as u64).wrapping_neg();
-        let bits = ((sign << 63) | ((1023 + e) << 52) | (mant << mshift)) & keep;
-        *o = f64::from_bits(bits) * scale;
-    }
-    for (k, o) in out[fast..n].iter_mut().enumerate() {
-        let i = begin + fast + k;
-        let mut buf = [0u8; 8];
-        buf[..b].copy_from_slice(&bytes[i * b..i * b + b]);
-        *o = decode_word(u64::from_le_bytes(buf), e_bits, total_bits, scale, zero_marker);
-    }
+    debug_assert!(matches!(blob.params, CodecParams::Aflp { .. }), "not an AFLP blob");
+    super::dispatch::range(&blob.params, &blob.bytes, begin, end, out);
 }
 
-/// Random access.
+/// Random access (resolves codec parameters per call — hot loops hold a
+/// [`super::dispatch::DecodeCursor`] instead).
 #[inline]
 pub fn get(blob: &Blob, i: usize) -> f64 {
-    let (b, e_bits, scale) = params(blob);
-    let total_bits = (b * 8) as u32;
-    let zero_marker = (1u64 << e_bits) - 1;
-    let w = crate::compress::load_word_at(&blob.bytes, b, i);
-    decode_word(w, e_bits, total_bits, scale, zero_marker)
+    debug_assert!(matches!(blob.params, CodecParams::Aflp { .. }), "not an AFLP blob");
+    super::dispatch::get(&blob.params, &blob.bytes, i)
 }
 
 #[cfg(test)]

@@ -1,0 +1,1349 @@
+//! Codec-kernel subsystem: runtime ISA dispatch, streaming decode cursors and
+//! fused decode–FMA kernels (the paper's Remark 4.1 made a first-class
+//! execution mode).
+//!
+//! Three pieces, layered:
+//!
+//! 1. **Runtime SIMD dispatch.** The AVX2 decode paths used to be gated
+//!    behind compile-time `target_feature=+avx2`, so a plain
+//!    `cargo build --release` silently fell back to scalar decode. Here the
+//!    ISA level is detected once at runtime (`is_x86_feature_detected!`,
+//!    overridable with `HMATC_SIMD=scalar` for debugging) and resolved into a
+//!    per-`(codec, width)` [`KernelTable`] of function pointers — SIMD decode
+//!    is active in every release build.
+//!
+//! 2. **Resolved codec parameters.** [`Resolved`] holds everything a decode
+//!    needs (byte width, shift counts, field masks, block scale), computed
+//!    *once per blob* instead of re-matched per `decompress_range` call. The
+//!    [`DecodeCursor`] pairs a resolved blob with a position, so streamed
+//!    apply paths pay the codec setup once and then just yield chunks.
+//!
+//! 3. **Fused decode–FMA kernels.** `dot`/`axpy` (and the `*_panel` variants
+//!    for gemm-shaped multi-RHS tasks) keep decoded lanes in registers and
+//!    combine them with the vector data directly — no round trip through a
+//!    stack buffer between "decompress" and "FMA".
+//!
+//! Determinism contract (what keeps `tests/executor_equivalence.rs` bitwise
+//! green and results independent of the machine the build lands on):
+//!
+//! * range decode and `axpy` are **bitwise identical** between the scalar and
+//!   AVX2 kernels (pure bit assembly plus at most one multiply per element);
+//! * `dot` accumulates stride-4 lane sums over the values whose unaligned
+//!   8-byte load stays in bounds, folds the remaining values serially into
+//!   lane 0, and reduces as `(s0+s1)+(s2+s3)` — the SIMD and scalar kernels
+//!   perform the identical sequence of rounded operations. (This is the same
+//!   *style* as [`crate::la::blas::dot`] but not bit-equal to decode-then-dot:
+//!   the unrolled span ends at the 8-byte-load window, not at `n & !3`.);
+//! * the panel kernels run the same per-column operation sequence as the
+//!   single-vector kernels, so batched and per-column products agree bitwise
+//!   for batch widths up to [`PANEL_FUSE_MAX`] (beyond that the apply helpers
+//!   switch to the decode-once blockwise layout — see below).
+
+use super::{Blob, CodecParams};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+// ---------------------------------------------------------------------------
+// Runtime ISA + kernel-mode selection
+// ---------------------------------------------------------------------------
+
+/// Instruction-set level the decode kernels dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar kernels (also the forced-debug mode).
+    Scalar,
+    /// AVX2 gather/shift kernels (x86-64, detected at runtime).
+    Avx2,
+}
+
+/// How the compressed apply kernels execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Fused decode–FMA: decoded lanes stay in registers (default).
+    Fused,
+    /// Legacy blockwise scheme: 64-entry stack buffer between decode and FMA
+    /// (kept for the ablation bench and as a debugging fallback).
+    Blockwise,
+}
+
+// 0 = unresolved, 1 = scalar, 2 = avx2
+static SIMD: AtomicU8 = AtomicU8::new(0);
+// 0 = unresolved, 1 = fused, 2 = blockwise
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+fn detect() -> u8 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return 2;
+        }
+    }
+    1
+}
+
+/// The dispatched ISA level, resolved once from the CPU (and `HMATC_SIMD`:
+/// `scalar` forces the portable kernels, anything else auto-detects).
+pub fn simd_level() -> SimdLevel {
+    match SIMD.load(Ordering::Relaxed) {
+        2 => SimdLevel::Avx2,
+        1 => SimdLevel::Scalar,
+        _ => {
+            let v = match std::env::var("HMATC_SIMD").ok().as_deref() {
+                Some("scalar") => 1,
+                Some("avx2") | Some("auto") | None => detect(),
+                Some(other) => {
+                    eprintln!("hmatc: unknown HMATC_SIMD '{other}' (scalar|avx2|auto) — auto-detecting");
+                    detect()
+                }
+            };
+            SIMD.store(v, Ordering::Relaxed);
+            if v == 2 {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+    }
+}
+
+/// Force an ISA level (tests / benches); `None` re-resolves from the
+/// environment and CPU on next use. Forcing `Avx2` on a CPU without it falls
+/// back to scalar.
+pub fn force_simd(level: Option<SimdLevel>) {
+    let v = match level {
+        None => 0,
+        Some(SimdLevel::Scalar) => 1,
+        Some(SimdLevel::Avx2) => detect(),
+    };
+    SIMD.store(v, Ordering::Relaxed);
+}
+
+/// Name of the dispatched ISA level (logs, `hmatc info`, bench rows).
+pub fn simd_name() -> &'static str {
+    match simd_level() {
+        SimdLevel::Avx2 => "avx2",
+        SimdLevel::Scalar => "scalar",
+    }
+}
+
+/// The selected kernel mode, resolved once from `HMATC_CODEC_KERNELS`
+/// (`fused` | `blockwise`, default `fused`).
+pub fn kernel_mode() -> KernelMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => KernelMode::Fused,
+        2 => KernelMode::Blockwise,
+        _ => {
+            let v = match std::env::var("HMATC_CODEC_KERNELS").ok().as_deref() {
+                Some("blockwise") => 2,
+                Some("fused") | None => 1,
+                Some(other) => {
+                    eprintln!("hmatc: unknown HMATC_CODEC_KERNELS '{other}' (fused|blockwise) — using fused");
+                    1
+                }
+            };
+            MODE.store(v, Ordering::Relaxed);
+            if v == 2 {
+                KernelMode::Blockwise
+            } else {
+                KernelMode::Fused
+            }
+        }
+    }
+}
+
+/// Force a kernel mode (tests / the ablation bench); `None` re-resolves from
+/// the environment on next use.
+pub fn set_kernel_mode(mode: Option<KernelMode>) {
+    let v = match mode {
+        None => 0,
+        Some(KernelMode::Fused) => 1,
+        Some(KernelMode::Blockwise) => 2,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// Name of the selected kernel mode.
+pub fn kernel_mode_name() -> &'static str {
+    match kernel_mode() {
+        KernelMode::Fused => "fused",
+        KernelMode::Blockwise => "blockwise",
+    }
+}
+
+/// Combined label recorded in plan metadata and bench rows, e.g.
+/// `"fused+avx2"`.
+pub fn kernels_label() -> &'static str {
+    match (kernel_mode(), simd_level()) {
+        (KernelMode::Fused, SimdLevel::Avx2) => "fused+avx2",
+        (KernelMode::Fused, SimdLevel::Scalar) => "fused+scalar",
+        (KernelMode::Blockwise, SimdLevel::Avx2) => "blockwise+avx2",
+        (KernelMode::Blockwise, SimdLevel::Scalar) => "blockwise+scalar",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resolved per-blob decode parameters
+// ---------------------------------------------------------------------------
+
+/// Decode parameters resolved once per blob: byte width, shift counts, field
+/// masks and the block scale. All kernels take this by reference — nothing is
+/// re-derived per chunk or per element.
+#[derive(Clone, Copy, Debug)]
+pub struct Resolved {
+    /// Bytes per value (0 for the zero codec).
+    pub(crate) b: usize,
+    /// FPX: left shift restoring the IEEE bit position.
+    pub(crate) shift: u32,
+    /// AFLP: mask selecting the stored word's bits.
+    pub(crate) word_mask: u64,
+    /// AFLP: exponent mask == reserved zero marker.
+    pub(crate) zero_marker: u64,
+    /// AFLP: mantissa mask (m_bits wide).
+    pub(crate) mant_mask: u64,
+    /// AFLP: exponent field width.
+    pub(crate) e_bits: u32,
+    /// AFLP: stored word width in bits (8·b).
+    pub(crate) total_bits: u32,
+    /// AFLP fast path: 52 − m_bits (mantissa up-shift into the f64 fraction).
+    pub(crate) mshift: u32,
+    /// AFLP: block scale (v_min).
+    pub(crate) scale: f64,
+}
+
+const ZERO_RESOLVED: Resolved = Resolved {
+    b: 0,
+    shift: 0,
+    word_mask: 0,
+    zero_marker: 0,
+    mant_mask: 0,
+    e_bits: 0,
+    total_bits: 0,
+    mshift: 0,
+    scale: 0.0,
+};
+
+/// One decoded-value transform: packed little-endian word → f64. The word may
+/// carry a neighbour's bytes above the value width — every decoder masks or
+/// shifts them away itself.
+trait Decode: Copy {
+    fn decode(r: &Resolved, w: u64) -> f64;
+}
+
+/// FPX over FP32: truncate to the low 4 loaded bytes, shift the stored bytes
+/// to the top, bitcast, widen.
+#[derive(Clone, Copy)]
+struct DFpx32;
+
+impl Decode for DFpx32 {
+    #[inline(always)]
+    fn decode(r: &Resolved, w: u64) -> f64 {
+        f32::from_bits((w as u32) << r.shift) as f64
+    }
+}
+
+/// FPX over FP64: shift the stored bytes to the top, bitcast.
+#[derive(Clone, Copy)]
+struct DFpx64;
+
+impl Decode for DFpx64 {
+    #[inline(always)]
+    fn decode(r: &Resolved, w: u64) -> f64 {
+        f64::from_bits(w << r.shift)
+    }
+}
+
+/// AFLP fast path (e_bits < 11, m_bits ≤ 52): branchless direct IEEE-754 bit
+/// assembly with an arithmetic zero-select, then one multiply for the scale.
+#[derive(Clone, Copy)]
+struct DAflp;
+
+impl Decode for DAflp {
+    #[inline(always)]
+    fn decode(r: &Resolved, w: u64) -> f64 {
+        let w = w & r.word_mask;
+        let e = w & r.zero_marker;
+        let mant = (w >> r.e_bits) & r.mant_mask;
+        let sign = w >> (r.total_bits - 1);
+        let keep = ((e != r.zero_marker) as u64).wrapping_neg();
+        let bits = ((sign << 63) | ((1023 + e) << 52) | (mant << r.mshift)) & keep;
+        f64::from_bits(bits) * r.scale
+    }
+}
+
+/// AFLP generic path (extreme dynamic range or over-wide mantissa): stored
+/// exponents may exceed 1023, so 2^e is folded into the scale in bounded
+/// power-of-two steps.
+#[derive(Clone, Copy)]
+struct DAflpWide;
+
+impl Decode for DAflpWide {
+    #[inline(always)]
+    fn decode(r: &Resolved, w: u64) -> f64 {
+        let w = w & r.word_mask;
+        let e = w & r.zero_marker;
+        if e == r.zero_marker {
+            return 0.0;
+        }
+        let m_bits = r.total_bits - 1 - r.e_bits;
+        let mant = (w >> r.e_bits) & r.mant_mask;
+        let sign = (w >> (r.total_bits - 1)) & 1;
+        if e <= 1023 {
+            let frac_bits = if m_bits <= 52 { mant << (52 - m_bits) } else { mant >> (m_bits - 52) };
+            let bits = (sign << 63) | ((1023 + e) << 52) | frac_bits;
+            f64::from_bits(bits) * r.scale
+        } else {
+            let frac = 1.0 + mant as f64 * 0.5f64.powi(m_bits as i32);
+            let mut sc = r.scale;
+            let mut rem = e;
+            while rem > 0 {
+                let step = rem.min(512);
+                sc *= f64::powi(2.0, step as i32);
+                rem -= step;
+            }
+            let v = frac * sc;
+            if sign == 1 {
+                -v
+            } else {
+                v
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Word loads
+// ---------------------------------------------------------------------------
+
+/// Unaligned 8-byte load (fast path); caller guarantees `off + 8` in bounds.
+#[inline(always)]
+fn load8(bytes: &[u8], off: usize) -> u64 {
+    let arr: [u8; 8] = bytes[off..off + 8].try_into().unwrap();
+    u64::from_le_bytes(arr)
+}
+
+/// Byte-assembled load for the last values of a buffer (const width).
+#[inline(always)]
+fn load_tail<const B: usize>(bytes: &[u8], off: usize) -> u64 {
+    let mut buf = [0u8; 8];
+    buf[..B].copy_from_slice(&bytes[off..off + B]);
+    u64::from_le_bytes(buf)
+}
+
+/// Per-value load picking the fast or tail path (const width).
+#[inline(always)]
+fn load_at<const B: usize>(bytes: &[u8], i: usize) -> u64 {
+    let off = i * B;
+    if off + 8 <= bytes.len() {
+        load8(bytes, off)
+    } else {
+        load_tail::<B>(bytes, off)
+    }
+}
+
+/// Runtime-width variant of [`load_at`] (AVX2 kernel tails, random access).
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+#[inline(always)]
+fn load_at_rt(bytes: &[u8], b: usize, i: usize) -> u64 {
+    let off = i * b;
+    if off + 8 <= bytes.len() {
+        load8(bytes, off)
+    } else {
+        let mut buf = [0u8; 8];
+        buf[..b].copy_from_slice(&bytes[off..off + b]);
+        u64::from_le_bytes(buf)
+    }
+}
+
+/// Number of values in `[begin, begin + n)` whose unaligned 8-byte load stays
+/// inside the buffer.
+#[inline(always)]
+fn fast8(bytes_len: usize, b: usize, begin: usize, n: usize) -> usize {
+    let fast_total = if bytes_len >= 8 { (bytes_len - 8) / b + 1 } else { 0 };
+    fast_total.min(begin + n).saturating_sub(begin)
+}
+
+/// Right-hand sides processed per fused panel pass (bounds the accumulator
+/// footprint; larger batches run in groups).
+const PANEL_GROUP: usize = 8;
+
+/// Largest batch width for which the fused panel kernels are a win: one
+/// decode pass with per-RHS accumulators in registers. Beyond this the fused
+/// kernels would re-decode the column once per [`PANEL_GROUP`]-sized group,
+/// so the apply helpers in [`crate::mvm::kernels`] switch to the blockwise
+/// layout instead (decode each chunk exactly once for all right-hand sides).
+pub const PANEL_FUSE_MAX: usize = PANEL_GROUP;
+
+// ---------------------------------------------------------------------------
+// Scalar kernel engine (monomorphized per codec family × byte width)
+// ---------------------------------------------------------------------------
+
+fn s_range<D: Decode, const B: usize>(r: &Resolved, bytes: &[u8], begin: usize, end: usize, out: &mut [f64]) {
+    let n = end - begin;
+    debug_assert_eq!(out.len(), n);
+    let fast = fast8(bytes.len(), B, begin, n);
+    for (k, o) in out[..fast].iter_mut().enumerate() {
+        *o = D::decode(r, load8(bytes, (begin + k) * B));
+    }
+    for (k, o) in out[fast..n].iter_mut().enumerate() {
+        *o = D::decode(r, load_tail::<B>(bytes, (begin + fast + k) * B));
+    }
+}
+
+fn s_get<D: Decode, const B: usize>(r: &Resolved, bytes: &[u8], i: usize) -> f64 {
+    D::decode(r, load_at::<B>(bytes, i))
+}
+
+fn s_dot<D: Decode, const B: usize>(r: &Resolved, bytes: &[u8], begin: usize, x: &[f64]) -> f64 {
+    let n = x.len();
+    let fast = fast8(bytes.len(), B, begin, n);
+    let mut s0 = 0.0f64;
+    let mut s1 = 0.0f64;
+    let mut s2 = 0.0f64;
+    let mut s3 = 0.0f64;
+    let mut i = 0usize;
+    while i + 4 <= fast {
+        let off = (begin + i) * B;
+        s0 += D::decode(r, load8(bytes, off)) * x[i];
+        s1 += D::decode(r, load8(bytes, off + B)) * x[i + 1];
+        s2 += D::decode(r, load8(bytes, off + 2 * B)) * x[i + 2];
+        s3 += D::decode(r, load8(bytes, off + 3 * B)) * x[i + 3];
+        i += 4;
+    }
+    while i < n {
+        s0 += D::decode(r, load_at::<B>(bytes, begin + i)) * x[i];
+        i += 1;
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+fn s_axpy<D: Decode, const B: usize>(r: &Resolved, bytes: &[u8], begin: usize, w: f64, y: &mut [f64]) {
+    let n = y.len();
+    let fast = fast8(bytes.len(), B, begin, n);
+    for (k, o) in y[..fast].iter_mut().enumerate() {
+        *o += w * D::decode(r, load8(bytes, (begin + k) * B));
+    }
+    for (k, o) in y[fast..n].iter_mut().enumerate() {
+        *o += w * D::decode(r, load_tail::<B>(bytes, (begin + fast + k) * B));
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn s_dot_panel<D: Decode, const B: usize>(
+    r: &Resolved,
+    bytes: &[u8],
+    begin: usize,
+    len: usize,
+    alpha: f64,
+    x: &[f64],
+    xstride: usize,
+    nrhs: usize,
+    acc: &mut [f64],
+    astride: usize,
+) {
+    let fast = fast8(bytes.len(), B, begin, len);
+    let mut c0 = 0usize;
+    while c0 < nrhs {
+        let g = PANEL_GROUP.min(nrhs - c0);
+        let mut s = [[0.0f64; 4]; PANEL_GROUP];
+        let mut i = 0usize;
+        while i + 4 <= fast {
+            let off = (begin + i) * B;
+            let v0 = D::decode(r, load8(bytes, off));
+            let v1 = D::decode(r, load8(bytes, off + B));
+            let v2 = D::decode(r, load8(bytes, off + 2 * B));
+            let v3 = D::decode(r, load8(bytes, off + 3 * B));
+            for (ci, sc) in s[..g].iter_mut().enumerate() {
+                let xc = &x[(c0 + ci) * xstride..];
+                sc[0] += v0 * xc[i];
+                sc[1] += v1 * xc[i + 1];
+                sc[2] += v2 * xc[i + 2];
+                sc[3] += v3 * xc[i + 3];
+            }
+            i += 4;
+        }
+        while i < len {
+            let v = D::decode(r, load_at::<B>(bytes, begin + i));
+            for (ci, sc) in s[..g].iter_mut().enumerate() {
+                sc[0] += v * x[(c0 + ci) * xstride + i];
+            }
+            i += 1;
+        }
+        for (ci, sc) in s[..g].iter().enumerate() {
+            acc[(c0 + ci) * astride] += alpha * ((sc[0] + sc[1]) + (sc[2] + sc[3]));
+        }
+        c0 += g;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn s_axpy_panel<D: Decode, const B: usize>(
+    r: &Resolved,
+    bytes: &[u8],
+    begin: usize,
+    len: usize,
+    alpha: f64,
+    wv: &[f64],
+    wstride: usize,
+    nrhs: usize,
+    y: &mut [f64],
+    ystride: usize,
+) {
+    let fast = fast8(bytes.len(), B, begin, len);
+    let mut c0 = 0usize;
+    while c0 < nrhs {
+        let g = PANEL_GROUP.min(nrhs - c0);
+        let mut w = [0.0f64; PANEL_GROUP];
+        let mut any = false;
+        for (ci, wc) in w[..g].iter_mut().enumerate() {
+            *wc = alpha * wv[(c0 + ci) * wstride];
+            any |= *wc != 0.0;
+        }
+        if !any {
+            c0 += g;
+            continue;
+        }
+        let mut i = 0usize;
+        while i + 4 <= fast {
+            let off = (begin + i) * B;
+            let v0 = D::decode(r, load8(bytes, off));
+            let v1 = D::decode(r, load8(bytes, off + B));
+            let v2 = D::decode(r, load8(bytes, off + 2 * B));
+            let v3 = D::decode(r, load8(bytes, off + 3 * B));
+            for (ci, &wc) in w[..g].iter().enumerate() {
+                if wc == 0.0 {
+                    continue;
+                }
+                let yc = &mut y[(c0 + ci) * ystride + i..];
+                yc[0] += wc * v0;
+                yc[1] += wc * v1;
+                yc[2] += wc * v2;
+                yc[3] += wc * v3;
+            }
+            i += 4;
+        }
+        while i < len {
+            let v = D::decode(r, load_at::<B>(bytes, begin + i));
+            for (ci, &wc) in w[..g].iter().enumerate() {
+                if wc != 0.0 {
+                    y[(c0 + ci) * ystride + i] += wc * v;
+                }
+            }
+            i += 1;
+        }
+        c0 += g;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-codec kernels
+// ---------------------------------------------------------------------------
+
+fn z_range(_r: &Resolved, _bytes: &[u8], _begin: usize, _end: usize, out: &mut [f64]) {
+    out.fill(0.0);
+}
+
+fn z_get(_r: &Resolved, _bytes: &[u8], _i: usize) -> f64 {
+    0.0
+}
+
+fn z_dot(_r: &Resolved, _bytes: &[u8], _begin: usize, _x: &[f64]) -> f64 {
+    0.0
+}
+
+fn z_axpy(_r: &Resolved, _bytes: &[u8], _begin: usize, _w: f64, _y: &mut [f64]) {}
+
+#[allow(clippy::too_many_arguments)]
+fn z_dot_panel(
+    _r: &Resolved,
+    _bytes: &[u8],
+    _begin: usize,
+    _len: usize,
+    _alpha: f64,
+    _x: &[f64],
+    _xstride: usize,
+    _nrhs: usize,
+    _acc: &mut [f64],
+    _astride: usize,
+) {
+}
+
+#[allow(clippy::too_many_arguments)]
+fn z_axpy_panel(
+    _r: &Resolved,
+    _bytes: &[u8],
+    _begin: usize,
+    _len: usize,
+    _alpha: f64,
+    _wv: &[f64],
+    _wstride: usize,
+    _nrhs: usize,
+    _y: &mut [f64],
+    _ystride: usize,
+) {
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernel engine (x86-64, installed only after runtime detection)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{fast8, load_at_rt, Decode, Resolved, DAflp, DFpx32, DFpx64, PANEL_GROUP};
+    use std::arch::x86_64::*;
+
+    /// Decode values `idx..idx+4` of an FPX32 blob: 4-byte gathers, vector
+    /// shift, cvt ps→pd. Caller guarantees 4-byte loads stay in bounds.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn dec4_fpx32(r: &Resolved, bytes: &[u8], idx: usize) -> __m256d {
+        let b = r.b;
+        let off0 = (idx * b) as i32;
+        let off = _mm_setr_epi32(off0, off0 + b as i32, off0 + 2 * b as i32, off0 + 3 * b as i32);
+        let w = _mm_i32gather_epi32::<1>(bytes.as_ptr() as *const i32, off);
+        let hi = _mm_sll_epi32(w, _mm_cvtsi32_si128(r.shift as i32));
+        _mm256_cvtps_pd(_mm_castsi128_ps(hi))
+    }
+
+    /// Decode values `idx..idx+4` of an FPX64 blob: 8-byte gathers + vector
+    /// shift. Caller guarantees 8-byte loads stay in bounds.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn dec4_fpx64(r: &Resolved, bytes: &[u8], idx: usize) -> __m256d {
+        let b = r.b as i64;
+        let off0 = idx as i64 * b;
+        let off = _mm256_setr_epi64x(off0, off0 + b, off0 + 2 * b, off0 + 3 * b);
+        let w = _mm256_i64gather_epi64::<1>(bytes.as_ptr() as *const i64, off);
+        _mm256_castsi256_pd(_mm256_sll_epi64(w, _mm_cvtsi32_si128(r.shift as i32)))
+    }
+
+    /// Decode values `idx..idx+4` of an AFLP fast-path blob: gather, vector
+    /// mask/shift bit assembly, one mul_pd for the block scale. Caller
+    /// guarantees 8-byte loads stay in bounds.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn dec4_aflp(r: &Resolved, bytes: &[u8], idx: usize) -> __m256d {
+        let b = r.b as i64;
+        let off0 = idx as i64 * b;
+        let off = _mm256_setr_epi64x(off0, off0 + b, off0 + 2 * b, off0 + 3 * b);
+        let w = _mm256_and_si256(
+            _mm256_i64gather_epi64::<1>(bytes.as_ptr() as *const i64, off),
+            _mm256_set1_epi64x(r.word_mask as i64),
+        );
+        let emask = _mm256_set1_epi64x(r.zero_marker as i64);
+        let e = _mm256_and_si256(w, emask);
+        let is_zero = _mm256_cmpeq_epi64(e, emask);
+        let mant = _mm256_and_si256(_mm256_srl_epi64(w, _mm_cvtsi32_si128(r.e_bits as i32)), _mm256_set1_epi64x(r.mant_mask as i64));
+        let sign = _mm256_sll_epi64(_mm256_srl_epi64(w, _mm_cvtsi32_si128(r.total_bits as i32 - 1)), _mm_cvtsi32_si128(63));
+        let expf = _mm256_sll_epi64(_mm256_add_epi64(e, _mm256_set1_epi64x(1023)), _mm_cvtsi32_si128(52));
+        let frac = _mm256_sll_epi64(mant, _mm_cvtsi32_si128(r.mshift as i32));
+        let bits = _mm256_andnot_si256(is_zero, _mm256_or_si256(sign, _mm256_or_si256(expf, frac)));
+        _mm256_mul_pd(_mm256_castsi256_pd(bits), _mm256_set1_pd(r.scale))
+    }
+
+    /// Extract the four lane sums of a vector accumulator (lane k holds the
+    /// stride-4 partial sum s_k).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn lanes(acc: __m256d) -> [f64; 4] {
+        let lo = _mm256_castpd256_pd128(acc);
+        let hi = _mm256_extractf128_pd::<1>(acc);
+        [
+            _mm_cvtsd_f64(lo),
+            _mm_cvtsd_f64(_mm_unpackhi_pd(lo, lo)),
+            _mm_cvtsd_f64(hi),
+            _mm_cvtsd_f64(_mm_unpackhi_pd(hi, hi)),
+        ]
+    }
+
+    macro_rules! avx2_family {
+        ($range:ident, $dot:ident, $axpy:ident, $dotp:ident, $axpyp:ident, $dec:ty, $dec4:ident, $vec_bound:ident) => {
+            #[target_feature(enable = "avx2")]
+            pub(super) unsafe fn $range(r: &Resolved, bytes: &[u8], begin: usize, end: usize, out: &mut [f64]) {
+                let n = end - begin;
+                debug_assert_eq!(out.len(), n);
+                let vb = $vec_bound(bytes.len(), r.b, begin, n);
+                let mut i = 0usize;
+                while i + 4 <= vb {
+                    let v = $dec4(r, bytes, begin + i);
+                    _mm256_storeu_pd(out.as_mut_ptr().add(i), v);
+                    i += 4;
+                }
+                for (k, o) in out[i..n].iter_mut().enumerate() {
+                    *o = <$dec>::decode(r, load_at_rt(bytes, r.b, begin + i + k));
+                }
+            }
+
+            #[target_feature(enable = "avx2")]
+            pub(super) unsafe fn $dot(r: &Resolved, bytes: &[u8], begin: usize, x: &[f64]) -> f64 {
+                let n = x.len();
+                let fast = fast8(bytes.len(), r.b, begin, n);
+                let mut accv = _mm256_setzero_pd();
+                let mut i = 0usize;
+                while i + 4 <= fast {
+                    let v = $dec4(r, bytes, begin + i);
+                    let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+                    accv = _mm256_add_pd(accv, _mm256_mul_pd(v, xv));
+                    i += 4;
+                }
+                let l = lanes(accv);
+                let mut s0 = l[0];
+                while i < n {
+                    s0 += <$dec>::decode(r, load_at_rt(bytes, r.b, begin + i)) * x[i];
+                    i += 1;
+                }
+                (s0 + l[1]) + (l[2] + l[3])
+            }
+
+            #[target_feature(enable = "avx2")]
+            pub(super) unsafe fn $axpy(r: &Resolved, bytes: &[u8], begin: usize, w: f64, y: &mut [f64]) {
+                let n = y.len();
+                let fast = fast8(bytes.len(), r.b, begin, n);
+                let wv = _mm256_set1_pd(w);
+                let mut i = 0usize;
+                while i + 4 <= fast {
+                    let v = $dec4(r, bytes, begin + i);
+                    let yp = y.as_mut_ptr().add(i);
+                    let yv = _mm256_loadu_pd(yp);
+                    _mm256_storeu_pd(yp, _mm256_add_pd(yv, _mm256_mul_pd(wv, v)));
+                    i += 4;
+                }
+                while i < n {
+                    y[i] += w * <$dec>::decode(r, load_at_rt(bytes, r.b, begin + i));
+                    i += 1;
+                }
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            #[target_feature(enable = "avx2")]
+            pub(super) unsafe fn $dotp(
+                r: &Resolved,
+                bytes: &[u8],
+                begin: usize,
+                len: usize,
+                alpha: f64,
+                x: &[f64],
+                xstride: usize,
+                nrhs: usize,
+                acc: &mut [f64],
+                astride: usize,
+            ) {
+                let fast = fast8(bytes.len(), r.b, begin, len);
+                let mut c0 = 0usize;
+                while c0 < nrhs {
+                    let g = PANEL_GROUP.min(nrhs - c0);
+                    let mut sv = [_mm256_setzero_pd(); PANEL_GROUP];
+                    let mut i = 0usize;
+                    while i + 4 <= fast {
+                        let v = $dec4(r, bytes, begin + i);
+                        for (ci, s) in sv[..g].iter_mut().enumerate() {
+                            let xv = _mm256_loadu_pd(x.as_ptr().add((c0 + ci) * xstride + i));
+                            *s = _mm256_add_pd(*s, _mm256_mul_pd(v, xv));
+                        }
+                        i += 4;
+                    }
+                    let mut s = [[0.0f64; 4]; PANEL_GROUP];
+                    for (ci, v) in sv[..g].iter().enumerate() {
+                        s[ci] = lanes(*v);
+                    }
+                    while i < len {
+                        let v = <$dec>::decode(r, load_at_rt(bytes, r.b, begin + i));
+                        for (ci, sc) in s[..g].iter_mut().enumerate() {
+                            sc[0] += v * x[(c0 + ci) * xstride + i];
+                        }
+                        i += 1;
+                    }
+                    for (ci, sc) in s[..g].iter().enumerate() {
+                        acc[(c0 + ci) * astride] += alpha * ((sc[0] + sc[1]) + (sc[2] + sc[3]));
+                    }
+                    c0 += g;
+                }
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            #[target_feature(enable = "avx2")]
+            pub(super) unsafe fn $axpyp(
+                r: &Resolved,
+                bytes: &[u8],
+                begin: usize,
+                len: usize,
+                alpha: f64,
+                wvals: &[f64],
+                wstride: usize,
+                nrhs: usize,
+                y: &mut [f64],
+                ystride: usize,
+            ) {
+                let fast = fast8(bytes.len(), r.b, begin, len);
+                let mut c0 = 0usize;
+                while c0 < nrhs {
+                    let g = PANEL_GROUP.min(nrhs - c0);
+                    let mut w = [0.0f64; PANEL_GROUP];
+                    let mut any = false;
+                    for (ci, wc) in w[..g].iter_mut().enumerate() {
+                        *wc = alpha * wvals[(c0 + ci) * wstride];
+                        any |= *wc != 0.0;
+                    }
+                    if !any {
+                        c0 += g;
+                        continue;
+                    }
+                    let mut i = 0usize;
+                    while i + 4 <= fast {
+                        let v = $dec4(r, bytes, begin + i);
+                        for (ci, &wc) in w[..g].iter().enumerate() {
+                            if wc == 0.0 {
+                                continue;
+                            }
+                            let yp = y.as_mut_ptr().add((c0 + ci) * ystride + i);
+                            let yv = _mm256_loadu_pd(yp);
+                            _mm256_storeu_pd(yp, _mm256_add_pd(yv, _mm256_mul_pd(_mm256_set1_pd(wc), v)));
+                        }
+                        i += 4;
+                    }
+                    while i < len {
+                        let v = <$dec>::decode(r, load_at_rt(bytes, r.b, begin + i));
+                        for (ci, &wc) in w[..g].iter().enumerate() {
+                            if wc != 0.0 {
+                                y[(c0 + ci) * ystride + i] += wc * v;
+                            }
+                        }
+                        i += 1;
+                    }
+                    c0 += g;
+                }
+            }
+        };
+    }
+
+    /// Vectorization bound for FPX32 range decode: the 32-bit gather reads
+    /// only 4 bytes per lane, so it may run further than the 8-byte window.
+    fn fast4(bytes_len: usize, b: usize, begin: usize, n: usize) -> usize {
+        let fast_total = if bytes_len >= 4 { (bytes_len - 4) / b + 1 } else { 0 };
+        fast_total.min(begin + n).saturating_sub(begin)
+    }
+
+    avx2_family!(fpx32_range, fpx32_dot, fpx32_axpy, fpx32_dot_panel, fpx32_axpy_panel, DFpx32, dec4_fpx32, fast4);
+    avx2_family!(fpx64_range, fpx64_dot, fpx64_axpy, fpx64_dot_panel, fpx64_axpy_panel, DFpx64, dec4_fpx64, fast8);
+    avx2_family!(aflp_range, aflp_dot, aflp_axpy, aflp_dot_panel, aflp_axpy_panel, DAflp, dec4_aflp, fast8);
+}
+
+// Safe wrappers installing the AVX2 kernels into the dispatch tables. The
+// wrappers are reachable only through tables selected after a successful
+// runtime `is_x86_feature_detected!("avx2")`, which is the safety argument.
+#[cfg(target_arch = "x86_64")]
+macro_rules! avx2_wrap {
+    ($range:ident, $dot:ident, $axpy:ident, $dotp:ident, $axpyp:ident) => {
+        mod $range {
+            use super::Resolved;
+
+            pub(super) fn range(r: &Resolved, bytes: &[u8], begin: usize, end: usize, out: &mut [f64]) {
+                unsafe { super::avx2::$range(r, bytes, begin, end, out) }
+            }
+
+            pub(super) fn dot(r: &Resolved, bytes: &[u8], begin: usize, x: &[f64]) -> f64 {
+                unsafe { super::avx2::$dot(r, bytes, begin, x) }
+            }
+
+            pub(super) fn axpy(r: &Resolved, bytes: &[u8], begin: usize, w: f64, y: &mut [f64]) {
+                unsafe { super::avx2::$axpy(r, bytes, begin, w, y) }
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            pub(super) fn dot_panel(
+                r: &Resolved,
+                bytes: &[u8],
+                begin: usize,
+                len: usize,
+                alpha: f64,
+                x: &[f64],
+                xstride: usize,
+                nrhs: usize,
+                acc: &mut [f64],
+                astride: usize,
+            ) {
+                unsafe { super::avx2::$dotp(r, bytes, begin, len, alpha, x, xstride, nrhs, acc, astride) }
+            }
+
+            #[allow(clippy::too_many_arguments)]
+            pub(super) fn axpy_panel(
+                r: &Resolved,
+                bytes: &[u8],
+                begin: usize,
+                len: usize,
+                alpha: f64,
+                wvals: &[f64],
+                wstride: usize,
+                nrhs: usize,
+                y: &mut [f64],
+                ystride: usize,
+            ) {
+                unsafe { super::avx2::$axpyp(r, bytes, begin, len, alpha, wvals, wstride, nrhs, y, ystride) }
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+avx2_wrap!(fpx32_range, fpx32_dot, fpx32_axpy, fpx32_dot_panel, fpx32_axpy_panel);
+#[cfg(target_arch = "x86_64")]
+avx2_wrap!(fpx64_range, fpx64_dot, fpx64_axpy, fpx64_dot_panel, fpx64_axpy_panel);
+#[cfg(target_arch = "x86_64")]
+avx2_wrap!(aflp_range, aflp_dot, aflp_axpy, aflp_dot_panel, aflp_axpy_panel);
+
+// ---------------------------------------------------------------------------
+// Dispatch tables
+// ---------------------------------------------------------------------------
+
+type RangeFn = fn(&Resolved, &[u8], usize, usize, &mut [f64]);
+type GetFn = fn(&Resolved, &[u8], usize) -> f64;
+type DotFn = fn(&Resolved, &[u8], usize, &[f64]) -> f64;
+type AxpyFn = fn(&Resolved, &[u8], usize, f64, &mut [f64]);
+type DotPanelFn = fn(&Resolved, &[u8], usize, usize, f64, &[f64], usize, usize, &mut [f64], usize);
+type AxpyPanelFn = fn(&Resolved, &[u8], usize, usize, f64, &[f64], usize, usize, &mut [f64], usize);
+
+/// One resolved kernel set: every decode/fused op for one
+/// `(codec family, byte width, ISA level)` combination.
+pub struct KernelTable {
+    pub(crate) range: RangeFn,
+    pub(crate) get: GetFn,
+    pub(crate) dot: DotFn,
+    pub(crate) axpy: AxpyFn,
+    pub(crate) dot_panel: DotPanelFn,
+    pub(crate) axpy_panel: AxpyPanelFn,
+    /// Human-readable kernel id, e.g. `"fpx64/5+avx2"`.
+    pub(crate) name: &'static str,
+}
+
+macro_rules! scalar_table {
+    ($dec:ty, $b:literal, $name:literal) => {
+        KernelTable {
+            range: s_range::<$dec, $b>,
+            get: s_get::<$dec, $b>,
+            dot: s_dot::<$dec, $b>,
+            axpy: s_axpy::<$dec, $b>,
+            dot_panel: s_dot_panel::<$dec, $b>,
+            axpy_panel: s_axpy_panel::<$dec, $b>,
+            name: $name,
+        }
+    };
+}
+
+static FPX32_S: [KernelTable; 4] = [
+    scalar_table!(DFpx32, 1, "fpx32/1+scalar"),
+    scalar_table!(DFpx32, 2, "fpx32/2+scalar"),
+    scalar_table!(DFpx32, 3, "fpx32/3+scalar"),
+    scalar_table!(DFpx32, 4, "fpx32/4+scalar"),
+];
+
+static FPX64_S: [KernelTable; 8] = [
+    scalar_table!(DFpx64, 1, "fpx64/1+scalar"),
+    scalar_table!(DFpx64, 2, "fpx64/2+scalar"),
+    scalar_table!(DFpx64, 3, "fpx64/3+scalar"),
+    scalar_table!(DFpx64, 4, "fpx64/4+scalar"),
+    scalar_table!(DFpx64, 5, "fpx64/5+scalar"),
+    scalar_table!(DFpx64, 6, "fpx64/6+scalar"),
+    scalar_table!(DFpx64, 7, "fpx64/7+scalar"),
+    scalar_table!(DFpx64, 8, "fpx64/8+scalar"),
+];
+
+static AFLP_S: [KernelTable; 8] = [
+    scalar_table!(DAflp, 1, "aflp/1+scalar"),
+    scalar_table!(DAflp, 2, "aflp/2+scalar"),
+    scalar_table!(DAflp, 3, "aflp/3+scalar"),
+    scalar_table!(DAflp, 4, "aflp/4+scalar"),
+    scalar_table!(DAflp, 5, "aflp/5+scalar"),
+    scalar_table!(DAflp, 6, "aflp/6+scalar"),
+    scalar_table!(DAflp, 7, "aflp/7+scalar"),
+    scalar_table!(DAflp, 8, "aflp/8+scalar"),
+];
+
+static AFLP_WIDE_S: [KernelTable; 8] = [
+    scalar_table!(DAflpWide, 1, "aflp-wide/1+scalar"),
+    scalar_table!(DAflpWide, 2, "aflp-wide/2+scalar"),
+    scalar_table!(DAflpWide, 3, "aflp-wide/3+scalar"),
+    scalar_table!(DAflpWide, 4, "aflp-wide/4+scalar"),
+    scalar_table!(DAflpWide, 5, "aflp-wide/5+scalar"),
+    scalar_table!(DAflpWide, 6, "aflp-wide/6+scalar"),
+    scalar_table!(DAflpWide, 7, "aflp-wide/7+scalar"),
+    scalar_table!(DAflpWide, 8, "aflp-wide/8+scalar"),
+];
+
+static ZERO_T: KernelTable = KernelTable {
+    range: z_range,
+    get: z_get,
+    dot: z_dot,
+    axpy: z_axpy,
+    dot_panel: z_dot_panel,
+    axpy_panel: z_axpy_panel,
+    name: "zero",
+};
+
+// The AVX2 kernels take the byte width at runtime (gathers are offset-driven
+// either way), so one table per codec family suffices; random access stays on
+// the scalar path (no gather win for single values), which keeps `get`
+// bitwise identical across ISA levels by construction.
+#[cfg(target_arch = "x86_64")]
+static FPX32_V: KernelTable = KernelTable {
+    range: fpx32_range::range,
+    get: s_get_rt::<DFpx32>,
+    dot: fpx32_range::dot,
+    axpy: fpx32_range::axpy,
+    dot_panel: fpx32_range::dot_panel,
+    axpy_panel: fpx32_range::axpy_panel,
+    name: "fpx32+avx2",
+};
+
+#[cfg(target_arch = "x86_64")]
+static FPX64_V: KernelTable = KernelTable {
+    range: fpx64_range::range,
+    get: s_get_rt::<DFpx64>,
+    dot: fpx64_range::dot,
+    axpy: fpx64_range::axpy,
+    dot_panel: fpx64_range::dot_panel,
+    axpy_panel: fpx64_range::axpy_panel,
+    name: "fpx64+avx2",
+};
+
+#[cfg(target_arch = "x86_64")]
+static AFLP_V: KernelTable = KernelTable {
+    range: aflp_range::range,
+    get: s_get_rt::<DAflp>,
+    dot: aflp_range::dot,
+    axpy: aflp_range::axpy,
+    dot_panel: aflp_range::dot_panel,
+    axpy_panel: aflp_range::axpy_panel,
+    name: "aflp+avx2",
+};
+
+/// Runtime-width random access (AVX2 tables).
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+fn s_get_rt<D: Decode>(r: &Resolved, bytes: &[u8], i: usize) -> f64 {
+    D::decode(r, load_at_rt(bytes, r.b, i))
+}
+
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+#[inline]
+fn simd_active() -> bool {
+    simd_level() == SimdLevel::Avx2
+}
+
+/// Resolve a blob's codec parameters into the flat [`Resolved`] form plus the
+/// kernel table for the current ISA level. This is the *only* place codec
+/// parameters are matched — everything downstream works off the result.
+pub fn resolve(params: &CodecParams) -> (Resolved, &'static KernelTable) {
+    match *params {
+        CodecParams::Zero => (ZERO_RESOLVED, &ZERO_T),
+        CodecParams::Fpx32 { bytes_per } => {
+            let b = (bytes_per as usize).clamp(1, 4);
+            let r = Resolved { b, shift: 32 - 8 * b as u32, ..ZERO_RESOLVED };
+            #[cfg(target_arch = "x86_64")]
+            if simd_active() {
+                return (r, &FPX32_V);
+            }
+            (r, &FPX32_S[b - 1])
+        }
+        CodecParams::Fpx64 { bytes_per } => {
+            let b = (bytes_per as usize).clamp(1, 8);
+            let r = Resolved { b, shift: 64 - 8 * b as u32, ..ZERO_RESOLVED };
+            #[cfg(target_arch = "x86_64")]
+            if simd_active() {
+                return (r, &FPX64_V);
+            }
+            (r, &FPX64_S[b - 1])
+        }
+        CodecParams::Aflp { bytes_per, e_bits, scale } => {
+            let b = (bytes_per as usize).clamp(1, 8);
+            let e_bits = e_bits as u32;
+            let total_bits = 8 * b as u32;
+            let m_bits = total_bits - 1 - e_bits;
+            let word_mask: u64 = if b >= 8 { u64::MAX } else { (1u64 << (8 * b)) - 1 };
+            let zero_marker: u64 = (1u64 << e_bits) - 1;
+            let mant_mask: u64 = (1u64 << m_bits) - 1;
+            if e_bits >= 11 || m_bits > 52 {
+                let r = Resolved { b, shift: 0, word_mask, zero_marker, mant_mask, e_bits, total_bits, mshift: 0, scale };
+                return (r, &AFLP_WIDE_S[b - 1]);
+            }
+            let r = Resolved { b, shift: 0, word_mask, zero_marker, mant_mask, e_bits, total_bits, mshift: 52 - m_bits, scale };
+            #[cfg(target_arch = "x86_64")]
+            if simd_active() {
+                return (r, &AFLP_V);
+            }
+            (r, &AFLP_S[b - 1])
+        }
+    }
+}
+
+/// Decode the half-open value range `[begin, end)` of a packed buffer.
+pub(crate) fn range(params: &CodecParams, bytes: &[u8], begin: usize, end: usize, out: &mut [f64]) {
+    let (r, t) = resolve(params);
+    (t.range)(&r, bytes, begin, end, out);
+}
+
+/// Random access through a one-shot resolution (callers touching many values
+/// should hold a [`DecodeCursor`] instead).
+pub(crate) fn get(params: &CodecParams, bytes: &[u8], i: usize) -> f64 {
+    let (r, t) = resolve(params);
+    (t.get)(&r, bytes, i)
+}
+
+// ---------------------------------------------------------------------------
+// DecodeCursor
+// ---------------------------------------------------------------------------
+
+/// A streaming decoder over one blob: codec parameters, shift counts and the
+/// kernel table are resolved **once** at construction; every subsequent chunk
+/// (or fused dot/axpy) just advances a position. This replaces the
+/// per-chunk `decompress_range` re-setup in all streamed apply paths.
+pub struct DecodeCursor<'a> {
+    bytes: &'a [u8],
+    n: usize,
+    pos: usize,
+    r: Resolved,
+    t: &'static KernelTable,
+}
+
+impl<'a> DecodeCursor<'a> {
+    /// Resolve `blob` for streaming from position 0.
+    pub fn new(blob: &'a Blob) -> DecodeCursor<'a> {
+        let (r, t) = resolve(&blob.params);
+        DecodeCursor { bytes: &blob.bytes, n: blob.n, pos: 0, r, t }
+    }
+
+    /// Total number of values in the underlying blob.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Current position (next value index to be decoded).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Values left between the position and the end of the blob.
+    pub fn remaining(&self) -> usize {
+        self.n - self.pos
+    }
+
+    /// Resolved kernel id (diagnostics), e.g. `"fpx64/5+scalar"`.
+    pub fn kernel_name(&self) -> &'static str {
+        self.t.name
+    }
+
+    /// Move the position (column starts in column-major blobs).
+    pub fn seek(&mut self, pos: usize) {
+        debug_assert!(pos <= self.n);
+        self.pos = pos;
+    }
+
+    /// Random access to value `i` with the cursor's resolved parameters
+    /// (does not move the position).
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        debug_assert!(i < self.n);
+        (self.t.get)(&self.r, self.bytes, i)
+    }
+
+    /// Decode the next `out.len()` values into `out` and advance.
+    pub fn next_chunk(&mut self, out: &mut [f64]) {
+        let end = self.pos + out.len();
+        debug_assert!(end <= self.n);
+        (self.t.range)(&self.r, self.bytes, self.pos, end, out);
+        self.pos = end;
+    }
+
+    /// Fused decode–dot: returns `Σ_i v[pos+i]·x[i]` and advances by
+    /// `x.len()`; decoded lanes never leave registers.
+    #[inline]
+    pub fn dot(&mut self, x: &[f64]) -> f64 {
+        debug_assert!(self.pos + x.len() <= self.n);
+        let s = (self.t.dot)(&self.r, self.bytes, self.pos, x);
+        self.pos += x.len();
+        s
+    }
+
+    /// Fused decode–axpy: `y[i] += w · v[pos+i]`, advancing by `y.len()`.
+    #[inline]
+    pub fn axpy(&mut self, w: f64, y: &mut [f64]) {
+        debug_assert!(self.pos + y.len() <= self.n);
+        (self.t.axpy)(&self.r, self.bytes, self.pos, w, y);
+        self.pos += y.len();
+    }
+
+    /// Fused panel dot for gemm-shaped multi-RHS tasks:
+    /// `acc[c·astride] += alpha · Σ_i v[pos+i]·x[c·xstride+i]` for
+    /// `c < nrhs`, one decode pass for all right-hand sides; advances by
+    /// `len`.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn dot_panel(&mut self, len: usize, alpha: f64, x: &[f64], xstride: usize, nrhs: usize, acc: &mut [f64], astride: usize) {
+        debug_assert!(self.pos + len <= self.n);
+        (self.t.dot_panel)(&self.r, self.bytes, self.pos, len, alpha, x, xstride, nrhs, acc, astride);
+        self.pos += len;
+    }
+
+    /// Fused panel axpy: `y[c·ystride+i] += alpha·wvals[c·wstride] · v[pos+i]`
+    /// for `c < nrhs` (zero weights skipped), one decode pass; advances by
+    /// `len`.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn axpy_panel(&mut self, len: usize, alpha: f64, wvals: &[f64], wstride: usize, nrhs: usize, y: &mut [f64], ystride: usize) {
+        debug_assert!(self.pos + len <= self.n);
+        (self.t.axpy_panel)(&self.r, self.bytes, self.pos, len, alpha, wvals, wstride, nrhs, y, ystride);
+        self.pos += len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Blob, Codec};
+    use crate::la::blas;
+    use crate::util::Rng;
+
+    fn sample(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|i| if i % 9 == 7 { 0.0 } else { rng.normal() * 10f64.powf(rng.range(-2.0, 2.0)) }).collect()
+    }
+
+    #[test]
+    fn cursor_chunks_match_decompress_range_bitwise() {
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            for &eps in &[1e-2, 1e-6, 1e-10, 1e-14] {
+                let data = sample(301, 42);
+                let blob = Blob::compress(codec, &data, eps);
+                let mut whole = vec![0.0; blob.n];
+                blob.decompress_into(&mut whole);
+                let mut cur = DecodeCursor::new(&blob);
+                let mut out = vec![0.0; blob.n];
+                let mut pos = 0usize;
+                for step in [1usize, 3, 64, 100, 7, 126] {
+                    if pos >= blob.n {
+                        break;
+                    }
+                    let len = step.min(blob.n - pos);
+                    cur.next_chunk(&mut out[pos..pos + len]);
+                    pos += len;
+                }
+                while pos < blob.n {
+                    let len = 5.min(blob.n - pos);
+                    cur.next_chunk(&mut out[pos..pos + len]);
+                    pos += len;
+                }
+                for (a, b) in out.iter().zip(&whole) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{codec:?} eps={eps}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_axpy_matches_decode_then_blas_bitwise() {
+        let mut rng = Rng::new(43);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            for &eps in &[1e-3, 1e-8, 1e-12] {
+                let data = sample(157, 44);
+                let blob = Blob::compress(codec, &data, eps);
+                let dec = blob.to_vec();
+                let mut y1: Vec<f64> = (0..157).map(|_| rng.normal()).collect();
+                let mut y2 = y1.clone();
+                let w = 1.7;
+                blas::axpy(w, &dec, &mut y1);
+                let mut cur = DecodeCursor::new(&blob);
+                cur.axpy(w, &mut y2);
+                for (a, b) in y1.iter().zip(&y2) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{codec:?} eps={eps}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_dot_close_to_decode_then_blas() {
+        let mut rng = Rng::new(45);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let data = sample(203, 46);
+            let blob = Blob::compress(codec, &data, 1e-9);
+            let dec = blob.to_vec();
+            let x: Vec<f64> = (0..203).map(|_| rng.normal()).collect();
+            let want = blas::dot(&dec, &x);
+            let mut cur = DecodeCursor::new(&blob);
+            let got = cur.dot(&x);
+            assert!((got - want).abs() <= 1e-12 * (1.0 + want.abs()), "{codec:?}: {got} vs {want}");
+        }
+    }
+
+    // NOTE: scalar-vs-AVX2 bitwise identity (the ISA half of the determinism
+    // contract) is asserted in `tests/codec_simd_dispatch.rs`, which runs as
+    // its own binary so the process-global ISA override cannot race other
+    // tests.
+
+    #[test]
+    fn panel_ops_match_single_bitwise() {
+        let mut rng = Rng::new(49);
+        let n = 97;
+        let nrhs = 5;
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let data = sample(n, 50);
+            let blob = Blob::compress(codec, &data, 1e-8);
+            let x: Vec<f64> = (0..n * nrhs).map(|_| rng.normal()).collect();
+            // dot
+            let mut acc_p = vec![0.0; nrhs];
+            DecodeCursor::new(&blob).dot_panel(n, 1.25, &x, n, nrhs, &mut acc_p, 1);
+            for (c, accp) in acc_p.iter().enumerate() {
+                let single = 1.25 * DecodeCursor::new(&blob).dot(&x[c * n..(c + 1) * n]);
+                assert_eq!(accp.to_bits(), single.to_bits(), "{codec:?} dot col {c}");
+            }
+            // axpy
+            let w: Vec<f64> = (0..nrhs).map(|c| if c == 2 { 0.0 } else { rng.normal() }).collect();
+            let y0: Vec<f64> = (0..n * nrhs).map(|_| rng.normal()).collect();
+            let mut yp = y0.clone();
+            DecodeCursor::new(&blob).axpy_panel(n, 2.0, &w, 1, nrhs, &mut yp, n);
+            for (c, &wc) in w.iter().enumerate() {
+                let mut ys = y0[c * n..(c + 1) * n].to_vec();
+                if 2.0 * wc != 0.0 {
+                    DecodeCursor::new(&blob).axpy(2.0 * wc, &mut ys);
+                }
+                for (a, b) in yp[c * n..(c + 1) * n].iter().zip(&ys) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{codec:?} axpy col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cursor_get_matches_blob_get() {
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let data = sample(77, 51);
+            let blob = Blob::compress(codec, &data, 1e-6);
+            let cur = DecodeCursor::new(&blob);
+            for i in 0..blob.n {
+                assert_eq!(cur.get(i).to_bits(), blob.get(i).to_bits(), "{codec:?} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_blob_ops() {
+        let blob = Blob::compress(Codec::Fpx, &[0.0; 33], 1e-6);
+        let mut cur = DecodeCursor::new(&blob);
+        assert_eq!(cur.len(), 33);
+        let mut out = vec![1.0; 33];
+        cur.next_chunk(&mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+        cur.seek(0);
+        let ones = vec![1.0; 33];
+        assert_eq!(cur.dot(&ones), 0.0);
+        assert_eq!(cur.get(7), 0.0);
+    }
+
+    #[test]
+    fn mode_and_level_labels() {
+        assert!(["fused", "blockwise"].contains(&kernel_mode_name()));
+        assert!(["scalar", "avx2"].contains(&simd_name()));
+        let l = kernels_label();
+        assert!(l.starts_with(kernel_mode_name()), "{l}");
+    }
+}

@@ -101,120 +101,20 @@ pub fn decompress_into(blob: &Blob, out: &mut [f64]) {
 }
 
 /// Decode values [begin, end) — pure shift + bitcast (the property that
-/// makes FPX decode cheaper than AFLP, Remark 4.1), with 8-byte loads on the
-/// fast path for vectorization.
+/// makes FPX decode cheaper than AFLP, Remark 4.1). The actual kernel is
+/// picked by the runtime ISA dispatch ([`super::dispatch`]): AVX2
+/// gather/shift in every release build on capable CPUs, scalar otherwise.
 pub fn decompress_range(blob: &Blob, begin: usize, end: usize, out: &mut [f64]) {
-    let bytes = &blob.bytes;
-    let n = end - begin;
-    debug_assert_eq!(out.len(), n);
-    let (b, is32) = match blob.params {
-        CodecParams::Fpx32 { bytes_per } => (bytes_per as usize, true),
-        CodecParams::Fpx64 { bytes_per } => (bytes_per as usize, false),
-        _ => unreachable!("not an FPX blob"),
-    };
-    let fast_total = if bytes.len() >= 8 { (bytes.len() - 8) / b + 1 } else { 0 };
-    let fast = fast_total.min(end).saturating_sub(begin);
-    if is32 {
-        let shift = 32 - 8 * b as u32;
-        let mut k0 = 0usize;
-        #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
-        {
-            // SIMD: 4-byte gathers, vector shift, cvt ps→pd — pure byte
-            // shifting, the reason FPX decodes faster than AFLP (Rem. 4.1).
-            use std::arch::x86_64::*;
-            unsafe {
-                let base = bytes.as_ptr() as *const i32;
-                let cnt = _mm_cvtsi32_si128(shift as i32);
-                let step = _mm_set1_epi32(4 * b as i32);
-                let mut off_v = _mm_setr_epi32(
-                    (begin * b) as i32,
-                    ((begin + 1) * b) as i32,
-                    ((begin + 2) * b) as i32,
-                    ((begin + 3) * b) as i32,
-                );
-                // 4-byte window bound (gather reads 4 bytes per lane)
-                let fast4_total = if bytes.len() >= 4 { (bytes.len() - 4) / b + 1 } else { 0 };
-                let fast4 = fast4_total.min(end).saturating_sub(begin);
-                while k0 + 4 <= fast4 {
-                    let w = _mm_i32gather_epi32::<1>(base, off_v);
-                    let hi = _mm_sll_epi32(w, cnt); // neighbours' bytes shifted out
-                    let v = _mm256_cvtps_pd(_mm_castsi128_ps(hi));
-                    _mm256_storeu_pd(out.as_mut_ptr().add(k0), v);
-                    off_v = _mm_add_epi32(off_v, step);
-                    k0 += 4;
-                }
-            }
-        }
-        for (k, o) in out[k0..fast.max(k0)].iter_mut().enumerate() {
-            let off = (begin + k0 + k) * b;
-            let arr: [u8; 8] = unsafe { bytes.get_unchecked(off..off + 8) }.try_into().unwrap();
-            let w = u64::from_le_bytes(arr) as u32; // low 4 bytes suffice (b ≤ 4)
-            *o = f32::from_bits(w << shift) as f64;
-        }
-        for (k, o) in out[fast.max(k0)..n].iter_mut().enumerate() {
-            let i = begin + fast.max(k0) + k;
-            let mut buf = [0u8; 4];
-            buf[..b].copy_from_slice(&bytes[i * b..i * b + b]);
-            *o = f32::from_bits(u32::from_le_bytes(buf) << shift) as f64;
-        }
-    } else {
-        let shift = 64 - 8 * b as u32;
-        let mut k0 = 0usize;
-        #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
-        {
-            use std::arch::x86_64::*;
-            unsafe {
-                let base = bytes.as_ptr() as *const i64;
-                let cnt = _mm_cvtsi32_si128(shift as i32);
-                let step = _mm256_set1_epi64x(4 * b as i64);
-                let mut off_v = _mm256_setr_epi64x(
-                    (begin * b) as i64,
-                    ((begin + 1) * b) as i64,
-                    ((begin + 2) * b) as i64,
-                    ((begin + 3) * b) as i64,
-                );
-                while k0 + 4 <= fast {
-                    let w = _mm256_i64gather_epi64::<1>(base, off_v);
-                    let bits = _mm256_sll_epi64(w, cnt);
-                    _mm256_storeu_pd(out.as_mut_ptr().add(k0), _mm256_castsi256_pd(bits));
-                    off_v = _mm256_add_epi64(off_v, step);
-                    k0 += 4;
-                }
-            }
-        }
-        for (k, o) in out[k0..fast].iter_mut().enumerate() {
-            let off = (begin + k0 + k) * b;
-            let arr: [u8; 8] = unsafe { bytes.get_unchecked(off..off + 8) }.try_into().unwrap();
-            let w = u64::from_le_bytes(arr);
-            *o = f64::from_bits(w << shift); // shift drops the neighbour's bytes
-        }
-        for (k, o) in out[fast..n].iter_mut().enumerate() {
-            let i = begin + fast + k;
-            let mut buf = [0u8; 8];
-            buf[..b].copy_from_slice(&bytes[i * b..i * b + b]);
-            *o = f64::from_bits(u64::from_le_bytes(buf) << shift);
-        }
-    }
+    debug_assert!(matches!(blob.params, CodecParams::Fpx32 { .. } | CodecParams::Fpx64 { .. }), "not an FPX blob");
+    super::dispatch::range(&blob.params, &blob.bytes, begin, end, out);
 }
 
-/// Random access.
+/// Random access (resolves codec parameters per call — hot loops hold a
+/// [`super::dispatch::DecodeCursor`] instead).
 #[inline]
 pub fn get(blob: &Blob, i: usize) -> f64 {
-    match blob.params {
-        CodecParams::Fpx32 { bytes_per } => {
-            let b = bytes_per as usize;
-            let shift = 32 - 8 * b as u32;
-            let w = crate::compress::load_word_at(&blob.bytes, b, i) as u32;
-            f32::from_bits(w << shift) as f64
-        }
-        CodecParams::Fpx64 { bytes_per } => {
-            let b = bytes_per as usize;
-            let shift = 64 - 8 * b as u32;
-            let w = crate::compress::load_word_at(&blob.bytes, b, i);
-            f64::from_bits(w << shift)
-        }
-        _ => unreachable!("not an FPX blob"),
-    }
+    debug_assert!(matches!(blob.params, CodecParams::Fpx32 { .. } | CodecParams::Fpx64 { .. }), "not an FPX blob");
+    super::dispatch::get(&blob.params, &blob.bytes, i)
 }
 
 #[cfg(test)]

@@ -14,12 +14,20 @@
 //! [`valr`] implements the **VALR** scheme for low-rank data: each column of
 //! the (orthogonal) factors is stored with its own accuracy δᵢ = δ/σᵢ
 //! (Eq. 6/7).
+//!
+//! [`dispatch`] is the codec-kernel subsystem behind all decoding: runtime
+//! SIMD dispatch (per-`(codec, width)` function tables, AVX2 picked by
+//! `is_x86_feature_detected!` in every release build), [`DecodeCursor`]
+//! streaming decoders that resolve blob parameters once, and the fused
+//! decode–FMA kernels the MVM apply paths run on.
 
 pub mod aflp;
+pub mod dispatch;
 pub mod formats;
 pub mod fpx;
 pub mod valr;
 
+pub use dispatch::{DecodeCursor, KernelMode, SimdLevel};
 pub use formats::unit_roundoff;
 pub use valr::ZLowRankValr;
 
@@ -93,33 +101,24 @@ impl Blob {
     /// Decompress everything into `out` (len == n).
     pub fn decompress_into(&self, out: &mut [f64]) {
         assert_eq!(out.len(), self.n);
-        match self.params {
-            CodecParams::Aflp { .. } => aflp::decompress_into(self, out),
-            CodecParams::Fpx32 { .. } | CodecParams::Fpx64 { .. } => fpx::decompress_into(self, out),
-            CodecParams::Zero => out.fill(0.0),
-        }
+        dispatch::range(&self.params, &self.bytes, 0, self.n, out);
     }
 
-    /// Decompress the half-open value range [begin, end) into `out`.
+    /// Decompress the half-open value range [begin, end) into `out` (the
+    /// kernel — scalar or runtime-dispatched SIMD — comes from
+    /// [`dispatch::resolve`]; streamed consumers hold a [`DecodeCursor`] so
+    /// the resolution happens once per blob, not once per chunk).
     pub fn decompress_range(&self, begin: usize, end: usize, out: &mut [f64]) {
         debug_assert!(begin <= end && end <= self.n);
         debug_assert_eq!(out.len(), end - begin);
-        match self.params {
-            CodecParams::Aflp { .. } => aflp::decompress_range(self, begin, end, out),
-            CodecParams::Fpx32 { .. } | CodecParams::Fpx64 { .. } => fpx::decompress_range(self, begin, end, out),
-            CodecParams::Zero => out.fill(0.0),
-        }
+        dispatch::range(&self.params, &self.bytes, begin, end, out);
     }
 
     /// Random access to value `i`.
     #[inline]
     pub fn get(&self, i: usize) -> f64 {
         debug_assert!(i < self.n);
-        match self.params {
-            CodecParams::Aflp { .. } => aflp::get(self, i),
-            CodecParams::Fpx32 { .. } | CodecParams::Fpx64 { .. } => fpx::get(self, i),
-            CodecParams::Zero => 0.0,
-        }
+        dispatch::get(&self.params, &self.bytes, i)
     }
 
     /// Decompress to a fresh vector.
@@ -162,44 +161,6 @@ impl CompressionConfig {
 
     pub fn fpx(eps: f64) -> Self {
         CompressionConfig { codec: Codec::Fpx, eps, valr: true }
-    }
-}
-
-/// Iterate packed little-endian words of width `b` bytes for value indices
-/// [begin, end): a masked unaligned 8-byte load on the fast path (one `mov`
-/// + `and` instead of a variable-length memcpy per value — this is the MVM
-/// decode hot loop), byte-assembly only for the last values of the buffer.
-#[inline(always)]
-pub(crate) fn for_each_word(bytes: &[u8], b: usize, begin: usize, end: usize, mut f: impl FnMut(u64)) {
-    let mask: u64 = if b >= 8 { u64::MAX } else { (1u64 << (8 * b)) - 1 };
-    let fast_end_off = bytes.len().saturating_sub(8);
-    let mut off = begin * b;
-    for _ in begin..end {
-        let w = if off <= fast_end_off {
-            let arr: [u8; 8] = bytes[off..off + 8].try_into().unwrap();
-            u64::from_le_bytes(arr) & mask
-        } else {
-            let mut buf = [0u8; 8];
-            buf[..b].copy_from_slice(&bytes[off..off + b]);
-            u64::from_le_bytes(buf)
-        };
-        f(w);
-        off += b;
-    }
-}
-
-/// Single-word random access (same layout as [`for_each_word`]).
-#[inline(always)]
-pub(crate) fn load_word_at(bytes: &[u8], b: usize, i: usize) -> u64 {
-    let off = i * b;
-    if off + 8 <= bytes.len() {
-        let arr: [u8; 8] = bytes[off..off + 8].try_into().unwrap();
-        let mask: u64 = if b >= 8 { u64::MAX } else { (1u64 << (8 * b)) - 1 };
-        u64::from_le_bytes(arr) & mask
-    } else {
-        let mut buf = [0u8; 8];
-        buf[..b].copy_from_slice(&bytes[off..off + b]);
-        u64::from_le_bytes(buf)
     }
 }
 

@@ -42,7 +42,8 @@ impl TransferMat {
     }
 
     /// out += Eᵀ s (forward transformation: child coefficients → parent).
-    /// Compressed transfers are streamed chunk-wise; no heap allocation.
+    /// Compressed transfers run on the fused decode–dot kernels; no heap
+    /// allocation.
     pub fn apply_transposed_add(&self, s: &[f64], out: &mut [f64]) {
         match self {
             TransferMat::Plain(m) => blas::gemv_transposed(1.0, m, s, out),
@@ -53,7 +54,8 @@ impl TransferMat {
     }
 
     /// out += E t (backward transformation: parent coefficients → child).
-    /// Compressed transfers are streamed chunk-wise; no heap allocation.
+    /// Compressed transfers run on the fused decode–axpy kernels; no heap
+    /// allocation.
     pub fn apply_add(&self, t: &[f64], out: &mut [f64]) {
         match self {
             TransferMat::Plain(m) => blas::gemv(1.0, m, t, out),
@@ -112,88 +114,46 @@ impl NestedBasis {
         NestedBasis { rank: vec![0; nclusters], leaf: vec![None; nclusters], transfer: vec![None; nclusters], sigma: vec![Vec::new(); nclusters] }
     }
 
-    /// s += Wᵀ x for a *leaf* cluster (explicit basis).
+    /// s += Wᵀ x for a *leaf* cluster (explicit basis). Compressed leaves run
+    /// on the fused decode–dot kernels (one cursor resolution per blob).
     pub fn leaf_apply_transposed(&self, tau: usize, x: &[f64], s: &mut [f64]) {
         match self.leaf[tau].as_ref() {
             None => {}
             Some(BasisData::Plain(w)) => {
-                for j in 0..w.ncols() {
-                    s[j] += blas::dot(w.col(j), x);
+                for (j, sj) in s.iter_mut().enumerate().take(w.ncols()) {
+                    *sj += blas::dot(w.col(j), x);
                 }
             }
             Some(BasisData::Z { nrows, ncols, blob }) => {
-                let mut buf = [0.0f64; 256];
-                for j in 0..*ncols {
-                    let base = j * nrows;
-                    let mut acc = 0.0;
-                    let mut i = 0;
-                    while i < *nrows {
-                        let len = 256.min(nrows - i);
-                        blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
-                        acc += blas::dot(&buf[..len], &x[i..i + len]);
-                        i += len;
-                    }
-                    s[j] += acc;
-                }
+                crate::mvm::kernels::stream_dot_cols(blob, *nrows, *ncols, x, s);
             }
             Some(BasisData::Valr(z)) => {
-                let mut buf = [0.0f64; 256];
-                for j in 0..z.rank() {
-                    let col = &z.wcols[j];
-                    let mut acc = 0.0;
-                    let mut i = 0;
-                    while i < z.nrows {
-                        let len = 256.min(z.nrows - i);
-                        col.decompress_range(i, i + len, &mut buf[..len]);
-                        acc += blas::dot(&buf[..len], &x[i..i + len]);
-                        i += len;
-                    }
-                    s[j] += acc;
+                for (j, sj) in s.iter_mut().enumerate().take(z.rank()) {
+                    *sj += crate::mvm::kernels::stream_dot(&z.wcols[j], x);
                 }
             }
         }
     }
 
-    /// y += W t for a *leaf* cluster.
+    /// y += W t for a *leaf* cluster (fused decode–axpy for compressed
+    /// leaves).
     pub fn leaf_apply_add(&self, tau: usize, t: &[f64], y: &mut [f64]) {
         match self.leaf[tau].as_ref() {
             None => {}
             Some(BasisData::Plain(w)) => {
-                for j in 0..w.ncols() {
-                    if t[j] != 0.0 {
-                        blas::axpy(t[j], w.col(j), y);
+                for (j, &tj) in t.iter().enumerate().take(w.ncols()) {
+                    if tj != 0.0 {
+                        blas::axpy(tj, w.col(j), y);
                     }
                 }
             }
             Some(BasisData::Z { nrows, ncols, blob }) => {
-                let mut buf = [0.0f64; 256];
-                for j in 0..*ncols {
-                    if t[j] == 0.0 {
-                        continue;
-                    }
-                    let base = j * nrows;
-                    let mut i = 0;
-                    while i < *nrows {
-                        let len = 256.min(nrows - i);
-                        blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
-                        blas::axpy(t[j], &buf[..len], &mut y[i..i + len]);
-                        i += len;
-                    }
-                }
+                crate::mvm::kernels::stream_axpy_cols(blob, *nrows, *ncols, 1.0, t, y);
             }
             Some(BasisData::Valr(z)) => {
-                let mut buf = [0.0f64; 256];
-                for j in 0..z.rank() {
-                    if t[j] == 0.0 {
-                        continue;
-                    }
-                    let col = &z.wcols[j];
-                    let mut i = 0;
-                    while i < z.nrows {
-                        let len = 256.min(z.nrows - i);
-                        col.decompress_range(i, i + len, &mut buf[..len]);
-                        blas::axpy(t[j], &buf[..len], &mut y[i..i + len]);
-                        i += len;
+                for (j, &tj) in t.iter().enumerate().take(z.rank()) {
+                    if tj != 0.0 {
+                        crate::mvm::kernels::stream_axpy(&z.wcols[j], tj, y);
                     }
                 }
             }

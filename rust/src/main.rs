@@ -50,6 +50,8 @@ fn info() {
     println!("hmatc — compressed hierarchical matrix formats (H / UH / H²)");
     println!("threads: {}", hmatc::par::num_threads() + 1);
     println!("executor: {} (HMATC_EXEC=lpt|steal|sharded:K)", ExecutorKind::from_env());
+    println!("simd: {} (runtime dispatch; HMATC_SIMD=scalar forces the portable kernels)", hmatc::compress::dispatch::simd_name());
+    println!("codec kernels: {} (HMATC_CODEC_KERNELS=fused|blockwise)", hmatc::compress::dispatch::kernel_mode_name());
     #[cfg(feature = "pjrt")]
     {
         match hmatc::runtime::PjrtEngine::new(hmatc::runtime::DEFAULT_ARTIFACTS_DIR) {
@@ -249,10 +251,11 @@ fn serve_cmd(args: &Args) {
             std::process::exit(2);
         }
     };
+    let kernels = hmatc::compress::dispatch::kernels_label();
     if plan {
-        println!("serving {} operator ({}), executor {kind}", op.format_name(), fmt_bytes(op.byte_size()));
+        println!("serving {} operator ({}), executor {kind}, codec kernels {kernels}", op.format_name(), fmt_bytes(op.byte_size()));
     } else {
-        println!("serving {} operator ({})", op.format_name(), fmt_bytes(op.byte_size()));
+        println!("serving {} operator ({}), codec kernels {kernels}", op.format_name(), fmt_bytes(op.byte_size()));
     }
     let nreq = args.num_or("requests", 256usize);
     let batch = args.num_or("batch", 8usize);

@@ -1,16 +1,47 @@
-//! Per-block MVM kernels, uncompressed and compressed (Algorithm 8 and the
-//! blockwise scheme of §4.3). The compressed kernels are *memory accessors*:
-//! they stream 64-entry column chunks from the compressed representation
-//! through a stack buffer — the data is never fully decompressed.
+//! Per-block MVM kernels, uncompressed and compressed (Algorithm 8 and §4.3).
+//!
+//! The compressed kernels are *memory accessors*: matrix data is never fully
+//! decompressed. Two execution modes exist, selected once per process
+//! (`HMATC_CODEC_KERNELS`, default `fused`):
+//!
+//! * **fused** — a [`DecodeCursor`] resolves a blob's codec parameters once,
+//!   then fused decode–FMA kernels (`dot`/`axpy` and their panel variants)
+//!   keep decoded lanes in registers: no stack buffer between "decompress"
+//!   and "FMA", one streaming pass per column.
+//! * **blockwise** — the legacy scheme of §4.3 / Amestoy et al.: decompress
+//!   up to 64 contiguous entries into a stack buffer, then a second pass for
+//!   the FMA. Kept for the ablation bench (`ablation_codec_kernels`) and as
+//!   a debugging fallback.
+//!
+//! Both modes run on the runtime-dispatched SIMD decode kernels
+//! ([`crate::compress::dispatch`]); results are deterministic and bitwise
+//! identical across plan executors either way.
 
-use crate::compress::{Blob, ZLowRankValr};
+use crate::compress::dispatch::{self, KernelMode};
+use crate::compress::{Blob, DecodeCursor, ZLowRankValr};
 use crate::hmatrix::{BlockData, ZDense, ZLowRankDirect};
 use crate::la::{blas, DMatrix};
 use crate::lowrank::LowRank;
 
-/// Chunk length for streamed decompression (paper: up to 64 contiguous
-/// entries of a single column).
+/// Chunk length for blockwise streamed decompression (paper: up to 64
+/// contiguous entries of a single column).
 pub const CHUNK: usize = 64;
+
+/// Whether the fused decode–FMA kernels are selected (vs legacy blockwise).
+#[inline]
+fn fused() -> bool {
+    dispatch::kernel_mode() == KernelMode::Fused
+}
+
+/// Whether a panel apply should take the fused path: fused mode *and* a batch
+/// narrow enough that per-RHS accumulators fit one register-resident pass
+/// ([`dispatch::PANEL_FUSE_MAX`]). Wider batches decode each chunk exactly
+/// once for all right-hand sides through the blockwise layout — re-decoding
+/// the column per 8-RHS group would cost more than the buffer round trip.
+#[inline]
+fn fused_panel(nrhs: usize) -> bool {
+    nrhs <= dispatch::PANEL_FUSE_MAX && fused()
+}
 
 /// y += alpha · B · x for any block representation.
 ///
@@ -71,8 +102,7 @@ pub fn apply_block_transposed_scratch(alpha: f64, b: &BlockData, x: &[f64], y: &
         BlockData::ZLowRankValr(z) => {
             let k = z.rank();
             for i in 0..k {
-                let mut s = 0.0;
-                stream_dot(&z.wcols[i], x, &mut s);
+                let mut s = stream_dot(&z.wcols[i], x);
                 s *= z.sigma[i] * alpha;
                 if s != 0.0 {
                     stream_axpy(&z.xcols[i], s, y);
@@ -101,27 +131,57 @@ pub fn lowrank_mvm_scratch(alpha: f64, lr: &LowRank, x: &[f64], y: &mut [f64], s
     blas::gemv(alpha, &lr.u, t, y);
 }
 
-/// Algorithm 8, *direct* variant: per-entry random-access decompression.
-/// Kept for the ablation bench (`ablation_codec_kernels`).
+/// Algorithm 8, *direct* variant: per-entry random-access decompression. The
+/// codec parameters are resolved **once** through a [`DecodeCursor`] (the
+/// old per-element `CodecParams` re-match made this kernel look worse than
+/// the memory model says it should). Kept for the ablation bench.
 pub fn zgemv_direct(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), z.ncols);
     debug_assert_eq!(y.len(), z.nrows);
     let n = z.nrows;
+    let cur = DecodeCursor::new(&z.blob);
     for j in 0..z.ncols {
         let axj = alpha * x[j];
         if axj == 0.0 {
             continue;
         }
         let base = j * n;
-        for i in 0..n {
-            y[i] += z.blob.get(base + i) * axj;
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi += cur.get(base + i) * axj;
         }
+    }
+}
+
+/// Compressed gemv y += alpha · D · x: fused decode–FMA by default, legacy
+/// blockwise scheme under `HMATC_CODEC_KERNELS=blockwise`.
+pub fn zgemv_blocked(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
+    if fused() {
+        zgemv_fused(alpha, z, x, y);
+    } else {
+        zgemv_blockwise(alpha, z, x, y);
+    }
+}
+
+/// Fused compressed gemv: one cursor resolution per matrix, one streaming
+/// decode–FMA pass per column — decoded lanes never touch a buffer.
+pub fn zgemv_fused(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), z.ncols);
+    debug_assert_eq!(y.len(), z.nrows);
+    let n = z.nrows;
+    let mut cur = DecodeCursor::new(&z.blob);
+    for (j, &xj) in x.iter().enumerate() {
+        let axj = alpha * xj;
+        if axj == 0.0 {
+            continue;
+        }
+        cur.seek(j * n);
+        cur.axpy(axj, y);
     }
 }
 
 /// Algorithm 8, blockwise variant (§4.3 / Amestoy et al.): decompress up to
 /// 64 contiguous entries of a column into a stack buffer, then FMA.
-pub fn zgemv_blocked(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
+pub fn zgemv_blockwise(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), z.ncols);
     debug_assert_eq!(y.len(), z.nrows);
     let n = z.nrows;
@@ -142,8 +202,29 @@ pub fn zgemv_blocked(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// Transposed compressed gemv: y += alpha · Dᵀ x.
+/// Transposed compressed gemv: y += alpha · Dᵀ x (mode-dispatched).
 pub fn zgemv_t_blocked(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
+    if fused() {
+        zgemv_t_fused(alpha, z, x, y);
+    } else {
+        zgemv_t_blockwise(alpha, z, x, y);
+    }
+}
+
+/// Fused transposed compressed gemv: one decode–dot pass per column.
+pub fn zgemv_t_fused(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), z.nrows);
+    debug_assert_eq!(y.len(), z.ncols);
+    let n = z.nrows;
+    let mut cur = DecodeCursor::new(&z.blob);
+    for (j, yj) in y.iter_mut().enumerate() {
+        cur.seek(j * n);
+        *yj += alpha * cur.dot(x);
+    }
+}
+
+/// Blockwise transposed compressed gemv (legacy stack-buffer scheme).
+pub fn zgemv_t_blockwise(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), z.nrows);
     debug_assert_eq!(y.len(), z.ncols);
     let n = z.nrows;
@@ -184,8 +265,7 @@ pub fn zlowrank_mvm_scratch(alpha: f64, z: &ZLowRankDirect, x: &[f64], y: &mut [
 /// y += alpha · W diag(σ) Xᵀ x with VALR storage, streamed column-wise.
 pub fn valr_mvm(alpha: f64, z: &ZLowRankValr, x: &[f64], y: &mut [f64]) {
     for i in 0..z.rank() {
-        let mut s = 0.0;
-        stream_dot(&z.xcols[i], x, &mut s);
+        let mut s = stream_dot(&z.xcols[i], x);
         s *= z.sigma[i] * alpha;
         if s != 0.0 {
             stream_axpy(&z.wcols[i], s, y);
@@ -193,8 +273,17 @@ pub fn valr_mvm(alpha: f64, z: &ZLowRankValr, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// t[j] += dot(col_j, x) for a column-major compressed matrix blob.
+/// t[j] += dot(col_j, x) for a column-major compressed matrix blob (one
+/// cursor resolution per blob, one fused pass per column).
 pub(crate) fn stream_dot_cols(blob: &Blob, nrows: usize, ncols: usize, x: &[f64], t: &mut [f64]) {
+    if fused() {
+        let mut cur = DecodeCursor::new(blob);
+        for (j, tj) in t.iter_mut().enumerate().take(ncols) {
+            cur.seek(j * nrows);
+            *tj += cur.dot(x);
+        }
+        return;
+    }
     let mut buf = [0.0f64; CHUNK];
     for j in 0..ncols {
         let base = j * nrows;
@@ -212,6 +301,18 @@ pub(crate) fn stream_dot_cols(blob: &Blob, nrows: usize, ncols: usize, x: &[f64]
 
 /// y += alpha * Σ_j t[j] * col_j for a column-major compressed matrix blob.
 pub(crate) fn stream_axpy_cols(blob: &Blob, nrows: usize, ncols: usize, alpha: f64, t: &[f64], y: &mut [f64]) {
+    if fused() {
+        let mut cur = DecodeCursor::new(blob);
+        for (j, &tj) in t.iter().enumerate().take(ncols) {
+            let w = alpha * tj;
+            if w == 0.0 {
+                continue;
+            }
+            cur.seek(j * nrows);
+            cur.axpy(w, y);
+        }
+        return;
+    }
     let mut buf = [0.0f64; CHUNK];
     for j in 0..ncols {
         let w = alpha * t[j];
@@ -229,21 +330,31 @@ pub(crate) fn stream_axpy_cols(blob: &Blob, nrows: usize, ncols: usize, alpha: f
     }
 }
 
-/// acc += dot(blob, x) over a compressed vector.
-fn stream_dot(blob: &Blob, x: &[f64], acc: &mut f64) {
+/// dot(blob, x) over a compressed vector (used by the VALR applies and the
+/// cluster-basis / nested-basis single-vector paths).
+pub(crate) fn stream_dot(blob: &Blob, x: &[f64]) -> f64 {
+    if fused() {
+        return DecodeCursor::new(blob).dot(x);
+    }
     let mut buf = [0.0f64; CHUNK];
     let n = blob.n;
+    let mut acc = 0.0;
     let mut i = 0;
     while i < n {
         let len = CHUNK.min(n - i);
         blob.decompress_range(i, i + len, &mut buf[..len]);
-        *acc += blas::dot(&buf[..len], &x[i..i + len]);
+        acc += blas::dot(&buf[..len], &x[i..i + len]);
         i += len;
     }
+    acc
 }
 
 /// y += w * blob over a compressed vector.
-fn stream_axpy(blob: &Blob, w: f64, y: &mut [f64]) {
+pub(crate) fn stream_axpy(blob: &Blob, w: f64, y: &mut [f64]) {
+    if fused() {
+        DecodeCursor::new(blob).axpy(w, y);
+        return;
+    }
     let mut buf = [0.0f64; CHUNK];
     let n = blob.n;
     let mut i = 0;
@@ -258,7 +369,8 @@ fn stream_axpy(blob: &Blob, w: f64, y: &mut [f64]) {
 // ---------------------------------------------------------------------------
 // Panel (multi-RHS) kernels — gemm-shaped: every matrix byte (compressed or
 // not) is loaded/decoded once and applied to all `nrhs` right-hand sides,
-// raising arithmetic intensity by ~b (paper Fig. 7).
+// raising arithmetic intensity by ~b (paper Fig. 7). The fused variants run
+// one decode pass per column with per-RHS accumulators held in registers.
 //
 // A *panel* is a contiguous column-major multivector: `x` has `ncols × nrhs`
 // values (column c at `x[c*ncols..]`), `y` has `nrows × nrhs`.
@@ -294,12 +406,23 @@ pub fn gemm_tn_panel(alpha: f64, a: &DMatrix, x: &[f64], y: &mut [f64], nrhs: us
     }
 }
 
-/// Y += alpha · D · X with compressed dense D: each 64-entry column chunk is
-/// decoded once and FMA'd into all `nrhs` output columns.
+/// Y += alpha · D · X with compressed dense D (mode-dispatched): each column
+/// is decoded once and FMA'd into all `nrhs` output columns.
 pub fn zgemm_blocked_panel(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64], nrhs: usize) {
     let (m, n) = (z.nrows, z.ncols);
     debug_assert_eq!(x.len(), n * nrhs);
     debug_assert_eq!(y.len(), m * nrhs);
+    if fused_panel(nrhs) {
+        let mut cur = DecodeCursor::new(&z.blob);
+        for j in 0..n {
+            if (0..nrhs).all(|c| alpha * x[c * n + j] == 0.0) {
+                continue;
+            }
+            cur.seek(j * m);
+            cur.axpy_panel(m, alpha, &x[j..], n, nrhs, y, m);
+        }
+        return;
+    }
     let mut buf = [0.0f64; CHUNK];
     for j in 0..n {
         if (0..nrhs).all(|c| x[c * n + j] == 0.0) {
@@ -322,11 +445,19 @@ pub fn zgemm_blocked_panel(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64], nrh
 }
 
 /// Y += alpha · Dᵀ · X with compressed dense D (X: nrows×nrhs, Y: ncols×nrhs);
-/// one decode pass over D serves all `nrhs` columns.
+/// one decode pass over D serves all `nrhs` columns (mode-dispatched).
 pub fn zgemm_t_blocked_panel(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64], nrhs: usize) {
     let (m, n) = (z.nrows, z.ncols);
     debug_assert_eq!(x.len(), m * nrhs);
     debug_assert_eq!(y.len(), n * nrhs);
+    if fused_panel(nrhs) {
+        let mut cur = DecodeCursor::new(&z.blob);
+        for j in 0..n {
+            cur.seek(j * m);
+            cur.dot_panel(m, alpha, x, m, nrhs, &mut y[j..], n);
+        }
+        return;
+    }
     let mut buf = [0.0f64; CHUNK];
     for j in 0..n {
         let base = j * m;
@@ -343,10 +474,18 @@ pub fn zgemm_t_blocked_panel(alpha: f64, z: &ZDense, x: &[f64], y: &mut [f64], n
 }
 
 /// t[c*ncols + j] += dot(col_j, x_c) for a column-major compressed factor:
-/// one decode pass per factor column, `nrhs` dots per chunk.
+/// one decode pass per factor column, `nrhs` accumulators per chunk.
 pub(crate) fn stream_dot_cols_panel(blob: &Blob, nrows: usize, ncols: usize, x: &[f64], nrhs: usize, t: &mut [f64]) {
     debug_assert_eq!(x.len(), nrows * nrhs);
     debug_assert!(t.len() >= ncols * nrhs);
+    if fused_panel(nrhs) {
+        let mut cur = DecodeCursor::new(blob);
+        for j in 0..ncols {
+            cur.seek(j * nrows);
+            cur.dot_panel(nrows, 1.0, x, nrows, nrhs, &mut t[j..], ncols);
+        }
+        return;
+    }
     let mut buf = [0.0f64; CHUNK];
     for j in 0..ncols {
         let base = j * nrows;
@@ -367,6 +506,17 @@ pub(crate) fn stream_dot_cols_panel(blob: &Blob, nrows: usize, ncols: usize, x: 
 pub(crate) fn stream_axpy_cols_panel(blob: &Blob, nrows: usize, ncols: usize, alpha: f64, t: &[f64], nrhs: usize, y: &mut [f64]) {
     debug_assert!(t.len() >= ncols * nrhs);
     debug_assert_eq!(y.len(), nrows * nrhs);
+    if fused_panel(nrhs) {
+        let mut cur = DecodeCursor::new(blob);
+        for j in 0..ncols {
+            if (0..nrhs).all(|c| alpha * t[c * ncols + j] == 0.0) {
+                continue;
+            }
+            cur.seek(j * nrows);
+            cur.axpy_panel(nrows, alpha, &t[j..], ncols, nrhs, y, nrows);
+        }
+        return;
+    }
     let mut buf = [0.0f64; CHUNK];
     for j in 0..ncols {
         if (0..nrhs).all(|c| alpha * t[c * ncols + j] == 0.0) {
@@ -388,38 +538,62 @@ pub(crate) fn stream_axpy_cols_panel(blob: &Blob, nrows: usize, ncols: usize, al
     }
 }
 
-/// acc[c] += dot(blob, x_c) over a compressed vector, one decode pass.
-fn stream_dot_vec_panel(blob: &Blob, x: &[f64], nrhs: usize, acc: &mut [f64]) {
+/// acc[c*astride] += dot(blob, x[c*xstride..]) over a compressed vector with
+/// caller-chosen strides (the VALR basis panel layout stores coefficient j of
+/// column c at `s[c*rank + j]`), one decode pass for all right-hand sides.
+pub(crate) fn stream_dot_strided_panel(blob: &Blob, x: &[f64], xstride: usize, nrhs: usize, acc: &mut [f64], astride: usize) {
     let n = blob.n;
-    debug_assert_eq!(x.len(), n * nrhs);
+    if fused_panel(nrhs) {
+        DecodeCursor::new(blob).dot_panel(n, 1.0, x, xstride, nrhs, acc, astride);
+        return;
+    }
     let mut buf = [0.0f64; CHUNK];
     let mut i = 0;
     while i < n {
         let len = CHUNK.min(n - i);
         blob.decompress_range(i, i + len, &mut buf[..len]);
         for c in 0..nrhs {
-            acc[c] += blas::dot(&buf[..len], &x[c * n + i..c * n + i + len]);
+            acc[c * astride] += blas::dot(&buf[..len], &x[c * xstride + i..c * xstride + i + len]);
         }
         i += len;
     }
 }
 
-/// y_c += w[c] * blob over a compressed vector, one decode pass.
-fn stream_axpy_vec_panel(blob: &Blob, w: &[f64], nrhs: usize, y: &mut [f64]) {
+/// y[c*ystride..] += alpha·wv[c*wstride] * blob over a compressed vector with
+/// caller-chosen strides, one decode pass (zero weights skipped).
+pub(crate) fn stream_axpy_strided_panel(blob: &Blob, alpha: f64, wv: &[f64], wstride: usize, nrhs: usize, y: &mut [f64], ystride: usize) {
     let n = blob.n;
-    debug_assert_eq!(y.len(), n * nrhs);
+    if fused_panel(nrhs) {
+        DecodeCursor::new(blob).axpy_panel(n, alpha, wv, wstride, nrhs, y, ystride);
+        return;
+    }
     let mut buf = [0.0f64; CHUNK];
     let mut i = 0;
     while i < n {
         let len = CHUNK.min(n - i);
         blob.decompress_range(i, i + len, &mut buf[..len]);
         for c in 0..nrhs {
-            if w[c] != 0.0 {
-                blas::axpy(w[c], &buf[..len], &mut y[c * n + i..c * n + i + len]);
+            let w = alpha * wv[c * wstride];
+            if w != 0.0 {
+                blas::axpy(w, &buf[..len], &mut y[c * ystride + i..c * ystride + i + len]);
             }
         }
         i += len;
     }
+}
+
+/// acc[c] += dot(blob, x_c) over a compressed vector, one decode pass
+/// (the unit-stride case of [`stream_dot_strided_panel`]).
+fn stream_dot_vec_panel(blob: &Blob, x: &[f64], nrhs: usize, acc: &mut [f64]) {
+    debug_assert_eq!(x.len(), blob.n * nrhs);
+    stream_dot_strided_panel(blob, x, blob.n, nrhs, acc, 1);
+}
+
+/// y_c += w[c] * blob over a compressed vector, one decode pass
+/// (the unit-weight-stride case of [`stream_axpy_strided_panel`]).
+fn stream_axpy_vec_panel(blob: &Blob, w: &[f64], nrhs: usize, y: &mut [f64]) {
+    debug_assert_eq!(y.len(), blob.n * nrhs);
+    stream_axpy_strided_panel(blob, 1.0, w, 1, nrhs, y, blob.n);
 }
 
 /// Panel scratch (f64 values per right-hand side) needed by
@@ -570,7 +744,7 @@ mod tests {
     }
 
     #[test]
-    fn direct_and_blocked_zgemv_identical() {
+    fn direct_blockwise_and_fused_zgemv_agree() {
         let mut rng = Rng::new(103);
         let m = DMatrix::random(70, 50, &mut rng);
         let x = rng.vector(50);
@@ -578,10 +752,34 @@ mod tests {
             let z = ZDense::compress(&m, codec, 1e-7);
             let mut y1 = vec![0.0; 70];
             let mut y2 = vec![0.0; 70];
+            let mut y3 = vec![0.0; 70];
             zgemv_direct(2.0, &z, &x, &mut y1);
-            zgemv_blocked(2.0, &z, &x, &mut y2);
+            zgemv_blockwise(2.0, &z, &x, &mut y2);
+            zgemv_fused(2.0, &z, &x, &mut y3);
             for i in 0..70 {
-                assert!((y1[i] - y2[i]).abs() < 1e-12, "{codec:?} {i}");
+                assert!((y1[i] - y2[i]).abs() < 1e-12, "{codec:?} {i} direct vs blockwise");
+                // fused axpy applies the identical per-element ops
+                assert_eq!(y2[i].to_bits(), y3[i].to_bits(), "{codec:?} {i} blockwise vs fused");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_fused_matches_blockwise() {
+        let mut rng = Rng::new(113);
+        let m = DMatrix::random(53, 37, &mut rng);
+        let x = rng.vector(53);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            let z = ZDense::compress(&m, codec, 1e-8);
+            let mut y1 = vec![0.0; 37];
+            let mut y2 = vec![0.0; 37];
+            zgemv_t_blockwise(1.5, &z, &x, &mut y1);
+            zgemv_t_fused(1.5, &z, &x, &mut y2);
+            let mut y_ref = vec![0.0; 37];
+            blas::gemv_transposed(1.5, &z.to_dense(), &x, &mut y_ref);
+            for i in 0..37 {
+                assert!((y1[i] - y_ref[i]).abs() < 1e-10, "{codec:?} {i} blockwise");
+                assert!((y2[i] - y_ref[i]).abs() < 1e-10, "{codec:?} {i} fused");
             }
         }
     }

@@ -10,7 +10,10 @@ pub mod kernels;
 pub mod multi;
 pub mod unimvm;
 
-pub use kernels::{apply_block, apply_block_multi, apply_block_transposed, zgemv_blocked, zgemv_direct};
+pub use kernels::{
+    apply_block, apply_block_multi, apply_block_transposed, zgemv_blocked, zgemv_blockwise, zgemv_direct, zgemv_fused,
+    zgemv_t_blocked, zgemv_t_blockwise, zgemv_t_fused,
+};
 pub use adjoint::mvm_transposed;
 pub use multi::h_mvm_multi;
 

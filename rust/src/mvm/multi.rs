@@ -1,7 +1,9 @@
 //! Multi-RHS H-matrix product Y += α·M·X — the coordinator's batched path.
 //! Batching b requests into one traversal amortizes every matrix-data load
 //! over b vectors, raising arithmetic intensity by ~b (ablation bench
-//! `ablation_batching`).
+//! `ablation_batching`). Compressed blocks run through the fused panel
+//! kernels of [`crate::mvm::kernels`]: one decode pass per block column with
+//! per-RHS accumulators kept in registers (runtime-dispatched SIMD).
 
 use super::kernels;
 use super::{SharedVec, SPAWN_LEVELS};

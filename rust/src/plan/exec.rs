@@ -49,6 +49,9 @@ pub struct PlanStats {
     pub scratch_f64: usize,
     /// Coefficient slots (f64 values, forward + backward, single-RHS).
     pub coeff_f64: usize,
+    /// Codec-kernel selection the compressed applies run on, e.g.
+    /// `"fused+avx2"` ([`crate::compress::dispatch::kernels_label`]).
+    pub decode_kernels: &'static str,
 }
 
 /// Balance one level's task ids by their costs, remapping shard-local indices
@@ -360,7 +363,7 @@ impl HPlan {
 
     /// Aggregate over the schedule halves built so far.
     pub fn stats(&self) -> PlanStats {
-        let mut st = PlanStats::default();
+        let mut st = PlanStats { decode_kernels: crate::compress::dispatch::kernels_label(), ..PlanStats::default() };
         for sched in [self.fwd.get(), self.adj.get()].into_iter().flatten() {
             st.tasks += sched.tasks.len();
             st.max_shards = st.max_shards.max(sched.max_shards);
@@ -810,7 +813,7 @@ impl UniPlan {
 
     /// Aggregate over the schedule halves built so far.
     pub fn stats(&self) -> PlanStats {
-        let mut st = PlanStats::default();
+        let mut st = PlanStats { decode_kernels: crate::compress::dispatch::kernels_label(), ..PlanStats::default() };
         for sched in [self.fwd.get(), self.adj.get()].into_iter().flatten() {
             st.tasks += sched.ftasks.len() + sched.tasks.len();
             st.max_shards = st.max_shards.max(sched.max_shards);
@@ -1335,7 +1338,7 @@ impl H2Plan {
 
     /// Aggregate over the schedule halves built so far.
     pub fn stats(&self) -> PlanStats {
-        let mut st = PlanStats::default();
+        let mut st = PlanStats { decode_kernels: crate::compress::dispatch::kernels_label(), ..PlanStats::default() };
         for sched in [self.fwd.get(), self.adj.get()].into_iter().flatten() {
             st.tasks += sched.up_tasks.len() + sched.down_tasks.len();
             st.max_shards = st.max_shards.max(sched.max_shards);

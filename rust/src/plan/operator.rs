@@ -243,6 +243,13 @@ impl PlannedOperator {
         }
     }
 
+    /// Codec-kernel selection the compressed applies run on (also carried in
+    /// [`PlanStats::decode_kernels`]), e.g. `"fused+avx2"` — fused decode–FMA
+    /// kernels on the runtime-dispatched ISA level.
+    pub fn decode_kernels(&self) -> &'static str {
+        crate::compress::dispatch::kernels_label()
+    }
+
     /// Accept and produce vectors in *external* (original point) ordering:
     /// the cluster-tree permutations are folded into execution as a gather
     /// first level and a scatter-add last level over pooled staging buffers,

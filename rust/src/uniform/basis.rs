@@ -50,90 +50,48 @@ impl ClusterBasis {
     }
 
     /// s = Wᵀ x (forward transformation contribution). `s` has rank() slots.
+    /// Compressed storage runs on the fused decode–dot kernels (one cursor
+    /// resolution per blob, decoded lanes kept in registers).
     pub fn apply_transposed(&self, x: &[f64], s: &mut [f64]) {
         debug_assert_eq!(x.len(), self.nrows());
         debug_assert_eq!(s.len(), self.rank());
         match &self.data {
             BasisData::Plain(w) => {
-                for j in 0..w.ncols() {
-                    s[j] += blas::dot(w.col(j), x);
+                for (j, sj) in s.iter_mut().enumerate() {
+                    *sj += blas::dot(w.col(j), x);
                 }
             }
             BasisData::Z { nrows, ncols, blob } => {
-                // column-major decode, 64-entry chunks
-                let mut buf = [0.0f64; 256];
-                for j in 0..*ncols {
-                    let base = j * nrows;
-                    let mut acc = 0.0;
-                    let mut i = 0;
-                    while i < *nrows {
-                        let len = 256.min(nrows - i);
-                        blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
-                        acc += blas::dot(&buf[..len], &x[i..i + len]);
-                        i += len;
-                    }
-                    s[j] += acc;
-                }
+                crate::mvm::kernels::stream_dot_cols(blob, *nrows, *ncols, x, s);
             }
             BasisData::Valr(z) => {
-                let mut buf = [0.0f64; 256];
-                for j in 0..z.rank() {
-                    let col = &z.wcols[j];
-                    let mut acc = 0.0;
-                    let mut i = 0;
-                    while i < z.nrows {
-                        let len = 256.min(z.nrows - i);
-                        col.decompress_range(i, i + len, &mut buf[..len]);
-                        acc += blas::dot(&buf[..len], &x[i..i + len]);
-                        i += len;
-                    }
-                    s[j] += acc;
+                for (j, sj) in s.iter_mut().enumerate().take(z.rank()) {
+                    *sj += crate::mvm::kernels::stream_dot(&z.wcols[j], x);
                 }
             }
         }
     }
 
-    /// y += W t (backward transformation contribution).
+    /// y += W t (backward transformation contribution); compressed storage
+    /// runs on the fused decode–axpy kernels.
     pub fn apply_add(&self, t: &[f64], y: &mut [f64]) {
         debug_assert_eq!(t.len(), self.rank());
         debug_assert_eq!(y.len(), self.nrows());
         match &self.data {
             BasisData::Plain(w) => {
-                for j in 0..w.ncols() {
-                    if t[j] != 0.0 {
-                        blas::axpy(t[j], w.col(j), y);
+                for (j, &tj) in t.iter().enumerate() {
+                    if tj != 0.0 {
+                        blas::axpy(tj, w.col(j), y);
                     }
                 }
             }
             BasisData::Z { nrows, ncols, blob } => {
-                let mut buf = [0.0f64; 256];
-                for j in 0..*ncols {
-                    if t[j] == 0.0 {
-                        continue;
-                    }
-                    let base = j * nrows;
-                    let mut i = 0;
-                    while i < *nrows {
-                        let len = 256.min(nrows - i);
-                        blob.decompress_range(base + i, base + i + len, &mut buf[..len]);
-                        blas::axpy(t[j], &buf[..len], &mut y[i..i + len]);
-                        i += len;
-                    }
-                }
+                crate::mvm::kernels::stream_axpy_cols(blob, *nrows, *ncols, 1.0, t, y);
             }
             BasisData::Valr(z) => {
-                let mut buf = [0.0f64; 256];
-                for j in 0..z.rank() {
-                    if t[j] == 0.0 {
-                        continue;
-                    }
-                    let col = &z.wcols[j];
-                    let mut i = 0;
-                    while i < z.nrows {
-                        let len = 256.min(z.nrows - i);
-                        col.decompress_range(i, i + len, &mut buf[..len]);
-                        blas::axpy(t[j], &buf[..len], &mut y[i..i + len]);
-                        i += len;
+                for (j, &tj) in t.iter().enumerate().take(z.rank()) {
+                    if tj != 0.0 {
+                        crate::mvm::kernels::stream_axpy(&z.wcols[j], tj, y);
                     }
                 }
             }
@@ -207,18 +165,8 @@ impl BasisData {
             BasisData::Valr(z) => {
                 let k = z.rank();
                 let n = z.nrows;
-                let mut buf = [0.0f64; 256];
-                for j in 0..k {
-                    let col = &z.wcols[j];
-                    let mut i = 0;
-                    while i < n {
-                        let len = 256.min(n - i);
-                        col.decompress_range(i, i + len, &mut buf[..len]);
-                        for c in 0..nrhs {
-                            s[c * k + j] += blas::dot(&buf[..len], &x[c * n + i..c * n + i + len]);
-                        }
-                        i += len;
-                    }
+                for (j, col) in z.wcols.iter().enumerate() {
+                    crate::mvm::kernels::stream_dot_strided_panel(col, x, n, nrhs, &mut s[j..], k);
                 }
             }
         }
@@ -234,24 +182,11 @@ impl BasisData {
             BasisData::Valr(z) => {
                 let k = z.rank();
                 let n = z.nrows;
-                let mut buf = [0.0f64; 256];
-                for j in 0..k {
+                for (j, col) in z.wcols.iter().enumerate() {
                     if (0..nrhs).all(|c| t[c * k + j] == 0.0) {
                         continue;
                     }
-                    let col = &z.wcols[j];
-                    let mut i = 0;
-                    while i < n {
-                        let len = 256.min(n - i);
-                        col.decompress_range(i, i + len, &mut buf[..len]);
-                        for c in 0..nrhs {
-                            let w = t[c * k + j];
-                            if w != 0.0 {
-                                blas::axpy(w, &buf[..len], &mut y[c * n + i..c * n + i + len]);
-                            }
-                        }
-                        i += len;
-                    }
+                    crate::mvm::kernels::stream_axpy_strided_panel(col, 1.0, &t[j..], k, nrhs, y, n);
                 }
             }
         }

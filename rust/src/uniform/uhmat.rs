@@ -36,7 +36,8 @@ impl CouplingMat {
     }
 
     /// t += S · s with caller-provided scratch (≥ [`CouplingMat::scratch_len`]
-    /// values). Compressed couplings are streamed chunk-wise — never fully
+    /// values). Compressed couplings run on the fused decode–FMA kernels
+    /// (runtime-dispatched SIMD, [`crate::compress::dispatch`]) — never fully
     /// decompressed — so this performs no heap allocation.
     pub fn apply_add_scratch(&self, s: &[f64], t: &mut [f64], scratch: &mut [f64]) {
         match self {

@@ -1,0 +1,162 @@
+//! Property test: a `DecodeCursor` — codec parameters resolved once, then
+//! streamed in arbitrary chunk splits — must produce bit-identical output to
+//! one-shot `decompress_range` calls, for FPX, AFLP and every per-column
+//! VALR blob. Also pins cursor random access (`get`) against `Blob::get`
+//! and the fused axpy against decode-then-`blas::axpy` (which the fused
+//! kernels match bitwise by construction: identical per-element operations).
+
+use hmatc::compress::{Blob, Codec, DecodeCursor, ZLowRankValr};
+use hmatc::la::DMatrix;
+use hmatc::lowrank::LowRank;
+use hmatc::util::Rng;
+
+/// Split `[0, n)` into random chunks (including empty-chunk probes) and
+/// check the cursor's streamed output bit-for-bit against one-shot range
+/// decodes of the same windows and of the whole blob.
+fn check_random_splits(blob: &Blob, rng: &mut Rng, tag: &str) {
+    let n = blob.n;
+    let mut whole = vec![0.0f64; n];
+    blob.decompress_range(0, n, &mut whole);
+
+    for round in 0..8 {
+        let mut cur = DecodeCursor::new(blob);
+        let mut streamed = vec![0.0f64; n];
+        let mut pos = 0usize;
+        while pos < n {
+            let len = match round % 3 {
+                0 => 1 + rng.below(n - pos),                  // arbitrary
+                1 => (1 + rng.below(7)).min(n - pos),         // tiny chunks
+                _ => (32 + rng.below(97)).min(n - pos),       // kernel-sized
+            };
+            let before = cur.pos();
+            cur.next_chunk(&mut streamed[pos..pos + len]);
+            assert_eq!(cur.pos(), before + len, "{tag}: cursor position");
+
+            // the same window through the one-shot path
+            let mut window = vec![0.0f64; len];
+            blob.decompress_range(pos, pos + len, &mut window);
+            for (k, (a, b)) in streamed[pos..pos + len].iter().zip(&window).enumerate() {
+                assert!(a.to_bits() == b.to_bits(), "{tag} round {round}: window {pos}..{} idx {}", pos + len, pos + k);
+            }
+            pos += len;
+        }
+        assert_eq!(cur.remaining(), 0, "{tag}: cursor exhausted");
+        for (i, (a, b)) in streamed.iter().zip(&whole).enumerate() {
+            assert!(a.to_bits() == b.to_bits(), "{tag} round {round}: idx {i}");
+        }
+    }
+
+    // seek + re-stream from arbitrary offsets
+    let mut cur = DecodeCursor::new(blob);
+    for _ in 0..16 {
+        if n == 0 {
+            break;
+        }
+        let begin = rng.below(n);
+        let len = 1 + rng.below(n - begin);
+        cur.seek(begin);
+        let mut out = vec![0.0f64; len];
+        cur.next_chunk(&mut out);
+        let mut want = vec![0.0f64; len];
+        blob.decompress_range(begin, begin + len, &mut want);
+        for (k, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert!(a.to_bits() == b.to_bits(), "{tag}: seek {begin} len {len} idx {}", begin + k);
+        }
+    }
+
+    // random access with resolved params
+    let cur = DecodeCursor::new(blob);
+    for i in 0..n {
+        assert_eq!(cur.get(i).to_bits(), blob.get(i).to_bits(), "{tag}: get({i})");
+    }
+}
+
+fn random_data(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            if i % 11 == 10 {
+                0.0
+            } else {
+                rng.normal() * 10f64.powf(rng.range(-3.0, 3.0))
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn cursor_matches_decompress_range_fpx_aflp() {
+    let mut rng = Rng::new(31_000);
+    let eps_list = [1e-2, 1e-5, 1e-8, 1e-11, 1e-15];
+    for codec in [Codec::Aflp, Codec::Fpx] {
+        for &eps in &eps_list {
+            for _ in 0..4 {
+                let n = 1 + rng.below(400);
+                let data = random_data(n, &mut rng);
+                let blob = Blob::compress(codec, &data, eps);
+                check_random_splits(&blob, &mut rng, &format!("{codec:?} eps={eps} n={n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn cursor_matches_decompress_range_extreme_aflp() {
+    // extreme dynamic range routes through the generic (wide) decode family
+    let mut rng = Rng::new(32_000);
+    let data: Vec<f64> = (0..137).map(|i| if i % 2 == 0 { 1e-220 * (i + 1) as f64 } else { 1e220 / (i + 1) as f64 }).collect();
+    let blob = Blob::compress(Codec::Aflp, &data, 1e-4);
+    check_random_splits(&blob, &mut rng, "aflp wide");
+}
+
+#[test]
+fn cursor_matches_decompress_range_zero_blob() {
+    let mut rng = Rng::new(33_000);
+    let zeros = vec![0.0; 97];
+    let blob = Blob::compress(Codec::Fpx, &zeros, 1e-6);
+    check_random_splits(&blob, &mut rng, "zero");
+}
+
+#[test]
+fn cursor_matches_decompress_range_valr_columns() {
+    // VALR picks a different accuracy (and width) per column — every column
+    // blob must stream identically through a cursor
+    let mut rng = Rng::new(34_000);
+    let (qu, _) = hmatc::la::qr_thin(&DMatrix::random(83, 9, &mut rng));
+    let (qv, _) = hmatc::la::qr_thin(&DMatrix::random(71, 9, &mut rng));
+    let mut v = qv;
+    for i in 0..9 {
+        let s = 0.2f64.powi(i as i32);
+        for x in v.col_mut(i) {
+            *x *= s;
+        }
+    }
+    let lr = LowRank { u: qu, v };
+    for codec in [Codec::Aflp, Codec::Fpx] {
+        for &eps in &[1e-4, 1e-9, 1e-13] {
+            let z = ZLowRankValr::compress_lowrank(&lr, codec, eps);
+            for (i, col) in z.wcols.iter().chain(z.xcols.iter()).enumerate() {
+                check_random_splits(col, &mut rng, &format!("valr {codec:?} eps={eps} col {i}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_axpy_equals_decode_then_axpy_bitwise() {
+    let mut rng = Rng::new(35_000);
+    for codec in [Codec::Aflp, Codec::Fpx] {
+        for &eps in &[1e-3, 1e-9] {
+            let n = 211;
+            let data = random_data(n, &mut rng);
+            let blob = Blob::compress(codec, &data, eps);
+            let dec = blob.to_vec();
+            let mut y1 = rng.vector(n);
+            let mut y2 = y1.clone();
+            hmatc::la::axpy(0.75, &dec, &mut y1);
+            DecodeCursor::new(&blob).axpy(0.75, &mut y2);
+            for (i, (a, b)) in y1.iter().zip(&y2).enumerate() {
+                assert!(a.to_bits() == b.to_bits(), "{codec:?} eps={eps} idx {i}");
+            }
+        }
+    }
+}

@@ -1,9 +1,12 @@
 //! Exhaustive `decompress_range(begin, end)` sweeps over tiny buffers: pins
-//! the `fast4`-vs-`fast` 4/8-byte-load window logic in `fpx.rs` and the
-//! `fast` cutoffs in `aflp.rs` against the scalar random-access reference
-//! (`Blob::get`, robust byte assembly), for every reachable value width.
-//! The same source runs on AVX2 and non-AVX2 builds — CI exercises both —
-//! so the SIMD gather paths are pinned bit-for-bit against the scalar tails.
+//! the 4/8-byte-load window logic of the dispatch kernels against the scalar
+//! random-access reference (`Blob::get`, robust byte assembly), for every
+//! reachable value width. Decode kernels are selected by **runtime** ISA
+//! dispatch; `tests/codec_simd_dispatch.rs` (its own binary, so the global
+//! ISA override cannot race this suite) additionally asserts forced-scalar
+//! vs dispatched-SIMD bitwise equivalence window by window, and CI runs the
+//! whole suite under `HMATC_SIMD=scalar` so the scalar kernels stay pinned
+//! end to end.
 //!
 //! The VALR sweeps run the same boundary checks over the *per-column* blobs
 //! a `ZLowRankValr` block/basis stores: VALR picks a different accuracy (and

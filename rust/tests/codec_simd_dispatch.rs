@@ -1,0 +1,104 @@
+//! Forced-scalar vs dispatched-SIMD equivalence for the codec kernel tables.
+//!
+//! `dispatch::force_simd` mutates the **process-global** ISA selection, so
+//! these checks live in their own test binary with a single `#[test]` fn —
+//! cargo's in-binary test threads can never observe a level another test
+//! forced, and the `HMATC_SIMD=scalar` CI job keeps its other binaries pinned
+//! to the scalar kernels throughout.
+//!
+//! Asserted here, window by window over every reachable byte width:
+//!
+//! * `decompress_range` decodes to identical bits under the forced-scalar and
+//!   dispatched (AVX2 where detected) tables, for every `(begin, end)` window
+//!   including `begin == end`, unaligned begins/ends and the FPX32 tail
+//!   region where a 4-byte gather still fits but an 8-byte load does not;
+//! * the fused `dot` performs the identical sequence of rounded operations on
+//!   both ISA levels (stride-4 lane sums, serial tail into lane 0, fixed
+//!   reduction) — bitwise-equal results;
+//! * the fused `axpy` is bitwise ISA-independent (per-element mul + add).
+//!
+//! On machines without AVX2 the "dispatched" side resolves to scalar and the
+//! comparisons are trivially true.
+
+use hmatc::compress::dispatch::{self, SimdLevel};
+use hmatc::compress::{Blob, Codec, DecodeCursor};
+use hmatc::util::Rng;
+
+fn cases() -> Vec<(Codec, Blob)> {
+    // (codec, eps list, generator): covers AFLP widths 1..=8, FPX32 2..=4
+    // (plain normals), FPX64 3..=8 (1e40 sentinel forces the FP64 format)
+    let aflp_eps = [1e-1, 1e-3, 1e-5, 1e-7, 1e-9, 1e-11, 1e-13, 1e-15];
+    let fpx32_eps = [1e-2, 1e-4, 1.2e-7];
+    let fpx64_eps = [1e-2, 1e-6, 4e-9, 1.5e-11, 6e-14, 1e-16];
+    let mut cases: Vec<(Codec, Blob)> = Vec::new();
+    for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 11, 16, 21] {
+        for (ei, &eps) in aflp_eps.iter().enumerate() {
+            let mut rng = Rng::new(9000 + (ei * 100 + n) as u64);
+            let data: Vec<f64> = (0..n).map(|i| if i % 5 == 4 { 0.0 } else { 1.0 + rng.uniform() }).collect();
+            cases.push((Codec::Aflp, Blob::compress(Codec::Aflp, &data, eps)));
+        }
+        for (ei, &eps) in fpx32_eps.iter().enumerate() {
+            let mut rng = Rng::new(9100 + (ei * 100 + n) as u64);
+            let data: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            cases.push((Codec::Fpx, Blob::compress(Codec::Fpx, &data, eps)));
+        }
+        for (ei, &eps) in fpx64_eps.iter().enumerate() {
+            let mut rng = Rng::new(9200 + (ei * 100 + n) as u64);
+            let data: Vec<f64> = (0..n).map(|i| if i == 0 { 1.0e40 } else { rng.normal() }).collect();
+            cases.push((Codec::Fpx, Blob::compress(Codec::Fpx, &data, eps)));
+        }
+    }
+    cases
+}
+
+#[test]
+fn forced_scalar_matches_dispatched_simd_bitwise() {
+    let cases = cases();
+
+    // -- range decode: every (begin, end) window, bit for bit --
+    for (codec, blob) in &cases {
+        let n = blob.n;
+        for begin in 0..=n {
+            for end in begin..=n {
+                let mut scalar = vec![0.0f64; end - begin];
+                let mut simd = vec![0.0f64; end - begin];
+                dispatch::force_simd(Some(SimdLevel::Scalar));
+                blob.decompress_range(begin, end, &mut scalar);
+                dispatch::force_simd(Some(SimdLevel::Avx2));
+                blob.decompress_range(begin, end, &mut simd);
+                for (k, (a, b)) in scalar.iter().zip(&simd).enumerate() {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{codec:?} b/val={} n={n} range {begin}..{end} idx {}: scalar {a:e} vs simd {b:e}",
+                        blob.bytes_per_value(),
+                        begin + k
+                    );
+                }
+            }
+        }
+    }
+
+    // -- fused dot + axpy: identical rounded-operation sequences per level --
+    let mut rng = Rng::new(47);
+    for (codec, blob) in &cases {
+        let n = blob.n;
+        if n == 0 {
+            continue;
+        }
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        dispatch::force_simd(Some(SimdLevel::Scalar));
+        let ds = DecodeCursor::new(blob).dot(&x);
+        let mut ys = x.clone();
+        DecodeCursor::new(blob).axpy(1.7, &mut ys);
+        dispatch::force_simd(Some(SimdLevel::Avx2));
+        let dv = DecodeCursor::new(blob).dot(&x);
+        let mut yv = x.clone();
+        DecodeCursor::new(blob).axpy(1.7, &mut yv);
+        assert_eq!(ds.to_bits(), dv.to_bits(), "{codec:?} n={n} fused dot");
+        for (i, (a, b)) in ys.iter().zip(&yv).enumerate() {
+            assert!(a.to_bits() == b.to_bits(), "{codec:?} n={n} fused axpy idx {i}");
+        }
+    }
+
+    dispatch::force_simd(None);
+}
