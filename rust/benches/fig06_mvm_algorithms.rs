@@ -10,8 +10,13 @@
 //!
 //! The plan rows are emitted **once per execution backend** (`plan`,
 //! `plan steal`, `plan sharded:2`) on the same matrix, so the LPT-vs-stealing
-//! comparison lands in `BENCH_fig06.json` directly. `--quick` restricts to
-//! the smallest size and skips the eps sweep (CI smoke).
+//! comparison lands in `BENCH_fig06.json` directly. Each backend additionally
+//! gets a **`plan calibrated`** row: the same plan after
+//! measurement-driven cost-model calibration (`HPlan::calibrate` + LPT
+//! re-balancing), bitwise-verified against the static row's output before
+//! benching — so static-vs-calibrated GFLOP/s per executor lands in the JSON.
+//! `--quick` restricts to the smallest size and skips the eps sweep (CI
+//! smoke).
 
 use hmatc::bench::workloads::{Formats, Problem};
 use hmatc::bench::{bench_fn, default_eps, default_levels, write_bench_json, write_result, Table};
@@ -32,6 +37,24 @@ fn plan_label(kind: ExecutorKind) -> String {
     match kind {
         ExecutorKind::StaticLpt => "plan".to_string(),
         other => format!("plan {other}"),
+    }
+}
+
+/// Row/key label for a calibrated plan row.
+fn cal_label(kind: ExecutorKind) -> String {
+    match kind {
+        ExecutorKind::StaticLpt => "plan calibrated".to_string(),
+        other => format!("plan calibrated {other}"),
+    }
+}
+
+/// Calibrated re-balancing only re-partitions the task lists, so its output
+/// must reproduce the static packing's output bit for bit; a divergence is a
+/// scheduler bug and aborts the bench.
+fn assert_bitwise(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: row {i}: calibrated {x:e} vs static {y:e}");
     }
 }
 
@@ -67,7 +90,73 @@ fn main() {
         let h_plans: Vec<(ExecutorKind, HPlan)> = kinds().iter().map(|&k| (k, HPlan::build_with(&f.h, k.build()))).collect();
         let uh_plans: Vec<(ExecutorKind, UniPlan)> = kinds().iter().map(|&k| (k, UniPlan::build_with(&f.uh, k.build()))).collect();
         let h2_plans: Vec<(ExecutorKind, H2Plan)> = kinds().iter().map(|&k| (k, H2Plan::build_with(&f.h2, k.build()))).collect();
+        // the baseline plan rows honor the ambient HMATC_COSTS profile —
+        // exactly like serving — so the document-level `cost_source` stamp
+        // describes what these rows actually ran on; with the variable
+        // unset (CI) they stay on the static byte model
+        if let Some(p) = hmatc::plan::costmodel::costs_from_env() {
+            for (_, plan) in &h_plans {
+                plan.rebalance(&p);
+            }
+            for (_, plan) in &uh_plans {
+                plan.rebalance(&p);
+            }
+            for (_, plan) in &h2_plans {
+                plan.rebalance(&p);
+            }
+        }
+        // the same plans after measurement-driven cost-model calibration
+        let cal_rounds = if quick { 2 } else { 3 };
+        // a degenerate fit would make the 'plan calibrated' label a lie
+        // (rebalance ignores unusable profiles) — fail loudly instead of
+        // recording static timings as calibrated data
+        let h_cal: Vec<(ExecutorKind, HPlan)> = kinds()
+            .iter()
+            .map(|&k| {
+                let plan = HPlan::build_with(&f.h, k.build());
+                assert!(plan.calibrate(&f.h, cal_rounds).is_usable(), "H calibration degenerated [{k}]");
+                (k, plan)
+            })
+            .collect();
+        let uh_cal: Vec<(ExecutorKind, UniPlan)> = kinds()
+            .iter()
+            .map(|&k| {
+                let plan = UniPlan::build_with(&f.uh, k.build());
+                assert!(plan.calibrate(&f.uh, cal_rounds).is_usable(), "UH calibration degenerated [{k}]");
+                (k, plan)
+            })
+            .collect();
+        let h2_cal: Vec<(ExecutorKind, H2Plan)> = kinds()
+            .iter()
+            .map(|&k| {
+                let plan = H2Plan::build_with(&f.h2, k.build());
+                assert!(plan.calibrate(&f.h2, cal_rounds).is_usable(), "H2 calibration degenerated [{k}]");
+                (k, plan)
+            })
+            .collect();
         let mut arena = Arena::new();
+
+        // pin: every calibrated row's output is bitwise equal to its static
+        // row's output (re-balancing only re-partitions the task lists)
+        for ((kind, sp), (_, cp)) in h_plans.iter().zip(&h_cal) {
+            let (mut ys, mut yc) = (vec![0.0; n], vec![0.0; n]);
+            sp.execute(&f.h, 1.0, &x, &mut ys, &mut arena);
+            cp.execute(&f.h, 1.0, &x, &mut yc, &mut arena);
+            assert_bitwise(&yc, &ys, &format!("H plan [{kind}]"));
+        }
+        for ((kind, sp), (_, cp)) in uh_plans.iter().zip(&uh_cal) {
+            let (mut ys, mut yc) = (vec![0.0; n], vec![0.0; n]);
+            sp.execute(&f.uh, 1.0, &x, &mut ys, &mut arena);
+            cp.execute(&f.uh, 1.0, &x, &mut yc, &mut arena);
+            assert_bitwise(&yc, &ys, &format!("UH plan [{kind}]"));
+        }
+        for ((kind, sp), (_, cp)) in h2_plans.iter().zip(&h2_cal) {
+            let (mut ys, mut yc) = (vec![0.0; n], vec![0.0; n]);
+            sp.execute(&f.h2, 1.0, &x, &mut ys, &mut arena);
+            cp.execute(&f.h2, 1.0, &x, &mut yc, &mut arena);
+            assert_bitwise(&yc, &ys, &format!("H2 plan [{kind}]"));
+        }
+        doc.push(("calibrated bitwise ok".to_string(), Json::Bool(true)));
 
         for algo in MvmAlgorithm::all() {
             match algo {
@@ -79,6 +168,10 @@ fn main() {
                     for (kind, plan) in &h_plans {
                         let r = bench_fn(1, 5, 0.02, || plan.execute(&f.h, 1.0, &x, &mut y, &mut arena));
                         push_row(&mut t, &mut doc, "H", "", &plan_label(*kind), f.h.byte_size(), r.median);
+                    }
+                    for (kind, plan) in &h_cal {
+                        let r = bench_fn(1, 5, 0.02, || plan.execute(&f.h, 1.0, &x, &mut y, &mut arena));
+                        push_row(&mut t, &mut doc, "H", "", &cal_label(*kind), f.h.byte_size(), r.median);
                     }
                 }
                 _ => {
@@ -93,6 +186,10 @@ fn main() {
                     for (kind, plan) in &uh_plans {
                         let r = bench_fn(1, 5, 0.02, || plan.execute(&f.uh, 1.0, &x, &mut y, &mut arena));
                         push_row(&mut t, &mut doc, "UH", "uh ", &plan_label(*kind), f.uh.byte_size(), r.median);
+                    }
+                    for (kind, plan) in &uh_cal {
+                        let r = bench_fn(1, 5, 0.02, || plan.execute(&f.uh, 1.0, &x, &mut y, &mut arena));
+                        push_row(&mut t, &mut doc, "UH", "uh ", &cal_label(*kind), f.uh.byte_size(), r.median);
                     }
                 }
                 _ => {
@@ -113,6 +210,10 @@ fn main() {
                     for (kind, plan) in &h2_plans {
                         let r = bench_fn(1, 5, 0.02, || plan.execute(&f.h2, 1.0, &x, &mut y, &mut arena));
                         push_row(&mut t, &mut doc, "H2", "h2 ", &plan_label(*kind), f.h2.byte_size(), r.median);
+                    }
+                    for (kind, plan) in &h2_cal {
+                        let r = bench_fn(1, 5, 0.02, || plan.execute(&f.h2, 1.0, &x, &mut y, &mut arena));
+                        push_row(&mut t, &mut doc, "H2", "h2 ", &cal_label(*kind), f.h2.byte_size(), r.median);
                     }
                 }
                 _ => {

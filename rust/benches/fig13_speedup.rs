@@ -6,6 +6,11 @@
 //! Expected shape (paper): ≈2–3× for H, 1.5–2.5× for UH, less for H²
 //! (none at the finest ε); AFLP ≥ FPX in total speedup (better ratio beats
 //! cheaper decode); speedups shrink as ε→0 and grow with n.
+//!
+//! Each format's plan is additionally measured after measurement-driven
+//! cost-model calibration (`plan calibrated` rows: `calibrate` + LPT
+//! re-balancing, bitwise output-invariant), so static-vs-calibrated packing
+//! lands in the speedup trajectory too.
 
 use hmatc::bench::workloads::{Formats, Problem};
 use hmatc::bench::{bench_fn, default_eps, default_levels, write_bench_json, write_result, Table};
@@ -19,33 +24,59 @@ use hmatc::util::Rng;
 struct Speedups {
     h: f64,
     h_plan: f64,
+    h_plan_cal: f64,
     uh: f64,
     uh_plan: f64,
+    uh_plan_cal: f64,
     h2: f64,
     h2_plan: f64,
+    h2_plan_cal: f64,
 }
 
 struct Timings {
     h: f64,
     h_plan: f64,
+    h_plan_cal: f64,
     uh: f64,
     uh_plan: f64,
+    uh_plan_cal: f64,
     h2: f64,
     h2_plan: f64,
+    h2_plan_cal: f64,
 }
 
 fn time_formats(f: &Formats, x: &[f64], y: &mut [f64]) -> Timings {
     let h_plan = HPlan::build(&f.h);
     let uh_plan = UniPlan::build(&f.uh);
     let h2_plan = H2Plan::build(&f.h2);
+    // baseline plan rows honor the ambient HMATC_COSTS profile (like
+    // serving) so the document's `cost_source` stamp stays truthful; unset
+    // (CI) means the static byte model
+    if let Some(p) = hmatc::plan::costmodel::costs_from_env() {
+        h_plan.rebalance(&p);
+        uh_plan.rebalance(&p);
+        h2_plan.rebalance(&p);
+    }
+    // measurement-calibrated plans: same task lists, re-balanced packing —
+    // a degenerate fit would silently leave the static packing under the
+    // 'plan calibrated' columns, so fail loudly instead
+    let h_cal = HPlan::build(&f.h);
+    assert!(h_cal.calibrate(&f.h, 2).is_usable(), "H calibration degenerated");
+    let uh_cal = UniPlan::build(&f.uh);
+    assert!(uh_cal.calibrate(&f.uh, 2).is_usable(), "UH calibration degenerated");
+    let h2_cal = H2Plan::build(&f.h2);
+    assert!(h2_cal.calibrate(&f.h2, 2).is_usable(), "H2 calibration degenerated");
     let mut arena = Arena::new();
     Timings {
         h: bench_fn(1, 5, 0.02, || hmatc::mvm::mvm(1.0, &f.h, x, y, MvmAlgorithm::ClusterLists)).median,
         h_plan: bench_fn(1, 5, 0.02, || h_plan.execute(&f.h, 1.0, x, y, &mut arena)).median,
+        h_plan_cal: bench_fn(1, 5, 0.02, || h_cal.execute(&f.h, 1.0, x, y, &mut arena)).median,
         uh: bench_fn(1, 5, 0.02, || hmatc::mvm::uniform_mvm(1.0, &f.uh, x, y, UniMvmAlgorithm::RowWise)).median,
         uh_plan: bench_fn(1, 5, 0.02, || uh_plan.execute(&f.uh, 1.0, x, y, &mut arena)).median,
+        uh_plan_cal: bench_fn(1, 5, 0.02, || uh_cal.execute(&f.uh, 1.0, x, y, &mut arena)).median,
         h2: bench_fn(1, 5, 0.02, || hmatc::mvm::h2_mvm(1.0, &f.h2, x, y, H2MvmAlgorithm::RowWise)).median,
         h2_plan: bench_fn(1, 5, 0.02, || h2_plan.execute(&f.h2, 1.0, x, y, &mut arena)).median,
+        h2_plan_cal: bench_fn(1, 5, 0.02, || h2_cal.execute(&f.h2, 1.0, x, y, &mut arena)).median,
     }
 }
 
@@ -68,10 +99,13 @@ fn measure(p: &Problem, f0: &Formats, eps: f64, codec: Codec) -> Speedups {
     Speedups {
         h: t0.h / t1.h,
         h_plan: t0.h_plan / t1.h_plan,
+        h_plan_cal: t0.h_plan_cal / t1.h_plan_cal,
         uh: t0.uh / t1.uh,
         uh_plan: t0.uh_plan / t1.uh_plan,
+        uh_plan_cal: t0.uh_plan_cal / t1.uh_plan_cal,
         h2: t0.h2 / t1.h2,
         h2_plan: t0.h2_plan / t1.h2_plan,
+        h2_plan_cal: t0.h2_plan_cal / t1.h2_plan_cal,
     }
 }
 
@@ -81,10 +115,13 @@ fn row_json(n_or_eps: (&str, Json), codec: Codec, s: &Speedups) -> Json {
         ("codec", codec.name().into()),
         ("h", s.h.into()),
         ("h plan", s.h_plan.into()),
+        ("h plan calibrated", s.h_plan_cal.into()),
         ("uh", s.uh.into()),
         ("uh plan", s.uh_plan.into()),
+        ("uh plan calibrated", s.uh_plan_cal.into()),
         ("h2", s.h2.into()),
         ("h2 plan", s.h2_plan.into()),
+        ("h2 plan calibrated", s.h2_plan_cal.into()),
     ])
 }
 
@@ -94,7 +131,7 @@ fn main() {
     let eps = 1e-6;
 
     println!("\n== Fig. 13: speedup of compressed vs uncompressed MVM, vs n (eps = {eps:.0e}) ==");
-    let mut t = Table::new(&["n", "codec", "H", "H plan", "UH", "UH plan", "H2", "H2 plan"]);
+    let mut t = Table::new(&["n", "codec", "H", "H plan", "H plan cal", "UH", "UH plan", "UH plan cal", "H2", "H2 plan", "H2 plan cal"]);
     let mut vs_n = Vec::new();
     for &level in &levels {
         let p = Problem::new(level);
@@ -106,10 +143,13 @@ fn main() {
                 codec.name().into(),
                 format!("{:.2}x", s.h),
                 format!("{:.2}x", s.h_plan),
+                format!("{:.2}x", s.h_plan_cal),
                 format!("{:.2}x", s.uh),
                 format!("{:.2}x", s.uh_plan),
+                format!("{:.2}x", s.uh_plan_cal),
                 format!("{:.2}x", s.h2),
                 format!("{:.2}x", s.h2_plan),
+                format!("{:.2}x", s.h2_plan_cal),
             ]);
             vs_n.push(row_json(("n", p.n().into()), codec, &s));
         }
@@ -118,7 +158,7 @@ fn main() {
 
     println!("\n== Fig. 13: speedup vs eps (n fixed) ==");
     let p = Problem::new(*levels.last().unwrap());
-    let mut t2 = Table::new(&["eps", "codec", "H", "H plan", "UH", "UH plan", "H2", "H2 plan"]);
+    let mut t2 = Table::new(&["eps", "codec", "H", "H plan", "H plan cal", "UH", "UH plan", "UH plan cal", "H2", "H2 plan", "H2 plan cal"]);
     let mut vs_eps = Vec::new();
     for &eps in &default_eps() {
         let f0 = Formats::build(&p, eps);
@@ -129,10 +169,13 @@ fn main() {
                 codec.name().into(),
                 format!("{:.2}x", s.h),
                 format!("{:.2}x", s.h_plan),
+                format!("{:.2}x", s.h_plan_cal),
                 format!("{:.2}x", s.uh),
                 format!("{:.2}x", s.uh_plan),
+                format!("{:.2}x", s.uh_plan_cal),
                 format!("{:.2}x", s.h2),
                 format!("{:.2}x", s.h2_plan),
+                format!("{:.2}x", s.h2_plan_cal),
             ]);
             vs_eps.push(row_json(("eps", eps.into()), codec, &s));
         }

@@ -7,7 +7,7 @@ mod table;
 pub mod workloads;
 
 pub use roofline::{measure_peak_bandwidth, roofline_point, RooflinePoint};
-pub use runner::{bench_fn, exec_context, BenchResult};
+pub use runner::{bench_fn, cost_source_label, exec_context, BenchResult};
 pub use table::Table;
 
 use crate::util::json::Json;
@@ -31,8 +31,8 @@ pub fn write_bench_json(tag: &str, doc: &Json) {
     let _ = std::fs::write(format!("BENCH_{tag}.json"), with_context(doc).to_string());
 }
 
-/// Stamp `executor` + `threads` into the top level of a result document
-/// (non-object documents are wrapped as `{"data": ..}`).
+/// Stamp `executor` + `threads` + `cost_source` into the top level of a
+/// result document (non-object documents are wrapped as `{"data": ..}`).
 fn with_context(doc: &Json) -> Json {
     let (executor, threads) = exec_context();
     let mut m = match doc.clone() {
@@ -41,6 +41,7 @@ fn with_context(doc: &Json) -> Json {
     };
     m.insert("executor".to_string(), Json::Str(executor));
     m.insert("threads".to_string(), Json::Num(threads as f64));
+    m.insert("cost_source".to_string(), Json::Str(cost_source_label()));
     Json::Obj(m)
 }
 

@@ -5,11 +5,23 @@ use crate::util::{stats, Timer};
 
 /// The run's execution context: default plan-execution backend (from
 /// `HMATC_EXEC`) and total thread count (workers + helping scope thread).
-/// [`crate::bench::write_bench_json`] stamps both into every
-/// `BENCH_*.json` document so perf-trajectory rows are comparable across
-/// executor/thread configurations.
+/// [`crate::bench::write_bench_json`] stamps both — plus
+/// [`cost_source_label`] — into every `BENCH_*.json` document so
+/// perf-trajectory rows are comparable across executor/thread/cost-model
+/// configurations.
 pub fn exec_context() -> (String, usize) {
     (crate::plan::ExecutorKind::from_env().to_string(), crate::par::num_threads() + 1)
+}
+
+/// Cost-source label stamped into bench result documents:
+/// `calibrated(<path>)` when `HMATC_COSTS` names a profile that actually
+/// **loads and re-balances** (a file the plans reject falls back to static
+/// costs, and the label must say so — otherwise static-cost rows would be
+/// recorded as calibrated and corrupt the trajectory comparison), else
+/// `static`. (Benches that calibrate in-process, e.g. the fig06/fig13
+/// `plan calibrated` rows, label those rows themselves.)
+pub fn cost_source_label() -> String {
+    crate::plan::costmodel::source_label(crate::plan::costmodel::costs_from_env().as_ref())
 }
 
 /// Result of a timed benchmark.

@@ -19,7 +19,11 @@
 //!   three formats plus precomputed task schedules with zero steady-state
 //!   allocation, executed by a pluggable backend
 //!   ([`plan::Executor`]: static LPT `lpt`, work-stealing `steal`, or
-//!   sub-pool `sharded:K` — `HMATC_EXEC` / `--executor`);
+//!   sub-pool `sharded:K` — `HMATC_EXEC` / `--executor`), with
+//!   measurement-driven cost-model calibration ([`plan::costmodel`]:
+//!   per-chunk wall times fitted to per-kernel-class coefficients that
+//!   re-balance the LPT packings bitwise-invariantly — `hmatc calibrate`,
+//!   `HMATC_COSTS` / `--costs`);
 //! * a PJRT [`runtime`] that executes AOT-lowered JAX/Pallas tile kernels and
 //!   a request-batching MVM server in [`coordinator`];
 //! * the measurement substrate ([`bench`]) used by the per-figure benchmark

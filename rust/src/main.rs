@@ -2,17 +2,20 @@
 //!
 //! ```text
 //! hmatc info
-//! hmatc build   --level 4 --eps 1e-6 [--fmt h|uh|h2] [--codec aflp|fpx] [--compress]
-//! hmatc mvm     --level 4 --eps 1e-6 --fmt h2 --algo "row wise" [--compress --codec aflp]
-//! hmatc serve   --level 4 --eps 1e-6 --requests 256 --batch 8 [--fmt h|uh|h2] [--plan]
-//!               [--executor lpt|steal|sharded:K] [--compress]
-//! hmatc solve   --level 3 --eps 1e-6 [--compress]
+//! hmatc build     --level 4 --eps 1e-6 [--fmt h|uh|h2] [--codec aflp|fpx] [--compress]
+//! hmatc mvm       --level 4 --eps 1e-6 --fmt h2 --algo "row wise" [--compress --codec aflp]
+//! hmatc serve     --level 4 --eps 1e-6 --requests 256 --batch 8 [--fmt h|uh|h2] [--plan]
+//!                 [--executor lpt|steal|sharded:K] [--compress] [--costs costs.json]
+//! hmatc calibrate [--level 3 --eps 1e-6 --fmt h|uh|h2 --rounds 8] [--quick] [--out costs.json]
+//! hmatc solve     --level 3 --eps 1e-6 [--compress]
 //! hmatc roofline
 //! ```
 //!
 //! `--executor` (default: `HMATC_EXEC`, else `lpt`) picks the plan-execution
 //! backend behind `--plan`: static LPT shards, work stealing, or K sharded
-//! sub-pools.
+//! sub-pools. `calibrate` fits measured per-kernel-class cost coefficients
+//! and writes a versioned profile JSON; `--costs` (or `HMATC_COSTS`) loads
+//! one back and re-balances the plan schedules with it.
 
 use hmatc::bench::{bench_fn, measure_peak_bandwidth};
 use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
@@ -23,6 +26,7 @@ use hmatc::hmatrix::HMatrix;
 use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
 use hmatc::lowrank::AcaOptions;
 use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
+use hmatc::plan::costmodel::CostProfile;
 use hmatc::plan::{ExecutorKind, HOperator, PlannedOperator};
 use hmatc::solver::cg;
 use hmatc::util::args::Args;
@@ -37,10 +41,11 @@ fn main() {
         "build" => build_cmd(&args),
         "mvm" => mvm_cmd(&args),
         "serve" => serve_cmd(&args),
+        "calibrate" => calibrate_cmd(&args),
         "solve" => solve_cmd(&args),
         "roofline" => roofline_cmd(),
         other => {
-            eprintln!("unknown command '{other}'. Commands: info build mvm serve solve roofline");
+            eprintln!("unknown command '{other}'. Commands: info build mvm serve calibrate solve roofline");
             std::process::exit(2);
         }
     }
@@ -51,6 +56,14 @@ fn info() {
     println!("threads: {}", hmatc::par::num_threads() + 1);
     println!("executor: {} (HMATC_EXEC=lpt|steal|sharded:K)", ExecutorKind::from_env());
     println!("simd: {} (runtime dispatch; HMATC_SIMD=scalar forces the portable kernels)", hmatc::compress::dispatch::simd_name());
+    // validated: a bad HMATC_COSTS file warns (via costs_from_env) and is
+    // reported as the static fallback it actually is
+    let costs = hmatc::plan::costmodel::source_label(hmatc::plan::costmodel::costs_from_env().as_ref());
+    if costs == "static" {
+        println!("costs: static (set HMATC_COSTS=costs.json or pass --costs; fit one with `hmatc calibrate`)");
+    } else {
+        println!("costs: {costs} (HMATC_COSTS)");
+    }
     println!("codec kernels: {} (HMATC_CODEC_KERNELS=fused|blockwise)", hmatc::compress::dispatch::kernel_mode_name());
     #[cfg(feature = "pjrt")]
     {
@@ -69,7 +82,11 @@ struct Problem {
 }
 
 fn problem(args: &Args) -> Problem {
-    let level = args.num_or("level", 3usize);
+    problem_with_default_level(args, 3)
+}
+
+fn problem_with_default_level(args: &Args, default_level: usize) -> Problem {
+    let level = args.num_or("level", default_level);
     let nmin = args.num_or("nmin", 64usize);
     let eta = args.num_or("eta", 2.0f64);
     let t = Timer::start();
@@ -209,6 +226,17 @@ fn serve_cmd(args: &Args) {
     let fmt = args.str_or("fmt", "h");
     let plan = args.flag("plan");
     let kind = args.parse_or("executor", ExecutorKind::from_env());
+    // --costs beats HMATC_COSTS; bad files warn and keep the static costs
+    let profile = load_costs(args);
+    // the printed source must match what rebalance() will actually apply —
+    // an unusable profile (e.g. all-zero coefficients) is ignored
+    let cost_src = hmatc::plan::costmodel::source_label(profile.as_ref());
+    let planned = |po: PlannedOperator| {
+        if let Some(p) = &profile {
+            po.rebalance(p);
+        }
+        po
+    };
     let op: Arc<dyn HOperator> = match fmt.as_str() {
         "h" => {
             let mut h = h;
@@ -217,7 +245,7 @@ fn serve_cmd(args: &Args) {
             }
             let h = Arc::new(h);
             if plan {
-                Arc::new(PlannedOperator::from_h_with(h, kind))
+                Arc::new(planned(PlannedOperator::from_h_with(h, kind)))
             } else {
                 h
             }
@@ -229,7 +257,7 @@ fn serve_cmd(args: &Args) {
             }
             let uh = Arc::new(uh);
             if plan {
-                Arc::new(PlannedOperator::from_uniform_with(uh, kind))
+                Arc::new(planned(PlannedOperator::from_uniform_with(uh, kind)))
             } else {
                 uh
             }
@@ -241,7 +269,7 @@ fn serve_cmd(args: &Args) {
             }
             let h2 = Arc::new(h2);
             if plan {
-                Arc::new(PlannedOperator::from_h2_with(h2, kind))
+                Arc::new(planned(PlannedOperator::from_h2_with(h2, kind)))
             } else {
                 h2
             }
@@ -253,7 +281,7 @@ fn serve_cmd(args: &Args) {
     };
     let kernels = hmatc::compress::dispatch::kernels_label();
     if plan {
-        println!("serving {} operator ({}), executor {kind}, codec kernels {kernels}", op.format_name(), fmt_bytes(op.byte_size()));
+        println!("serving {} operator ({}), executor {kind}, codec kernels {kernels}, costs {cost_src}", op.format_name(), fmt_bytes(op.byte_size()));
     } else {
         println!("serving {} operator ({}), codec kernels {kernels}", op.format_name(), fmt_bytes(op.byte_size()));
     }
@@ -292,6 +320,92 @@ fn serve_cmd(args: &Args) {
         fmt_secs(m.p99_latency),
         m.effective_gbs
     );
+}
+
+/// Cost profile from `--costs` (falling back to `HMATC_COSTS`); invalid
+/// files warn and return None so serving continues on the static costs.
+fn load_costs(args: &Args) -> Option<CostProfile> {
+    match args.get("costs") {
+        Some(path) => match CostProfile::load(path) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("--costs {path}: {e}; falling back to static costs");
+                None
+            }
+        },
+        None => hmatc::plan::costmodel::costs_from_env(),
+    }
+}
+
+/// `hmatc calibrate`: build the model problem, run timed warmup batches
+/// through a planned operator, fit per-kernel-class cost coefficients and
+/// write the profile JSON (`--out`, default `costs.json`). `--quick` is the
+/// CI smoke configuration (small problem, few rounds). Compresses by default
+/// — decode coefficients are the point — unless `--no-compress` is given.
+fn calibrate_cmd(args: &Args) {
+    // the exact model problem every other subcommand uses, just with a
+    // smaller default size in --quick (CI smoke)
+    let quick = args.flag("quick");
+    let p = problem_with_default_level(args, if quick { 2 } else { 3 });
+    let h = build_h(args, &p);
+    let eps = args.num_or("eps", 1e-6f64);
+
+    let fmt = args.str_or("fmt", "h");
+    let compress = !args.flag("no-compress");
+    let cfg = cfg_from(args);
+    let kind = args.parse_or("executor", ExecutorKind::from_env());
+    let op = match fmt.as_str() {
+        "h" => {
+            let mut h = h;
+            if compress {
+                h.compress(&cfg);
+            }
+            PlannedOperator::from_h_with(Arc::new(h), kind)
+        }
+        "uh" => {
+            let mut uh = hmatc::uniform::build_from_h(&h, eps, hmatc::uniform::CouplingKind::Combined);
+            if compress {
+                uh.compress(&cfg);
+            }
+            PlannedOperator::from_uniform_with(Arc::new(uh), kind)
+        }
+        "h2" => {
+            let mut h2 = hmatc::h2::build_from_h(&h, eps);
+            if compress {
+                h2.compress(&cfg);
+            }
+            PlannedOperator::from_h2_with(Arc::new(h2), kind)
+        }
+        other => {
+            eprintln!("unknown format '{other}' (h|uh|h2)");
+            std::process::exit(2);
+        }
+    };
+
+    let rounds = args.num_or("rounds", if quick { 2usize } else { 8 });
+    let t = Timer::start();
+    let profile = op.calibrate(rounds);
+    if !profile.is_usable() {
+        // writing a profile that rebalance() would ignore only misleads the
+        // next `--costs` user into believing calibration is active
+        eprintln!("calibration fit degenerated (no positive finite coefficient — clock resolution too coarse for this problem size?); not writing a profile");
+        std::process::exit(1);
+    }
+    let st = op.plan_stats();
+    println!("calibrated {} on executor {kind} in {} ({rounds} timed rounds, b = 1 and b = {})", op.format_name(), fmt_secs(t.elapsed()), hmatc::plan::exec::CALIB_RHS);
+    println!("fitted coefficients (seconds per unit):");
+    for (class, coeff) in profile.coeffs() {
+        println!("  {:<16} {coeff:.3e}", class.key());
+    }
+    println!("cost source: {} | makespan: measured(static packing) {} vs predicted(calibrated packing) {}", st.cost_source, fmt_secs(st.measured_makespan), fmt_secs(st.predicted_makespan));
+    let out = args.str_or("out", "costs.json");
+    match profile.save(&out) {
+        Ok(()) => println!("profile written to {out} (load with --costs {out} or HMATC_COSTS={out})"),
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn solve_cmd(args: &Args) {

@@ -19,6 +19,13 @@
 //! whose per-chunk runtimes vary (codec decode times do), not just a shared
 //! queue. The plan layer selects between the static and stealing backends
 //! through [`crate::plan::Executor`] (`HMATC_EXEC` / `--executor`).
+//!
+//! The cost-model calibration layer ([`crate::plan::costmodel`]) times work
+//! at the `f(slot, item)` boundary and relies on exactly the guarantees
+//! documented here: every item runs **exactly once** per [`StealSet::run`]
+//! (so a per-item accumulator slot receives one sample per run, whichever
+//! slot stole the item), and `run` does not return before all items
+//! completed (so accumulators are only read back after the barrier).
 
 use super::deque::{Steal, WorkDeque};
 use std::collections::VecDeque;

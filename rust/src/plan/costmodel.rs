@@ -1,0 +1,835 @@
+//! Measurement-driven cost-model calibration for the plan schedules.
+//!
+//! The static LPT packings weight tasks with hand-tuned byte costs
+//! ([`super::schedule::block_cost_split`]). That model is blind to the fact
+//! that a byte of AFLP-4 decode, a byte of dense FP64 stream and a byte of
+//! coupling data do not cost the same wall time — which is exactly where the
+//! predicted-vs-achieved throughput gap on skewed block-size distributions
+//! comes from. This module closes the loop:
+//!
+//! 1. **Instrumentation** — plan executions can be timed per chunk
+//!    ([`TimingSink`]: one atomic nanosecond accumulator per task, written by
+//!    whichever executor slot ran the chunk, read back once the level
+//!    barrier has joined; the slots are preallocated, so steady-state timed
+//!    execution allocates nothing).
+//! 2. **Fitting** — the recorded `(features, batch width, seconds)` samples
+//!    ([`Sample`]) are fitted by least squares ([`fit`]) to per-kernel-class
+//!    coefficients ([`KernelClass`]): decode seconds-per-byte per
+//!    `(codec, width)`, uncompressed-stream seconds-per-byte, dense and
+//!    low-rank seconds-per-flop, and the panel-width scaling of the vector
+//!    traffic (the flop/vector terms are multiplied by the batch width, the
+//!    matrix-stream terms are not — matrix data is decoded once per batch).
+//! 3. **Re-balancing** — [`rebalance_levels`] re-runs the LPT packing with
+//!    the calibrated per-task costs and keeps, per level, whichever packing
+//!    (incumbent or candidate) has the smaller modeled makespan, so a
+//!    calibrated plan never models worse than the packing it replaces. The
+//!    task list itself is untouched — only the task→shard partition changes —
+//!    which is why re-balancing is bitwise output-invariant on every backend.
+//!
+//! Profiles serialize to a versioned JSON document (`hmatc calibrate --out
+//! costs.json`) and load through `HMATC_COSTS` / `--costs`; hostile inputs
+//! (truncated files, NaN or negative coefficients, unknown kernel-class
+//! keys, version mismatches) are rejected with errors — never panics — and
+//! the plan falls back to the static costs.
+
+use super::schedule::{balance_level, Shard};
+use crate::compress::{Blob, CodecParams};
+use crate::h2::TransferMat;
+use crate::hmatrix::BlockData;
+use crate::uniform::{BasisData, ClusterBasis, CouplingMat, UniBlock};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Version stamped into (and required from) profile JSON documents.
+pub const PROFILE_VERSION: u32 = 1;
+
+/// Codec family of a decode kernel class (the byte width is separate: each
+/// `(family, width)` pair has its own dispatch kernel and its own decode
+/// rate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CodecFamily {
+    Aflp,
+    Fpx32,
+    Fpx64,
+}
+
+impl CodecFamily {
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecFamily::Aflp => "aflp",
+            CodecFamily::Fpx32 => "fpx32",
+            CodecFamily::Fpx64 => "fpx64",
+        }
+    }
+}
+
+/// One kernel class of the calibrated cost model. A task's model cost is
+/// `Σ coeff(class) · amount · (nrhs if the class scales with the batch)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum KernelClass {
+    /// Compressed payload bytes decoded by the `(codec, width)` dispatch
+    /// kernel. Amount: blob payload bytes. Streamed once per batch.
+    Decode(CodecFamily, u8),
+    /// Uncompressed matrix bytes streamed from memory (dense blocks,
+    /// low-rank factors, plain couplings/bases). Once per batch.
+    MatBytes,
+    /// Dense-kernel flops (gemv/gemm on dense or ZDense blocks). Per RHS.
+    DenseFlop,
+    /// Low-rank-shaped flops (factor, coupling, transfer and basis applies).
+    /// Per RHS.
+    LowRankFlop,
+    /// Vector/panel traffic bytes — the panel-width scaling term. Per RHS.
+    PanelVec,
+}
+
+impl KernelClass {
+    /// Whether the class amount is multiplied by the batch width: matrix
+    /// data (compressed or not) is streamed once per batch; flops and vector
+    /// traffic scale with it.
+    pub fn scales_with_rhs(self) -> bool {
+        !matches!(self, KernelClass::Decode(_, _) | KernelClass::MatBytes)
+    }
+
+    /// Stable JSON key, e.g. `decode:aflp:4`, `dense_flop`.
+    pub fn key(self) -> String {
+        match self {
+            KernelClass::Decode(fam, w) => format!("decode:{}:{w}", fam.name()),
+            KernelClass::MatBytes => "mat_bytes".to_string(),
+            KernelClass::DenseFlop => "dense_flop".to_string(),
+            KernelClass::LowRankFlop => "lowrank_flop".to_string(),
+            KernelClass::PanelVec => "panel_vec".to_string(),
+        }
+    }
+
+    /// Parse a JSON key back into a class; unknown keys are errors (a
+    /// profile written by a different model version must not be silently
+    /// half-applied).
+    pub fn parse(key: &str) -> Result<KernelClass, String> {
+        match key {
+            "mat_bytes" => return Ok(KernelClass::MatBytes),
+            "dense_flop" => return Ok(KernelClass::DenseFlop),
+            "lowrank_flop" => return Ok(KernelClass::LowRankFlop),
+            "panel_vec" => return Ok(KernelClass::PanelVec),
+            _ => {}
+        }
+        let rest = key.strip_prefix("decode:").ok_or_else(|| format!("unknown kernel class '{key}'"))?;
+        let (fam, w) = rest.split_once(':').ok_or_else(|| format!("bad decode class '{key}' (decode:<codec>:<width>)"))?;
+        let fam = match fam {
+            "aflp" => CodecFamily::Aflp,
+            "fpx32" => CodecFamily::Fpx32,
+            "fpx64" => CodecFamily::Fpx64,
+            other => return Err(format!("unknown codec family '{other}' in '{key}'")),
+        };
+        let w: u8 = w.parse().map_err(|_| format!("bad byte width in '{key}'"))?;
+        if w == 0 || w > 8 {
+            return Err(format!("byte width {w} out of range in '{key}'"));
+        }
+        Ok(KernelClass::Decode(fam, w))
+    }
+}
+
+/// Per-task feature vector: amount per kernel class, built once at plan
+/// (re)build time by walking the task's blocks.
+#[derive(Clone, Debug, Default)]
+pub struct TaskFeats {
+    terms: Vec<(KernelClass, f64)>,
+}
+
+impl TaskFeats {
+    /// Accumulate `amount` onto `class`.
+    pub fn add(&mut self, class: KernelClass, amount: f64) {
+        if amount == 0.0 {
+            return;
+        }
+        match self.terms.iter_mut().find(|(c, _)| *c == class) {
+            Some((_, a)) => *a += amount,
+            None => self.terms.push((class, amount)),
+        }
+    }
+
+    /// Accumulate the decode class of a compressed blob (payload bytes).
+    pub fn add_blob(&mut self, blob: &Blob) {
+        let class = match blob.params {
+            CodecParams::Aflp { bytes_per, .. } => KernelClass::Decode(CodecFamily::Aflp, bytes_per),
+            CodecParams::Fpx32 { bytes_per } => KernelClass::Decode(CodecFamily::Fpx32, bytes_per),
+            CodecParams::Fpx64 { bytes_per } => KernelClass::Decode(CodecFamily::Fpx64, bytes_per),
+            CodecParams::Zero => return,
+        };
+        self.add(class, blob.bytes.len() as f64);
+    }
+
+    /// Fold another feature vector into this one.
+    pub fn merge(&mut self, other: &TaskFeats) {
+        for &(c, a) in &other.terms {
+            self.add(c, a);
+        }
+    }
+
+    /// The accumulated `(class, amount)` terms.
+    pub fn terms(&self) -> &[(KernelClass, f64)] {
+        &self.terms
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Feature extraction per block kind
+// ---------------------------------------------------------------------------
+
+/// Features of one H-matrix leaf block (matches the kernels
+/// `apply_block_scratch` dispatches to).
+pub fn block_feats(b: &BlockData) -> TaskFeats {
+    let (m, n) = (b.nrows(), b.ncols());
+    let mut f = TaskFeats::default();
+    f.add(KernelClass::PanelVec, (8 * (m + n)) as f64);
+    match b {
+        BlockData::Dense(d) => {
+            f.add(KernelClass::MatBytes, d.byte_size() as f64);
+            f.add(KernelClass::DenseFlop, (2 * m * n) as f64);
+        }
+        BlockData::LowRank(lr) => {
+            f.add(KernelClass::MatBytes, lr.byte_size() as f64);
+            f.add(KernelClass::LowRankFlop, (2 * lr.rank() * (m + n)) as f64);
+        }
+        BlockData::ZDense(z) => {
+            f.add_blob(&z.blob);
+            f.add(KernelClass::DenseFlop, (2 * m * n) as f64);
+        }
+        BlockData::ZLowRank(z) => {
+            f.add_blob(&z.u);
+            f.add_blob(&z.v);
+            f.add(KernelClass::LowRankFlop, (2 * z.rank * (m + n)) as f64);
+        }
+        BlockData::ZLowRankValr(z) => {
+            for c in z.wcols.iter().chain(z.xcols.iter()) {
+                f.add_blob(c);
+            }
+            f.add(KernelClass::LowRankFlop, (2 * z.rank() * (m + n)) as f64);
+        }
+    }
+    f
+}
+
+/// Features of one coupling matrix apply (rank-space product).
+pub fn coupling_feats(c: &CouplingMat) -> TaskFeats {
+    let mut f = TaskFeats::default();
+    match c {
+        CouplingMat::Plain(m) => {
+            f.add(KernelClass::MatBytes, m.byte_size() as f64);
+            f.add(KernelClass::LowRankFlop, (2 * m.nrows() * m.ncols()) as f64);
+        }
+        CouplingMat::Z(z) => {
+            f.add_blob(&z.blob);
+            f.add(KernelClass::LowRankFlop, (2 * z.nrows * z.ncols) as f64);
+        }
+        CouplingMat::SepPlain { sr, sc } => {
+            f.add(KernelClass::MatBytes, (sr.byte_size() + sc.byte_size()) as f64);
+            f.add(KernelClass::LowRankFlop, (2 * (sr.nrows() * sr.ncols() + sc.nrows() * sc.ncols())) as f64);
+        }
+        CouplingMat::SepZ { sr, sc } => {
+            f.add_blob(&sr.blob);
+            f.add_blob(&sc.blob);
+            f.add(KernelClass::LowRankFlop, (2 * (sr.nrows * sr.ncols + sc.nrows * sc.ncols)) as f64);
+        }
+    }
+    f
+}
+
+/// Features of one basis-matrix apply (forward or backward transform slot).
+pub fn basis_data_feats(d: &BasisData) -> TaskFeats {
+    let mut f = TaskFeats::default();
+    let (nrows, rank) = match d {
+        BasisData::Plain(w) => (w.nrows(), w.ncols()),
+        BasisData::Z { nrows, ncols, .. } => (*nrows, *ncols),
+        BasisData::Valr(z) => (z.nrows, z.rank()),
+    };
+    f.add(KernelClass::PanelVec, (8 * (nrows + rank)) as f64);
+    f.add(KernelClass::LowRankFlop, (2 * nrows * rank) as f64);
+    match d {
+        BasisData::Plain(w) => f.add(KernelClass::MatBytes, w.byte_size() as f64),
+        BasisData::Z { blob, .. } => f.add_blob(blob),
+        BasisData::Valr(z) => {
+            for c in &z.wcols {
+                f.add_blob(c);
+            }
+        }
+    }
+    f
+}
+
+/// Features of one cluster-basis apply.
+pub fn basis_feats(b: &ClusterBasis) -> TaskFeats {
+    basis_data_feats(&b.data)
+}
+
+/// Features of one transfer-matrix apply (H² up/down relays).
+pub fn transfer_feats(t: &TransferMat) -> TaskFeats {
+    let mut f = TaskFeats::default();
+    f.add(KernelClass::PanelVec, (8 * (t.nrows() + t.ncols())) as f64);
+    f.add(KernelClass::LowRankFlop, (2 * t.nrows() * t.ncols()) as f64);
+    match t {
+        TransferMat::Plain(m) => f.add(KernelClass::MatBytes, m.byte_size() as f64),
+        TransferMat::Z { blob, .. } => f.add_blob(blob),
+    }
+    f
+}
+
+/// Features of one uniform/H² leaf block (coupling or dense).
+pub fn uni_block_feats(b: &UniBlock) -> TaskFeats {
+    match b {
+        UniBlock::Coupling(c) => coupling_feats(c),
+        UniBlock::Dense(d) => {
+            let mut f = TaskFeats::default();
+            f.add(KernelClass::PanelVec, (8 * (d.nrows() + d.ncols())) as f64);
+            f.add(KernelClass::MatBytes, d.byte_size() as f64);
+            f.add(KernelClass::DenseFlop, (2 * d.nrows() * d.ncols()) as f64);
+            f
+        }
+        UniBlock::ZDense(z) => {
+            let mut f = TaskFeats::default();
+            f.add(KernelClass::PanelVec, (8 * (z.nrows + z.ncols)) as f64);
+            f.add_blob(&z.blob);
+            f.add(KernelClass::DenseFlop, (2 * z.nrows * z.ncols) as f64);
+            f
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cost profile
+// ---------------------------------------------------------------------------
+
+/// Where a plan's active LPT costs came from (recorded in
+/// [`super::PlanStats::cost_source`] and bench rows).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum CostSource {
+    /// The hand-tuned byte model of [`super::schedule`].
+    #[default]
+    Static,
+    /// A profile loaded from a file (`HMATC_COSTS` / `--costs`).
+    Calibrated(String),
+    /// A profile fitted in-process by `calibrate()`.
+    Online,
+}
+
+impl std::fmt::Display for CostSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CostSource::Static => write!(f, "static"),
+            CostSource::Calibrated(path) => write!(f, "calibrated({path})"),
+            CostSource::Online => write!(f, "online"),
+        }
+    }
+}
+
+/// Fitted per-kernel-class coefficients (seconds per unit amount), plus the
+/// provenance the plan layer reports. The serialized form carries only the
+/// version and the coefficients.
+#[derive(Clone, Debug, Default)]
+pub struct CostProfile {
+    coeffs: BTreeMap<KernelClass, f64>,
+    /// Provenance (not serialized — derived from how the profile was made).
+    pub source: CostSource,
+}
+
+impl CostProfile {
+    /// Build a profile from explicit coefficients (tests, synthetic models).
+    pub fn from_coeffs(pairs: &[(KernelClass, f64)]) -> CostProfile {
+        CostProfile { coeffs: pairs.iter().copied().collect(), source: CostSource::Online }
+    }
+
+    /// The fitted coefficients.
+    pub fn coeffs(&self) -> &BTreeMap<KernelClass, f64> {
+        &self.coeffs
+    }
+
+    /// A profile is usable for re-balancing only if it has at least one
+    /// strictly positive, finite coefficient — an all-zero fit (e.g. from a
+    /// clock with too little resolution) carries no load-balance signal.
+    pub fn is_usable(&self) -> bool {
+        usable_values(self.coeffs.values())
+    }
+
+    fn coeff(&self, class: KernelClass) -> f64 {
+        if let Some(v) = self.coeffs.get(&class) {
+            return *v;
+        }
+        // a decode width the fit never saw: use the mean decode rate, else
+        // the uncompressed stream rate — bytes are bytes to first order
+        if let KernelClass::Decode(_, _) = class {
+            let dec: Vec<f64> = self.coeffs.iter().filter(|(c, _)| matches!(c, KernelClass::Decode(_, _))).map(|(_, v)| *v).collect();
+            if !dec.is_empty() {
+                return dec.iter().sum::<f64>() / dec.len() as f64;
+            }
+            return self.coeffs.get(&KernelClass::MatBytes).copied().unwrap_or(0.0);
+        }
+        0.0
+    }
+
+    /// Modeled seconds of one task at batch width `nrhs`.
+    pub fn cost(&self, feats: &TaskFeats, nrhs: usize) -> f64 {
+        feats.terms().iter().map(|&(c, a)| self.coeff(c) * a * if c.scales_with_rhs() { nrhs as f64 } else { 1.0 }).sum()
+    }
+
+    /// Serialize to the versioned profile document.
+    pub fn to_json(&self) -> Json {
+        let coeffs = Json::Obj(self.coeffs.iter().map(|(c, v)| (c.key(), Json::Num(*v))).collect());
+        Json::obj(vec![("version", Json::Num(PROFILE_VERSION as f64)), ("kind", "hmatc cost profile".into()), ("coeffs", coeffs)])
+    }
+
+    /// Parse and validate a profile document. Rejects (with errors, not
+    /// panics): version mismatches, unknown kernel-class keys, and NaN /
+    /// infinite / negative coefficients.
+    pub fn from_json(doc: &Json) -> Result<CostProfile, String> {
+        let version = doc.get("version").and_then(Json::as_f64).ok_or("missing numeric 'version' field")?;
+        if version != PROFILE_VERSION as f64 {
+            return Err(format!("profile version {version} != supported {PROFILE_VERSION}"));
+        }
+        if let Some(kind) = doc.get("kind") {
+            if kind.as_str() != Some("hmatc cost profile") {
+                return Err("'kind' is not 'hmatc cost profile'".to_string());
+            }
+        }
+        let coeffs = match doc.get("coeffs") {
+            Some(Json::Obj(m)) => m,
+            _ => return Err("missing 'coeffs' object".to_string()),
+        };
+        let mut out = BTreeMap::new();
+        for (k, v) in coeffs {
+            let class = KernelClass::parse(k)?;
+            let val = v.as_f64().ok_or_else(|| format!("coefficient '{k}' is not a number"))?;
+            if !val.is_finite() || val < 0.0 {
+                return Err(format!("coefficient '{k}' = {val} is not finite and non-negative"));
+            }
+            out.insert(class, val);
+        }
+        Ok(CostProfile { coeffs: out, source: CostSource::Online })
+    }
+
+    /// Parse a profile from JSON text.
+    pub fn parse(text: &str) -> Result<CostProfile, String> {
+        CostProfile::from_json(&Json::parse(text)?)
+    }
+
+    /// Load (and validate) a profile file; the result's source is
+    /// `calibrated(<path>)`.
+    pub fn load(path: &str) -> Result<CostProfile, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read: {e}"))?;
+        let mut p = CostProfile::parse(&text)?;
+        p.source = CostSource::Calibrated(path.to_string());
+        Ok(p)
+    }
+
+    /// Write the profile document to `path`.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
+/// The one shared usability rule for a set of cost values (profile
+/// coefficients or modeled per-task costs): every value finite and
+/// non-negative, at least one strictly positive. All-zero or poisoned sets
+/// carry no load-balance signal and callers fall back to the static model.
+pub fn usable_costs(costs: &[f64]) -> bool {
+    usable_values(costs.iter())
+}
+
+fn usable_values<'a>(values: impl Iterator<Item = &'a f64> + Clone) -> bool {
+    values.clone().all(|v| v.is_finite() && *v >= 0.0) && values.into_iter().any(|v| *v > 0.0)
+}
+
+/// The label a profile option presents to users (serve banner, `hmatc
+/// info`, bench `cost_source` stamps): the profile's source when it would
+/// actually be applied ([`CostProfile::is_usable`]), else `static` — the
+/// label must never claim a profile that re-balancing ignores.
+pub fn source_label(profile: Option<&CostProfile>) -> String {
+    match profile {
+        Some(p) if p.is_usable() => p.source.to_string(),
+        _ => "static".to_string(),
+    }
+}
+
+/// Load the profile named by `HMATC_COSTS` (if set). A missing or invalid
+/// file **warns and returns None** — the caller keeps the static costs; a
+/// bad profile must never take a serving process down. The load is cached
+/// per path value (operators and bench stamps call this repeatedly), but a
+/// *changed* variable re-loads, so tests and long-lived tools see updates.
+pub fn costs_from_env() -> Option<CostProfile> {
+    static CACHE: OnceLock<Mutex<Option<(String, Option<CostProfile>)>>> = OnceLock::new();
+    let path = std::env::var("HMATC_COSTS").ok()?;
+    if path.is_empty() {
+        return None;
+    }
+    let mut cache = CACHE.get_or_init(|| Mutex::new(None)).lock().unwrap();
+    if let Some((cached_path, cached)) = cache.as_ref() {
+        if *cached_path == path {
+            return cached.clone();
+        }
+    }
+    let loaded = match CostProfile::load(&path) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("HMATC_COSTS={path}: {e}; falling back to static costs");
+            None
+        }
+    };
+    *cache = Some((path, loaded.clone()));
+    loaded
+}
+
+// ---------------------------------------------------------------------------
+// Timing instrumentation
+// ---------------------------------------------------------------------------
+
+/// Per-chunk wall-time accumulators for plan execution: one atomic
+/// nanosecond slot per task, preallocated at arm time (zero steady-state
+/// allocation). Whichever executor slot runs a chunk adds its elapsed time;
+/// `fetch_add` keeps the samples tear-free even if concurrent writers race a
+/// slot (the stealing backend may run chunks of one level on any worker).
+/// Per-shard and per-level totals are read back after the level barrier has
+/// joined, so reads never race writes of the same product.
+pub struct TimingSink {
+    slots: Vec<AtomicU64>,
+}
+
+impl TimingSink {
+    /// A sink with one accumulator per task.
+    pub fn new(ntasks: usize) -> TimingSink {
+        TimingSink { slots: (0..ntasks).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    /// Number of task slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Zero all accumulators (between calibration phases).
+    pub fn reset(&self) {
+        for s in &self.slots {
+            s.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Add `secs` of wall time to task `task`'s accumulator.
+    pub fn add(&self, task: usize, secs: f64) {
+        let nanos = (secs * 1e9).max(0.0).round() as u64;
+        self.slots[task].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Accumulated seconds of task `task`.
+    pub fn secs(&self, task: usize) -> f64 {
+        self.slots[task].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Sum over all task accumulators.
+    pub fn total(&self) -> f64 {
+        self.slots.iter().map(|s| s.load(Ordering::Relaxed)).sum::<u64>() as f64 * 1e-9
+    }
+}
+
+/// Measured makespan of a packing: per level, the largest per-shard sum of
+/// recorded task times (`base` offsets shard-local task ids into the sink's
+/// slot space); levels are summed — they are barrier separated.
+pub fn sink_makespan(levels: &[Vec<Shard>], base: usize, sink: &TimingSink) -> f64 {
+    levels.iter().map(|lv| lv.iter().map(|s| s.tasks.iter().map(|&t| sink.secs(base + t)).sum::<f64>()).fold(0.0, f64::max)).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Fitting
+// ---------------------------------------------------------------------------
+
+/// One calibration sample: a task's features, the batch width it ran at and
+/// the measured wall seconds.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub feats: TaskFeats,
+    pub nrhs: usize,
+    pub secs: f64,
+}
+
+/// Least-squares fit of per-kernel-class coefficients over the samples
+/// (normal equations with a tiny relative ridge for collinear classes;
+/// negative solutions are clamped to zero — a kernel class cannot speed a
+/// task up). Errors on empty/degenerate inputs instead of panicking.
+pub fn fit(samples: &[Sample]) -> Result<CostProfile, String> {
+    let mut classes: Vec<KernelClass> = Vec::new();
+    for s in samples {
+        for &(c, _) in s.feats.terms() {
+            if !classes.contains(&c) {
+                classes.push(c);
+            }
+        }
+    }
+    classes.sort();
+    if samples.is_empty() || classes.is_empty() {
+        return Err("no calibration samples".to_string());
+    }
+    let k = classes.len();
+    let mut ata = vec![0.0f64; k * k];
+    let mut atb = vec![0.0f64; k];
+    let mut row = vec![0.0f64; k];
+    for s in samples {
+        row.fill(0.0);
+        for &(c, a) in s.feats.terms() {
+            let j = classes.iter().position(|&x| x == c).unwrap();
+            row[j] += a * if c.scales_with_rhs() { s.nrhs as f64 } else { 1.0 };
+        }
+        for i in 0..k {
+            if row[i] == 0.0 {
+                continue;
+            }
+            atb[i] += row[i] * s.secs;
+            for j in 0..k {
+                ata[i * k + j] += row[i] * row[j];
+            }
+        }
+    }
+    // relative ridge keeps near-collinear feature columns (e.g. dense flops
+    // vs dense bytes) from blowing the solve up
+    let trace: f64 = (0..k).map(|i| ata[i * k + i]).sum();
+    let ridge = 1e-9 * (trace / k as f64).max(1e-300);
+    for i in 0..k {
+        ata[i * k + i] += ridge;
+    }
+    let x = solve_dense(&mut ata, &mut atb, k).ok_or("singular normal equations")?;
+    let coeffs: BTreeMap<KernelClass, f64> = classes.iter().zip(&x).map(|(&c, &v)| (c, v.max(0.0))).collect();
+    Ok(CostProfile { coeffs, source: CostSource::Online })
+}
+
+/// Gauss-Jordan with partial pivoting on a dense k×k system (k is the number
+/// of kernel classes — a dozen at most).
+fn solve_dense(a: &mut [f64], b: &mut [f64], k: usize) -> Option<Vec<f64>> {
+    for col in 0..k {
+        let mut piv = col;
+        for r in col + 1..k {
+            if a[r * k + col].abs() > a[piv * k + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * k + col].abs() < 1e-300 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..k {
+                a.swap(piv * k + c, col * k + c);
+            }
+            b.swap(piv, col);
+        }
+        let d = a[col * k + col];
+        for r in 0..k {
+            if r == col {
+                continue;
+            }
+            let f = a[r * k + col] / d;
+            if f != 0.0 {
+                for c in col..k {
+                    a[r * k + c] -= f * a[col * k + c];
+                }
+                b[r] -= f * b[col];
+            }
+        }
+    }
+    Some((0..k).map(|i| b[i] / a[i * k + i]).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Re-balancing
+// ---------------------------------------------------------------------------
+
+/// Modeled makespan of a level-ordered packing under per-task `costs`:
+/// per level the heaviest shard, levels summed (barrier separated).
+pub fn makespan(levels: &[Vec<Shard>], costs: &[f64]) -> f64 {
+    levels.iter().map(|lv| level_makespan(lv, costs)).sum()
+}
+
+fn level_makespan(level: &[Shard], costs: &[f64]) -> f64 {
+    level.iter().map(|s| s.tasks.iter().map(|&t| costs[t]).sum::<f64>()).fold(0.0, f64::max)
+}
+
+/// Re-run the LPT packing of every level with (calibrated) `costs`, keeping
+/// per level whichever packing — incumbent or candidate — has the smaller
+/// modeled makespan. LPT is a 4/3-approximation, not an optimum, so the
+/// explicit comparison is what guarantees that re-balancing **never
+/// increases** the modeled makespan. Kept incumbent levels get their shard
+/// cost/scratch bookkeeping refreshed to the new model. Costs that are not
+/// finite-positive anywhere leave the incumbent untouched.
+pub fn rebalance_levels(old: &[Vec<Shard>], level_ids: &[Vec<usize>], costs: &[f64], scratch: &[usize], nshards: usize) -> Vec<Vec<Shard>> {
+    debug_assert_eq!(old.len(), level_ids.len());
+    if !usable_costs(costs) {
+        return old.to_vec();
+    }
+    old.iter()
+        .zip(level_ids)
+        .map(|(incumbent, ids)| {
+            let candidate = balance_level(ids, costs, scratch, nshards);
+            if level_makespan(&candidate, costs) <= level_makespan(incumbent, costs) {
+                candidate
+            } else {
+                let mut kept = incumbent.clone();
+                for sh in &mut kept {
+                    sh.cost = sh.tasks.iter().map(|&t| costs[t]).sum();
+                    sh.scratch = sh.tasks.iter().map(|&t| scratch[t]).max().unwrap_or(0);
+                }
+                kept
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn kernel_class_keys_round_trip() {
+        let classes = [
+            KernelClass::Decode(CodecFamily::Aflp, 4),
+            KernelClass::Decode(CodecFamily::Fpx32, 2),
+            KernelClass::Decode(CodecFamily::Fpx64, 7),
+            KernelClass::MatBytes,
+            KernelClass::DenseFlop,
+            KernelClass::LowRankFlop,
+            KernelClass::PanelVec,
+        ];
+        for c in classes {
+            assert_eq!(KernelClass::parse(&c.key()).unwrap(), c);
+        }
+        assert!(KernelClass::parse("decode:zfp:3").is_err());
+        assert!(KernelClass::parse("decode:aflp:0").is_err());
+        assert!(KernelClass::parse("decode:aflp:9").is_err());
+        assert!(KernelClass::parse("warp_speed").is_err());
+    }
+
+    #[test]
+    fn profile_cost_scales_flops_not_bytes() {
+        let p = CostProfile::from_coeffs(&[(KernelClass::Decode(CodecFamily::Aflp, 4), 2.0), (KernelClass::DenseFlop, 3.0)]);
+        let mut f = TaskFeats::default();
+        f.add(KernelClass::Decode(CodecFamily::Aflp, 4), 10.0);
+        f.add(KernelClass::DenseFlop, 5.0);
+        assert_eq!(p.cost(&f, 1), 2.0 * 10.0 + 3.0 * 5.0);
+        assert_eq!(p.cost(&f, 4), 2.0 * 10.0 + 4.0 * 3.0 * 5.0);
+    }
+
+    #[test]
+    fn unknown_decode_width_falls_back_to_mean_decode_rate() {
+        let p = CostProfile::from_coeffs(&[(KernelClass::Decode(CodecFamily::Aflp, 2), 1.0), (KernelClass::Decode(CodecFamily::Aflp, 4), 3.0)]);
+        let mut f = TaskFeats::default();
+        f.add(KernelClass::Decode(CodecFamily::Fpx64, 6), 1.0);
+        assert_eq!(p.cost(&f, 1), 2.0);
+    }
+
+    #[test]
+    fn fit_recovers_planted_coefficients() {
+        // synthetic tasks with known per-class rates; exact linear model
+        let c_dec = 3e-9;
+        let c_flop = 5e-11;
+        let c_vec = 1e-10;
+        let mut rng = Rng::new(42);
+        let mut samples = Vec::new();
+        for _ in 0..200 {
+            let mut f = TaskFeats::default();
+            let dec = (rng.uniform() * 4000.0).floor() + 1.0;
+            let flops = (rng.uniform() * 200_000.0).floor() + 1.0;
+            let vecb = (rng.uniform() * 10_000.0).floor() + 1.0;
+            f.add(KernelClass::Decode(CodecFamily::Aflp, 4), dec);
+            f.add(KernelClass::DenseFlop, flops);
+            f.add(KernelClass::PanelVec, vecb);
+            for nrhs in [1usize, 4] {
+                let secs = c_dec * dec + (c_flop * flops + c_vec * vecb) * nrhs as f64;
+                samples.push(Sample { feats: f.clone(), nrhs, secs });
+            }
+        }
+        let p = fit(&samples).unwrap();
+        let got_dec = p.coeffs()[&KernelClass::Decode(CodecFamily::Aflp, 4)];
+        let got_flop = p.coeffs()[&KernelClass::DenseFlop];
+        let got_vec = p.coeffs()[&KernelClass::PanelVec];
+        assert!((got_dec - c_dec).abs() / c_dec < 1e-3, "{got_dec} vs {c_dec}");
+        assert!((got_flop - c_flop).abs() / c_flop < 1e-3, "{got_flop} vs {c_flop}");
+        assert!((got_vec - c_vec).abs() / c_vec < 1e-3, "{got_vec} vs {c_vec}");
+        assert!(p.is_usable());
+    }
+
+    #[test]
+    fn fit_rejects_empty() {
+        assert!(fit(&[]).is_err());
+    }
+
+    #[test]
+    fn rebalance_never_increases_level_makespan() {
+        let mut rng = Rng::new(7);
+        for trial in 0..12 {
+            let n = 30 + trial * 11;
+            // skewed "true" costs vs the uniform costs the incumbent saw
+            let static_costs: Vec<f64> = (0..n).map(|_| 1.0 + rng.uniform()).collect();
+            let true_costs: Vec<f64> = static_costs.iter().map(|c| c * 10f64.powf(rng.range(-1.5, 1.5))).collect();
+            let scratch = vec![0usize; n];
+            let ids: Vec<usize> = (0..n).collect();
+            let (a, b) = ids.split_at(n / 3);
+            let level_ids = vec![a.to_vec(), b.to_vec()];
+            let old: Vec<Vec<Shard>> = level_ids.iter().map(|ids| balance_level(ids, &static_costs, &scratch, 6)).collect();
+            let new = rebalance_levels(&old, &level_ids, &true_costs, &scratch, 6);
+            assert!(makespan(&new, &true_costs) <= makespan(&old, &true_costs) + 1e-12, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn rebalance_keeps_incumbent_on_degenerate_costs() {
+        let ids = vec![vec![0usize, 1, 2]];
+        let costs = vec![1.0, 2.0, 3.0];
+        let scratch = vec![0usize; 3];
+        let old = vec![balance_level(&ids[0], &costs, &scratch, 2)];
+        let zero = vec![0.0; 3];
+        assert_eq!(rebalance_levels(&old, &ids, &zero, &scratch, 2).len(), old.len());
+        let nan = vec![f64::NAN; 3];
+        let kept = rebalance_levels(&old, &ids, &nan, &scratch, 2);
+        assert_eq!(kept[0].len(), old[0].len());
+    }
+
+    #[test]
+    fn timing_sink_accumulates_exact_nanos() {
+        let sink = TimingSink::new(3);
+        sink.add(0, 5e-9);
+        sink.add(0, 7e-9);
+        sink.add(2, 1e-9);
+        // both sides compute k_nanos as f64 * 1e-9, so equality is exact
+        assert_eq!(sink.secs(0), 12.0 * 1e-9);
+        assert_eq!(sink.secs(1), 0.0);
+        assert!((sink.total() - 13.0 * 1e-9).abs() < 1e-15);
+        sink.reset();
+        assert_eq!(sink.total(), 0.0);
+    }
+
+    #[test]
+    fn profile_json_round_trip() {
+        let p = CostProfile::from_coeffs(&[
+            (KernelClass::Decode(CodecFamily::Aflp, 3), 1.25e-10),
+            (KernelClass::MatBytes, 9.5e-11),
+            (KernelClass::DenseFlop, 4e-11),
+        ]);
+        let text = p.to_json().to_string();
+        let q = CostProfile::parse(&text).unwrap();
+        assert_eq!(q.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn profile_rejects_hostile_documents() {
+        // truncated
+        assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{\"dense_f").is_err());
+        // version mismatch / missing
+        assert!(CostProfile::parse("{\"version\":99,\"coeffs\":{}}").is_err());
+        assert!(CostProfile::parse("{\"coeffs\":{}}").is_err());
+        // unknown kernel class
+        assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{\"warp_speed\":1.0}}").is_err());
+        // non-numeric / negative coefficients
+        assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{\"dense_flop\":null}}").is_err());
+        assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{\"dense_flop\":-1.0}}").is_err());
+        // wrong kind
+        assert!(CostProfile::parse("{\"version\":1,\"kind\":\"something else\",\"coeffs\":{}}").is_err());
+    }
+}

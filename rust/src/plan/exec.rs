@@ -26,18 +26,21 @@
 //! precomputed and steady-state products allocate nothing on any backend.
 
 use super::arena::Arena;
-use super::executor::{Executor, ExecutorKind};
-use super::schedule::{balance, block_cost_split, uni_block_cost_split, Shard};
+use super::costmodel::{self, basis_data_feats, basis_feats, block_feats, transfer_feats, uni_block_feats, CostProfile, CostSource, Sample, TaskFeats, TimingSink};
+use super::executor::{Executor, ExecutorKind, TaskFn};
+use super::schedule::{balance, balance_level, block_cost_split, uni_block_cost_split, Shard};
 use crate::h2::H2Matrix;
 use crate::hmatrix::HMatrix;
 use crate::la::{blas, DMatrix};
 use crate::mvm::{kernels, SharedVec};
 use crate::uniform::{UniBlock, UniformHMatrix};
+use crate::util::{Rng, Timer};
 use std::ops::Range;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 /// Summary of a built plan (diagnostics / logging).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct PlanStats {
     /// Flattened tasks over all schedules (forward + adjoint).
     pub tasks: usize,
@@ -52,21 +55,90 @@ pub struct PlanStats {
     /// Codec-kernel selection the compressed applies run on, e.g.
     /// `"fused+avx2"` ([`crate::compress::dispatch::kernels_label`]).
     pub decode_kernels: &'static str,
+    /// Where the active LPT costs came from: the static byte model, a
+    /// profile file (`HMATC_COSTS` / `--costs`), or an in-process
+    /// calibration.
+    pub cost_source: CostSource,
+    /// Modeled makespan (seconds) of the re-balanced forward packing under
+    /// the calibrated coefficients; 0.0 while the static costs are active.
+    pub predicted_makespan: f64,
+    /// Measured makespan (seconds) of the forward schedule recorded by the
+    /// last in-process calibration (the packing that was live during the
+    /// timed rounds); 0.0 if never calibrated in process.
+    pub measured_makespan: f64,
 }
 
-/// Balance one level's task ids by their costs, remapping shard-local indices
-/// back to schedule-global task ids.
-fn balance_level(ids: &[usize], costs: &[f64], scratch: &[usize], nshards: usize) -> Vec<Shard> {
-    let local_costs: Vec<f64> = ids.iter().map(|&i| costs[i]).collect();
-    let local_scratch: Vec<usize> = ids.iter().map(|&i| scratch[i]).collect();
-    let mut shards = balance(&local_costs, &local_scratch, nshards);
-    for s in &mut shards {
-        for t in &mut s.tasks {
-            *t = ids[*t];
+/// Atomically swappable shard packing: a re-balance publishes a new
+/// task→shard partition while in-flight products keep executing the `Arc`
+/// they loaded at entry (the task list itself never changes, so either
+/// packing computes bitwise-identical results).
+struct Packing<T> {
+    inner: RwLock<Arc<T>>,
+}
+
+impl<T> Packing<T> {
+    fn new(v: T) -> Packing<T> {
+        Packing { inner: RwLock::new(Arc::new(v)) }
+    }
+
+    fn load(&self) -> Arc<T> {
+        self.inner.read().unwrap().clone()
+    }
+
+    fn store(&self, v: T) {
+        *self.inner.write().unwrap() = Arc::new(v);
+    }
+}
+
+/// Calibration state a plan reports through [`PlanStats`].
+#[derive(Clone, Debug, Default)]
+struct CalibInfo {
+    source: CostSource,
+    predicted: f64,
+    measured: f64,
+}
+
+/// Per-task model costs at batch width `nrhs`: the static split model
+/// (`fixed + nrhs · per_rhs` bytes), or the calibrated profile when one is
+/// active.
+///
+/// A usable profile can still model *this* schedule's tasks degenerately —
+/// e.g. a profile fitted on compressed data whose only nonzero coefficients
+/// are decode classes, applied to an uncompressed matrix: every task costs
+/// 0, and LPT over all-zero costs collapses a level into one shard. Such
+/// cost vectors (any non-finite/negative entry, or no positive entry) fall
+/// back to the static model, which is positive by construction.
+fn model_costs(feats: &[TaskFeats], fixed: &[f64], per_rhs: &[f64], profile: Option<&CostProfile>, nrhs: usize) -> Vec<f64> {
+    if let Some(p) = profile {
+        let costs: Vec<f64> = feats.iter().map(|ft| p.cost(ft, nrhs)).collect();
+        if costmodel::usable_costs(&costs) {
+            return costs;
         }
     }
-    shards
+    fixed.iter().zip(per_rhs).map(|(f, v)| f + nrhs as f64 * v).collect()
 }
+
+/// Run one level, optionally timing each chunk into `rec = (sink, slot
+/// base)`. The wrapper times at the chunk boundary inside whatever executor
+/// slot runs it — identical instrumentation for all three backends (`lpt`,
+/// `steal`, `sharded:K`) — and the sink slots are preallocated, so timed
+/// steady-state execution allocates nothing. Accumulators are read back only
+/// after the level barrier has joined.
+fn run_level_rec(exec: &dyn Executor, level: &[Shard], bufs: &mut [Vec<f64>], rec: Option<(&TimingSink, usize)>, run: &TaskFn) {
+    match rec {
+        None => exec.run_level(level, bufs, run),
+        Some((sink, base)) => exec.run_level(level, bufs, &|ti, buf| {
+            let t = Timer::start();
+            run(ti, buf);
+            sink.add(base + ti, t.elapsed());
+        }),
+    }
+}
+
+/// Batch width of the multi-RHS calibration rounds: mixing b = 1 and
+/// b = [`CALIB_RHS`] samples lets the least-squares fit separate the
+/// per-batch matrix terms from the per-RHS flop/vector terms.
+pub const CALIB_RHS: usize = 4;
 
 fn max_shard_stats(levels: &[Vec<Shard>]) -> (usize, usize) {
     let mut max_shards = 0;
@@ -85,34 +157,50 @@ fn max_shard_stats(levels: &[Vec<Shard>]) -> (usize, usize) {
 /// bytes amortize across the batch, vector traffic and panel scratch scale
 /// with it). A serving deployment sees a handful of distinct widths, so the
 /// cache stays tiny; it is capped to keep pathological clients bounded.
+///
+/// Entries are tagged with the cost-model **generation** they were packed
+/// for (a schedule bumps its generation on every re-balance): a caller
+/// passing a newer generation drops every older entry, so a packing built
+/// from pre-re-balance costs that races the swap can be *served* at most to
+/// callers that also started before the swap — it can never be pinned past
+/// the first post-swap product of its width.
 struct MultiCache<T> {
-    cache: Mutex<Vec<(usize, Arc<T>)>>,
+    cache: Mutex<(u64, Vec<(usize, Arc<T>)>)>,
 }
 
 impl<T> MultiCache<T> {
     fn new() -> MultiCache<T> {
-        MultiCache { cache: Mutex::new(Vec::new()) }
+        MultiCache { cache: Mutex::new((0, Vec::new())) }
     }
 
-    fn get(&self, nrhs: usize, build: impl FnOnce() -> T) -> Arc<T> {
+    fn get(&self, gen: u64, nrhs: usize, build: impl FnOnce() -> T) -> Arc<T> {
         let mut g = self.cache.lock().unwrap();
-        if let Some((_, l)) = g.iter().find(|(b, _)| *b == nrhs) {
-            return l.clone();
+        if gen > g.0 {
+            // first caller after a re-balance: drop every older packing
+            g.0 = gen;
+            g.1.clear();
+        }
+        if gen == g.0 {
+            if let Some((_, l)) = g.1.iter().find(|(b, _)| *b == nrhs) {
+                return l.clone();
+            }
         }
         let l = Arc::new(build());
-        if g.len() < 32 {
-            g.push((nrhs, l.clone()));
+        // a caller that raced a re-balance (gen < g.0) keeps its packing
+        // private — never cache a packing under a generation it wasn't
+        // built for
+        if gen == g.0 && g.1.len() < 32 {
+            g.1.push((nrhs, l.clone()));
         }
         l
     }
 }
 
-/// Balance every level's tasks for batch width `nrhs`: cost = fixed +
-/// nrhs · per_rhs, shard scratch = per-RHS panel scratch · nrhs.
-fn balance_levels_for(level_ids: &[Vec<usize>], fixed: &[f64], per_rhs: &[f64], pscratch: &[usize], nrhs: usize, nshards: usize) -> Vec<Vec<Shard>> {
-    let costs: Vec<f64> = fixed.iter().zip(per_rhs).map(|(f, v)| f + nrhs as f64 * v).collect();
+/// Balance every level's tasks for batch width `nrhs` with precomputed
+/// per-task `costs`; shard scratch = per-RHS panel scratch · nrhs.
+fn balance_levels_for(level_ids: &[Vec<usize>], costs: &[f64], pscratch: &[usize], nrhs: usize, nshards: usize) -> Vec<Vec<Shard>> {
     let scratch: Vec<usize> = pscratch.iter().map(|s| s * nrhs).collect();
-    level_ids.iter().map(|ids| balance_level(ids, &costs, &scratch, nshards)).collect()
+    level_ids.iter().map(|ids| balance_level(ids, costs, &scratch, nshards)).collect()
 }
 
 /// Gather rows `rows` of every column of `x` into the contiguous column-major
@@ -144,16 +232,28 @@ struct HSchedule {
     /// Split cost model per task: matrix bytes / vector bytes per RHS.
     fixed: Vec<f64>,
     per_rhs: Vec<f64>,
+    /// Per-task kernel-class features (calibrated cost model inputs).
+    feats: Vec<TaskFeats>,
+    /// Per-task single-RHS kernel scratch (for re-balancing).
+    scratch1: Vec<usize>,
     /// Per-RHS panel scratch per task (y panel + x stripe + kernel scratch).
     pscratch: Vec<usize>,
     /// Execution order for single-vector products: root level first.
-    levels: Vec<Vec<Shard>>,
+    /// Swappable: `rebalance` publishes a re-partition of the same tasks.
+    levels: Packing<Vec<Vec<Shard>>>,
     /// Per-batch-width panel shard packings.
     multi: MultiCache<Vec<Vec<Shard>>>,
+    /// Active calibrated profile (None = static byte costs).
+    profile: RwLock<Option<Arc<CostProfile>>>,
+    /// Cost-model generation, bumped by every re-balance **after** the
+    /// profile is published (tags [`MultiCache`] entries).
+    profile_gen: AtomicU64,
     /// Shard/chunk bin count the packings were built for (from the
     /// executor; reused for the cached per-width packings).
     nshards: usize,
-    max_shards: usize,
+    /// High-water shard count over every packing published so far (arena
+    /// buffer sizing only grows).
+    max_shards: AtomicUsize,
     scratch: usize,
 }
 
@@ -168,6 +268,7 @@ impl HSchedule {
         let mut tasks = Vec::new();
         let mut fixed = Vec::new();
         let mut per_rhs = Vec::new();
+        let mut feats = Vec::new();
         let mut scratch1 = Vec::new();
         let mut pscratch = Vec::new();
         let mut level_ids: Vec<Vec<usize>> = vec![Vec::new(); ct.levels.len()];
@@ -178,6 +279,7 @@ impl HSchedule {
             let mut refs = Vec::with_capacity(blocks.len());
             let mut fx = 0.0;
             let mut vr = 0.0;
+            let mut tf = TaskFeats::default();
             let mut scr = 0usize;
             let mut pan = 0usize;
             for &b in blocks {
@@ -189,6 +291,7 @@ impl HSchedule {
                 let (f, v) = block_cost_split(blk);
                 fx += f;
                 vr += v;
+                tf.merge(&block_feats(blk));
                 scr = scr.max(blk.rank());
                 pan = pan.max(src.len() + kernels::block_panel_scratch(blk));
                 refs.push((b, src));
@@ -199,6 +302,7 @@ impl HSchedule {
             tasks.push(HTask { dst, blocks: refs });
             fixed.push(fx);
             per_rhs.push(vr);
+            feats.push(tf);
             scratch1.push(scr);
             pscratch.push(pan);
             level_ids[ct.node(tau).level].push(id);
@@ -209,15 +313,59 @@ impl HSchedule {
         let levels: Vec<Vec<Shard>> =
             level_ids.iter().map(|ids| balance_level(ids, &costs, &scratch1, nshards)).collect();
         let (max_shards, scratch) = max_shard_stats(&levels);
-        HSchedule { tasks, level_ids, fixed, per_rhs, pscratch, levels, multi: MultiCache::new(), nshards, max_shards, scratch }
+        HSchedule {
+            tasks,
+            level_ids,
+            fixed,
+            per_rhs,
+            feats,
+            scratch1,
+            pscratch,
+            levels: Packing::new(levels),
+            multi: MultiCache::new(),
+            profile: RwLock::new(None),
+            profile_gen: AtomicU64::new(0),
+            nshards,
+            max_shards: AtomicUsize::new(max_shards),
+            scratch,
+        }
     }
 
-    fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor) {
-        arena.ensure(exec.buffers_needed(self.max_shards), self.scratch, 0, 0);
+    /// Re-partition every level with profile-modeled costs (never increasing
+    /// the modeled makespan — see [`costmodel::rebalance_levels`]) and bump
+    /// the cost-model generation so per-width packings re-pack with the new
+    /// costs. Returns the modeled makespan (seconds) of the active packing
+    /// at b = 1.
+    fn rebalance(&self, profile: &Arc<CostProfile>) -> f64 {
+        let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(profile.as_ref()), 1);
+        let old = self.levels.load();
+        let new = costmodel::rebalance_levels(&old, &self.level_ids, &costs, &self.scratch1, self.nshards);
+        let ms = costmodel::makespan(&new, &costs);
+        let (mx, _) = max_shard_stats(&new);
+        self.max_shards.fetch_max(mx, Ordering::Relaxed);
+        self.levels.store(new);
+        *self.profile.write().unwrap() = Some(profile.clone());
+        self.profile_gen.fetch_add(1, Ordering::Release);
+        ms
+    }
+
+    /// Turn accumulated per-task times into fit samples (secs averaged over
+    /// `rounds` timed products at batch width `nrhs`).
+    fn push_samples(&self, sink: &TimingSink, nrhs: usize, rounds: usize, out: &mut Vec<Sample>) {
+        let inv = 1.0 / rounds.max(1) as f64;
+        for (ti, ft) in self.feats.iter().enumerate() {
+            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(ti) * inv });
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
+        arena.ensure(exec.buffers_needed(self.max_shards.load(Ordering::Relaxed)), self.scratch, 0, 0);
         let (bufs, _, _) = arena.split();
         let yy = SharedVec::new(y);
-        for level in &self.levels {
-            exec.run_level(level, bufs, &|ti, buf| {
+        let levels = self.levels.load();
+        for level in levels.iter() {
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), &|ti, buf| {
                 let task = &self.tasks[ti];
                 // SAFETY: same-level clusters are disjoint; levels are
                 // separated by join barriers (parents first).
@@ -237,18 +385,24 @@ impl HSchedule {
     /// Gemm-shaped batched execution: every task gathers its disjoint y rows
     /// into a contiguous `rows×b` panel, each block's (possibly compressed)
     /// data is streamed once and applied to all `b` columns.
-    fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor) {
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
         let ylen = y.nrows();
         let nrhs = y.ncols();
-        let levels = self
-            .multi
-            .get(nrhs, || balance_levels_for(&self.level_ids, &self.fixed, &self.per_rhs, &self.pscratch, nrhs, self.nshards));
+        // gen before profile: a packing is cached only under a generation
+        // at least as old as the profile it was built from
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let levels = self.multi.get(gen, nrhs, || {
+            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
+            balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards)
+        });
         let (max_shards, scratch) = max_shard_stats(&levels);
         arena.ensure(exec.buffers_needed(max_shards), scratch, 0, 0);
         let (bufs, _, _) = arena.split();
         let yy = SharedVec::new(y.data_mut());
         for level in levels.iter() {
-            exec.run_level(level, bufs, &|ti, buf| {
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), &|ti, buf| {
                 let task = &self.tasks[ti];
                 let dl = task.dst.len();
                 let (yp, rest) = buf.split_at_mut(dl * nrhs);
@@ -292,6 +446,9 @@ pub struct HPlan {
     exec: Arc<dyn Executor>,
     fwd: OnceLock<HSchedule>,
     adj: OnceLock<HSchedule>,
+    /// Active calibrated profile, also applied to halves built later.
+    profile: Mutex<Option<Arc<CostProfile>>>,
+    calib: Mutex<CalibInfo>,
     nrows: usize,
     ncols: usize,
 }
@@ -315,7 +472,7 @@ impl HPlan {
 
     /// Lazy plan on the given backend.
     pub fn lazy_with(m: &HMatrix, exec: Arc<dyn Executor>) -> HPlan {
-        HPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+        HPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), profile: Mutex::new(None), calib: Mutex::new(CalibInfo::default()), nrows: m.nrows(), ncols: m.ncols() }
     }
 
     /// Backend name (logs / bench rows).
@@ -324,25 +481,52 @@ impl HPlan {
     }
 
     fn fwd(&self, m: &HMatrix) -> &HSchedule {
-        self.fwd.get_or_init(|| HSchedule::build(m, false, &*self.exec))
+        let s = self.fwd.get_or_init(|| HSchedule::build(m, false, &*self.exec));
+        self.sync_profile(s, true);
+        s
     }
 
     fn adj(&self, m: &HMatrix) -> &HSchedule {
-        self.adj.get_or_init(|| HSchedule::build(m, true, &*self.exec))
+        let s = self.adj.get_or_init(|| HSchedule::build(m, true, &*self.exec));
+        self.sync_profile(s, false);
+        s
+    }
+
+    /// Apply the plan's active profile to a schedule half if it does not
+    /// carry it yet. Checked on every access (one mutex + one RwLock read)
+    /// rather than only inside the `OnceLock` initializer, so a `rebalance`
+    /// that raced a half's in-flight lazy build — where `get()` still
+    /// returned `None` — is healed on the very next product instead of being
+    /// silently dropped. Healing the forward half also records the predicted
+    /// makespan that the original `rebalance` could not compute.
+    fn sync_profile(&self, s: &HSchedule, is_fwd: bool) {
+        let Some(want) = self.profile.lock().unwrap().clone() else {
+            return;
+        };
+        let stale = {
+            let cur = s.profile.read().unwrap();
+            !cur.as_ref().is_some_and(|c| Arc::ptr_eq(c, &want))
+        };
+        if stale {
+            let predicted = s.rebalance(&want);
+            if is_fwd {
+                self.calib.lock().unwrap().predicted = predicted;
+            }
+        }
     }
 
     /// y += alpha · M · x.
     pub fn execute(&self, m: &HMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec);
+        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec, None);
     }
 
     /// y += alpha · Mᵀ · x.
     pub fn execute_adjoint(&self, m: &HMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols);
-        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec);
+        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec, None);
     }
 
     /// Y += alpha · M · X (column-major multivectors, gemm-shaped tasks).
@@ -350,7 +534,7 @@ impl HPlan {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec);
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, None);
     }
 
     /// Y += alpha · Mᵀ · X (column-major multivectors, gemm-shaped tasks).
@@ -358,7 +542,64 @@ impl HPlan {
         assert_eq!(x.nrows(), self.nrows);
         assert_eq!(y.nrows(), self.ncols);
         assert_eq!(x.ncols(), y.ncols());
-        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec);
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None);
+    }
+
+    /// Re-run LPT partitioning of every built schedule half with costs from
+    /// `profile`, atomically swapping in the new packings (in-flight products
+    /// finish on the packing they started with). The task lists are
+    /// untouched, so outputs are bitwise identical before and after; halves
+    /// built later inherit the profile. Unusable profiles (no positive
+    /// finite coefficient) are ignored.
+    pub fn rebalance(&self, profile: &CostProfile) {
+        if !profile.is_usable() {
+            return;
+        }
+        let p = Arc::new(profile.clone());
+        *self.profile.lock().unwrap() = Some(p.clone());
+        let mut predicted = 0.0;
+        if let Some(s) = self.fwd.get() {
+            predicted = s.rebalance(&p);
+        }
+        if let Some(s) = self.adj.get() {
+            s.rebalance(&p);
+        }
+        let mut c = self.calib.lock().unwrap();
+        c.source = profile.source.clone();
+        c.predicted = predicted;
+    }
+
+    /// Measure per-chunk wall times over `warmup_batches` timed products
+    /// (single-RHS and width-[`CALIB_RHS`] batches), fit per-kernel-class
+    /// coefficients and re-balance the plan with them. Returns the fitted
+    /// profile (save it with [`CostProfile::save`] / `hmatc calibrate`).
+    pub fn calibrate(&self, m: &HMatrix, warmup_batches: usize) -> CostProfile {
+        let rounds = warmup_batches.max(1);
+        let sched = self.fwd(m);
+        let sink = TimingSink::new(sched.tasks.len());
+        let mut arena = Arena::new();
+        let mut rng = Rng::new(0xCA11B);
+        let x = rng.vector(self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, None); // warmup
+        for _ in 0..rounds {
+            sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink));
+        }
+        let mut samples = Vec::new();
+        sched.push_samples(&sink, 1, rounds, &mut samples);
+        let measured = costmodel::sink_makespan(&sched.levels.load(), 0, &sink) / rounds as f64;
+        let xm = DMatrix::random(self.ncols, CALIB_RHS, &mut rng);
+        let mut ym = DMatrix::zeros(self.nrows, CALIB_RHS);
+        sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, None); // warmup
+        sink.reset();
+        for _ in 0..rounds {
+            sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink));
+        }
+        sched.push_samples(&sink, CALIB_RHS, rounds, &mut samples);
+        let profile = costmodel::fit(&samples).unwrap_or_default();
+        self.rebalance(&profile);
+        self.calib.lock().unwrap().measured = measured;
+        profile
     }
 
     /// Aggregate over the schedule halves built so far.
@@ -366,12 +607,16 @@ impl HPlan {
         let mut st = PlanStats { decode_kernels: crate::compress::dispatch::kernels_label(), ..PlanStats::default() };
         for sched in [self.fwd.get(), self.adj.get()].into_iter().flatten() {
             st.tasks += sched.tasks.len();
-            st.max_shards = st.max_shards.max(sched.max_shards);
+            st.max_shards = st.max_shards.max(sched.max_shards.load(Ordering::Relaxed));
             st.scratch_f64 = st.scratch_f64.max(sched.scratch);
         }
         if let Some(f) = self.fwd.get() {
-            st.levels = f.levels.len();
+            st.levels = f.level_ids.len();
         }
+        let c = self.calib.lock().unwrap();
+        st.cost_source = c.source.clone();
+        st.predicted_makespan = c.predicted;
+        st.measured_makespan = c.measured;
         st
     }
 }
@@ -458,20 +703,29 @@ struct UniSchedule {
     ftasks: Vec<CoeffTask>,
     ffixed: Vec<f64>,
     fper_rhs: Vec<f64>,
+    ffeats: Vec<TaskFeats>,
     fpscratch: Vec<usize>,
-    fshards: Vec<Shard>,
+    /// Forward-transform shard packing (one barrier "level"); swappable.
+    fshards: Packing<Vec<Shard>>,
     tasks: Vec<UniRowTask>,
     level_ids: Vec<Vec<usize>>,
     fixed: Vec<f64>,
     per_rhs: Vec<f64>,
+    feats: Vec<TaskFeats>,
+    scratch1: Vec<usize>,
     pscratch: Vec<usize>,
-    levels: Vec<Vec<Shard>>,
+    /// Output-pass packings, root level first; swappable.
+    levels: Packing<Vec<Vec<Shard>>>,
     /// Per-batch-width (forward shards, level shards) packings.
     multi: MultiCache<(Vec<Shard>, Vec<Vec<Shard>>)>,
+    /// Active calibrated profile (None = static byte costs).
+    profile: RwLock<Option<Arc<CostProfile>>>,
+    /// Cost-model generation (see [`HSchedule`]).
+    profile_gen: AtomicU64,
     /// Shard/chunk bin count the packings were built for.
     nshards: usize,
     s_len: usize,
-    max_shards: usize,
+    max_shards: AtomicUsize,
     scratch: usize,
 }
 
@@ -490,6 +744,7 @@ impl UniSchedule {
         let mut ftasks = Vec::new();
         let mut ffixed = Vec::new();
         let mut fper_rhs = Vec::new();
+        let mut ffeats = Vec::new();
         let mut fpscratch = Vec::new();
         for (sigma, basis) in in_basis.iter().enumerate() {
             let k = basis.rank();
@@ -500,6 +755,7 @@ impl UniSchedule {
             let src = in_ct.node(sigma).range();
             ffixed.push(basis.byte_size() as f64);
             fper_rhs.push((8 * (src.len() + k)) as f64);
+            ffeats.push(basis_feats(basis));
             fpscratch.push(src.len());
             ftasks.push(CoeffTask { cluster: sigma, src, off: s_len, len: k });
             s_len += k;
@@ -513,6 +769,7 @@ impl UniSchedule {
         let mut tasks = Vec::new();
         let mut fixed = Vec::new();
         let mut per_rhs = Vec::new();
+        let mut feats = Vec::new();
         let mut scratch1 = Vec::new();
         let mut pscratch = Vec::new();
         let mut level_ids: Vec<Vec<usize>> = vec![Vec::new(); out_ct.levels.len()];
@@ -525,6 +782,7 @@ impl UniSchedule {
             let mut dense = Vec::new();
             let mut fx = 0.0;
             let mut vr = 0.0;
+            let mut tf = TaskFeats::default();
             let mut scr = rank;
             let mut csl = 0usize;
             let mut xmax = 0usize;
@@ -535,6 +793,7 @@ impl UniSchedule {
                     panic!("UH plan build: missing leaf data for block {b} (row cluster {}, col cluster {})", nd.row, nd.col)
                 });
                 let (f, v) = uni_block_cost_split(blk);
+                tf.merge(&uni_block_feats(blk));
                 match blk {
                     UniBlock::Coupling(c) => {
                         scr = scr.max(rank + c.scratch_len());
@@ -559,12 +818,14 @@ impl UniSchedule {
             if !couplings.is_empty() {
                 fx += out_basis[tau].byte_size() as f64;
                 vr += (8 * dst.len()) as f64;
+                tf.merge(&basis_feats(&out_basis[tau]));
             }
             let id = tasks.len();
             pscratch.push(rank + csl + dst.len() + xmax);
             tasks.push(UniRowTask { cluster: tau, dst, rank, cscratch: csl, couplings, dense });
             fixed.push(fx);
             per_rhs.push(vr);
+            feats.push(tf);
             scratch1.push(scr);
             level_ids[out_ct.node(tau).level].push(id);
         }
@@ -573,36 +834,79 @@ impl UniSchedule {
         let levels: Vec<Vec<Shard>> =
             level_ids.iter().map(|ids| balance_level(ids, &costs, &scratch1, nshards)).collect();
         let (max_shards, scratch) = max_shard_stats(&levels);
+        let max_shards = max_shards.max(fshards.len());
         UniSchedule {
             ftasks,
             ffixed,
             fper_rhs,
+            ffeats,
             fpscratch,
-            fshards: fshards.clone(),
+            fshards: Packing::new(fshards),
             tasks,
             level_ids,
             fixed,
             per_rhs,
+            feats,
+            scratch1,
             pscratch,
-            levels,
+            levels: Packing::new(levels),
             multi: MultiCache::new(),
+            profile: RwLock::new(None),
+            profile_gen: AtomicU64::new(0),
             nshards,
             s_len,
-            max_shards: max_shards.max(fshards.len()),
+            max_shards: AtomicUsize::new(max_shards),
             scratch,
         }
     }
 
-    fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor) {
+    /// Re-partition the forward-transform shards and every output level with
+    /// profile-modeled costs (never increasing the modeled makespan); drops
+    /// the per-width packings. Returns the modeled makespan at b = 1.
+    fn rebalance(&self, profile: &Arc<CostProfile>) -> f64 {
+        let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(profile.as_ref()), 1);
+        let fscratch = vec![0usize; self.ftasks.len()];
+        let fids: Vec<usize> = (0..self.ftasks.len()).collect();
+        let old_f = self.fshards.load();
+        let new_f = costmodel::rebalance_levels(std::slice::from_ref(old_f.as_ref()), std::slice::from_ref(&fids), &fcosts, &fscratch, self.nshards).pop().unwrap_or_default();
+        let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(profile.as_ref()), 1);
+        let old = self.levels.load();
+        let new = costmodel::rebalance_levels(&old, &self.level_ids, &costs, &self.scratch1, self.nshards);
+        let ms = costmodel::makespan(std::slice::from_ref(&new_f), &fcosts) + costmodel::makespan(&new, &costs);
+        let (mx, _) = max_shard_stats(&new);
+        self.max_shards.fetch_max(mx.max(new_f.len()), Ordering::Relaxed);
+        self.fshards.store(new_f);
+        self.levels.store(new);
+        *self.profile.write().unwrap() = Some(profile.clone());
+        self.profile_gen.fetch_add(1, Ordering::Release);
+        ms
+    }
+
+    /// Turn accumulated per-task times into fit samples; forward-transform
+    /// tasks occupy sink slots `0..ftasks.len()`, output tasks follow.
+    fn push_samples(&self, sink: &TimingSink, nrhs: usize, rounds: usize, out: &mut Vec<Sample>) {
+        let inv = 1.0 / rounds.max(1) as f64;
+        for (ti, ft) in self.ffeats.iter().enumerate() {
+            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(ti) * inv });
+        }
+        let base = self.ftasks.len();
+        for (ti, ft) in self.feats.iter().enumerate() {
+            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(base + ti) * inv });
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
         let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
-        arena.ensure(exec.buffers_needed(self.max_shards), self.scratch, self.s_len, 0);
+        arena.ensure(exec.buffers_needed(self.max_shards.load(Ordering::Relaxed)), self.scratch, self.s_len, 0);
         let (bufs, s_all, _) = arena.split();
 
         // phase 1: forward transformation s_σ = Bᵀ x|σ (independent slots)
         {
             s_all[..self.s_len].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len]);
-            exec.run_level(&self.fshards, bufs, &|ti, _buf| {
+            let fshards = self.fshards.load();
+            run_level_rec(exec, &fshards, bufs, rec.map(|s| (s, 0)), &|ti, _buf| {
                 let t = &self.ftasks[ti];
                 // SAFETY: one task per disjoint slot range.
                 let dst = unsafe { slots.range_mut(t.off..t.off + t.len) };
@@ -613,8 +917,9 @@ impl UniSchedule {
         // phase 2: level-ordered output pass
         let sref: &[f64] = &s_all[..self.s_len];
         let yy = SharedVec::new(y);
-        for level in &self.levels {
-            exec.run_level(level, bufs, &|ti, buf| {
+        let levels = self.levels.load();
+        for level in levels.iter() {
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.ftasks.len())), &|ti, buf| {
                 let task = &self.tasks[ti];
                 // SAFETY: same-level clusters are disjoint; levels are
                 // barrier separated.
@@ -649,15 +954,19 @@ impl UniSchedule {
     /// Gemm-shaped batched execution: slot-major coefficient panels (slot σ
     /// occupies `s_off[σ]·b .. (s_off[σ]+k)·b`), y gathered per task into a
     /// contiguous `rows×b` panel, all block/basis/coupling data streamed once.
-    fn exec_multi(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor) {
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
         let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
         let ylen = y.nrows();
         let nrhs = y.ncols();
-        let packed = self.multi.get(nrhs, || {
-            let fcosts: Vec<f64> = self.ffixed.iter().zip(&self.fper_rhs).map(|(f, v)| f + nrhs as f64 * v).collect();
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let packed = self.multi.get(gen, nrhs, || {
+            let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs);
             let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
             let fsh = balance(&fcosts, &fscratch, self.nshards);
-            let lv = balance_levels_for(&self.level_ids, &self.fixed, &self.per_rhs, &self.pscratch, nrhs, self.nshards);
+            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
+            let lv = balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards);
             (fsh, lv)
         });
         let (fshards, levels) = (&packed.0, &packed.1);
@@ -671,7 +980,7 @@ impl UniSchedule {
         {
             s_all[..self.s_len * nrhs].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len * nrhs]);
-            exec.run_level(fshards, bufs, &|ti, buf| {
+            run_level_rec(exec, fshards, bufs, rec.map(|s| (s, 0)), &|ti, buf| {
                 let t = &self.ftasks[ti];
                 let sl = t.src.len();
                 let xp = &mut buf[..sl * nrhs];
@@ -686,7 +995,7 @@ impl UniSchedule {
         let sref: &[f64] = &s_all[..self.s_len * nrhs];
         let yy = SharedVec::new(y.data_mut());
         for level in levels.iter() {
-            exec.run_level(level, bufs, &|ti, buf| {
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.ftasks.len())), &|ti, buf| {
                 let task = &self.tasks[ti];
                 let dl = task.dst.len();
                 let (tv, rest) = buf.split_at_mut(task.rank * nrhs);
@@ -740,6 +1049,9 @@ pub struct UniPlan {
     exec: Arc<dyn Executor>,
     fwd: OnceLock<UniSchedule>,
     adj: OnceLock<UniSchedule>,
+    /// Active calibrated profile, also applied to halves built later.
+    profile: Mutex<Option<Arc<CostProfile>>>,
+    calib: Mutex<CalibInfo>,
     nrows: usize,
     ncols: usize,
 }
@@ -763,7 +1075,7 @@ impl UniPlan {
 
     /// Lazy plan on the given backend.
     pub fn lazy_with(m: &UniformHMatrix, exec: Arc<dyn Executor>) -> UniPlan {
-        UniPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+        UniPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), profile: Mutex::new(None), calib: Mutex::new(CalibInfo::default()), nrows: m.nrows(), ncols: m.ncols() }
     }
 
     /// Backend name (logs / bench rows).
@@ -772,25 +1084,47 @@ impl UniPlan {
     }
 
     fn fwd(&self, m: &UniformHMatrix) -> &UniSchedule {
-        self.fwd.get_or_init(|| UniSchedule::build(m, false, &*self.exec))
+        let s = self.fwd.get_or_init(|| UniSchedule::build(m, false, &*self.exec));
+        self.sync_profile(s, true);
+        s
     }
 
     fn adj(&self, m: &UniformHMatrix) -> &UniSchedule {
-        self.adj.get_or_init(|| UniSchedule::build(m, true, &*self.exec))
+        let s = self.adj.get_or_init(|| UniSchedule::build(m, true, &*self.exec));
+        self.sync_profile(s, false);
+        s
+    }
+
+    /// See [`HPlan::sync_profile`]: heals a profile that raced a half's
+    /// in-flight lazy build.
+    fn sync_profile(&self, s: &UniSchedule, is_fwd: bool) {
+        let Some(want) = self.profile.lock().unwrap().clone() else {
+            return;
+        };
+        let stale = {
+            let cur = s.profile.read().unwrap();
+            !cur.as_ref().is_some_and(|c| Arc::ptr_eq(c, &want))
+        };
+        if stale {
+            let predicted = s.rebalance(&want);
+            if is_fwd {
+                self.calib.lock().unwrap().predicted = predicted;
+            }
+        }
     }
 
     /// y += alpha · M · x.
     pub fn execute(&self, m: &UniformHMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec);
+        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec, None);
     }
 
     /// y += alpha · Mᵀ · x.
     pub fn execute_adjoint(&self, m: &UniformHMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols);
-        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec);
+        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec, None);
     }
 
     /// Y += alpha · M · X: one gemm-shaped schedule pass for the whole batch
@@ -800,7 +1134,7 @@ impl UniPlan {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec);
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, None);
     }
 
     /// Y += alpha · Mᵀ · X (gemm-shaped batched adjoint).
@@ -808,7 +1142,60 @@ impl UniPlan {
         assert_eq!(x.nrows(), self.nrows);
         assert_eq!(y.nrows(), self.ncols);
         assert_eq!(x.ncols(), y.ncols());
-        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec);
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None);
+    }
+
+    /// Re-partition built schedule halves with `profile` costs (atomic swap,
+    /// bitwise output-invariant; see [`HPlan::rebalance`]).
+    pub fn rebalance(&self, profile: &CostProfile) {
+        if !profile.is_usable() {
+            return;
+        }
+        let p = Arc::new(profile.clone());
+        *self.profile.lock().unwrap() = Some(p.clone());
+        let mut predicted = 0.0;
+        if let Some(s) = self.fwd.get() {
+            predicted = s.rebalance(&p);
+        }
+        if let Some(s) = self.adj.get() {
+            s.rebalance(&p);
+        }
+        let mut c = self.calib.lock().unwrap();
+        c.source = profile.source.clone();
+        c.predicted = predicted;
+    }
+
+    /// Timed calibration rounds + least-squares fit + re-balance (see
+    /// [`HPlan::calibrate`]).
+    pub fn calibrate(&self, m: &UniformHMatrix, warmup_batches: usize) -> CostProfile {
+        let rounds = warmup_batches.max(1);
+        let sched = self.fwd(m);
+        let sink = TimingSink::new(sched.ftasks.len() + sched.tasks.len());
+        let mut arena = Arena::new();
+        let mut rng = Rng::new(0xCA11B + 1);
+        let x = rng.vector(self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, None); // warmup
+        for _ in 0..rounds {
+            sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink));
+        }
+        let mut samples = Vec::new();
+        sched.push_samples(&sink, 1, rounds, &mut samples);
+        let fsh = sched.fshards.load();
+        let lv = sched.levels.load();
+        let measured = (costmodel::sink_makespan(std::slice::from_ref(fsh.as_ref()), 0, &sink) + costmodel::sink_makespan(&lv, sched.ftasks.len(), &sink)) / rounds as f64;
+        let xm = DMatrix::random(self.ncols, CALIB_RHS, &mut rng);
+        let mut ym = DMatrix::zeros(self.nrows, CALIB_RHS);
+        sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, None); // warmup
+        sink.reset();
+        for _ in 0..rounds {
+            sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink));
+        }
+        sched.push_samples(&sink, CALIB_RHS, rounds, &mut samples);
+        let profile = costmodel::fit(&samples).unwrap_or_default();
+        self.rebalance(&profile);
+        self.calib.lock().unwrap().measured = measured;
+        profile
     }
 
     /// Aggregate over the schedule halves built so far.
@@ -816,13 +1203,17 @@ impl UniPlan {
         let mut st = PlanStats { decode_kernels: crate::compress::dispatch::kernels_label(), ..PlanStats::default() };
         for sched in [self.fwd.get(), self.adj.get()].into_iter().flatten() {
             st.tasks += sched.ftasks.len() + sched.tasks.len();
-            st.max_shards = st.max_shards.max(sched.max_shards);
+            st.max_shards = st.max_shards.max(sched.max_shards.load(Ordering::Relaxed));
             st.scratch_f64 = st.scratch_f64.max(sched.scratch);
             st.coeff_f64 = st.coeff_f64.max(sched.s_len);
         }
         if let Some(f) = self.fwd.get() {
-            st.levels = f.levels.len() + 1;
+            st.levels = f.level_ids.len() + 1;
         }
+        let c = self.calib.lock().unwrap();
+        st.cost_source = c.source.clone();
+        st.predicted_makespan = c.predicted;
+        st.measured_makespan = c.measured;
         st
     }
 }
@@ -865,23 +1256,31 @@ struct H2Schedule {
     up_level_ids: Vec<Vec<usize>>,
     up_fixed: Vec<f64>,
     up_per_rhs: Vec<f64>,
+    up_feats: Vec<TaskFeats>,
     up_pscratch: Vec<usize>,
     /// Execution order: deepest level first (children before parents).
-    up_levels: Vec<Vec<Shard>>,
+    /// Swappable: `rebalance` publishes a re-partition of the same tasks.
+    up_levels: Packing<Vec<Vec<Shard>>>,
     down_tasks: Vec<DownTask>,
     down_level_ids: Vec<Vec<usize>>,
     down_fixed: Vec<f64>,
     down_per_rhs: Vec<f64>,
+    down_feats: Vec<TaskFeats>,
+    down_scratch1: Vec<usize>,
     down_pscratch: Vec<usize>,
     /// Execution order: root level first (parents before children).
-    down_levels: Vec<Vec<Shard>>,
+    down_levels: Packing<Vec<Vec<Shard>>>,
     /// Per-batch-width (up levels, down levels) packings.
     multi: MultiCache<(Vec<Vec<Shard>>, Vec<Vec<Shard>>)>,
+    /// Active calibrated profile (None = static byte costs).
+    profile: RwLock<Option<Arc<CostProfile>>>,
+    /// Cost-model generation (see [`HSchedule`]).
+    profile_gen: AtomicU64,
     /// Shard/chunk bin count the packings were built for.
     nshards: usize,
     s_len: usize,
     t_len: usize,
-    max_shards: usize,
+    max_shards: AtomicUsize,
     scratch: usize,
 }
 
@@ -905,6 +1304,7 @@ impl H2Schedule {
         let mut up_tasks = Vec::new();
         let mut up_fixed = Vec::new();
         let mut up_per_rhs = Vec::new();
+        let mut up_feats = Vec::new();
         let mut up_pscratch = Vec::new();
         let mut up_level_ids = Vec::new();
         for lvl in (0..in_ct.levels.len()).rev() {
@@ -915,7 +1315,11 @@ impl H2Schedule {
                     continue;
                 }
                 let nd = in_ct.node(sigma);
+                let mut tf = TaskFeats::default();
                 let (children, fx, vr, pan) = if nd.is_leaf() {
+                    if let Some(leaf) = in_nb.leaf[sigma].as_ref() {
+                        tf.merge(&basis_data_feats(leaf));
+                    }
                     (Vec::new(), (8 * nd.size() * k) as f64, (8 * (nd.size() + k)) as f64, nd.size())
                 } else {
                     let mut ch = Vec::new();
@@ -927,6 +1331,7 @@ impl H2Schedule {
                         }
                         fx += in_nb.transfer[c].as_ref().unwrap().byte_size() as f64;
                         vr += (8 * (in_nb.rank[c] + k)) as f64;
+                        tf.merge(&transfer_feats(in_nb.transfer[c].as_ref().unwrap()));
                         ch.push((c, s_off[c], in_nb.rank[c]));
                     }
                     (ch, fx, vr, 0)
@@ -935,6 +1340,7 @@ impl H2Schedule {
                 up_tasks.push(UpTask { cluster: sigma, off: s_off[sigma], len: k, leaf: nd.is_leaf(), src: nd.range(), children });
                 up_fixed.push(fx);
                 up_per_rhs.push(vr);
+                up_feats.push(tf);
                 up_pscratch.push(pan);
             }
             if !ids.is_empty() {
@@ -956,6 +1362,7 @@ impl H2Schedule {
         let mut down_tasks = Vec::new();
         let mut down_fixed = Vec::new();
         let mut down_per_rhs = Vec::new();
+        let mut down_feats = Vec::new();
         let mut down_scratch = Vec::new();
         let mut down_pscratch = Vec::new();
         let mut down_level_ids = Vec::new();
@@ -968,6 +1375,7 @@ impl H2Schedule {
                 let mut dense = Vec::new();
                 let mut fx = 0.0;
                 let mut vr = 0.0;
+                let mut tf = TaskFeats::default();
                 let mut scr = rank;
                 let mut csl = 0usize;
                 let mut xmax = 0usize;
@@ -978,6 +1386,7 @@ impl H2Schedule {
                         panic!("H2 plan build: missing leaf data for block {b} (row cluster {}, col cluster {})", bn.row, bn.col)
                     });
                     let (f, v) = uni_block_cost_split(blk);
+                    tf.merge(&uni_block_feats(blk));
                     match blk {
                         UniBlock::Coupling(c) => {
                             scr = scr.max(rank + c.scratch_len());
@@ -1003,12 +1412,16 @@ impl H2Schedule {
                         }
                         fx += out_nb.transfer[c].as_ref().unwrap().byte_size() as f64;
                         vr += (8 * (rank + out_nb.rank[c])) as f64;
+                        tf.merge(&transfer_feats(out_nb.transfer[c].as_ref().unwrap()));
                         children.push((c, t_off[c], out_nb.rank[c]));
                     }
                 }
                 if nd.is_leaf() && rank > 0 {
                     fx += (8 * nd.size() * rank) as f64;
                     vr += (8 * nd.size()) as f64;
+                    if let Some(leaf) = out_nb.leaf[tau].as_ref() {
+                        tf.merge(&basis_data_feats(leaf));
+                    }
                 }
                 // a task is needed to relay or apply coefficients, or for
                 // dense blocks — skip clusters with nothing to do
@@ -1030,6 +1443,7 @@ impl H2Schedule {
                 });
                 down_fixed.push(fx);
                 down_per_rhs.push(vr);
+                down_feats.push(tf);
                 down_scratch.push(scr);
             }
             if !ids.is_empty() {
@@ -1047,34 +1461,76 @@ impl H2Schedule {
             up_level_ids,
             up_fixed,
             up_per_rhs,
+            up_feats,
             up_pscratch,
-            up_levels,
+            up_levels: Packing::new(up_levels),
             down_tasks,
             down_level_ids,
             down_fixed,
             down_per_rhs,
+            down_feats,
+            down_scratch1: down_scratch,
             down_pscratch,
-            down_levels,
+            down_levels: Packing::new(down_levels),
             multi: MultiCache::new(),
+            profile: RwLock::new(None),
+            profile_gen: AtomicU64::new(0),
             nshards,
             s_len,
             t_len,
-            max_shards: up_max.max(down_max),
+            max_shards: AtomicUsize::new(up_max.max(down_max)),
             scratch,
         }
     }
 
-    fn exec(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor) {
+    /// Re-partition both passes with profile-modeled costs (never increasing
+    /// the modeled makespan); drops the per-width packings. Returns the
+    /// modeled makespan at b = 1 (up + down, levels are barriers).
+    fn rebalance(&self, profile: &Arc<CostProfile>) -> f64 {
+        let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(profile.as_ref()), 1);
+        let up_scratch = vec![0usize; self.up_tasks.len()];
+        let old_up = self.up_levels.load();
+        let new_up = costmodel::rebalance_levels(&old_up, &self.up_level_ids, &up_costs, &up_scratch, self.nshards);
+        let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(profile.as_ref()), 1);
+        let old_down = self.down_levels.load();
+        let new_down = costmodel::rebalance_levels(&old_down, &self.down_level_ids, &down_costs, &self.down_scratch1, self.nshards);
+        let ms = costmodel::makespan(&new_up, &up_costs) + costmodel::makespan(&new_down, &down_costs);
+        let (up_max, _) = max_shard_stats(&new_up);
+        let (down_max, _) = max_shard_stats(&new_down);
+        self.max_shards.fetch_max(up_max.max(down_max), Ordering::Relaxed);
+        self.up_levels.store(new_up);
+        self.down_levels.store(new_down);
+        *self.profile.write().unwrap() = Some(profile.clone());
+        self.profile_gen.fetch_add(1, Ordering::Release);
+        ms
+    }
+
+    /// Turn accumulated per-task times into fit samples; upward-pass tasks
+    /// occupy sink slots `0..up_tasks.len()`, downward-pass tasks follow.
+    fn push_samples(&self, sink: &TimingSink, nrhs: usize, rounds: usize, out: &mut Vec<Sample>) {
+        let inv = 1.0 / rounds.max(1) as f64;
+        for (ti, ft) in self.up_feats.iter().enumerate() {
+            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(ti) * inv });
+        }
+        let base = self.up_tasks.len();
+        for (ti, ft) in self.down_feats.iter().enumerate() {
+            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(base + ti) * inv });
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
         let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
-        arena.ensure(exec.buffers_needed(self.max_shards), self.scratch, self.s_len, self.t_len);
+        arena.ensure(exec.buffers_needed(self.max_shards.load(Ordering::Relaxed)), self.scratch, self.s_len, self.t_len);
         let (bufs, s_all, t_all) = arena.split();
 
         // upward pass: forward transformation, children before parents
         {
             s_all[..self.s_len].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len]);
-            for level in &self.up_levels {
-                exec.run_level(level, bufs, &|ti, _buf| {
+            let up_levels = self.up_levels.load();
+            for level in up_levels.iter() {
+                run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), &|ti, _buf| {
                     let t = &self.up_tasks[ti];
                     // SAFETY: one slot per cluster; child slots were filled
                     // in an earlier, already joined level.
@@ -1098,8 +1554,9 @@ impl H2Schedule {
         t_all[..self.t_len].fill(0.0);
         let tslots = SharedVec::new(&mut t_all[..self.t_len]);
         let yy = SharedVec::new(y);
-        for level in &self.down_levels {
-            exec.run_level(level, bufs, &|ti, buf| {
+        let down_levels = self.down_levels.load();
+        for level in down_levels.iter() {
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.up_tasks.len())), &|ti, buf| {
                 let task = &self.down_tasks[ti];
                 // SAFETY: τ's slot was written only by its parent in an
                 // earlier level; same-level clusters are disjoint.
@@ -1148,14 +1605,19 @@ impl H2Schedule {
     /// Gemm-shaped batched execution: slot-major coefficient panels for both
     /// transform directions, leaf/dense y rows gathered into contiguous
     /// panels; transfer and coupling matrices are streamed once per batch.
-    fn exec_multi(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor) {
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
         let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
         let ylen = y.nrows();
         let nrhs = y.ncols();
-        let packed = self.multi.get(nrhs, || {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let packed = self.multi.get(gen, nrhs, || {
+            let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs);
+            let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs);
             (
-                balance_levels_for(&self.up_level_ids, &self.up_fixed, &self.up_per_rhs, &self.up_pscratch, nrhs, self.nshards),
-                balance_levels_for(&self.down_level_ids, &self.down_fixed, &self.down_per_rhs, &self.down_pscratch, nrhs, self.nshards),
+                balance_levels_for(&self.up_level_ids, &up_costs, &self.up_pscratch, nrhs, self.nshards),
+                balance_levels_for(&self.down_level_ids, &down_costs, &self.down_pscratch, nrhs, self.nshards),
             )
         });
         let (up_levels, down_levels) = (&packed.0, &packed.1);
@@ -1169,7 +1631,7 @@ impl H2Schedule {
             s_all[..self.s_len * nrhs].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len * nrhs]);
             for level in up_levels.iter() {
-                exec.run_level(level, bufs, &|ti, buf| {
+                run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), &|ti, buf| {
                     let t = &self.up_tasks[ti];
                     // SAFETY: one slot panel per cluster; child slots joined
                     // in an earlier level.
@@ -1197,7 +1659,7 @@ impl H2Schedule {
         let tslots = SharedVec::new(&mut t_all[..self.t_len * nrhs]);
         let yy = SharedVec::new(y.data_mut());
         for level in down_levels.iter() {
-            exec.run_level(level, bufs, &|ti, buf| {
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.up_tasks.len())), &|ti, buf| {
                 let task = &self.down_tasks[ti];
                 let dl = task.dst.len();
                 // SAFETY: τ's slot panel was written only by its parent in
@@ -1267,6 +1729,9 @@ pub struct H2Plan {
     exec: Arc<dyn Executor>,
     fwd: OnceLock<H2Schedule>,
     adj: OnceLock<H2Schedule>,
+    /// Active calibrated profile, also applied to halves built later.
+    profile: Mutex<Option<Arc<CostProfile>>>,
+    calib: Mutex<CalibInfo>,
     nrows: usize,
     ncols: usize,
 }
@@ -1290,7 +1755,7 @@ impl H2Plan {
 
     /// Lazy plan on the given backend.
     pub fn lazy_with(m: &H2Matrix, exec: Arc<dyn Executor>) -> H2Plan {
-        H2Plan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), nrows: m.nrows(), ncols: m.ncols() }
+        H2Plan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), profile: Mutex::new(None), calib: Mutex::new(CalibInfo::default()), nrows: m.nrows(), ncols: m.ncols() }
     }
 
     /// Backend name (logs / bench rows).
@@ -1299,25 +1764,47 @@ impl H2Plan {
     }
 
     fn fwd(&self, m: &H2Matrix) -> &H2Schedule {
-        self.fwd.get_or_init(|| H2Schedule::build(m, false, &*self.exec))
+        let s = self.fwd.get_or_init(|| H2Schedule::build(m, false, &*self.exec));
+        self.sync_profile(s, true);
+        s
     }
 
     fn adj(&self, m: &H2Matrix) -> &H2Schedule {
-        self.adj.get_or_init(|| H2Schedule::build(m, true, &*self.exec))
+        let s = self.adj.get_or_init(|| H2Schedule::build(m, true, &*self.exec));
+        self.sync_profile(s, false);
+        s
+    }
+
+    /// See [`HPlan::sync_profile`]: heals a profile that raced a half's
+    /// in-flight lazy build.
+    fn sync_profile(&self, s: &H2Schedule, is_fwd: bool) {
+        let Some(want) = self.profile.lock().unwrap().clone() else {
+            return;
+        };
+        let stale = {
+            let cur = s.profile.read().unwrap();
+            !cur.as_ref().is_some_and(|c| Arc::ptr_eq(c, &want))
+        };
+        if stale {
+            let predicted = s.rebalance(&want);
+            if is_fwd {
+                self.calib.lock().unwrap().predicted = predicted;
+            }
+        }
     }
 
     /// y += alpha · M · x.
     pub fn execute(&self, m: &H2Matrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec);
+        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec, None);
     }
 
     /// y += alpha · Mᵀ · x.
     pub fn execute_adjoint(&self, m: &H2Matrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols);
-        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec);
+        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec, None);
     }
 
     /// Y += alpha · M · X: one gemm-shaped schedule pass for the whole batch.
@@ -1325,7 +1812,7 @@ impl H2Plan {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec);
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, None);
     }
 
     /// Y += alpha · Mᵀ · X (gemm-shaped batched adjoint).
@@ -1333,7 +1820,60 @@ impl H2Plan {
         assert_eq!(x.nrows(), self.nrows);
         assert_eq!(y.nrows(), self.ncols);
         assert_eq!(x.ncols(), y.ncols());
-        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec);
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None);
+    }
+
+    /// Re-partition built schedule halves with `profile` costs (atomic swap,
+    /// bitwise output-invariant; see [`HPlan::rebalance`]).
+    pub fn rebalance(&self, profile: &CostProfile) {
+        if !profile.is_usable() {
+            return;
+        }
+        let p = Arc::new(profile.clone());
+        *self.profile.lock().unwrap() = Some(p.clone());
+        let mut predicted = 0.0;
+        if let Some(s) = self.fwd.get() {
+            predicted = s.rebalance(&p);
+        }
+        if let Some(s) = self.adj.get() {
+            s.rebalance(&p);
+        }
+        let mut c = self.calib.lock().unwrap();
+        c.source = profile.source.clone();
+        c.predicted = predicted;
+    }
+
+    /// Timed calibration rounds + least-squares fit + re-balance (see
+    /// [`HPlan::calibrate`]).
+    pub fn calibrate(&self, m: &H2Matrix, warmup_batches: usize) -> CostProfile {
+        let rounds = warmup_batches.max(1);
+        let sched = self.fwd(m);
+        let sink = TimingSink::new(sched.up_tasks.len() + sched.down_tasks.len());
+        let mut arena = Arena::new();
+        let mut rng = Rng::new(0xCA11B + 2);
+        let x = rng.vector(self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, None); // warmup
+        for _ in 0..rounds {
+            sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink));
+        }
+        let mut samples = Vec::new();
+        sched.push_samples(&sink, 1, rounds, &mut samples);
+        let up = sched.up_levels.load();
+        let down = sched.down_levels.load();
+        let measured = (costmodel::sink_makespan(&up, 0, &sink) + costmodel::sink_makespan(&down, sched.up_tasks.len(), &sink)) / rounds as f64;
+        let xm = DMatrix::random(self.ncols, CALIB_RHS, &mut rng);
+        let mut ym = DMatrix::zeros(self.nrows, CALIB_RHS);
+        sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, None); // warmup
+        sink.reset();
+        for _ in 0..rounds {
+            sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink));
+        }
+        sched.push_samples(&sink, CALIB_RHS, rounds, &mut samples);
+        let profile = costmodel::fit(&samples).unwrap_or_default();
+        self.rebalance(&profile);
+        self.calib.lock().unwrap().measured = measured;
+        profile
     }
 
     /// Aggregate over the schedule halves built so far.
@@ -1341,13 +1881,17 @@ impl H2Plan {
         let mut st = PlanStats { decode_kernels: crate::compress::dispatch::kernels_label(), ..PlanStats::default() };
         for sched in [self.fwd.get(), self.adj.get()].into_iter().flatten() {
             st.tasks += sched.up_tasks.len() + sched.down_tasks.len();
-            st.max_shards = st.max_shards.max(sched.max_shards);
+            st.max_shards = st.max_shards.max(sched.max_shards.load(Ordering::Relaxed));
             st.scratch_f64 = st.scratch_f64.max(sched.scratch);
             st.coeff_f64 = st.coeff_f64.max(sched.s_len + sched.t_len);
         }
         if let Some(f) = self.fwd.get() {
-            st.levels = f.up_levels.len() + f.down_levels.len();
+            st.levels = f.up_level_ids.len() + f.down_level_ids.len();
         }
+        let c = self.calib.lock().unwrap();
+        st.cost_source = c.source.clone();
+        st.predicted_makespan = c.predicted;
+        st.measured_makespan = c.measured;
         st
     }
 }

@@ -49,6 +49,13 @@ pub type TaskFn<'a> = dyn Fn(usize, &mut [f64]) + Sync + 'a;
 /// `run_level` invokes `run(t, buf)` exactly once for every task `t` of every
 /// shard, does not return before all invocations completed, and never runs
 /// two invocations concurrently on the same buffer.
+///
+/// The same contract is what makes the calibration instrumentation
+/// ([`super::costmodel::TimingSink`]) backend-agnostic: the plan layer wraps
+/// `run` with a per-chunk timer writing one atomic accumulator slot per task
+/// — exactly-once invocation means one sample per task per product, and the
+/// barrier means accumulators are only read after all writers finished. An
+/// executor must therefore never merge, split or re-issue task invocations.
 pub trait Executor: Send + Sync {
     /// Backend name for logs/bench rows (e.g. `"sharded:4"`).
     fn name(&self) -> String;

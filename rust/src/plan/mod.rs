@@ -44,14 +44,25 @@
 //!
 //! Build plans **after** compressing a matrix: schedules record block ranks
 //! and scratch sizes of the representation they were built from.
+//!
+//! **Cost-model calibration** ([`costmodel`]): the static byte costs can be
+//! replaced by coefficients fitted from measured per-chunk wall times —
+//! [`PlannedOperator::calibrate`] times a few warmup batches and re-balances
+//! in place; `hmatc calibrate` writes the fitted [`CostProfile`] to a
+//! versioned JSON file that `HMATC_COSTS` / `--costs` load back.
+//! Re-balancing only re-partitions the same task lists, so products stay
+//! bitwise identical on every backend; [`PlanStats::cost_source`] records
+//! which cost model is active.
 
 pub mod arena;
+pub mod costmodel;
 pub mod exec;
 pub mod executor;
 pub mod operator;
 pub mod schedule;
 
 pub use arena::{Arena, BufferPool};
+pub use costmodel::{CostProfile, CostSource, KernelClass, TimingSink};
 pub use exec::{H2Plan, HPlan, PlanStats, UniPlan};
 pub use executor::{Executor, ExecutorKind, ShardedExec, StaticLptExec, WorkStealingExec};
 pub use operator::{HOperator, PlannedOperator};

@@ -19,6 +19,7 @@
 //! across backends — only the thread mapping changes.
 
 use super::arena::Arena;
+use super::costmodel::{self, CostProfile};
 use super::exec::{H2Plan, HPlan, PlanStats, UniPlan};
 use super::executor::ExecutorKind;
 use crate::cluster::ClusterTree;
@@ -197,9 +198,12 @@ pub struct PlannedOperator {
 }
 
 impl PlannedOperator {
-    /// Backend from `HMATC_EXEC` (see [`ExecutorKind::from_env`]).
+    /// Backend from `HMATC_EXEC`, LPT costs from `HMATC_COSTS` when it names
+    /// a valid profile (see [`ExecutorKind::from_env`] /
+    /// [`costmodel::costs_from_env`]). The fully explicit `*_with`
+    /// constructors read no environment.
     pub fn from_h(m: Arc<HMatrix>) -> PlannedOperator {
-        PlannedOperator::from_h_with(m, ExecutorKind::from_env())
+        PlannedOperator::from_h_with(m, ExecutorKind::from_env()).with_env_costs()
     }
 
     /// Build the plan for the given execution backend — the schedules are
@@ -210,9 +214,10 @@ impl PlannedOperator {
         PlannedOperator { inner: Inner::H { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
     }
 
-    /// Backend from `HMATC_EXEC` (see [`ExecutorKind::from_env`]).
+    /// Backend from `HMATC_EXEC`, costs from `HMATC_COSTS` (see
+    /// [`PlannedOperator::from_h`]).
     pub fn from_uniform(m: Arc<UniformHMatrix>) -> PlannedOperator {
-        PlannedOperator::from_uniform_with(m, ExecutorKind::from_env())
+        PlannedOperator::from_uniform_with(m, ExecutorKind::from_env()).with_env_costs()
     }
 
     /// Uniform-H plan on the given execution backend.
@@ -222,9 +227,10 @@ impl PlannedOperator {
         PlannedOperator { inner: Inner::Uniform { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
     }
 
-    /// Backend from `HMATC_EXEC` (see [`ExecutorKind::from_env`]).
+    /// Backend from `HMATC_EXEC`, costs from `HMATC_COSTS` (see
+    /// [`PlannedOperator::from_h`]).
     pub fn from_h2(m: Arc<H2Matrix>) -> PlannedOperator {
-        PlannedOperator::from_h2_with(m, ExecutorKind::from_env())
+        PlannedOperator::from_h2_with(m, ExecutorKind::from_env()).with_env_costs()
     }
 
     /// H² plan on the given execution backend.
@@ -232,6 +238,41 @@ impl PlannedOperator {
         let plan = H2Plan::build_with(&m, kind.build());
         let bytes = m.byte_size();
         PlannedOperator { inner: Inner::H2 { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
+    }
+
+    /// Apply the `HMATC_COSTS` profile if the variable names a valid file;
+    /// invalid files warn and leave the static costs active.
+    fn with_env_costs(self) -> PlannedOperator {
+        if let Some(p) = costmodel::costs_from_env() {
+            self.rebalance(&p);
+        }
+        self
+    }
+
+    /// Re-run the LPT partitioning of this operator's plan with calibrated
+    /// per-task costs and atomically swap in the new schedule. The task
+    /// lists (and hence every write range and summation order) are
+    /// untouched, so products are **bitwise identical** before and after —
+    /// only the task→shard mapping changes. The profile source lands in
+    /// [`PlanStats::cost_source`].
+    pub fn rebalance(&self, profile: &CostProfile) {
+        match &self.inner {
+            Inner::H { plan, .. } => plan.rebalance(profile),
+            Inner::Uniform { plan, .. } => plan.rebalance(profile),
+            Inner::H2 { plan, .. } => plan.rebalance(profile),
+        }
+    }
+
+    /// Run `warmup_batches` timed products (single-RHS and batched), fit
+    /// per-kernel-class cost coefficients from the per-chunk wall times, and
+    /// re-balance the plan with them (`cost_source` becomes `online`).
+    /// Returns the fitted profile for saving/inspection.
+    pub fn calibrate(&self, warmup_batches: usize) -> CostProfile {
+        match &self.inner {
+            Inner::H { m, plan } => plan.calibrate(m, warmup_batches),
+            Inner::Uniform { m, plan } => plan.calibrate(m, warmup_batches),
+            Inner::H2 { m, plan } => plan.calibrate(m, warmup_batches),
+        }
     }
 
     /// Name of the execution backend this operator's plan runs on.

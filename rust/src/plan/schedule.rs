@@ -24,8 +24,11 @@ pub struct Shard {
 
 /// Pack `costs.len()` tasks into at most `nshards` shards, balancing the
 /// total cost per shard: longest-processing-time-first greedy (sort by cost
-/// descending, always append to the currently lightest shard). `scratch[i]`
-/// is the per-task scratch requirement folded into `Shard::scratch`.
+/// descending, always append to the currently lightest shard; cost ties are
+/// broken by task count, so runs of equal — including all-zero, as a
+/// degenerate calibrated model can produce for one level — costs spread
+/// round-robin instead of collapsing into shard 0). `scratch[i]` is the
+/// per-task scratch requirement folded into `Shard::scratch`.
 pub fn balance(costs: &[f64], scratch: &[usize], nshards: usize) -> Vec<Shard> {
     let n = costs.len();
     if n == 0 {
@@ -38,7 +41,7 @@ pub fn balance(costs: &[f64], scratch: &[usize], nshards: usize) -> Vec<Shard> {
     for i in order {
         let mut lightest = 0;
         for j in 1..k {
-            if shards[j].cost < shards[lightest].cost {
+            if (shards[j].cost, shards[j].tasks.len()) < (shards[lightest].cost, shards[lightest].tasks.len()) {
                 lightest = j;
             }
         }
@@ -48,6 +51,22 @@ pub fn balance(costs: &[f64], scratch: &[usize], nshards: usize) -> Vec<Shard> {
         sh.scratch = sh.scratch.max(scratch[i]);
     }
     shards.retain(|s| !s.tasks.is_empty());
+    shards
+}
+
+/// Balance one level's task ids by their costs, remapping shard-local
+/// indices back to schedule-global task ids. `costs`/`scratch` are indexed
+/// by global task id. Shared by the plan builders (static costs) and the
+/// calibration re-balancer ([`super::costmodel::rebalance_levels`]).
+pub fn balance_level(ids: &[usize], costs: &[f64], scratch: &[usize], nshards: usize) -> Vec<Shard> {
+    let local_costs: Vec<f64> = ids.iter().map(|&i| costs[i]).collect();
+    let local_scratch: Vec<usize> = ids.iter().map(|&i| scratch[i]).collect();
+    let mut shards = balance(&local_costs, &local_scratch, nshards);
+    for s in &mut shards {
+        for t in &mut s.tasks {
+            *t = ids[*t];
+        }
+    }
     shards
 }
 
@@ -132,6 +151,21 @@ mod tests {
         let shards = balance(&costs, &scratch, 1);
         assert_eq!(shards.len(), 1);
         assert_eq!(shards[0].scratch, 9);
+    }
+
+    #[test]
+    fn balance_spreads_equal_and_zero_costs() {
+        // all-equal (incl. all-zero) costs must not collapse into one shard:
+        // the task-count tie-break keeps every bin populated
+        for cost in [0.0, 1.0] {
+            let costs = vec![cost; 12];
+            let scratch = vec![0usize; 12];
+            let shards = balance(&costs, &scratch, 4);
+            assert_eq!(shards.len(), 4, "cost {cost}");
+            for s in &shards {
+                assert_eq!(s.tasks.len(), 3, "cost {cost}");
+            }
+        }
     }
 
     #[test]

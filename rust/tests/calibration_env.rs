@@ -1,0 +1,85 @@
+//! Cost-profile files and the `HMATC_COSTS` environment fallback.
+//!
+//! This suite lives in its **own test binary** (like
+//! `tests/codec_simd_dispatch.rs`): it mutates `HMATC_COSTS` with
+//! `std::env::set_var`, and glibc's `setenv` racing a concurrent `getenv`
+//! (thread-pool init reads `HMATC_THREADS`, executor selection reads
+//! `HMATC_EXEC`) from another test thread is undefined behavior — isolation
+//! by binary makes the mutation safe. Everything here runs in **one** test
+//! function so even within this binary nothing runs concurrently with the
+//! env mutation.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::lowrank::AcaOptions;
+use hmatc::plan::costmodel::{CodecFamily, CostProfile, CostSource, KernelClass};
+use hmatc::plan::PlannedOperator;
+use hmatc::util::Rng;
+use std::sync::Arc;
+
+fn build_h(level: usize, eps: f64) -> HMatrix {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps))
+}
+
+fn usable_profile(seed: u64) -> CostProfile {
+    let mut rng = Rng::new(seed);
+    CostProfile::from_coeffs(&[
+        (KernelClass::MatBytes, 1e-10 * (1.0 + rng.uniform())),
+        (KernelClass::DenseFlop, 3e-10 * (1.0 + rng.uniform())),
+        (KernelClass::LowRankFlop, 7e-10 * (1.0 + rng.uniform())),
+        (KernelClass::PanelVec, 2e-10 * (1.0 + rng.uniform())),
+        (KernelClass::Decode(CodecFamily::Aflp, 4), 1.5e-9),
+    ])
+}
+
+/// File-level round trip, hostile files, and the env fallback — one test on
+/// purpose (see module docs).
+#[test]
+fn cost_profile_files_and_env_fallback() {
+    let dir = std::env::temp_dir();
+    let good = dir.join("hmatc_calib_test_good.json");
+    let bad = dir.join("hmatc_calib_test_bad.json");
+    let good_s = good.to_str().unwrap();
+    let bad_s = bad.to_str().unwrap();
+    let profile = usable_profile(7);
+    profile.save(good_s).unwrap();
+    std::fs::write(&bad, "{\"version\":1,\"coeffs\":{\"dense_f").unwrap();
+
+    // round trip through the file, provenance recorded
+    let loaded = CostProfile::load(good_s).unwrap();
+    assert_eq!(loaded.to_json().to_string(), profile.to_json().to_string());
+    assert_eq!(loaded.source, CostSource::Calibrated(good_s.to_string()));
+
+    // hostile files error (no panic)
+    assert!(CostProfile::load(bad_s).is_err());
+    assert!(CostProfile::load("/nonexistent/hmatc_costs.json").is_err());
+    assert!(CostProfile::parse("{\"version\":2,\"coeffs\":{}}").is_err());
+    assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{\"decode:zfp:4\":1e-9}}").is_err());
+    assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{\"dense_flop\":-2.0}}").is_err());
+
+    // HMATC_COSTS at a bad/missing file: warn + static costs, never a panic
+    let h = Arc::new(build_h(1, 1e-6));
+    for p in [bad_s, "/nonexistent/hmatc_costs.json"] {
+        std::env::set_var("HMATC_COSTS", p);
+        let op = PlannedOperator::from_h(h.clone());
+        assert_eq!(op.plan_stats().cost_source, CostSource::Static, "HMATC_COSTS={p}");
+    }
+    // a valid file re-balances and is reported as calibrated(<path>); the
+    // per-path load cache must notice the changed variable
+    std::env::set_var("HMATC_COSTS", good_s);
+    let op = PlannedOperator::from_h(h.clone());
+    assert_eq!(op.plan_stats().cost_source, CostSource::Calibrated(good_s.to_string()));
+    // and a second operator under the same path (cached load) agrees
+    let op2 = PlannedOperator::from_h(h.clone());
+    assert_eq!(op2.plan_stats().cost_source, CostSource::Calibrated(good_s.to_string()));
+    std::env::remove_var("HMATC_COSTS");
+
+    let _ = std::fs::remove_file(&good);
+    let _ = std::fs::remove_file(&bad);
+}

@@ -1,0 +1,300 @@
+//! Cost-model calibration invariants: `rebalance`/`calibrate` only
+//! re-partition a plan's task lists, so products must be **bitwise
+//! identical** before and after — for all three formats (H/UH/H²),
+//! compressed and uncompressed, forward + adjoint + multi-RHS, across the
+//! `lpt`/`steal`/`sharded:2` backends. Plus: the re-balancer never increases
+//! the modeled makespan on synthetic skewed cost distributions, the timing
+//! accumulators stay consistent under work-stealing oversubscription and
+//! zero-worker pools, and profile files (incl. `HMATC_COSTS`) reject hostile
+//! input without panicking.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::la::DMatrix;
+use hmatc::lowrank::AcaOptions;
+use hmatc::par::{Scope, StealSet, ThreadPool};
+use hmatc::plan::costmodel::{makespan, rebalance_levels, CodecFamily, CostProfile, CostSource, KernelClass};
+use hmatc::plan::schedule::{balance_level, Shard};
+use hmatc::plan::{ExecutorKind, HOperator, PlannedOperator, TimingSink};
+use hmatc::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn build_h(level: usize, eps: f64) -> HMatrix {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps))
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: row {i}: {x:e} vs {y:e}");
+    }
+}
+
+/// The backends the invariance matrix covers.
+fn kinds() -> [ExecutorKind; 3] {
+    [ExecutorKind::StaticLpt, ExecutorKind::WorkStealing, ExecutorKind::Sharded(2)]
+}
+
+/// A deliberately skewed synthetic profile: decode bytes an order of
+/// magnitude more expensive than plain streamed bytes, flops and vector
+/// traffic in between — very different relative task weights than the
+/// static byte model, so the re-balancer really re-partitions.
+fn skewed_profile(seed: u64) -> CostProfile {
+    let mut rng = Rng::new(seed);
+    let mut coeffs = vec![
+        (KernelClass::MatBytes, 1e-10 * (1.0 + rng.uniform())),
+        (KernelClass::DenseFlop, 3e-10 * (1.0 + rng.uniform())),
+        (KernelClass::LowRankFlop, 7e-10 * (1.0 + rng.uniform())),
+        (KernelClass::PanelVec, 2e-10 * (1.0 + rng.uniform())),
+    ];
+    for w in 1..=8u8 {
+        for fam in [CodecFamily::Aflp, CodecFamily::Fpx32, CodecFamily::Fpx64] {
+            coeffs.push((KernelClass::Decode(fam, w), 1e-9 * (0.5 + rng.uniform()) * w as f64));
+        }
+    }
+    CostProfile::from_coeffs(&coeffs)
+}
+
+/// Forward (twice, pinning arena/packing reuse), adjoint and multi-RHS in
+/// both directions.
+fn run_all(op: &PlannedOperator, n: usize) -> (Vec<f64>, Vec<f64>, DMatrix, DMatrix) {
+    let mut rng = Rng::new(515151);
+    let x = rng.vector(n);
+    let y0 = rng.vector(n);
+    let xm = DMatrix::random(n, 3, &mut rng);
+    let mut fwd = y0.clone();
+    op.apply(0.75, &x, &mut fwd);
+    op.apply(0.75, &x, &mut fwd);
+    let mut adj = y0.clone();
+    op.apply_adjoint(0.75, &x, &mut adj);
+    let mut multi = DMatrix::zeros(n, 3);
+    op.apply_multi(0.75, &xm, &mut multi);
+    let mut multi_adj = DMatrix::zeros(n, 3);
+    op.apply_multi_adjoint(0.75, &xm, &mut multi_adj);
+    (fwd, adj, multi, multi_adj)
+}
+
+fn check_rebalance_invariant(op: &PlannedOperator, n: usize, tag: &str) {
+    let (bf, ba, bm, bma) = run_all(op, n);
+    // two successive re-balances with different skews: the second starts
+    // from an already-calibrated packing
+    for (round, seed) in [(1usize, 99u64), (2, 1234)] {
+        let profile = skewed_profile(seed);
+        op.rebalance(&profile);
+        assert_eq!(op.plan_stats().cost_source, CostSource::Online, "{tag} round {round}");
+        let (f, a, m, ma) = run_all(op, n);
+        assert_bits_eq(&f, &bf, &format!("{tag} fwd round {round}"));
+        assert_bits_eq(&a, &ba, &format!("{tag} adj round {round}"));
+        assert_bits_eq(m.data(), bm.data(), &format!("{tag} multi round {round}"));
+        assert_bits_eq(ma.data(), bma.data(), &format!("{tag} multi-adj round {round}"));
+    }
+}
+
+#[test]
+fn rebalance_is_bitwise_output_invariant_h() {
+    let h0 = build_h(2, 1e-7);
+    let n = h0.nrows();
+    for compress in [false, true] {
+        let mut h = h0.clone();
+        if compress {
+            h.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let h = Arc::new(h);
+        for kind in kinds() {
+            let op = PlannedOperator::from_h_with(h.clone(), kind);
+            check_rebalance_invariant(&op, n, &format!("H compress={compress} [{kind}]"));
+        }
+    }
+}
+
+#[test]
+fn rebalance_is_bitwise_output_invariant_uh() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    for compress in [false, true] {
+        let mut uh = hmatc::uniform::build_from_h(&h, 1e-6, hmatc::uniform::CouplingKind::Combined);
+        if compress {
+            uh.compress(&CompressionConfig { codec: Codec::Fpx, eps: 1e-9, valr: true });
+        }
+        let uh = Arc::new(uh);
+        for kind in kinds() {
+            let op = PlannedOperator::from_uniform_with(uh.clone(), kind);
+            check_rebalance_invariant(&op, n, &format!("UH compress={compress} [{kind}]"));
+        }
+    }
+}
+
+#[test]
+fn rebalance_is_bitwise_output_invariant_h2() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    for compress in [false, true] {
+        let mut h2 = hmatc::h2::build_from_h(&h, 1e-6);
+        if compress {
+            h2.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let h2 = Arc::new(h2);
+        for kind in kinds() {
+            let op = PlannedOperator::from_h2_with(h2.clone(), kind);
+            check_rebalance_invariant(&op, n, &format!("H2 compress={compress} [{kind}]"));
+        }
+    }
+}
+
+/// In-process calibration (timed rounds + fit + re-balance) is also output
+/// invariant — the timed wrapper must not perturb results either.
+#[test]
+fn calibrate_is_bitwise_output_invariant_all_formats() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    let cfg = CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true };
+    let mut hz = h.clone();
+    hz.compress(&cfg);
+    let mut uh = hmatc::uniform::build_from_h(&h, 1e-6, hmatc::uniform::CouplingKind::Combined);
+    uh.compress(&cfg);
+    let mut h2 = hmatc::h2::build_from_h(&h, 1e-6);
+    h2.compress(&cfg);
+    let (hz, uh, h2) = (Arc::new(hz), Arc::new(uh), Arc::new(h2));
+    for kind in kinds() {
+        let ops: Vec<(&str, PlannedOperator)> = vec![
+            ("H", PlannedOperator::from_h_with(hz.clone(), kind)),
+            ("UH", PlannedOperator::from_uniform_with(uh.clone(), kind)),
+            ("H2", PlannedOperator::from_h2_with(h2.clone(), kind)),
+        ];
+        for (name, op) in &ops {
+            let (bf, ba, bm, bma) = run_all(op, n);
+            let profile = op.calibrate(2);
+            for (class, coeff) in profile.coeffs() {
+                assert!(coeff.is_finite() && *coeff >= 0.0, "{name} [{kind}] {}: {coeff}", class.key());
+            }
+            let (f, a, m, ma) = run_all(op, n);
+            assert_bits_eq(&f, &bf, &format!("{name} fwd calibrated [{kind}]"));
+            assert_bits_eq(&a, &ba, &format!("{name} adj calibrated [{kind}]"));
+            assert_bits_eq(m.data(), bm.data(), &format!("{name} multi calibrated [{kind}]"));
+            assert_bits_eq(ma.data(), bma.data(), &format!("{name} multi-adj calibrated [{kind}]"));
+        }
+    }
+}
+
+/// The re-balancer keeps whichever packing models better, so on any cost
+/// distribution — here heavy-tailed skews the static model never saw — the
+/// modeled makespan cannot increase.
+#[test]
+fn calibrated_lpt_never_increases_modeled_makespan_on_synthetic_skew() {
+    let mut rng = Rng::new(0xBEEF);
+    for trial in 0..25usize {
+        let n = 20 + (trial * 17) % 200;
+        let static_costs: Vec<f64> = (0..n).map(|_| (1.0 + rng.uniform()) * 1000.0).collect();
+        // measured costs: static × 10^U(-2,2) — heavy relative skew
+        let true_costs: Vec<f64> = static_costs.iter().map(|c| c * 10f64.powf(rng.range(-2.0, 2.0))).collect();
+        let scratch = vec![0usize; n];
+        let ids: Vec<usize> = (0..n).collect();
+        let (cut1, cut2) = (n / 4, n / 2);
+        let level_ids: Vec<Vec<usize>> = [&ids[..cut1], &ids[cut1..cut2], &ids[cut2..]].iter().map(|l| l.to_vec()).filter(|l| !l.is_empty()).collect();
+        for nshards in [2usize, 4, 9] {
+            let old: Vec<Vec<Shard>> = level_ids.iter().map(|ids| balance_level(ids, &static_costs, &scratch, nshards)).collect();
+            let new = rebalance_levels(&old, &level_ids, &true_costs, &scratch, nshards);
+            let (m_new, m_old) = (makespan(&new, &true_costs), makespan(&old, &true_costs));
+            assert!(m_new <= m_old * (1.0 + 1e-12), "trial {trial} nshards {nshards}: {m_new} > {m_old}");
+            // every task still scheduled exactly once
+            let mut seen = vec![false; n];
+            for lv in &new {
+                for s in lv {
+                    for &t in &s.tasks {
+                        assert!(!seen[t], "task {t} twice");
+                        seen[t] = true;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// timing-accumulator stress (the instrumentation the executors write into)
+// ---------------------------------------------------------------------------
+
+fn spawn_tree<'e>(s: &Scope<'e>, depth: usize, sink: &'e TimingSink, slot: usize, count: &'e AtomicUsize) {
+    sink.add(slot, 1e-9);
+    count.fetch_add(1, Ordering::Relaxed);
+    if depth > 0 {
+        s.spawn(move |s2| spawn_tree(s2, depth - 1, sink, slot, count));
+        s.spawn(move |s2| spawn_tree(s2, depth - 1, sink, slot, count));
+    }
+}
+
+/// One worker, 12 stealing slots, a recursive spawn tree hammering a shared
+/// accumulator slot while the steal run records per-chunk samples: every
+/// sample must land exactly once and untorn, and per-shard totals must sum
+/// to the level total.
+#[test]
+fn timing_sink_consistent_under_steal_oversubscription() {
+    let pool = ThreadPool::new(1);
+    let items = 300usize;
+    let sink = TimingSink::new(items + 1); // slot `items` is the contended tree slot
+    let tree_count = AtomicUsize::new(0);
+    let mut set = StealSet::new();
+    let set_ref = &mut set;
+    let (pool_ref, sink_ref, tree_ref) = (&pool, &sink, &tree_count);
+    pool.scope(|s| {
+        s.spawn(move |s2| spawn_tree(s2, 7, sink_ref, items, tree_ref));
+        s.spawn(move |_| {
+            set_ref.run(pool_ref, 12, items, |_slot, item| {
+                sink_ref.add(item, (item + 1) as f64 * 1e-9);
+                if item % 97 == 0 {
+                    std::thread::yield_now(); // jitter → force real steals
+                }
+            });
+        });
+    });
+    // exactly-once, untorn per-chunk samples (known exact nanosecond values)
+    for item in 0..items {
+        assert_eq!(sink.secs(item), (item + 1) as f64 * 1e-9, "item {item}");
+    }
+    // the contended slot absorbed every concurrent fetch_add
+    let tree_n = tree_count.load(Ordering::Relaxed);
+    assert_eq!(tree_n, (1 << 8) - 1);
+    assert_eq!(sink.secs(items), tree_n as f64 * 1e-9);
+    // per-shard totals (an arbitrary partition of the level) sum to the
+    // level total
+    let shard_bounds = [0usize, 63, 120, 240, items];
+    let mut shard_sum = 0.0;
+    for w in shard_bounds.windows(2) {
+        shard_sum += (w[0]..w[1]).map(|i| sink.secs(i)).sum::<f64>();
+    }
+    let level_total: f64 = (0..items).map(|i| sink.secs(i)).sum();
+    assert!((shard_sum - level_total).abs() < 1e-12, "{shard_sum} vs {level_total}");
+    assert!((sink.total() - level_total - sink.secs(items)).abs() < 1e-12);
+}
+
+#[test]
+fn timing_sink_zero_worker_pool_progresses() {
+    let pool = ThreadPool::new(0);
+    let sink = TimingSink::new(40);
+    let mut set = StealSet::new();
+    for _ in 0..3 {
+        set.run(&pool, 8, 40, |_slot, item| sink.add(item, 2e-9));
+    }
+    for item in 0..40 {
+        // both sides compute 6_nanos as f64 * 1e-9, so equality is exact
+        assert_eq!(sink.secs(item), 6.0 * 1e-9, "item {item}");
+    }
+    sink.reset();
+    assert_eq!(sink.total(), 0.0);
+}
+
+// The profile-file round-trip / hostile-input / `HMATC_COSTS` fallback
+// tests live in `tests/calibration_env.rs` — their **own binary**, because
+// `std::env::set_var` racing any concurrent `getenv` (thread-pool init
+// reading `HMATC_THREADS`, executor selection reading `HMATC_EXEC`) from
+// parallel test threads is undefined behavior in glibc. Same isolation
+// pattern as `tests/codec_simd_dispatch.rs`.

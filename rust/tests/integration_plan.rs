@@ -300,6 +300,23 @@ fn external_ordering_fold_matches_manual_permutation() {
         let want = row_ct.to_external(&yi);
         assert!(rel_l2(ym.col(c), &want) < 1e-12, "multi col {c}");
     }
+
+    // batched adjoint: the external-ordering fold swaps the permutation
+    // roles (gather by the ROW tree, scatter by the COLUMN tree) — pin it
+    // against the internal-ordering recursive adjoint per column, with a
+    // nonzero initial Y (scatter must ADD, not overwrite)
+    let mut zm = DMatrix::zeros(n, nrhs);
+    for c in 0..nrhs {
+        zm.col_mut(c).fill(0.5 + c as f64);
+    }
+    op.apply_multi_adjoint(1.5, &xm, &mut zm);
+    for c in 0..nrhs {
+        let xri = row_ct.to_internal(xm.col(c));
+        let mut zi = vec![0.0; n];
+        hmatc::mvm::mvm_transposed(1.5, &h, &xri, &mut zi);
+        let want: Vec<f64> = col_ct.to_external(&zi).iter().map(|v| v + 0.5 + c as f64).collect();
+        assert!(rel_l2(zm.col(c), &want) < 1e-12, "multi-adjoint col {c}: rel {}", rel_l2(zm.col(c), &want));
+    }
 }
 
 #[test]
