@@ -20,8 +20,10 @@
 
 use hmatc::bench::workloads::{Formats, Problem};
 use hmatc::bench::{bench_fn, default_eps, default_levels, write_bench_json, write_result, Table};
+use hmatc::compress::{Codec, CompressionConfig};
 use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
 use hmatc::plan::{Arena, ExecutorKind, H2Plan, HPlan, UniPlan};
+use hmatc::store::HotCache;
 use hmatc::util::args::Args;
 use hmatc::util::json::Json;
 use hmatc::util::Rng;
@@ -157,6 +159,41 @@ fn main() {
             assert_bitwise(&yc, &ys, &format!("H2 plan [{kind}]"));
         }
         doc.push(("calibrated bitwise ok".to_string(), Json::Bool(true)));
+
+        // storage-tier rows: the same H operator compressed, packed to a
+        // temp HMPK file and re-attached to the mapping — one row streaming
+        // straight off the mapped bytes, one with a roomy decode-once hot
+        // cache (repeated serves skip decode entirely). Both pinned bitwise
+        // against the in-memory compressed plan before benching.
+        {
+            let mut hz = f.h.clone();
+            hz.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+            let path = std::env::temp_dir().join(format!("hmatc_fig06_{}_{level}.hmpk", std::process::id()));
+            let path = path.to_str().unwrap().to_string();
+            hmatc::store::pack_h(&hz, &path).expect("pack H");
+            let mstore = hmatc::store::MappedStore::open(&path).expect("open pack");
+            let mut hm = hz.clone();
+            hmatc::store::attach_h(&mut hm, &mstore).expect("attach pack");
+            let zplan = HPlan::build(&hz);
+            zplan.set_hot_cache(None);
+            let mplan = HPlan::build(&hm);
+            mplan.set_hot_cache(None);
+            let (mut yz, mut ym) = (vec![0.0; n], vec![0.0; n]);
+            zplan.execute(&hz, 1.0, &x, &mut yz, &mut arena);
+            mplan.execute(&hm, 1.0, &x, &mut ym, &mut arena);
+            assert_bitwise(&ym, &yz, "H plan mmap");
+            let r = bench_fn(1, 5, 0.02, || mplan.execute(&hm, 1.0, &x, &mut y, &mut arena));
+            push_row(&mut t, &mut doc, "H", "", "plan mmap", hz.byte_size(), r.median);
+            mplan.set_hot_cache(Some(HotCache::new(256 << 20)));
+            mplan.execute(&hm, 1.0, &x, &mut ym, &mut arena);
+            assert_bitwise(&ym, &yz, "H plan mmap hot-cache");
+            let r = bench_fn(1, 5, 0.02, || mplan.execute(&hm, 1.0, &x, &mut y, &mut arena));
+            push_row(&mut t, &mut doc, "H", "", "plan mmap hot-cache", hz.byte_size(), r.median);
+            drop(mplan);
+            drop(hm);
+            drop(mstore);
+            std::fs::remove_file(&path).ok();
+        }
 
         for algo in MvmAlgorithm::all() {
             match algo {

@@ -28,7 +28,7 @@ pub fn compress(data: &[f64], eps: f64) -> Blob {
         }
     }
     if vmax == 0.0 {
-        return Blob { params: CodecParams::Zero, n, bytes: Vec::new() };
+        return Blob { params: CodecParams::Zero, n, bytes: Vec::new().into() };
     }
 
     let e_bits = exponent_bits_for(vmin, vmax);
@@ -107,7 +107,7 @@ pub fn compress(data: &[f64], eps: f64) -> Blob {
         bytes[off..off + bytes_per as usize].copy_from_slice(&word.to_le_bytes()[..bytes_per as usize]);
     }
 
-    Blob { params: CodecParams::Aflp { bytes_per, e_bits: e_bits as u8, scale: vmin }, n, bytes }
+    Blob { params: CodecParams::Aflp { bytes_per, e_bits: e_bits as u8, scale: vmin }, n, bytes: bytes.into() }
 }
 
 /// Bulk decode.

@@ -534,6 +534,109 @@ fn s_axpy_panel<D: Decode, const B: usize>(
 }
 
 // ---------------------------------------------------------------------------
+// Hot-panel kernels (cached decoded values)
+// ---------------------------------------------------------------------------
+//
+// When the storage tier's hot cache holds a blob's fully decoded panel, the
+// cursor serves from these instead of decoding. They MUST reproduce the
+// fused kernels' floating-point operation order bitwise: the scalar and
+// AVX2 kernels both accumulate stride-4 lanes over the [`fast8`] window,
+// run the tail serially into lane 0, and reduce as `(s0+s1)+(s2+s3)` — so
+// one hot kernel parameterized by the original blob's `fast8` boundary is
+// bit-identical to either ISA level. (axpy/range are elementwise, where
+// order per output element is trivially preserved.) Pinned by the
+// `hot_cache_*_bitwise` tests below and `tests/store_roundtrip.rs`.
+
+fn hot_dot(vals: &[f64], fast: usize, begin: usize, x: &[f64]) -> f64 {
+    let n = x.len();
+    let mut s0 = 0.0f64;
+    let mut s1 = 0.0f64;
+    let mut s2 = 0.0f64;
+    let mut s3 = 0.0f64;
+    let mut i = 0usize;
+    while i + 4 <= fast {
+        s0 += vals[begin + i] * x[i];
+        s1 += vals[begin + i + 1] * x[i + 1];
+        s2 += vals[begin + i + 2] * x[i + 2];
+        s3 += vals[begin + i + 3] * x[i + 3];
+        i += 4;
+    }
+    while i < n {
+        s0 += vals[begin + i] * x[i];
+        i += 1;
+    }
+    (s0 + s1) + (s2 + s3)
+}
+
+fn hot_axpy(vals: &[f64], begin: usize, w: f64, y: &mut [f64]) {
+    for (k, o) in y.iter_mut().enumerate() {
+        *o += w * vals[begin + k];
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn hot_dot_panel(vals: &[f64], fast: usize, begin: usize, len: usize, alpha: f64, x: &[f64], xstride: usize, nrhs: usize, acc: &mut [f64], astride: usize) {
+    let mut c0 = 0usize;
+    while c0 < nrhs {
+        let g = PANEL_GROUP.min(nrhs - c0);
+        let mut s = [[0.0f64; 4]; PANEL_GROUP];
+        let mut i = 0usize;
+        while i + 4 <= fast {
+            let v0 = vals[begin + i];
+            let v1 = vals[begin + i + 1];
+            let v2 = vals[begin + i + 2];
+            let v3 = vals[begin + i + 3];
+            for (ci, sc) in s[..g].iter_mut().enumerate() {
+                let xc = &x[(c0 + ci) * xstride..];
+                sc[0] += v0 * xc[i];
+                sc[1] += v1 * xc[i + 1];
+                sc[2] += v2 * xc[i + 2];
+                sc[3] += v3 * xc[i + 3];
+            }
+            i += 4;
+        }
+        while i < len {
+            let v = vals[begin + i];
+            for (ci, sc) in s[..g].iter_mut().enumerate() {
+                sc[0] += v * x[(c0 + ci) * xstride + i];
+            }
+            i += 1;
+        }
+        for (ci, sc) in s[..g].iter().enumerate() {
+            acc[(c0 + ci) * astride] += alpha * ((sc[0] + sc[1]) + (sc[2] + sc[3]));
+        }
+        c0 += g;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn hot_axpy_panel(vals: &[f64], begin: usize, len: usize, alpha: f64, wv: &[f64], wstride: usize, nrhs: usize, y: &mut [f64], ystride: usize) {
+    let mut c0 = 0usize;
+    while c0 < nrhs {
+        let g = PANEL_GROUP.min(nrhs - c0);
+        let mut w = [0.0f64; PANEL_GROUP];
+        let mut any = false;
+        for (ci, wc) in w[..g].iter_mut().enumerate() {
+            *wc = alpha * wv[(c0 + ci) * wstride];
+            any |= *wc != 0.0;
+        }
+        if !any {
+            c0 += g;
+            continue;
+        }
+        for i in 0..len {
+            let v = vals[begin + i];
+            for (ci, &wc) in w[..g].iter().enumerate() {
+                if wc != 0.0 {
+                    y[(c0 + ci) * ystride + i] += wc * v;
+                }
+            }
+        }
+        c0 += g;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Zero-codec kernels
 // ---------------------------------------------------------------------------
 
@@ -1099,13 +1202,20 @@ pub struct DecodeCursor<'a> {
     pos: usize,
     r: Resolved,
     t: &'static KernelTable,
+    /// Fully decoded panel from the storage tier's hot cache (when a cache
+    /// scope is installed and kept this blob). Serving from it reproduces
+    /// the fused kernels' operation order bitwise — see the hot kernels.
+    hot: Option<std::sync::Arc<Vec<f64>>>,
 }
 
 impl<'a> DecodeCursor<'a> {
-    /// Resolve `blob` for streaming from position 0.
+    /// Resolve `blob` for streaming from position 0. Consults the storage
+    /// tier's hot cache for the calling task's scope; on a hit every decode
+    /// below is replaced by cached reads (bitwise-identical results).
     pub fn new(blob: &'a Blob) -> DecodeCursor<'a> {
         let (r, t) = resolve(&blob.params);
-        DecodeCursor { bytes: &blob.bytes, n: blob.n, pos: 0, r, t }
+        let hot = crate::store::hot::cached_decode(blob);
+        DecodeCursor { bytes: &blob.bytes, n: blob.n, pos: 0, r, t, hot }
     }
 
     /// Total number of values in the underlying blob.
@@ -1143,6 +1253,9 @@ impl<'a> DecodeCursor<'a> {
     #[inline]
     pub fn get(&self, i: usize) -> f64 {
         debug_assert!(i < self.n);
+        if let Some(h) = &self.hot {
+            return h[i];
+        }
         (self.t.get)(&self.r, self.bytes, i)
     }
 
@@ -1150,7 +1263,11 @@ impl<'a> DecodeCursor<'a> {
     pub fn next_chunk(&mut self, out: &mut [f64]) {
         let end = self.pos + out.len();
         debug_assert!(end <= self.n);
-        (self.t.range)(&self.r, self.bytes, self.pos, end, out);
+        if let Some(h) = &self.hot {
+            out.copy_from_slice(&h[self.pos..end]);
+        } else {
+            (self.t.range)(&self.r, self.bytes, self.pos, end, out);
+        }
         self.pos = end;
     }
 
@@ -1159,7 +1276,12 @@ impl<'a> DecodeCursor<'a> {
     #[inline]
     pub fn dot(&mut self, x: &[f64]) -> f64 {
         debug_assert!(self.pos + x.len() <= self.n);
-        let s = (self.t.dot)(&self.r, self.bytes, self.pos, x);
+        let s = if let Some(h) = &self.hot {
+            let fast = fast8(self.bytes.len(), self.r.b, self.pos, x.len());
+            hot_dot(h, fast, self.pos, x)
+        } else {
+            (self.t.dot)(&self.r, self.bytes, self.pos, x)
+        };
         self.pos += x.len();
         s
     }
@@ -1168,7 +1290,11 @@ impl<'a> DecodeCursor<'a> {
     #[inline]
     pub fn axpy(&mut self, w: f64, y: &mut [f64]) {
         debug_assert!(self.pos + y.len() <= self.n);
-        (self.t.axpy)(&self.r, self.bytes, self.pos, w, y);
+        if let Some(h) = &self.hot {
+            hot_axpy(h, self.pos, w, y);
+        } else {
+            (self.t.axpy)(&self.r, self.bytes, self.pos, w, y);
+        }
         self.pos += y.len();
     }
 
@@ -1180,7 +1306,12 @@ impl<'a> DecodeCursor<'a> {
     #[inline]
     pub fn dot_panel(&mut self, len: usize, alpha: f64, x: &[f64], xstride: usize, nrhs: usize, acc: &mut [f64], astride: usize) {
         debug_assert!(self.pos + len <= self.n);
-        (self.t.dot_panel)(&self.r, self.bytes, self.pos, len, alpha, x, xstride, nrhs, acc, astride);
+        if let Some(h) = &self.hot {
+            let fast = fast8(self.bytes.len(), self.r.b, self.pos, len);
+            hot_dot_panel(h, fast, self.pos, len, alpha, x, xstride, nrhs, acc, astride);
+        } else {
+            (self.t.dot_panel)(&self.r, self.bytes, self.pos, len, alpha, x, xstride, nrhs, acc, astride);
+        }
         self.pos += len;
     }
 
@@ -1191,7 +1322,11 @@ impl<'a> DecodeCursor<'a> {
     #[inline]
     pub fn axpy_panel(&mut self, len: usize, alpha: f64, wvals: &[f64], wstride: usize, nrhs: usize, y: &mut [f64], ystride: usize) {
         debug_assert!(self.pos + len <= self.n);
-        (self.t.axpy_panel)(&self.r, self.bytes, self.pos, len, alpha, wvals, wstride, nrhs, y, ystride);
+        if let Some(h) = &self.hot {
+            hot_axpy_panel(h, self.pos, len, alpha, wvals, wstride, nrhs, y, ystride);
+        } else {
+            (self.t.axpy_panel)(&self.r, self.bytes, self.pos, len, alpha, wvals, wstride, nrhs, y, ystride);
+        }
         self.pos += len;
     }
 }
@@ -1345,5 +1480,103 @@ mod tests {
         assert!(["scalar", "avx2"].contains(&simd_name()));
         let l = kernels_label();
         assert!(l.starts_with(kernel_mode_name()), "{l}");
+    }
+
+    /// Every cursor operation served from the hot cache must match the
+    /// streamed fused kernels bit for bit, across codecs, widths, positions
+    /// and batch shapes — the contract that makes caching a pure speed knob.
+    #[test]
+    fn hot_cache_cursor_ops_bitwise() {
+        let cache = crate::store::HotCache::new(1 << 22);
+        let mut rng = Rng::new(321);
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            for &eps in &[1e-2, 1e-6, 1e-10, 1e-14] {
+                let data = sample(173, 99);
+                let blob = Blob::compress(codec, &data, eps);
+                let nrhs = 11; // > PANEL_GROUP: exercises grouping
+                let x: Vec<f64> = (0..blob.n * nrhs).map(|_| rng.normal()).collect();
+                let wv: Vec<f64> = (0..nrhs * 3).map(|i| if i % 5 == 0 { 0.0 } else { rng.normal() }).collect();
+                for begin in [0usize, 1, 7, 64, 170] {
+                    let len = blob.n - begin;
+                    let cold = || {
+                        let mut c = DecodeCursor::new(&blob);
+                        assert!(c.hot.is_none());
+                        c.seek(begin);
+                        c
+                    };
+                    let hot = || {
+                        let mut c = crate::store::hot::scope(&cache, || DecodeCursor::new(&blob));
+                        assert!(c.hot.is_some(), "blob must be cached");
+                        c.seek(begin);
+                        c
+                    };
+                    // get / next_chunk
+                    assert_eq!(cold().get(begin).to_bits(), hot().get(begin).to_bits());
+                    let (mut a, mut b) = (vec![0.0; len], vec![0.0; len]);
+                    cold().next_chunk(&mut a);
+                    hot().next_chunk(&mut b);
+                    assert_eq!(a, b);
+                    // dot / axpy
+                    let d1 = cold().dot(&x[..len]);
+                    let d2 = hot().dot(&x[..len]);
+                    assert_eq!(d1.to_bits(), d2.to_bits(), "{codec:?} eps {eps} begin {begin}");
+                    let (mut y1, mut y2) = (vec![0.1; len], vec![0.1; len]);
+                    cold().axpy(1.75, &mut y1);
+                    hot().axpy(1.75, &mut y2);
+                    for (u, v) in y1.iter().zip(&y2) {
+                        assert_eq!(u.to_bits(), v.to_bits());
+                    }
+                    // panel dot / axpy (strided accumulators, zero weights)
+                    let (mut a1, mut a2) = (vec![0.3; nrhs * 3], vec![0.3; nrhs * 3]);
+                    cold().dot_panel(len, 0.9, &x, blob.n, nrhs, &mut a1, 3);
+                    hot().dot_panel(len, 0.9, &x, blob.n, nrhs, &mut a2, 3);
+                    for (u, v) in a1.iter().zip(&a2) {
+                        assert_eq!(u.to_bits(), v.to_bits());
+                    }
+                    let (mut p1, mut p2) = (vec![0.2; blob.n * nrhs], vec![0.2; blob.n * nrhs]);
+                    cold().axpy_panel(len, 1.1, &wv, 3, nrhs, &mut p1, blob.n);
+                    hot().axpy_panel(len, 1.1, &wv, 3, nrhs, &mut p2, blob.n);
+                    for (u, v) in p1.iter().zip(&p2) {
+                        assert_eq!(u.to_bits(), v.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    /// A blob whose payload sits at an odd offset inside a shared segment
+    /// (mapped-file layout) must decode bitwise-identically to the same
+    /// payload in its own heap buffer: no kernel may assume aligned backing
+    /// bytes. Regression for the storage tier's borrowed-slice audit.
+    #[test]
+    fn misaligned_backing_bytes_decode_bitwise() {
+        use crate::store::{BlobBytes, Segment};
+        use std::sync::Arc;
+        for codec in [Codec::Aflp, Codec::Fpx] {
+            for &eps in &[1e-3, 1e-7, 1e-12] {
+                let data = sample(97, 5);
+                let blob = Blob::compress(codec, &data, eps);
+                // rebuild the payload at deliberately misaligned offsets
+                for pad in [1usize, 3, 7] {
+                    let mut buf = vec![0xA5u8; pad];
+                    buf.extend_from_slice(&blob.bytes);
+                    let len = blob.bytes.len();
+                    let seg = Arc::new(Segment::Anon(buf));
+                    let shifted = Blob { params: blob.params, n: blob.n, bytes: BlobBytes::new(seg, pad, len) };
+                    let (a, b) = (blob.to_vec(), shifted.to_vec());
+                    for (u, v) in a.iter().zip(&b) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{codec:?} pad {pad}");
+                    }
+                    let mut rng = Rng::new(8);
+                    let x = rng.vector(blob.n);
+                    let d1 = DecodeCursor::new(&blob).dot(&x);
+                    let d2 = DecodeCursor::new(&shifted).dot(&x);
+                    assert_eq!(d1.to_bits(), d2.to_bits());
+                    for i in [0usize, 13, 96] {
+                        assert_eq!(blob.get(i).to_bits(), shifted.get(i).to_bits());
+                    }
+                }
+            }
+        }
     }
 }

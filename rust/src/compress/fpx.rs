@@ -23,7 +23,7 @@ pub fn compress(data: &[f64], eps: f64) -> Blob {
         }
     }
     if vmax == 0.0 {
-        return Blob { params: CodecParams::Zero, n, bytes: Vec::new() };
+        return Blob { params: CodecParams::Zero, n, bytes: Vec::new().into() };
     }
 
     let m = mantissa_bits_for(eps.clamp(f64::MIN_POSITIVE, 0.5));
@@ -36,7 +36,7 @@ pub fn compress(data: &[f64], eps: f64) -> Blob {
         let mut bytes_per = (9 + m).div_ceil(8).max(2) as usize; // sign+8 exp+m mantissa
         while bytes_per <= 4 {
             if let Some(bytes) = pack32(data, bytes_per) {
-                return Blob { params: CodecParams::Fpx32 { bytes_per: bytes_per as u8 }, n, bytes };
+                return Blob { params: CodecParams::Fpx32 { bytes_per: bytes_per as u8 }, n, bytes: bytes.into() };
             }
             bytes_per += 1;
         }
@@ -46,7 +46,7 @@ pub fn compress(data: &[f64], eps: f64) -> Blob {
     let mut bytes_per = (12 + m).div_ceil(8).clamp(3, 8) as usize; // sign+11 exp+m mantissa
     loop {
         if let Some(bytes) = pack64(data, bytes_per) {
-            return Blob { params: CodecParams::Fpx64 { bytes_per: bytes_per as u8 }, n, bytes };
+            return Blob { params: CodecParams::Fpx64 { bytes_per: bytes_per as u8 }, n, bytes: bytes.into() };
         }
         bytes_per += 1; // bytes_per = 8 has no rounding step, so this ends
     }

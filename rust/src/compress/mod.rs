@@ -79,8 +79,10 @@ pub struct Blob {
     pub params: CodecParams,
     /// Number of values.
     pub n: usize,
-    /// Packed little-endian payload, `n * bytes_per` bytes.
-    pub bytes: Vec<u8>,
+    /// Packed little-endian payload, `n * bytes_per` bytes — a slice of a
+    /// reference-counted [`crate::store::Segment`] (anonymous memory by
+    /// default, or a shared file mapping after `store::attach_*`).
+    pub bytes: crate::store::BlobBytes,
 }
 
 /// Fixed per-blob header overhead charged in memory accounting

@@ -1,5 +1,5 @@
 //! Coordinator metrics: request counts, latency percentiles, effective
-//! bandwidth.
+//! bandwidth, and the operator's decode-cache hit/miss counters.
 
 use crate::util::stats;
 use std::sync::Mutex;
@@ -18,6 +18,10 @@ struct Inner {
     latencies: Vec<f64>,
     mvm_seconds: f64,
     bytes_touched: f64,
+    // latest cumulative hot-cache counters polled from the operator
+    // (absolutes, not deltas — the cache owns the running totals)
+    cache_hits: u64,
+    cache_misses: u64,
 }
 
 /// Immutable snapshot for reporting.
@@ -30,6 +34,10 @@ pub struct MetricsSnapshot {
     pub p99_latency: f64,
     pub mvm_seconds: f64,
     pub effective_gbs: f64,
+    /// Cumulative decode-once hot-cache hits (0 when no cache is active).
+    pub cache_hits: u64,
+    /// Cumulative decode-once hot-cache misses (0 when no cache is active).
+    pub cache_misses: u64,
 }
 
 impl Metrics {
@@ -47,6 +55,14 @@ impl Metrics {
         g.bytes_touched += bytes as f64;
     }
 
+    /// Store the operator's cumulative hot-cache counters (polled after each
+    /// batch; the values are running totals, so the latest poll wins).
+    pub fn record_cache(&self, hits: u64, misses: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.cache_hits = hits;
+        g.cache_misses = misses;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -57,6 +73,20 @@ impl Metrics {
             p99_latency: stats::percentile(&g.latencies, 99.0),
             mvm_seconds: g.mvm_seconds,
             effective_gbs: if g.mvm_seconds > 0.0 { g.bytes_touched / g.mvm_seconds / 1e9 } else { 0.0 },
+            cache_hits: g.cache_hits,
+            cache_misses: g.cache_misses,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Hot-cache hit rate in [0, 1]; 0 when nothing was cached.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
         }
     }
 }
@@ -76,5 +106,19 @@ mod tests {
         assert!((s.avg_batch - 3.0).abs() < 1e-12);
         assert!((s.effective_gbs - 10.0).abs() < 1e-9);
         assert!(s.p99_latency >= s.p50_latency);
+        assert_eq!(s.cache_hits, 0);
+        assert_eq!(s.cache_misses, 0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn cache_counters_are_absolutes() {
+        let m = Metrics::new();
+        m.record_cache(3, 1);
+        m.record_cache(30, 10); // later poll supersedes, not accumulates
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 30);
+        assert_eq!(s.cache_misses, 10);
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
     }
 }

@@ -152,6 +152,9 @@ fn worker_loop(m: Arc<dyn HOperator>, policy: BatchPolicy, rx: Receiver<Request>
         // metrics immediately after receiving their response
         let latencies: Vec<f64> = batch.iter().map(|r| r.submitted.elapsed().as_secs_f64()).collect();
         metrics.record_batch(b, mvm_secs, bytes, &latencies);
+        if let Some((hits, misses)) = m.cache_counters() {
+            metrics.record_cache(hits, misses);
+        }
         for (c, r) in batch.into_iter().enumerate() {
             let latency = r.submitted.elapsed().as_secs_f64();
             let _ = r.reply.send(Response { id: r.id, y: y.col(c).to_vec(), latency, batch_size: b });

@@ -94,6 +94,20 @@ impl TransferMat {
             TransferMat::Z { blob, .. } => blob.byte_size(),
         }
     }
+
+    /// Visit the compressed payload blob, if any (storage-tier walkers).
+    pub fn for_each_blob(&self, f: &mut dyn FnMut(&Blob)) {
+        if let TransferMat::Z { blob, .. } = self {
+            f(blob);
+        }
+    }
+
+    /// Mutable variant of [`TransferMat::for_each_blob`].
+    pub fn for_each_blob_mut(&mut self, f: &mut dyn FnMut(&mut Blob)) {
+        if let TransferMat::Z { blob, .. } = self {
+            f(blob);
+        }
+    }
 }
 
 /// Nested basis over a cluster tree.

@@ -143,6 +143,43 @@ impl BlockData {
         }
     }
 
+    /// Visit every compressed payload blob of this block, in a fixed
+    /// deterministic order (storage-tier walkers: packing, attach,
+    /// residency, prefetch extents).
+    pub fn for_each_blob(&self, f: &mut dyn FnMut(&Blob)) {
+        match self {
+            BlockData::Dense(_) | BlockData::LowRank(_) => {}
+            BlockData::ZDense(z) => f(&z.blob),
+            BlockData::ZLowRank(z) => {
+                f(&z.u);
+                f(&z.v);
+            }
+            BlockData::ZLowRankValr(z) => {
+                for b in z.wcols.iter().chain(z.xcols.iter()) {
+                    f(b);
+                }
+            }
+        }
+    }
+
+    /// Mutable variant of [`BlockData::for_each_blob`] (same order) — used
+    /// to re-point payloads into a mapped segment.
+    pub fn for_each_blob_mut(&mut self, f: &mut dyn FnMut(&mut Blob)) {
+        match self {
+            BlockData::Dense(_) | BlockData::LowRank(_) => {}
+            BlockData::ZDense(z) => f(&mut z.blob),
+            BlockData::ZLowRank(z) => {
+                f(&mut z.u);
+                f(&mut z.v);
+            }
+            BlockData::ZLowRankValr(z) => {
+                for b in z.wcols.iter_mut().chain(z.xcols.iter_mut()) {
+                    f(b);
+                }
+            }
+        }
+    }
+
     /// Dense reconstruction (tests / error measurement).
     pub fn to_dense(&self) -> DMatrix {
         match self {

@@ -10,7 +10,9 @@
 //!   nested bases) — over geometric cluster trees ([`cluster`]) built for a
 //!   BEM model problem ([`geometry`], [`kernelfn`]);
 //! * the error-adaptive floating point codecs of §4 — AFLP, FPX and the
-//!   per-column VALR scheme — in [`compress`];
+//!   per-column VALR scheme — in [`compress`], backed by the out-of-core
+//!   [`store`] tier (reference-counted segments, `hmatc pack` + mmap-served
+//!   operators, level-pipelined prefetch, decode-once hot cache);
 //! * every matrix-vector multiplication algorithm of §3/§4 (Algorithms 1–8)
 //!   in [`mvm`], running on a custom fork-join substrate ([`par`]): a
 //!   work-sharing scoped thread pool plus a Chase–Lev-deque work-stealing
@@ -58,6 +60,7 @@ pub mod cluster;
 pub mod kernelfn;
 pub mod lowrank;
 pub mod compress;
+pub mod store;
 pub mod hmatrix;
 pub mod uniform;
 pub mod h2;

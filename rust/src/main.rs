@@ -4,8 +4,10 @@
 //! hmatc info
 //! hmatc build     --level 4 --eps 1e-6 [--fmt h|uh|h2] [--codec aflp|fpx] [--compress]
 //! hmatc mvm       --level 4 --eps 1e-6 --fmt h2 --algo "row wise" [--compress --codec aflp]
+//! hmatc pack      --level 4 --eps 1e-6 [--fmt h|uh|h2] [--compress] --out operator.hmpk
 //! hmatc serve     --level 4 --eps 1e-6 --requests 256 --batch 8 [--fmt h|uh|h2] [--plan]
 //!                 [--executor lpt|steal|sharded:K] [--compress] [--costs costs.json]
+//!                 [--mmap operator.hmpk]
 //! hmatc calibrate [--level 3 --eps 1e-6 --fmt h|uh|h2 --rounds 8] [--quick] [--out costs.json]
 //! hmatc solve     --level 3 --eps 1e-6 [--compress]
 //! hmatc roofline
@@ -16,6 +18,12 @@
 //! sub-pools. `calibrate` fits measured per-kernel-class cost coefficients
 //! and writes a versioned profile JSON; `--costs` (or `HMATC_COSTS`) loads
 //! one back and re-balances the plan schedules with it.
+//!
+//! `pack` writes every compressed payload into a checksummed `HMPK` file;
+//! `serve --mmap` (same build/compress flags) re-points the operator's blobs
+//! into the mapping — decode streams straight off the page cache, the plan
+//! prefetches the next level's extents at each barrier, and
+//! `HMATC_CACHE_BYTES` bounds a decode-once hot-panel cache.
 
 use hmatc::bench::{bench_fn, measure_peak_bandwidth};
 use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
@@ -40,12 +48,13 @@ fn main() {
         "info" => info(),
         "build" => build_cmd(&args),
         "mvm" => mvm_cmd(&args),
+        "pack" => pack_cmd(&args),
         "serve" => serve_cmd(&args),
         "calibrate" => calibrate_cmd(&args),
         "solve" => solve_cmd(&args),
         "roofline" => roofline_cmd(),
         other => {
-            eprintln!("unknown command '{other}'. Commands: info build mvm serve calibrate solve roofline");
+            eprintln!("unknown command '{other}'. Commands: info build mvm pack serve calibrate solve roofline");
             std::process::exit(2);
         }
     }
@@ -65,6 +74,12 @@ fn info() {
         println!("costs: {costs} (HMATC_COSTS)");
     }
     println!("codec kernels: {} (HMATC_CODEC_KERNELS=fused|blockwise)", hmatc::compress::dispatch::kernel_mode_name());
+    // store tier: residency is per-operator (printed by `serve`); here we
+    // report how the environment will configure it
+    match hmatc::store::HotCache::from_env() {
+        Some(c) => println!("store: hot cache {} budget (HMATC_CACHE_BYTES), prefetch {}", fmt_bytes(c.capacity()), if hmatc::store::prefetch::enabled() { "on" } else { "off (HMATC_PREFETCH=0)" }),
+        None => println!("store: hot cache off (set HMATC_CACHE_BYTES to enable), prefetch {}", if hmatc::store::prefetch::enabled() { "on" } else { "off (HMATC_PREFETCH=0)" }),
+    }
     #[cfg(feature = "pjrt")]
     {
         match hmatc::runtime::PjrtEngine::new(hmatc::runtime::DEFAULT_ARTIFACTS_DIR) {
@@ -216,6 +231,62 @@ fn mvm_cmd(args: &Args) {
     }
 }
 
+/// `hmatc pack`: build the model problem with the same flags `serve` uses,
+/// then write every blob payload into one checksummed HMPK file that
+/// `serve --mmap` (with identical flags) maps back in. Without `--compress`
+/// there are no blob payloads and the pack is empty — legal, but pointless,
+/// so we say so.
+fn pack_cmd(args: &Args) {
+    let p = problem(args);
+    let h = build_h(args, &p);
+    let eps = args.num_or("eps", 1e-6f64);
+    let fmt = args.str_or("fmt", "h");
+    let compress = args.flag("compress");
+    let cfg = cfg_from(args);
+    let out = args.str_or("out", "operator.hmpk");
+    let res = match fmt.as_str() {
+        "h" => {
+            let mut h = h;
+            if compress {
+                h.compress(&cfg);
+            }
+            hmatc::store::pack_h(&h, &out)
+        }
+        "uh" => {
+            let mut uh = hmatc::uniform::build_from_h(&h, eps, hmatc::uniform::CouplingKind::Combined);
+            if compress {
+                uh.compress(&cfg);
+            }
+            hmatc::store::pack_uh(&uh, &out)
+        }
+        "h2" => {
+            let mut h2 = hmatc::h2::build_from_h(&h, eps);
+            if compress {
+                h2.compress(&cfg);
+            }
+            hmatc::store::pack_h2(&h2, &out)
+        }
+        other => {
+            eprintln!("unknown format '{other}' (h|uh|h2)");
+            std::process::exit(2);
+        }
+    };
+    match res {
+        Ok(s) => {
+            println!("packed {} extents, payload {}, file {} → {out}", s.extents, fmt_bytes(s.payload_bytes), fmt_bytes(s.file_bytes));
+            if s.extents == 0 {
+                println!("note: no compressed payloads (pass --compress); the pack is valid but empty");
+            } else {
+                println!("serve it with: hmatc serve … --mmap {out} (same --level/--eps/--fmt/--compress/--codec flags)");
+            }
+        }
+        Err(e) => {
+            eprintln!("pack: cannot write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn serve_cmd(args: &Args) {
     let p = problem(args);
     let h = build_h(args, &p);
@@ -237,11 +308,31 @@ fn serve_cmd(args: &Args) {
         }
         po
     };
+    // --mmap re-points every compressed blob into a pack file written by
+    // `hmatc pack` with the same build/compress flags; attach failures are
+    // fatal because serving a half-mapped operator would be misleading
+    let store = args.get("mmap").map(|path| match hmatc::store::MappedStore::open(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("--mmap {path}: {e}");
+            std::process::exit(2);
+        }
+    });
+    let attach_or_die = |r: Result<(), String>| {
+        if let Err(e) = r {
+            eprintln!("--mmap: {e} (pack and serve must use the same build/compress flags)");
+            std::process::exit(2);
+        }
+    };
     let op: Arc<dyn HOperator> = match fmt.as_str() {
         "h" => {
             let mut h = h;
             if args.flag("compress") {
                 h.compress(&cfg_from(args));
+            }
+            if let Some(store) = &store {
+                attach_or_die(hmatc::store::attach_h(&mut h, store));
+                println!("{}", hmatc::store::residency_h(&h, None).label());
             }
             let h = Arc::new(h);
             if plan {
@@ -255,6 +346,10 @@ fn serve_cmd(args: &Args) {
             if args.flag("compress") {
                 uh.compress(&cfg_from(args));
             }
+            if let Some(store) = &store {
+                attach_or_die(hmatc::store::attach_uh(&mut uh, store));
+                println!("{}", hmatc::store::residency_uh(&uh, None).label());
+            }
             let uh = Arc::new(uh);
             if plan {
                 Arc::new(planned(PlannedOperator::from_uniform_with(uh, kind)))
@@ -266,6 +361,10 @@ fn serve_cmd(args: &Args) {
             let mut h2 = hmatc::h2::build_from_h(&h, eps);
             if args.flag("compress") {
                 h2.compress(&cfg_from(args));
+            }
+            if let Some(store) = &store {
+                attach_or_die(hmatc::store::attach_h2(&mut h2, store));
+                println!("{}", hmatc::store::residency_h2(&h2, None).label());
             }
             let h2 = Arc::new(h2);
             if plan {
@@ -288,6 +387,7 @@ fn serve_cmd(args: &Args) {
     let nreq = args.num_or("requests", 256usize);
     let batch = args.num_or("batch", 8usize);
     let n = op.ncols();
+    let op_stats = op.clone();
     let server = Arc::new(MvmServer::start(
         op,
         BatchPolicy { max_batch: batch, linger: std::time::Duration::from_micros(args.num_or("linger-us", 200u64)) },
@@ -320,6 +420,11 @@ fn serve_cmd(args: &Args) {
         fmt_secs(m.p99_latency),
         m.effective_gbs
     );
+    if let Some((hits, misses)) = op_stats.cache_counters() {
+        let total = hits + misses;
+        let rate = if total == 0 { 0.0 } else { 100.0 * hits as f64 / total as f64 };
+        println!("hot cache: {hits} hits / {misses} misses ({rate:.1}% hit rate)");
+    }
 }
 
 /// Cost profile from `--costs` (falling back to `HMATC_COSTS`); invalid

@@ -82,6 +82,12 @@ pub enum KernelClass {
     LowRankFlop,
     /// Vector/panel traffic bytes — the panel-width scaling term. Per RHS.
     PanelVec,
+    /// Residency feature of the storage tier: compressed payload bytes
+    /// resolved from a *mapped* segment rather than anonymous memory.
+    /// Additive on top of the decode classes, so calibration can price a
+    /// cold-mapped decode (page-in) differently from a hot one. Amount:
+    /// mapped payload bytes. Once per batch.
+    MappedBytes,
 }
 
 impl KernelClass {
@@ -89,7 +95,7 @@ impl KernelClass {
     /// data (compressed or not) is streamed once per batch; flops and vector
     /// traffic scale with it.
     pub fn scales_with_rhs(self) -> bool {
-        !matches!(self, KernelClass::Decode(_, _) | KernelClass::MatBytes)
+        !matches!(self, KernelClass::Decode(_, _) | KernelClass::MatBytes | KernelClass::MappedBytes)
     }
 
     /// Stable JSON key, e.g. `decode:aflp:4`, `dense_flop`.
@@ -100,6 +106,7 @@ impl KernelClass {
             KernelClass::DenseFlop => "dense_flop".to_string(),
             KernelClass::LowRankFlop => "lowrank_flop".to_string(),
             KernelClass::PanelVec => "panel_vec".to_string(),
+            KernelClass::MappedBytes => "mapped_bytes".to_string(),
         }
     }
 
@@ -112,6 +119,7 @@ impl KernelClass {
             "dense_flop" => return Ok(KernelClass::DenseFlop),
             "lowrank_flop" => return Ok(KernelClass::LowRankFlop),
             "panel_vec" => return Ok(KernelClass::PanelVec),
+            "mapped_bytes" => return Ok(KernelClass::MappedBytes),
             _ => {}
         }
         let rest = key.strip_prefix("decode:").ok_or_else(|| format!("unknown kernel class '{key}'"))?;
@@ -158,6 +166,9 @@ impl TaskFeats {
             CodecParams::Zero => return,
         };
         self.add(class, blob.bytes.len() as f64);
+        if blob.bytes.is_mapped() {
+            self.add(KernelClass::MappedBytes, blob.bytes.len() as f64);
+        }
     }
 
     /// Fold another feature vector into this one.
@@ -696,6 +707,7 @@ mod tests {
             KernelClass::DenseFlop,
             KernelClass::LowRankFlop,
             KernelClass::PanelVec,
+            KernelClass::MappedBytes,
         ];
         for c in classes {
             assert_eq!(KernelClass::parse(&c.key()).unwrap(), c);

@@ -33,6 +33,8 @@ use crate::h2::H2Matrix;
 use crate::hmatrix::HMatrix;
 use crate::la::{blas, DMatrix};
 use crate::mvm::{kernels, SharedVec};
+use crate::store::prefetch::{PrefetchBuilder, PrefetchPlan};
+use crate::store::{hot, HotCache};
 use crate::uniform::{UniBlock, UniformHMatrix};
 use crate::util::{Rng, Timer};
 use std::ops::Range;
@@ -124,12 +126,26 @@ fn model_costs(feats: &[TaskFeats], fixed: &[f64], per_rhs: &[f64], profile: Opt
 /// `steal`, `sharded:K`) — and the sink slots are preallocated, so timed
 /// steady-state execution allocates nothing. Accumulators are read back only
 /// after the level barrier has joined.
-fn run_level_rec(exec: &dyn Executor, level: &[Shard], bufs: &mut [Vec<f64>], rec: Option<(&TimingSink, usize)>, run: &TaskFn) {
-    match rec {
-        None => exec.run_level(level, bufs, run),
-        Some((sink, base)) => exec.run_level(level, bufs, &|ti, buf| {
+///
+/// When `hot` carries a decode-once cache it is installed as the calling
+/// thread's cache ([`hot::scope`]) around each chunk — the install must
+/// happen *inside* the executor callback because the chunk may run on a pool
+/// worker thread, not the thread that entered `exec`. The cache only changes
+/// which load path decodes a blob, never the decoded values (see
+/// [`crate::compress::dispatch`]), so timed chunks stay comparable and
+/// outputs stay bitwise identical.
+fn run_level_rec(exec: &dyn Executor, level: &[Shard], bufs: &mut [Vec<f64>], rec: Option<(&TimingSink, usize)>, hot: Option<&Arc<HotCache>>, run: &TaskFn) {
+    match (rec, hot) {
+        (None, None) => exec.run_level(level, bufs, run),
+        (Some((sink, base)), None) => exec.run_level(level, bufs, &|ti, buf| {
             let t = Timer::start();
             run(ti, buf);
+            sink.add(base + ti, t.elapsed());
+        }),
+        (None, Some(c)) => exec.run_level(level, bufs, &|ti, buf| hot::scope(c, || run(ti, buf))),
+        (Some((sink, base)), Some(c)) => exec.run_level(level, bufs, &|ti, buf| {
+            let t = Timer::start();
+            hot::scope(c, || run(ti, buf));
             sink.add(base + ti, t.elapsed());
         }),
     }
@@ -255,6 +271,10 @@ struct HSchedule {
     /// buffer sizing only grows).
     max_shards: AtomicUsize,
     scratch: usize,
+    /// Mapped extents read by each barrier level (empty for in-memory
+    /// operators): level `i+1` is queued on the prefetch thread while level
+    /// `i` executes.
+    prefetch: PrefetchPlan,
 }
 
 impl HSchedule {
@@ -308,6 +328,14 @@ impl HSchedule {
             level_ids[ct.node(tau).level].push(id);
         }
         let level_ids: Vec<Vec<usize>> = level_ids.into_iter().filter(|ids| !ids.is_empty()).collect();
+        let mut pb = PrefetchBuilder::default();
+        for (li, ids) in level_ids.iter().enumerate() {
+            for &id in ids {
+                for (b, _) in &tasks[id].blocks {
+                    m.blocks[*b].as_ref().expect("missing leaf").for_each_blob(&mut |blob| pb.add(li, blob));
+                }
+            }
+        }
         let nshards = exec.shard_count();
         let costs: Vec<f64> = fixed.iter().zip(&per_rhs).map(|(f, v)| f + v).collect();
         let levels: Vec<Vec<Shard>> =
@@ -328,6 +356,7 @@ impl HSchedule {
             nshards,
             max_shards: AtomicUsize::new(max_shards),
             scratch,
+            prefetch: pb.finish(),
         }
     }
 
@@ -359,13 +388,15 @@ impl HSchedule {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
+    fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         arena.ensure(exec.buffers_needed(self.max_shards.load(Ordering::Relaxed)), self.scratch, 0, 0);
         let (bufs, _, _) = arena.split();
         let yy = SharedVec::new(y);
         let levels = self.levels.load();
-        for level in levels.iter() {
-            run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), &|ti, buf| {
+        self.prefetch.issue(0);
+        for (li, level) in levels.iter().enumerate() {
+            self.prefetch.issue(li + 1);
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), hot, &|ti, buf| {
                 let task = &self.tasks[ti];
                 // SAFETY: same-level clusters are disjoint; levels are
                 // separated by join barriers (parents first).
@@ -386,7 +417,7 @@ impl HSchedule {
     /// into a contiguous `rows×b` panel, each block's (possibly compressed)
     /// data is streamed once and applied to all `b` columns.
     #[allow(clippy::too_many_arguments)]
-    fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
+    fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let ylen = y.nrows();
         let nrhs = y.ncols();
         // gen before profile: a packing is cached only under a generation
@@ -401,8 +432,10 @@ impl HSchedule {
         arena.ensure(exec.buffers_needed(max_shards), scratch, 0, 0);
         let (bufs, _, _) = arena.split();
         let yy = SharedVec::new(y.data_mut());
-        for level in levels.iter() {
-            run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), &|ti, buf| {
+        self.prefetch.issue(0);
+        for (li, level) in levels.iter().enumerate() {
+            self.prefetch.issue(li + 1);
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), hot, &|ti, buf| {
                 let task = &self.tasks[ti];
                 let dl = task.dst.len();
                 let (yp, rest) = buf.split_at_mut(dl * nrhs);
@@ -449,6 +482,9 @@ pub struct HPlan {
     /// Active calibrated profile, also applied to halves built later.
     profile: Mutex<Option<Arc<CostProfile>>>,
     calib: Mutex<CalibInfo>,
+    /// Decode-once hot-panel cache installed around every product
+    /// (`HMATC_CACHE_BYTES` by default, swappable at runtime).
+    hot: RwLock<Option<Arc<HotCache>>>,
     nrows: usize,
     ncols: usize,
 }
@@ -472,12 +508,24 @@ impl HPlan {
 
     /// Lazy plan on the given backend.
     pub fn lazy_with(m: &HMatrix, exec: Arc<dyn Executor>) -> HPlan {
-        HPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), profile: Mutex::new(None), calib: Mutex::new(CalibInfo::default()), nrows: m.nrows(), ncols: m.ncols() }
+        HPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), profile: Mutex::new(None), calib: Mutex::new(CalibInfo::default()), hot: RwLock::new(HotCache::from_env()), nrows: m.nrows(), ncols: m.ncols() }
     }
 
     /// Backend name (logs / bench rows).
     pub fn executor_name(&self) -> String {
         self.exec.name()
+    }
+
+    /// Install (or clear with `None`) the decode-once hot cache; in-flight
+    /// products keep the cache they loaded at entry. Outputs are bitwise
+    /// identical with or without a cache.
+    pub fn set_hot_cache(&self, cache: Option<Arc<HotCache>>) {
+        *self.hot.write().unwrap() = cache;
+    }
+
+    /// The active hot cache, if any (for residency stats / counters).
+    pub fn hot_cache(&self) -> Option<Arc<HotCache>> {
+        self.hot.read().unwrap().clone()
     }
 
     fn fwd(&self, m: &HMatrix) -> &HSchedule {
@@ -519,14 +567,16 @@ impl HPlan {
     pub fn execute(&self, m: &HMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// y += alpha · Mᵀ · x.
     pub fn execute_adjoint(&self, m: &HMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols);
-        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// Y += alpha · M · X (column-major multivectors, gemm-shaped tasks).
@@ -534,7 +584,8 @@ impl HPlan {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// Y += alpha · Mᵀ · X (column-major multivectors, gemm-shaped tasks).
@@ -542,7 +593,8 @@ impl HPlan {
         assert_eq!(x.nrows(), self.nrows);
         assert_eq!(y.nrows(), self.ncols);
         assert_eq!(x.ncols(), y.ncols());
-        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// Re-run LPT partitioning of every built schedule half with costs from
@@ -581,19 +633,21 @@ impl HPlan {
         let mut rng = Rng::new(0xCA11B);
         let x = rng.vector(self.ncols);
         let mut y = vec![0.0; self.nrows];
-        sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, None); // warmup
+        // calibrate without a hot cache: coefficients must model the real
+        // decode cost, not cache hits
+        sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, None, None); // warmup
         for _ in 0..rounds {
-            sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink));
+            sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink), None);
         }
         let mut samples = Vec::new();
         sched.push_samples(&sink, 1, rounds, &mut samples);
         let measured = costmodel::sink_makespan(&sched.levels.load(), 0, &sink) / rounds as f64;
         let xm = DMatrix::random(self.ncols, CALIB_RHS, &mut rng);
         let mut ym = DMatrix::zeros(self.nrows, CALIB_RHS);
-        sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, None); // warmup
+        sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, None, None); // warmup
         sink.reset();
         for _ in 0..rounds {
-            sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink));
+            sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink), None);
         }
         sched.push_samples(&sink, CALIB_RHS, rounds, &mut samples);
         let profile = costmodel::fit(&samples).unwrap_or_default();
@@ -727,6 +781,9 @@ struct UniSchedule {
     s_len: usize,
     max_shards: AtomicUsize,
     scratch: usize,
+    /// Mapped extents per barrier group: group 0 is the forward transform,
+    /// group `1+li` output level `li`.
+    prefetch: PrefetchPlan,
 }
 
 impl UniSchedule {
@@ -830,6 +887,28 @@ impl UniSchedule {
             level_ids[out_ct.node(tau).level].push(id);
         }
         let level_ids: Vec<Vec<usize>> = level_ids.into_iter().filter(|ids| !ids.is_empty()).collect();
+        let mut pb = PrefetchBuilder::default();
+        for t in &ftasks {
+            in_basis[t.cluster].data.for_each_blob(&mut |blob| pb.add(0, blob));
+        }
+        for (li, ids) in level_ids.iter().enumerate() {
+            for &id in ids {
+                let task = &tasks[id];
+                for cr in &task.couplings {
+                    if let Some(blk) = m.blocks[cr.block].as_ref() {
+                        blk.for_each_blob(&mut |blob| pb.add(1 + li, blob));
+                    }
+                }
+                if !task.couplings.is_empty() {
+                    out_basis[task.cluster].data.for_each_blob(&mut |blob| pb.add(1 + li, blob));
+                }
+                for (b, _) in &task.dense {
+                    if let Some(blk) = m.blocks[*b].as_ref() {
+                        blk.for_each_blob(&mut |blob| pb.add(1 + li, blob));
+                    }
+                }
+            }
+        }
         let costs: Vec<f64> = fixed.iter().zip(&per_rhs).map(|(f, v)| f + v).collect();
         let levels: Vec<Vec<Shard>> =
             level_ids.iter().map(|ids| balance_level(ids, &costs, &scratch1, nshards)).collect();
@@ -857,6 +936,7 @@ impl UniSchedule {
             s_len,
             max_shards: AtomicUsize::new(max_shards),
             scratch,
+            prefetch: pb.finish(),
         }
     }
 
@@ -896,17 +976,19 @@ impl UniSchedule {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
+    fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
         arena.ensure(exec.buffers_needed(self.max_shards.load(Ordering::Relaxed)), self.scratch, self.s_len, 0);
         let (bufs, s_all, _) = arena.split();
 
         // phase 1: forward transformation s_σ = Bᵀ x|σ (independent slots)
+        self.prefetch.issue(0);
         {
             s_all[..self.s_len].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len]);
             let fshards = self.fshards.load();
-            run_level_rec(exec, &fshards, bufs, rec.map(|s| (s, 0)), &|ti, _buf| {
+            self.prefetch.issue(1);
+            run_level_rec(exec, &fshards, bufs, rec.map(|s| (s, 0)), hot, &|ti, _buf| {
                 let t = &self.ftasks[ti];
                 // SAFETY: one task per disjoint slot range.
                 let dst = unsafe { slots.range_mut(t.off..t.off + t.len) };
@@ -918,8 +1000,9 @@ impl UniSchedule {
         let sref: &[f64] = &s_all[..self.s_len];
         let yy = SharedVec::new(y);
         let levels = self.levels.load();
-        for level in levels.iter() {
-            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.ftasks.len())), &|ti, buf| {
+        for (li, level) in levels.iter().enumerate() {
+            self.prefetch.issue(li + 2);
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.ftasks.len())), hot, &|ti, buf| {
                 let task = &self.tasks[ti];
                 // SAFETY: same-level clusters are disjoint; levels are
                 // barrier separated.
@@ -955,7 +1038,7 @@ impl UniSchedule {
     /// occupies `s_off[σ]·b .. (s_off[σ]+k)·b`), y gathered per task into a
     /// contiguous `rows×b` panel, all block/basis/coupling data streamed once.
     #[allow(clippy::too_many_arguments)]
-    fn exec_multi(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
+    fn exec_multi(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
         let ylen = y.nrows();
         let nrhs = y.ncols();
@@ -977,10 +1060,12 @@ impl UniSchedule {
         let (bufs, s_all, _) = arena.split();
 
         // phase 1: forward transformation panels S_σ = Bᵀ X|σ
+        self.prefetch.issue(0);
         {
             s_all[..self.s_len * nrhs].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len * nrhs]);
-            run_level_rec(exec, fshards, bufs, rec.map(|s| (s, 0)), &|ti, buf| {
+            self.prefetch.issue(1);
+            run_level_rec(exec, fshards, bufs, rec.map(|s| (s, 0)), hot, &|ti, buf| {
                 let t = &self.ftasks[ti];
                 let sl = t.src.len();
                 let xp = &mut buf[..sl * nrhs];
@@ -994,8 +1079,9 @@ impl UniSchedule {
         // phase 2: level-ordered output pass on panels
         let sref: &[f64] = &s_all[..self.s_len * nrhs];
         let yy = SharedVec::new(y.data_mut());
-        for level in levels.iter() {
-            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.ftasks.len())), &|ti, buf| {
+        for (li, level) in levels.iter().enumerate() {
+            self.prefetch.issue(li + 2);
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.ftasks.len())), hot, &|ti, buf| {
                 let task = &self.tasks[ti];
                 let dl = task.dst.len();
                 let (tv, rest) = buf.split_at_mut(task.rank * nrhs);
@@ -1052,6 +1138,8 @@ pub struct UniPlan {
     /// Active calibrated profile, also applied to halves built later.
     profile: Mutex<Option<Arc<CostProfile>>>,
     calib: Mutex<CalibInfo>,
+    /// Decode-once hot-panel cache (see [`HPlan::set_hot_cache`]).
+    hot: RwLock<Option<Arc<HotCache>>>,
     nrows: usize,
     ncols: usize,
 }
@@ -1075,12 +1163,23 @@ impl UniPlan {
 
     /// Lazy plan on the given backend.
     pub fn lazy_with(m: &UniformHMatrix, exec: Arc<dyn Executor>) -> UniPlan {
-        UniPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), profile: Mutex::new(None), calib: Mutex::new(CalibInfo::default()), nrows: m.nrows(), ncols: m.ncols() }
+        UniPlan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), profile: Mutex::new(None), calib: Mutex::new(CalibInfo::default()), hot: RwLock::new(HotCache::from_env()), nrows: m.nrows(), ncols: m.ncols() }
     }
 
     /// Backend name (logs / bench rows).
     pub fn executor_name(&self) -> String {
         self.exec.name()
+    }
+
+    /// Install (or clear) the decode-once hot cache (see
+    /// [`HPlan::set_hot_cache`]).
+    pub fn set_hot_cache(&self, cache: Option<Arc<HotCache>>) {
+        *self.hot.write().unwrap() = cache;
+    }
+
+    /// The active hot cache, if any.
+    pub fn hot_cache(&self) -> Option<Arc<HotCache>> {
+        self.hot.read().unwrap().clone()
     }
 
     fn fwd(&self, m: &UniformHMatrix) -> &UniSchedule {
@@ -1117,14 +1216,16 @@ impl UniPlan {
     pub fn execute(&self, m: &UniformHMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// y += alpha · Mᵀ · x.
     pub fn execute_adjoint(&self, m: &UniformHMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols);
-        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// Y += alpha · M · X: one gemm-shaped schedule pass for the whole batch
@@ -1134,7 +1235,8 @@ impl UniPlan {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// Y += alpha · Mᵀ · X (gemm-shaped batched adjoint).
@@ -1142,7 +1244,8 @@ impl UniPlan {
         assert_eq!(x.nrows(), self.nrows);
         assert_eq!(y.nrows(), self.ncols);
         assert_eq!(x.ncols(), y.ncols());
-        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// Re-partition built schedule halves with `profile` costs (atomic swap,
@@ -1175,9 +1278,10 @@ impl UniPlan {
         let mut rng = Rng::new(0xCA11B + 1);
         let x = rng.vector(self.ncols);
         let mut y = vec![0.0; self.nrows];
-        sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, None); // warmup
+        // calibrate without a hot cache (model the real decode cost)
+        sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, None, None); // warmup
         for _ in 0..rounds {
-            sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink));
+            sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink), None);
         }
         let mut samples = Vec::new();
         sched.push_samples(&sink, 1, rounds, &mut samples);
@@ -1186,10 +1290,10 @@ impl UniPlan {
         let measured = (costmodel::sink_makespan(std::slice::from_ref(fsh.as_ref()), 0, &sink) + costmodel::sink_makespan(&lv, sched.ftasks.len(), &sink)) / rounds as f64;
         let xm = DMatrix::random(self.ncols, CALIB_RHS, &mut rng);
         let mut ym = DMatrix::zeros(self.nrows, CALIB_RHS);
-        sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, None); // warmup
+        sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, None, None); // warmup
         sink.reset();
         for _ in 0..rounds {
-            sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink));
+            sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink), None);
         }
         sched.push_samples(&sink, CALIB_RHS, rounds, &mut samples);
         let profile = costmodel::fit(&samples).unwrap_or_default();
@@ -1282,6 +1386,9 @@ struct H2Schedule {
     t_len: usize,
     max_shards: AtomicUsize,
     scratch: usize,
+    /// Mapped extents per barrier group: up levels first (deepest level =
+    /// group 0), then down levels.
+    prefetch: PrefetchPlan,
 }
 
 impl H2Schedule {
@@ -1454,6 +1561,51 @@ impl H2Schedule {
         let down_levels: Vec<Vec<Shard>> =
             down_level_ids.iter().map(|ids| balance_level(ids, &down_costs, &down_scratch, nshards)).collect();
 
+        let mut pb = PrefetchBuilder::default();
+        for (li, ids) in up_level_ids.iter().enumerate() {
+            for &id in ids {
+                let t = &up_tasks[id];
+                if t.leaf {
+                    if let Some(leaf) = in_nb.leaf[t.cluster].as_ref() {
+                        leaf.for_each_blob(&mut |blob| pb.add(li, blob));
+                    }
+                } else {
+                    for &(c, _, _) in &t.children {
+                        if let Some(e) = in_nb.transfer[c].as_ref() {
+                            e.for_each_blob(&mut |blob| pb.add(li, blob));
+                        }
+                    }
+                }
+            }
+        }
+        let dbase = up_level_ids.len();
+        for (li, ids) in down_level_ids.iter().enumerate() {
+            for &id in ids {
+                let task = &down_tasks[id];
+                for cr in &task.couplings {
+                    if let Some(blk) = m.blocks[cr.block].as_ref() {
+                        blk.for_each_blob(&mut |blob| pb.add(dbase + li, blob));
+                    }
+                }
+                for (b, _) in &task.dense {
+                    if let Some(blk) = m.blocks[*b].as_ref() {
+                        blk.for_each_blob(&mut |blob| pb.add(dbase + li, blob));
+                    }
+                }
+                if task.leaf {
+                    if let Some(leaf) = out_nb.leaf[task.cluster].as_ref() {
+                        leaf.for_each_blob(&mut |blob| pb.add(dbase + li, blob));
+                    }
+                } else {
+                    for &(c, _, _) in &task.children {
+                        if let Some(e) = out_nb.transfer[c].as_ref() {
+                            e.for_each_blob(&mut |blob| pb.add(dbase + li, blob));
+                        }
+                    }
+                }
+            }
+        }
+
         let (up_max, _) = max_shard_stats(&up_levels);
         let (down_max, scratch) = max_shard_stats(&down_levels);
         H2Schedule {
@@ -1480,6 +1632,7 @@ impl H2Schedule {
             t_len,
             max_shards: AtomicUsize::new(up_max.max(down_max)),
             scratch,
+            prefetch: pb.finish(),
         }
     }
 
@@ -1519,18 +1672,20 @@ impl H2Schedule {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn exec(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
+    fn exec(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
         arena.ensure(exec.buffers_needed(self.max_shards.load(Ordering::Relaxed)), self.scratch, self.s_len, self.t_len);
         let (bufs, s_all, t_all) = arena.split();
 
         // upward pass: forward transformation, children before parents
+        self.prefetch.issue(0);
         {
             s_all[..self.s_len].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len]);
             let up_levels = self.up_levels.load();
-            for level in up_levels.iter() {
-                run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), &|ti, _buf| {
+            for (li, level) in up_levels.iter().enumerate() {
+                self.prefetch.issue(li + 1);
+                run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), hot, &|ti, _buf| {
                     let t = &self.up_tasks[ti];
                     // SAFETY: one slot per cluster; child slots were filled
                     // in an earlier, already joined level.
@@ -1555,8 +1710,10 @@ impl H2Schedule {
         let tslots = SharedVec::new(&mut t_all[..self.t_len]);
         let yy = SharedVec::new(y);
         let down_levels = self.down_levels.load();
-        for level in down_levels.iter() {
-            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.up_tasks.len())), &|ti, buf| {
+        let dbase = self.up_level_ids.len();
+        for (li, level) in down_levels.iter().enumerate() {
+            self.prefetch.issue(dbase + li + 1);
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.up_tasks.len())), hot, &|ti, buf| {
                 let task = &self.down_tasks[ti];
                 // SAFETY: τ's slot was written only by its parent in an
                 // earlier level; same-level clusters are disjoint.
@@ -1606,7 +1763,7 @@ impl H2Schedule {
     /// transform directions, leaf/dense y rows gathered into contiguous
     /// panels; transfer and coupling matrices are streamed once per batch.
     #[allow(clippy::too_many_arguments)]
-    fn exec_multi(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>) {
+    fn exec_multi(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
         let ylen = y.nrows();
         let nrhs = y.ncols();
@@ -1627,11 +1784,13 @@ impl H2Schedule {
         let (bufs, s_all, t_all) = arena.split();
 
         // upward pass: forward transformation panels, children before parents
+        self.prefetch.issue(0);
         {
             s_all[..self.s_len * nrhs].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len * nrhs]);
-            for level in up_levels.iter() {
-                run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), &|ti, buf| {
+            for (li, level) in up_levels.iter().enumerate() {
+                self.prefetch.issue(li + 1);
+                run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), hot, &|ti, buf| {
                     let t = &self.up_tasks[ti];
                     // SAFETY: one slot panel per cluster; child slots joined
                     // in an earlier level.
@@ -1658,8 +1817,10 @@ impl H2Schedule {
         t_all[..self.t_len * nrhs].fill(0.0);
         let tslots = SharedVec::new(&mut t_all[..self.t_len * nrhs]);
         let yy = SharedVec::new(y.data_mut());
-        for level in down_levels.iter() {
-            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.up_tasks.len())), &|ti, buf| {
+        let dbase = self.up_level_ids.len();
+        for (li, level) in down_levels.iter().enumerate() {
+            self.prefetch.issue(dbase + li + 1);
+            run_level_rec(exec, level, bufs, rec.map(|s| (s, self.up_tasks.len())), hot, &|ti, buf| {
                 let task = &self.down_tasks[ti];
                 let dl = task.dst.len();
                 // SAFETY: τ's slot panel was written only by its parent in
@@ -1732,6 +1893,8 @@ pub struct H2Plan {
     /// Active calibrated profile, also applied to halves built later.
     profile: Mutex<Option<Arc<CostProfile>>>,
     calib: Mutex<CalibInfo>,
+    /// Decode-once hot-panel cache (see [`HPlan::set_hot_cache`]).
+    hot: RwLock<Option<Arc<HotCache>>>,
     nrows: usize,
     ncols: usize,
 }
@@ -1755,12 +1918,23 @@ impl H2Plan {
 
     /// Lazy plan on the given backend.
     pub fn lazy_with(m: &H2Matrix, exec: Arc<dyn Executor>) -> H2Plan {
-        H2Plan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), profile: Mutex::new(None), calib: Mutex::new(CalibInfo::default()), nrows: m.nrows(), ncols: m.ncols() }
+        H2Plan { exec, fwd: OnceLock::new(), adj: OnceLock::new(), profile: Mutex::new(None), calib: Mutex::new(CalibInfo::default()), hot: RwLock::new(HotCache::from_env()), nrows: m.nrows(), ncols: m.ncols() }
     }
 
     /// Backend name (logs / bench rows).
     pub fn executor_name(&self) -> String {
         self.exec.name()
+    }
+
+    /// Install (or clear) the decode-once hot cache (see
+    /// [`HPlan::set_hot_cache`]).
+    pub fn set_hot_cache(&self, cache: Option<Arc<HotCache>>) {
+        *self.hot.write().unwrap() = cache;
+    }
+
+    /// The active hot cache, if any.
+    pub fn hot_cache(&self) -> Option<Arc<HotCache>> {
+        self.hot.read().unwrap().clone()
     }
 
     fn fwd(&self, m: &H2Matrix) -> &H2Schedule {
@@ -1797,14 +1971,16 @@ impl H2Plan {
     pub fn execute(&self, m: &H2Matrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.fwd(m).exec(m, false, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// y += alpha · Mᵀ · x.
     pub fn execute_adjoint(&self, m: &H2Matrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         assert_eq!(x.len(), self.nrows);
         assert_eq!(y.len(), self.ncols);
-        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.adj(m).exec(m, true, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// Y += alpha · M · X: one gemm-shaped schedule pass for the whole batch.
@@ -1812,7 +1988,8 @@ impl H2Plan {
         assert_eq!(x.nrows(), self.ncols);
         assert_eq!(y.nrows(), self.nrows);
         assert_eq!(x.ncols(), y.ncols());
-        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// Y += alpha · Mᵀ · X (gemm-shaped batched adjoint).
@@ -1820,7 +1997,8 @@ impl H2Plan {
         assert_eq!(x.nrows(), self.nrows);
         assert_eq!(y.nrows(), self.ncols);
         assert_eq!(x.ncols(), y.ncols());
-        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None);
+        let hot = self.hot_cache();
+        self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
     }
 
     /// Re-partition built schedule halves with `profile` costs (atomic swap,
@@ -1853,9 +2031,10 @@ impl H2Plan {
         let mut rng = Rng::new(0xCA11B + 2);
         let x = rng.vector(self.ncols);
         let mut y = vec![0.0; self.nrows];
-        sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, None); // warmup
+        // calibrate without a hot cache (model the real decode cost)
+        sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, None, None); // warmup
         for _ in 0..rounds {
-            sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink));
+            sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink), None);
         }
         let mut samples = Vec::new();
         sched.push_samples(&sink, 1, rounds, &mut samples);
@@ -1864,10 +2043,10 @@ impl H2Plan {
         let measured = (costmodel::sink_makespan(&up, 0, &sink) + costmodel::sink_makespan(&down, sched.up_tasks.len(), &sink)) / rounds as f64;
         let xm = DMatrix::random(self.ncols, CALIB_RHS, &mut rng);
         let mut ym = DMatrix::zeros(self.nrows, CALIB_RHS);
-        sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, None); // warmup
+        sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, None, None); // warmup
         sink.reset();
         for _ in 0..rounds {
-            sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink));
+            sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink), None);
         }
         sched.push_samples(&sink, CALIB_RHS, rounds, &mut samples);
         let profile = costmodel::fit(&samples).unwrap_or_default();

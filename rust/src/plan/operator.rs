@@ -52,6 +52,13 @@ pub trait HOperator: Send + Sync {
             self.apply_adjoint(alpha, x.col(c), y.col_mut(c));
         }
     }
+
+    /// Cumulative `(hits, misses)` of the decode-once hot cache, if the
+    /// operator runs with one ([`PlannedOperator::set_hot_cache`]); `None`
+    /// when no cache is installed. Serving metrics poll this.
+    fn cache_counters(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 impl HOperator for HMatrix {
@@ -320,6 +327,38 @@ impl PlannedOperator {
         }
     }
 
+    /// Install (or clear with `None`) the decode-once hot-panel cache used by
+    /// subsequent products. Plans default to `HMATC_CACHE_BYTES`; this
+    /// overrides per operator. Outputs are bitwise identical with or without
+    /// a cache (see [`crate::store::hot`]).
+    pub fn set_hot_cache(&self, cache: Option<Arc<crate::store::HotCache>>) {
+        match &self.inner {
+            Inner::H { plan, .. } => plan.set_hot_cache(cache),
+            Inner::Uniform { plan, .. } => plan.set_hot_cache(cache),
+            Inner::H2 { plan, .. } => plan.set_hot_cache(cache),
+        }
+    }
+
+    /// The active hot cache, if any.
+    pub fn hot_cache(&self) -> Option<Arc<crate::store::HotCache>> {
+        match &self.inner {
+            Inner::H { plan, .. } => plan.hot_cache(),
+            Inner::Uniform { plan, .. } => plan.hot_cache(),
+            Inner::H2 { plan, .. } => plan.hot_cache(),
+        }
+    }
+
+    /// Storage residency of the operator's blob bytes: segment count,
+    /// anonymous vs memory-mapped footprint, hot-cache occupancy/hit rate
+    /// (`hmatc info` / serve logs).
+    pub fn residency(&self) -> crate::store::Residency {
+        match &self.inner {
+            Inner::H { m, plan } => crate::store::residency_h(m, plan.hot_cache().as_deref()),
+            Inner::Uniform { m, plan } => crate::store::residency_uh(m, plan.hot_cache().as_deref()),
+            Inner::H2 { m, plan } => crate::store::residency_h2(m, plan.hot_cache().as_deref()),
+        }
+    }
+
     fn run(&self, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
         match (&self.inner, adjoint) {
             (Inner::H { m, plan }, false) => plan.execute(m, alpha, x, y, arena),
@@ -463,5 +502,9 @@ impl HOperator for PlannedOperator {
         }
         let mut arena = self.arena.lock().unwrap();
         self.run_multi(true, alpha, x, y, &mut arena);
+    }
+
+    fn cache_counters(&self) -> Option<(u64, u64)> {
+        self.hot_cache().map(|c| c.counters())
     }
 }

@@ -1,0 +1,238 @@
+//! The decode-once hot-panel cache: a bounded, shared cache of fully
+//! decoded blobs with second-chance (clock) eviction.
+//!
+//! [`crate::compress::DecodeCursor::new`] consults the cache installed for
+//! the current task scope ([`scope`]); on a hit the cursor serves decoded
+//! values straight from the cached panel through kernels that reproduce the
+//! fused decode kernels' operation order **bitwise** (see
+//! `compress::dispatch`), so caching is purely a speed knob. The budget
+//! comes per plan (`PlannedOperator::set_hot_cache`) or from
+//! `HMATC_CACHE_BYTES` at plan build; `0`/unset means off.
+//!
+//! Entries are keyed by `(segment address, offset)` and each entry pins its
+//! backing [`Segment`] `Arc`, so a recycled allocation at the same address
+//! can never alias a stale entry. Zero-codec blobs (no payload) are never
+//! cached.
+
+use super::Segment;
+use crate::compress::{Blob, CodecParams};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+struct Entry {
+    key: (usize, usize),
+    /// Pins the backing segment so `key.0` cannot be recycled while the
+    /// entry lives.
+    _seg: Arc<Segment>,
+    vals: Arc<Vec<f64>>,
+    bytes: usize,
+    referenced: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: Vec<Entry>,
+    index: HashMap<(usize, usize), usize>,
+    bytes: usize,
+    hand: usize,
+}
+
+/// Bounded decode-once cache (see module docs).
+pub struct HotCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl HotCache {
+    /// A cache bounded to `budget` decoded bytes (`budget == 0` is legal but
+    /// caches nothing).
+    pub fn new(budget: usize) -> Arc<HotCache> {
+        Arc::new(HotCache { budget, inner: Mutex::new(Inner::default()), hits: AtomicU64::new(0), misses: AtomicU64::new(0) })
+    }
+
+    /// The cache configured by `HMATC_CACHE_BYTES` (unset, unparsable or 0
+    /// → `None` = caching off).
+    pub fn from_env() -> Option<Arc<HotCache>> {
+        let budget: usize = std::env::var("HMATC_CACHE_BYTES").ok()?.trim().parse().ok()?;
+        if budget == 0 {
+            None
+        } else {
+            Some(HotCache::new(budget))
+        }
+    }
+
+    /// Budget in decoded bytes.
+    pub fn capacity(&self) -> usize {
+        self.budget
+    }
+
+    /// `(entries, resident bytes, hits, misses)`.
+    pub fn stats(&self) -> (usize, usize, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.entries.len(), inner.bytes, self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Lifetime hit/miss counters.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// The decoded panel for `blob` — cached, or decoded now and inserted
+    /// (evicting second-chance victims until it fits). `None` when the blob
+    /// is uncacheable: zero codec, empty, or larger than the whole budget
+    /// (those stream-decode as usual).
+    pub fn get_or_decode(&self, blob: &Blob) -> Option<Arc<Vec<f64>>> {
+        if blob.n == 0 || matches!(blob.params, CodecParams::Zero) {
+            return None;
+        }
+        let need = blob.n * 8;
+        if need > self.budget {
+            return None;
+        }
+        let key = blob.bytes.key();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(&slot) = inner.index.get(&key) {
+                inner.entries[slot].referenced = true;
+                let vals = inner.entries[slot].vals.clone();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(vals);
+            }
+        }
+        // decode outside the lock: misses from other workers proceed in
+        // parallel; a racing insert of the same key keeps the first entry
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let vals = Arc::new(blob.to_vec());
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(&slot) = inner.index.get(&key) {
+            return Some(inner.entries[slot].vals.clone());
+        }
+        while inner.bytes + need > self.budget && !inner.entries.is_empty() {
+            // clock sweep: clear referenced bits until an unreferenced
+            // victim comes under the hand
+            let victim = loop {
+                let h = inner.hand % inner.entries.len();
+                if inner.entries[h].referenced {
+                    inner.entries[h].referenced = false;
+                    inner.hand = h + 1;
+                } else {
+                    break h;
+                }
+            };
+            let gone = inner.entries.swap_remove(victim);
+            inner.bytes -= gone.bytes;
+            inner.index.remove(&gone.key);
+            if victim < inner.entries.len() {
+                let moved_key = inner.entries[victim].key;
+                inner.index.insert(moved_key, victim);
+            }
+        }
+        let slot = inner.entries.len();
+        inner.entries.push(Entry { key, _seg: blob.bytes.segment().clone(), vals: vals.clone(), bytes: need, referenced: false });
+        inner.index.insert(key, slot);
+        inner.bytes += need;
+        Some(vals)
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<HotCache>>> = const { RefCell::new(None) };
+}
+
+struct ScopeGuard(Option<Arc<HotCache>>);
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| *c.borrow_mut() = self.0.take());
+    }
+}
+
+/// Run `f` with `cache` installed as this thread's hot cache: every
+/// [`crate::compress::DecodeCursor`] created inside consults it. The plan
+/// executors wrap each task closure in a scope on the worker thread that
+/// runs it. Restores the previous scope on exit (panic included).
+pub fn scope<R>(cache: &Arc<HotCache>, f: impl FnOnce() -> R) -> R {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(cache.clone()));
+    let _guard = ScopeGuard(prev);
+    f()
+}
+
+/// The current scope's cached panel for `blob`, if a cache is installed and
+/// the blob is cacheable (`DecodeCursor::new`'s hook).
+pub(crate) fn cached_decode(blob: &Blob) -> Option<Arc<Vec<f64>>> {
+    CURRENT.with(|c| c.borrow().as_ref().map(Arc::clone)).and_then(|cache| cache.get_or_decode(blob))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::util::Rng;
+
+    fn blob(n: usize, seed: u64) -> Blob {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        Blob::compress(Codec::Aflp, &data, 1e-8)
+    }
+
+    #[test]
+    fn hit_after_miss_same_values() {
+        let cache = HotCache::new(1 << 20);
+        let b = blob(100, 1);
+        let v1 = cache.get_or_decode(&b).unwrap();
+        let v2 = cache.get_or_decode(&b).unwrap();
+        assert!(Arc::ptr_eq(&v1, &v2));
+        assert_eq!(v1[..], b.to_vec()[..]);
+        assert_eq!(cache.counters(), (1, 1));
+    }
+
+    #[test]
+    fn zero_and_oversized_blobs_bypass() {
+        let cache = HotCache::new(400); // 50 values
+        let z = Blob::compress(Codec::Fpx, &[0.0; 32], 1e-6);
+        assert!(cache.get_or_decode(&z).is_none());
+        let big = blob(51, 2);
+        assert!(cache.get_or_decode(&big).is_none());
+        assert_eq!(cache.stats().0, 0);
+    }
+
+    #[test]
+    fn eviction_keeps_budget_and_recently_used() {
+        let cache = HotCache::new(100 * 8); // room for ~2 of the 3
+        let blobs: Vec<Blob> = (0..3).map(|i| blob(40, 10 + i)).collect();
+        for b in &blobs {
+            cache.get_or_decode(b);
+        }
+        let (entries, bytes, _, _) = cache.stats();
+        assert!(bytes <= 100 * 8, "bytes {bytes}");
+        assert!(entries <= 2);
+        // hammer blob 2, then insert blob 0 again: 2 must survive the sweep
+        for _ in 0..3 {
+            cache.get_or_decode(&blobs[2]);
+        }
+        cache.get_or_decode(&blobs[0]);
+        let v = cache.get_or_decode(&blobs[2]).unwrap();
+        assert_eq!(v[..], blobs[2].to_vec()[..]);
+    }
+
+    #[test]
+    fn scope_installs_and_restores() {
+        let cache = HotCache::new(1 << 20);
+        let b = blob(64, 7);
+        assert!(cached_decode(&b).is_none(), "no scope installed");
+        scope(&cache, || {
+            assert!(cached_decode(&b).is_some());
+            let inner = HotCache::new(1 << 20);
+            scope(&inner, || {
+                assert!(cached_decode(&b).is_some());
+                assert_eq!(inner.counters().1, 1, "nested scope uses inner cache");
+            });
+        });
+        assert!(cached_decode(&b).is_none(), "scope restored");
+        assert_eq!(cache.counters(), (0, 1));
+    }
+}

@@ -1,0 +1,422 @@
+//! The storage tier: compressed blob bytes behind reference-counted
+//! segments, packed operator files served by mmap, a level-pipelined
+//! prefetcher and a decode-once hot-panel cache.
+//!
+//! The paper's argument is that FPX/AFLP compression relieves the memory-
+//! bandwidth pressure of H-MVM; the production conclusion is to stop
+//! requiring the compressed operator to be *resident* at all. This module
+//! turns [`crate::compress`] into a storage tier:
+//!
+//! * **[`Segment`] / [`BlobBytes`]** — every [`crate::compress::Blob`]'s
+//!   payload lives in a reference-counted segment: an anonymous heap buffer
+//!   (today's default — one private segment per blob, exactly the old
+//!   `Vec<u8>` behavior) or a slice of one read-only file mapping shared by
+//!   every blob of an operator. [`crate::compress::DecodeCursor`] resolves
+//!   straight off the mapped bytes — zero copies, no decode-side branching.
+//! * **[`pack`]** — the versioned `HMPK` on-disk layout written by
+//!   `hmatc pack`: header + per-level extents ordered level-major (the
+//!   plan's task order, so level-pipelined prefetch is sequential I/O),
+//!   each extent FNV-1a checksummed. [`MappedStore::open`] validates
+//!   magic/version/bounds/checksums with errors — truncated or corrupted
+//!   files are rejected, never UB — and `attach_*` re-points an identically
+//!   built operator's blobs into the mapping.
+//! * **[`prefetch`]** — at each level barrier the plan executors hand the
+//!   *next* level's merged extents to a background thread that issues
+//!   `madvise(WILLNEED)` plus touch reads, hiding page-in behind the level
+//!   currently computing (`HMATC_PREFETCH=0` disables).
+//! * **[`hot`]** — a bounded decode-once cache of fully decoded blobs
+//!   (second-chance/clock eviction, budget via `HMATC_CACHE_BYTES`): the
+//!   hottest small blocks skip decode entirely on repeated serves, while
+//!   outputs stay bitwise identical to the streaming-decode path.
+//!
+//! # Safety contract for mapped segments
+//!
+//! A [`Segment::Mapped`] region is created from a read-only private file
+//! mapping (`PROT_READ`, `MAP_PRIVATE`) and unmapped when the last
+//! [`Arc<Segment>`] drops; [`BlobBytes`] hands out `&[u8]` borrows whose
+//! lifetime is tied to that `Arc`, so a mapped slice can never outlive its
+//! mapping. What Rust cannot guarantee is the *file*: if the packed file is
+//! truncated or rewritten while mapped, loads may fault (`SIGBUS`) — the
+//! store treats packed files as immutable once written, and `open` verifies
+//! every extent checksum up front so post-open corruption of the on-disk
+//! bytes is the only remaining window. Decode kernels make **no alignment
+//! assumption** on backing bytes: every load is an unaligned byte-copy or an
+//! explicitly unaligned SIMD load, pinned by the misaligned-backing
+//! regression test in `tests/store_roundtrip.rs`.
+
+pub mod hot;
+pub mod pack;
+pub mod prefetch;
+
+pub use hot::HotCache;
+pub use pack::{attach_h, attach_h2, attach_uh, pack_h, pack_h2, pack_uh, residency_h, residency_h2, residency_uh, MappedStore, PackSummary};
+pub use prefetch::PrefetchPlan;
+
+use crate::compress::Blob;
+use std::collections::BTreeSet;
+use std::ops::{Deref, Range};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Segments
+// ---------------------------------------------------------------------------
+
+/// A read-only mapping of a whole file, unmapped on drop.
+pub struct MappedRegion {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the region is immutable after construction (PROT_READ) and the
+// pointer is only dereferenced through `as_slice`, so shared access from any
+// thread is sound.
+unsafe impl Send for MappedRegion {}
+unsafe impl Sync for MappedRegion {}
+
+impl MappedRegion {
+    fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr..ptr+len is a live PROT_READ mapping owned by self.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for MappedRegion {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self.len > 0 {
+            // SAFETY: exactly the region mmap returned; mapped once, unmapped once.
+            unsafe { sys::munmap(self.ptr as *mut std::ffi::c_void, self.len) };
+        }
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MADV_WILLNEED: c_int = 3;
+
+    extern "C" {
+        pub fn mmap(addr: *mut c_void, len: usize, prot: c_int, flags: c_int, fd: c_int, offset: i64) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+}
+
+/// One reference-counted byte store backing any number of [`BlobBytes`]
+/// slices: anonymous heap memory (the default — private per blob) or a
+/// read-only file mapping shared by every blob of a packed operator.
+pub enum Segment {
+    /// Heap-backed bytes (today's in-memory behavior).
+    Anon(Vec<u8>),
+    /// A read-only private file mapping (see the module safety contract).
+    Mapped(MappedRegion),
+}
+
+impl Segment {
+    /// The segment's bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Segment::Anon(v) => v,
+            Segment::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Whether the segment is a file mapping (vs anonymous memory).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Segment::Mapped(_))
+    }
+
+    /// Map `path` read-only. On unix this is a real `mmap(PROT_READ,
+    /// MAP_PRIVATE)`; elsewhere the file is read into anonymous memory (same
+    /// semantics, no out-of-core benefit). Empty files map to an empty anon
+    /// segment.
+    pub fn map_file(path: &str) -> Result<Segment, String> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path).map_err(|e| format!("{path}: {e}"))?;
+            let len = file.metadata().map_err(|e| format!("{path}: {e}"))?.len() as usize;
+            if len == 0 {
+                return Ok(Segment::Anon(Vec::new()));
+            }
+            // SAFETY: fd is open for the duration of the call; a MAP_FAILED
+            // return is checked below. The mapping outlives the fd by design
+            // (POSIX keeps mappings valid after close).
+            let ptr = unsafe { sys::mmap(std::ptr::null_mut(), len, sys::PROT_READ, sys::MAP_PRIVATE, file.as_raw_fd(), 0) };
+            if ptr as isize == -1 || ptr.is_null() {
+                return Err(format!("{path}: mmap failed"));
+            }
+            Ok(Segment::Mapped(MappedRegion { ptr: ptr as *const u8, len }))
+        }
+        #[cfg(not(unix))]
+        {
+            let bytes = std::fs::read(path).map_err(|e| format!("{path}: {e}"))?;
+            Ok(Segment::Anon(bytes))
+        }
+    }
+
+    /// Hint the OS that `range` will be read soon, then touch one byte per
+    /// page so the readahead actually happens even where `madvise` is a
+    /// no-op. Anonymous segments need neither.
+    pub fn advise_willneed(&self, range: Range<usize>) {
+        let Segment::Mapped(m) = self else {
+            return;
+        };
+        let start = range.start.min(m.len);
+        let end = range.end.min(m.len);
+        if start >= end {
+            return;
+        }
+        #[cfg(unix)]
+        {
+            // page-align downward; madvise is advisory, the result is ignored
+            let astart = start & !4095;
+            // SAFETY: [astart, end) lies inside the live mapping.
+            unsafe { sys::madvise(m.ptr.add(astart) as *mut std::ffi::c_void, end - astart, sys::MADV_WILLNEED) };
+        }
+        let s = self.as_slice();
+        let mut sum = 0u8;
+        let mut i = start;
+        while i < end {
+            // SAFETY: i < end <= len; volatile keeps the touch from being
+            // optimized out.
+            sum ^= unsafe { std::ptr::read_volatile(s.as_ptr().add(i)) };
+            i += 4096;
+        }
+        std::hint::black_box(sum);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BlobBytes
+// ---------------------------------------------------------------------------
+
+/// The payload bytes of one [`Blob`]: a `[u8]` slice of a reference-counted
+/// [`Segment`]. Replaces the per-blob `Vec<u8>` so compressed payloads can
+/// live in anonymous memory (default) or inside one shared file mapping;
+/// consumers deref to `&[u8]` and never see the difference.
+#[derive(Clone)]
+pub struct BlobBytes {
+    seg: Arc<Segment>,
+    off: usize,
+    len: usize,
+}
+
+impl BlobBytes {
+    /// A slice `[off, off + len)` of `seg` (bounds checked once here).
+    pub fn new(seg: Arc<Segment>, off: usize, len: usize) -> BlobBytes {
+        assert!(off.checked_add(len).is_some_and(|end| end <= seg.as_slice().len()), "BlobBytes: {off}+{len} out of segment ({} bytes)", seg.as_slice().len());
+        BlobBytes { seg, off, len }
+    }
+
+    /// Whether the backing segment is a file mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.seg.is_mapped()
+    }
+
+    /// The backing segment and the slice's byte range within it (prefetch
+    /// extent collection).
+    pub fn extent(&self) -> (&Arc<Segment>, Range<usize>) {
+        (&self.seg, self.off..self.off + self.len)
+    }
+
+    /// Identity of the backing slice — `(segment address, offset)` — used as
+    /// the hot-cache key. Stable for the blob's lifetime; cache entries pin
+    /// the segment `Arc` so the address cannot be recycled while the entry
+    /// lives.
+    pub fn key(&self) -> (usize, usize) {
+        (Arc::as_ptr(&self.seg) as *const u8 as usize, self.off)
+    }
+
+    /// The backing segment (shared-segment accounting).
+    pub fn segment(&self) -> &Arc<Segment> {
+        &self.seg
+    }
+}
+
+impl Deref for BlobBytes {
+    type Target = [u8];
+
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        // SAFETY of indexing: bounds were checked at construction and
+        // segments are immutable.
+        &self.seg.as_slice()[self.off..self.off + self.len]
+    }
+}
+
+impl From<Vec<u8>> for BlobBytes {
+    fn from(v: Vec<u8>) -> BlobBytes {
+        let len = v.len();
+        BlobBytes { seg: Arc::new(Segment::Anon(v)), off: 0, len }
+    }
+}
+
+impl Default for BlobBytes {
+    fn default() -> BlobBytes {
+        Vec::new().into()
+    }
+}
+
+impl std::fmt::Debug for BlobBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.is_mapped() { "mapped" } else { "anon" };
+        write!(f, "BlobBytes({} bytes, {kind})", self.len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checksums
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit hash (the extent and header checksums of the pack format:
+/// no crates, deterministic, good enough to catch truncation/corruption).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Residency
+// ---------------------------------------------------------------------------
+
+/// Where an operator's compressed payload bytes live, plus hot-cache
+/// occupancy/counters — the store line of `hmatc info`/`serve` and the
+/// coordinator metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Residency {
+    /// Distinct backing segments over all blobs.
+    pub segments: usize,
+    /// Payload bytes resolved from anonymous (heap) segments.
+    pub anon_bytes: usize,
+    /// Payload bytes resolved from file mappings.
+    pub mapped_bytes: usize,
+    /// Hot-cache budget in bytes (0 = cache off).
+    pub hot_capacity: usize,
+    /// Decoded bytes currently resident in the hot cache.
+    pub hot_bytes: usize,
+    /// Hot-cache entries.
+    pub hot_entries: usize,
+    /// Hot-cache lookup hits since creation.
+    pub hot_hits: u64,
+    /// Hot-cache lookup misses since creation.
+    pub hot_misses: u64,
+}
+
+impl Residency {
+    /// Hit fraction of all hot-cache lookups so far (0.0 when none).
+    pub fn hot_hit_rate(&self) -> f64 {
+        let total = self.hot_hits + self.hot_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hot_hits as f64 / total as f64
+        }
+    }
+
+    /// One-line summary for log/banner lines, e.g.
+    /// `store 12 segs (anon 1.2 MB, mapped 3.4 MB), hot cache 64.0 KB/1.0 MB (hit 98.2%)`.
+    pub fn label(&self) -> String {
+        let mb = |b: usize| b as f64 / (1024.0 * 1024.0);
+        let mut s = format!("store {} segs (anon {:.2} MB, mapped {:.2} MB)", self.segments, mb(self.anon_bytes), mb(self.mapped_bytes));
+        if self.hot_capacity > 0 {
+            s += &format!(", hot cache {:.2}/{:.2} MB (hit {:.1}%)", mb(self.hot_bytes), mb(self.hot_capacity), 100.0 * self.hot_hit_rate());
+        } else {
+            s += ", hot cache off";
+        }
+        s
+    }
+}
+
+/// Accumulates [`Residency`] over a blob walk (segments deduplicated by
+/// address; cache fields filled in by [`ResidencyScan::finish`]).
+#[derive(Default)]
+pub struct ResidencyScan {
+    seen: BTreeSet<usize>,
+    out: Residency,
+}
+
+impl ResidencyScan {
+    pub fn add(&mut self, blob: &Blob) {
+        let (seg, range) = blob.bytes.extent();
+        if self.seen.insert(Arc::as_ptr(seg) as *const u8 as usize) {
+            self.out.segments += 1;
+        }
+        if seg.is_mapped() {
+            self.out.mapped_bytes += range.len();
+        } else {
+            self.out.anon_bytes += range.len();
+        }
+    }
+
+    pub fn finish(mut self, hot: Option<&HotCache>) -> Residency {
+        if let Some(c) = hot {
+            let (entries, bytes, hits, misses) = c.stats();
+            self.out.hot_capacity = c.capacity();
+            self.out.hot_entries = entries;
+            self.out.hot_bytes = bytes;
+            self.out.hot_hits = hits;
+            self.out.hot_misses = misses;
+        }
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn blob_bytes_roundtrip_and_sharing() {
+        let b: BlobBytes = vec![1u8, 2, 3, 4].into();
+        assert_eq!(&b[..], &[1, 2, 3, 4]);
+        assert!(!b.is_mapped());
+        let seg = Arc::new(Segment::Anon(vec![9u8; 100]));
+        let s1 = BlobBytes::new(seg.clone(), 10, 20);
+        let s2 = BlobBytes::new(seg.clone(), 30, 5);
+        assert_eq!(s1.len(), 20);
+        assert_eq!(s2.len(), 5);
+        assert_ne!(s1.key(), s2.key());
+        assert_eq!(s1.key().0, s2.key().0); // same segment
+    }
+
+    #[test]
+    #[should_panic(expected = "out of segment")]
+    fn blob_bytes_rejects_out_of_bounds() {
+        let seg = Arc::new(Segment::Anon(vec![0u8; 8]));
+        let _ = BlobBytes::new(seg, 4, 8);
+    }
+
+    #[test]
+    fn map_file_roundtrip() {
+        let path = std::env::temp_dir().join(format!("hmatc_seg_{}.bin", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let seg = Segment::map_file(&path).unwrap();
+        assert_eq!(seg.as_slice(), &data[..]);
+        seg.advise_willneed(0..data.len()); // exercise the hint path
+        seg.advise_willneed(9_000..20_000); // clamped past the end
+        drop(seg);
+        std::fs::remove_file(&path).ok();
+        assert!(Segment::map_file("/nonexistent/hmatc.bin").is_err());
+    }
+}

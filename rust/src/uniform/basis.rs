@@ -152,6 +152,34 @@ impl ClusterBasis {
 }
 
 impl BasisData {
+    /// Visit every compressed payload blob, in a fixed deterministic order
+    /// (storage-tier walkers; shared by [`ClusterBasis`] and the H² nested
+    /// leaf bases).
+    pub fn for_each_blob(&self, f: &mut dyn FnMut(&Blob)) {
+        match self {
+            BasisData::Plain(_) => {}
+            BasisData::Z { blob, .. } => f(blob),
+            BasisData::Valr(z) => {
+                for b in z.wcols.iter().chain(z.xcols.iter()) {
+                    f(b);
+                }
+            }
+        }
+    }
+
+    /// Mutable variant of [`BasisData::for_each_blob`] (same order).
+    pub fn for_each_blob_mut(&mut self, f: &mut dyn FnMut(&mut Blob)) {
+        match self {
+            BasisData::Plain(_) => {}
+            BasisData::Z { blob, .. } => f(blob),
+            BasisData::Valr(z) => {
+                for b in z.wcols.iter_mut().chain(z.xcols.iter_mut()) {
+                    f(b);
+                }
+            }
+        }
+    }
+
     /// S += Wᵀ X on contiguous panels (X: nrows×nrhs, S: rank×nrhs): every
     /// basis column is decoded once per chunk and dotted with all `nrhs`
     /// input columns (shared by [`ClusterBasis`] and the H² nested-basis

@@ -179,6 +179,31 @@ impl CouplingMat {
             other => other.clone(),
         }
     }
+
+    /// Visit every compressed payload blob, in a fixed deterministic order
+    /// (storage-tier walkers).
+    pub fn for_each_blob(&self, f: &mut dyn FnMut(&crate::compress::Blob)) {
+        match self {
+            CouplingMat::Plain(_) | CouplingMat::SepPlain { .. } => {}
+            CouplingMat::Z(z) => f(&z.blob),
+            CouplingMat::SepZ { sr, sc } => {
+                f(&sr.blob);
+                f(&sc.blob);
+            }
+        }
+    }
+
+    /// Mutable variant of [`CouplingMat::for_each_blob`] (same order).
+    pub fn for_each_blob_mut(&mut self, f: &mut dyn FnMut(&mut crate::compress::Blob)) {
+        match self {
+            CouplingMat::Plain(_) | CouplingMat::SepPlain { .. } => {}
+            CouplingMat::Z(z) => f(&mut z.blob),
+            CouplingMat::SepZ { sr, sc } => {
+                f(&mut sr.blob);
+                f(&mut sc.blob);
+            }
+        }
+    }
 }
 
 /// Leaf data of a uniform H-matrix.
@@ -195,6 +220,24 @@ impl UniBlock {
             UniBlock::Dense(m) => m.byte_size(),
             UniBlock::ZDense(z) => z.byte_size(),
             UniBlock::Coupling(c) => c.byte_size(),
+        }
+    }
+
+    /// Visit every compressed payload blob (storage-tier walkers).
+    pub fn for_each_blob(&self, f: &mut dyn FnMut(&crate::compress::Blob)) {
+        match self {
+            UniBlock::Dense(_) => {}
+            UniBlock::ZDense(z) => f(&z.blob),
+            UniBlock::Coupling(c) => c.for_each_blob(f),
+        }
+    }
+
+    /// Mutable variant of [`UniBlock::for_each_blob`] (same order).
+    pub fn for_each_blob_mut(&mut self, f: &mut dyn FnMut(&mut crate::compress::Blob)) {
+        match self {
+            UniBlock::Dense(_) => {}
+            UniBlock::ZDense(z) => f(&mut z.blob),
+            UniBlock::Coupling(c) => c.for_each_blob_mut(f),
         }
     }
 }

@@ -1,0 +1,240 @@
+//! Storage-tier roundtrip: `pack` → `MappedStore::open` → `attach_*` must
+//! serve **bitwise identical** forward, adjoint and multi-RHS products to
+//! the in-memory operator, for all three formats, compressed and
+//! uncompressed, on every plan-execution backend — the mapping changes only
+//! where the payload bytes live, never a single output bit. Plus hostile
+//! pack files (truncated, corrupted, wrong magic, mismatched operator) and
+//! the decode-once hot cache under an eviction-forcing tiny budget.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::la::DMatrix;
+use hmatc::lowrank::AcaOptions;
+use hmatc::plan::{ExecutorKind, PlannedOperator};
+use hmatc::store::{self, HotCache, MappedStore};
+use hmatc::util::Rng;
+use std::sync::Arc;
+
+fn build_h(level: usize, eps: f64) -> HMatrix {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps))
+}
+
+/// Unique temp pack path per test (tests run in parallel in one process).
+fn tmp_path(tag: &str) -> String {
+    let p = std::env::temp_dir().join(format!("hmatc_store_rt_{}_{tag}.hmpk", std::process::id()));
+    p.to_str().unwrap().to_string()
+}
+
+fn kinds() -> [ExecutorKind; 3] {
+    [ExecutorKind::StaticLpt, ExecutorKind::WorkStealing, ExecutorKind::Sharded(2)]
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: row {i}: {x:e} vs {y:e}");
+    }
+}
+
+/// Forward (twice — pins arena/cache reuse), adjoint and multi-RHS both
+/// directions, from a fixed seed.
+fn products(op: &PlannedOperator, n: usize) -> (Vec<f64>, Vec<f64>, DMatrix, DMatrix) {
+    let mut rng = Rng::new(4242);
+    let x = rng.vector(n);
+    let y0 = rng.vector(n);
+    let xm = DMatrix::random(n, 3, &mut rng);
+    let alpha = 0.75;
+    let mut fwd = y0.clone();
+    op.apply(alpha, &x, &mut fwd);
+    op.apply(alpha, &x, &mut fwd);
+    let mut adj = y0;
+    op.apply_adjoint(alpha, &x, &mut adj);
+    let mut multi = DMatrix::zeros(n, 3);
+    op.apply_multi(alpha, &xm, &mut multi);
+    let mut multi_adj = DMatrix::zeros(n, 3);
+    op.apply_multi_adjoint(alpha, &xm, &mut multi_adj);
+    (fwd, adj, multi, multi_adj)
+}
+
+fn compare(mem: &PlannedOperator, mapped: &PlannedOperator, n: usize, tag: &str) {
+    let (bf, ba, bm, bma) = products(mem, n);
+    let (f, a, m, ma) = products(mapped, n);
+    assert_bits_eq(&f, &bf, &format!("{tag} fwd"));
+    assert_bits_eq(&a, &ba, &format!("{tag} adj"));
+    assert_bits_eq(m.data(), bm.data(), &format!("{tag} multi"));
+    assert_bits_eq(ma.data(), bma.data(), &format!("{tag} multi-adj"));
+}
+
+#[test]
+fn h_mmap_roundtrip_bitwise() {
+    let h0 = build_h(2, 1e-7);
+    let n = h0.nrows();
+    for compress in [false, true] {
+        let mut h = h0.clone();
+        if compress {
+            h.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let path = tmp_path(&format!("h{}", compress as u8));
+        let sum = store::pack_h(&h, &path).unwrap();
+        assert_eq!(sum.extents > 0, compress, "payload extents iff compressed");
+        let mstore = MappedStore::open(&path).unwrap();
+        let mut hm = h.clone();
+        store::attach_h(&mut hm, &mstore).unwrap();
+        if compress {
+            let r = store::residency_h(&hm, None);
+            assert!(r.mapped_bytes > 0, "attached operator must be mapped");
+            assert_eq!(r.anon_bytes, 0, "attach must re-point every blob");
+        }
+        let mem = PlannedOperator::from_h_with(Arc::new(h), ExecutorKind::StaticLpt);
+        let hm = Arc::new(hm);
+        for kind in kinds() {
+            let mapped = PlannedOperator::from_h_with(hm.clone(), kind);
+            compare(&mem, &mapped, n, &format!("H compress={compress} [{kind}]"));
+        }
+        drop(mstore); // operators pin the segment Arc; store handle may go first
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn uh_mmap_roundtrip_bitwise() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    for compress in [false, true] {
+        let mut uh = hmatc::uniform::build_from_h(&h, 1e-6, hmatc::uniform::CouplingKind::Combined);
+        if compress {
+            uh.compress(&CompressionConfig { codec: Codec::Fpx, eps: 1e-9, valr: true });
+        }
+        let path = tmp_path(&format!("uh{}", compress as u8));
+        let sum = store::pack_uh(&uh, &path).unwrap();
+        assert_eq!(sum.extents > 0, compress);
+        let mstore = MappedStore::open(&path).unwrap();
+        let mut um = uh.clone();
+        store::attach_uh(&mut um, &mstore).unwrap();
+        if compress {
+            assert!(store::residency_uh(&um, None).mapped_bytes > 0);
+        }
+        let mem = PlannedOperator::from_uniform_with(Arc::new(uh), ExecutorKind::StaticLpt);
+        let um = Arc::new(um);
+        for kind in kinds() {
+            let mapped = PlannedOperator::from_uniform_with(um.clone(), kind);
+            compare(&mem, &mapped, n, &format!("UH compress={compress} [{kind}]"));
+        }
+        drop(mstore);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn h2_mmap_roundtrip_bitwise() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    for compress in [false, true] {
+        let mut h2 = hmatc::h2::build_from_h(&h, 1e-6);
+        if compress {
+            h2.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let path = tmp_path(&format!("h2_{}", compress as u8));
+        let sum = store::pack_h2(&h2, &path).unwrap();
+        assert_eq!(sum.extents > 0, compress);
+        let mstore = MappedStore::open(&path).unwrap();
+        let mut m2 = h2.clone();
+        store::attach_h2(&mut m2, &mstore).unwrap();
+        if compress {
+            assert!(store::residency_h2(&m2, None).mapped_bytes > 0);
+        }
+        let mem = PlannedOperator::from_h2_with(Arc::new(h2), ExecutorKind::StaticLpt);
+        let m2 = Arc::new(m2);
+        for kind in kinds() {
+            let mapped = PlannedOperator::from_h2_with(m2.clone(), kind);
+            compare(&mem, &mapped, n, &format!("H2 compress={compress} [{kind}]"));
+        }
+        drop(mstore);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn hostile_pack_files_rejected() {
+    let mut h = build_h(1, 1e-6);
+    h.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-8, valr: true });
+    let path = tmp_path("hostile_good");
+    let sum = store::pack_h(&h, &path).unwrap();
+    assert!(sum.extents > 0);
+    let bytes = std::fs::read(&path).unwrap();
+
+    let reject = |tag: &str, data: &[u8]| {
+        let p = tmp_path(tag);
+        std::fs::write(&p, data).unwrap();
+        assert!(MappedStore::open(&p).is_err(), "{tag}: must be rejected");
+        std::fs::remove_file(&p).ok();
+    };
+    reject("hostile_trunc", &bytes[..bytes.len() - 1]);
+    reject("hostile_short", &bytes[..10]);
+    reject("hostile_empty", &[]);
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff; // magic
+    reject("hostile_magic", &bad);
+    let mut bad = bytes.clone();
+    bad[4] ^= 0xff; // version
+    reject("hostile_version", &bad);
+    let mut bad = bytes.clone();
+    *bad.last_mut().unwrap() ^= 0xff; // payload bit flip → extent checksum
+    reject("hostile_payload", &bad);
+    let mut bad = bytes.clone();
+    bad[24] ^= 0xff; // first extent descriptor → header checksum
+    reject("hostile_header", &bad);
+
+    // a valid store must still refuse an operator with a different blob set
+    let mstore = MappedStore::open(&path).unwrap();
+    let mut other = build_h(1, 1e-6); // uncompressed: zero blobs
+    assert!(store::attach_h(&mut other, &mstore).is_err(), "mismatched attach must fail");
+    drop(mstore);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn tiny_hot_cache_eviction_stays_bitwise() {
+    let mut h = build_h(2, 1e-7);
+    h.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+    let n = h.nrows();
+    let path = tmp_path("hot");
+    store::pack_h(&h, &path).unwrap();
+    let mstore = MappedStore::open(&path).unwrap();
+    let mut hm = h.clone();
+    store::attach_h(&mut hm, &mstore).unwrap();
+    let mem = PlannedOperator::from_h_with(Arc::new(h), ExecutorKind::StaticLpt);
+    let mapped = PlannedOperator::from_h_with(Arc::new(hm), ExecutorKind::WorkStealing);
+
+    // tiny budget: 512 decoded values — constant eviction churn, larger
+    // panels bypass the cache entirely; outputs must not move a bit
+    let tiny = HotCache::new(4096);
+    mapped.set_hot_cache(Some(tiny.clone()));
+    for _ in 0..3 {
+        compare(&mem, &mapped, n, "hot tiny");
+    }
+    let (_, resident, _, misses) = tiny.stats();
+    assert!(resident <= 4096, "budget violated: {resident}");
+    assert!(misses > 0, "a 4 KB cache cannot hold a whole operator");
+
+    // roomy budget: repeated products must actually hit, still bitwise
+    let roomy = HotCache::new(64 << 20);
+    mapped.set_hot_cache(Some(roomy.clone()));
+    for _ in 0..2 {
+        compare(&mem, &mapped, n, "hot roomy");
+    }
+    let (hits, _) = roomy.counters();
+    assert!(hits > 0, "repeated products through a roomy cache must hit");
+
+    mapped.set_hot_cache(None);
+    compare(&mem, &mapped, n, "hot disabled again");
+    drop(mstore);
+    std::fs::remove_file(&path).ok();
+}
