@@ -15,14 +15,17 @@
 //! measurement-driven cost-model calibration (`HPlan::calibrate` + LPT
 //! re-balancing), bitwise-verified against the static row's output before
 //! benching — so static-vs-calibrated GFLOP/s per executor lands in the JSON.
-//! `--quick` restricts to the smallest size and skips the eps sweep (CI
-//! smoke).
+//! A **`plan sharded-coord:2`** row runs the same H operator through a 2-way
+//! row partition of the sharded serving tier (shard-by-shard `ShardPlan`
+//! execution + owned-row reassembly), bitwise-verified against the unsharded
+//! plan. `--quick` restricts to the smallest size and skips the eps sweep
+//! (CI smoke).
 
 use hmatc::bench::workloads::{Formats, Problem};
 use hmatc::bench::{bench_fn, default_eps, default_levels, write_bench_json, write_result, Table};
 use hmatc::compress::{Codec, CompressionConfig};
 use hmatc::mvm::{H2MvmAlgorithm, MvmAlgorithm, UniMvmAlgorithm};
-use hmatc::plan::{Arena, ExecutorKind, H2Plan, HPlan, UniPlan};
+use hmatc::plan::{row_partition, Arena, ExecutorKind, H2Plan, HOperator, HPlan, PlannedOperator, ShardPlan, UniPlan};
 use hmatc::store::HotCache;
 use hmatc::util::args::Args;
 use hmatc::util::json::Json;
@@ -193,6 +196,38 @@ fn main() {
             drop(hm);
             drop(mstore);
             std::fs::remove_file(&path).ok();
+        }
+
+        // sharded-coordinator row: the H operator split into 2 row shards
+        // (the same ShardPlan slices the scatter/gather tier serves),
+        // executed shard by shard and reassembled from the owned rows —
+        // pinned bitwise against the unsharded planned operator before
+        // benching, so the row measures the partitioning overhead honestly
+        {
+            let op = PlannedOperator::from_h_with(std::sync::Arc::new(f.h.clone()), ExecutorKind::StaticLpt);
+            let shards: Vec<ShardPlan> = row_partition(&op, 2)
+                .expect("partition H operator")
+                .into_iter()
+                .map(|s| ShardPlan::build(&op, s, ExecutorKind::StaticLpt))
+                .collect();
+            let mut want = vec![0.0; n];
+            op.apply(1.0, &x, &mut want);
+            let mut got = vec![0.0; n];
+            for sp in &shards {
+                let rows = sp.owned(false);
+                let mut part = vec![0.0; rows.len()];
+                sp.apply_owned(false, 1.0, &x, None, &mut part);
+                got[rows].copy_from_slice(&part);
+            }
+            assert_bitwise(&got, &want, "H plan sharded-coord:2");
+            doc.push(("sharded-coord bitwise ok".to_string(), Json::Bool(true)));
+            let r = bench_fn(1, 5, 0.02, || {
+                for sp in &shards {
+                    let rows = sp.owned(false);
+                    sp.apply_owned(false, 1.0, &x, None, &mut y[rows]);
+                }
+            });
+            push_row(&mut t, &mut doc, "H", "", "plan sharded-coord:2", f.h.byte_size(), r.median);
         }
 
         for algo in MvmAlgorithm::all() {

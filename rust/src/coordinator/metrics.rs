@@ -1,13 +1,21 @@
 //! Coordinator metrics: request counts, latency percentiles, effective
-//! bandwidth, and the operator's decode-cache hit/miss counters.
+//! bandwidth, the operator's decode-cache hit/miss counters, and — in the
+//! sharded tier — lock-free per-shard counters (queue depth, inflight,
+//! backpressure, shard-local cache hit rate) with a
+//! [`crate::store::Residency`]-style one-line summary for the serve log.
 
 use crate::util::stats;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Accumulated metrics (thread safe).
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Per-shard counters of the scatter/gather tier; empty when unsharded.
+    shards: Vec<Arc<ShardCounters>>,
+    /// Front-door admission rejections ([`super::ServeError::Rejected`]).
+    rejected: AtomicU64,
 }
 
 #[derive(Default)]
@@ -40,9 +48,135 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
 }
 
+/// Lock-free counters for one shard worker, shared between the dispatcher
+/// (enqueue/backpressure), the worker (start/finish, cache polls) and
+/// reporting threads.
+#[derive(Default)]
+pub struct ShardCounters {
+    queued: AtomicUsize,
+    inflight: AtomicUsize,
+    backpressure: AtomicU64,
+    jobs: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+}
+
+impl ShardCounters {
+    /// A job entered the shard's bounded queue.
+    pub fn enqueue(&self) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The worker dequeued a job and started computing.
+    pub fn start(&self) {
+        self.queued.fetch_sub(1, Ordering::Relaxed);
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The worker finished a job (panicked ones included).
+    pub fn finish(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The shard's bounded queue was full when a job was offered — the
+    /// dispatcher had to block (backpressure event, not dropped work).
+    pub fn backpressure(&self) {
+        self.backpressure.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latest cumulative shard-local hot-cache counters (absolutes).
+    pub fn record_cache(&self, hits: u64, misses: u64) {
+        self.cache_hits.store(hits, Ordering::Relaxed);
+        self.cache_misses.store(misses, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ShardSnapshot {
+        ShardSnapshot {
+            queued: self.queued.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
+            backpressure: self.backpressure.load(Ordering::Relaxed),
+            jobs: self.jobs.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of one shard's counters.
+#[derive(Clone, Debug, Default)]
+pub struct ShardSnapshot {
+    pub queued: usize,
+    pub inflight: usize,
+    pub backpressure: u64,
+    pub jobs: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ShardSnapshot {
+    /// Shard-local hot-cache hit rate in [0, 1]; 0 when nothing was cached.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Metrics for a scatter/gather tier of `count` shards: one
+    /// [`ShardCounters`] per shard plus the shared aggregates.
+    pub fn with_shards(count: usize) -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            shards: (0..count).map(|_| Arc::new(ShardCounters::default())).collect(),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// Per-shard counters (empty when the server runs unsharded).
+    pub fn shard_counters(&self) -> &[Arc<ShardCounters>] {
+        &self.shards
+    }
+
+    /// Count one front-door admission rejection.
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total front-door admission rejections so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// `Residency`-style one-line shard summary for the serve log, e.g.
+    /// `shards: 3 | jobs 64/64/64 | queue 0/1/0 | inflight 1 | rejected 0 |
+    /// backpressure 2 | cache hit 93%/91%/95%`. `None` when unsharded.
+    pub fn shard_summary(&self) -> Option<String> {
+        if self.shards.is_empty() {
+            return None;
+        }
+        let snaps: Vec<ShardSnapshot> = self.shards.iter().map(|s| s.snapshot()).collect();
+        let join = |f: &dyn Fn(&ShardSnapshot) -> String| -> String {
+            snaps.iter().map(|s| f(s)).collect::<Vec<_>>().join("/")
+        };
+        Some(format!(
+            "shards: {} | jobs {} | queue {} | inflight {} | rejected {} | backpressure {} | cache hit {}",
+            snaps.len(),
+            join(&|s| s.jobs.to_string()),
+            join(&|s| s.queued.to_string()),
+            snaps.iter().map(|s| s.inflight).sum::<usize>(),
+            self.rejected(),
+            snaps.iter().map(|s| s.backpressure).sum::<u64>(),
+            join(&|s| format!("{:.0}%", 100.0 * s.cache_hit_rate())),
+        ))
     }
 
     pub fn record_batch(&self, batch_size: usize, mvm_seconds: f64, bytes: usize, latencies: &[f64]) {
@@ -120,5 +254,36 @@ mod tests {
         assert_eq!(s.cache_hits, 30);
         assert_eq!(s.cache_misses, 10);
         assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_counters_lifecycle() {
+        let m = Metrics::with_shards(2);
+        assert_eq!(m.shard_counters().len(), 2);
+        let sc = &m.shard_counters()[0];
+        sc.enqueue();
+        sc.enqueue();
+        assert_eq!(sc.snapshot().queued, 2);
+        sc.start();
+        let s = sc.snapshot();
+        assert_eq!((s.queued, s.inflight, s.jobs), (1, 1, 0));
+        sc.finish();
+        sc.backpressure();
+        sc.record_cache(9, 1);
+        let s = sc.snapshot();
+        assert_eq!((s.queued, s.inflight, s.jobs, s.backpressure), (1, 0, 1, 1));
+        assert!((s.cache_hit_rate() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_summary_line() {
+        let m = Metrics::new();
+        assert!(m.shard_summary().is_none());
+        let m = Metrics::with_shards(3);
+        m.record_rejected();
+        let line = m.shard_summary().expect("sharded metrics summarize");
+        assert!(line.starts_with("shards: 3"), "unexpected summary: {line}");
+        assert!(line.contains("rejected 1"), "unexpected summary: {line}");
+        assert!(line.contains("jobs 0/0/0"), "unexpected summary: {line}");
     }
 }

@@ -6,9 +6,18 @@
 //! and executes one *multi-RHS* traversal per batch — amortizing every load
 //! of (compressed) matrix data over the whole batch, exactly the
 //! bandwidth-oriented optimization the paper targets.
+//!
+//! With `--shards N` ([`MvmServer::start_sharded`]) the single worker is
+//! replaced by a scatter/gather tier over a row partition of the operator:
+//! a dispatcher broadcasts each batch's X panel to per-shard workers over
+//! bounded queues, a gather thread reassembles the disjoint owned rows in
+//! fixed shard order (bitwise identical to the unsharded plan), and
+//! admission control fails fast ([`ServeError::Rejected`]) once the pending
+//! backlog hits `queue_limit`.
 
 mod metrics;
 mod server;
+mod shard;
 
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{BatchPolicy, MvmServer, Request, Response};
+pub use metrics::{Metrics, MetricsSnapshot, ShardCounters, ShardSnapshot};
+pub use server::{BatchPolicy, MvmServer, Request, Response, ServeError, ServeResult};

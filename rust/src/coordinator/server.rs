@@ -1,4 +1,5 @@
-//! The MVM server: request queue, dynamic batcher, synchronous worker loop.
+//! The MVM server: request queue, dynamic batcher, and either a synchronous
+//! worker loop or a sharded scatter/gather tier.
 //!
 //! No tokio in the sandbox — the server uses std threads + channels, which is
 //! adequate: the hot path is the batched MVM itself, and the coordinator adds
@@ -18,12 +19,40 @@
 //! `HMATC_EXEC`) to serve on static LPT shards, the work-stealing deques, or
 //! K sharded sub-pools — the server code is identical for all three, and so
 //! are the served results (bitwise).
+//!
+//! # Sharded scatter/gather tier
+//!
+//! [`MvmServer::start_sharded`] replaces the single worker with a
+//! dispatcher → shard workers → gather pipeline over a
+//! [`crate::plan::row_partition`] of the operator:
+//!
+//! * the **dispatcher** batches requests exactly like the unsharded worker,
+//!   then broadcasts the assembled X panel (one `Arc<DMatrix>`, shared not
+//!   copied) to every shard's **bounded** job queue
+//!   ([`BatchPolicy::shard_queue`]; a full queue blocks the dispatcher and
+//!   counts a backpressure event) and posts a gather ticket;
+//! * each **shard worker** ([`super::shard`]) computes the owned rows of the
+//!   product on its own executor/arena/hot-cache;
+//! * the **gather** thread reassembles Y from the per-shard FIFO result
+//!   channels *in fixed shard order* (owned row ranges are disjoint, so the
+//!   scatter-add degenerates to deterministic row copies — the served Y is
+//!   **bitwise identical** to the unsharded plan's), records metrics, and
+//!   replies. Gathering batch *k* overlaps the shards computing batch *k+1*.
+//!
+//! **Admission control:** [`BatchPolicy::queue_limit`] bounds the pending
+//! backlog at the front door — beyond it, `submit` fails fast with
+//! [`ServeError::Rejected`] instead of growing the queue. A panicking shard
+//! surfaces as [`ServeError::ShardFailed`] on every request of the affected
+//! batch; nothing hangs and the worker keeps serving.
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ShardCounters};
+use super::shard::{shard_worker, ShardJob, ShardResult};
 use crate::la::DMatrix;
-use crate::plan::HOperator;
+use crate::plan::{row_partition, ExecutorKind, HOperator, PlannedOperator, ShardPlan};
+use crate::store::HotCache;
 use crate::util::Timer;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -33,7 +62,7 @@ pub struct Request {
     pub x: Vec<f64>,
     pub submitted: Instant,
     /// Channel the response is delivered on.
-    pub reply: Sender<Response>,
+    pub reply: Sender<ServeResult>,
 }
 
 /// The response: y = A x plus timing.
@@ -47,18 +76,50 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-/// Dynamic batching policy.
+/// Why the server refused or failed a request.
+#[derive(Clone, Debug)]
+pub enum ServeError {
+    /// Admission control: the pending backlog hit [`BatchPolicy::queue_limit`]
+    /// and the request was rejected at the front door (fail fast, no queue).
+    Rejected { pending: usize, limit: usize },
+    /// A shard worker panicked while computing the request's batch.
+    ShardFailed { shard: usize, message: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected { pending, limit } => {
+                write!(f, "request rejected: {pending} pending >= queue limit {limit}")
+            }
+            ServeError::ShardFailed { shard, message } => write!(f, "shard {shard} failed: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a submitted request resolves to.
+pub type ServeResult = Result<Response, ServeError>;
+
+/// Dynamic batching + admission policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// Maximum requests per batch.
     pub max_batch: usize,
     /// How long to wait for more requests once one is pending.
     pub linger: Duration,
+    /// Reject new submissions once this many requests are pending (queued or
+    /// in flight). `0` = unbounded (no admission control).
+    pub queue_limit: usize,
+    /// Per-shard job-queue bound (batches) of the sharded tier; a full queue
+    /// applies backpressure to the dispatcher.
+    pub shard_queue: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, linger: Duration::from_micros(200) }
+        BatchPolicy { max_batch: 8, linger: Duration::from_micros(200), queue_limit: 0, shard_queue: 2 }
     }
 }
 
@@ -66,9 +127,19 @@ impl Default for BatchPolicy {
 pub struct MvmServer {
     tx: Sender<Request>,
     worker: Option<std::thread::JoinHandle<()>>,
+    gather: Option<std::thread::JoinHandle<()>>,
+    shard_workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     next_id: Mutex<u64>,
+    /// Requests submitted but not yet replied to (admission control).
+    pending: Arc<AtomicUsize>,
+    queue_limit: usize,
+    /// Test-only fault injection slot: shard index to fail on the next batch.
+    fault: Arc<AtomicUsize>,
 }
+
+/// Fault-slot value meaning "no injected fault".
+const NO_FAULT: usize = usize::MAX;
 
 impl MvmServer {
     /// Start the worker loop for operator `m` (an `Arc` of any
@@ -77,16 +148,108 @@ impl MvmServer {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Metrics::new());
         let met = metrics.clone();
+        let pending = Arc::new(AtomicUsize::new(0));
+        let pend = pending.clone();
         let worker = std::thread::Builder::new()
             .name("hmatc-mvm-server".into())
-            .spawn(move || worker_loop(m, policy, rx, met))
+            .spawn(move || worker_loop(m, policy, rx, met, pend))
             .expect("spawn server worker");
-        MvmServer { tx, worker: Some(worker), metrics, next_id: Mutex::new(0) }
+        MvmServer {
+            tx,
+            worker: Some(worker),
+            gather: None,
+            shard_workers: Vec::new(),
+            metrics,
+            next_id: Mutex::new(0),
+            pending,
+            queue_limit: policy.queue_limit,
+            fault: Arc::new(AtomicUsize::new(NO_FAULT)),
+        }
     }
 
-    /// Submit a request; returns a receiver for the response.
-    pub fn submit(&self, x: Vec<f64>) -> Receiver<Response> {
+    /// Start the scatter/gather tier: partition `op` into `shards` row
+    /// shards ([`row_partition`]), give each its own worker thread (executor
+    /// of `kind`, arena, and — when `HMATC_CACHE_BYTES` is set — its own
+    /// hot cache), and pipeline dispatcher → workers → gather. Served
+    /// results are bitwise identical to [`MvmServer::start`] over the same
+    /// operator. Errors on an invalid shard count, an unpartitionable
+    /// operator, or an external-ordering operator (the fold lives in the
+    /// unsharded front; shard slices run internal ordering only).
+    pub fn start_sharded(op: Arc<PlannedOperator>, shards: usize, kind: ExecutorKind, policy: BatchPolicy) -> Result<MvmServer, String> {
+        if op.is_external_ordering() {
+            return Err("sharded serving takes internal-ordering operators (drop with_external_ordering)".to_string());
+        }
+        let specs = row_partition(&op, shards)?;
+        let plans: Vec<Arc<ShardPlan>> = specs.into_iter().map(|s| Arc::new(ShardPlan::build(&op, s, kind))).collect();
+        for p in &plans {
+            // shard-local decode-once cache; None leaves the parent plan's
+            // shared cache active as the fallback
+            p.set_hot_cache(HotCache::from_env());
+        }
+        let metrics = Arc::new(Metrics::with_shards(plans.len()));
+        let counters: Vec<Arc<ShardCounters>> = metrics.shard_counters().to_vec();
+        let pending = Arc::new(AtomicUsize::new(0));
+        let fault = Arc::new(AtomicUsize::new(NO_FAULT));
+
+        let (tx, rx) = channel::<Request>();
+        let (ticket_tx, ticket_rx) = channel::<Ticket>();
+        let mut job_txs = Vec::with_capacity(plans.len());
+        let mut result_rxs = Vec::with_capacity(plans.len());
+        let mut shard_workers = Vec::with_capacity(plans.len());
+        for (i, plan) in plans.iter().enumerate() {
+            let (job_tx, job_rx) = sync_channel::<ShardJob>(policy.shard_queue.max(1));
+            let (res_tx, res_rx) = channel::<ShardResult>();
+            let (plan, ctr) = (plan.clone(), counters[i].clone());
+            let handle = std::thread::Builder::new()
+                .name(format!("hmatc-shard-{i}"))
+                .spawn(move || shard_worker(plan, job_rx, res_tx, ctr))
+                .expect("spawn shard worker");
+            job_txs.push(job_tx);
+            result_rxs.push(res_rx);
+            shard_workers.push(handle);
+        }
+
+        let n_in = op.ncols();
+        let (disp_ctrs, disp_fault) = (counters.clone(), fault.clone());
+        let worker = std::thread::Builder::new()
+            .name("hmatc-mvm-dispatch".into())
+            .spawn(move || dispatch_loop(n_in, policy, rx, job_txs, ticket_tx, disp_ctrs, disp_fault))
+            .expect("spawn dispatcher");
+
+        let (n_out, bytes) = (op.nrows(), op.byte_size());
+        let (gather_met, gather_pend) = (metrics.clone(), pending.clone());
+        let gather = std::thread::Builder::new()
+            .name("hmatc-mvm-gather".into())
+            .spawn(move || gather_loop(n_out, bytes, ticket_rx, result_rxs, gather_met, gather_pend))
+            .expect("spawn gather");
+
+        Ok(MvmServer {
+            tx,
+            worker: Some(worker),
+            gather: Some(gather),
+            shard_workers,
+            metrics,
+            next_id: Mutex::new(0),
+            pending,
+            queue_limit: policy.queue_limit,
+            fault,
+        })
+    }
+
+    /// Submit a request; returns a receiver for the outcome. With admission
+    /// control active ([`BatchPolicy::queue_limit`]), an over-limit backlog
+    /// resolves the receiver immediately with [`ServeError::Rejected`].
+    pub fn submit(&self, x: Vec<f64>) -> Receiver<ServeResult> {
         let (reply, rx) = channel();
+        if self.queue_limit > 0 {
+            let p = self.pending.load(Ordering::Acquire);
+            if p >= self.queue_limit {
+                self.metrics.record_rejected();
+                let _ = reply.send(Err(ServeError::Rejected { pending: p, limit: self.queue_limit }));
+                return rx;
+            }
+        }
+        self.pending.fetch_add(1, Ordering::AcqRel);
         let id = {
             let mut g = self.next_id.lock().unwrap();
             *g += 1;
@@ -96,53 +259,78 @@ impl MvmServer {
         rx
     }
 
-    /// Blocking convenience call.
-    pub fn call(&self, x: Vec<f64>) -> Response {
+    /// Blocking call that surfaces serve errors.
+    pub fn try_call(&self, x: Vec<f64>) -> ServeResult {
         self.submit(x).recv().expect("server dropped response")
+    }
+
+    /// Blocking convenience call; panics on [`ServeError`].
+    pub fn call(&self, x: Vec<f64>) -> Response {
+        self.try_call(x).expect("serve error")
+    }
+
+    /// Test hook: make shard `index` panic on the next batch it receives.
+    /// The affected requests must resolve to [`ServeError::ShardFailed`] —
+    /// no hang — and the shard keeps serving afterwards. No-op unsharded.
+    pub fn inject_shard_fault(&self, index: usize) {
+        self.fault.store(index, Ordering::Release);
     }
 }
 
 impl Drop for MvmServer {
     fn drop(&mut self) {
-        // close the queue, then join the worker
+        // close the request queue; the shutdown then cascades down the tier:
+        // dispatcher exits and drops the job/ticket senders, shard workers
+        // exit and drop their result senders, gather drains and exits
         let (dead_tx, _) = channel();
         let _ = std::mem::replace(&mut self.tx, dead_tx);
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
+        for h in self.shard_workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.gather.take() {
+            let _ = h.join();
+        }
     }
 }
 
-fn worker_loop(m: Arc<dyn HOperator>, policy: BatchPolicy, rx: Receiver<Request>, metrics: Arc<Metrics>) {
+/// Block for the first request, then linger-fill the batch (shared by the
+/// unsharded worker and the sharded dispatcher — identical batch shapes).
+fn fill_batch(rx: &Receiver<Request>, policy: &BatchPolicy) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.linger;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(_) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Assemble the batch's right-hand sides into one `n_in × b` panel.
+fn assemble_panel(n_in: usize, batch: &[Request]) -> DMatrix {
+    let mut x = DMatrix::zeros(n_in, batch.len());
+    for (c, r) in batch.iter().enumerate() {
+        x.col_mut(c).copy_from_slice(&r.x);
+    }
+    x
+}
+
+fn worker_loop(m: Arc<dyn HOperator>, policy: BatchPolicy, rx: Receiver<Request>, metrics: Arc<Metrics>, pending: Arc<AtomicUsize>) {
     let n_in = m.ncols();
     let n_out = m.nrows();
     let bytes = m.byte_size();
-    loop {
-        // block for the first request
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders dropped
-        };
-        let mut batch = vec![first];
-        // linger for more
-        let deadline = Instant::now() + policy.linger;
-        while batch.len() < policy.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
-            }
-        }
-
-        // assemble the multivector
+    while let Some(batch) = fill_batch(&rx, &policy) {
         let b = batch.len();
-        let mut x = DMatrix::zeros(n_in, b);
-        for (c, r) in batch.iter().enumerate() {
-            x.col_mut(c).copy_from_slice(&r.x);
-        }
+        let x = assemble_panel(n_in, &batch);
         let mut y = DMatrix::zeros(n_out, b);
         let t = Timer::start();
         m.apply_multi(1.0, &x, &mut y);
@@ -157,7 +345,128 @@ fn worker_loop(m: Arc<dyn HOperator>, policy: BatchPolicy, rx: Receiver<Request>
         }
         for (c, r) in batch.into_iter().enumerate() {
             let latency = r.submitted.elapsed().as_secs_f64();
-            let _ = r.reply.send(Response { id: r.id, y: y.col(c).to_vec(), latency, batch_size: b });
+            let _ = r.reply.send(Ok(Response { id: r.id, y: y.col(c).to_vec(), latency, batch_size: b }));
+            pending.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// One batch in flight between the dispatcher and the gather thread.
+struct Ticket {
+    seq: u64,
+    batch: Vec<Request>,
+    timer: Timer,
+}
+
+/// Scatter side of the sharded tier: batch requests, broadcast the shared X
+/// panel to every shard's bounded queue, post the gather ticket. Posting the
+/// ticket first lets the gather thread overlap with shard compute.
+fn dispatch_loop(
+    n_in: usize,
+    policy: BatchPolicy,
+    rx: Receiver<Request>,
+    jobs: Vec<SyncSender<ShardJob>>,
+    tickets: Sender<Ticket>,
+    counters: Vec<Arc<ShardCounters>>,
+    fault: Arc<AtomicUsize>,
+) {
+    let mut seq = 0u64;
+    while let Some(batch) = fill_batch(&rx, &policy) {
+        let x = Arc::new(assemble_panel(n_in, &batch));
+        if tickets.send(Ticket { seq, batch, timer: Timer::start() }).is_err() {
+            return;
+        }
+        let failing = fault.swap(NO_FAULT, Ordering::AcqRel);
+        for (i, js) in jobs.iter().enumerate() {
+            counters[i].enqueue();
+            let job = ShardJob { seq, x: x.clone(), fail: i == failing };
+            match js.try_send(job) {
+                Ok(()) => {}
+                Err(TrySendError::Full(job)) => {
+                    // bounded queue full: count the backpressure event, then
+                    // block — admission control lives at the front door, so
+                    // no work is dropped here
+                    counters[i].backpressure();
+                    if js.send(job).is_err() {
+                        return;
+                    }
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+            }
+        }
+        seq += 1;
+    }
+}
+
+/// Gather side: for each ticket, collect every shard's owned rows **in fixed
+/// shard order** from per-shard FIFO channels, reassemble Y (disjoint row
+/// copies — bitwise deterministic), record metrics, reply. Runs one batch
+/// behind the shards, overlapping gather with compute.
+fn gather_loop(
+    n_out: usize,
+    bytes: usize,
+    tickets: Receiver<Ticket>,
+    results: Vec<Receiver<ShardResult>>,
+    metrics: Arc<Metrics>,
+    pending: Arc<AtomicUsize>,
+) {
+    while let Ok(t) = tickets.recv() {
+        let b = t.batch.len();
+        let mut y = DMatrix::zeros(n_out, b);
+        let mut failure: Option<(usize, String)> = None;
+        for (i, rx) in results.iter().enumerate() {
+            let res = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => {
+                    if failure.is_none() {
+                        failure = Some((i, "shard worker exited".to_string()));
+                    }
+                    continue;
+                }
+            };
+            debug_assert_eq!(res.seq, t.seq, "per-shard FIFOs must stay in batch order");
+            match res.out {
+                Ok(part) => {
+                    if failure.is_none() {
+                        for c in 0..b {
+                            y.col_mut(c)[res.rows.clone()].copy_from_slice(part.col(c));
+                        }
+                    }
+                }
+                Err(message) => {
+                    if failure.is_none() {
+                        failure = Some((i, message));
+                    }
+                }
+            }
+        }
+        let mvm_secs = t.timer.elapsed();
+        match failure {
+            None => {
+                let latencies: Vec<f64> = t.batch.iter().map(|r| r.submitted.elapsed().as_secs_f64()).collect();
+                metrics.record_batch(b, mvm_secs, bytes, &latencies);
+                let (mut hits, mut misses, mut any) = (0u64, 0u64, false);
+                for sc in metrics.shard_counters() {
+                    let s = sc.snapshot();
+                    any |= s.cache_hits + s.cache_misses > 0;
+                    hits += s.cache_hits;
+                    misses += s.cache_misses;
+                }
+                if any {
+                    metrics.record_cache(hits, misses);
+                }
+                for (c, r) in t.batch.into_iter().enumerate() {
+                    let latency = r.submitted.elapsed().as_secs_f64();
+                    let _ = r.reply.send(Ok(Response { id: r.id, y: y.col(c).to_vec(), latency, batch_size: b }));
+                    pending.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+            Some((shard, message)) => {
+                for r in t.batch.into_iter() {
+                    let _ = r.reply.send(Err(ServeError::ShardFailed { shard, message: message.clone() }));
+                    pending.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
         }
     }
 }
@@ -251,15 +560,37 @@ mod tests {
     #[test]
     fn batches_concurrent_requests() {
         let h = small_h();
-        let server = Arc::new(MvmServer::start(h.clone(), BatchPolicy { max_batch: 16, linger: Duration::from_millis(20) }));
+        let policy = BatchPolicy { max_batch: 16, linger: Duration::from_millis(20), ..BatchPolicy::default() };
+        let server = Arc::new(MvmServer::start(h.clone(), policy));
         let mut rng = Rng::new(162);
         let xs: Vec<Vec<f64>> = (0..12).map(|_| rng.vector(h.ncols())).collect();
         let rxs: Vec<_> = xs.iter().map(|x| server.submit(x.clone())).collect();
-        let resps: Vec<Response> = rxs.into_iter().map(|r| r.recv().unwrap()).collect();
+        let resps: Vec<Response> = rxs.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
         // at least some requests must have shared a batch
         assert!(resps.iter().any(|r| r.batch_size > 1), "no batching happened");
         let snap = server.metrics.snapshot();
         assert_eq!(snap.requests, 12);
         assert!(snap.batches < 12);
+    }
+
+    #[test]
+    fn sharded_server_matches_unsharded_bitwise() {
+        let h = small_h();
+        let op = Arc::new(crate::plan::PlannedOperator::from_h_with(h.clone(), crate::plan::ExecutorKind::StaticLpt));
+        let mut rng = Rng::new(165);
+        let xs: Vec<Vec<f64>> = (0..4).map(|_| rng.vector(h.ncols())).collect();
+        let flat = MvmServer::start(op.clone(), BatchPolicy::default());
+        let want: Vec<Vec<f64>> = xs.iter().map(|x| flat.call(x.clone()).y).collect();
+        drop(flat);
+        let sharded = MvmServer::start_sharded(op, 2, crate::plan::ExecutorKind::StaticLpt, BatchPolicy::default())
+            .expect("sharded server starts");
+        for (x, w) in xs.iter().zip(&want) {
+            let got = sharded.call(x.clone()).y;
+            for (a, b) in got.iter().zip(w) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        let line = sharded.metrics.shard_summary().expect("sharded metrics");
+        assert!(line.starts_with("shards: 2"), "unexpected summary: {line}");
     }
 }

@@ -1,0 +1,74 @@
+//! Shard worker of the scatter/gather tier.
+//!
+//! One worker thread owns one [`ShardPlan`] (its sliced schedules, executor,
+//! arena, and optional shard-local hot cache) and loops over a **bounded**
+//! job queue: the dispatcher broadcasts each batch's X panel (an
+//! `Arc<DMatrix>`, shared not copied) to every shard, the worker computes
+//! the owned rows of the batch product, and ships them to the gather thread
+//! on its own FIFO result channel. Gathering per-shard FIFOs in fixed shard
+//! order is what makes the reassembled Y bitwise deterministic — no
+//! completion-order races can reorder the row copies.
+//!
+//! Worker panics are contained per job: the product runs under
+//! `catch_unwind`, the panic message travels to the gather thread as a
+//! [`ShardResult`] error (so clients get a [`super::ServeError::ShardFailed`]
+//! instead of a hang), and the worker keeps serving subsequent jobs.
+
+use super::metrics::ShardCounters;
+use crate::la::DMatrix;
+use crate::plan::ShardPlan;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// One scatter message: the assembled X panel of a batch.
+pub(crate) struct ShardJob {
+    /// Batch sequence number (sanity-checked by the gather thread).
+    pub seq: u64,
+    /// Shared X panel, `ncols × batch` in internal ordering.
+    pub x: Arc<DMatrix>,
+    /// Test-only fault injection: panic instead of computing this job.
+    pub fail: bool,
+}
+
+/// One gather message: the shard's owned rows of the batch product (or the
+/// panic message when the shard failed on this job).
+pub(crate) struct ShardResult {
+    pub seq: u64,
+    pub rows: std::ops::Range<usize>,
+    pub out: Result<DMatrix, String>,
+}
+
+/// Worker loop: runs until the job channel closes (server drop) or the
+/// gather side goes away.
+pub(crate) fn shard_worker(shard: Arc<ShardPlan>, jobs: Receiver<ShardJob>, results: Sender<ShardResult>, counters: Arc<ShardCounters>) {
+    let rows = shard.owned(false);
+    while let Ok(job) = jobs.recv() {
+        counters.start();
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            assert!(!job.fail, "injected shard fault");
+            let mut out = DMatrix::zeros(rows.len(), job.x.ncols());
+            shard.apply_multi_owned(false, 1.0, &job.x, None, &mut out);
+            out
+        }));
+        counters.finish();
+        if let Some((hits, misses)) = shard.cache_counters() {
+            counters.record_cache(hits, misses);
+        }
+        let out = res.map_err(|p| panic_message(p.as_ref()));
+        if results.send(ShardResult { seq: job.seq, rows: rows.clone(), out }).is_err() {
+            return;
+        }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "shard worker panicked".to_string()
+    }
+}

@@ -27,7 +27,10 @@
 //!   re-balance the LPT packings bitwise-invariantly — `hmatc calibrate`,
 //!   `HMATC_COSTS` / `--costs`);
 //! * a PJRT [`runtime`] that executes AOT-lowered JAX/Pallas tile kernels and
-//!   a request-batching MVM server in [`coordinator`];
+//!   a request-batching MVM server in [`coordinator`] — optionally a
+//!   scatter/gather tier over a row-sharded operator partition
+//!   ([`plan::row_partition`] / [`plan::ShardPlan`], `serve --shards N` /
+//!   `HMATC_SHARDS`, bitwise identical to unsharded serving);
 //! * the measurement substrate ([`bench`]) used by the per-figure benchmark
 //!   binaries under `rust/benches/`.
 //!

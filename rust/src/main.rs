@@ -4,10 +4,10 @@
 //! hmatc info
 //! hmatc build     --level 4 --eps 1e-6 [--fmt h|uh|h2] [--codec aflp|fpx] [--compress]
 //! hmatc mvm       --level 4 --eps 1e-6 --fmt h2 --algo "row wise" [--compress --codec aflp]
-//! hmatc pack      --level 4 --eps 1e-6 [--fmt h|uh|h2] [--compress] --out operator.hmpk
+//! hmatc pack      --level 4 --eps 1e-6 [--fmt h|uh|h2] [--compress] [--shards N] --out operator.hmpk
 //! hmatc serve     --level 4 --eps 1e-6 --requests 256 --batch 8 [--fmt h|uh|h2] [--plan]
 //!                 [--executor lpt|steal|sharded:K] [--compress] [--costs costs.json]
-//!                 [--mmap operator.hmpk]
+//!                 [--mmap operator.hmpk] [--shards N --queue-limit Q --shard-queue B]
 //! hmatc calibrate [--level 3 --eps 1e-6 --fmt h|uh|h2 --rounds 8] [--quick] [--out costs.json]
 //! hmatc solve     --level 3 --eps 1e-6 [--compress]
 //! hmatc roofline
@@ -24,6 +24,15 @@
 //! into the mapping — decode streams straight off the page cache, the plan
 //! prefetches the next level's extents at each barrier, and
 //! `HMATC_CACHE_BYTES` bounds a decode-once hot-panel cache.
+//!
+//! `serve --shards N` (or `HMATC_SHARDS=N`) serves through the scatter/gather
+//! coordinator tier instead of the single worker: the operator is
+//! row-partitioned into N shard plans (implies `--plan`), each with its own
+//! executor, arena, and hot cache; `--queue-limit` bounds the pending backlog
+//! (admission control, fail-fast rejections) and `--shard-queue` bounds each
+//! shard's job queue (dispatcher backpressure). Served results are bitwise
+//! identical to the unsharded plan. `pack --shards N` additionally writes N
+//! byte-identical `<out>.shardI` replica files, one mapping per shard worker.
 
 use hmatc::bench::{bench_fn, measure_peak_bandwidth};
 use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
@@ -235,7 +244,9 @@ fn mvm_cmd(args: &Args) {
 /// then write every blob payload into one checksummed HMPK file that
 /// `serve --mmap` (with identical flags) maps back in. Without `--compress`
 /// there are no blob payloads and the pack is empty — legal, but pointless,
-/// so we say so.
+/// so we say so. `--shards N` additionally writes N byte-identical
+/// `<out>.shardI` replicas so each shard worker of a sharded deployment can
+/// map its own file (own inode, own page-cache stream).
 fn pack_cmd(args: &Args) {
     let p = problem(args);
     let h = build_h(args, &p);
@@ -274,6 +285,17 @@ fn pack_cmd(args: &Args) {
     match res {
         Ok(s) => {
             println!("packed {} extents, payload {}, file {} → {out}", s.extents, fmt_bytes(s.payload_bytes), fmt_bytes(s.file_bytes));
+            let shards = args.num_or("shards", 1usize);
+            if shards > 1 {
+                for i in 0..shards {
+                    let sp = format!("{out}.shard{i}");
+                    if let Err(e) = std::fs::copy(&out, &sp) {
+                        eprintln!("pack: cannot write shard replica {sp}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+                println!("wrote {shards} shard replicas: {out}.shard0 … {out}.shard{}", shards - 1);
+            }
             if s.extents == 0 {
                 println!("note: no compressed payloads (pass --compress); the pack is valid but empty");
             } else {
@@ -295,17 +317,26 @@ fn serve_cmd(args: &Args) {
     // precomputed zero-allocation schedule executor in front of it, and
     // --executor picks the backend the schedules run on
     let fmt = args.str_or("fmt", "h");
-    let plan = args.flag("plan");
+    // --shards N (default HMATC_SHARDS) serves through the scatter/gather
+    // tier over a row partition of the operator; shard plans slice the
+    // planned schedules, so it implies --plan
+    let shards = args.num_or("shards", hmatc::plan::env_shard_count());
+    let plan = args.flag("plan") || shards > 1;
     let kind = args.parse_or("executor", ExecutorKind::from_env());
     // --costs beats HMATC_COSTS; bad files warn and keep the static costs
     let profile = load_costs(args);
     // the printed source must match what rebalance() will actually apply —
     // an unusable profile (e.g. all-zero coefficients) is ignored
     let cost_src = hmatc::plan::costmodel::source_label(profile.as_ref());
-    let planned = |po: PlannedOperator| {
+    // sharded serving needs the concrete PlannedOperator back out of the
+    // type-erased Arc<dyn HOperator>, so the closure parks a clone aside
+    let planned_slot: std::cell::Cell<Option<Arc<PlannedOperator>>> = std::cell::Cell::new(None);
+    let planned = |po: PlannedOperator| -> Arc<PlannedOperator> {
         if let Some(p) = &profile {
             po.rebalance(p);
         }
+        let po = Arc::new(po);
+        planned_slot.set(Some(po.clone()));
         po
     };
     // --mmap re-points every compressed blob into a pack file written by
@@ -336,7 +367,7 @@ fn serve_cmd(args: &Args) {
             }
             let h = Arc::new(h);
             if plan {
-                Arc::new(planned(PlannedOperator::from_h_with(h, kind)))
+                planned(PlannedOperator::from_h_with(h, kind))
             } else {
                 h
             }
@@ -352,7 +383,7 @@ fn serve_cmd(args: &Args) {
             }
             let uh = Arc::new(uh);
             if plan {
-                Arc::new(planned(PlannedOperator::from_uniform_with(uh, kind)))
+                planned(PlannedOperator::from_uniform_with(uh, kind))
             } else {
                 uh
             }
@@ -368,7 +399,7 @@ fn serve_cmd(args: &Args) {
             }
             let h2 = Arc::new(h2);
             if plan {
-                Arc::new(planned(PlannedOperator::from_h2_with(h2, kind)))
+                planned(PlannedOperator::from_h2_with(h2, kind))
             } else {
                 h2
             }
@@ -380,7 +411,8 @@ fn serve_cmd(args: &Args) {
     };
     let kernels = hmatc::compress::dispatch::kernels_label();
     if plan {
-        println!("serving {} operator ({}), executor {kind}, codec kernels {kernels}, costs {cost_src}", op.format_name(), fmt_bytes(op.byte_size()));
+        let exec = if shards > 1 { format!("{kind} × {shards} shards") } else { kind.to_string() };
+        println!("serving {} operator ({}), executor {exec}, codec kernels {kernels}, costs {cost_src}", op.format_name(), fmt_bytes(op.byte_size()));
     } else {
         println!("serving {} operator ({}), codec kernels {kernels}", op.format_name(), fmt_bytes(op.byte_size()));
     }
@@ -388,10 +420,24 @@ fn serve_cmd(args: &Args) {
     let batch = args.num_or("batch", 8usize);
     let n = op.ncols();
     let op_stats = op.clone();
-    let server = Arc::new(MvmServer::start(
-        op,
-        BatchPolicy { max_batch: batch, linger: std::time::Duration::from_micros(args.num_or("linger-us", 200u64)) },
-    ));
+    let policy = BatchPolicy {
+        max_batch: batch,
+        linger: std::time::Duration::from_micros(args.num_or("linger-us", 200u64)),
+        queue_limit: args.num_or("queue-limit", 0usize),
+        shard_queue: args.num_or("shard-queue", 2usize),
+    };
+    let server = if shards > 1 {
+        let po = planned_slot.take().expect("--shards implies --plan");
+        match MvmServer::start_sharded(po, shards, kind, policy) {
+            Ok(s) => Arc::new(s),
+            Err(e) => {
+                eprintln!("--shards {shards}: {e}");
+                std::process::exit(2);
+            }
+        }
+    } else {
+        Arc::new(MvmServer::start(op, policy))
+    };
     let t = Timer::start();
     // closed-loop clients from a few threads
     let nclients = 4usize;
@@ -402,7 +448,8 @@ fn serve_cmd(args: &Args) {
                 let mut rng = Rng::new(1000 + c as u64);
                 for _ in 0..nreq / nclients {
                     let x = rng.vector(n);
-                    let _ = server.call(x);
+                    // rejections (with --queue-limit) land in the metrics
+                    let _ = server.try_call(x);
                 }
             });
         }
@@ -420,10 +467,14 @@ fn serve_cmd(args: &Args) {
         fmt_secs(m.p99_latency),
         m.effective_gbs
     );
-    if let Some((hits, misses)) = op_stats.cache_counters() {
+    // per-shard hit rates live in the shard summary below
+    if let Some((hits, misses)) = op_stats.cache_counters().filter(|_| shards <= 1) {
         let total = hits + misses;
         let rate = if total == 0 { 0.0 } else { 100.0 * hits as f64 / total as f64 };
         println!("hot cache: {hits} hits / {misses} misses ({rate:.1}% hit rate)");
+    }
+    if let Some(line) = server.metrics.shard_summary() {
+        println!("{line}");
     }
 }
 

@@ -228,6 +228,19 @@ fn gather_panel(x: &DMatrix, rows: &Range<usize>, xp: &mut [f64]) {
     }
 }
 
+/// True iff the half-open ranges overlap.
+fn ranges_intersect(a: &Range<usize>, b: &Range<usize>) -> bool {
+    a.start < b.end && b.start < a.end
+}
+
+/// Filter each level's task ids by a predicate, PRESERVING the level count
+/// (empty levels stay): a slice must keep the parent schedule's barrier
+/// structure so prefetch group indices line up with the shared
+/// [`PrefetchPlan`].
+fn filter_level_ids(level_ids: &[Vec<usize>], keep: impl Fn(usize) -> bool) -> Vec<Vec<usize>> {
+    level_ids.iter().map(|ids| ids.iter().copied().filter(|&id| keep(id)).collect()).collect()
+}
+
 // ---------------------------------------------------------------------------
 // H-matrix plan
 // ---------------------------------------------------------------------------
@@ -389,10 +402,18 @@ impl HSchedule {
 
     #[allow(clippy::too_many_arguments)]
     fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        arena.ensure(exec.buffers_needed(self.max_shards.load(Ordering::Relaxed)), self.scratch, 0, 0);
+        let levels = self.levels.load();
+        self.exec_on(&levels, self.max_shards.load(Ordering::Relaxed), self.scratch, m, adjoint, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Run an explicit level packing — the schedule's own, or a
+    /// row-restricted [`HSlice`] of it. Task bodies are identical either way,
+    /// so any packing of the same task set computes bitwise-identical rows.
+    #[allow(clippy::too_many_arguments)]
+    fn exec_on(&self, levels: &[Vec<Shard>], max_shards: usize, scratch: usize, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
+        arena.ensure(exec.buffers_needed(max_shards), scratch, 0, 0);
         let (bufs, _, _) = arena.split();
         let yy = SharedVec::new(y);
-        let levels = self.levels.load();
         self.prefetch.issue(0);
         for (li, level) in levels.iter().enumerate() {
             self.prefetch.issue(li + 1);
@@ -418,7 +439,6 @@ impl HSchedule {
     /// data is streamed once and applied to all `b` columns.
     #[allow(clippy::too_many_arguments)]
     fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        let ylen = y.nrows();
         let nrhs = y.ncols();
         // gen before profile: a packing is cached only under a generation
         // at least as old as the profile it was built from
@@ -428,7 +448,15 @@ impl HSchedule {
             let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
             balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards)
         });
-        let (max_shards, scratch) = max_shard_stats(&levels);
+        self.exec_multi_on(&levels, m, adjoint, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Batched execution of an explicit level packing (see [`Self::exec_on`]).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi_on(&self, levels: &[Vec<Shard>], m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
+        let ylen = y.nrows();
+        let nrhs = y.ncols();
+        let (max_shards, scratch) = max_shard_stats(levels);
         arena.ensure(exec.buffers_needed(max_shards), scratch, 0, 0);
         let (bufs, _, _) = arena.split();
         let yy = SharedVec::new(y.data_mut());
@@ -464,6 +492,55 @@ impl HSchedule {
                 }
             });
         }
+    }
+}
+
+/// Row-restricted view of one H-schedule half: the task ids whose write
+/// ranges intersect one shard's owned rows, re-packed for the shard's own
+/// executor. The slice holds NO task data — it indexes into the parent
+/// schedule — and its level count matches the parent's, so the shared
+/// prefetch plan and barrier structure are unchanged. A shard executes every
+/// retained task in full (ancestor tasks redundantly, into a full-length
+/// local y), which is what makes the harvested owned rows bitwise equal to
+/// the unsharded product: each row's accumulation chain is replayed
+/// identically, never re-associated.
+pub(crate) struct HSlice {
+    adjoint: bool,
+    level_ids: Vec<Vec<usize>>,
+    levels: Packing<Vec<Vec<Shard>>>,
+    multi: MultiCache<Vec<Vec<Shard>>>,
+    nshards: usize,
+}
+
+impl HSchedule {
+    fn slice(&self, adjoint: bool, rows: &Range<usize>, nshards: usize) -> HSlice {
+        let level_ids = filter_level_ids(&self.level_ids, |id| ranges_intersect(&self.tasks[id].dst, rows));
+        let prof = self.profile.read().unwrap().clone();
+        let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), 1);
+        let levels: Vec<Vec<Shard>> =
+            level_ids.iter().map(|ids| balance_level(ids, &costs, &self.scratch1, nshards)).collect();
+        HSlice { adjoint, level_ids, levels: Packing::new(levels), multi: MultiCache::new(), nshards }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_slice(&self, sl: &HSlice, m: &HMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let levels = sl.levels.load();
+        let (mx, scr) = max_shard_stats(&levels);
+        self.exec_on(&levels, mx, scr, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi_slice(&self, sl: &HSlice, m: &HMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let nrhs = y.ncols();
+        // keyed by the PARENT's cost generation: a rebalance invalidates the
+        // slice's cached per-width packings exactly like the parent's own
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let levels = sl.multi.get(gen, nrhs, || {
+            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
+            balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards)
+        });
+        self.exec_multi_on(&levels, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
     }
 }
 
@@ -595,6 +672,41 @@ impl HPlan {
         assert_eq!(x.ncols(), y.ncols());
         let hot = self.hot_cache();
         self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
+    }
+
+    /// Row-restricted slice of one schedule half for a shard owning output
+    /// rows `rows` (forward) / output cols (adjoint), packed for a
+    /// `nshards`-wide executor.
+    pub(crate) fn slice(&self, m: &HMatrix, adjoint: bool, rows: &Range<usize>, nshards: usize) -> HSlice {
+        if adjoint {
+            self.adj(m).slice(true, rows, nshards)
+        } else {
+            self.fwd(m).slice(false, rows, nshards)
+        }
+    }
+
+    /// Per-task (write range, modeled cost at b = 1) of one schedule half —
+    /// the row partitioner prorates these onto the leaf-cluster seam.
+    pub(crate) fn task_loads(&self, m: &HMatrix, adjoint: bool) -> Vec<(Range<usize>, f64)> {
+        let s = if adjoint { self.adj(m) } else { self.fwd(m) };
+        let prof = s.profile.read().unwrap().clone();
+        let costs = model_costs(&s.feats, &s.fixed, &s.per_rhs, prof.as_deref(), 1);
+        s.tasks.iter().zip(&costs).map(|(t, &c)| (t.dst.clone(), c)).collect()
+    }
+
+    /// Execute a slice into a FULL-length `y` (the shard harvests its owned
+    /// rows afterwards) on the shard's own executor.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_slice(&self, m: &HMatrix, sl: &HSlice, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
+        s.exec_slice(sl, m, alpha, x, y, arena, exec, hot);
+    }
+
+    /// Batched variant of [`Self::execute_slice`] (full-height `y` panel).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_multi_slice(&self, m: &HMatrix, sl: &HSlice, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
+        s.exec_multi_slice(sl, m, alpha, x, y, arena, exec, hot);
     }
 
     /// Re-run LPT partitioning of every built schedule half with costs from
@@ -977,8 +1089,20 @@ impl UniSchedule {
 
     #[allow(clippy::too_many_arguments)]
     fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
+        let fshards = self.fshards.load();
+        let levels = self.levels.load();
+        self.exec_on(&fshards, &levels, self.max_shards.load(Ordering::Relaxed), self.scratch, m, adjoint, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Run explicit packings — the schedule's own, or a row-restricted
+    /// [`UniSlice`] of them (see [`HSchedule::exec_on`]). The full-length
+    /// coefficient buffer is kept even for slices: a slice zeroes it, fills
+    /// only the slots its retained couplings read, and unreferenced slots
+    /// stay zero (never read).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_on(&self, fshards: &[Shard], levels: &[Vec<Shard>], max_shards: usize, scratch: usize, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
-        arena.ensure(exec.buffers_needed(self.max_shards.load(Ordering::Relaxed)), self.scratch, self.s_len, 0);
+        arena.ensure(exec.buffers_needed(max_shards), scratch, self.s_len, 0);
         let (bufs, s_all, _) = arena.split();
 
         // phase 1: forward transformation s_σ = Bᵀ x|σ (independent slots)
@@ -986,9 +1110,8 @@ impl UniSchedule {
         {
             s_all[..self.s_len].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len]);
-            let fshards = self.fshards.load();
             self.prefetch.issue(1);
-            run_level_rec(exec, &fshards, bufs, rec.map(|s| (s, 0)), hot, &|ti, _buf| {
+            run_level_rec(exec, fshards, bufs, rec.map(|s| (s, 0)), hot, &|ti, _buf| {
                 let t = &self.ftasks[ti];
                 // SAFETY: one task per disjoint slot range.
                 let dst = unsafe { slots.range_mut(t.off..t.off + t.len) };
@@ -999,7 +1122,6 @@ impl UniSchedule {
         // phase 2: level-ordered output pass
         let sref: &[f64] = &s_all[..self.s_len];
         let yy = SharedVec::new(y);
-        let levels = self.levels.load();
         for (li, level) in levels.iter().enumerate() {
             self.prefetch.issue(li + 2);
             run_level_rec(exec, level, bufs, rec.map(|s| (s, self.ftasks.len())), hot, &|ti, buf| {
@@ -1039,8 +1161,6 @@ impl UniSchedule {
     /// contiguous `rows×b` panel, all block/basis/coupling data streamed once.
     #[allow(clippy::too_many_arguments)]
     fn exec_multi(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
-        let ylen = y.nrows();
         let nrhs = y.ncols();
         let gen = self.profile_gen.load(Ordering::Acquire);
         let prof = self.profile.read().unwrap().clone();
@@ -1052,7 +1172,15 @@ impl UniSchedule {
             let lv = balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards);
             (fsh, lv)
         });
-        let (fshards, levels) = (&packed.0, &packed.1);
+        self.exec_multi_on(&packed.0, &packed.1, m, adjoint, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Batched execution of explicit packings (see [`Self::exec_on`]).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi_on(&self, fshards: &[Shard], levels: &[Vec<Shard>], m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
+        let (in_basis, out_basis) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
+        let ylen = y.nrows();
+        let nrhs = y.ncols();
         let (lmax, lscr) = max_shard_stats(levels);
         let max_shards = fshards.len().max(lmax);
         let scratch = fshards.iter().map(|s| s.scratch).max().unwrap_or(0).max(lscr);
@@ -1125,6 +1253,72 @@ impl UniSchedule {
                 }
             });
         }
+    }
+}
+
+/// Row-restricted view of one uniform-H schedule half (see [`HSlice`] for
+/// the determinism contract). Output tasks are retained by `dst ∩ rows`;
+/// forward-transform tasks are retained iff some retained coupling reads
+/// their coefficient slot (slot offsets identify forward tasks 1:1), so a
+/// shard computes exactly the coefficients it consumes.
+pub(crate) struct UniSlice {
+    adjoint: bool,
+    fids: Vec<usize>,
+    fshards: Packing<Vec<Shard>>,
+    level_ids: Vec<Vec<usize>>,
+    levels: Packing<Vec<Vec<Shard>>>,
+    multi: MultiCache<(Vec<Shard>, Vec<Vec<Shard>>)>,
+    nshards: usize,
+}
+
+impl UniSchedule {
+    fn slice(&self, adjoint: bool, rows: &Range<usize>, nshards: usize) -> UniSlice {
+        let level_ids = filter_level_ids(&self.level_ids, |id| ranges_intersect(&self.tasks[id].dst, rows));
+        // forward closure: the slot offsets read by retained couplings
+        // (zero-length refs read nothing and pin no forward task)
+        let mut used = std::collections::HashSet::new();
+        for ids in &level_ids {
+            for &id in ids {
+                for cr in &self.tasks[id].couplings {
+                    if cr.len > 0 {
+                        used.insert(cr.off);
+                    }
+                }
+            }
+        }
+        let fids: Vec<usize> = (0..self.ftasks.len()).filter(|&i| used.contains(&self.ftasks[i].off)).collect();
+        let prof = self.profile.read().unwrap().clone();
+        let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), 1);
+        let fscratch = vec![0usize; self.ftasks.len()];
+        let fshards = balance_level(&fids, &fcosts, &fscratch, nshards);
+        let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), 1);
+        let levels: Vec<Vec<Shard>> =
+            level_ids.iter().map(|ids| balance_level(ids, &costs, &self.scratch1, nshards)).collect();
+        UniSlice { adjoint, fids, fshards: Packing::new(fshards), level_ids, levels: Packing::new(levels), multi: MultiCache::new(), nshards }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_slice(&self, sl: &UniSlice, m: &UniformHMatrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let fshards = sl.fshards.load();
+        let levels = sl.levels.load();
+        let (lmax, lscr) = max_shard_stats(&levels);
+        self.exec_on(&fshards, &levels, lmax.max(fshards.len()), lscr, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi_slice(&self, sl: &UniSlice, m: &UniformHMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let nrhs = y.ncols();
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let packed = sl.multi.get(gen, nrhs, || {
+            let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs);
+            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
+            let fsh = balance_level(&sl.fids, &fcosts, &fscratch, sl.nshards);
+            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
+            let lv = balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards);
+            (fsh, lv)
+        });
+        self.exec_multi_on(&packed.0, &packed.1, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
     }
 }
 
@@ -1246,6 +1440,39 @@ impl UniPlan {
         assert_eq!(x.ncols(), y.ncols());
         let hot = self.hot_cache();
         self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
+    }
+
+    /// Row-restricted slice of one schedule half (see [`HPlan::slice`]).
+    pub(crate) fn slice(&self, m: &UniformHMatrix, adjoint: bool, rows: &Range<usize>, nshards: usize) -> UniSlice {
+        if adjoint {
+            self.adj(m).slice(true, rows, nshards)
+        } else {
+            self.fwd(m).slice(false, rows, nshards)
+        }
+    }
+
+    /// Per-output-task (write range, modeled cost at b = 1); see
+    /// [`HPlan::task_loads`]. Forward-transform cost is not prorated — it is
+    /// closure-dependent, and the output pass dominates.
+    pub(crate) fn task_loads(&self, m: &UniformHMatrix, adjoint: bool) -> Vec<(Range<usize>, f64)> {
+        let s = if adjoint { self.adj(m) } else { self.fwd(m) };
+        let prof = s.profile.read().unwrap().clone();
+        let costs = model_costs(&s.feats, &s.fixed, &s.per_rhs, prof.as_deref(), 1);
+        s.tasks.iter().zip(&costs).map(|(t, &c)| (t.dst.clone(), c)).collect()
+    }
+
+    /// Execute a slice into a FULL-length `y` (see [`HPlan::execute_slice`]).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_slice(&self, m: &UniformHMatrix, sl: &UniSlice, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
+        s.exec_slice(sl, m, alpha, x, y, arena, exec, hot);
+    }
+
+    /// Batched variant of [`Self::execute_slice`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_multi_slice(&self, m: &UniformHMatrix, sl: &UniSlice, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
+        s.exec_multi_slice(sl, m, alpha, x, y, arena, exec, hot);
     }
 
     /// Re-partition built schedule halves with `profile` costs (atomic swap,
@@ -1673,8 +1900,21 @@ impl H2Schedule {
 
     #[allow(clippy::too_many_arguments)]
     fn exec(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
+        let up_levels = self.up_levels.load();
+        let down_levels = self.down_levels.load();
+        self.exec_on(&up_levels, &down_levels, self.max_shards.load(Ordering::Relaxed), self.scratch, m, adjoint, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Run explicit up/down packings — the schedule's own, or a
+    /// row-restricted [`H2Slice`] of them (see [`HSchedule::exec_on`]). Both
+    /// coefficient buffers stay full length: a slice zeroes them, and every
+    /// slot a retained task reads was filled by a retained task (the up
+    /// closure / parent-chain retention guarantee); unharvested writes into
+    /// off-shard child slots are dead stores.
+    #[allow(clippy::too_many_arguments)]
+    fn exec_on(&self, up_levels: &[Vec<Shard>], down_levels: &[Vec<Shard>], max_shards: usize, scratch: usize, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
-        arena.ensure(exec.buffers_needed(self.max_shards.load(Ordering::Relaxed)), self.scratch, self.s_len, self.t_len);
+        arena.ensure(exec.buffers_needed(max_shards), scratch, self.s_len, self.t_len);
         let (bufs, s_all, t_all) = arena.split();
 
         // upward pass: forward transformation, children before parents
@@ -1682,7 +1922,6 @@ impl H2Schedule {
         {
             s_all[..self.s_len].fill(0.0);
             let slots = SharedVec::new(&mut s_all[..self.s_len]);
-            let up_levels = self.up_levels.load();
             for (li, level) in up_levels.iter().enumerate() {
                 self.prefetch.issue(li + 1);
                 run_level_rec(exec, level, bufs, rec.map(|s| (s, 0)), hot, &|ti, _buf| {
@@ -1709,7 +1948,6 @@ impl H2Schedule {
         t_all[..self.t_len].fill(0.0);
         let tslots = SharedVec::new(&mut t_all[..self.t_len]);
         let yy = SharedVec::new(y);
-        let down_levels = self.down_levels.load();
         let dbase = self.up_level_ids.len();
         for (li, level) in down_levels.iter().enumerate() {
             self.prefetch.issue(dbase + li + 1);
@@ -1764,8 +2002,6 @@ impl H2Schedule {
     /// panels; transfer and coupling matrices are streamed once per batch.
     #[allow(clippy::too_many_arguments)]
     fn exec_multi(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
-        let ylen = y.nrows();
         let nrhs = y.ncols();
         let gen = self.profile_gen.load(Ordering::Acquire);
         let prof = self.profile.read().unwrap().clone();
@@ -1777,7 +2013,15 @@ impl H2Schedule {
                 balance_levels_for(&self.down_level_ids, &down_costs, &self.down_pscratch, nrhs, self.nshards),
             )
         });
-        let (up_levels, down_levels) = (&packed.0, &packed.1);
+        self.exec_multi_on(&packed.0, &packed.1, m, adjoint, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Batched execution of explicit up/down packings (see [`Self::exec_on`]).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi_on(&self, up_levels: &[Vec<Shard>], down_levels: &[Vec<Shard>], m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
+        let (in_nb, out_nb) = if adjoint { (&m.row_basis, &m.col_basis) } else { (&m.col_basis, &m.row_basis) };
+        let ylen = y.nrows();
+        let nrhs = y.ncols();
         let (umax, uscr) = max_shard_stats(up_levels);
         let (dmax, dscr) = max_shard_stats(down_levels);
         arena.ensure(exec.buffers_needed(umax.max(dmax)), uscr.max(dscr), self.s_len * nrhs, self.t_len * nrhs);
@@ -1880,6 +2124,100 @@ impl H2Schedule {
                 }
             });
         }
+    }
+}
+
+/// Row-restricted view of one H² schedule half (see [`HSlice`] for the
+/// determinism contract). Down tasks are retained by `dst ∩ rows` — every
+/// ancestor of a retained task intersects too (its range contains the
+/// descendant's), so the parent-before-child t-slot relay chain is complete.
+/// Up tasks are the transitive closure of the coefficient slots the retained
+/// couplings read: the slot's own task plus, recursively, the child slots it
+/// is assembled from.
+pub(crate) struct H2Slice {
+    adjoint: bool,
+    up_level_ids: Vec<Vec<usize>>,
+    up_levels: Packing<Vec<Vec<Shard>>>,
+    down_level_ids: Vec<Vec<usize>>,
+    down_levels: Packing<Vec<Vec<Shard>>>,
+    multi: MultiCache<(Vec<Vec<Shard>>, Vec<Vec<Shard>>)>,
+    nshards: usize,
+}
+
+impl H2Schedule {
+    fn slice(&self, adjoint: bool, rows: &Range<usize>, nshards: usize) -> H2Slice {
+        let down_level_ids = filter_level_ids(&self.down_level_ids, |id| ranges_intersect(&self.down_tasks[id].dst, rows));
+        // upward closure over slot offsets (offsets identify up tasks 1:1)
+        let mut by_off = std::collections::HashMap::new();
+        for (id, t) in self.up_tasks.iter().enumerate() {
+            by_off.insert(t.off, id);
+        }
+        let mut needed = vec![false; self.up_tasks.len()];
+        let mut stack = Vec::new();
+        for ids in &down_level_ids {
+            for &id in ids {
+                for cr in &self.down_tasks[id].couplings {
+                    if cr.len > 0 {
+                        stack.push(cr.off);
+                    }
+                }
+            }
+        }
+        while let Some(off) = stack.pop() {
+            if let Some(&id) = by_off.get(&off) {
+                if !needed[id] {
+                    needed[id] = true;
+                    for &(_, coff, clen) in &self.up_tasks[id].children {
+                        if clen > 0 {
+                            stack.push(coff);
+                        }
+                    }
+                }
+            }
+        }
+        let up_level_ids = filter_level_ids(&self.up_level_ids, |id| needed[id]);
+        let prof = self.profile.read().unwrap().clone();
+        let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), 1);
+        let up_scratch = vec![0usize; self.up_tasks.len()];
+        let up_levels: Vec<Vec<Shard>> =
+            up_level_ids.iter().map(|ids| balance_level(ids, &up_costs, &up_scratch, nshards)).collect();
+        let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), 1);
+        let down_levels: Vec<Vec<Shard>> =
+            down_level_ids.iter().map(|ids| balance_level(ids, &down_costs, &self.down_scratch1, nshards)).collect();
+        H2Slice {
+            adjoint,
+            up_level_ids,
+            up_levels: Packing::new(up_levels),
+            down_level_ids,
+            down_levels: Packing::new(down_levels),
+            multi: MultiCache::new(),
+            nshards,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_slice(&self, sl: &H2Slice, m: &H2Matrix, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let up_levels = sl.up_levels.load();
+        let down_levels = sl.down_levels.load();
+        let (umax, _) = max_shard_stats(&up_levels);
+        let (dmax, scr) = max_shard_stats(&down_levels);
+        self.exec_on(&up_levels, &down_levels, umax.max(dmax), scr, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi_slice(&self, sl: &H2Slice, m: &H2Matrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let nrhs = y.ncols();
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let packed = sl.multi.get(gen, nrhs, || {
+            let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs);
+            let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs);
+            (
+                balance_levels_for(&sl.up_level_ids, &up_costs, &self.up_pscratch, nrhs, sl.nshards),
+                balance_levels_for(&sl.down_level_ids, &down_costs, &self.down_pscratch, nrhs, sl.nshards),
+            )
+        });
+        self.exec_multi_on(&packed.0, &packed.1, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
     }
 }
 
@@ -1999,6 +2337,38 @@ impl H2Plan {
         assert_eq!(x.ncols(), y.ncols());
         let hot = self.hot_cache();
         self.adj(m).exec_multi(m, true, alpha, x, y, arena, &*self.exec, None, hot.as_ref());
+    }
+
+    /// Row-restricted slice of one schedule half (see [`HPlan::slice`]).
+    pub(crate) fn slice(&self, m: &H2Matrix, adjoint: bool, rows: &Range<usize>, nshards: usize) -> H2Slice {
+        if adjoint {
+            self.adj(m).slice(true, rows, nshards)
+        } else {
+            self.fwd(m).slice(false, rows, nshards)
+        }
+    }
+
+    /// Per-down-task (write range, modeled cost at b = 1); see
+    /// [`HPlan::task_loads`].
+    pub(crate) fn task_loads(&self, m: &H2Matrix, adjoint: bool) -> Vec<(Range<usize>, f64)> {
+        let s = if adjoint { self.adj(m) } else { self.fwd(m) };
+        let prof = s.profile.read().unwrap().clone();
+        let costs = model_costs(&s.down_feats, &s.down_fixed, &s.down_per_rhs, prof.as_deref(), 1);
+        s.down_tasks.iter().zip(&costs).map(|(t, &c)| (t.dst.clone(), c)).collect()
+    }
+
+    /// Execute a slice into a FULL-length `y` (see [`HPlan::execute_slice`]).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_slice(&self, m: &H2Matrix, sl: &H2Slice, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
+        s.exec_slice(sl, m, alpha, x, y, arena, exec, hot);
+    }
+
+    /// Batched variant of [`Self::execute_slice`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_multi_slice(&self, m: &H2Matrix, sl: &H2Slice, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+        let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
+        s.exec_multi_slice(sl, m, alpha, x, y, arena, exec, hot);
     }
 
     /// Re-partition built schedule halves with `profile` costs (atomic swap,

@@ -32,6 +32,12 @@
 //!   with pinned affinity; `HMATC_EXEC` / `--executor`). All backends
 //!   produce bitwise-identical results — disjoint write ranges and level
 //!   barriers are preserved; only the thread mapping changes.
+//! * **row-sharded partitions** — [`partition::row_partition`] splits an
+//!   operator's output rows into N disjoint [`ShardPlan`]s along the same
+//!   cluster-leaf write boundaries, each owning sliced schedules, its own
+//!   executor/arena/hot-cache; the scatter/gather coordinator tier (and
+//!   `HMATC_SHARDS=N` in-process routing) reassembles their owned rows in
+//!   fixed shard order, bitwise identical to the unsharded plan.
 //!
 //! The [`HOperator`] trait makes all three formats (compressed or not)
 //! interchangeable behind one object-safe interface — the batching
@@ -59,6 +65,7 @@ pub mod costmodel;
 pub mod exec;
 pub mod executor;
 pub mod operator;
+pub mod partition;
 pub mod schedule;
 
 pub use arena::{Arena, BufferPool};
@@ -66,3 +73,4 @@ pub use costmodel::{CostProfile, CostSource, KernelClass, TimingSink};
 pub use exec::{H2Plan, HPlan, PlanStats, UniPlan};
 pub use executor::{Executor, ExecutorKind, ShardedExec, StaticLptExec, WorkStealingExec};
 pub use operator::{HOperator, PlannedOperator};
+pub use partition::{env_shard_count, row_partition, ShardPlan, ShardSpec};

@@ -22,13 +22,15 @@ use super::arena::Arena;
 use super::costmodel::{self, CostProfile};
 use super::exec::{H2Plan, HPlan, PlanStats, UniPlan};
 use super::executor::ExecutorKind;
+use super::partition::{env_shard_count, row_partition, ShardPlan};
 use crate::cluster::ClusterTree;
 use crate::h2::H2Matrix;
 use crate::hmatrix::HMatrix;
 use crate::la::DMatrix;
 use crate::mvm;
 use crate::uniform::UniformHMatrix;
-use std::sync::{Arc, Mutex};
+use std::ops::Range;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// A hierarchical matrix operator: the common surface of H, uniform-H and H²
 /// matrices (compressed or not) that the serving stack programs against.
@@ -177,7 +179,7 @@ impl HOperator for H2Matrix {
     }
 }
 
-enum Inner {
+pub(crate) enum Inner {
     H { m: Arc<HMatrix>, plan: HPlan },
     Uniform { m: Arc<UniformHMatrix>, plan: UniPlan },
     H2 { m: Arc<H2Matrix>, plan: H2Plan },
@@ -198,10 +200,14 @@ struct ExtOrder {
 /// Build it **after** compressing the matrix — schedules record block ranks
 /// and scratch sizes of the representation they were built from.
 pub struct PlannedOperator {
-    inner: Inner,
+    inner: Arc<Inner>,
     arena: Mutex<Arena>,
     bytes: usize,
     external: Option<ExtOrder>,
+    /// `HMATC_SHARDS` row partition, built lazily on first product: `None`
+    /// once initialized means the env asked for 1 shard (or was unset) and
+    /// products run the whole-plan schedules directly.
+    shards: OnceLock<Option<Vec<ShardPlan>>>,
 }
 
 impl PlannedOperator {
@@ -218,7 +224,7 @@ impl PlannedOperator {
     pub fn from_h_with(m: Arc<HMatrix>, kind: ExecutorKind) -> PlannedOperator {
         let plan = HPlan::build_with(&m, kind.build());
         let bytes = m.byte_size();
-        PlannedOperator { inner: Inner::H { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
+        PlannedOperator::wrap(Inner::H { m, plan }, bytes)
     }
 
     /// Backend from `HMATC_EXEC`, costs from `HMATC_COSTS` (see
@@ -231,7 +237,7 @@ impl PlannedOperator {
     pub fn from_uniform_with(m: Arc<UniformHMatrix>, kind: ExecutorKind) -> PlannedOperator {
         let plan = UniPlan::build_with(&m, kind.build());
         let bytes = m.byte_size();
-        PlannedOperator { inner: Inner::Uniform { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
+        PlannedOperator::wrap(Inner::Uniform { m, plan }, bytes)
     }
 
     /// Backend from `HMATC_EXEC`, costs from `HMATC_COSTS` (see
@@ -244,7 +250,17 @@ impl PlannedOperator {
     pub fn from_h2_with(m: Arc<H2Matrix>, kind: ExecutorKind) -> PlannedOperator {
         let plan = H2Plan::build_with(&m, kind.build());
         let bytes = m.byte_size();
-        PlannedOperator { inner: Inner::H2 { m, plan }, arena: Mutex::new(Arena::new()), bytes, external: None }
+        PlannedOperator::wrap(Inner::H2 { m, plan }, bytes)
+    }
+
+    fn wrap(inner: Inner, bytes: usize) -> PlannedOperator {
+        PlannedOperator {
+            inner: Arc::new(inner),
+            arena: Mutex::new(Arena::new()),
+            bytes,
+            external: None,
+            shards: OnceLock::new(),
+        }
     }
 
     /// Apply the `HMATC_COSTS` profile if the variable names a valid file;
@@ -263,7 +279,7 @@ impl PlannedOperator {
     /// only the task→shard mapping changes. The profile source lands in
     /// [`PlanStats::cost_source`].
     pub fn rebalance(&self, profile: &CostProfile) {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { plan, .. } => plan.rebalance(profile),
             Inner::Uniform { plan, .. } => plan.rebalance(profile),
             Inner::H2 { plan, .. } => plan.rebalance(profile),
@@ -275,7 +291,7 @@ impl PlannedOperator {
     /// re-balance the plan with them (`cost_source` becomes `online`).
     /// Returns the fitted profile for saving/inspection.
     pub fn calibrate(&self, warmup_batches: usize) -> CostProfile {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { m, plan } => plan.calibrate(m, warmup_batches),
             Inner::Uniform { m, plan } => plan.calibrate(m, warmup_batches),
             Inner::H2 { m, plan } => plan.calibrate(m, warmup_batches),
@@ -284,7 +300,7 @@ impl PlannedOperator {
 
     /// Name of the execution backend this operator's plan runs on.
     pub fn executor_name(&self) -> String {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { plan, .. } => plan.executor_name(),
             Inner::Uniform { plan, .. } => plan.executor_name(),
             Inner::H2 { plan, .. } => plan.executor_name(),
@@ -304,13 +320,35 @@ impl PlannedOperator {
     /// so callers (e.g. [`crate::coordinator::MvmServer`] clients) never run
     /// `ClusterTree::to_internal`/`to_external` themselves.
     pub fn with_external_ordering(mut self) -> PlannedOperator {
-        let (row, col) = match &self.inner {
+        let (row, col) = self.cluster_trees();
+        self.external = Some(ExtOrder { row, col });
+        self
+    }
+
+    /// Row/column cluster trees of the underlying matrix — the partition
+    /// seams of [`row_partition`] and the external-ordering permutations.
+    pub(crate) fn cluster_trees(&self) -> (Arc<ClusterTree>, Arc<ClusterTree>) {
+        match &*self.inner {
             Inner::H { m, .. } => (m.bt.row_ct.clone(), m.bt.col_ct.clone()),
             Inner::Uniform { m, .. } => (m.bt.row_ct.clone(), m.bt.col_ct.clone()),
             Inner::H2 { m, .. } => (m.bt.row_ct.clone(), m.bt.col_ct.clone()),
-        };
-        self.external = Some(ExtOrder { row, col });
-        self
+        }
+    }
+
+    /// The shared matrix+plan pair, for [`ShardPlan`]s that slice it.
+    pub(crate) fn inner(&self) -> &Arc<Inner> {
+        &self.inner
+    }
+
+    /// Per-task `(output range, modeled cost)` of the plan's output pass in
+    /// the given direction, with the calibrated profile applied when one is
+    /// active — the load input of [`row_partition`]'s seam placement.
+    pub(crate) fn output_loads(&self, adjoint: bool) -> Vec<(Range<usize>, f64)> {
+        match &*self.inner {
+            Inner::H { m, plan } => plan.task_loads(m, adjoint),
+            Inner::Uniform { m, plan } => plan.task_loads(m, adjoint),
+            Inner::H2 { m, plan } => plan.task_loads(m, adjoint),
+        }
     }
 
     /// Whether this operator expects external-ordering vectors.
@@ -320,7 +358,7 @@ impl PlannedOperator {
 
     /// Schedule summary (task/level/shard counts, scratch sizes).
     pub fn plan_stats(&self) -> PlanStats {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { plan, .. } => plan.stats(),
             Inner::Uniform { plan, .. } => plan.stats(),
             Inner::H2 { plan, .. } => plan.stats(),
@@ -332,7 +370,7 @@ impl PlannedOperator {
     /// overrides per operator. Outputs are bitwise identical with or without
     /// a cache (see [`crate::store::hot`]).
     pub fn set_hot_cache(&self, cache: Option<Arc<crate::store::HotCache>>) {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { plan, .. } => plan.set_hot_cache(cache),
             Inner::Uniform { plan, .. } => plan.set_hot_cache(cache),
             Inner::H2 { plan, .. } => plan.set_hot_cache(cache),
@@ -341,7 +379,7 @@ impl PlannedOperator {
 
     /// The active hot cache, if any.
     pub fn hot_cache(&self) -> Option<Arc<crate::store::HotCache>> {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { plan, .. } => plan.hot_cache(),
             Inner::Uniform { plan, .. } => plan.hot_cache(),
             Inner::H2 { plan, .. } => plan.hot_cache(),
@@ -352,15 +390,68 @@ impl PlannedOperator {
     /// anonymous vs memory-mapped footprint, hot-cache occupancy/hit rate
     /// (`hmatc info` / serve logs).
     pub fn residency(&self) -> crate::store::Residency {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { m, plan } => crate::store::residency_h(m, plan.hot_cache().as_deref()),
             Inner::Uniform { m, plan } => crate::store::residency_uh(m, plan.hot_cache().as_deref()),
             Inner::H2 { m, plan } => crate::store::residency_h2(m, plan.hot_cache().as_deref()),
         }
     }
 
+    /// The `HMATC_SHARDS` partition of this operator, built on first use;
+    /// `None` when the env asks for one shard (or partitioning fails, e.g. a
+    /// leafless degenerate tree — products then just run unsharded).
+    fn env_shards(&self) -> Option<&[ShardPlan]> {
+        self.shards
+            .get_or_init(|| {
+                let count = env_shard_count();
+                if count <= 1 {
+                    return None;
+                }
+                let specs = row_partition(self, count).ok()?;
+                let kind = ExecutorKind::from_env();
+                Some(specs.into_iter().map(|spec| ShardPlan::build(self, spec, kind)).collect())
+            })
+            .as_deref()
+    }
+
+    /// Sequential in-process scatter/gather over the row shards: each shard
+    /// computes its seeded full-length partial product, then its owned rows
+    /// land in `y` in fixed shard order. Owned ranges are pairwise disjoint,
+    /// so later shards seeding from the updated `y` see exactly the rows the
+    /// unsharded plan would have left there — bitwise identical output.
+    fn run_sharded(&self, shards: &[ShardPlan], adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64]) {
+        let mut out = Vec::new();
+        for sp in shards {
+            let rows = sp.owned(adjoint);
+            if rows.is_empty() {
+                continue;
+            }
+            out.clear();
+            out.resize(rows.len(), 0.0);
+            sp.apply_owned(adjoint, alpha, x, Some(&*y), &mut out);
+            y[rows].copy_from_slice(&out);
+        }
+    }
+
+    fn run_multi_sharded(&self, shards: &[ShardPlan], adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+        for sp in shards {
+            let rows = sp.owned(adjoint);
+            if rows.is_empty() {
+                continue;
+            }
+            let mut out = DMatrix::zeros(rows.len(), y.ncols());
+            sp.apply_multi_owned(adjoint, alpha, x, Some(&*y), &mut out);
+            for c in 0..y.ncols() {
+                y.col_mut(c)[rows.clone()].copy_from_slice(out.col(c));
+            }
+        }
+    }
+
     fn run(&self, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena) {
-        match (&self.inner, adjoint) {
+        if let Some(shards) = self.env_shards() {
+            return self.run_sharded(shards, adjoint, alpha, x, y);
+        }
+        match (&*self.inner, adjoint) {
             (Inner::H { m, plan }, false) => plan.execute(m, alpha, x, y, arena),
             (Inner::H { m, plan }, true) => plan.execute_adjoint(m, alpha, x, y, arena),
             (Inner::Uniform { m, plan }, false) => plan.execute(m, alpha, x, y, arena),
@@ -371,7 +462,10 @@ impl PlannedOperator {
     }
 
     fn run_multi(&self, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
-        match (&self.inner, adjoint) {
+        if let Some(shards) = self.env_shards() {
+            return self.run_multi_sharded(shards, adjoint, alpha, x, y);
+        }
+        match (&*self.inner, adjoint) {
             (Inner::H { m, plan }, false) => plan.execute_multi(m, alpha, x, y, arena),
             (Inner::H { m, plan }, true) => plan.execute_multi_adjoint(m, alpha, x, y, arena),
             (Inner::Uniform { m, plan }, false) => plan.execute_multi(m, alpha, x, y, arena),
@@ -445,7 +539,7 @@ impl PlannedOperator {
 
 impl HOperator for PlannedOperator {
     fn nrows(&self) -> usize {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { m, .. } => m.nrows(),
             Inner::Uniform { m, .. } => m.nrows(),
             Inner::H2 { m, .. } => m.nrows(),
@@ -453,7 +547,7 @@ impl HOperator for PlannedOperator {
     }
 
     fn ncols(&self) -> usize {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { m, .. } => m.ncols(),
             Inner::Uniform { m, .. } => m.ncols(),
             Inner::H2 { m, .. } => m.ncols(),
@@ -465,7 +559,7 @@ impl HOperator for PlannedOperator {
     }
 
     fn format_name(&self) -> &'static str {
-        match &self.inner {
+        match &*self.inner {
             Inner::H { .. } => "H+plan",
             Inner::Uniform { .. } => "UH+plan",
             Inner::H2 { .. } => "H2+plan",
@@ -505,6 +599,22 @@ impl HOperator for PlannedOperator {
     }
 
     fn cache_counters(&self) -> Option<(u64, u64)> {
+        // with an active HMATC_SHARDS partition, shard-local caches (if any
+        // were installed) are summed; shards without their own cache fall
+        // back to the parent plan's shared cache, counted once below
+        if let Some(Some(shards)) = self.shards.get() {
+            let mut total: Option<(u64, u64)> = None;
+            for sp in shards {
+                if let Some((h, m)) = sp.cache_counters() {
+                    let t = total.get_or_insert((0, 0));
+                    t.0 += h;
+                    t.1 += m;
+                }
+            }
+            if total.is_some() {
+                return total;
+            }
+        }
         self.hot_cache().map(|c| c.counters())
     }
 }

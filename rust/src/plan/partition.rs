@@ -1,0 +1,352 @@
+//! Row-wise operator partitioning for the sharded serving tier.
+//!
+//! [`row_partition`] splits one [`PlannedOperator`]'s output index space into
+//! `N` disjoint, contiguous row ranges. The partition seam is the cluster
+//! tree's leaf boundaries — the same boundaries the plan schedules already
+//! use as pairwise-disjoint write ranges — so no task's output ever has to be
+//! split across shards mid-cluster. Seam placement is load-aware in the
+//! MatRox style: every schedule task's modeled cost (calibrated profile
+//! included, see [`crate::plan::costmodel`]) is prorated onto the leaf
+//! clusters it writes, and a greedy quota walk assigns consecutive leaves to
+//! shards targeting `remaining / shards_left` work each.
+//!
+//! A [`ShardPlan`] owns one partition member end to end: slices of the
+//! parent plan's schedules (every task whose output intersects the owned
+//! rows, ancestors included — see the slice builders in
+//! [`crate::plan::exec`]), its own [`Executor`], scratch arena, pooled
+//! output buffer, and optionally its own decode-once hot cache. It computes
+//! a **full-length** partial product seeded from the caller's `y` (or
+//! zeros), then exports only the owned rows. Because each output row's
+//! entire accumulation chain (every level, every contributing task, in the
+//! parent schedule's level order) replays inside the shard that owns the
+//! row, the exported rows are **bitwise identical** to the unsharded plan's
+//! — for any seed, on any executor backend. Rows outside the owned range
+//! are garbage by contract (their chains are incomplete) and are never
+//! exported.
+//!
+//! The forward and adjoint products have different output spaces, so a
+//! [`ShardSpec`] carries one owned range per direction: `rows` partitions
+//! `0..nrows` along the row tree (forward), `cols` partitions `0..ncols`
+//! along the column tree (adjoint).
+//!
+//! `HMATC_SHARDS=N` ([`env_shard_count`]) routes every
+//! [`PlannedOperator`] product through this path in-process — the whole test
+//! suite then doubles as a sharded-equivalence suite. The scatter/gather
+//! coordinator ([`crate::coordinator::MvmServer::start_sharded`]) drives the
+//! same [`ShardPlan`]s from per-shard worker threads.
+
+use super::exec::{H2Slice, HSlice, UniSlice};
+use super::executor::{Executor, ExecutorKind};
+use super::operator::{HOperator, Inner, PlannedOperator};
+use crate::cluster::ClusterTree;
+use crate::la::DMatrix;
+use crate::plan::arena::Arena;
+use crate::store::HotCache;
+use std::ops::Range;
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+/// Shard count requested via `HMATC_SHARDS` (cached after the first read;
+/// unset or invalid values mean 1 — unsharded).
+pub fn env_shard_count() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| match std::env::var("HMATC_SHARDS") {
+        Err(_) => 1,
+        Ok(v) => v.trim().parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or_else(|| {
+            eprintln!("hmatc: ignoring invalid HMATC_SHARDS={v:?} (want an integer >= 1)");
+            1
+        }),
+    })
+}
+
+/// One member of a row partition: which contiguous output rows the shard
+/// owns, per product direction, and its modeled share of the forward work.
+#[derive(Clone, Debug)]
+pub struct ShardSpec {
+    /// Shard position in the fixed gather order.
+    pub index: usize,
+    /// Total shards in the partition.
+    pub count: usize,
+    /// Owned forward-output rows (internal ordering), a union of row-tree
+    /// leaf ranges. May be empty when there are fewer leaves than shards.
+    pub rows: Range<usize>,
+    /// Owned adjoint-output rows (= owned columns), a union of column-tree
+    /// leaf ranges.
+    pub cols: Range<usize>,
+    /// Modeled share of the forward output-pass work assigned to this shard.
+    pub cost: f64,
+}
+
+/// Sorted leaf index ranges of a cluster tree: the partition seam candidates.
+fn leaf_ranges(ct: &ClusterTree) -> Vec<Range<usize>> {
+    let mut v: Vec<Range<usize>> = ct.leaves.iter().map(|&id| ct.node(id).range()).collect();
+    v.sort_by_key(|r| r.start);
+    v
+}
+
+/// Prorate each task's modeled cost onto the leaves its output overlaps,
+/// proportionally to the overlap length. Leaves must be sorted by start.
+fn prorated_leaf_loads(leaves: &[Range<usize>], loads: &[(Range<usize>, f64)]) -> Vec<f64> {
+    let mut out = vec![0.0; leaves.len()];
+    for (dst, c) in loads {
+        if dst.is_empty() {
+            continue;
+        }
+        let mut li = leaves.partition_point(|l| l.end <= dst.start);
+        while li < leaves.len() && leaves[li].start < dst.end {
+            let lo = dst.start.max(leaves[li].start);
+            let hi = dst.end.min(leaves[li].end);
+            out[li] += c * (hi - lo) as f64 / dst.len() as f64;
+            li += 1;
+        }
+    }
+    out
+}
+
+/// Greedy quota split of consecutive leaves into `count` contiguous ranges:
+/// each shard takes leaves until it would exceed `remaining / shards_left`,
+/// the last shard takes the rest. Shards past the leaf supply get empty
+/// ranges pinned at `domain` so owned ranges stay pairwise disjoint.
+fn split_quota(leaves: &[Range<usize>], leaf_load: &[f64], count: usize, domain: usize) -> Vec<(Range<usize>, f64)> {
+    let mut remaining: f64 = leaf_load.iter().sum();
+    let mut parts = Vec::with_capacity(count);
+    let mut li = 0usize;
+    for s in 0..count {
+        if li >= leaves.len() {
+            parts.push((domain..domain, 0.0));
+            continue;
+        }
+        let target = remaining / (count - s) as f64;
+        let start = leaves[li].start;
+        let mut acc = 0.0;
+        while li < leaves.len() {
+            let taken_some = leaves[li].start > start;
+            if s + 1 < count && taken_some && acc + leaf_load[li] > target {
+                break;
+            }
+            acc += leaf_load[li];
+            li += 1;
+        }
+        remaining -= acc;
+        parts.push((start..leaves[li - 1].end, acc));
+    }
+    parts
+}
+
+/// Split the operator's output index space into `count` disjoint, contiguous
+/// [`ShardSpec`]s along cluster-tree leaf boundaries, balancing the modeled
+/// (calibrated, when a profile is active) per-task output work. Errors on a
+/// zero shard count or an operator without partitionable leaves.
+pub fn row_partition(op: &PlannedOperator, count: usize) -> Result<Vec<ShardSpec>, String> {
+    if count == 0 {
+        return Err("shard count must be at least 1".to_string());
+    }
+    let (row_ct, col_ct) = op.cluster_trees();
+    let rl = leaf_ranges(&row_ct);
+    let cl = leaf_ranges(&col_ct);
+    if rl.is_empty() || cl.is_empty() {
+        return Err("operator has no cluster-tree leaves to partition".to_string());
+    }
+    let fwd = split_quota(&rl, &prorated_leaf_loads(&rl, &op.output_loads(false)), count, op.nrows());
+    let adj = split_quota(&cl, &prorated_leaf_loads(&cl, &op.output_loads(true)), count, op.ncols());
+    Ok((0..count)
+        .map(|i| ShardSpec { index: i, count, rows: fwd[i].0.clone(), cols: adj[i].0.clone(), cost: fwd[i].1 })
+        .collect())
+}
+
+/// Per-direction schedule slices for one shard, matching the operator format.
+enum Slices {
+    H { fwd: HSlice, adj: HSlice },
+    Uniform { fwd: UniSlice, adj: UniSlice },
+    H2 { fwd: H2Slice, adj: H2Slice },
+}
+
+/// One shard of a row-partitioned operator: schedule slices covering every
+/// task whose output intersects the owned rows, plus the shard's own
+/// executor, arena, pooled output buffer and (optional) hot cache. See the
+/// module docs for the seeding/bitwise contract. All vectors are in the
+/// plan's internal ordering — the external-ordering fold stays with the
+/// unsharded front ([`PlannedOperator::with_external_ordering`]).
+pub struct ShardPlan {
+    inner: Arc<Inner>,
+    spec: ShardSpec,
+    exec: Arc<dyn Executor>,
+    slices: Slices,
+    arena: Mutex<Arena>,
+    /// Shard-local decode-once cache. When `None`, applies fall back to the
+    /// parent plan's (shared) cache so `HMATC_SHARDS` routing preserves
+    /// [`PlannedOperator::set_hot_cache`] semantics transparently.
+    hot: RwLock<Option<Arc<HotCache>>>,
+    ybuf: Mutex<Vec<f64>>,
+}
+
+impl ShardPlan {
+    /// Slice the operator's plan down to `spec`'s owned rows (both
+    /// directions) and give the shard its own executor of the given kind.
+    pub fn build(op: &PlannedOperator, spec: ShardSpec, kind: ExecutorKind) -> ShardPlan {
+        let exec = kind.build();
+        let n = exec.shard_count();
+        let inner = op.inner().clone();
+        let slices = match &*inner {
+            Inner::H { m, plan } => {
+                Slices::H { fwd: plan.slice(m, false, &spec.rows, n), adj: plan.slice(m, true, &spec.cols, n) }
+            }
+            Inner::Uniform { m, plan } => {
+                Slices::Uniform { fwd: plan.slice(m, false, &spec.rows, n), adj: plan.slice(m, true, &spec.cols, n) }
+            }
+            Inner::H2 { m, plan } => {
+                Slices::H2 { fwd: plan.slice(m, false, &spec.rows, n), adj: plan.slice(m, true, &spec.cols, n) }
+            }
+        };
+        ShardPlan {
+            inner,
+            spec,
+            exec,
+            slices,
+            arena: Mutex::new(Arena::new()),
+            hot: RwLock::new(None),
+            ybuf: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The partition member this shard executes.
+    pub fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    /// Shard position in the fixed gather order.
+    pub fn index(&self) -> usize {
+        self.spec.index
+    }
+
+    /// Modeled share of the forward output work (seam placement input).
+    pub fn cost(&self) -> f64 {
+        self.spec.cost
+    }
+
+    /// Owned output rows of the given product direction.
+    pub fn owned(&self, adjoint: bool) -> Range<usize> {
+        if adjoint {
+            self.spec.cols.clone()
+        } else {
+            self.spec.rows.clone()
+        }
+    }
+
+    /// Name of this shard's own execution backend.
+    pub fn executor_name(&self) -> String {
+        self.exec.name()
+    }
+
+    /// Install (or clear) a shard-local decode-once hot cache. Cleared,
+    /// applies fall back to the parent plan's cache.
+    pub fn set_hot_cache(&self, cache: Option<Arc<HotCache>>) {
+        *self.hot.write().unwrap_or_else(|p| p.into_inner()) = cache;
+    }
+
+    /// `(hits, misses)` of the shard-local cache; `None` when the shard runs
+    /// on the parent plan's shared cache (counted there instead).
+    pub fn cache_counters(&self) -> Option<(u64, u64)> {
+        self.hot.read().unwrap_or_else(|p| p.into_inner()).as_ref().map(|c| c.counters())
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        match &*self.inner {
+            Inner::H { m, .. } => (m.nrows(), m.ncols()),
+            Inner::Uniform { m, .. } => (m.nrows(), m.ncols()),
+            Inner::H2 { m, .. } => (m.nrows(), m.ncols()),
+        }
+    }
+
+    fn active_hot(&self) -> Option<Arc<HotCache>> {
+        let own = self.hot.read().unwrap_or_else(|p| p.into_inner()).clone();
+        own.or_else(|| match &*self.inner {
+            Inner::H { plan, .. } => plan.hot_cache(),
+            Inner::Uniform { plan, .. } => plan.hot_cache(),
+            Inner::H2 { plan, .. } => plan.hot_cache(),
+        })
+    }
+
+    /// `out = (seed + alpha · op(x))[owned rows]`, bitwise identical to the
+    /// rows the unsharded plan would produce from the same seed (zeros when
+    /// `None`). `out.len()` must equal the owned range's length; `x` and the
+    /// seed are full-length internal-ordering vectors.
+    pub fn apply_owned(&self, adjoint: bool, alpha: f64, x: &[f64], seed: Option<&[f64]>, out: &mut [f64]) {
+        let rows = self.owned(adjoint);
+        let (nr, nc) = self.dims();
+        let (ylen, xlen) = if adjoint { (nc, nr) } else { (nr, nc) };
+        assert_eq!(x.len(), xlen, "input length mismatch");
+        assert_eq!(out.len(), rows.len(), "owned output length mismatch");
+        let hot = self.active_hot();
+        let mut ybuf = self.ybuf.lock().unwrap_or_else(|p| p.into_inner());
+        ybuf.clear();
+        if let Some(s) = seed {
+            assert_eq!(s.len(), ylen, "seed length mismatch");
+            ybuf.extend_from_slice(s);
+        }
+        ybuf.resize(ylen, 0.0);
+        {
+            let mut arena = self.arena.lock().unwrap_or_else(|p| p.into_inner());
+            match (&*self.inner, &self.slices) {
+                (Inner::H { m, plan }, Slices::H { fwd, adj }) => {
+                    let sl = if adjoint { adj } else { fwd };
+                    plan.execute_slice(m, sl, alpha, x, &mut ybuf, &mut arena, self.exec.as_ref(), hot.as_ref());
+                }
+                (Inner::Uniform { m, plan }, Slices::Uniform { fwd, adj }) => {
+                    let sl = if adjoint { adj } else { fwd };
+                    plan.execute_slice(m, sl, alpha, x, &mut ybuf, &mut arena, self.exec.as_ref(), hot.as_ref());
+                }
+                (Inner::H2 { m, plan }, Slices::H2 { fwd, adj }) => {
+                    let sl = if adjoint { adj } else { fwd };
+                    plan.execute_slice(m, sl, alpha, x, &mut ybuf, &mut arena, self.exec.as_ref(), hot.as_ref());
+                }
+                _ => unreachable!("slice format matches the operator format by construction"),
+            }
+        }
+        out.copy_from_slice(&ybuf[rows]);
+    }
+
+    /// Batched [`ShardPlan::apply_owned`]: `out` is `owned.len() × nrhs`,
+    /// seeded from the full-height `seed` panel (zeros when `None`).
+    pub fn apply_multi_owned(&self, adjoint: bool, alpha: f64, x: &DMatrix, seed: Option<&DMatrix>, out: &mut DMatrix) {
+        let rows = self.owned(adjoint);
+        let (nr, nc) = self.dims();
+        let (ylen, xlen) = if adjoint { (nc, nr) } else { (nr, nc) };
+        let nrhs = x.ncols();
+        assert_eq!(x.nrows(), xlen, "input height mismatch");
+        assert_eq!(out.nrows(), rows.len(), "owned output height mismatch");
+        assert_eq!(out.ncols(), nrhs, "output width mismatch");
+        let hot = self.active_hot();
+        let mut ybuf = self.ybuf.lock().unwrap_or_else(|p| p.into_inner());
+        ybuf.clear();
+        if let Some(s) = seed {
+            assert_eq!(s.nrows(), ylen, "seed height mismatch");
+            assert_eq!(s.ncols(), nrhs, "seed width mismatch");
+            ybuf.extend_from_slice(s.data());
+        }
+        ybuf.resize(ylen * nrhs, 0.0);
+        let mut ym = DMatrix::from_vec(ylen, nrhs, std::mem::take(&mut *ybuf));
+        {
+            let mut arena = self.arena.lock().unwrap_or_else(|p| p.into_inner());
+            match (&*self.inner, &self.slices) {
+                (Inner::H { m, plan }, Slices::H { fwd, adj }) => {
+                    let sl = if adjoint { adj } else { fwd };
+                    plan.execute_multi_slice(m, sl, alpha, x, &mut ym, &mut arena, self.exec.as_ref(), hot.as_ref());
+                }
+                (Inner::Uniform { m, plan }, Slices::Uniform { fwd, adj }) => {
+                    let sl = if adjoint { adj } else { fwd };
+                    plan.execute_multi_slice(m, sl, alpha, x, &mut ym, &mut arena, self.exec.as_ref(), hot.as_ref());
+                }
+                (Inner::H2 { m, plan }, Slices::H2 { fwd, adj }) => {
+                    let sl = if adjoint { adj } else { fwd };
+                    plan.execute_multi_slice(m, sl, alpha, x, &mut ym, &mut arena, self.exec.as_ref(), hot.as_ref());
+                }
+                _ => unreachable!("slice format matches the operator format by construction"),
+            }
+        }
+        let ydata = ym.into_vec();
+        for c in 0..nrhs {
+            out.col_mut(c).copy_from_slice(&ydata[c * ylen + rows.start..c * ylen + rows.end]);
+        }
+        *ybuf = ydata;
+    }
+}

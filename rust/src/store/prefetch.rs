@@ -11,14 +11,50 @@
 //! Purely advisory: results are identical with prefetch off
 //! (`HMATC_PREFETCH=0`), it only moves page faults off the critical path.
 //! Operators with no mapped blobs build an empty plan and pay nothing.
+//!
+//! The thread is **process-shared** — one `OnceLock` inbox for every plan
+//! and shard, not a thread per plan — and each wake drains the whole inbox
+//! and drops duplicate `(segment, range)` extents before issuing. That
+//! matters for the sharded tier: N shard plans sliced from one mapped
+//! operator hit their level barriers near-simultaneously and would
+//! otherwise push N identical `madvise` streams over the same file ranges;
+//! deduping the drained batch collapses them to one ([`counters`] exposes
+//! the issued/deduped totals).
 
 use super::Segment;
 use crate::compress::Blob;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
 
 type Extents = Vec<(Arc<Segment>, Range<usize>)>;
+
+static ISSUED: AtomicU64 = AtomicU64::new(0);
+static DEDUPED: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative process-wide `(issued, deduped)` extent counts of the shared
+/// prefetch thread — introspection for tests and the serve log.
+pub fn counters() -> (u64, u64) {
+    (ISSUED.load(Ordering::Relaxed), DEDUPED.load(Ordering::Relaxed))
+}
+
+/// Drop duplicate `(segment, range)` extents within one drained batch,
+/// keeping first occurrences in order. Identity is the segment allocation
+/// (pointer) plus the exact byte range — the shape in which shard plans
+/// sharing one mapping duplicate each other's level extents.
+fn dedupe_batch(batch: &mut Extents) {
+    let mut seen: Vec<(usize, Range<usize>)> = Vec::with_capacity(batch.len());
+    batch.retain(|(seg, range)| {
+        let key = (Arc::as_ptr(seg) as usize, range.clone());
+        if seen.contains(&key) {
+            false
+        } else {
+            seen.push(key);
+            true
+        }
+    });
+}
 
 /// Whether prefetch is on for this process (default yes; `HMATC_PREFETCH=0`
 /// disables it — read once, like the other dispatch env switches).
@@ -35,7 +71,18 @@ fn sender() -> &'static Mutex<Sender<Extents>> {
         let (tx, rx) = channel::<Extents>();
         let spawned = std::thread::Builder::new().name("hmatc-prefetch".into()).spawn(move || {
             while let Ok(job) = rx.recv() {
-                for (seg, range) in job {
+                // drain everything already queued: concurrent shard plans
+                // over one mapping advise the same ranges at the same
+                // barrier, and one pass per unique extent is enough
+                let mut batch = job;
+                while let Ok(more) = rx.try_recv() {
+                    batch.extend(more);
+                }
+                let before = batch.len();
+                dedupe_batch(&mut batch);
+                DEDUPED.fetch_add((before - batch.len()) as u64, Ordering::Relaxed);
+                ISSUED.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                for (seg, range) in batch {
                     seg.advise_willneed(range);
                 }
             }
@@ -160,6 +207,29 @@ mod tests {
         drop(plan);
         std::thread::sleep(std::time::Duration::from_millis(50));
         drop(seg);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn duplicate_extents_collapse_within_a_drained_batch() {
+        // two Arcs over the same file are distinct segment identities; the
+        // duplicate (segment, range) pairs shard plans produce are clones of
+        // ONE Arc, and only those collapse
+        let path = std::env::temp_dir().join(format!("hmatc_pfdup_{}.bin", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, vec![0u8; 4096]).unwrap();
+        let a = Arc::new(Segment::map_file(&path).unwrap());
+        let b = Arc::new(Segment::map_file(&path).unwrap());
+        let mut batch: Extents =
+            vec![(a.clone(), 0..128), (a.clone(), 0..128), (a.clone(), 256..512), (b.clone(), 0..128), (a.clone(), 0..128)];
+        dedupe_batch(&mut batch);
+        assert_eq!(batch.len(), 3, "kept one per unique (segment, range)");
+        assert!(Arc::ptr_eq(&batch[0].0, &a) && batch[0].1 == (0..128));
+        assert!(Arc::ptr_eq(&batch[1].0, &a) && batch[1].1 == (256..512));
+        assert!(Arc::ptr_eq(&batch[2].0, &b) && batch[2].1 == (0..128));
+        drop(batch);
+        drop(a);
+        drop(b);
         std::fs::remove_file(&path).ok();
     }
 }

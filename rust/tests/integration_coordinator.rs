@@ -23,7 +23,7 @@ fn build(level: usize) -> Arc<HMatrix> {
 #[test]
 fn concurrent_clients_get_correct_answers() {
     let h = build(2);
-    let server = Arc::new(MvmServer::start(h.clone(), BatchPolicy { max_batch: 8, linger: Duration::from_micros(500) }));
+    let server = Arc::new(MvmServer::start(h.clone(), BatchPolicy { max_batch: 8, linger: Duration::from_micros(500), ..BatchPolicy::default() }));
     let n = h.nrows();
     std::thread::scope(|s| {
         for c in 0..6 {
@@ -68,11 +68,11 @@ fn compressed_matrix_served_identically() {
 #[test]
 fn max_batch_respected() {
     let h = build(1);
-    let server = Arc::new(MvmServer::start(h.clone(), BatchPolicy { max_batch: 3, linger: Duration::from_millis(30) }));
+    let server = Arc::new(MvmServer::start(h.clone(), BatchPolicy { max_batch: 3, linger: Duration::from_millis(30), ..BatchPolicy::default() }));
     let mut rng = Rng::new(34);
     let rxs: Vec<_> = (0..9).map(|_| server.submit(rng.vector(h.ncols()))).collect();
     for rx in rxs {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert!(resp.batch_size <= 3, "batch {}", resp.batch_size);
     }
 }

@@ -345,7 +345,7 @@ fn small_formats() -> (Arc<UniformHMatrix>, Arc<H2Matrix>, Arc<HMatrix>) {
 #[test]
 fn server_serves_uniform_matrix_end_to_end() {
     let (uh, _, _) = small_formats();
-    let server = MvmServer::start(uh.clone(), BatchPolicy { max_batch: 4, linger: Duration::from_micros(200) });
+    let server = MvmServer::start(uh.clone(), BatchPolicy { max_batch: 4, linger: Duration::from_micros(200), ..BatchPolicy::default() });
     let mut rng = Rng::new(909);
     for _ in 0..4 {
         let x = rng.vector(uh.ncols());
@@ -360,7 +360,7 @@ fn server_serves_uniform_matrix_end_to_end() {
 #[test]
 fn server_serves_h2_matrix_end_to_end() {
     let (_, h2, _) = small_formats();
-    let server = MvmServer::start(h2.clone(), BatchPolicy { max_batch: 4, linger: Duration::from_micros(200) });
+    let server = MvmServer::start(h2.clone(), BatchPolicy { max_batch: 4, linger: Duration::from_micros(200), ..BatchPolicy::default() });
     let mut rng = Rng::new(910);
     for _ in 0..4 {
         let x = rng.vector(h2.ncols());

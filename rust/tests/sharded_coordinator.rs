@@ -1,0 +1,237 @@
+//! Sharded tier pinning: row partitions + shard plans + scatter/gather
+//! server must reproduce the unsharded plan **bitwise** — for all three
+//! formats, compressed and uncompressed, shards ∈ {1, 2, 3}, forward /
+//! adjoint / multi-RHS, and from nonzero seeds — plus the admission-control
+//! and shard-failure error paths (rejections fail fast, panics surface as
+//! errors, nothing hangs).
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::coordinator::{BatchPolicy, MvmServer, ServeError};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::la::DMatrix;
+use hmatc::lowrank::AcaOptions;
+use hmatc::plan::{row_partition, ExecutorKind, HOperator, PlannedOperator, ShardPlan};
+use hmatc::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn build_h(level: usize, eps: f64) -> HMatrix {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps))
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: row {i}: {x:e} vs {y:e}");
+    }
+}
+
+/// Forward, adjoint and multi-RHS against the unsharded plan, shards 1..=3,
+/// nonzero seeds: reassembling every shard's owned rows must reproduce the
+/// unsharded output bit for bit.
+fn check_sharded_matches_unsharded(op: &PlannedOperator, tag: &str) {
+    let (nr, nc) = (op.nrows(), op.ncols());
+    let mut rng = Rng::new(777);
+    let alpha = 1.25;
+    for shards in [1usize, 2, 3] {
+        let specs = row_partition(op, shards).expect("partition");
+        assert_eq!(specs.len(), shards);
+        let plans: Vec<ShardPlan> = specs.into_iter().map(|s| ShardPlan::build(op, s, ExecutorKind::StaticLpt)).collect();
+
+        // forward, accumulating onto a nonzero seed
+        let x = rng.vector(nc);
+        let seed = rng.vector(nr);
+        let mut want = seed.clone();
+        op.apply(alpha, &x, &mut want);
+        let mut got = seed.clone();
+        for p in &plans {
+            let rows = p.owned(false);
+            let mut out = vec![0.0; rows.len()];
+            p.apply_owned(false, alpha, &x, Some(&seed), &mut out);
+            got[rows].copy_from_slice(&out);
+        }
+        assert_bits_eq(&got, &want, &format!("{tag} fwd shards={shards}"));
+
+        // adjoint: partitioned along the column tree
+        let xa = rng.vector(nr);
+        let seed_adj = rng.vector(nc);
+        let mut want = seed_adj.clone();
+        op.apply_adjoint(alpha, &xa, &mut want);
+        let mut got = seed_adj.clone();
+        for p in &plans {
+            let rows = p.owned(true);
+            let mut out = vec![0.0; rows.len()];
+            p.apply_owned(true, alpha, &xa, Some(&seed_adj), &mut out);
+            got[rows].copy_from_slice(&out);
+        }
+        assert_bits_eq(&got, &want, &format!("{tag} adj shards={shards}"));
+
+        // multi-RHS with a seed panel, and the None = zero-seed path
+        let b = 3usize;
+        let xm = DMatrix::random(nc, b, &mut rng);
+        let seedm = DMatrix::random(nr, b, &mut rng);
+        let mut wantm = seedm.clone();
+        op.apply_multi(alpha, &xm, &mut wantm);
+        let mut gotm = seedm.clone();
+        let mut wantz = DMatrix::zeros(nr, b);
+        op.apply_multi(alpha, &xm, &mut wantz);
+        let mut gotz = DMatrix::zeros(nr, b);
+        for p in &plans {
+            let rows = p.owned(false);
+            let mut out = DMatrix::zeros(rows.len(), b);
+            p.apply_multi_owned(false, alpha, &xm, Some(&seedm), &mut out);
+            for c in 0..b {
+                gotm.col_mut(c)[rows.clone()].copy_from_slice(out.col(c));
+            }
+            p.apply_multi_owned(false, alpha, &xm, None, &mut out);
+            for c in 0..b {
+                gotz.col_mut(c)[rows.clone()].copy_from_slice(out.col(c));
+            }
+        }
+        assert_bits_eq(gotm.data(), wantm.data(), &format!("{tag} multi shards={shards}"));
+        assert_bits_eq(gotz.data(), wantz.data(), &format!("{tag} multi-zero shards={shards}"));
+    }
+}
+
+#[test]
+fn sharded_h_plans_match_unsharded_bitwise() {
+    let h0 = build_h(2, 1e-7);
+    for compress in [false, true] {
+        let mut h = h0.clone();
+        if compress {
+            h.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let op = PlannedOperator::from_h_with(Arc::new(h), ExecutorKind::StaticLpt);
+        check_sharded_matches_unsharded(&op, &format!("H compress={compress}"));
+    }
+}
+
+#[test]
+fn sharded_uh_plans_match_unsharded_bitwise() {
+    let h0 = build_h(2, 1e-7);
+    for compress in [false, true] {
+        let mut uh = hmatc::uniform::build_from_h(&h0, 1e-6, hmatc::uniform::CouplingKind::Combined);
+        if compress {
+            uh.compress(&CompressionConfig { codec: Codec::Fpx, eps: 1e-9, valr: true });
+        }
+        let op = PlannedOperator::from_uniform_with(Arc::new(uh), ExecutorKind::StaticLpt);
+        check_sharded_matches_unsharded(&op, &format!("UH compress={compress}"));
+    }
+}
+
+#[test]
+fn sharded_h2_plans_match_unsharded_bitwise() {
+    let h0 = build_h(2, 1e-7);
+    for compress in [false, true] {
+        let mut h2 = hmatc::h2::build_from_h(&h0, 1e-6);
+        if compress {
+            h2.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let op = PlannedOperator::from_h2_with(Arc::new(h2), ExecutorKind::StaticLpt);
+        check_sharded_matches_unsharded(&op, &format!("H2 compress={compress}"));
+    }
+}
+
+#[test]
+fn row_partition_covers_the_domain_with_disjoint_ordered_ranges() {
+    let h = Arc::new(build_h(2, 1e-7));
+    let op = PlannedOperator::from_h_with(h, ExecutorKind::StaticLpt);
+    assert!(row_partition(&op, 0).is_err(), "zero shards must be rejected");
+    for shards in [1usize, 2, 3, 5] {
+        let specs = row_partition(&op, shards).unwrap();
+        assert_eq!(specs.len(), shards);
+        let mut next = 0usize;
+        let mut total_cost = 0.0;
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(s.index, i);
+            assert_eq!(s.count, shards);
+            if !s.rows.is_empty() {
+                assert_eq!(s.rows.start, next, "shard {i}: owned rows must be contiguous");
+                next = s.rows.end;
+            }
+            total_cost += s.cost;
+        }
+        assert_eq!(next, op.nrows(), "shards={shards}: rows not covered");
+        assert!(total_cost > 0.0);
+    }
+}
+
+#[test]
+fn sharded_server_matches_unsharded_server_bitwise() {
+    let h = Arc::new(build_h(2, 1e-7));
+    let op = Arc::new(PlannedOperator::from_h_with(h.clone(), ExecutorKind::StaticLpt));
+    let mut rng = Rng::new(321);
+    let xs: Vec<Vec<f64>> = (0..6).map(|_| rng.vector(h.ncols())).collect();
+    let flat = MvmServer::start(op.clone(), BatchPolicy::default());
+    let want: Vec<Vec<f64>> = xs.iter().map(|x| flat.call(x.clone()).y).collect();
+    drop(flat);
+    for shards in [1usize, 2, 3] {
+        let server = MvmServer::start_sharded(op.clone(), shards, ExecutorKind::StaticLpt, BatchPolicy::default())
+            .expect("sharded server starts");
+        for (x, w) in xs.iter().zip(&want) {
+            let got = server.call(x.clone()).y;
+            assert_bits_eq(&got, w, &format!("served shards={shards}"));
+        }
+        let line = server.metrics.shard_summary().expect("sharded metrics summary");
+        assert!(line.starts_with(&format!("shards: {shards}")), "unexpected summary: {line}");
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, xs.len());
+    }
+}
+
+#[test]
+fn queue_limit_rejects_excess_requests_without_dropping_admitted_ones() {
+    let h = Arc::new(build_h(1, 1e-6));
+    let op = Arc::new(PlannedOperator::from_h_with(h.clone(), ExecutorKind::StaticLpt));
+    // long linger: the first batch stays open while we overfill the backlog
+    let policy = BatchPolicy { max_batch: 8, linger: Duration::from_millis(500), queue_limit: 2, shard_queue: 1 };
+    let server = MvmServer::start_sharded(op, 2, ExecutorKind::StaticLpt, policy).expect("sharded server starts");
+    let mut rng = Rng::new(9);
+    let n = h.ncols();
+    let rx1 = server.submit(rng.vector(n));
+    let rx2 = server.submit(rng.vector(n));
+    let rx3 = server.submit(rng.vector(n)); // pending == limit: rejected at the door
+    match rx3.recv().unwrap() {
+        Err(ServeError::Rejected { pending, limit }) => {
+            assert_eq!(limit, 2);
+            assert!(pending >= 2, "pending {pending}");
+        }
+        other => panic!("expected rejection, got {other:?}"),
+    }
+    // the admitted requests still complete normally
+    let r1 = rx1.recv().unwrap().expect("admitted request served");
+    let r2 = rx2.recv().unwrap().expect("admitted request served");
+    assert_eq!(r1.y.len(), h.nrows());
+    assert_eq!(r2.y.len(), h.nrows());
+    assert_eq!(server.metrics.rejected(), 1);
+}
+
+#[test]
+fn shard_panic_surfaces_as_error_and_the_tier_keeps_serving() {
+    let h = Arc::new(build_h(1, 1e-6));
+    let op = Arc::new(PlannedOperator::from_h_with(h.clone(), ExecutorKind::StaticLpt));
+    let server = MvmServer::start_sharded(op, 2, ExecutorKind::StaticLpt, BatchPolicy::default()).expect("sharded server starts");
+    let mut rng = Rng::new(11);
+    let x = rng.vector(h.ncols());
+    let healthy = server.try_call(x.clone()).expect("healthy call");
+    server.inject_shard_fault(1);
+    match server.try_call(x.clone()) {
+        Err(ServeError::ShardFailed { shard, message }) => {
+            assert_eq!(shard, 1);
+            assert!(message.contains("injected shard fault"), "message: {message}");
+        }
+        other => panic!("expected ShardFailed, got {other:?}"),
+    }
+    // the worker contained the panic: the next request is served, bitwise
+    // equal to the pre-fault response, and the server still drops cleanly
+    let again = server.try_call(x).expect("post-fault call");
+    assert_bits_eq(&again.y, &healthy.y, "post-fault response");
+    drop(server); // must not hang
+}
