@@ -1,0 +1,165 @@
+//! Ablation — serving under adversarial traffic: the adaptive loop
+//! (continuous per-class batching + online cost calibration,
+//! `MvmServer::start_adaptive`) vs the static fixed-policy batcher, over
+//! four mixes designed to defeat a fixed batch size: interleaved request
+//! widths (b ∈ {1..64}), a uniform-H format mix, cold-start single-RHS
+//! bursts, and the sharded scatter/gather tier (row ownership is already
+//! cost-skewed across shards). Emits `BENCH_serve_traffic.json` with
+//! adaptive-vs-static throughput/latency rows per mix; `--quick` is the CI
+//! bench-smoke configuration.
+
+use hmatc::bench::{write_bench_json, Table};
+use hmatc::bench::workloads::Problem;
+use hmatc::coordinator::{BatchPolicy, MvmServer, OnlineConfig};
+use hmatc::la::DMatrix;
+use hmatc::plan::{ExecutorKind, PlannedOperator};
+use hmatc::util::args::Args;
+use hmatc::util::json::Json;
+use hmatc::util::{fmt_secs, Rng, Timer};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One request of a traffic mix: `width` right-hand sides, submitted after
+/// an optional client-side gap (bursts use 0 inside, a long pause between).
+#[derive(Clone, Copy)]
+struct Job {
+    width: usize,
+    gap_us: u64,
+}
+
+/// Interleaved widths: singles threaded between ever-wider panels, the
+/// worst case for any fixed `max_batch`.
+fn mix_interleaved(n_jobs: usize) -> Vec<Job> {
+    const WIDTHS: [usize; 8] = [1, 1, 4, 1, 16, 2, 8, 32];
+    (0..n_jobs).map(|i| Job { width: WIDTHS[i % WIDTHS.len()], gap_us: 0 }).collect()
+}
+
+/// Cold-start bursts: all singles, fired in back-to-back volleys with idle
+/// gaps between them — the profile window starts empty on every server.
+fn mix_bursts(n_jobs: usize) -> Vec<Job> {
+    (0..n_jobs).map(|i| Job { width: 1, gap_us: if i > 0 && i % 16 == 0 { 400 } else { 0 } }).collect()
+}
+
+/// Drive one server with a mix; returns (wall seconds, served RHS columns).
+fn run(server: &MvmServer, n: usize, jobs: &[Job], seed: u64) -> (f64, usize) {
+    let mut rng = Rng::new(seed);
+    let t = Timer::start();
+    let mut rxs = Vec::with_capacity(jobs.len());
+    for j in jobs {
+        if j.gap_us > 0 {
+            std::thread::sleep(Duration::from_micros(j.gap_us));
+        }
+        if j.width == 1 {
+            rxs.push(server.submit(rng.vector(n)));
+        } else {
+            rxs.push(server.submit_panel(DMatrix::random(n, j.width, &mut rng)));
+        }
+    }
+    let mut cols = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().expect("server alive").expect("serve ok");
+        cols += resp.ncols;
+    }
+    (t.elapsed(), cols)
+}
+
+/// Run one (mix, mode) cell and return its result row.
+#[allow(clippy::too_many_arguments)]
+fn cell(mix: &str, mode: &str, server: &MvmServer, n: usize, jobs: &[Job], seed: u64, table: &mut Table) -> Json {
+    let (wall, cols) = run(server, n, jobs, seed);
+    let m = server.metrics.snapshot();
+    let st = server.online_status();
+    table.row(vec![
+        mix.to_string(),
+        mode.to_string(),
+        cols.to_string(),
+        format!("{:.0} col/s", cols as f64 / wall),
+        fmt_secs(m.p50_latency),
+        fmt_secs(m.p99_latency),
+        format!("{:.2}", m.avg_batch),
+        st.as_ref().map_or("-".to_string(), |s| format!("{}/{}", s.refits, s.swaps)),
+    ]);
+    Json::obj(vec![
+        ("mix", Json::Str(mix.to_string())),
+        ("mode", Json::Str(mode.to_string())),
+        ("requests", (jobs.len() as f64).into()),
+        ("cols", (cols as f64).into()),
+        ("wall_s", wall.into()),
+        ("throughput_cols_per_s", (cols as f64 / wall).into()),
+        ("p50_latency_s", m.p50_latency.into()),
+        ("p99_latency_s", m.p99_latency.into()),
+        ("batches", (m.batches as f64).into()),
+        ("avg_batch", m.avg_batch.into()),
+        ("refits", st.as_ref().map_or(Json::Null, |s| (s.refits as f64).into())),
+        ("swaps", st.as_ref().map_or(Json::Null, |s| (s.swaps as f64).into())),
+    ])
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let level = args.num_or("level", if quick { 2usize } else { 3 });
+    let eps = 1e-6;
+    let p = Problem::new(level);
+    let h = p.build_h(eps);
+    let n = p.n();
+    let njobs = if quick { 24usize } else { 96 };
+    let policy = BatchPolicy::default();
+    // small min_samples so the bootstrap fit (cost_source → online) lands
+    // within the mix even in --quick
+    let cfg = OnlineConfig { min_samples: 16, ..Default::default() };
+
+    let h_op = Arc::new(PlannedOperator::from_h(Arc::new(h.clone())));
+    let uh = hmatc::uniform::build_from_h(&h, eps, hmatc::uniform::CouplingKind::Combined);
+    let uh_op = Arc::new(PlannedOperator::from_uniform(Arc::new(uh)));
+
+    println!("\n== Ablation: adaptive vs static serving under adversarial traffic (n = {n}, {njobs} jobs/mix) ==");
+    let mut table = Table::new(&["mix", "mode", "cols", "throughput", "p50", "p99", "avg batch", "refits/swaps"]);
+    let mut rows = Vec::new();
+
+    // mix 1: interleaved widths on H — fresh server per cell (cold start)
+    let jobs = mix_interleaved(njobs);
+    let server = MvmServer::start(h_op.clone(), policy);
+    rows.push(cell("interleaved_widths", "static", &server, n, &jobs, 21, &mut table));
+    drop(server);
+    let server = MvmServer::start_adaptive(h_op.clone(), policy, cfg.clone());
+    rows.push(cell("interleaved_widths", "adaptive", &server, n, &jobs, 21, &mut table));
+    drop(server);
+
+    // mix 2: the same widths through the uniform-H format
+    let server = MvmServer::start(uh_op.clone(), policy);
+    rows.push(cell("format_mix_uh", "static", &server, n, &jobs, 22, &mut table));
+    drop(server);
+    let server = MvmServer::start_adaptive(uh_op, policy, cfg.clone());
+    rows.push(cell("format_mix_uh", "adaptive", &server, n, &jobs, 22, &mut table));
+    drop(server);
+
+    // mix 3: cold-start single-RHS bursts
+    let jobs = mix_bursts(njobs * 2);
+    let server = MvmServer::start(h_op.clone(), policy);
+    rows.push(cell("cold_start_bursts", "static", &server, n, &jobs, 23, &mut table));
+    drop(server);
+    let server = MvmServer::start_adaptive(h_op.clone(), policy, cfg.clone());
+    rows.push(cell("cold_start_bursts", "adaptive", &server, n, &jobs, 23, &mut table));
+    drop(server);
+
+    // mix 4: interleaved widths through the sharded scatter/gather tier
+    // (shard row ownership is cost-skewed by construction)
+    let jobs = mix_interleaved(njobs);
+    let kind = ExecutorKind::StaticLpt;
+    let server = MvmServer::start_sharded(h_op.clone(), 2, kind, policy).expect("sharded server");
+    rows.push(cell("sharded_skew", "static", &server, n, &jobs, 24, &mut table));
+    drop(server);
+    let server = MvmServer::start_sharded_adaptive(h_op, 2, kind, policy, cfg).expect("sharded adaptive server");
+    rows.push(cell("sharded_skew", "adaptive", &server, n, &jobs, 24, &mut table));
+    drop(server);
+
+    table.print();
+    let doc = Json::obj(vec![
+        ("quick", Json::Bool(quick)),
+        ("n", (n as f64).into()),
+        ("rows", Json::arr(rows)),
+    ]);
+    write_bench_json("serve_traffic", &doc);
+    println!("rows written to BENCH_serve_traffic.json");
+}

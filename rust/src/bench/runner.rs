@@ -13,7 +13,9 @@ pub fn exec_context() -> (String, usize) {
     (crate::plan::ExecutorKind::from_env().to_string(), crate::par::num_threads() + 1)
 }
 
-/// Cost-source label stamped into bench result documents:
+/// Cost-source label stamped into bench result documents: `online` when
+/// `HMATC_ONLINE` enables the adaptive serving loop (the run re-fits its own
+/// model, so any `HMATC_COSTS` file is only its starting point), else
 /// `calibrated(<path>)` when `HMATC_COSTS` names a profile that actually
 /// **loads and re-balances** (a file the plans reject falls back to static
 /// costs, and the label must say so — otherwise static-cost rows would be
@@ -21,6 +23,9 @@ pub fn exec_context() -> (String, usize) {
 /// `static`. (Benches that calibrate in-process, e.g. the fig06/fig13
 /// `plan calibrated` rows, label those rows themselves.)
 pub fn cost_source_label() -> String {
+    if crate::coordinator::OnlineConfig::enabled_from_env() {
+        return "online".to_string();
+    }
     crate::plan::costmodel::source_label(crate::plan::costmodel::costs_from_env().as_ref())
 }
 

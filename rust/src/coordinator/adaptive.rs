@@ -1,0 +1,382 @@
+//! Online cost adaptation for the serving coordinator.
+//!
+//! One-shot calibration (`hmatc calibrate`) models the machine once, cold.
+//! Under live mixed traffic the right schedule drifts — what is resident in
+//! the decode-once hot cache, which batch widths dominate, which shards run
+//! hot — so [`OnlineCalibrator`] continuously folds per-chunk
+//! [`crate::plan::TimingSink`] samples harvested from **served batches** into
+//! a sliding window, re-runs the least-squares [`costmodel::fit`] when the
+//! modeled makespan drifts from the measured one, and atomically swaps
+//! re-balanced packings into every registered operator via the existing
+//! `Packing` RwLock path. Re-balancing only re-partitions the same task
+//! lists (never the task bodies or their summation order), so served outputs
+//! stay **bitwise identical** across every re-fit and swap — the same
+//! invariant `tests/calibration_invariance.rs` pins for offline rebalancing,
+//! extended to mid-stream swaps by `tests/online_adaptation.rs`.
+//!
+//! Swap-storm protection: a re-fit needs `hysteresis` *consecutive*
+//! over-threshold drift observations, the streak resets on every quiet
+//! observation and after every re-fit, and the window must hold at least
+//! `min_samples` samples. Noisy timings that straddle the threshold
+//! therefore trigger at most one swap per `hysteresis` observations, and
+//! alternating noise triggers none.
+
+use crate::plan::costmodel::{self, Sample};
+use crate::plan::PlannedOperator;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Knobs of the adaptive serving loop, from `HMATC_ONLINE` or
+/// `hmatc serve --online-*` flags.
+#[derive(Clone, Debug)]
+pub struct OnlineConfig {
+    /// Sliding window of per-chunk samples the re-fit runs over.
+    pub window: usize,
+    /// Minimum window fill before the first fit (and any re-fit).
+    pub min_samples: usize,
+    /// Relative drift `|measured − predicted| / predicted` that arms a
+    /// re-fit.
+    pub drift: f64,
+    /// Consecutive over-threshold observations required to re-fit.
+    pub hysteresis: usize,
+    /// Latency deadline the continuous batcher packs panels against.
+    pub deadline: Duration,
+    /// Hard cap on the coalesced panel width.
+    pub max_panel: usize,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> OnlineConfig {
+        OnlineConfig {
+            window: 4096,
+            min_samples: 128,
+            drift: 0.25,
+            hysteresis: 3,
+            deadline: Duration::from_millis(2),
+            max_panel: 64,
+        }
+    }
+}
+
+impl OnlineConfig {
+    /// Parse an `HMATC_ONLINE` value: `1`/`on`/`true` enable the defaults,
+    /// `0`/`off`/`false`/empty disable, anything else is a comma list of
+    /// `key=value` overrides (`window`, `min`, `drift`, `hysteresis`,
+    /// `deadline_us`, `panel`) that also enables. Unknown keys or malformed
+    /// values are reported as errors, not ignored.
+    pub fn parse(value: &str) -> Result<Option<OnlineConfig>, String> {
+        let v = value.trim();
+        if v.is_empty() || v == "0" || v.eq_ignore_ascii_case("off") || v.eq_ignore_ascii_case("false") {
+            return Ok(None);
+        }
+        if v == "1" || v.eq_ignore_ascii_case("on") || v.eq_ignore_ascii_case("true") {
+            return Ok(Some(OnlineConfig::default()));
+        }
+        let mut cfg = OnlineConfig::default();
+        for part in v.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part.split_once('=').ok_or_else(|| format!("expected key=value, got {part:?}"))?;
+            let bad = |what: &str| format!("invalid {what} in HMATC_ONLINE: {val:?}");
+            match key.trim() {
+                "window" => cfg.window = val.trim().parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| bad("window"))?,
+                "min" => cfg.min_samples = val.trim().parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| bad("min"))?,
+                "drift" => {
+                    cfg.drift = val.trim().parse::<f64>().ok().filter(|d| d.is_finite() && *d > 0.0).ok_or_else(|| bad("drift"))?
+                }
+                "hysteresis" => {
+                    cfg.hysteresis = val.trim().parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| bad("hysteresis"))?
+                }
+                "deadline_us" => {
+                    cfg.deadline = Duration::from_micros(val.trim().parse::<u64>().map_err(|_| bad("deadline_us"))?)
+                }
+                "panel" => cfg.max_panel = val.trim().parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| bad("panel"))?,
+                other => return Err(format!("unknown HMATC_ONLINE key {other:?}")),
+            }
+        }
+        cfg.min_samples = cfg.min_samples.min(cfg.window);
+        Ok(Some(cfg))
+    }
+
+    /// The `HMATC_ONLINE` configuration; `None` when unset/disabled.
+    /// Invalid values warn to stderr and disable (serving must not die on a
+    /// typo in an env knob).
+    pub fn from_env() -> Option<OnlineConfig> {
+        let v = std::env::var("HMATC_ONLINE").ok()?;
+        match OnlineConfig::parse(&v) {
+            Ok(cfg) => cfg,
+            Err(e) => {
+                eprintln!("hmatc: ignoring HMATC_ONLINE: {e}");
+                None
+            }
+        }
+    }
+
+    /// Whether `HMATC_ONLINE` enables adaptation (bench/status labels).
+    pub fn enabled_from_env() -> bool {
+        OnlineConfig::from_env().is_some()
+    }
+
+    /// One-line knob summary for banners/logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "window {} | min {} | drift {:.2} | hysteresis {} | deadline {}us | panel {}",
+            self.window,
+            self.min_samples,
+            self.drift,
+            self.hysteresis,
+            self.deadline.as_micros(),
+            self.max_panel
+        )
+    }
+}
+
+/// Mutable calibrator state, one lock: observations arrive already batched
+/// (one `observe` per served batch), so contention is negligible next to the
+/// product itself.
+struct CalState {
+    window: VecDeque<Sample>,
+    streak: usize,
+    refits: u64,
+    swaps: u64,
+    observations: u64,
+    last_drift: f64,
+    bootstrapped: bool,
+}
+
+/// Snapshot of the calibrator for status lines and tests.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStatus {
+    /// Samples currently held in the sliding window.
+    pub window_len: usize,
+    /// Batches observed so far.
+    pub observations: u64,
+    /// Fit attempts (bootstrap + drift-armed).
+    pub refits: u64,
+    /// Successful packing swaps (usable fitted profile applied).
+    pub swaps: u64,
+    /// Relative drift of the most recent observation.
+    pub last_drift: f64,
+    /// Current consecutive over-threshold streak.
+    pub streak: usize,
+}
+
+/// Sliding-window online calibrator: feeds served-batch timings back into
+/// the cost model and re-balances every registered operator when the model
+/// stops tracking the machine. See the module docs for the drift/hysteresis
+/// contract.
+pub struct OnlineCalibrator {
+    cfg: OnlineConfig,
+    ops: Vec<Arc<PlannedOperator>>,
+    state: Mutex<CalState>,
+}
+
+impl OnlineCalibrator {
+    /// A calibrator re-balancing `ops` on every successful re-fit. All
+    /// operators of one server (per-class routes included) register here so
+    /// a swap keeps their packings consistent with one model.
+    pub fn new(cfg: OnlineConfig, ops: Vec<Arc<PlannedOperator>>) -> OnlineCalibrator {
+        OnlineCalibrator {
+            cfg,
+            ops,
+            state: Mutex::new(CalState {
+                window: VecDeque::new(),
+                streak: 0,
+                refits: 0,
+                swaps: 0,
+                observations: 0,
+                last_drift: 0.0,
+                bootstrapped: false,
+            }),
+        }
+    }
+
+    /// The active knob set.
+    pub fn config(&self) -> &OnlineConfig {
+        &self.cfg
+    }
+
+    /// Fold one served batch into the window: its harvested per-chunk
+    /// samples plus the (predicted, measured) makespan of the packing it ran
+    /// on. Returns `true` when the observation triggered a packing swap.
+    ///
+    /// Bootstrap rule: until the first usable fit there is no profile, so
+    /// `predicted` is 0.0 and drift is undefined — the first fit fires as
+    /// soon as the window holds `min_samples`, which is what turns
+    /// `cost_source` to `online` deterministically early in a serve run.
+    pub fn observe(&self, samples: &[Sample], predicted: f64, measured: f64) -> bool {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.observations += 1;
+        st.window.extend(samples.iter().cloned());
+        while st.window.len() > self.cfg.window {
+            st.window.pop_front();
+        }
+        let d = costmodel::drift(predicted, measured);
+        st.last_drift = d;
+        if st.window.len() < self.cfg.min_samples {
+            return false;
+        }
+        if !st.bootstrapped && predicted <= 0.0 {
+            return self.refit_locked(&mut st);
+        }
+        if d > self.cfg.drift {
+            st.streak += 1;
+            if st.streak >= self.cfg.hysteresis {
+                return self.refit_locked(&mut st);
+            }
+        } else {
+            st.streak = 0;
+        }
+        false
+    }
+
+    /// Re-fit from the current window regardless of drift state (tests and
+    /// the serve smoke use this to force mid-stream swaps). Returns `true`
+    /// when a usable profile was fitted and swapped in.
+    pub fn force_refit(&self) -> bool {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        self.refit_locked(&mut st)
+    }
+
+    fn refit_locked(&self, st: &mut CalState) -> bool {
+        st.streak = 0;
+        st.refits += 1;
+        let samples: Vec<Sample> = st.window.iter().cloned().collect();
+        let profile = match costmodel::fit(&samples) {
+            Ok(p) => p,
+            Err(_) => return false,
+        };
+        if !profile.is_usable() {
+            return false;
+        }
+        for op in &self.ops {
+            op.rebalance(&profile);
+        }
+        st.bootstrapped = true;
+        st.swaps += 1;
+        true
+    }
+
+    /// Current calibrator counters (serve status line / tests).
+    pub fn status(&self) -> OnlineStatus {
+        let st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        OnlineStatus {
+            window_len: st.window.len(),
+            observations: st.observations,
+            refits: st.refits,
+            swaps: st.swaps,
+            last_drift: st.last_drift,
+            streak: st.streak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::costmodel::{KernelClass, TaskFeats};
+
+    fn sample(secs: f64) -> Sample {
+        let mut feats = TaskFeats::default();
+        feats.add(KernelClass::MatBytes, 1024.0);
+        feats.add(KernelClass::PanelVec, 64.0);
+        Sample { feats, nrhs: 1, secs }
+    }
+
+    fn batch(n: usize, secs: f64) -> Vec<Sample> {
+        (0..n).map(|_| sample(secs)).collect()
+    }
+
+    #[test]
+    fn config_parses_switches_and_overrides() {
+        assert!(OnlineConfig::parse("0").unwrap().is_none());
+        assert!(OnlineConfig::parse("off").unwrap().is_none());
+        assert!(OnlineConfig::parse("").unwrap().is_none());
+        let d = OnlineConfig::parse("1").unwrap().unwrap();
+        assert_eq!(d.window, OnlineConfig::default().window);
+        let c = OnlineConfig::parse("window=512,min=32,drift=0.5,hysteresis=2,deadline_us=750,panel=16").unwrap().unwrap();
+        assert_eq!(c.window, 512);
+        assert_eq!(c.min_samples, 32);
+        assert!((c.drift - 0.5).abs() < 1e-12);
+        assert_eq!(c.hysteresis, 2);
+        assert_eq!(c.deadline, Duration::from_micros(750));
+        assert_eq!(c.max_panel, 16);
+        // min is clamped to the window so the first fit can ever fire
+        let c = OnlineConfig::parse("window=16,min=400").unwrap().unwrap();
+        assert_eq!(c.min_samples, 16);
+        // malformed values are errors, not silent defaults
+        assert!(OnlineConfig::parse("drift=sideways").is_err());
+        assert!(OnlineConfig::parse("window=0").is_err());
+        assert!(OnlineConfig::parse("warp=9").is_err());
+        assert!(OnlineConfig::parse("drift").is_err());
+    }
+
+    #[test]
+    fn bootstraps_once_window_fills() {
+        let cfg = OnlineConfig { min_samples: 8, ..OnlineConfig::default() };
+        let cal = OnlineCalibrator::new(cfg, Vec::new());
+        // below min_samples: no fit even without a profile
+        assert!(!cal.observe(&batch(4, 1e-6), 0.0, 1e-4));
+        assert_eq!(cal.status().refits, 0);
+        // window fills → bootstrap fit fires exactly once
+        assert!(cal.observe(&batch(8, 1e-6), 0.0, 1e-4));
+        let st = cal.status();
+        assert_eq!(st.refits, 1);
+        assert_eq!(st.swaps, 1);
+        // bootstrapped: a quiet observation does not re-fit
+        assert!(!cal.observe(&batch(4, 1e-6), 1e-4, 1.05e-4));
+        assert_eq!(cal.status().refits, 1);
+    }
+
+    #[test]
+    fn drift_needs_consecutive_hysteresis_streak() {
+        let cfg = OnlineConfig { min_samples: 1, hysteresis: 3, drift: 0.25, ..OnlineConfig::default() };
+        let cal = OnlineCalibrator::new(cfg, Vec::new());
+        assert!(cal.observe(&batch(4, 1e-6), 0.0, 1e-4)); // bootstrap
+        // two over-threshold observations, then a quiet one: streak resets
+        assert!(!cal.observe(&batch(1, 1e-6), 1e-4, 2e-4));
+        assert!(!cal.observe(&batch(1, 1e-6), 1e-4, 2e-4));
+        assert!(!cal.observe(&batch(1, 1e-6), 1e-4, 1.01e-4));
+        assert_eq!(cal.status().refits, 1); // still only the bootstrap
+        // three consecutive over-threshold observations: exactly one re-fit
+        assert!(!cal.observe(&batch(1, 1e-6), 1e-4, 2e-4));
+        assert!(!cal.observe(&batch(1, 1e-6), 1e-4, 2e-4));
+        assert!(cal.observe(&batch(1, 1e-6), 1e-4, 2e-4));
+        assert_eq!(cal.status().refits, 2);
+    }
+
+    #[test]
+    fn noisy_timings_cause_no_swap_storm() {
+        let cfg = OnlineConfig { min_samples: 1, hysteresis: 3, drift: 0.25, ..OnlineConfig::default() };
+        let cal = OnlineCalibrator::new(cfg, Vec::new());
+        cal.observe(&batch(4, 1e-6), 0.0, 1e-4); // bootstrap
+        // alternating noise straddling the threshold: streak never reaches 3
+        for i in 0..200 {
+            let measured = if i % 2 == 0 { 2e-4 } else { 1.0e-4 };
+            cal.observe(&batch(1, 1e-6), 1e-4, measured);
+        }
+        assert_eq!(cal.status().refits, 1, "alternating noise must not swap");
+        // sustained drift: swaps bounded by observations / hysteresis
+        let before = cal.status().refits;
+        for _ in 0..30 {
+            cal.observe(&batch(1, 1e-6), 1e-4, 3e-4);
+        }
+        let extra = cal.status().refits - before;
+        assert!(extra <= 10, "at most one swap per hysteresis window, got {extra}");
+        assert!(extra >= 1, "sustained drift must eventually swap");
+    }
+
+    #[test]
+    fn zero_prediction_after_bootstrap_is_quiet() {
+        // drift(0, m) is defined as 0 — a swap race that briefly yields no
+        // prediction must not arm the trigger
+        let cfg = OnlineConfig { min_samples: 1, hysteresis: 1, ..OnlineConfig::default() };
+        let cal = OnlineCalibrator::new(cfg, Vec::new());
+        cal.observe(&batch(4, 1e-6), 0.0, 1e-4); // bootstrap
+        assert!(!cal.observe(&batch(1, 1e-6), 0.0, 1e-4));
+        assert_eq!(cal.status().refits, 1);
+    }
+}

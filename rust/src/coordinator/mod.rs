@@ -14,10 +14,20 @@
 //! fixed shard order (bitwise identical to the unsharded plan), and
 //! admission control fails fast ([`ServeError::Rejected`]) once the pending
 //! backlog hits `queue_limit`.
+//!
+//! With `HMATC_ONLINE` ([`MvmServer::start_adaptive`] /
+//! [`MvmServer::start_sharded_adaptive`]) the fixed batcher becomes a
+//! continuous per-class batcher with deadline-packed panel widths, every
+//! served batch is timed per chunk, and an [`OnlineCalibrator`] folds the
+//! samples into the live cost model — re-balancing the packings whenever
+//! predicted and measured makespans drift apart, without changing a single
+//! served bit.
 
+mod adaptive;
 mod metrics;
 mod server;
 mod shard;
 
+pub use adaptive::{OnlineCalibrator, OnlineConfig, OnlineStatus};
 pub use metrics::{Metrics, MetricsSnapshot, ShardCounters, ShardSnapshot};
-pub use server::{BatchPolicy, MvmServer, Request, Response, ServeError, ServeResult};
+pub use server::{BatchPolicy, MvmServer, Payload, Request, Response, ServeError, ServeResult};

@@ -44,35 +44,79 @@
 //! [`ServeError::Rejected`] instead of growing the queue. A panicking shard
 //! surfaces as [`ServeError::ShardFailed`] on every request of the affected
 //! batch; nothing hangs and the worker keeps serving.
+//!
+//! # Adaptive serving ([`MvmServer::start_adaptive`])
+//!
+//! The adaptive loop replaces the fixed [`BatchPolicy`] batcher with
+//! **continuous batching**: queued single-RHS and multi-RHS jobs are
+//! coalesced into per-request-class panels whose width follows the live
+//! cost profile's panel scaling, bounded by the oldest request's remaining
+//! latency deadline ([`OnlineConfig::deadline`]). Single-column batches are
+//! routed to a low-overhead static-LPT executor route, panels to the
+//! operator's own backend — all executors produce bitwise-identical
+//! products, so routing never changes served bits. Every served batch runs
+//! timed; the harvested per-chunk samples feed the [`OnlineCalibrator`],
+//! which re-fits the cost model and atomically swaps re-balanced packings
+//! when the modeled makespan drifts from the measured one.
 
+use super::adaptive::{OnlineCalibrator, OnlineConfig, OnlineStatus};
 use super::metrics::{Metrics, ShardCounters};
-use super::shard::{shard_worker, ShardJob, ShardResult};
+use super::shard::{shard_worker, ShardJob, ShardObservation, ShardResult};
 use crate::la::DMatrix;
+use crate::plan::costmodel::{Sample, TimingSink};
 use crate::plan::{row_partition, ExecutorKind, HOperator, PlannedOperator, ShardPlan};
 use crate::store::HotCache;
 use crate::util::Timer;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// An MVM request: a right-hand side in internal ordering.
+/// A request's right-hand side(s) in internal ordering: one vector or a
+/// multi-RHS panel. The two variants are the batching **classes** of the
+/// adaptive dispatcher — singles coalesce with singles, panels with panels.
+pub enum Payload {
+    /// One right-hand-side vector (width 1).
+    Single(Vec<f64>),
+    /// A multi-RHS panel, `n × k` column-major.
+    Panel(DMatrix),
+}
+
+impl Payload {
+    /// Columns this request contributes to the batch product.
+    pub fn width(&self) -> usize {
+        match self {
+            Payload::Single(_) => 1,
+            Payload::Panel(p) => p.ncols(),
+        }
+    }
+
+    fn is_single(&self) -> bool {
+        matches!(self, Payload::Single(_))
+    }
+}
+
+/// An MVM request: one or more right-hand sides in internal ordering.
 pub struct Request {
     pub id: u64,
-    pub x: Vec<f64>,
+    pub payload: Payload,
     pub submitted: Instant,
     /// Channel the response is delivered on.
     pub reply: Sender<ServeResult>,
 }
 
-/// The response: y = A x plus timing.
+/// The response: y = A x plus timing. For panel requests, `y` holds the
+/// `ncols` output columns concatenated column-major.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub y: Vec<f64>,
+    /// Output columns in `y` (1 for single-RHS requests).
+    pub ncols: usize,
     /// Seconds from submission to completion.
     pub latency: f64,
-    /// Batch this request was served in.
+    /// Requests sharing the batch this one was served in.
     pub batch_size: usize,
 }
 
@@ -136,6 +180,8 @@ pub struct MvmServer {
     queue_limit: usize,
     /// Test-only fault injection slot: shard index to fail on the next batch.
     fault: Arc<AtomicUsize>,
+    /// Online calibrator of the adaptive loop; `None` on static servers.
+    calibrator: Option<Arc<OnlineCalibrator>>,
 }
 
 /// Fault-slot value meaning "no injected fault".
@@ -164,6 +210,51 @@ impl MvmServer {
             pending,
             queue_limit: policy.queue_limit,
             fault: Arc::new(AtomicUsize::new(NO_FAULT)),
+            calibrator: None,
+        }
+    }
+
+    /// Start the adaptive serving loop over a planned operator: continuous
+    /// per-class batching against [`OnlineConfig::deadline`], per-class
+    /// executor routing (single-column batches run a low-overhead static-LPT
+    /// route, panels run `op`'s own backend), live per-chunk timing, and an
+    /// [`OnlineCalibrator`] that re-fits the cost model and swaps re-balanced
+    /// packings on drift. Served results are **bitwise identical** to
+    /// [`MvmServer::start`] over the same operator — adaptation only moves
+    /// task→shard boundaries and batch seams, never task bodies or their
+    /// summation order.
+    pub fn start_adaptive(op: Arc<PlannedOperator>, policy: BatchPolicy, cfg: OnlineConfig) -> MvmServer {
+        let narrow = if op.executor_name() == ExecutorKind::StaticLpt.to_string() {
+            op.clone()
+        } else {
+            Arc::new(op.rebuilt_with(ExecutorKind::StaticLpt))
+        };
+        let mut registered = vec![op.clone()];
+        if !Arc::ptr_eq(&op, &narrow) {
+            registered.push(narrow.clone());
+        }
+        let calibrator = Arc::new(OnlineCalibrator::new(cfg.clone(), registered));
+
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::new());
+        let pending = Arc::new(AtomicUsize::new(0));
+        let (met, pend, cal) = (metrics.clone(), pending.clone(), calibrator.clone());
+        let routes = Routes { primary: op, narrow };
+        let worker = std::thread::Builder::new()
+            .name("hmatc-mvm-adaptive".into())
+            .spawn(move || adaptive_worker_loop(routes, policy, cfg, cal, rx, met, pend))
+            .expect("spawn adaptive worker");
+        MvmServer {
+            tx,
+            worker: Some(worker),
+            gather: None,
+            shard_workers: Vec::new(),
+            metrics,
+            next_id: Mutex::new(0),
+            pending,
+            queue_limit: policy.queue_limit,
+            fault: Arc::new(AtomicUsize::new(NO_FAULT)),
+            calibrator: Some(calibrator),
         }
     }
 
@@ -176,6 +267,35 @@ impl MvmServer {
     /// operator, or an external-ordering operator (the fold lives in the
     /// unsharded front; shard slices run internal ordering only).
     pub fn start_sharded(op: Arc<PlannedOperator>, shards: usize, kind: ExecutorKind, policy: BatchPolicy) -> Result<MvmServer, String> {
+        MvmServer::start_sharded_inner(op, shards, kind, policy, None)
+    }
+
+    /// Sharded scatter/gather tier with online adaptation: the dispatcher
+    /// runs the continuous per-class batcher (deadline-packed panel widths
+    /// from the parent operator's live cost model) and marks every job
+    /// timed; shard workers harvest per-chunk timings of their slices; the
+    /// gather thread folds the per-shard observations (concatenated samples,
+    /// makespan = max across shards) into the [`OnlineCalibrator`] once per
+    /// batch. A packing swap re-partitions the parent schedules; shard
+    /// slices re-pack lazily through the generation-keyed packing caches.
+    /// Served results stay bitwise identical to the static sharded tier.
+    pub fn start_sharded_adaptive(
+        op: Arc<PlannedOperator>,
+        shards: usize,
+        kind: ExecutorKind,
+        policy: BatchPolicy,
+        cfg: OnlineConfig,
+    ) -> Result<MvmServer, String> {
+        MvmServer::start_sharded_inner(op, shards, kind, policy, Some(cfg))
+    }
+
+    fn start_sharded_inner(
+        op: Arc<PlannedOperator>,
+        shards: usize,
+        kind: ExecutorKind,
+        policy: BatchPolicy,
+        online: Option<OnlineConfig>,
+    ) -> Result<MvmServer, String> {
         if op.is_external_ordering() {
             return Err("sharded serving takes internal-ordering operators (drop with_external_ordering)".to_string());
         }
@@ -209,18 +329,23 @@ impl MvmServer {
             shard_workers.push(handle);
         }
 
+        let calibrator = online
+            .as_ref()
+            .map(|cfg| Arc::new(OnlineCalibrator::new(cfg.clone(), vec![op.clone()])));
+        let adaptive = online.map(|cfg| AdaptiveDispatch { op: op.clone(), cfg });
+
         let n_in = op.ncols();
         let (disp_ctrs, disp_fault) = (counters.clone(), fault.clone());
         let worker = std::thread::Builder::new()
             .name("hmatc-mvm-dispatch".into())
-            .spawn(move || dispatch_loop(n_in, policy, rx, job_txs, ticket_tx, disp_ctrs, disp_fault))
+            .spawn(move || dispatch_loop(n_in, policy, adaptive, rx, job_txs, ticket_tx, disp_ctrs, disp_fault))
             .expect("spawn dispatcher");
 
         let (n_out, bytes) = (op.nrows(), op.byte_size());
-        let (gather_met, gather_pend) = (metrics.clone(), pending.clone());
+        let (gather_met, gather_pend, gather_cal) = (metrics.clone(), pending.clone(), calibrator.clone());
         let gather = std::thread::Builder::new()
             .name("hmatc-mvm-gather".into())
-            .spawn(move || gather_loop(n_out, bytes, ticket_rx, result_rxs, gather_met, gather_pend))
+            .spawn(move || gather_loop(n_out, bytes, ticket_rx, result_rxs, gather_met, gather_pend, gather_cal))
             .expect("spawn gather");
 
         Ok(MvmServer {
@@ -233,13 +358,24 @@ impl MvmServer {
             pending,
             queue_limit: policy.queue_limit,
             fault,
+            calibrator,
         })
     }
 
-    /// Submit a request; returns a receiver for the outcome. With admission
-    /// control active ([`BatchPolicy::queue_limit`]), an over-limit backlog
-    /// resolves the receiver immediately with [`ServeError::Rejected`].
+    /// Submit a single-RHS request; returns a receiver for the outcome. With
+    /// admission control active ([`BatchPolicy::queue_limit`]), an over-limit
+    /// backlog resolves the receiver immediately with [`ServeError::Rejected`].
     pub fn submit(&self, x: Vec<f64>) -> Receiver<ServeResult> {
+        self.submit_payload(Payload::Single(x))
+    }
+
+    /// Submit a multi-RHS panel (`ncols × k`); the response's `y` holds the
+    /// `k` output columns concatenated column-major (`Response::ncols = k`).
+    pub fn submit_panel(&self, x: DMatrix) -> Receiver<ServeResult> {
+        self.submit_payload(Payload::Panel(x))
+    }
+
+    fn submit_payload(&self, payload: Payload) -> Receiver<ServeResult> {
         let (reply, rx) = channel();
         if self.queue_limit > 0 {
             let p = self.pending.load(Ordering::Acquire);
@@ -255,7 +391,7 @@ impl MvmServer {
             *g += 1;
             *g
         };
-        self.tx.send(Request { id, x, submitted: Instant::now(), reply }).expect("server gone");
+        self.tx.send(Request { id, payload, submitted: Instant::now(), reply }).expect("server gone");
         rx
     }
 
@@ -267,6 +403,23 @@ impl MvmServer {
     /// Blocking convenience call; panics on [`ServeError`].
     pub fn call(&self, x: Vec<f64>) -> Response {
         self.try_call(x).expect("serve error")
+    }
+
+    /// Blocking multi-RHS panel call; panics on [`ServeError`].
+    pub fn call_panel(&self, x: DMatrix) -> Response {
+        self.submit_panel(x).recv().expect("server dropped response").expect("serve error")
+    }
+
+    /// Online calibrator counters of an adaptive server; `None` on static
+    /// servers.
+    pub fn online_status(&self) -> Option<OnlineStatus> {
+        self.calibrator.as_ref().map(|c| c.status())
+    }
+
+    /// The adaptive server's calibrator (tests and the serve smoke use it to
+    /// force mid-stream re-fits); `None` on static servers.
+    pub fn calibrator(&self) -> Option<&Arc<OnlineCalibrator>> {
+        self.calibrator.as_ref()
     }
 
     /// Test hook: make shard `index` panic on the next batch it receives.
@@ -315,13 +468,114 @@ fn fill_batch(rx: &Receiver<Request>, policy: &BatchPolicy) -> Option<Vec<Reques
     Some(batch)
 }
 
-/// Assemble the batch's right-hand sides into one `n_in × b` panel.
+/// Continuous batcher of the adaptive loop: linger-drain the queue into the
+/// carry, then coalesce the **oldest** request's class (single-RHS vs
+/// multi-RHS) into one product panel whose summed width the `cap` callback
+/// bounds (deadline-packed under a live cost profile). Requests of the other
+/// class — and same-class overflow — stay carried, in order, for the next
+/// iteration; the carry front always dictates the next batch, so neither
+/// class can starve the other.
+fn fill_class_batch(
+    rx: &Receiver<Request>,
+    carry: &mut VecDeque<Request>,
+    policy: &BatchPolicy,
+    cap: &dyn Fn(Duration) -> usize,
+) -> Option<Vec<Request>> {
+    if carry.is_empty() {
+        carry.push_back(rx.recv().ok()?);
+    }
+    if carry.len() == 1 {
+        // nothing carried over: linger for companions like the static batcher
+        let deadline = Instant::now() + policy.linger;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => carry.push_back(r),
+                Err(_) => break,
+            }
+        }
+    }
+    // free companions: whatever is already sitting in the channel
+    while let Ok(r) = rx.try_recv() {
+        carry.push_back(r);
+    }
+    let width_cap = cap(carry[0].submitted.elapsed());
+    let single = carry[0].payload.is_single();
+    let mut batch = Vec::new();
+    let mut width = 0usize;
+    let mut rest = VecDeque::new();
+    for r in carry.drain(..) {
+        let w = r.payload.width();
+        // the head request always runs, even when wider than the cap
+        if r.payload.is_single() == single && (batch.is_empty() || width + w <= width_cap) {
+            width += w;
+            batch.push(r);
+        } else {
+            rest.push_back(r);
+        }
+    }
+    *carry = rest;
+    Some(batch)
+}
+
+/// Deadline-bounded coalesced panel width: with an active online profile the
+/// modeled batch cost `fixed + b·per_col` (seconds) is packed against the
+/// oldest queued request's remaining deadline; without a profile
+/// (pre-bootstrap, static byte-unit costs) the static `max_batch` applies.
+/// Always clamped to `[1, cfg.max_panel]`.
+fn panel_cap(op: &PlannedOperator, cfg: &OnlineConfig, policy: &BatchPolicy, oldest_wait: Duration) -> usize {
+    let cap = match op.panel_cost_model() {
+        None => policy.max_batch,
+        Some((fixed, per_col)) if per_col > 0.0 => {
+            let remaining = cfg.deadline.saturating_sub(oldest_wait).as_secs_f64();
+            ((remaining - fixed) / per_col).max(0.0).floor() as usize
+        }
+        Some(_) => cfg.max_panel,
+    };
+    cap.clamp(1, cfg.max_panel.max(1))
+}
+
+/// Assemble the batch's right-hand sides into one `n_in × w` panel, `w` the
+/// summed payload width; a panel payload occupies consecutive columns.
 fn assemble_panel(n_in: usize, batch: &[Request]) -> DMatrix {
-    let mut x = DMatrix::zeros(n_in, batch.len());
-    for (c, r) in batch.iter().enumerate() {
-        x.col_mut(c).copy_from_slice(&r.x);
+    let w: usize = batch.iter().map(|r| r.payload.width()).sum();
+    let mut x = DMatrix::zeros(n_in, w);
+    let mut c = 0;
+    for r in batch {
+        match &r.payload {
+            Payload::Single(v) => {
+                x.col_mut(c).copy_from_slice(v);
+                c += 1;
+            }
+            Payload::Panel(p) => {
+                for k in 0..p.ncols() {
+                    x.col_mut(c).copy_from_slice(p.col(k));
+                    c += 1;
+                }
+            }
+        }
     }
     x
+}
+
+/// Deliver each request its columns of the batch product (column-major
+/// concatenation for panels), in submit order.
+fn reply_ok(batch: Vec<Request>, y: &DMatrix, nreq: usize, pending: &AtomicUsize) {
+    let mut c = 0;
+    for r in batch {
+        let k = r.payload.width();
+        let mut out = Vec::with_capacity(y.nrows() * k);
+        for j in 0..k {
+            out.extend_from_slice(y.col(c + j));
+        }
+        c += k;
+        let latency = r.submitted.elapsed().as_secs_f64();
+        let _ = r.reply.send(Ok(Response { id: r.id, y: out, ncols: k, latency, batch_size: nreq }));
+        pending.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 fn worker_loop(m: Arc<dyn HOperator>, policy: BatchPolicy, rx: Receiver<Request>, metrics: Arc<Metrics>, pending: Arc<AtomicUsize>) {
@@ -331,7 +585,7 @@ fn worker_loop(m: Arc<dyn HOperator>, policy: BatchPolicy, rx: Receiver<Request>
     while let Some(batch) = fill_batch(&rx, &policy) {
         let b = batch.len();
         let x = assemble_panel(n_in, &batch);
-        let mut y = DMatrix::zeros(n_out, b);
+        let mut y = DMatrix::zeros(n_out, x.ncols());
         let t = Timer::start();
         m.apply_multi(1.0, &x, &mut y);
         let mvm_secs = t.elapsed();
@@ -343,11 +597,70 @@ fn worker_loop(m: Arc<dyn HOperator>, policy: BatchPolicy, rx: Receiver<Request>
         if let Some((hits, misses)) = m.cache_counters() {
             metrics.record_cache(hits, misses);
         }
-        for (c, r) in batch.into_iter().enumerate() {
-            let latency = r.submitted.elapsed().as_secs_f64();
-            let _ = r.reply.send(Ok(Response { id: r.id, y: y.col(c).to_vec(), latency, batch_size: b }));
-            pending.fetch_sub(1, Ordering::AcqRel);
+        reply_ok(batch, &y, b, &pending);
+    }
+}
+
+/// The adaptive server's per-class executor routes. The narrow route serves
+/// single-column batches on a low-overhead static-LPT schedule; panels run
+/// the primary backend. Both share the matrix and hot cache, and every
+/// executor yields bitwise-identical products, so routing never changes
+/// served bits — only scheduling overhead.
+struct Routes {
+    primary: Arc<PlannedOperator>,
+    narrow: Arc<PlannedOperator>,
+}
+
+impl Routes {
+    fn pick(&self, width: usize) -> &Arc<PlannedOperator> {
+        if width == 1 {
+            &self.narrow
+        } else {
+            &self.primary
         }
+    }
+}
+
+fn adaptive_worker_loop(
+    routes: Routes,
+    policy: BatchPolicy,
+    cfg: OnlineConfig,
+    calib: Arc<OnlineCalibrator>,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    pending: Arc<AtomicUsize>,
+) {
+    let n_in = routes.primary.ncols();
+    let n_out = routes.primary.nrows();
+    let bytes = routes.primary.byte_size();
+    let wide_sink = TimingSink::new(routes.primary.timing_slots());
+    let narrow_sink = TimingSink::new(routes.narrow.timing_slots());
+    let mut carry = VecDeque::new();
+    let mut samples: Vec<Sample> = Vec::new();
+    while let Some(batch) =
+        fill_class_batch(&rx, &mut carry, &policy, &|wait| panel_cap(&routes.primary, &cfg, &policy, wait))
+    {
+        let b = batch.len();
+        let x = assemble_panel(n_in, &batch);
+        let w = x.ncols();
+        let op = routes.pick(w);
+        let sink = if w == 1 { &narrow_sink } else { &wide_sink };
+        sink.reset();
+        let mut y = DMatrix::zeros(n_out, w);
+        let t = Timer::start();
+        op.apply_multi_timed(1.0, &x, &mut y, sink);
+        let mvm_secs = t.elapsed();
+
+        samples.clear();
+        let (predicted, measured) = op.observe_multi(sink, w, &mut samples);
+        calib.observe(&samples, predicted, measured);
+
+        let latencies: Vec<f64> = batch.iter().map(|r| r.submitted.elapsed().as_secs_f64()).collect();
+        metrics.record_batch(b, mvm_secs, bytes, &latencies);
+        if let Some((hits, misses)) = routes.primary.cache_counters() {
+            metrics.record_cache(hits, misses);
+        }
+        reply_ok(batch, &y, b, &pending);
     }
 }
 
@@ -358,12 +671,21 @@ struct Ticket {
     timer: Timer,
 }
 
-/// Scatter side of the sharded tier: batch requests, broadcast the shared X
-/// panel to every shard's bounded queue, post the gather ticket. Posting the
-/// ticket first lets the gather thread overlap with shard compute.
+/// Dispatcher-side adaptive context: the parent operator supplies the live
+/// panel cost model for deadline packing, and every job runs timed.
+struct AdaptiveDispatch {
+    op: Arc<PlannedOperator>,
+    cfg: OnlineConfig,
+}
+
+/// Scatter side of the sharded tier: batch requests (continuous per-class
+/// batching when adaptive), broadcast the shared X panel to every shard's
+/// bounded queue, post the gather ticket. Posting the ticket first lets the
+/// gather thread overlap with shard compute.
 fn dispatch_loop(
     n_in: usize,
     policy: BatchPolicy,
+    adaptive: Option<AdaptiveDispatch>,
     rx: Receiver<Request>,
     jobs: Vec<SyncSender<ShardJob>>,
     tickets: Sender<Ticket>,
@@ -371,7 +693,13 @@ fn dispatch_loop(
     fault: Arc<AtomicUsize>,
 ) {
     let mut seq = 0u64;
-    while let Some(batch) = fill_batch(&rx, &policy) {
+    let mut carry = VecDeque::new();
+    loop {
+        let batch = match &adaptive {
+            Some(a) => fill_class_batch(&rx, &mut carry, &policy, &|wait| panel_cap(&a.op, &a.cfg, &policy, wait)),
+            None => fill_batch(&rx, &policy),
+        };
+        let Some(batch) = batch else { return };
         let x = Arc::new(assemble_panel(n_in, &batch));
         if tickets.send(Ticket { seq, batch, timer: Timer::start() }).is_err() {
             return;
@@ -379,7 +707,7 @@ fn dispatch_loop(
         let failing = fault.swap(NO_FAULT, Ordering::AcqRel);
         for (i, js) in jobs.iter().enumerate() {
             counters[i].enqueue();
-            let job = ShardJob { seq, x: x.clone(), fail: i == failing };
+            let job = ShardJob { seq, x: x.clone(), timed: adaptive.is_some(), fail: i == failing };
             match js.try_send(job) {
                 Ok(()) => {}
                 Err(TrySendError::Full(job)) => {
@@ -409,11 +737,17 @@ fn gather_loop(
     results: Vec<Receiver<ShardResult>>,
     metrics: Arc<Metrics>,
     pending: Arc<AtomicUsize>,
+    calib: Option<Arc<OnlineCalibrator>>,
 ) {
     while let Ok(t) = tickets.recv() {
         let b = t.batch.len();
-        let mut y = DMatrix::zeros(n_out, b);
+        let w: usize = t.batch.iter().map(|r| r.payload.width()).sum();
+        let mut y = DMatrix::zeros(n_out, w);
         let mut failure: Option<(usize, String)> = None;
+        // per-shard timing harvests fold into ONE calibrator observation per
+        // batch: samples concatenate, and the batch makespan is the max
+        // across shards (they run the level barriers in parallel)
+        let mut obs: Option<ShardObservation> = None;
         for (i, rx) in results.iter().enumerate() {
             let res = match rx.recv() {
                 Ok(r) => r,
@@ -425,10 +759,20 @@ fn gather_loop(
                 }
             };
             debug_assert_eq!(res.seq, t.seq, "per-shard FIFOs must stay in batch order");
+            if let Some(part) = res.obs {
+                match &mut obs {
+                    None => obs = Some(part),
+                    Some(agg) => {
+                        agg.samples.extend(part.samples);
+                        agg.predicted = agg.predicted.max(part.predicted);
+                        agg.measured = agg.measured.max(part.measured);
+                    }
+                }
+            }
             match res.out {
                 Ok(part) => {
                     if failure.is_none() {
-                        for c in 0..b {
+                        for c in 0..w {
                             y.col_mut(c)[res.rows.clone()].copy_from_slice(part.col(c));
                         }
                     }
@@ -443,6 +787,9 @@ fn gather_loop(
         let mvm_secs = t.timer.elapsed();
         match failure {
             None => {
+                if let (Some(c), Some(o)) = (&calib, obs) {
+                    c.observe(&o.samples, o.predicted, o.measured);
+                }
                 let latencies: Vec<f64> = t.batch.iter().map(|r| r.submitted.elapsed().as_secs_f64()).collect();
                 metrics.record_batch(b, mvm_secs, bytes, &latencies);
                 let (mut hits, mut misses, mut any) = (0u64, 0u64, false);
@@ -455,11 +802,7 @@ fn gather_loop(
                 if any {
                     metrics.record_cache(hits, misses);
                 }
-                for (c, r) in t.batch.into_iter().enumerate() {
-                    let latency = r.submitted.elapsed().as_secs_f64();
-                    let _ = r.reply.send(Ok(Response { id: r.id, y: y.col(c).to_vec(), latency, batch_size: b }));
-                    pending.fetch_sub(1, Ordering::AcqRel);
-                }
+                reply_ok(t.batch, &y, b, &pending);
             }
             Some((shard, message)) => {
                 for r in t.batch.into_iter() {
@@ -571,6 +914,78 @@ mod tests {
         let snap = server.metrics.snapshot();
         assert_eq!(snap.requests, 12);
         assert!(snap.batches < 12);
+    }
+
+    #[test]
+    fn panel_requests_match_single_calls_bitwise() {
+        let h = small_h();
+        let op = Arc::new(crate::plan::PlannedOperator::from_h(h.clone()));
+        let server = MvmServer::start(op, BatchPolicy::default());
+        let mut rng = Rng::new(166);
+        let xs: Vec<Vec<f64>> = (0..3).map(|_| rng.vector(h.ncols())).collect();
+        let singles: Vec<Vec<f64>> = xs.iter().map(|x| server.call(x.clone()).y).collect();
+        let mut panel = DMatrix::zeros(h.ncols(), 3);
+        for (c, x) in xs.iter().enumerate() {
+            panel.col_mut(c).copy_from_slice(x);
+        }
+        let resp = server.call_panel(panel);
+        assert_eq!(resp.ncols, 3);
+        assert_eq!(resp.y.len(), h.nrows() * 3);
+        for (c, w) in singles.iter().enumerate() {
+            let got = &resp.y[c * h.nrows()..(c + 1) * h.nrows()];
+            for (a, b) in got.iter().zip(w) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_server_matches_static_bitwise_across_refits() {
+        let h = small_h();
+        let op = Arc::new(crate::plan::PlannedOperator::from_h(h.clone()));
+        let mut rng = Rng::new(167);
+        let xs: Vec<Vec<f64>> = (0..6).map(|_| rng.vector(h.ncols())).collect();
+        let static_srv = MvmServer::start(op.clone(), BatchPolicy::default());
+        let want: Vec<Vec<f64>> = xs.iter().map(|x| static_srv.call(x.clone()).y).collect();
+        drop(static_srv);
+        let cfg = OnlineConfig { min_samples: 1, ..Default::default() };
+        let adaptive = MvmServer::start_adaptive(op, BatchPolicy::default(), cfg);
+        for (i, (x, w)) in xs.iter().zip(&want).enumerate() {
+            let got = adaptive.call(x.clone()).y;
+            for (a, b) in got.iter().zip(w) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            if i % 2 == 1 {
+                // forced mid-stream re-fit + packing swap between requests
+                adaptive.calibrator().expect("adaptive server").force_refit();
+            }
+        }
+        let st = adaptive.online_status().expect("adaptive server");
+        assert!(st.observations >= 6, "every batch observes: {st:?}");
+        assert!(st.refits >= 1, "forced refits must count: {st:?}");
+    }
+
+    #[test]
+    fn sharded_adaptive_matches_unsharded_bitwise() {
+        let h = small_h();
+        let op = Arc::new(crate::plan::PlannedOperator::from_h_with(h.clone(), crate::plan::ExecutorKind::StaticLpt));
+        let mut rng = Rng::new(168);
+        let xs: Vec<Vec<f64>> = (0..4).map(|_| rng.vector(h.ncols())).collect();
+        let flat = MvmServer::start(op.clone(), BatchPolicy::default());
+        let want: Vec<Vec<f64>> = xs.iter().map(|x| flat.call(x.clone()).y).collect();
+        drop(flat);
+        let cfg = OnlineConfig { min_samples: 1, ..Default::default() };
+        let sharded =
+            MvmServer::start_sharded_adaptive(op, 2, crate::plan::ExecutorKind::StaticLpt, BatchPolicy::default(), cfg)
+                .expect("adaptive sharded server starts");
+        for (x, w) in xs.iter().zip(&want) {
+            let got = sharded.call(x.clone()).y;
+            for (a, b) in got.iter().zip(w) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        let st = sharded.online_status().expect("adaptive server");
+        assert!(st.observations >= 4, "per-batch shard observations fold in: {st:?}");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 
 use super::metrics::ShardCounters;
 use crate::la::DMatrix;
+use crate::plan::costmodel::{Sample, TimingSink};
 use crate::plan::ShardPlan;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, Sender};
@@ -27,8 +28,23 @@ pub(crate) struct ShardJob {
     pub seq: u64,
     /// Shared X panel, `ncols × batch` in internal ordering.
     pub x: Arc<DMatrix>,
+    /// Record per-chunk timings and harvest an online-calibration
+    /// observation for this job (adaptive serving only).
+    pub timed: bool,
     /// Test-only fault injection: panic instead of computing this job.
     pub fail: bool,
+}
+
+/// Per-chunk timing harvest of one timed shard job, folded into the online
+/// calibrator by the gather thread.
+pub(crate) struct ShardObservation {
+    /// Per-task `(features, nrhs, seconds)` samples of this shard's slice.
+    pub samples: Vec<Sample>,
+    /// Modeled shard makespan under the profile active during the run
+    /// (0.0 sentinel when no online profile was active yet).
+    pub predicted: f64,
+    /// Measured shard makespan from the recorded per-chunk timings.
+    pub measured: f64,
 }
 
 /// One gather message: the shard's owned rows of the batch product (or the
@@ -37,26 +53,46 @@ pub(crate) struct ShardResult {
     pub seq: u64,
     pub rows: std::ops::Range<usize>,
     pub out: Result<DMatrix, String>,
+    /// Timing harvest when the job was [`ShardJob::timed`].
+    pub obs: Option<ShardObservation>,
 }
 
 /// Worker loop: runs until the job channel closes (server drop) or the
 /// gather side goes away.
 pub(crate) fn shard_worker(shard: Arc<ShardPlan>, jobs: Receiver<ShardJob>, results: Sender<ShardResult>, counters: Arc<ShardCounters>) {
     let rows = shard.owned(false);
+    // One reusable sink sized to the shard's slice; reset per timed job.
+    let sink = TimingSink::new(shard.timing_slots());
     while let Ok(job) = jobs.recv() {
         counters.start();
+        let timed = job.timed;
+        if timed {
+            sink.reset();
+        }
         let res = catch_unwind(AssertUnwindSafe(|| {
             assert!(!job.fail, "injected shard fault");
             let mut out = DMatrix::zeros(rows.len(), job.x.ncols());
-            shard.apply_multi_owned(false, 1.0, &job.x, None, &mut out);
+            if timed {
+                shard.apply_multi_owned_timed(1.0, &job.x, None, &mut out, &sink);
+            } else {
+                shard.apply_multi_owned(false, 1.0, &job.x, None, &mut out);
+            }
             out
         }));
         counters.finish();
         if let Some((hits, misses)) = shard.cache_counters() {
             counters.record_cache(hits, misses);
         }
+        let obs = match (&res, timed) {
+            (Ok(out), true) => {
+                let mut samples = Vec::new();
+                let (predicted, measured) = shard.observe_multi(&sink, out.ncols(), &mut samples);
+                Some(ShardObservation { samples, predicted, measured })
+            }
+            _ => None,
+        };
         let out = res.map_err(|p| panic_message(p.as_ref()));
-        if results.send(ShardResult { seq: job.seq, rows: rows.clone(), out }).is_err() {
+        if results.send(ShardResult { seq: job.seq, rows: rows.clone(), out, obs }).is_err() {
             return;
         }
     }

@@ -8,6 +8,7 @@
 //! hmatc serve     --level 4 --eps 1e-6 --requests 256 --batch 8 [--fmt h|uh|h2] [--plan]
 //!                 [--executor lpt|steal|sharded:K] [--compress] [--costs costs.json]
 //!                 [--mmap operator.hmpk] [--shards N --queue-limit Q --shard-queue B]
+//!                 [--online 1|key=value,…]
 //! hmatc calibrate [--level 3 --eps 1e-6 --fmt h|uh|h2 --rounds 8] [--quick] [--out costs.json]
 //! hmatc solve     --level 3 --eps 1e-6 [--compress]
 //! hmatc roofline
@@ -33,11 +34,19 @@
 //! shard's job queue (dispatcher backpressure). Served results are bitwise
 //! identical to the unsharded plan. `pack --shards N` additionally writes N
 //! byte-identical `<out>.shardI` replica files, one mapping per shard worker.
+//!
+//! `serve --online` (or `HMATC_ONLINE=1` / `key=value,…`) turns on the
+//! adaptive serving loop (implies `--plan`): continuous per-class batching
+//! with deadline-packed panel widths, live per-chunk timing, and a
+//! sliding-window online calibrator that re-fits the cost model and swaps
+//! re-balanced packings when predicted and measured makespans drift apart
+//! (`cost_source` becomes `online`). Served bits are identical to the static
+//! loop; composes with `--shards N`.
 
 use hmatc::bench::{bench_fn, measure_peak_bandwidth};
 use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
 use hmatc::compress::{Codec, CompressionConfig};
-use hmatc::coordinator::{BatchPolicy, MvmServer};
+use hmatc::coordinator::{BatchPolicy, MvmServer, OnlineConfig};
 use hmatc::geometry::icosphere;
 use hmatc::hmatrix::HMatrix;
 use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
@@ -83,6 +92,11 @@ fn info() {
         println!("costs: {costs} (HMATC_COSTS)");
     }
     println!("codec kernels: {} (HMATC_CODEC_KERNELS=fused|blockwise)", hmatc::compress::dispatch::kernel_mode_name());
+    // validated the same way serve will: a bad HMATC_ONLINE warns and is off
+    match hmatc::coordinator::OnlineConfig::from_env() {
+        Some(c) => println!("online adaptation: on ({}) (HMATC_ONLINE)", c.describe()),
+        None => println!("online adaptation: off (set HMATC_ONLINE=1 or window=…,min=…,drift=…,hysteresis=…,deadline_us=…,panel=…)"),
+    }
     // store tier: residency is per-operator (printed by `serve`); here we
     // report how the environment will configure it
     match hmatc::store::HotCache::from_env() {
@@ -321,7 +335,20 @@ fn serve_cmd(args: &Args) {
     // tier over a row partition of the operator; shard plans slice the
     // planned schedules, so it implies --plan
     let shards = args.num_or("shards", hmatc::plan::env_shard_count());
-    let plan = args.flag("plan") || shards > 1;
+    // --online beats HMATC_ONLINE; adaptation times planned schedules, so it
+    // implies --plan too
+    let online: Option<OnlineConfig> = match args.get("online") {
+        Some(v) => match OnlineConfig::parse(v) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("--online {v}: {e}");
+                std::process::exit(2);
+            }
+        },
+        None if args.flag("online") => Some(OnlineConfig::default()),
+        None => OnlineConfig::from_env(),
+    };
+    let plan = args.flag("plan") || shards > 1 || online.is_some();
     let kind = args.parse_or("executor", ExecutorKind::from_env());
     // --costs beats HMATC_COSTS; bad files warn and keep the static costs
     let profile = load_costs(args);
@@ -426,18 +453,34 @@ fn serve_cmd(args: &Args) {
         queue_limit: args.num_or("queue-limit", 0usize),
         shard_queue: args.num_or("shard-queue", 2usize),
     };
+    // kept aside to report the post-serve cost source of the adaptive loop
+    let mut status_op: Option<Arc<PlannedOperator>> = None;
     let server = if shards > 1 {
         let po = planned_slot.take().expect("--shards implies --plan");
-        match MvmServer::start_sharded(po, shards, kind, policy) {
+        if online.is_some() {
+            status_op = Some(po.clone());
+        }
+        let started = match &online {
+            Some(cfg) => MvmServer::start_sharded_adaptive(po, shards, kind, policy, cfg.clone()),
+            None => MvmServer::start_sharded(po, shards, kind, policy),
+        };
+        match started {
             Ok(s) => Arc::new(s),
             Err(e) => {
                 eprintln!("--shards {shards}: {e}");
                 std::process::exit(2);
             }
         }
+    } else if let Some(cfg) = &online {
+        let po = planned_slot.take().expect("--online implies --plan");
+        status_op = Some(po.clone());
+        Arc::new(MvmServer::start_adaptive(po, policy, cfg.clone()))
     } else {
         Arc::new(MvmServer::start(op, policy))
     };
+    if let Some(cfg) = &online {
+        println!("online adaptation: on ({})", cfg.describe());
+    }
     let t = Timer::start();
     // closed-loop clients from a few threads
     let nclients = 4usize;
@@ -475,6 +518,20 @@ fn serve_cmd(args: &Args) {
     }
     if let Some(line) = server.metrics.shard_summary() {
         println!("{line}");
+    }
+    if let Some(line) = m.prefetch_summary() {
+        println!("{line}");
+    }
+    if let Some(st) = server.online_status() {
+        println!(
+            "online: {} observations | {} refits | {} swaps | window {} | last drift {:.2}",
+            st.observations, st.refits, st.swaps, st.window_len, st.last_drift
+        );
+        if let Some(po) = &status_op {
+            // `online` once the bootstrap fit swapped the first live profile
+            // in; `static` means the window never filled to min_samples
+            println!("cost_source: {}", po.plan_stats().cost_source);
+        }
     }
 }
 

@@ -662,6 +662,17 @@ fn level_makespan(level: &[Shard], costs: &[f64]) -> f64 {
     level.iter().map(|s| s.tasks.iter().map(|&t| costs[t]).sum::<f64>()).fold(0.0, f64::max)
 }
 
+/// Relative drift of a measured makespan from the model's prediction:
+/// `|measured − predicted| / predicted`. Returns 0.0 when `predicted` is not
+/// finite-positive (no usable prediction yet — never a division by zero) or
+/// `measured` is not finite (torn/empty timing read).
+pub fn drift(predicted: f64, measured: f64) -> f64 {
+    if !(predicted.is_finite() && predicted > 0.0) || !measured.is_finite() {
+        return 0.0;
+    }
+    (measured - predicted).abs() / predicted
+}
+
 /// Re-run the LPT packing of every level with (calibrated) `costs`, keeping
 /// per level whichever packing — incumbent or candidate — has the smaller
 /// modeled makespan. LPT is a 4/3-approximation, not an optimum, so the
@@ -815,6 +826,16 @@ mod tests {
         assert!((sink.total() - 13.0 * 1e-9).abs() < 1e-15);
         sink.reset();
         assert_eq!(sink.total(), 0.0);
+    }
+
+    #[test]
+    fn drift_guards_degenerate_inputs() {
+        assert_eq!(drift(0.0, 1.0), 0.0); // no prediction yet
+        assert_eq!(drift(-1.0, 1.0), 0.0);
+        assert_eq!(drift(f64::NAN, 1.0), 0.0);
+        assert_eq!(drift(1.0, f64::INFINITY), 0.0);
+        assert!((drift(2.0, 3.0) - 0.5).abs() < 1e-15);
+        assert!((drift(2.0, 1.0) - 0.5).abs() < 1e-15);
     }
 
     #[test]

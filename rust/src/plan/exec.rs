@@ -400,6 +400,41 @@ impl HSchedule {
         }
     }
 
+    /// (predicted, measured) makespan in seconds of the width-`nrhs` packing
+    /// a just-timed batch ran on. The packing is re-fetched from the
+    /// per-width cache, so a rebalance racing between execution and
+    /// observation can skew one observation — never outputs; the online
+    /// calibrator's hysteresis absorbs it. `predicted` is 0.0 until a
+    /// profile is active (static costs are byte units, not seconds).
+    fn observe_multi(&self, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let levels = self.multi.get(gen, nrhs, || {
+            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
+            balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards)
+        });
+        let predicted = match prof.as_deref() {
+            Some(p) => {
+                let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs);
+                costmodel::makespan(&levels, &costs)
+            }
+            None => 0.0,
+        };
+        (predicted, costmodel::sink_makespan(&levels, 0, sink))
+    }
+
+    /// Summed (fixed, per-RHS) seconds of a batch under the active profile,
+    /// prorated by executor width: modeled batch cost ≈ fixed + b·per_rhs.
+    /// `None` until a profile is active.
+    fn panel_terms(&self) -> Option<(f64, f64)> {
+        let prof = self.profile.read().unwrap().clone()?;
+        let c1: f64 = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(prof.as_ref()), 1).iter().sum();
+        let c2: f64 = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(prof.as_ref()), 2).iter().sum();
+        let per = (c2 - c1).max(0.0);
+        let w = self.nshards.max(1) as f64;
+        Some((((c1 - per).max(0.0)) / w, per / w))
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn exec(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let levels = self.levels.load();
@@ -530,7 +565,7 @@ impl HSchedule {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn exec_multi_slice(&self, sl: &HSlice, m: &HMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+    fn exec_multi_slice(&self, sl: &HSlice, m: &HMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let nrhs = y.ncols();
         // keyed by the PARENT's cost generation: a rebalance invalidates the
         // slice's cached per-width packings exactly like the parent's own
@@ -540,7 +575,35 @@ impl HSchedule {
             let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
             balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards)
         });
-        self.exec_multi_on(&levels, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
+        self.exec_multi_on(&levels, m, sl.adjoint, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Slice-restricted sample harvest: sink slots are parent task ids, so
+    /// only the slice's retained tasks carry times.
+    fn push_samples_slice(&self, sl: &HSlice, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) {
+        for ids in &sl.level_ids {
+            for &ti in ids {
+                out.push(Sample { feats: self.feats[ti].clone(), nrhs, secs: sink.secs(ti) });
+            }
+        }
+    }
+
+    /// [`Self::observe_multi`] on a slice's own width-`nrhs` packing.
+    fn observe_multi_slice(&self, sl: &HSlice, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let levels = sl.multi.get(gen, nrhs, || {
+            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
+            balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards)
+        });
+        let predicted = match prof.as_deref() {
+            Some(p) => {
+                let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs);
+                costmodel::makespan(&levels, &costs)
+            }
+            None => 0.0,
+        };
+        (predicted, costmodel::sink_makespan(&levels, 0, sink))
     }
 }
 
@@ -702,11 +765,21 @@ impl HPlan {
         s.exec_slice(sl, m, alpha, x, y, arena, exec, hot);
     }
 
-    /// Batched variant of [`Self::execute_slice`] (full-height `y` panel).
+    /// Batched variant of [`Self::execute_slice`] (full-height `y` panel);
+    /// `rec` records per-chunk wall times into parent-task-id slots.
     #[allow(clippy::too_many_arguments)]
-    pub(crate) fn execute_multi_slice(&self, m: &HMatrix, sl: &HSlice, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+    pub(crate) fn execute_multi_slice(&self, m: &HMatrix, sl: &HSlice, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
-        s.exec_multi_slice(sl, m, alpha, x, y, arena, exec, hot);
+        s.exec_multi_slice(sl, m, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Fold a timed slice batch into `out` as fit samples and return the
+    /// slice packing's (predicted, measured) makespan (seconds; predicted
+    /// 0.0 until a profile is active).
+    pub(crate) fn observe_multi_slice(&self, m: &HMatrix, sl: &HSlice, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
+        let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
+        s.push_samples_slice(sl, sink, nrhs, out);
+        s.observe_multi_slice(sl, sink, nrhs)
     }
 
     /// Re-run LPT partitioning of every built schedule half with costs from
@@ -766,6 +839,40 @@ impl HPlan {
         self.rebalance(&profile);
         self.calib.lock().unwrap().measured = measured;
         profile
+    }
+
+    /// Per-task timing slots of the forward half — size the [`TimingSink`]
+    /// passed to [`Self::execute_multi_timed`] with this.
+    pub fn timing_slots(&self, m: &HMatrix) -> usize {
+        self.fwd(m).tasks.len()
+    }
+
+    /// [`Self::execute_multi`] with per-chunk wall times recorded into
+    /// `sink`. Unlike [`Self::calibrate`] this times WITH the live hot
+    /// cache: the online window models what is actually resident and hot
+    /// under real traffic, not cold decode cost.
+    pub fn execute_multi_timed(&self, m: &HMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, sink: &TimingSink) {
+        assert_eq!(x.nrows(), self.ncols);
+        assert_eq!(y.nrows(), self.nrows);
+        assert_eq!(x.ncols(), y.ncols());
+        let hot = self.hot_cache();
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, Some(sink), hot.as_ref());
+    }
+
+    /// Fold a timed forward batch into `out` as fit samples and return the
+    /// (predicted, measured) makespan (seconds) of the width-`nrhs` packing
+    /// it ran on; predicted is 0.0 until a profile is active.
+    pub fn observe_multi(&self, m: &HMatrix, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
+        let sched = self.fwd(m);
+        sched.push_samples(sink, nrhs, 1, out);
+        sched.observe_multi(sink, nrhs)
+    }
+
+    /// Forward-half (fixed, per-RHS) seconds per batch under the active
+    /// profile — the continuous batcher's deadline model. `None` until a
+    /// profile is active.
+    pub fn panel_cost_model(&self, m: &HMatrix) -> Option<(f64, f64)> {
+        self.fwd(m).panel_terms()
     }
 
     /// Aggregate over the schedule halves built so far.
@@ -1087,6 +1194,45 @@ impl UniSchedule {
         }
     }
 
+    /// See [`HSchedule::observe_multi`]; forward-transform shards at sink
+    /// base 0, output levels at base `ftasks.len()`.
+    fn observe_multi(&self, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let packed = self.multi.get(gen, nrhs, || {
+            let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs);
+            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
+            let fsh = balance(&fcosts, &fscratch, self.nshards);
+            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
+            let lv = balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards);
+            (fsh, lv)
+        });
+        let predicted = match prof.as_deref() {
+            Some(p) => {
+                let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(p), nrhs);
+                let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs);
+                costmodel::makespan(std::slice::from_ref(&packed.0), &fcosts) + costmodel::makespan(&packed.1, &costs)
+            }
+            None => 0.0,
+        };
+        let measured = costmodel::sink_makespan(std::slice::from_ref(&packed.0), 0, sink)
+            + costmodel::sink_makespan(&packed.1, self.ftasks.len(), sink);
+        (predicted, measured)
+    }
+
+    /// See [`HSchedule::panel_terms`] (both schedule phases summed).
+    fn panel_terms(&self) -> Option<(f64, f64)> {
+        let prof = self.profile.read().unwrap().clone()?;
+        let at = |nrhs: usize| -> f64 {
+            model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(prof.as_ref()), nrhs).iter().sum::<f64>()
+                + model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(prof.as_ref()), nrhs).iter().sum::<f64>()
+        };
+        let (c1, c2) = (at(1), at(2));
+        let per = (c2 - c1).max(0.0);
+        let w = self.nshards.max(1) as f64;
+        Some((((c1 - per).max(0.0)) / w, per / w))
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn exec(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let fshards = self.fshards.load();
@@ -1306,7 +1452,7 @@ impl UniSchedule {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn exec_multi_slice(&self, sl: &UniSlice, m: &UniformHMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+    fn exec_multi_slice(&self, sl: &UniSlice, m: &UniformHMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let nrhs = y.ncols();
         let gen = self.profile_gen.load(Ordering::Acquire);
         let prof = self.profile.read().unwrap().clone();
@@ -1318,7 +1464,46 @@ impl UniSchedule {
             let lv = balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards);
             (fsh, lv)
         });
-        self.exec_multi_on(&packed.0, &packed.1, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
+        self.exec_multi_on(&packed.0, &packed.1, m, sl.adjoint, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Slice-restricted sample harvest (sink slots are parent task ids:
+    /// forward at 0.., output at base `ftasks.len()`).
+    fn push_samples_slice(&self, sl: &UniSlice, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) {
+        for &ti in &sl.fids {
+            out.push(Sample { feats: self.ffeats[ti].clone(), nrhs, secs: sink.secs(ti) });
+        }
+        let base = self.ftasks.len();
+        for ids in &sl.level_ids {
+            for &ti in ids {
+                out.push(Sample { feats: self.feats[ti].clone(), nrhs, secs: sink.secs(base + ti) });
+            }
+        }
+    }
+
+    /// See [`HSchedule::observe_multi_slice`].
+    fn observe_multi_slice(&self, sl: &UniSlice, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let packed = sl.multi.get(gen, nrhs, || {
+            let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs);
+            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
+            let fsh = balance_level(&sl.fids, &fcosts, &fscratch, sl.nshards);
+            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
+            let lv = balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards);
+            (fsh, lv)
+        });
+        let predicted = match prof.as_deref() {
+            Some(p) => {
+                let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(p), nrhs);
+                let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs);
+                costmodel::makespan(std::slice::from_ref(&packed.0), &fcosts) + costmodel::makespan(&packed.1, &costs)
+            }
+            None => 0.0,
+        };
+        let measured = costmodel::sink_makespan(std::slice::from_ref(&packed.0), 0, sink)
+            + costmodel::sink_makespan(&packed.1, self.ftasks.len(), sink);
+        (predicted, measured)
     }
 }
 
@@ -1470,9 +1655,16 @@ impl UniPlan {
 
     /// Batched variant of [`Self::execute_slice`].
     #[allow(clippy::too_many_arguments)]
-    pub(crate) fn execute_multi_slice(&self, m: &UniformHMatrix, sl: &UniSlice, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+    pub(crate) fn execute_multi_slice(&self, m: &UniformHMatrix, sl: &UniSlice, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
-        s.exec_multi_slice(sl, m, alpha, x, y, arena, exec, hot);
+        s.exec_multi_slice(sl, m, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// See [`HPlan::observe_multi_slice`].
+    pub(crate) fn observe_multi_slice(&self, m: &UniformHMatrix, sl: &UniSlice, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
+        let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
+        s.push_samples_slice(sl, sink, nrhs, out);
+        s.observe_multi_slice(sl, sink, nrhs)
     }
 
     /// Re-partition built schedule halves with `profile` costs (atomic swap,
@@ -1527,6 +1719,33 @@ impl UniPlan {
         self.rebalance(&profile);
         self.calib.lock().unwrap().measured = measured;
         profile
+    }
+
+    /// See [`HPlan::timing_slots`] (forward-transform + output tasks).
+    pub fn timing_slots(&self, m: &UniformHMatrix) -> usize {
+        let s = self.fwd(m);
+        s.ftasks.len() + s.tasks.len()
+    }
+
+    /// See [`HPlan::execute_multi_timed`].
+    pub fn execute_multi_timed(&self, m: &UniformHMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, sink: &TimingSink) {
+        assert_eq!(x.nrows(), self.ncols);
+        assert_eq!(y.nrows(), self.nrows);
+        assert_eq!(x.ncols(), y.ncols());
+        let hot = self.hot_cache();
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, Some(sink), hot.as_ref());
+    }
+
+    /// See [`HPlan::observe_multi`].
+    pub fn observe_multi(&self, m: &UniformHMatrix, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
+        let sched = self.fwd(m);
+        sched.push_samples(sink, nrhs, 1, out);
+        sched.observe_multi(sink, nrhs)
+    }
+
+    /// See [`HPlan::panel_cost_model`].
+    pub fn panel_cost_model(&self, m: &UniformHMatrix) -> Option<(f64, f64)> {
+        self.fwd(m).panel_terms()
     }
 
     /// Aggregate over the schedule halves built so far.
@@ -1898,6 +2117,45 @@ impl H2Schedule {
         }
     }
 
+    /// See [`HSchedule::observe_multi`]; upward pass at sink base 0,
+    /// downward pass at base `up_tasks.len()`.
+    fn observe_multi(&self, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let packed = self.multi.get(gen, nrhs, || {
+            let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs);
+            let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs);
+            (
+                balance_levels_for(&self.up_level_ids, &up_costs, &self.up_pscratch, nrhs, self.nshards),
+                balance_levels_for(&self.down_level_ids, &down_costs, &self.down_pscratch, nrhs, self.nshards),
+            )
+        });
+        let predicted = match prof.as_deref() {
+            Some(p) => {
+                let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(p), nrhs);
+                let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(p), nrhs);
+                costmodel::makespan(&packed.0, &up_costs) + costmodel::makespan(&packed.1, &down_costs)
+            }
+            None => 0.0,
+        };
+        let measured = costmodel::sink_makespan(&packed.0, 0, sink)
+            + costmodel::sink_makespan(&packed.1, self.up_tasks.len(), sink);
+        (predicted, measured)
+    }
+
+    /// See [`HSchedule::panel_terms`] (both passes summed).
+    fn panel_terms(&self) -> Option<(f64, f64)> {
+        let prof = self.profile.read().unwrap().clone()?;
+        let at = |nrhs: usize| -> f64 {
+            model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(prof.as_ref()), nrhs).iter().sum::<f64>()
+                + model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(prof.as_ref()), nrhs).iter().sum::<f64>()
+        };
+        let (c1, c2) = (at(1), at(2));
+        let per = (c2 - c1).max(0.0);
+        let w = self.nshards.max(1) as f64;
+        Some((((c1 - per).max(0.0)) / w, per / w))
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn exec(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &[f64], y: &mut [f64], arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let up_levels = self.up_levels.load();
@@ -2205,7 +2463,7 @@ impl H2Schedule {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn exec_multi_slice(&self, sl: &H2Slice, m: &H2Matrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+    fn exec_multi_slice(&self, sl: &H2Slice, m: &H2Matrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let nrhs = y.ncols();
         let gen = self.profile_gen.load(Ordering::Acquire);
         let prof = self.profile.read().unwrap().clone();
@@ -2217,7 +2475,48 @@ impl H2Schedule {
                 balance_levels_for(&sl.down_level_ids, &down_costs, &self.down_pscratch, nrhs, sl.nshards),
             )
         });
-        self.exec_multi_on(&packed.0, &packed.1, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
+        self.exec_multi_on(&packed.0, &packed.1, m, sl.adjoint, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// Slice-restricted sample harvest (sink slots are parent task ids: up
+    /// at 0.., down at base `up_tasks.len()`).
+    fn push_samples_slice(&self, sl: &H2Slice, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) {
+        for ids in &sl.up_level_ids {
+            for &ti in ids {
+                out.push(Sample { feats: self.up_feats[ti].clone(), nrhs, secs: sink.secs(ti) });
+            }
+        }
+        let base = self.up_tasks.len();
+        for ids in &sl.down_level_ids {
+            for &ti in ids {
+                out.push(Sample { feats: self.down_feats[ti].clone(), nrhs, secs: sink.secs(base + ti) });
+            }
+        }
+    }
+
+    /// See [`HSchedule::observe_multi_slice`].
+    fn observe_multi_slice(&self, sl: &H2Slice, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        let packed = sl.multi.get(gen, nrhs, || {
+            let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs);
+            let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs);
+            (
+                balance_levels_for(&sl.up_level_ids, &up_costs, &self.up_pscratch, nrhs, sl.nshards),
+                balance_levels_for(&sl.down_level_ids, &down_costs, &self.down_pscratch, nrhs, sl.nshards),
+            )
+        });
+        let predicted = match prof.as_deref() {
+            Some(p) => {
+                let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(p), nrhs);
+                let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(p), nrhs);
+                costmodel::makespan(&packed.0, &up_costs) + costmodel::makespan(&packed.1, &down_costs)
+            }
+            None => 0.0,
+        };
+        let measured = costmodel::sink_makespan(&packed.0, 0, sink)
+            + costmodel::sink_makespan(&packed.1, self.up_tasks.len(), sink);
+        (predicted, measured)
     }
 }
 
@@ -2366,9 +2665,16 @@ impl H2Plan {
 
     /// Batched variant of [`Self::execute_slice`].
     #[allow(clippy::too_many_arguments)]
-    pub(crate) fn execute_multi_slice(&self, m: &H2Matrix, sl: &H2Slice, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, hot: Option<&Arc<HotCache>>) {
+    pub(crate) fn execute_multi_slice(&self, m: &H2Matrix, sl: &H2Slice, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
         let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
-        s.exec_multi_slice(sl, m, alpha, x, y, arena, exec, hot);
+        s.exec_multi_slice(sl, m, alpha, x, y, arena, exec, rec, hot);
+    }
+
+    /// See [`HPlan::observe_multi_slice`].
+    pub(crate) fn observe_multi_slice(&self, m: &H2Matrix, sl: &H2Slice, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
+        let s = if sl.adjoint { self.adj(m) } else { self.fwd(m) };
+        s.push_samples_slice(sl, sink, nrhs, out);
+        s.observe_multi_slice(sl, sink, nrhs)
     }
 
     /// Re-partition built schedule halves with `profile` costs (atomic swap,
@@ -2423,6 +2729,33 @@ impl H2Plan {
         self.rebalance(&profile);
         self.calib.lock().unwrap().measured = measured;
         profile
+    }
+
+    /// See [`HPlan::timing_slots`] (upward + downward pass tasks).
+    pub fn timing_slots(&self, m: &H2Matrix) -> usize {
+        let s = self.fwd(m);
+        s.up_tasks.len() + s.down_tasks.len()
+    }
+
+    /// See [`HPlan::execute_multi_timed`].
+    pub fn execute_multi_timed(&self, m: &H2Matrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, sink: &TimingSink) {
+        assert_eq!(x.nrows(), self.ncols);
+        assert_eq!(y.nrows(), self.nrows);
+        assert_eq!(x.ncols(), y.ncols());
+        let hot = self.hot_cache();
+        self.fwd(m).exec_multi(m, false, alpha, x, y, arena, &*self.exec, Some(sink), hot.as_ref());
+    }
+
+    /// See [`HPlan::observe_multi`].
+    pub fn observe_multi(&self, m: &H2Matrix, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
+        let sched = self.fwd(m);
+        sched.push_samples(sink, nrhs, 1, out);
+        sched.observe_multi(sink, nrhs)
+    }
+
+    /// See [`HPlan::panel_cost_model`].
+    pub fn panel_cost_model(&self, m: &H2Matrix) -> Option<(f64, f64)> {
+        self.fwd(m).panel_terms()
     }
 
     /// Aggregate over the schedule halves built so far.

@@ -19,7 +19,7 @@
 //! across backends — only the thread mapping changes.
 
 use super::arena::Arena;
-use super::costmodel::{self, CostProfile};
+use super::costmodel::{self, CostProfile, Sample, TimingSink};
 use super::exec::{H2Plan, HPlan, PlanStats, UniPlan};
 use super::executor::ExecutorKind;
 use super::partition::{env_shard_count, row_partition, ShardPlan};
@@ -298,6 +298,72 @@ impl PlannedOperator {
         }
     }
 
+    /// A second operator over the SAME matrix (shared `Arc`) with its own
+    /// plan packed for `kind` — the adaptive server's per-request-class
+    /// routing builds its narrow-batch backend this way. The decode-once hot
+    /// cache (shared `Arc`) and the external-ordering mode are inherited, so
+    /// both operators serve bitwise-identical products (executor backends
+    /// only change the thread mapping, never the summation order).
+    pub fn rebuilt_with(&self, kind: ExecutorKind) -> PlannedOperator {
+        let op = match &*self.inner {
+            Inner::H { m, .. } => PlannedOperator::from_h_with(m.clone(), kind),
+            Inner::Uniform { m, .. } => PlannedOperator::from_uniform_with(m.clone(), kind),
+            Inner::H2 { m, .. } => PlannedOperator::from_h2_with(m.clone(), kind),
+        };
+        op.set_hot_cache(self.hot_cache());
+        if self.external.is_some() {
+            op.with_external_ordering()
+        } else {
+            op
+        }
+    }
+
+    /// Per-task timing slots of the forward plan half — size the
+    /// [`TimingSink`] passed to [`Self::apply_multi_timed`] with this.
+    pub fn timing_slots(&self) -> usize {
+        match &*self.inner {
+            Inner::H { m, plan } => plan.timing_slots(m),
+            Inner::Uniform { m, plan } => plan.timing_slots(m),
+            Inner::H2 { m, plan } => plan.timing_slots(m),
+        }
+    }
+
+    /// Forward [`HOperator::apply_multi`] with per-chunk wall times recorded
+    /// into `sink`. Always runs the whole-plan schedules — never the
+    /// `HMATC_SHARDS` in-process partition (the sharded serving tier does
+    /// its own per-shard timing) — which is output-equivalent: sharded and
+    /// unsharded products are bitwise identical. Unlike [`Self::calibrate`]
+    /// this times WITH the live hot cache.
+    pub fn apply_multi_timed(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix, sink: &TimingSink) {
+        if self.external.is_some() {
+            return self.apply_multi_external_rec(false, alpha, x, y, Some(sink));
+        }
+        let mut arena = self.arena.lock().unwrap();
+        self.run_multi_rec(false, alpha, x, y, &mut arena, Some(sink));
+    }
+
+    /// Fold a timed forward batch into `out` as fit samples and return the
+    /// (predicted, measured) makespan in seconds of the width-`nrhs` packing
+    /// it ran on; predicted is 0.0 until a profile is active.
+    pub fn observe_multi(&self, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
+        match &*self.inner {
+            Inner::H { m, plan } => plan.observe_multi(m, sink, nrhs, out),
+            Inner::Uniform { m, plan } => plan.observe_multi(m, sink, nrhs, out),
+            Inner::H2 { m, plan } => plan.observe_multi(m, sink, nrhs, out),
+        }
+    }
+
+    /// Forward-half (fixed, per-RHS) modeled seconds per batch under the
+    /// active profile — the continuous batcher's deadline model. `None`
+    /// until a profile is active.
+    pub fn panel_cost_model(&self) -> Option<(f64, f64)> {
+        match &*self.inner {
+            Inner::H { m, plan } => plan.panel_cost_model(m),
+            Inner::Uniform { m, plan } => plan.panel_cost_model(m),
+            Inner::H2 { m, plan } => plan.panel_cost_model(m),
+        }
+    }
+
     /// Name of the execution backend this operator's plan runs on.
     pub fn executor_name(&self) -> String {
         match &*self.inner {
@@ -461,7 +527,18 @@ impl PlannedOperator {
         }
     }
 
-    fn run_multi(&self, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena) {
+    /// `rec = Some(sink)` forces the whole-plan timed forward path (see
+    /// [`Self::apply_multi_timed`]); `None` is the ordinary dispatch,
+    /// including `HMATC_SHARDS` routing.
+    fn run_multi_rec(&self, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, rec: Option<&TimingSink>) {
+        if let Some(sink) = rec {
+            debug_assert!(!adjoint, "timed products are forward-only");
+            return match &*self.inner {
+                Inner::H { m, plan } => plan.execute_multi_timed(m, alpha, x, y, arena, sink),
+                Inner::Uniform { m, plan } => plan.execute_multi_timed(m, alpha, x, y, arena, sink),
+                Inner::H2 { m, plan } => plan.execute_multi_timed(m, alpha, x, y, arena, sink),
+            };
+        }
         if let Some(shards) = self.env_shards() {
             return self.run_multi_sharded(shards, adjoint, alpha, x, y);
         }
@@ -501,7 +578,7 @@ impl PlannedOperator {
     }
 
     /// Batched product with the permutation fold over pooled panels.
-    fn apply_multi_external(&self, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
+    fn apply_multi_external_rec(&self, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, rec: Option<&TimingSink>) {
         let ext = self.external.as_ref().expect("external ordering not enabled");
         let (in_perm, out_perm) =
             if adjoint { (&ext.row.perm, &ext.col.perm) } else { (&ext.col.perm, &ext.row.perm) };
@@ -524,7 +601,7 @@ impl PlannedOperator {
         }
         let xm = DMatrix::from_vec(n_in, nrhs, xi);
         let mut ym = DMatrix::from_vec(n_out, nrhs, yi);
-        self.run_multi(adjoint, alpha, &xm, &mut ym, &mut arena);
+        self.run_multi_rec(adjoint, alpha, &xm, &mut ym, &mut arena, rec);
         let yi = ym.into_vec();
         for c in 0..nrhs {
             let yc = y.col_mut(c);
@@ -584,18 +661,18 @@ impl HOperator for PlannedOperator {
 
     fn apply_multi(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
         if self.external.is_some() {
-            return self.apply_multi_external(false, alpha, x, y);
+            return self.apply_multi_external_rec(false, alpha, x, y, None);
         }
         let mut arena = self.arena.lock().unwrap();
-        self.run_multi(false, alpha, x, y, &mut arena);
+        self.run_multi_rec(false, alpha, x, y, &mut arena, None);
     }
 
     fn apply_multi_adjoint(&self, alpha: f64, x: &DMatrix, y: &mut DMatrix) {
         if self.external.is_some() {
-            return self.apply_multi_external(true, alpha, x, y);
+            return self.apply_multi_external_rec(true, alpha, x, y, None);
         }
         let mut arena = self.arena.lock().unwrap();
-        self.run_multi(true, alpha, x, y, &mut arena);
+        self.run_multi_rec(true, alpha, x, y, &mut arena, None);
     }
 
     fn cache_counters(&self) -> Option<(u64, u64)> {

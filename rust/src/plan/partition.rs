@@ -35,6 +35,7 @@
 //! coordinator ([`crate::coordinator::MvmServer::start_sharded`]) drives the
 //! same [`ShardPlan`]s from per-shard worker threads.
 
+use super::costmodel::{Sample, TimingSink};
 use super::exec::{H2Slice, HSlice, UniSlice};
 use super::executor::{Executor, ExecutorKind};
 use super::operator::{HOperator, Inner, PlannedOperator};
@@ -308,6 +309,40 @@ impl ShardPlan {
     /// Batched [`ShardPlan::apply_owned`]: `out` is `owned.len() × nrhs`,
     /// seeded from the full-height `seed` panel (zeros when `None`).
     pub fn apply_multi_owned(&self, adjoint: bool, alpha: f64, x: &DMatrix, seed: Option<&DMatrix>, out: &mut DMatrix) {
+        self.apply_multi_owned_rec(adjoint, alpha, x, seed, out, None);
+    }
+
+    /// Forward [`ShardPlan::apply_multi_owned`] with per-chunk wall times
+    /// recorded into `sink` (slots are parent-plan task ids; size it with
+    /// [`ShardPlan::timing_slots`]). Times run WITH the active hot cache —
+    /// the online window models what is resident under live traffic.
+    pub fn apply_multi_owned_timed(&self, alpha: f64, x: &DMatrix, seed: Option<&DMatrix>, out: &mut DMatrix, sink: &TimingSink) {
+        self.apply_multi_owned_rec(false, alpha, x, seed, out, Some(sink));
+    }
+
+    /// Per-task timing slots of the parent forward schedule (shared across
+    /// all shards of one operator — slices index parent task ids).
+    pub fn timing_slots(&self) -> usize {
+        match &*self.inner {
+            Inner::H { m, plan } => plan.timing_slots(m),
+            Inner::Uniform { m, plan } => plan.timing_slots(m),
+            Inner::H2 { m, plan } => plan.timing_slots(m),
+        }
+    }
+
+    /// Fold a timed forward batch into `out` as fit samples (only the
+    /// slice's retained tasks) and return the slice packing's (predicted,
+    /// measured) makespan; predicted is 0.0 until a profile is active.
+    pub fn observe_multi(&self, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
+        match (&*self.inner, &self.slices) {
+            (Inner::H { m, plan }, Slices::H { fwd, .. }) => plan.observe_multi_slice(m, fwd, sink, nrhs, out),
+            (Inner::Uniform { m, plan }, Slices::Uniform { fwd, .. }) => plan.observe_multi_slice(m, fwd, sink, nrhs, out),
+            (Inner::H2 { m, plan }, Slices::H2 { fwd, .. }) => plan.observe_multi_slice(m, fwd, sink, nrhs, out),
+            _ => unreachable!("slice format matches the operator format by construction"),
+        }
+    }
+
+    fn apply_multi_owned_rec(&self, adjoint: bool, alpha: f64, x: &DMatrix, seed: Option<&DMatrix>, out: &mut DMatrix, rec: Option<&TimingSink>) {
         let rows = self.owned(adjoint);
         let (nr, nc) = self.dims();
         let (ylen, xlen) = if adjoint { (nc, nr) } else { (nr, nc) };
@@ -330,15 +365,15 @@ impl ShardPlan {
             match (&*self.inner, &self.slices) {
                 (Inner::H { m, plan }, Slices::H { fwd, adj }) => {
                     let sl = if adjoint { adj } else { fwd };
-                    plan.execute_multi_slice(m, sl, alpha, x, &mut ym, &mut arena, self.exec.as_ref(), hot.as_ref());
+                    plan.execute_multi_slice(m, sl, alpha, x, &mut ym, &mut arena, self.exec.as_ref(), rec, hot.as_ref());
                 }
                 (Inner::Uniform { m, plan }, Slices::Uniform { fwd, adj }) => {
                     let sl = if adjoint { adj } else { fwd };
-                    plan.execute_multi_slice(m, sl, alpha, x, &mut ym, &mut arena, self.exec.as_ref(), hot.as_ref());
+                    plan.execute_multi_slice(m, sl, alpha, x, &mut ym, &mut arena, self.exec.as_ref(), rec, hot.as_ref());
                 }
                 (Inner::H2 { m, plan }, Slices::H2 { fwd, adj }) => {
                     let sl = if adjoint { adj } else { fwd };
-                    plan.execute_multi_slice(m, sl, alpha, x, &mut ym, &mut arena, self.exec.as_ref(), hot.as_ref());
+                    plan.execute_multi_slice(m, sl, alpha, x, &mut ym, &mut arena, self.exec.as_ref(), rec, hot.as_ref());
                 }
                 _ => unreachable!("slice format matches the operator format by construction"),
             }

@@ -1,0 +1,248 @@
+//! Online-adaptation invariants: the serving-time calibrator only re-fits
+//! cost coefficients and re-partitions task→shard packings, so products must
+//! stay **bitwise identical** across every mid-stream re-fit and packing
+//! swap — for all three formats (H/UH/H²), compressed and uncompressed,
+//! forward + adjoint + multi-RHS, through the adaptive server and the
+//! sharded scatter/gather tier. Plus: the drift trigger's hysteresis holds
+//! on a live operator (alternating noisy timings never swap), extending the
+//! synthetic-sample unit tests in `coordinator/adaptive.rs`.
+//!
+//! No test here touches process environment variables, so this binary is
+//! safe to run threaded.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::coordinator::{BatchPolicy, MvmServer, OnlineCalibrator, OnlineConfig};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::la::DMatrix;
+use hmatc::lowrank::AcaOptions;
+use hmatc::plan::costmodel::{CostSource, Sample};
+use hmatc::plan::{ExecutorKind, HOperator, PlannedOperator, TimingSink};
+use hmatc::util::Rng;
+use std::sync::Arc;
+
+fn build_h(level: usize, eps: f64) -> HMatrix {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps))
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: row {i}: {x:e} vs {y:e}");
+    }
+}
+
+/// The backends the online-adaptation matrix covers.
+fn kinds() -> [ExecutorKind; 2] {
+    [ExecutorKind::StaticLpt, ExecutorKind::WorkStealing]
+}
+
+/// Forward (twice, pinning arena/packing reuse), adjoint and multi-RHS.
+fn run_all(op: &PlannedOperator, n: usize) -> (Vec<f64>, Vec<f64>, DMatrix, DMatrix) {
+    let mut rng = Rng::new(727272);
+    let x = rng.vector(n);
+    let y0 = rng.vector(n);
+    let xm = DMatrix::random(n, 3, &mut rng);
+    let mut fwd = y0.clone();
+    op.apply(0.75, &x, &mut fwd);
+    op.apply(0.75, &x, &mut fwd);
+    let mut adj = y0.clone();
+    op.apply_adjoint(0.75, &x, &mut adj);
+    let mut multi = DMatrix::zeros(n, 3);
+    op.apply_multi(0.75, &xm, &mut multi);
+    let mut multi_adj = DMatrix::zeros(n, 3);
+    op.apply_multi_adjoint(0.75, &xm, &mut multi_adj);
+    (fwd, adj, multi, multi_adj)
+}
+
+/// One real timed product through the whole-plan path, harvested the way
+/// the adaptive server harvests: per-chunk samples plus the (predicted,
+/// measured) makespan of the packing the batch ran on.
+fn harvest(op: &PlannedOperator, nrhs: usize, seed: u64) -> (Vec<Sample>, f64, f64) {
+    let sink = TimingSink::new(op.timing_slots());
+    let n = op.ncols();
+    let mut rng = Rng::new(seed);
+    let x = DMatrix::random(n, nrhs, &mut rng);
+    let mut y = DMatrix::zeros(op.nrows(), nrhs);
+    op.apply_multi_timed(1.0, &x, &mut y, &sink);
+    let mut samples = Vec::new();
+    let (predicted, measured) = op.observe_multi(&sink, nrhs, &mut samples);
+    (samples, predicted, measured)
+}
+
+/// Pin the invariant on one operator: baseline products, then live
+/// observations driving the calibrator through its bootstrap fit AND
+/// drift-armed re-fits (measured makespan inflated past the threshold),
+/// re-checking bitwise equality after every swap opportunity.
+fn check_online_swaps_invariant(op: Arc<PlannedOperator>, n: usize, tag: &str) {
+    let base = run_all(&op, n);
+    let cfg = OnlineConfig { min_samples: 1, hysteresis: 2, drift: 0.05, ..Default::default() };
+    let cal = OnlineCalibrator::new(cfg, vec![op.clone()]);
+    // bootstrap: no profile yet, predicted is the 0.0 sentinel
+    let (s, p, m) = harvest(&op, 2, 31);
+    cal.observe(&s, p, m);
+    for round in 0..4u64 {
+        let (s, p, m) = harvest(&op, 1 + (round as usize % 3), 32 + round);
+        // inflate the measured makespan so the drift trigger itself fires
+        cal.observe(&s, p, m.max(1e-9) * 10.0);
+        let (f, a, mu, ma) = run_all(&op, n);
+        assert_bits_eq(&f, &base.0, &format!("{tag} fwd round {round}"));
+        assert_bits_eq(&a, &base.1, &format!("{tag} adj round {round}"));
+        assert_bits_eq(mu.data(), base.2.data(), &format!("{tag} multi round {round}"));
+        assert_bits_eq(ma.data(), base.3.data(), &format!("{tag} multi-adj round {round}"));
+    }
+    let st = cal.status();
+    assert!(st.refits >= 1, "{tag}: bootstrap must attempt a fit ({st:?})");
+    if st.swaps > 0 {
+        assert_eq!(op.plan_stats().cost_source, CostSource::Online, "{tag}: swapped profile labels online");
+    }
+}
+
+#[test]
+fn online_swaps_are_bitwise_invariant_h() {
+    let h0 = build_h(2, 1e-7);
+    let n = h0.nrows();
+    for compress in [false, true] {
+        let mut h = h0.clone();
+        if compress {
+            h.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let h = Arc::new(h);
+        for kind in kinds() {
+            let op = Arc::new(PlannedOperator::from_h_with(h.clone(), kind));
+            check_online_swaps_invariant(op, n, &format!("H compress={compress} [{kind}]"));
+        }
+    }
+}
+
+#[test]
+fn online_swaps_are_bitwise_invariant_uh() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    for compress in [false, true] {
+        let mut uh = hmatc::uniform::build_from_h(&h, 1e-6, hmatc::uniform::CouplingKind::Combined);
+        if compress {
+            uh.compress(&CompressionConfig { codec: Codec::Fpx, eps: 1e-9, valr: true });
+        }
+        let uh = Arc::new(uh);
+        for kind in kinds() {
+            let op = Arc::new(PlannedOperator::from_uniform_with(uh.clone(), kind));
+            check_online_swaps_invariant(op, n, &format!("UH compress={compress} [{kind}]"));
+        }
+    }
+}
+
+#[test]
+fn online_swaps_are_bitwise_invariant_h2() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    for compress in [false, true] {
+        let mut h2 = hmatc::h2::build_from_h(&h, 1e-6);
+        if compress {
+            h2.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let h2 = Arc::new(h2);
+        for kind in kinds() {
+            let op = Arc::new(PlannedOperator::from_h2_with(h2.clone(), kind));
+            check_online_swaps_invariant(op, n, &format!("H2 compress={compress} [{kind}]"));
+        }
+    }
+}
+
+/// Adaptive servers (unsharded and sharded) must serve the exact bits of a
+/// static server over the same operator, with re-fits forced between
+/// requests — for all three formats, compressed.
+#[test]
+fn adaptive_servers_match_static_bitwise_under_forced_swaps() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    let cfg_z = CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true };
+    let mut hz = h.clone();
+    hz.compress(&cfg_z);
+    let mut uh = hmatc::uniform::build_from_h(&h, 1e-6, hmatc::uniform::CouplingKind::Combined);
+    uh.compress(&cfg_z);
+    let mut h2 = hmatc::h2::build_from_h(&h, 1e-6);
+    h2.compress(&cfg_z);
+    let kind = ExecutorKind::StaticLpt;
+    let ops: Vec<(&str, Arc<PlannedOperator>)> = vec![
+        ("H", Arc::new(PlannedOperator::from_h_with(Arc::new(hz), kind))),
+        ("UH", Arc::new(PlannedOperator::from_uniform_with(Arc::new(uh), kind))),
+        ("H2", Arc::new(PlannedOperator::from_h2_with(Arc::new(h2), kind))),
+    ];
+    let mut rng = Rng::new(808);
+    let xs: Vec<Vec<f64>> = (0..4).map(|_| rng.vector(n)).collect();
+    let xp = DMatrix::random(n, 3, &mut rng);
+    let policy = BatchPolicy::default();
+    let cfg = OnlineConfig { min_samples: 1, ..Default::default() };
+    for (name, op) in ops {
+        // baseline: static server, sequential submits (singleton batches)
+        let static_srv = MvmServer::start(op.clone(), policy);
+        let want: Vec<Vec<f64>> = xs.iter().map(|x| static_srv.call(x.clone()).y).collect();
+        let want_panel = static_srv.call_panel(xp.clone()).y;
+        drop(static_srv);
+        // adaptive, unsharded: force a re-fit + swap between every request
+        let srv = MvmServer::start_adaptive(op.clone(), policy, cfg.clone());
+        for (x, w) in xs.iter().zip(&want) {
+            assert_bits_eq(&srv.call(x.clone()).y, w, &format!("{name} adaptive single"));
+            srv.calibrator().expect("adaptive").force_refit();
+        }
+        assert_bits_eq(&srv.call_panel(xp.clone()).y, &want_panel, &format!("{name} adaptive panel"));
+        drop(srv);
+        // adaptive, sharded: same forced swaps through the scatter/gather tier
+        let srv = MvmServer::start_sharded_adaptive(op.clone(), 2, kind, policy, cfg.clone())
+            .expect("sharded adaptive server starts");
+        for (x, w) in xs.iter().zip(&want) {
+            assert_bits_eq(&srv.call(x.clone()).y, w, &format!("{name} sharded adaptive single"));
+            srv.calibrator().expect("adaptive").force_refit();
+        }
+        assert_bits_eq(&srv.call_panel(xp.clone()).y, &want_panel, &format!("{name} sharded adaptive panel"));
+    }
+}
+
+/// Hysteresis on a live operator: alternating noisy timings (every other
+/// observation far over the drift threshold, the rest exactly on-model)
+/// never reach the consecutive-streak requirement, so after the bootstrap
+/// no further packing swap happens; sustained drift still re-fits.
+#[test]
+fn noisy_drift_never_swap_storms_on_live_operator() {
+    let h = Arc::new(build_h(2, 1e-7));
+    let op = Arc::new(PlannedOperator::from_h(h));
+    let n = op.ncols();
+    let base = run_all(&op, n);
+    let cfg = OnlineConfig { min_samples: 1, hysteresis: 3, drift: 0.25, ..Default::default() };
+    let cal = OnlineCalibrator::new(cfg, vec![op.clone()]);
+    let (s, p, m) = harvest(&op, 1, 41);
+    cal.observe(&s, p, m); // bootstrap fit fires on the first observation
+    assert!(cal.status().refits >= 1, "bootstrap must attempt a fit");
+    // the drift phases are only meaningful once a live profile is active
+    // (real timings virtually always fit; degenerate clocks just skip them)
+    if cal.status().swaps == 1 {
+        for i in 0..40u64 {
+            let (s, p, _) = harvest(&op, 1, 42 + i);
+            // drive drift deterministically off the model's own prediction:
+            // alternate between 2.0 (over threshold) and exactly 0.0
+            let measured = if i % 2 == 0 { p * 3.0 } else { p };
+            cal.observe(&s, p, measured);
+        }
+        assert_eq!(cal.status().swaps, 1, "alternating noise must not swap");
+        // sustained drift (hysteresis consecutive observations) still re-fits
+        let refits_before = cal.status().refits;
+        for i in 0..3u64 {
+            let (s, p, _) = harvest(&op, 1, 99 + i);
+            cal.observe(&s, p, p.max(1e-9) * 3.0);
+        }
+        assert!(cal.status().refits > refits_before, "sustained drift must re-fit");
+    }
+    // and through it all, not one bit moved
+    let now = run_all(&op, n);
+    assert_bits_eq(&now.0, &base.0, "fwd after noise");
+    assert_bits_eq(&now.1, &base.1, "adj after noise");
+    assert_bits_eq(now.2.data(), base.2.data(), "multi after noise");
+    assert_bits_eq(now.3.data(), base.3.data(), "multi-adj after noise");
+}
