@@ -31,8 +31,11 @@ pub fn write_bench_json(tag: &str, doc: &Json) {
     let _ = std::fs::write(format!("BENCH_{tag}.json"), with_context(doc).to_string());
 }
 
-/// Stamp `executor` + `threads` + `cost_source` into the top level of a
-/// result document (non-object documents are wrapped as `{"data": ..}`).
+/// Stamp `executor` + `threads` + `cost_source` + `topology` into the top
+/// level of a result document (non-object documents are wrapped as
+/// `{"data": ..}`). The topology object mirrors the calibration profile's
+/// [`crate::plan::costmodel::TopologyMeta`] fingerprint so NUMA and
+/// non-NUMA rows stay distinguishable in the perf trajectory.
 fn with_context(doc: &Json) -> Json {
     let (executor, threads) = exec_context();
     let mut m = match doc.clone() {
@@ -42,6 +45,15 @@ fn with_context(doc: &Json) -> Json {
     m.insert("executor".to_string(), Json::Str(executor));
     m.insert("threads".to_string(), Json::Num(threads as f64));
     m.insert("cost_source".to_string(), Json::Str(cost_source_label()));
+    let topo = crate::par::Topology::get();
+    m.insert(
+        "topology".to_string(),
+        Json::Obj(std::collections::BTreeMap::from([
+            ("nodes".to_string(), Json::Num(topo.num_nodes() as f64)),
+            ("cores_per_node".to_string(), Json::Num(topo.cores_per_node() as f64)),
+            ("pinned".to_string(), Json::Bool(topo.pin_enabled())),
+        ])),
+    );
     Json::Obj(m)
 }
 

@@ -245,7 +245,11 @@ impl OnlineCalibrator {
         st.streak = 0;
         st.refits += 1;
         let samples: Vec<Sample> = st.window.iter().cloned().collect();
-        let profile = match costmodel::fit(&samples) {
+        // Per-pool overlay fits ride along whenever the window carries
+        // pool-tagged samples (sharded:K backends); single-pool windows take
+        // the plain global fit path inside fit_pools.
+        let npools = samples.iter().map(|s| s.pool).max().map_or(1, |m| m + 1);
+        let profile = match costmodel::fit_pools(&samples, npools) {
             Ok(p) => p,
             Err(_) => return false,
         };
@@ -283,7 +287,7 @@ mod tests {
         let mut feats = TaskFeats::default();
         feats.add(KernelClass::MatBytes, 1024.0);
         feats.add(KernelClass::PanelVec, 64.0);
-        Sample { feats, nrhs: 1, secs }
+        Sample { feats, nrhs: 1, pool: 0, secs }
     }
 
     fn batch(n: usize, secs: f64) -> Vec<Sample> {

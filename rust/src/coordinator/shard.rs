@@ -60,6 +60,18 @@ pub(crate) struct ShardResult {
 /// Worker loop: runs until the job channel closes (server drop) or the
 /// gather side goes away.
 pub(crate) fn shard_worker(shard: Arc<ShardPlan>, jobs: Receiver<ShardJob>, results: Sender<ShardResult>, counters: Arc<ShardCounters>) {
+    // Pin the worker to its home NUMA node before any allocation: the
+    // shard's arena, ybuf, and hot-cache panels are then first-touched on
+    // node-local memory. Best-effort — a failed pin just leaves the worker
+    // unpinned (identical outputs, only placement changes).
+    let topo = crate::par::Topology::get();
+    if let Some(node) = shard.home_node() {
+        if topo.pin_enabled() {
+            if let Some(info) = topo.nodes().iter().find(|n| n.id == node) {
+                crate::par::topology::pin_current_thread(&info.cpus);
+            }
+        }
+    }
     let rows = shard.owned(false);
     // One reusable sink sized to the shard's slice; reset per timed job.
     let sink = TimingSink::new(shard.timing_slots());

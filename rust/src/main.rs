@@ -82,6 +82,7 @@ fn info() {
     println!("hmatc — compressed hierarchical matrix formats (H / UH / H²)");
     println!("threads: {}", hmatc::par::num_threads() + 1);
     println!("executor: {} (HMATC_EXEC=lpt|steal|sharded:K)", ExecutorKind::from_env());
+    println!("topology: {} (HMATC_NUMA=0 disables discovery, HMATC_PIN=0 disables pinning)", hmatc::par::Topology::get().summary());
     println!("simd: {} (runtime dispatch; HMATC_SIMD=scalar forces the portable kernels)", hmatc::compress::dispatch::simd_name());
     // validated: a bad HMATC_COSTS file warns (via costs_from_env) and is
     // reported as the static fallback it actually is
@@ -530,7 +531,11 @@ fn serve_cmd(args: &Args) {
         if let Some(po) = &status_op {
             // `online` once the bootstrap fit swapped the first live profile
             // in; `static` means the window never filled to min_samples
-            println!("cost_source: {}", po.plan_stats().cost_source);
+            let st = po.plan_stats();
+            println!("cost_source: {}", st.cost_source);
+            if !st.pool_cost_sources.is_empty() {
+                println!("pool coefficients: [{}]", st.pool_cost_sources.join(", "));
+            }
         }
     }
 }
@@ -597,7 +602,10 @@ fn calibrate_cmd(args: &Args) {
 
     let rounds = args.num_or("rounds", if quick { 2usize } else { 8 });
     let t = Timer::start();
-    let profile = op.calibrate(rounds);
+    let mut profile = op.calibrate(rounds);
+    // stamp the topology fingerprint so a later load on a different machine
+    // shape can drop the per-pool overlays instead of mis-applying them
+    profile.topology = Some(hmatc::plan::costmodel::TopologyMeta::current());
     if !profile.is_usable() {
         // writing a profile that rebalance() would ignore only misleads the
         // next `--costs` user into believing calibration is active
@@ -609,6 +617,9 @@ fn calibrate_cmd(args: &Args) {
     println!("fitted coefficients (seconds per unit):");
     for (class, coeff) in profile.coeffs() {
         println!("  {:<16} {coeff:.3e}", class.key());
+    }
+    if profile.has_pool_coeffs() {
+        println!("per-pool coefficients: [{}]", profile.pool_source_labels().join(", "));
     }
     println!("cost source: {} | makespan: measured(static packing) {} vs predicted(calibrated packing) {}", st.cost_source, fmt_secs(st.measured_makespan), fmt_secs(st.predicted_makespan));
     let out = args.str_or("out", "costs.json");

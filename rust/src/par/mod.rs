@@ -18,10 +18,12 @@
 pub mod atomic;
 pub mod deque;
 pub mod pool;
+pub mod topology;
 
 pub use atomic::{as_atomic_f64, atomic_add_f64};
 pub use deque::{Steal, WorkDeque};
 pub use pool::{parallel_for, Scope, StealSet, ThreadPool};
+pub use topology::{NodeInfo, Topology};
 
 /// Number of worker threads used by the global pool.
 pub fn num_threads() -> usize {

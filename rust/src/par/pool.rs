@@ -47,28 +47,65 @@ pub struct ThreadPool {
     shared: std::sync::Arc<Shared>,
     workers: Mutex<Vec<JoinHandle<()>>>,
     nthreads: usize,
+    /// NUMA node this pool is homed on (`None`: unplaced).
+    node: Option<usize>,
+    /// Whether every worker is pinned to the requested cpu set. Workers pin
+    /// themselves at startup and clear this on failure, so it can transition
+    /// `true → false` shortly after construction (pinning is best-effort).
+    pinned: std::sync::Arc<AtomicBool>,
 }
 
 impl ThreadPool {
     /// Create a pool with `n` workers (0 is allowed: all work is done by
     /// scoping threads).
     pub fn new(n: usize) -> Self {
+        ThreadPool::with_affinity(n, None, &[])
+    }
+
+    /// Create a pool homed on NUMA node `node` whose workers pin themselves
+    /// to `cpus` via `sched_setaffinity` before entering the worker loop.
+    /// An empty `cpus` list spawns a plain unpinned pool; a pin failure on
+    /// any worker degrades the whole pool to "unpinned" (see
+    /// [`ThreadPool::is_pinned`]) but never fails construction.
+    pub fn with_affinity(n: usize, node: Option<usize>, cpus: &[usize]) -> Self {
         let shared = std::sync::Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
+        let want_pin = !cpus.is_empty() && n > 0;
+        let pinned = std::sync::Arc::new(AtomicBool::new(want_pin));
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let sh = shared.clone();
+            let cpus: Vec<usize> = cpus.to_vec();
+            let pinned = pinned.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("hmatc-worker-{i}"))
-                    .spawn(move || worker_loop(&sh))
+                    .spawn(move || {
+                        if !cpus.is_empty() && !super::topology::pin_current_thread(&cpus) {
+                            pinned.store(false, Ordering::Release);
+                        }
+                        worker_loop(&sh)
+                    })
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { shared, workers: Mutex::new(workers), nthreads: n }
+        ThreadPool { shared, workers: Mutex::new(workers), nthreads: n, node, pinned }
+    }
+
+    /// NUMA node this pool was homed on at construction, if any.
+    pub fn node(&self) -> Option<usize> {
+        self.node
+    }
+
+    /// Whether all workers hold their requested cpu affinity. `false` for
+    /// pools built without affinity and for pools that degraded because
+    /// `sched_setaffinity` failed. Workers pin asynchronously at startup, so
+    /// a failure may surface only after construction returns.
+    pub fn is_pinned(&self) -> bool {
+        self.pinned.load(Ordering::Acquire)
     }
 
     /// The process-wide pool. Worker count from `HMATC_THREADS` or the number
@@ -375,6 +412,42 @@ mod tests {
             }
         });
         assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn plain_pool_is_unplaced_and_unpinned() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.node(), None);
+        assert!(!pool.is_pinned());
+        let pinned = ThreadPool::with_affinity(0, Some(3), &[0]);
+        assert_eq!(pinned.node(), Some(3));
+        assert!(!pinned.is_pinned(), "zero workers: nothing to pin");
+    }
+
+    #[test]
+    fn affinity_pool_degrades_on_pin_failure() {
+        // cpu 1023 fits in the affinity mask but is (almost certainly) not an
+        // online cpu here, so sched_setaffinity rejects the set and the pool
+        // must degrade to unpinned instead of failing or wedging.
+        let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let pool = ThreadPool::with_affinity(2, Some(0), &[1023]);
+        // workers pin asynchronously at startup: poll for the degradation
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        while pool.is_pinned() && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..16 {
+                s.spawn(|_| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 16, "degraded pool must still execute");
+        if cfg!(target_os = "linux") && avail < 512 {
+            assert!(!pool.is_pinned(), "pin to an offline cpu should report unpinned");
+        }
     }
 
     #[test]

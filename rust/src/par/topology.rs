@@ -1,0 +1,464 @@
+//! CPU/NUMA topology discovery and placement primitives.
+//!
+//! **Discovery contract.** [`Topology::get`] inspects the machine exactly once
+//! per process (the result is cached in a `OnceLock`):
+//!
+//! * On Linux with `HMATC_NUMA` unset or truthy, nodes are read from sysfs
+//!   (`/sys/devices/system/node/node*/`): a node's cpu set comes from its
+//!   `cpulist` file (`"0-3,8,10-11"` format) and its capacity from the
+//!   `Node N MemTotal:` line of its `meminfo`. Memory-only nodes (empty
+//!   `cpulist`) are skipped; nodes are sorted by id. Cpu lists are then
+//!   intersected with the process's allowed cpuset (`sched_getaffinity`), so
+//!   a container restricted to a cpu subset neither pins to nor counts cpus
+//!   it cannot run on; if the intersection empties every node, discovery
+//!   falls back as below.
+//! * Everywhere else — non-Linux hosts, containers without sysfs, or
+//!   `HMATC_NUMA=0` — discovery **falls back to a single synthetic node with
+//!   an empty cpu list**. An empty cpu list is the "don't pin" sentinel: only
+//!   cpu ids actually read from sysfs are ever passed to `sched_setaffinity`,
+//!   so macOS/CI degrade gracefully to today's unpinned behaviour.
+//!
+//! **Pinning contract.** `HMATC_PIN=0` disables thread pinning (and node-local
+//! memory binding) without affecting discovery, so per-node accounting (pool →
+//! node ids, per-pool cost coefficients) keeps working unpinned. Pinning
+//! failures — e.g. `sched_setaffinity` returning `EPERM` under a restrictive
+//! seccomp/cpuset — are reported to the caller ([`pin_current_thread`] returns
+//! `false`) and degrade to unpinned pools; they are never fatal.
+//!
+//! Placement only moves *threads and pages*: plan outputs stay bitwise
+//! identical with pinning on or off, which `tests/calibration_invariance.rs`
+//! pins.
+
+use std::sync::OnceLock;
+
+/// One NUMA node: its sysfs id, the cpu ids it owns, and its memory capacity.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeInfo {
+    /// Sysfs node id (`nodeN`). Not necessarily dense.
+    pub id: usize,
+    /// Cpu ids local to this node, ascending. Empty on the fallback node —
+    /// an empty list means "never pin".
+    pub cpus: Vec<usize>,
+    /// `MemTotal` of the node in bytes (0 when unknown).
+    pub mem_bytes: u64,
+}
+
+/// The machine topology used for pool pinning and memory placement.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    nodes: Vec<NodeInfo>,
+    pinning: bool,
+}
+
+impl Topology {
+    /// The process-wide topology (discovered once; see module docs for the
+    /// discovery/fallback contract). `HMATC_NUMA=0` forces the single-node
+    /// fallback, `HMATC_PIN=0` disables pinning.
+    pub fn get() -> &'static Topology {
+        static TOPO: OnceLock<Topology> = OnceLock::new();
+        TOPO.get_or_init(|| Topology::detect(env_flag("HMATC_NUMA", true), env_flag("HMATC_PIN", true)))
+    }
+
+    /// Detect the topology with explicit switches (testable without env vars).
+    /// Discovered cpu lists are intersected with the process's allowed cpuset
+    /// (`sched_getaffinity`), so containers restricted to a cpu subset never
+    /// pin to — or count — cpus they cannot run on.
+    pub fn detect(numa_enabled: bool, pinning: bool) -> Topology {
+        let nodes = if numa_enabled {
+            discover(SYSFS_NODE_ROOT)
+                .map(|mut ns| {
+                    if let Some(mask) = allowed_cpu_mask() {
+                        for n in &mut ns {
+                            n.cpus.retain(|&c| c <= MAX_CPU_ID && (mask[c / 64] >> (c % 64)) & 1 == 1);
+                        }
+                        ns.retain(|n| !n.cpus.is_empty());
+                    }
+                    ns
+                })
+                .filter(|ns| !ns.is_empty())
+        } else {
+            None
+        };
+        Topology { nodes: nodes.unwrap_or_else(fallback_nodes), pinning }
+    }
+
+    /// Build a topology from explicit nodes (tests).
+    pub fn from_nodes(nodes: Vec<NodeInfo>, pinning: bool) -> Topology {
+        let nodes = if nodes.is_empty() { fallback_nodes() } else { nodes };
+        Topology { nodes, pinning }
+    }
+
+    pub fn nodes(&self) -> &[NodeInfo] {
+        &self.nodes
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Whether thread pinning / memory binding is enabled (`HMATC_PIN`).
+    pub fn pin_enabled(&self) -> bool {
+        self.pinning
+    }
+
+    /// Largest per-node cpu count (0 on the fallback topology).
+    pub fn cores_per_node(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).max().unwrap_or(0)
+    }
+
+    /// Per-node memory capacities in bytes, in node order.
+    pub fn node_mem(&self) -> Vec<u64> {
+        self.nodes.iter().map(|n| n.mem_bytes).collect()
+    }
+
+    /// Placement for sub-pool `p` of `k`: the node it lives on (sysfs id) and
+    /// the cpu ids its workers should pin to.
+    ///
+    /// Pools are dealt round-robin across nodes (`p % nodes`), and the pools
+    /// that share a node split that node's cpu list into contiguous
+    /// `part_range`-style slices, so distinct pools get distinct core sets
+    /// even on a single-node box. When a node hosts more pools than it has
+    /// cpus, the overflow pools share the whole node's cpu list (node-local,
+    /// not core-exclusive). The fallback topology returns an empty cpu list:
+    /// never pin on synthetic nodes.
+    pub fn pool_placement(&self, k: usize, p: usize) -> (Option<usize>, Vec<usize>) {
+        let nn = self.nodes.len();
+        if nn == 0 || k == 0 || p >= k {
+            return (None, Vec::new());
+        }
+        let ni = p % nn;
+        let node = &self.nodes[ni];
+        if node.cpus.is_empty() {
+            return (Some(node.id), Vec::new());
+        }
+        // pools p' < k with p' % nn == ni, and this pool's ordinal among them
+        let on_node = (k - ni).div_ceil(nn);
+        let q = p / nn;
+        let len = node.cpus.len();
+        let (lo, hi) = (q * len / on_node, (q + 1) * len / on_node);
+        if lo >= hi {
+            return (Some(node.id), node.cpus.clone());
+        }
+        (Some(node.id), node.cpus[lo..hi].to_vec())
+    }
+
+    /// One-line human summary (the `hmatc info` topology line).
+    pub fn summary(&self) -> String {
+        let cpus: Vec<String> = self.nodes.iter().map(|n| n.cpus.len().to_string()).collect();
+        let kind = if self.nodes.iter().all(|n| n.cpus.is_empty()) { " (fallback)" } else { "" };
+        format!(
+            "{} node(s){}, cpus/node [{}], pinning {}",
+            self.nodes.len(),
+            kind,
+            cpus.join(","),
+            if self.pinning { "on" } else { "off" }
+        )
+    }
+}
+
+const SYSFS_NODE_ROOT: &str = "/sys/devices/system/node";
+
+fn fallback_nodes() -> Vec<NodeInfo> {
+    vec![NodeInfo { id: 0, cpus: Vec::new(), mem_bytes: 0 }]
+}
+
+/// Read `true`/`false` style env flags; anything but `0|off|false|no` is on.
+fn env_flag(name: &str, default: bool) -> bool {
+    match std::env::var(name) {
+        Ok(v) => !matches!(v.trim().to_ascii_lowercase().as_str(), "0" | "off" | "false" | "no"),
+        Err(_) => default,
+    }
+}
+
+/// Discover NUMA nodes under a sysfs-style directory (path-injectable for
+/// tests). Returns `None` when the directory is missing or holds no node with
+/// at least one cpu, so callers fall back to the synthetic single node.
+pub fn discover(root: &str) -> Option<Vec<NodeInfo>> {
+    let entries = std::fs::read_dir(root).ok()?;
+    let mut nodes = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(idstr) = name.strip_prefix("node") else { continue };
+        let Ok(id) = idstr.parse::<usize>() else { continue };
+        let dir = entry.path();
+        let cpus = std::fs::read_to_string(dir.join("cpulist"))
+            .ok()
+            .map(|s| parse_cpulist(&s))
+            .unwrap_or_default();
+        if cpus.is_empty() {
+            continue; // memory-only node: no pool lives there
+        }
+        let mem_bytes = std::fs::read_to_string(dir.join("meminfo")).ok().map(|s| parse_meminfo_total(&s)).unwrap_or(0);
+        nodes.push(NodeInfo { id, cpus, mem_bytes });
+    }
+    if nodes.is_empty() {
+        return None;
+    }
+    nodes.sort_by_key(|n| n.id);
+    Some(nodes)
+}
+
+/// Parse a sysfs cpulist (`"0-3,8,10-11"`) into ascending cpu ids.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                if lo <= hi && hi - lo < 4096 {
+                    out.extend(lo..=hi);
+                }
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            out.push(c);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Extract the `MemTotal:` kilobyte figure from a node `meminfo`, in bytes.
+fn parse_meminfo_total(s: &str) -> u64 {
+    for line in s.lines() {
+        if let Some(pos) = line.find("MemTotal:") {
+            let rest = &line[pos + "MemTotal:".len()..];
+            if let Some(kb) = rest.split_whitespace().next().and_then(|t| t.parse::<u64>().ok()) {
+                return kb.saturating_mul(1024);
+            }
+        }
+    }
+    0
+}
+
+// Raw Linux placement syscalls. std already links libc, so plain `extern "C"`
+// declarations suffice — same pattern as `store::sys` for mmap/madvise.
+#[cfg(target_os = "linux")]
+mod sys {
+    extern "C" {
+        pub fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        pub fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+    }
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    extern "C" {
+        pub fn syscall(num: std::os::raw::c_long, ...) -> std::os::raw::c_long;
+        pub fn getpagesize() -> i32;
+    }
+    #[cfg(target_arch = "x86_64")]
+    pub const NR_MBIND: std::os::raw::c_long = 237;
+    #[cfg(target_arch = "aarch64")]
+    pub const NR_MBIND: std::os::raw::c_long = 235;
+}
+
+/// Maximum cpu id representable in the affinity mask ([u64; 16] = 1024 bits).
+pub const MAX_CPU_ID: usize = 1023;
+
+/// The calling thread's allowed-cpu mask, when the kernel reports one.
+#[cfg(target_os = "linux")]
+fn allowed_cpu_mask() -> Option<[u64; 16]> {
+    let mut mask = [0u64; 16];
+    let rc = unsafe { sys::sched_getaffinity(0, std::mem::size_of_val(&mask), mask.as_mut_ptr()) };
+    (rc == 0).then_some(mask)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn allowed_cpu_mask() -> Option<[u64; 16]> {
+    None
+}
+
+/// Pin the calling thread to `cpus`. Returns `false` — leaving the thread
+/// unpinned — on an empty/unrepresentable cpu set, on kernel rejection
+/// (`EPERM`/`EINVAL`, e.g. offline cpus or a restrictive cpuset), and always
+/// on non-Linux targets. Never panics: pinning is strictly best-effort.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    if cpus.is_empty() {
+        return false;
+    }
+    let mut mask = [0u64; 16];
+    let mut any = false;
+    for &c in cpus {
+        if c <= MAX_CPU_ID {
+            mask[c / 64] |= 1u64 << (c % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    // pid 0 = the calling thread
+    unsafe { sys::sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_cpus: &[usize]) -> bool {
+    false
+}
+
+/// Advise the kernel to place (and migrate, `MPOL_MF_MOVE`) the pages backing
+/// `ptr..ptr+len` on `node` (`mbind` with `MPOL_PREFERRED`). The range is
+/// widened to page boundaries. Returns `false` — leaving placement to the
+/// default policy — when the node id is unrepresentable, the syscall is
+/// unavailable (non-Linux / unsupported arch), or the kernel refuses.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn bind_region(ptr: *const u8, len: usize, node: usize) -> bool {
+    const MPOL_PREFERRED: usize = 1;
+    const MPOL_MF_MOVE: usize = 1 << 1;
+    if len == 0 || node >= 64 {
+        return false;
+    }
+    let page = unsafe { sys::getpagesize() } as usize;
+    if page == 0 || !page.is_power_of_two() {
+        return false;
+    }
+    let start = (ptr as usize) & !(page - 1);
+    let end = (ptr as usize).saturating_add(len);
+    let end = end.checked_add(page - 1).map(|e| e & !(page - 1)).unwrap_or(end);
+    let mask: u64 = 1u64 << node;
+    let rc = unsafe {
+        sys::syscall(
+            sys::NR_MBIND,
+            start as std::os::raw::c_long,
+            (end - start) as std::os::raw::c_long,
+            MPOL_PREFERRED as std::os::raw::c_long,
+            (&mask as *const u64) as std::os::raw::c_long,
+            64 as std::os::raw::c_long,
+            MPOL_MF_MOVE as std::os::raw::c_long,
+        )
+    };
+    rc == 0
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn bind_region(_ptr: *const u8, _len: usize, _node: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_ranges_and_singles() {
+        assert_eq!(parse_cpulist("0-3,8,10-11\n"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist(" 2 - 4 , 1 "), vec![1, 2, 3, 4]);
+        assert_eq!(parse_cpulist("3-1"), Vec::<usize>::new()); // inverted range
+        assert_eq!(parse_cpulist("0,0,1-2,2"), vec![0, 1, 2]); // dedup
+    }
+
+    #[test]
+    fn meminfo_total_parses() {
+        let s = "Node 0 MemTotal:       16309972 kB\nNode 0 MemFree:         12 kB\n";
+        assert_eq!(parse_meminfo_total(s), 16309972 * 1024);
+        assert_eq!(parse_meminfo_total("no such line"), 0);
+    }
+
+    #[test]
+    fn numa_disabled_falls_back_to_single_unpinnable_node() {
+        let t = Topology::detect(false, true);
+        assert_eq!(t.num_nodes(), 1);
+        assert!(t.nodes()[0].cpus.is_empty());
+        let (node, cpus) = t.pool_placement(4, 1);
+        assert_eq!(node, Some(0));
+        assert!(cpus.is_empty(), "fallback node must never yield pinnable cpus");
+    }
+
+    #[test]
+    fn discover_missing_root_is_none() {
+        assert!(discover("/nonexistent/hmatc-test-path").is_none());
+    }
+
+    #[test]
+    fn discover_reads_synthetic_sysfs_tree() {
+        let root = std::env::temp_dir().join(format!("hmatc-topo-{}", std::process::id()));
+        let mk = |n: &str, cpulist: &str, mem: &str| {
+            let d = root.join(n);
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("cpulist"), cpulist).unwrap();
+            std::fs::write(d.join("meminfo"), mem).unwrap();
+        };
+        mk("node1", "4-7\n", "Node 1 MemTotal: 2048 kB\n");
+        mk("node0", "0-3\n", "Node 0 MemTotal: 1024 kB\n");
+        mk("node2", "\n", "Node 2 MemTotal: 4096 kB\n"); // memory-only: skipped
+        std::fs::create_dir_all(root.join("power")).unwrap(); // non-node entry
+        let nodes = discover(root.to_str().unwrap()).unwrap();
+        std::fs::remove_dir_all(&root).ok();
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0], NodeInfo { id: 0, cpus: vec![0, 1, 2, 3], mem_bytes: 1024 * 1024 });
+        assert_eq!(nodes[1], NodeInfo { id: 1, cpus: vec![4, 5, 6, 7], mem_bytes: 2048 * 1024 });
+    }
+
+    fn two_node_topo() -> Topology {
+        Topology::from_nodes(
+            vec![
+                NodeInfo { id: 0, cpus: vec![0, 1, 2, 3], mem_bytes: 1 },
+                NodeInfo { id: 1, cpus: vec![4, 5, 6, 7], mem_bytes: 1 },
+            ],
+            true,
+        )
+    }
+
+    #[test]
+    fn placement_round_robins_nodes_and_splits_cores() {
+        let t = two_node_topo();
+        // k=2: one pool per node, each takes the whole node
+        assert_eq!(t.pool_placement(2, 0), (Some(0), vec![0, 1, 2, 3]));
+        assert_eq!(t.pool_placement(2, 1), (Some(1), vec![4, 5, 6, 7]));
+        // k=4: two pools per node, contiguous halves
+        assert_eq!(t.pool_placement(4, 0), (Some(0), vec![0, 1]));
+        assert_eq!(t.pool_placement(4, 1), (Some(1), vec![4, 5]));
+        assert_eq!(t.pool_placement(4, 2), (Some(0), vec![2, 3]));
+        assert_eq!(t.pool_placement(4, 3), (Some(1), vec![6, 7]));
+        // k=3: node 0 hosts pools 0 and 2, node 1 hosts pool 1 whole
+        assert_eq!(t.pool_placement(3, 0), (Some(0), vec![0, 1]));
+        assert_eq!(t.pool_placement(3, 1), (Some(1), vec![4, 5, 6, 7]));
+        assert_eq!(t.pool_placement(3, 2), (Some(0), vec![2, 3]));
+    }
+
+    #[test]
+    fn placement_oversubscribed_pools_share_the_node() {
+        let t = Topology::from_nodes(vec![NodeInfo { id: 0, cpus: vec![0, 1], mem_bytes: 0 }], true);
+        // 4 pools on a 2-cpu node: every pool stays node-local, slices that
+        // would be empty widen to the whole node
+        for p in 0..4 {
+            let (node, cpus) = t.pool_placement(4, p);
+            assert_eq!(node, Some(0));
+            assert!(!cpus.is_empty());
+            assert!(cpus.iter().all(|c| *c <= 1));
+        }
+    }
+
+    #[test]
+    fn placement_out_of_range_is_empty() {
+        let t = two_node_topo();
+        assert_eq!(t.pool_placement(0, 0), (None, vec![]));
+        assert_eq!(t.pool_placement(2, 5), (None, vec![]));
+    }
+
+    #[test]
+    fn pin_rejects_empty_and_unrepresentable_sets() {
+        assert!(!pin_current_thread(&[]));
+        assert!(!pin_current_thread(&[MAX_CPU_ID + 1]));
+    }
+
+    #[test]
+    fn bind_region_rejects_bad_node() {
+        let buf = vec![0u8; 16];
+        assert!(!bind_region(buf.as_ptr(), buf.len(), 64));
+        assert!(!bind_region(buf.as_ptr(), 0, 0));
+    }
+
+    #[test]
+    fn summary_mentions_pinning_state() {
+        let t = Topology::detect(false, false);
+        let s = t.summary();
+        assert!(s.contains("pinning off"), "{s}");
+        assert!(s.contains("fallback"), "{s}");
+    }
+}

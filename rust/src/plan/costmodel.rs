@@ -25,6 +25,17 @@
 //!    calibrated plan never models worse than the packing it replaces. The
 //!    task list itself is untouched — only the task→shard partition changes —
 //!    which is why re-balancing is bitwise output-invariant on every backend.
+//! 4. **Per-pool coefficients (NUMA)** — samples are tagged with the sub-pool
+//!    that executed them ([`Sample::pool`]); [`fit_pools`] fits one overlay
+//!    coefficient set per pool on top of the pooled global fit (a pool with
+//!    fewer than [`POOL_SAMPLE_FLOOR`] samples falls back to the global
+//!    coefficients), and [`rebalance_levels_pools`] packs each level against
+//!    the rates of the pool that will actually run each shard (the
+//!    `sharded:K` backend's contiguous [`part_range`] affinity), so a slower
+//!    socket is handed proportionally fewer bytes. Profiles optionally carry
+//!    the topology they were calibrated on ([`TopologyMeta`]); loading a
+//!    per-pool profile on a different topology warns and keeps only the
+//!    global coefficients.
 //!
 //! Profiles serialize to a versioned JSON document (`hmatc calibrate --out
 //! costs.json`) and load through `HMATC_COSTS` / `--costs`; hostile inputs
@@ -32,10 +43,11 @@
 //! keys, version mismatches) are rejected with errors — never panics — and
 //! the plan falls back to the static costs.
 
-use super::schedule::{balance_level, Shard};
+use super::schedule::{balance_level, part_range, Shard};
 use crate::compress::{Blob, CodecParams};
 use crate::h2::TransferMat;
 use crate::hmatrix::BlockData;
+use crate::par::Topology;
 use crate::uniform::{BasisData, ClusterBasis, CouplingMat, UniBlock};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -334,12 +346,40 @@ impl std::fmt::Display for CostSource {
     }
 }
 
+/// Topology fingerprint a per-pool profile was calibrated on. Serialized
+/// into the profile document so a profile calibrated on one box is not
+/// silently applied per-pool on a differently shaped one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TopologyMeta {
+    /// NUMA nodes with at least one usable cpu.
+    pub nodes: usize,
+    /// Largest per-node cpu count (0 on the fallback topology).
+    pub cores_per_node: usize,
+    /// Whether pool pinning was enabled (`HMATC_PIN`).
+    pub pinned: bool,
+}
+
+impl TopologyMeta {
+    /// The running process's topology fingerprint.
+    pub fn current() -> TopologyMeta {
+        let t = Topology::get();
+        TopologyMeta { nodes: t.num_nodes(), cores_per_node: t.cores_per_node(), pinned: t.pin_enabled() }
+    }
+}
+
 /// Fitted per-kernel-class coefficients (seconds per unit amount), plus the
-/// provenance the plan layer reports. The serialized form carries only the
-/// version and the coefficients.
+/// provenance the plan layer reports. The serialized form carries the
+/// version, the coefficients, and — when per-pool fits exist — the per-pool
+/// overlays and the topology fingerprint they were calibrated on.
 #[derive(Clone, Debug, Default)]
 pub struct CostProfile {
     coeffs: BTreeMap<KernelClass, f64>,
+    /// Per-pool overlay coefficient sets (index = sub-pool id of the
+    /// `sharded:K` backend). An empty map means "use the global
+    /// coefficients for this pool" — the below-sample-floor fallback.
+    pools: Vec<BTreeMap<KernelClass, f64>>,
+    /// Topology the per-pool overlays were fitted on, when recorded.
+    pub topology: Option<TopologyMeta>,
     /// Provenance (not serialized — derived from how the profile was made).
     pub source: CostSource,
 }
@@ -347,12 +387,35 @@ pub struct CostProfile {
 impl CostProfile {
     /// Build a profile from explicit coefficients (tests, synthetic models).
     pub fn from_coeffs(pairs: &[(KernelClass, f64)]) -> CostProfile {
-        CostProfile { coeffs: pairs.iter().copied().collect(), source: CostSource::Online }
+        CostProfile { coeffs: pairs.iter().copied().collect(), source: CostSource::Online, ..Default::default() }
     }
 
     /// The fitted coefficients.
     pub fn coeffs(&self) -> &BTreeMap<KernelClass, f64> {
         &self.coeffs
+    }
+
+    /// Install per-pool overlay coefficient sets (tests, [`fit_pools`]).
+    pub fn with_pools(mut self, pools: Vec<BTreeMap<KernelClass, f64>>) -> CostProfile {
+        self.pools = pools;
+        self
+    }
+
+    /// The per-pool overlays (empty when only a global fit exists).
+    pub fn pools(&self) -> &[BTreeMap<KernelClass, f64>] {
+        &self.pools
+    }
+
+    /// Whether any pool has its own (non-empty) overlay coefficient set.
+    pub fn has_pool_coeffs(&self) -> bool {
+        self.pools.iter().any(|m| !m.is_empty())
+    }
+
+    /// Source label per pool: `"per-pool"` where an overlay fit exists,
+    /// `"global"` where the pool fell back (sample floor / topology
+    /// mismatch). Empty when the profile has no pool dimension at all.
+    pub fn pool_source_labels(&self) -> Vec<&'static str> {
+        self.pools.iter().map(|m| if m.is_empty() { "global" } else { "per-pool" }).collect()
     }
 
     /// A profile is usable for re-balancing only if it has at least one
@@ -383,15 +446,68 @@ impl CostProfile {
         feats.terms().iter().map(|&(c, a)| self.coeff(c) * a * if c.scales_with_rhs() { nrhs as f64 } else { 1.0 }).sum()
     }
 
-    /// Serialize to the versioned profile document.
+    /// Coefficient of `class` as pool `pool` sees it: the pool's overlay fit
+    /// when it has one (with the overlay's own unknown-decode-width mean
+    /// fallback), else the global [`CostProfile::coeff`].
+    pub fn pool_coeff(&self, pool: usize, class: KernelClass) -> f64 {
+        let Some(overlay) = self.pools.get(pool).filter(|m| !m.is_empty()) else {
+            return self.coeff(class);
+        };
+        if let Some(v) = overlay.get(&class) {
+            return *v;
+        }
+        if let KernelClass::Decode(_, _) = class {
+            let dec: Vec<f64> = overlay.iter().filter(|(c, _)| matches!(c, KernelClass::Decode(_, _))).map(|(_, v)| *v).collect();
+            if !dec.is_empty() {
+                return dec.iter().sum::<f64>() / dec.len() as f64;
+            }
+            if let Some(v) = overlay.get(&KernelClass::MatBytes) {
+                return *v;
+            }
+        }
+        self.coeff(class)
+    }
+
+    /// Modeled seconds of one task at batch width `nrhs` on pool `pool`.
+    pub fn pool_cost(&self, pool: usize, feats: &TaskFeats, nrhs: usize) -> f64 {
+        feats
+            .terms()
+            .iter()
+            .map(|&(c, a)| self.pool_coeff(pool, c) * a * if c.scales_with_rhs() { nrhs as f64 } else { 1.0 })
+            .sum()
+    }
+
+    /// Serialize to the versioned profile document. Per-pool overlays and
+    /// the topology fingerprint are written only when present; the added
+    /// top-level keys are ignored by pre-NUMA readers (unknown top-level
+    /// keys always were), so the version stays [`PROFILE_VERSION`].
     pub fn to_json(&self) -> Json {
-        let coeffs = Json::Obj(self.coeffs.iter().map(|(c, v)| (c.key(), Json::Num(*v))).collect());
-        Json::obj(vec![("version", Json::Num(PROFILE_VERSION as f64)), ("kind", "hmatc cost profile".into()), ("coeffs", coeffs)])
+        let coeff_obj = |m: &BTreeMap<KernelClass, f64>| Json::Obj(m.iter().map(|(c, v)| (c.key(), Json::Num(*v))).collect());
+        let mut fields = vec![
+            ("version", Json::Num(PROFILE_VERSION as f64)),
+            ("kind", "hmatc cost profile".into()),
+            ("coeffs", coeff_obj(&self.coeffs)),
+        ];
+        if self.has_pool_coeffs() {
+            fields.push(("pools", Json::Arr(self.pools.iter().map(coeff_obj).collect())));
+        }
+        if let Some(t) = self.topology {
+            fields.push((
+                "topology",
+                Json::obj(vec![
+                    ("nodes", Json::Num(t.nodes as f64)),
+                    ("cores_per_node", Json::Num(t.cores_per_node as f64)),
+                    ("pinned", Json::Bool(t.pinned)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Parse and validate a profile document. Rejects (with errors, not
     /// panics): version mismatches, unknown kernel-class keys, and NaN /
-    /// infinite / negative coefficients.
+    /// infinite / negative coefficients — in the global set and in every
+    /// per-pool overlay.
     pub fn from_json(doc: &Json) -> Result<CostProfile, String> {
         let version = doc.get("version").and_then(Json::as_f64).ok_or("missing numeric 'version' field")?;
         if version != PROFILE_VERSION as f64 {
@@ -403,19 +519,38 @@ impl CostProfile {
             }
         }
         let coeffs = match doc.get("coeffs") {
-            Some(Json::Obj(m)) => m,
-            _ => return Err("missing 'coeffs' object".to_string()),
+            Some(obj) => parse_coeff_map(obj, "'coeffs'")?,
+            None => return Err("missing 'coeffs' object".to_string()),
         };
-        let mut out = BTreeMap::new();
-        for (k, v) in coeffs {
-            let class = KernelClass::parse(k)?;
-            let val = v.as_f64().ok_or_else(|| format!("coefficient '{k}' is not a number"))?;
-            if !val.is_finite() || val < 0.0 {
-                return Err(format!("coefficient '{k}' = {val} is not finite and non-negative"));
+        let pools = match doc.get("pools") {
+            None => Vec::new(),
+            Some(Json::Arr(arr)) => {
+                let mut out = Vec::with_capacity(arr.len());
+                for (i, entry) in arr.iter().enumerate() {
+                    out.push(parse_coeff_map(entry, &format!("'pools[{i}]'"))?);
+                }
+                out
             }
-            out.insert(class, val);
-        }
-        Ok(CostProfile { coeffs: out, source: CostSource::Online })
+            Some(_) => return Err("'pools' is not an array".to_string()),
+        };
+        let topology = match doc.get("topology") {
+            None => None,
+            Some(t) => {
+                let dim = |key: &str| {
+                    t.get(key)
+                        .and_then(Json::as_f64)
+                        .filter(|v| v.is_finite() && *v >= 0.0 && *v <= 1e9)
+                        .map(|v| v as usize)
+                        .ok_or_else(|| format!("'topology.{key}' is not a non-negative number"))
+                };
+                let pinned = match t.get("pinned") {
+                    Some(Json::Bool(b)) => *b,
+                    _ => return Err("'topology.pinned' is not a bool".to_string()),
+                };
+                Some(TopologyMeta { nodes: dim("nodes")?, cores_per_node: dim("cores_per_node")?, pinned })
+            }
+        };
+        Ok(CostProfile { coeffs, pools, topology, source: CostSource::Online })
     }
 
     /// Parse a profile from JSON text.
@@ -424,11 +559,30 @@ impl CostProfile {
     }
 
     /// Load (and validate) a profile file; the result's source is
-    /// `calibrated(<path>)`.
+    /// `calibrated(<path>)`. A profile with per-pool overlays calibrated on
+    /// a **different topology** (or with none recorded) keeps only its
+    /// global coefficients, with a warning — stale per-pool rates from
+    /// another box must never silently skew packing here.
     pub fn load(path: &str) -> Result<CostProfile, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read: {e}"))?;
         let mut p = CostProfile::parse(&text)?;
         p.source = CostSource::Calibrated(path.to_string());
+        if p.has_pool_coeffs() {
+            let here = TopologyMeta::current();
+            match p.topology {
+                Some(meta) if meta == here => {}
+                recorded => {
+                    let rec = recorded
+                        .map(|m| format!("{} node(s) × {} cpus, pinned={}", m.nodes, m.cores_per_node, m.pinned))
+                        .unwrap_or_else(|| "no topology recorded".to_string());
+                    eprintln!(
+                        "cost profile {path}: per-pool coefficients do not match this machine ({rec}; here: {} node(s) × {} cpus, pinned={}); applying the global fit only",
+                        here.nodes, here.cores_per_node, here.pinned
+                    );
+                    p.pools.clear();
+                }
+            }
+        }
         Ok(p)
     }
 
@@ -436,6 +590,24 @@ impl CostProfile {
     pub fn save(&self, path: &str) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().to_string())
     }
+}
+
+/// Parse one JSON object of `kernel-class key → coefficient`, validating
+/// keys and values exactly like the global coefficient set always was.
+fn parse_coeff_map(obj: &Json, what: &str) -> Result<BTreeMap<KernelClass, f64>, String> {
+    let Json::Obj(m) = obj else {
+        return Err(format!("{what} is not an object"));
+    };
+    let mut out = BTreeMap::new();
+    for (k, v) in m {
+        let class = KernelClass::parse(k)?;
+        let val = v.as_f64().ok_or_else(|| format!("coefficient '{k}' in {what} is not a number"))?;
+        if !val.is_finite() || val < 0.0 {
+            return Err(format!("coefficient '{k}' = {val} in {what} is not finite and non-negative"));
+        }
+        out.insert(class, val);
+    }
+    Ok(out)
 }
 
 /// The one shared usability rule for a set of cost values (profile
@@ -554,12 +726,15 @@ pub fn sink_makespan(levels: &[Vec<Shard>], base: usize, sink: &TimingSink) -> f
 // Fitting
 // ---------------------------------------------------------------------------
 
-/// One calibration sample: a task's features, the batch width it ran at and
-/// the measured wall seconds.
+/// One calibration sample: a task's features, the batch width it ran at, the
+/// executing sub-pool and the measured wall seconds.
 #[derive(Clone, Debug)]
 pub struct Sample {
     pub feats: TaskFeats,
     pub nrhs: usize,
+    /// Sub-pool of the executor that ran the chunk (0 on single-pool
+    /// backends). Feeds the per-pool overlay fits of [`fit_pools`].
+    pub pool: usize,
     pub secs: f64,
 }
 
@@ -609,7 +784,41 @@ pub fn fit(samples: &[Sample]) -> Result<CostProfile, String> {
     }
     let x = solve_dense(&mut ata, &mut atb, k).ok_or("singular normal equations")?;
     let coeffs: BTreeMap<KernelClass, f64> = classes.iter().zip(&x).map(|(&c, &v)| (c, v.max(0.0))).collect();
-    Ok(CostProfile { coeffs, source: CostSource::Online })
+    Ok(CostProfile { coeffs, source: CostSource::Online, ..Default::default() })
+}
+
+/// Minimum samples a sub-pool must contribute before it earns its own
+/// overlay fit; below the floor the pool uses the pooled global coefficients
+/// (a handful of timings cannot distinguish a slow socket from noise).
+pub const POOL_SAMPLE_FLOOR: usize = 64;
+
+/// Fit the pooled global profile plus one overlay coefficient set per
+/// sub-pool. A pool with fewer than [`POOL_SAMPLE_FLOOR`] samples — or whose
+/// own fit is degenerate/unusable — falls back to the global coefficients
+/// (an empty overlay map). Errors only when the *global* fit does: per-pool
+/// fitting can degrade but never lose calibration entirely.
+pub fn fit_pools(samples: &[Sample], npools: usize) -> Result<CostProfile, String> {
+    let mut profile = fit(samples)?;
+    if npools <= 1 {
+        return Ok(profile);
+    }
+    let mut pools = Vec::with_capacity(npools);
+    let mut subset: Vec<Sample> = Vec::new();
+    for p in 0..npools {
+        subset.clear();
+        subset.extend(samples.iter().filter(|s| s.pool == p).cloned());
+        let overlay = if subset.len() >= POOL_SAMPLE_FLOOR {
+            match fit(&subset) {
+                Ok(fp) if fp.is_usable() => fp.coeffs,
+                _ => BTreeMap::new(),
+            }
+        } else {
+            BTreeMap::new()
+        };
+        pools.push(overlay);
+    }
+    profile.pools = pools;
+    Ok(profile)
 }
 
 /// Gauss-Jordan with partial pivoting on a dense k×k system (k is the number
@@ -703,6 +912,134 @@ pub fn rebalance_levels(old: &[Vec<Shard>], level_ids: &[Vec<usize>], costs: &[f
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Pool-aware re-balancing (NUMA)
+// ---------------------------------------------------------------------------
+
+/// The sub-pool that executes shard `shard` of an `nshards`-long level: the
+/// inverse of the contiguous [`part_range`] shard→pool affinity of the
+/// `sharded:K` backend. Single-pool backends map everything to pool 0.
+pub fn pool_of_shard(shard: usize, nshards: usize, npools: usize) -> usize {
+    let k = npools.max(1);
+    let n = nshards.max(1);
+    let s = shard.min(n - 1);
+    let mut p = (s * k) / n;
+    while p + 1 < k && part_range(n, k, p).end <= s {
+        p += 1;
+    }
+    while p > 0 && part_range(n, k, p).start > s {
+        p -= 1;
+    }
+    p
+}
+
+/// Modeled makespan of one level under per-pool task costs: shard `i` is
+/// priced by the pool [`pool_of_shard`] assigns it under the level's
+/// **actual** shard count (an incumbent packing may be shorter than the
+/// requested bin count, and the runtime mapping is positional).
+pub fn level_makespan_pools(level: &[Shard], costs_pp: &[Vec<f64>]) -> f64 {
+    if costs_pp.is_empty() {
+        return 0.0;
+    }
+    let n = level.len();
+    level
+        .iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            let c = &costs_pp[pool_of_shard(i, n, costs_pp.len())];
+            sh.tasks.iter().map(|&t| c[t]).sum::<f64>()
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Modeled makespan of a level-ordered packing under per-pool task costs.
+pub fn makespan_pools(levels: &[Vec<Shard>], costs_pp: &[Vec<f64>]) -> f64 {
+    levels.iter().map(|lv| level_makespan_pools(lv, costs_pp)).sum()
+}
+
+/// Pool-aware LPT for one level. Bin `b` of the packed level runs on pool
+/// [`pool_of_shard`]`(b, k, npools)` (`k` = packed length), so each task's
+/// insertion is priced under the coefficients of the bin's own pool: a
+/// slower pool's bins fill up (in modeled seconds) sooner and end up with
+/// proportionally fewer bytes. Tasks are ordered by pool-averaged cost
+/// (heaviest first, ties by position) and appended to the bin with the
+/// smallest completion time after insertion (ties: fewer tasks, lower bin).
+/// All `min(nshards, ids.len())` bins are kept, **including empty ones** —
+/// the runtime pool mapping is positional, so bins must not be dropped (an
+/// empty bin on a slow pool is the balancer working, not an artifact).
+pub fn balance_level_pools(ids: &[usize], costs_pp: &[Vec<f64>], scratch: &[usize], nshards: usize) -> Vec<Shard> {
+    let n = ids.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if costs_pp.is_empty() {
+        return balance_level(ids, &vec![1.0; scratch.len()], scratch, nshards);
+    }
+    let npools = costs_pp.len();
+    let k = nshards.max(1).min(n);
+    let bin_pool: Vec<usize> = (0..k).map(|b| pool_of_shard(b, k, npools)).collect();
+    let avg: Vec<f64> = ids.iter().map(|&g| costs_pp.iter().map(|c| c[g]).sum::<f64>() / npools as f64).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| avg[b].partial_cmp(&avg[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b)));
+    let mut shards: Vec<Shard> = (0..k).map(|_| Shard::default()).collect();
+    for li in order {
+        let g = ids[li];
+        let mut best = 0usize;
+        let mut best_key = (f64::INFINITY, usize::MAX);
+        for (b, sh) in shards.iter().enumerate() {
+            let key = (sh.cost + costs_pp[bin_pool[b]][g], sh.tasks.len());
+            if key < best_key {
+                best_key = key;
+                best = b;
+            }
+        }
+        let sh = &mut shards[best];
+        sh.tasks.push(g);
+        sh.cost += costs_pp[bin_pool[best]][g];
+        sh.scratch = sh.scratch.max(scratch[g]);
+    }
+    shards
+}
+
+/// Per-pool variant of [`rebalance_levels`]: packs every level with
+/// [`balance_level_pools`] and keeps, per level, whichever packing —
+/// incumbent or candidate — models the smaller makespan under the per-pool
+/// costs (each packing priced under its own length's pool mapping), so the
+/// never-worse guarantee carries over. Kept incumbents get their
+/// cost/scratch bookkeeping refreshed under their own mapping. Degenerate
+/// inputs (no pools, or any pool's cost vector unusable) leave the
+/// incumbent untouched.
+pub fn rebalance_levels_pools(
+    old: &[Vec<Shard>],
+    level_ids: &[Vec<usize>],
+    costs_pp: &[Vec<f64>],
+    scratch: &[usize],
+    nshards: usize,
+) -> Vec<Vec<Shard>> {
+    debug_assert_eq!(old.len(), level_ids.len());
+    if costs_pp.is_empty() || costs_pp.iter().any(|c| !usable_costs(c)) {
+        return old.to_vec();
+    }
+    old.iter()
+        .zip(level_ids)
+        .map(|(incumbent, ids)| {
+            let candidate = balance_level_pools(ids, costs_pp, scratch, nshards);
+            if level_makespan_pools(&candidate, costs_pp) <= level_makespan_pools(incumbent, costs_pp) {
+                candidate
+            } else {
+                let n = incumbent.len();
+                let mut kept = incumbent.clone();
+                for (i, sh) in kept.iter_mut().enumerate() {
+                    let c = &costs_pp[pool_of_shard(i, n, costs_pp.len())];
+                    sh.cost = sh.tasks.iter().map(|&t| c[t]).sum();
+                    sh.scratch = sh.tasks.iter().map(|&t| scratch[t]).max().unwrap_or(0);
+                }
+                kept
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -765,7 +1102,7 @@ mod tests {
             f.add(KernelClass::PanelVec, vecb);
             for nrhs in [1usize, 4] {
                 let secs = c_dec * dec + (c_flop * flops + c_vec * vecb) * nrhs as f64;
-                samples.push(Sample { feats: f.clone(), nrhs, secs });
+                samples.push(Sample { feats: f.clone(), nrhs, pool: 0, secs });
             }
         }
         let p = fit(&samples).unwrap();
@@ -864,5 +1201,165 @@ mod tests {
         assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{\"dense_flop\":-1.0}}").is_err());
         // wrong kind
         assert!(CostProfile::parse("{\"version\":1,\"kind\":\"something else\",\"coeffs\":{}}").is_err());
+        // hostile per-pool overlays / topology metadata
+        assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{},\"pools\":{}}").is_err());
+        assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{},\"pools\":[{\"warp_speed\":1.0}]}").is_err());
+        assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{},\"pools\":[{\"dense_flop\":-2.0}]}").is_err());
+        assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{},\"topology\":{\"nodes\":1,\"cores_per_node\":4}}").is_err());
+        assert!(CostProfile::parse("{\"version\":1,\"coeffs\":{},\"topology\":{\"nodes\":-1,\"cores_per_node\":4,\"pinned\":true}}").is_err());
+    }
+
+    #[test]
+    fn pool_of_shard_inverts_part_range() {
+        for n in 1..40usize {
+            for k in 1..8usize {
+                for p in 0..k {
+                    for s in part_range(n, k, p) {
+                        assert_eq!(pool_of_shard(s, n, k), p, "s={s} n={n} k={k}");
+                    }
+                }
+            }
+        }
+        assert_eq!(pool_of_shard(0, 1, 1), 0);
+        assert_eq!(pool_of_shard(5, 3, 2), pool_of_shard(2, 3, 2)); // clamped
+    }
+
+    #[test]
+    fn fit_pools_respects_sample_floor() {
+        // pool 0: plenty of samples at a slow rate; pool 1: too few samples
+        let mut samples = Vec::new();
+        let mut rng = Rng::new(99);
+        for i in 0..(POOL_SAMPLE_FLOOR * 2) {
+            let mut f = TaskFeats::default();
+            let bytes = (rng.uniform() * 5000.0).floor() + 1.0;
+            f.add(KernelClass::MatBytes, bytes);
+            // pool 0 streams at half the speed of pool 1
+            let (pool, rate) = if i < POOL_SAMPLE_FLOOR { (0, 2e-9) } else if i < POOL_SAMPLE_FLOOR + 8 { (1, 1e-9) } else { (0, 2e-9) };
+            samples.push(Sample { feats: f, nrhs: 1, pool, secs: bytes * rate });
+        }
+        let p = fit_pools(&samples, 2).unwrap();
+        assert!(p.has_pool_coeffs());
+        assert_eq!(p.pools().len(), 2);
+        assert!(!p.pools()[0].is_empty(), "pool 0 is above the floor");
+        assert!(p.pools()[1].is_empty(), "pool 1 is below the floor and must fall back");
+        assert_eq!(p.pool_source_labels(), vec!["per-pool", "global"]);
+        // pool 0's overlay rate ≈ 2e-9; pool 1 falls back to the global fit
+        let c0 = p.pool_coeff(0, KernelClass::MatBytes);
+        assert!((c0 - 2e-9).abs() / 2e-9 < 1e-2, "{c0}");
+        assert_eq!(p.pool_coeff(1, KernelClass::MatBytes), p.coeff(KernelClass::MatBytes));
+        // out-of-range pool ids behave like the global fit
+        assert_eq!(p.pool_coeff(7, KernelClass::MatBytes), p.coeff(KernelClass::MatBytes));
+    }
+
+    #[test]
+    fn fit_pools_single_pool_matches_global_fit() {
+        let mut f = TaskFeats::default();
+        f.add(KernelClass::MatBytes, 100.0);
+        let samples: Vec<Sample> = (0..4).map(|_| Sample { feats: f.clone(), nrhs: 1, pool: 0, secs: 1e-7 }).collect();
+        let p = fit_pools(&samples, 1).unwrap();
+        assert!(!p.has_pool_coeffs());
+        assert!(p.pools().is_empty());
+    }
+
+    #[test]
+    fn profile_json_round_trips_pools_and_topology() {
+        let overlay0: BTreeMap<KernelClass, f64> = [(KernelClass::MatBytes, 2e-9), (KernelClass::DenseFlop, 5e-11)].into_iter().collect();
+        let mut p = CostProfile::from_coeffs(&[(KernelClass::MatBytes, 1e-9), (KernelClass::DenseFlop, 4e-11)])
+            .with_pools(vec![overlay0, BTreeMap::new()]);
+        p.topology = Some(TopologyMeta { nodes: 2, cores_per_node: 8, pinned: true });
+        let text = p.to_json().to_string();
+        let q = CostProfile::parse(&text).unwrap();
+        assert_eq!(q.to_json().to_string(), text);
+        assert!(q.has_pool_coeffs());
+        assert_eq!(q.pools().len(), 2);
+        assert_eq!(q.topology, Some(TopologyMeta { nodes: 2, cores_per_node: 8, pinned: true }));
+        assert_eq!(q.pool_coeff(0, KernelClass::MatBytes), 2e-9);
+        assert_eq!(q.pool_coeff(1, KernelClass::MatBytes), 1e-9);
+        // overlay's unknown decode width: falls back to overlay MatBytes, not global
+        assert_eq!(q.pool_coeff(0, KernelClass::Decode(CodecFamily::Aflp, 4)), 2e-9);
+        // a pre-NUMA document (no pools/topology) still parses
+        let old = CostProfile::parse("{\"version\":1,\"coeffs\":{\"mat_bytes\":1e-9}}").unwrap();
+        assert!(!old.has_pool_coeffs());
+        assert_eq!(old.topology, None);
+    }
+
+    #[test]
+    fn load_drops_pools_on_topology_mismatch() {
+        let overlay: BTreeMap<KernelClass, f64> = [(KernelClass::MatBytes, 2e-9)].into_iter().collect();
+        let mut p = CostProfile::from_coeffs(&[(KernelClass::MatBytes, 1e-9)]).with_pools(vec![overlay]);
+        // a shape no real test box has, so it always mismatches here
+        p.topology = Some(TopologyMeta { nodes: 7, cores_per_node: 3, pinned: true });
+        let path = std::env::temp_dir().join(format!("hmatc-prof-{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        p.save(&path).unwrap();
+        let loaded = CostProfile::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(!loaded.has_pool_coeffs(), "mismatched per-pool overlays must be dropped");
+        assert!(loaded.is_usable(), "the global fit survives");
+        assert_eq!(loaded.pool_coeff(0, KernelClass::MatBytes), 1e-9);
+    }
+
+    #[test]
+    fn balance_level_pools_starves_the_slow_pool() {
+        // 2 pools, 4 bins (bins 0-1 → pool 0, bins 2-3 → pool 1); pool 1 is
+        // 4x slower, so it must receive well under half the bytes
+        let n = 64usize;
+        let ids: Vec<usize> = (0..n).collect();
+        let fast: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+        let slow: Vec<f64> = fast.iter().map(|c| c * 4.0).collect();
+        let scratch = vec![0usize; n];
+        let costs_pp = vec![fast.clone(), slow];
+        let shards = balance_level_pools(&ids, &costs_pp, &scratch, 4);
+        assert_eq!(shards.len(), 4);
+        // every task exactly once
+        let mut seen = vec![false; n];
+        for s in &shards {
+            for &t in &s.tasks {
+                assert!(!seen[t]);
+                seen[t] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        let fast_work: f64 = shards[..2].iter().flat_map(|s| &s.tasks).map(|&t| fast[t]).sum();
+        let slow_work: f64 = shards[2..].iter().flat_map(|s| &s.tasks).map(|&t| fast[t]).sum();
+        assert!(slow_work < fast_work / 2.0, "slow pool got {slow_work} of {} total", fast_work + slow_work);
+    }
+
+    #[test]
+    fn rebalance_levels_pools_never_increases_makespan() {
+        let mut rng = Rng::new(17);
+        for trial in 0..10 {
+            let n = 24 + trial * 9;
+            let static_costs: Vec<f64> = (0..n).map(|_| 1.0 + rng.uniform()).collect();
+            let scratch = vec![0usize; n];
+            let ids: Vec<usize> = (0..n).collect();
+            let (a, b) = ids.split_at(n / 2);
+            let level_ids = vec![a.to_vec(), b.to_vec()];
+            let old: Vec<Vec<Shard>> = level_ids.iter().map(|ids| balance_level(ids, &static_costs, &scratch, 6)).collect();
+            let costs_pp: Vec<Vec<f64>> = (0..3)
+                .map(|_| {
+                    let scale = 10f64.powf(rng.range(-1.0, 1.0));
+                    static_costs.iter().map(|c| c * scale * (1.0 + rng.uniform())).collect()
+                })
+                .collect();
+            let new = rebalance_levels_pools(&old, &level_ids, &costs_pp, &scratch, 6);
+            assert!(
+                makespan_pools(&new, &costs_pp) <= makespan_pools(&old, &costs_pp) + 1e-12,
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn rebalance_levels_pools_keeps_incumbent_on_degenerate_costs() {
+        let ids = vec![vec![0usize, 1, 2]];
+        let costs = vec![1.0, 2.0, 3.0];
+        let scratch = vec![0usize; 3];
+        let old = vec![balance_level(&ids[0], &costs, &scratch, 2)];
+        // one poisoned pool vector disables the whole per-pool rebalance
+        let poisoned = vec![costs.clone(), vec![f64::NAN; 3]];
+        let kept = rebalance_levels_pools(&old, &ids, &poisoned, &scratch, 2);
+        assert_eq!(kept[0].len(), old[0].len());
+        assert!(rebalance_levels_pools(&old, &ids, &[], &scratch, 2).len() == old.len());
     }
 }

@@ -68,6 +68,11 @@ pub struct PlanStats {
     /// last in-process calibration (the packing that was live during the
     /// timed rounds); 0.0 if never calibrated in process.
     pub measured_makespan: f64,
+    /// Per-executor-sub-pool coefficient source of the active profile
+    /// (`"per-pool"` where a NUMA overlay fit is applied, `"global"` where
+    /// the pooled fit fills in); empty on single-pool backends or while no
+    /// profile is active.
+    pub pool_cost_sources: Vec<&'static str>,
 }
 
 /// Atomically swappable shard packing: a re-balance publishes a new
@@ -118,6 +123,83 @@ fn model_costs(feats: &[TaskFeats], fixed: &[f64], per_rhs: &[f64], profile: Opt
         }
     }
     fixed.iter().zip(per_rhs).map(|(f, v)| f + nrhs as f64 * v).collect()
+}
+
+/// Per-task packing costs: one global vector, or one vector per executor
+/// sub-pool when the backend has several pools (`sharded:K` on a multi-node
+/// machine) AND the active profile carries usable per-pool coefficients.
+/// Pool-aware packing prices each bin under the coefficients of the sub-pool
+/// that will run it ([`costmodel::pool_of_shard`]), so a slower socket is
+/// handed proportionally fewer bytes. Either variant only changes the
+/// task→shard partition, never task bodies, so outputs stay bitwise
+/// identical.
+enum LevelCosts {
+    Global(Vec<f64>),
+    PerPool(Vec<Vec<f64>>),
+}
+
+impl LevelCosts {
+    fn compute(feats: &[TaskFeats], fixed: &[f64], per_rhs: &[f64], profile: Option<&CostProfile>, nrhs: usize, npools: usize) -> LevelCosts {
+        if let Some(p) = profile {
+            if npools > 1 && p.has_pool_coeffs() {
+                let per: Vec<Vec<f64>> = (0..npools).map(|pool| feats.iter().map(|ft| p.pool_cost(pool, ft, nrhs)).collect()).collect();
+                if per.iter().all(|c| costmodel::usable_costs(c)) {
+                    return LevelCosts::PerPool(per);
+                }
+            }
+        }
+        LevelCosts::Global(model_costs(feats, fixed, per_rhs, profile, nrhs))
+    }
+
+    /// LPT-pack one level (`scratch` indexed by global task id, like
+    /// [`balance_level`]).
+    fn balance_level(&self, ids: &[usize], scratch: &[usize], nshards: usize) -> Vec<Shard> {
+        match self {
+            LevelCosts::Global(c) => balance_level(ids, c, scratch, nshards),
+            LevelCosts::PerPool(pp) => costmodel::balance_level_pools(ids, pp, scratch, nshards),
+        }
+    }
+
+    /// Pack every level for batch width `nrhs` (shard scratch = per-RHS
+    /// panel scratch · nrhs, as in [`balance_levels_for`]).
+    fn balance_levels_for(&self, level_ids: &[Vec<usize>], pscratch: &[usize], nrhs: usize, nshards: usize) -> Vec<Vec<Shard>> {
+        let scratch: Vec<usize> = pscratch.iter().map(|s| s * nrhs).collect();
+        level_ids.iter().map(|ids| self.balance_level(ids, &scratch, nshards)).collect()
+    }
+
+    /// Never-worse re-partition of `old` (see [`costmodel::rebalance_levels`]
+    /// / [`costmodel::rebalance_levels_pools`]).
+    fn rebalance(&self, old: &[Vec<Shard>], level_ids: &[Vec<usize>], scratch: &[usize], nshards: usize) -> Vec<Vec<Shard>> {
+        match self {
+            LevelCosts::Global(c) => costmodel::rebalance_levels(old, level_ids, c, scratch, nshards),
+            LevelCosts::PerPool(pp) => costmodel::rebalance_levels_pools(old, level_ids, pp, scratch, nshards),
+        }
+    }
+
+    /// Modeled makespan of a level-ordered packing under these costs.
+    fn makespan(&self, levels: &[Vec<Shard>]) -> f64 {
+        match self {
+            LevelCosts::Global(c) => costmodel::makespan(levels, c),
+            LevelCosts::PerPool(pp) => costmodel::makespan_pools(levels, pp),
+        }
+    }
+}
+
+/// Overlay `map[task] = pool` for every task of `levels`: shard position
+/// within its level maps onto the executor's sub-pools exactly the way the
+/// `sharded:K` runtime assigns shards ([`costmodel::pool_of_shard`]). Used
+/// to tag timing samples with the pool that ran them.
+fn fill_pool_tags(levels: &[Vec<Shard>], npools: usize, map: &mut [usize]) {
+    for level in levels {
+        for (si, sh) in level.iter().enumerate() {
+            let p = costmodel::pool_of_shard(si, level.len(), npools);
+            for &t in &sh.tasks {
+                if let Some(slot) = map.get_mut(t) {
+                    *slot = p;
+                }
+            }
+        }
+    }
 }
 
 /// Run one level, optionally timing each chunk into `rec = (sink, slot
@@ -212,13 +294,6 @@ impl<T> MultiCache<T> {
     }
 }
 
-/// Balance every level's tasks for batch width `nrhs` with precomputed
-/// per-task `costs`; shard scratch = per-RHS panel scratch · nrhs.
-fn balance_levels_for(level_ids: &[Vec<usize>], costs: &[f64], pscratch: &[usize], nrhs: usize, nshards: usize) -> Vec<Vec<Shard>> {
-    let scratch: Vec<usize> = pscratch.iter().map(|s| s * nrhs).collect();
-    level_ids.iter().map(|ids| balance_level(ids, costs, &scratch, nshards)).collect()
-}
-
 /// Gather rows `rows` of every column of `x` into the contiguous column-major
 /// panel `xp` (rows.len() × x.ncols()).
 fn gather_panel(x: &DMatrix, rows: &Range<usize>, xp: &mut [f64]) {
@@ -280,6 +355,9 @@ struct HSchedule {
     /// Shard/chunk bin count the packings were built for (from the
     /// executor; reused for the cached per-width packings).
     nshards: usize,
+    /// Executor sub-pool count ([`Executor::pool_count`]); > 1 only for
+    /// `sharded:K`, where it enables pool-aware packing and sample tagging.
+    npools: usize,
     /// High-water shard count over every packing published so far (arena
     /// buffer sizing only grows).
     max_shards: AtomicUsize,
@@ -367,6 +445,7 @@ impl HSchedule {
             profile: RwLock::new(None),
             profile_gen: AtomicU64::new(0),
             nshards,
+            npools: exec.pool_count(),
             max_shards: AtomicUsize::new(max_shards),
             scratch,
             prefetch: pb.finish(),
@@ -379,10 +458,10 @@ impl HSchedule {
     /// costs. Returns the modeled makespan (seconds) of the active packing
     /// at b = 1.
     fn rebalance(&self, profile: &Arc<CostProfile>) -> f64 {
-        let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(profile.as_ref()), 1);
+        let costs = LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, Some(profile.as_ref()), 1, self.npools);
         let old = self.levels.load();
-        let new = costmodel::rebalance_levels(&old, &self.level_ids, &costs, &self.scratch1, self.nshards);
-        let ms = costmodel::makespan(&new, &costs);
+        let new = costs.rebalance(&old, &self.level_ids, &self.scratch1, self.nshards);
+        let ms = costs.makespan(&new);
         let (mx, _) = max_shard_stats(&new);
         self.max_shards.fetch_max(mx, Ordering::Relaxed);
         self.levels.store(new);
@@ -391,12 +470,35 @@ impl HSchedule {
         ms
     }
 
+    /// The cached width-`nrhs` panel packing (built on first use under the
+    /// current cost-model generation) — the single source of the per-width
+    /// packing for execution, observation and pool tagging.
+    fn multi_packing(&self, nrhs: usize) -> Arc<Vec<Vec<Shard>>> {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        self.multi.get(gen, nrhs, || {
+            LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs, self.npools)
+                .balance_levels_for(&self.level_ids, &self.pscratch, nrhs, self.nshards)
+        })
+    }
+
     /// Turn accumulated per-task times into fit samples (secs averaged over
-    /// `rounds` timed products at batch width `nrhs`).
-    fn push_samples(&self, sink: &TimingSink, nrhs: usize, rounds: usize, out: &mut Vec<Sample>) {
+    /// `rounds` timed products at batch width `nrhs`), each tagged with the
+    /// executor sub-pool that ran it — `multi` selects the packing the timed
+    /// run actually used (the swappable single-RHS packing, or the cached
+    /// width-`nrhs` panel packing).
+    fn push_samples(&self, sink: &TimingSink, nrhs: usize, rounds: usize, multi: bool, out: &mut Vec<Sample>) {
         let inv = 1.0 / rounds.max(1) as f64;
+        let mut tags = vec![0usize; self.tasks.len()];
+        if self.npools > 1 {
+            if multi {
+                fill_pool_tags(&self.multi_packing(nrhs), self.npools, &mut tags);
+            } else {
+                fill_pool_tags(&self.levels.load(), self.npools, &mut tags);
+            }
+        }
         for (ti, ft) in self.feats.iter().enumerate() {
-            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(ti) * inv });
+            out.push(Sample { feats: ft.clone(), nrhs, pool: tags[ti], secs: sink.secs(ti) * inv });
         }
     }
 
@@ -407,17 +509,10 @@ impl HSchedule {
     /// calibrator's hysteresis absorbs it. `predicted` is 0.0 until a
     /// profile is active (static costs are byte units, not seconds).
     fn observe_multi(&self, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
-        let gen = self.profile_gen.load(Ordering::Acquire);
+        let levels = self.multi_packing(nrhs);
         let prof = self.profile.read().unwrap().clone();
-        let levels = self.multi.get(gen, nrhs, || {
-            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
-            balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards)
-        });
         let predicted = match prof.as_deref() {
-            Some(p) => {
-                let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs);
-                costmodel::makespan(&levels, &costs)
-            }
+            Some(p) => LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs, self.npools).makespan(&levels),
             None => 0.0,
         };
         (predicted, costmodel::sink_makespan(&levels, 0, sink))
@@ -474,15 +569,7 @@ impl HSchedule {
     /// data is streamed once and applied to all `b` columns.
     #[allow(clippy::too_many_arguments)]
     fn exec_multi(&self, m: &HMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        let nrhs = y.ncols();
-        // gen before profile: a packing is cached only under a generation
-        // at least as old as the profile it was built from
-        let gen = self.profile_gen.load(Ordering::Acquire);
-        let prof = self.profile.read().unwrap().clone();
-        let levels = self.multi.get(gen, nrhs, || {
-            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
-            balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards)
-        });
+        let levels = self.multi_packing(y.ncols());
         self.exec_multi_on(&levels, m, adjoint, alpha, x, y, arena, exec, rec, hot);
     }
 
@@ -545,16 +632,29 @@ pub(crate) struct HSlice {
     levels: Packing<Vec<Vec<Shard>>>,
     multi: MultiCache<Vec<Vec<Shard>>>,
     nshards: usize,
+    /// Sub-pool count of the SHARD's executor (not the parent plan's).
+    npools: usize,
 }
 
 impl HSchedule {
-    fn slice(&self, adjoint: bool, rows: &Range<usize>, nshards: usize) -> HSlice {
+    fn slice(&self, adjoint: bool, rows: &Range<usize>, nshards: usize, npools: usize) -> HSlice {
         let level_ids = filter_level_ids(&self.level_ids, |id| ranges_intersect(&self.tasks[id].dst, rows));
         let prof = self.profile.read().unwrap().clone();
-        let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), 1);
-        let levels: Vec<Vec<Shard>> =
-            level_ids.iter().map(|ids| balance_level(ids, &costs, &self.scratch1, nshards)).collect();
-        HSlice { adjoint, level_ids, levels: Packing::new(levels), multi: MultiCache::new(), nshards }
+        let costs = LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), 1, npools);
+        let levels: Vec<Vec<Shard>> = level_ids.iter().map(|ids| costs.balance_level(ids, &self.scratch1, nshards)).collect();
+        HSlice { adjoint, level_ids, levels: Packing::new(levels), multi: MultiCache::new(), nshards, npools }
+    }
+
+    /// The slice's cached width-`nrhs` packing, keyed by the PARENT's cost
+    /// generation (a rebalance invalidates the slice's cached per-width
+    /// packings exactly like the parent's own).
+    fn slice_multi_packing(&self, sl: &HSlice, nrhs: usize) -> Arc<Vec<Vec<Shard>>> {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        sl.multi.get(gen, nrhs, || {
+            LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs, sl.npools)
+                .balance_levels_for(&sl.level_ids, &self.pscratch, nrhs, sl.nshards)
+        })
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -566,41 +666,32 @@ impl HSchedule {
 
     #[allow(clippy::too_many_arguments)]
     fn exec_multi_slice(&self, sl: &HSlice, m: &HMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        let nrhs = y.ncols();
-        // keyed by the PARENT's cost generation: a rebalance invalidates the
-        // slice's cached per-width packings exactly like the parent's own
-        let gen = self.profile_gen.load(Ordering::Acquire);
-        let prof = self.profile.read().unwrap().clone();
-        let levels = sl.multi.get(gen, nrhs, || {
-            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
-            balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards)
-        });
+        let levels = self.slice_multi_packing(sl, y.ncols());
         self.exec_multi_on(&levels, m, sl.adjoint, alpha, x, y, arena, exec, rec, hot);
     }
 
     /// Slice-restricted sample harvest: sink slots are parent task ids, so
-    /// only the slice's retained tasks carry times.
+    /// only the slice's retained tasks carry times. Samples are tagged with
+    /// the sub-pool of the SHARD's executor that ran them (slices only time
+    /// batched products, so the width-`nrhs` packing is the one that ran).
     fn push_samples_slice(&self, sl: &HSlice, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) {
+        let mut tags = vec![0usize; self.tasks.len()];
+        if sl.npools > 1 {
+            fill_pool_tags(&self.slice_multi_packing(sl, nrhs), sl.npools, &mut tags);
+        }
         for ids in &sl.level_ids {
             for &ti in ids {
-                out.push(Sample { feats: self.feats[ti].clone(), nrhs, secs: sink.secs(ti) });
+                out.push(Sample { feats: self.feats[ti].clone(), nrhs, pool: tags[ti], secs: sink.secs(ti) });
             }
         }
     }
 
     /// [`Self::observe_multi`] on a slice's own width-`nrhs` packing.
     fn observe_multi_slice(&self, sl: &HSlice, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
-        let gen = self.profile_gen.load(Ordering::Acquire);
+        let levels = self.slice_multi_packing(sl, nrhs);
         let prof = self.profile.read().unwrap().clone();
-        let levels = sl.multi.get(gen, nrhs, || {
-            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
-            balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards)
-        });
         let predicted = match prof.as_deref() {
-            Some(p) => {
-                let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs);
-                costmodel::makespan(&levels, &costs)
-            }
+            Some(p) => LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs, sl.npools).makespan(&levels),
             None => 0.0,
         };
         (predicted, costmodel::sink_makespan(&levels, 0, sink))
@@ -739,12 +830,12 @@ impl HPlan {
 
     /// Row-restricted slice of one schedule half for a shard owning output
     /// rows `rows` (forward) / output cols (adjoint), packed for a
-    /// `nshards`-wide executor.
-    pub(crate) fn slice(&self, m: &HMatrix, adjoint: bool, rows: &Range<usize>, nshards: usize) -> HSlice {
+    /// `nshards`-wide, `npools`-pool executor.
+    pub(crate) fn slice(&self, m: &HMatrix, adjoint: bool, rows: &Range<usize>, nshards: usize, npools: usize) -> HSlice {
         if adjoint {
-            self.adj(m).slice(true, rows, nshards)
+            self.adj(m).slice(true, rows, nshards, npools)
         } else {
-            self.fwd(m).slice(false, rows, nshards)
+            self.fwd(m).slice(false, rows, nshards, npools)
         }
     }
 
@@ -825,7 +916,7 @@ impl HPlan {
             sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink), None);
         }
         let mut samples = Vec::new();
-        sched.push_samples(&sink, 1, rounds, &mut samples);
+        sched.push_samples(&sink, 1, rounds, false, &mut samples);
         let measured = costmodel::sink_makespan(&sched.levels.load(), 0, &sink) / rounds as f64;
         let xm = DMatrix::random(self.ncols, CALIB_RHS, &mut rng);
         let mut ym = DMatrix::zeros(self.nrows, CALIB_RHS);
@@ -834,8 +925,8 @@ impl HPlan {
         for _ in 0..rounds {
             sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink), None);
         }
-        sched.push_samples(&sink, CALIB_RHS, rounds, &mut samples);
-        let profile = costmodel::fit(&samples).unwrap_or_default();
+        sched.push_samples(&sink, CALIB_RHS, rounds, true, &mut samples);
+        let profile = costmodel::fit_pools(&samples, sched.npools).unwrap_or_default();
         self.rebalance(&profile);
         self.calib.lock().unwrap().measured = measured;
         profile
@@ -864,7 +955,7 @@ impl HPlan {
     /// it ran on; predicted is 0.0 until a profile is active.
     pub fn observe_multi(&self, m: &HMatrix, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
         let sched = self.fwd(m);
-        sched.push_samples(sink, nrhs, 1, out);
+        sched.push_samples(sink, nrhs, 1, true, out);
         sched.observe_multi(sink, nrhs)
     }
 
@@ -885,6 +976,9 @@ impl HPlan {
         }
         if let Some(f) = self.fwd.get() {
             st.levels = f.level_ids.len();
+        }
+        if let Some(p) = self.profile.lock().unwrap().as_deref() {
+            st.pool_cost_sources = p.pool_source_labels();
         }
         let c = self.calib.lock().unwrap();
         st.cost_source = c.source.clone();
@@ -997,6 +1091,8 @@ struct UniSchedule {
     profile_gen: AtomicU64,
     /// Shard/chunk bin count the packings were built for.
     nshards: usize,
+    /// Executor sub-pool count (see [`HSchedule::npools`]).
+    npools: usize,
     s_len: usize,
     max_shards: AtomicUsize,
     scratch: usize,
@@ -1152,6 +1248,7 @@ impl UniSchedule {
             profile: RwLock::new(None),
             profile_gen: AtomicU64::new(0),
             nshards,
+            npools: exec.pool_count(),
             s_len,
             max_shards: AtomicUsize::new(max_shards),
             scratch,
@@ -1163,15 +1260,15 @@ impl UniSchedule {
     /// profile-modeled costs (never increasing the modeled makespan); drops
     /// the per-width packings. Returns the modeled makespan at b = 1.
     fn rebalance(&self, profile: &Arc<CostProfile>) -> f64 {
-        let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(profile.as_ref()), 1);
+        let fcosts = LevelCosts::compute(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(profile.as_ref()), 1, self.npools);
         let fscratch = vec![0usize; self.ftasks.len()];
         let fids: Vec<usize> = (0..self.ftasks.len()).collect();
         let old_f = self.fshards.load();
-        let new_f = costmodel::rebalance_levels(std::slice::from_ref(old_f.as_ref()), std::slice::from_ref(&fids), &fcosts, &fscratch, self.nshards).pop().unwrap_or_default();
-        let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(profile.as_ref()), 1);
+        let new_f = fcosts.rebalance(std::slice::from_ref(old_f.as_ref()), std::slice::from_ref(&fids), &fscratch, self.nshards).pop().unwrap_or_default();
+        let costs = LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, Some(profile.as_ref()), 1, self.npools);
         let old = self.levels.load();
-        let new = costmodel::rebalance_levels(&old, &self.level_ids, &costs, &self.scratch1, self.nshards);
-        let ms = costmodel::makespan(std::slice::from_ref(&new_f), &fcosts) + costmodel::makespan(&new, &costs);
+        let new = costs.rebalance(&old, &self.level_ids, &self.scratch1, self.nshards);
+        let ms = fcosts.makespan(std::slice::from_ref(&new_f)) + costs.makespan(&new);
         let (mx, _) = max_shard_stats(&new);
         self.max_shards.fetch_max(mx.max(new_f.len()), Ordering::Relaxed);
         self.fshards.store(new_f);
@@ -1181,37 +1278,58 @@ impl UniSchedule {
         ms
     }
 
-    /// Turn accumulated per-task times into fit samples; forward-transform
-    /// tasks occupy sink slots `0..ftasks.len()`, output tasks follow.
-    fn push_samples(&self, sink: &TimingSink, nrhs: usize, rounds: usize, out: &mut Vec<Sample>) {
+    /// The cached width-`nrhs` (forward shards, level shards) packing (see
+    /// [`HSchedule::multi_packing`]).
+    fn multi_packing(&self, nrhs: usize) -> Arc<(Vec<Shard>, Vec<Vec<Shard>>)> {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        self.multi.get(gen, nrhs, || {
+            let fcosts = LevelCosts::compute(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs, self.npools);
+            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
+            let fids: Vec<usize> = (0..self.ftasks.len()).collect();
+            let fsh = fcosts.balance_level(&fids, &fscratch, self.nshards);
+            let costs = LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs, self.npools);
+            let lv = costs.balance_levels_for(&self.level_ids, &self.pscratch, nrhs, self.nshards);
+            (fsh, lv)
+        })
+    }
+
+    /// Turn accumulated per-task times into fit samples (pool-tagged; see
+    /// [`HSchedule::push_samples`]); forward-transform tasks occupy sink
+    /// slots `0..ftasks.len()`, output tasks follow.
+    fn push_samples(&self, sink: &TimingSink, nrhs: usize, rounds: usize, multi: bool, out: &mut Vec<Sample>) {
         let inv = 1.0 / rounds.max(1) as f64;
+        let mut ftags = vec![0usize; self.ftasks.len()];
+        let mut otags = vec![0usize; self.tasks.len()];
+        if self.npools > 1 {
+            if multi {
+                let packed = self.multi_packing(nrhs);
+                fill_pool_tags(std::slice::from_ref(&packed.0), self.npools, &mut ftags);
+                fill_pool_tags(&packed.1, self.npools, &mut otags);
+            } else {
+                fill_pool_tags(std::slice::from_ref(self.fshards.load().as_ref()), self.npools, &mut ftags);
+                fill_pool_tags(&self.levels.load(), self.npools, &mut otags);
+            }
+        }
         for (ti, ft) in self.ffeats.iter().enumerate() {
-            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(ti) * inv });
+            out.push(Sample { feats: ft.clone(), nrhs, pool: ftags[ti], secs: sink.secs(ti) * inv });
         }
         let base = self.ftasks.len();
         for (ti, ft) in self.feats.iter().enumerate() {
-            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(base + ti) * inv });
+            out.push(Sample { feats: ft.clone(), nrhs, pool: otags[ti], secs: sink.secs(base + ti) * inv });
         }
     }
 
     /// See [`HSchedule::observe_multi`]; forward-transform shards at sink
     /// base 0, output levels at base `ftasks.len()`.
     fn observe_multi(&self, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
-        let gen = self.profile_gen.load(Ordering::Acquire);
+        let packed = self.multi_packing(nrhs);
         let prof = self.profile.read().unwrap().clone();
-        let packed = self.multi.get(gen, nrhs, || {
-            let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs);
-            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
-            let fsh = balance(&fcosts, &fscratch, self.nshards);
-            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
-            let lv = balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards);
-            (fsh, lv)
-        });
         let predicted = match prof.as_deref() {
             Some(p) => {
-                let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(p), nrhs);
-                let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs);
-                costmodel::makespan(std::slice::from_ref(&packed.0), &fcosts) + costmodel::makespan(&packed.1, &costs)
+                let fcosts = LevelCosts::compute(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(p), nrhs, self.npools);
+                let costs = LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs, self.npools);
+                fcosts.makespan(std::slice::from_ref(&packed.0)) + costs.makespan(&packed.1)
             }
             None => 0.0,
         };
@@ -1307,17 +1425,7 @@ impl UniSchedule {
     /// contiguous `rows×b` panel, all block/basis/coupling data streamed once.
     #[allow(clippy::too_many_arguments)]
     fn exec_multi(&self, m: &UniformHMatrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        let nrhs = y.ncols();
-        let gen = self.profile_gen.load(Ordering::Acquire);
-        let prof = self.profile.read().unwrap().clone();
-        let packed = self.multi.get(gen, nrhs, || {
-            let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs);
-            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
-            let fsh = balance(&fcosts, &fscratch, self.nshards);
-            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
-            let lv = balance_levels_for(&self.level_ids, &costs, &self.pscratch, nrhs, self.nshards);
-            (fsh, lv)
-        });
+        let packed = self.multi_packing(y.ncols());
         self.exec_multi_on(&packed.0, &packed.1, m, adjoint, alpha, x, y, arena, exec, rec, hot);
     }
 
@@ -1415,10 +1523,12 @@ pub(crate) struct UniSlice {
     levels: Packing<Vec<Vec<Shard>>>,
     multi: MultiCache<(Vec<Shard>, Vec<Vec<Shard>>)>,
     nshards: usize,
+    /// Sub-pool count of the SHARD's executor (not the parent plan's).
+    npools: usize,
 }
 
 impl UniSchedule {
-    fn slice(&self, adjoint: bool, rows: &Range<usize>, nshards: usize) -> UniSlice {
+    fn slice(&self, adjoint: bool, rows: &Range<usize>, nshards: usize, npools: usize) -> UniSlice {
         let level_ids = filter_level_ids(&self.level_ids, |id| ranges_intersect(&self.tasks[id].dst, rows));
         // forward closure: the slot offsets read by retained couplings
         // (zero-length refs read nothing and pin no forward task)
@@ -1434,13 +1544,27 @@ impl UniSchedule {
         }
         let fids: Vec<usize> = (0..self.ftasks.len()).filter(|&i| used.contains(&self.ftasks[i].off)).collect();
         let prof = self.profile.read().unwrap().clone();
-        let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), 1);
+        let fcosts = LevelCosts::compute(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), 1, npools);
         let fscratch = vec![0usize; self.ftasks.len()];
-        let fshards = balance_level(&fids, &fcosts, &fscratch, nshards);
-        let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), 1);
-        let levels: Vec<Vec<Shard>> =
-            level_ids.iter().map(|ids| balance_level(ids, &costs, &self.scratch1, nshards)).collect();
-        UniSlice { adjoint, fids, fshards: Packing::new(fshards), level_ids, levels: Packing::new(levels), multi: MultiCache::new(), nshards }
+        let fshards = fcosts.balance_level(&fids, &fscratch, nshards);
+        let costs = LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), 1, npools);
+        let levels: Vec<Vec<Shard>> = level_ids.iter().map(|ids| costs.balance_level(ids, &self.scratch1, nshards)).collect();
+        UniSlice { adjoint, fids, fshards: Packing::new(fshards), level_ids, levels: Packing::new(levels), multi: MultiCache::new(), nshards, npools }
+    }
+
+    /// The slice's cached width-`nrhs` packing (see
+    /// [`HSchedule::slice_multi_packing`]).
+    fn slice_multi_packing(&self, sl: &UniSlice, nrhs: usize) -> Arc<(Vec<Shard>, Vec<Vec<Shard>>)> {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        sl.multi.get(gen, nrhs, || {
+            let fcosts = LevelCosts::compute(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs, sl.npools);
+            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
+            let fsh = fcosts.balance_level(&sl.fids, &fscratch, sl.nshards);
+            let costs = LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs, sl.npools);
+            let lv = costs.balance_levels_for(&sl.level_ids, &self.pscratch, nrhs, sl.nshards);
+            (fsh, lv)
+        })
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -1453,51 +1577,41 @@ impl UniSchedule {
 
     #[allow(clippy::too_many_arguments)]
     fn exec_multi_slice(&self, sl: &UniSlice, m: &UniformHMatrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        let nrhs = y.ncols();
-        let gen = self.profile_gen.load(Ordering::Acquire);
-        let prof = self.profile.read().unwrap().clone();
-        let packed = sl.multi.get(gen, nrhs, || {
-            let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs);
-            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
-            let fsh = balance_level(&sl.fids, &fcosts, &fscratch, sl.nshards);
-            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
-            let lv = balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards);
-            (fsh, lv)
-        });
+        let packed = self.slice_multi_packing(sl, y.ncols());
         self.exec_multi_on(&packed.0, &packed.1, m, sl.adjoint, alpha, x, y, arena, exec, rec, hot);
     }
 
     /// Slice-restricted sample harvest (sink slots are parent task ids:
-    /// forward at 0.., output at base `ftasks.len()`).
+    /// forward at 0.., output at base `ftasks.len()`), pool-tagged under the
+    /// shard executor's sub-pools (see [`HSchedule::push_samples_slice`]).
     fn push_samples_slice(&self, sl: &UniSlice, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) {
+        let mut ftags = vec![0usize; self.ftasks.len()];
+        let mut otags = vec![0usize; self.tasks.len()];
+        if sl.npools > 1 {
+            let packed = self.slice_multi_packing(sl, nrhs);
+            fill_pool_tags(std::slice::from_ref(&packed.0), sl.npools, &mut ftags);
+            fill_pool_tags(&packed.1, sl.npools, &mut otags);
+        }
         for &ti in &sl.fids {
-            out.push(Sample { feats: self.ffeats[ti].clone(), nrhs, secs: sink.secs(ti) });
+            out.push(Sample { feats: self.ffeats[ti].clone(), nrhs, pool: ftags[ti], secs: sink.secs(ti) });
         }
         let base = self.ftasks.len();
         for ids in &sl.level_ids {
             for &ti in ids {
-                out.push(Sample { feats: self.feats[ti].clone(), nrhs, secs: sink.secs(base + ti) });
+                out.push(Sample { feats: self.feats[ti].clone(), nrhs, pool: otags[ti], secs: sink.secs(base + ti) });
             }
         }
     }
 
     /// See [`HSchedule::observe_multi_slice`].
     fn observe_multi_slice(&self, sl: &UniSlice, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
-        let gen = self.profile_gen.load(Ordering::Acquire);
+        let packed = self.slice_multi_packing(sl, nrhs);
         let prof = self.profile.read().unwrap().clone();
-        let packed = sl.multi.get(gen, nrhs, || {
-            let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, prof.as_deref(), nrhs);
-            let fscratch: Vec<usize> = self.fpscratch.iter().map(|s| s * nrhs).collect();
-            let fsh = balance_level(&sl.fids, &fcosts, &fscratch, sl.nshards);
-            let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, prof.as_deref(), nrhs);
-            let lv = balance_levels_for(&sl.level_ids, &costs, &self.pscratch, nrhs, sl.nshards);
-            (fsh, lv)
-        });
         let predicted = match prof.as_deref() {
             Some(p) => {
-                let fcosts = model_costs(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(p), nrhs);
-                let costs = model_costs(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs);
-                costmodel::makespan(std::slice::from_ref(&packed.0), &fcosts) + costmodel::makespan(&packed.1, &costs)
+                let fcosts = LevelCosts::compute(&self.ffeats, &self.ffixed, &self.fper_rhs, Some(p), nrhs, sl.npools);
+                let costs = LevelCosts::compute(&self.feats, &self.fixed, &self.per_rhs, Some(p), nrhs, sl.npools);
+                fcosts.makespan(std::slice::from_ref(&packed.0)) + costs.makespan(&packed.1)
             }
             None => 0.0,
         };
@@ -1628,11 +1742,11 @@ impl UniPlan {
     }
 
     /// Row-restricted slice of one schedule half (see [`HPlan::slice`]).
-    pub(crate) fn slice(&self, m: &UniformHMatrix, adjoint: bool, rows: &Range<usize>, nshards: usize) -> UniSlice {
+    pub(crate) fn slice(&self, m: &UniformHMatrix, adjoint: bool, rows: &Range<usize>, nshards: usize, npools: usize) -> UniSlice {
         if adjoint {
-            self.adj(m).slice(true, rows, nshards)
+            self.adj(m).slice(true, rows, nshards, npools)
         } else {
-            self.fwd(m).slice(false, rows, nshards)
+            self.fwd(m).slice(false, rows, nshards, npools)
         }
     }
 
@@ -1703,7 +1817,7 @@ impl UniPlan {
             sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink), None);
         }
         let mut samples = Vec::new();
-        sched.push_samples(&sink, 1, rounds, &mut samples);
+        sched.push_samples(&sink, 1, rounds, false, &mut samples);
         let fsh = sched.fshards.load();
         let lv = sched.levels.load();
         let measured = (costmodel::sink_makespan(std::slice::from_ref(fsh.as_ref()), 0, &sink) + costmodel::sink_makespan(&lv, sched.ftasks.len(), &sink)) / rounds as f64;
@@ -1714,8 +1828,8 @@ impl UniPlan {
         for _ in 0..rounds {
             sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink), None);
         }
-        sched.push_samples(&sink, CALIB_RHS, rounds, &mut samples);
-        let profile = costmodel::fit(&samples).unwrap_or_default();
+        sched.push_samples(&sink, CALIB_RHS, rounds, true, &mut samples);
+        let profile = costmodel::fit_pools(&samples, sched.npools).unwrap_or_default();
         self.rebalance(&profile);
         self.calib.lock().unwrap().measured = measured;
         profile
@@ -1739,7 +1853,7 @@ impl UniPlan {
     /// See [`HPlan::observe_multi`].
     pub fn observe_multi(&self, m: &UniformHMatrix, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
         let sched = self.fwd(m);
-        sched.push_samples(sink, nrhs, 1, out);
+        sched.push_samples(sink, nrhs, 1, true, out);
         sched.observe_multi(sink, nrhs)
     }
 
@@ -1759,6 +1873,9 @@ impl UniPlan {
         }
         if let Some(f) = self.fwd.get() {
             st.levels = f.level_ids.len() + 1;
+        }
+        if let Some(p) = self.profile.lock().unwrap().as_deref() {
+            st.pool_cost_sources = p.pool_source_labels();
         }
         let c = self.calib.lock().unwrap();
         st.cost_source = c.source.clone();
@@ -1828,6 +1945,9 @@ struct H2Schedule {
     profile_gen: AtomicU64,
     /// Shard/chunk bin count the packings were built for.
     nshards: usize,
+    /// Executor sub-pool count ([`Executor::pool_count`]); >1 only for
+    /// `sharded:K`, where shard *i* of *n* runs on pool `i*K/n`.
+    npools: usize,
     s_len: usize,
     t_len: usize,
     max_shards: AtomicUsize,
@@ -2074,6 +2194,7 @@ impl H2Schedule {
             profile: RwLock::new(None),
             profile_gen: AtomicU64::new(0),
             nshards,
+            npools: exec.pool_count(),
             s_len,
             t_len,
             max_shards: AtomicUsize::new(up_max.max(down_max)),
@@ -2086,14 +2207,14 @@ impl H2Schedule {
     /// the modeled makespan); drops the per-width packings. Returns the
     /// modeled makespan at b = 1 (up + down, levels are barriers).
     fn rebalance(&self, profile: &Arc<CostProfile>) -> f64 {
-        let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(profile.as_ref()), 1);
+        let up_costs = LevelCosts::compute(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(profile.as_ref()), 1, self.npools);
         let up_scratch = vec![0usize; self.up_tasks.len()];
         let old_up = self.up_levels.load();
-        let new_up = costmodel::rebalance_levels(&old_up, &self.up_level_ids, &up_costs, &up_scratch, self.nshards);
-        let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(profile.as_ref()), 1);
+        let new_up = up_costs.rebalance(&old_up, &self.up_level_ids, &up_scratch, self.nshards);
+        let down_costs = LevelCosts::compute(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(profile.as_ref()), 1, self.npools);
         let old_down = self.down_levels.load();
-        let new_down = costmodel::rebalance_levels(&old_down, &self.down_level_ids, &down_costs, &self.down_scratch1, self.nshards);
-        let ms = costmodel::makespan(&new_up, &up_costs) + costmodel::makespan(&new_down, &down_costs);
+        let new_down = down_costs.rebalance(&old_down, &self.down_level_ids, &self.down_scratch1, self.nshards);
+        let ms = up_costs.makespan(&new_up) + down_costs.makespan(&new_down);
         let (up_max, _) = max_shard_stats(&new_up);
         let (down_max, _) = max_shard_stats(&new_down);
         self.max_shards.fetch_max(up_max.max(down_max), Ordering::Relaxed);
@@ -2104,37 +2225,57 @@ impl H2Schedule {
         ms
     }
 
-    /// Turn accumulated per-task times into fit samples; upward-pass tasks
-    /// occupy sink slots `0..up_tasks.len()`, downward-pass tasks follow.
-    fn push_samples(&self, sink: &TimingSink, nrhs: usize, rounds: usize, out: &mut Vec<Sample>) {
+    /// Fetch (or build) the width-`nrhs` (up levels, down levels) packing
+    /// pair (see [`HSchedule::multi_packing`] for the generation protocol).
+    fn multi_packing(&self, nrhs: usize) -> Arc<(Vec<Vec<Shard>>, Vec<Vec<Shard>>)> {
+        let gen = self.profile_gen.load(Ordering::Acquire);
+        let prof = self.profile.read().unwrap().clone();
+        self.multi.get(gen, nrhs, || {
+            let up_costs = LevelCosts::compute(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs, self.npools);
+            let down_costs = LevelCosts::compute(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs, self.npools);
+            (
+                up_costs.balance_levels_for(&self.up_level_ids, &self.up_pscratch, nrhs, self.nshards),
+                down_costs.balance_levels_for(&self.down_level_ids, &self.down_pscratch, nrhs, self.nshards),
+            )
+        })
+    }
+
+    /// Turn accumulated per-task times into fit samples (pool-tagged; see
+    /// [`HSchedule::push_samples`]); upward-pass tasks occupy sink slots
+    /// `0..up_tasks.len()`, downward-pass tasks follow.
+    fn push_samples(&self, sink: &TimingSink, nrhs: usize, rounds: usize, multi: bool, out: &mut Vec<Sample>) {
         let inv = 1.0 / rounds.max(1) as f64;
+        let mut utags = vec![0usize; self.up_tasks.len()];
+        let mut dtags = vec![0usize; self.down_tasks.len()];
+        if self.npools > 1 {
+            if multi {
+                let packed = self.multi_packing(nrhs);
+                fill_pool_tags(&packed.0, self.npools, &mut utags);
+                fill_pool_tags(&packed.1, self.npools, &mut dtags);
+            } else {
+                fill_pool_tags(&self.up_levels.load(), self.npools, &mut utags);
+                fill_pool_tags(&self.down_levels.load(), self.npools, &mut dtags);
+            }
+        }
         for (ti, ft) in self.up_feats.iter().enumerate() {
-            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(ti) * inv });
+            out.push(Sample { feats: ft.clone(), nrhs, pool: utags[ti], secs: sink.secs(ti) * inv });
         }
         let base = self.up_tasks.len();
         for (ti, ft) in self.down_feats.iter().enumerate() {
-            out.push(Sample { feats: ft.clone(), nrhs, secs: sink.secs(base + ti) * inv });
+            out.push(Sample { feats: ft.clone(), nrhs, pool: dtags[ti], secs: sink.secs(base + ti) * inv });
         }
     }
 
     /// See [`HSchedule::observe_multi`]; upward pass at sink base 0,
     /// downward pass at base `up_tasks.len()`.
     fn observe_multi(&self, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
-        let gen = self.profile_gen.load(Ordering::Acquire);
+        let packed = self.multi_packing(nrhs);
         let prof = self.profile.read().unwrap().clone();
-        let packed = self.multi.get(gen, nrhs, || {
-            let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs);
-            let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs);
-            (
-                balance_levels_for(&self.up_level_ids, &up_costs, &self.up_pscratch, nrhs, self.nshards),
-                balance_levels_for(&self.down_level_ids, &down_costs, &self.down_pscratch, nrhs, self.nshards),
-            )
-        });
         let predicted = match prof.as_deref() {
             Some(p) => {
-                let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(p), nrhs);
-                let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(p), nrhs);
-                costmodel::makespan(&packed.0, &up_costs) + costmodel::makespan(&packed.1, &down_costs)
+                let up_costs = LevelCosts::compute(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(p), nrhs, self.npools);
+                let down_costs = LevelCosts::compute(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(p), nrhs, self.npools);
+                up_costs.makespan(&packed.0) + down_costs.makespan(&packed.1)
             }
             None => 0.0,
         };
@@ -2260,17 +2401,7 @@ impl H2Schedule {
     /// panels; transfer and coupling matrices are streamed once per batch.
     #[allow(clippy::too_many_arguments)]
     fn exec_multi(&self, m: &H2Matrix, adjoint: bool, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        let nrhs = y.ncols();
-        let gen = self.profile_gen.load(Ordering::Acquire);
-        let prof = self.profile.read().unwrap().clone();
-        let packed = self.multi.get(gen, nrhs, || {
-            let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs);
-            let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs);
-            (
-                balance_levels_for(&self.up_level_ids, &up_costs, &self.up_pscratch, nrhs, self.nshards),
-                balance_levels_for(&self.down_level_ids, &down_costs, &self.down_pscratch, nrhs, self.nshards),
-            )
-        });
+        let packed = self.multi_packing(y.ncols());
         self.exec_multi_on(&packed.0, &packed.1, m, adjoint, alpha, x, y, arena, exec, rec, hot);
     }
 
@@ -2400,10 +2531,13 @@ pub(crate) struct H2Slice {
     down_levels: Packing<Vec<Vec<Shard>>>,
     multi: MultiCache<(Vec<Vec<Shard>>, Vec<Vec<Shard>>)>,
     nshards: usize,
+    /// Sub-pool count of the executor the slice is packed for (the SHARD
+    /// executor, not the parent plan's).
+    npools: usize,
 }
 
 impl H2Schedule {
-    fn slice(&self, adjoint: bool, rows: &Range<usize>, nshards: usize) -> H2Slice {
+    fn slice(&self, adjoint: bool, rows: &Range<usize>, nshards: usize, npools: usize) -> H2Slice {
         let down_level_ids = filter_level_ids(&self.down_level_ids, |id| ranges_intersect(&self.down_tasks[id].dst, rows));
         // upward closure over slot offsets (offsets identify up tasks 1:1)
         let mut by_off = std::collections::HashMap::new();
@@ -2435,13 +2569,13 @@ impl H2Schedule {
         }
         let up_level_ids = filter_level_ids(&self.up_level_ids, |id| needed[id]);
         let prof = self.profile.read().unwrap().clone();
-        let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), 1);
+        let up_costs = LevelCosts::compute(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), 1, npools);
         let up_scratch = vec![0usize; self.up_tasks.len()];
         let up_levels: Vec<Vec<Shard>> =
-            up_level_ids.iter().map(|ids| balance_level(ids, &up_costs, &up_scratch, nshards)).collect();
-        let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), 1);
+            up_level_ids.iter().map(|ids| up_costs.balance_level(ids, &up_scratch, nshards)).collect();
+        let down_costs = LevelCosts::compute(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), 1, npools);
         let down_levels: Vec<Vec<Shard>> =
-            down_level_ids.iter().map(|ids| balance_level(ids, &down_costs, &self.down_scratch1, nshards)).collect();
+            down_level_ids.iter().map(|ids| down_costs.balance_level(ids, &self.down_scratch1, nshards)).collect();
         H2Slice {
             adjoint,
             up_level_ids,
@@ -2450,6 +2584,7 @@ impl H2Schedule {
             down_levels: Packing::new(down_levels),
             multi: MultiCache::new(),
             nshards,
+            npools,
         }
     }
 
@@ -2462,55 +2597,60 @@ impl H2Schedule {
         self.exec_on(&up_levels, &down_levels, umax.max(dmax), scr, m, sl.adjoint, alpha, x, y, arena, exec, None, hot);
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn exec_multi_slice(&self, sl: &H2Slice, m: &H2Matrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
-        let nrhs = y.ncols();
+    /// Fetch (or build) a slice's width-`nrhs` (up, down) packing pair under
+    /// the shard executor's sub-pools.
+    fn slice_multi_packing(&self, sl: &H2Slice, nrhs: usize) -> Arc<(Vec<Vec<Shard>>, Vec<Vec<Shard>>)> {
         let gen = self.profile_gen.load(Ordering::Acquire);
         let prof = self.profile.read().unwrap().clone();
-        let packed = sl.multi.get(gen, nrhs, || {
-            let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs);
-            let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs);
+        sl.multi.get(gen, nrhs, || {
+            let up_costs = LevelCosts::compute(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs, sl.npools);
+            let down_costs = LevelCosts::compute(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs, sl.npools);
             (
-                balance_levels_for(&sl.up_level_ids, &up_costs, &self.up_pscratch, nrhs, sl.nshards),
-                balance_levels_for(&sl.down_level_ids, &down_costs, &self.down_pscratch, nrhs, sl.nshards),
+                up_costs.balance_levels_for(&sl.up_level_ids, &self.up_pscratch, nrhs, sl.nshards),
+                down_costs.balance_levels_for(&sl.down_level_ids, &self.down_pscratch, nrhs, sl.nshards),
             )
-        });
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_multi_slice(&self, sl: &H2Slice, m: &H2Matrix, alpha: f64, x: &DMatrix, y: &mut DMatrix, arena: &mut Arena, exec: &dyn Executor, rec: Option<&TimingSink>, hot: Option<&Arc<HotCache>>) {
+        let packed = self.slice_multi_packing(sl, y.ncols());
         self.exec_multi_on(&packed.0, &packed.1, m, sl.adjoint, alpha, x, y, arena, exec, rec, hot);
     }
 
     /// Slice-restricted sample harvest (sink slots are parent task ids: up
-    /// at 0.., down at base `up_tasks.len()`).
+    /// at 0.., down at base `up_tasks.len()`), pool-tagged under the shard
+    /// executor's sub-pools (see [`HSchedule::push_samples_slice`]).
     fn push_samples_slice(&self, sl: &H2Slice, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) {
+        let mut utags = vec![0usize; self.up_tasks.len()];
+        let mut dtags = vec![0usize; self.down_tasks.len()];
+        if sl.npools > 1 {
+            let packed = self.slice_multi_packing(sl, nrhs);
+            fill_pool_tags(&packed.0, sl.npools, &mut utags);
+            fill_pool_tags(&packed.1, sl.npools, &mut dtags);
+        }
         for ids in &sl.up_level_ids {
             for &ti in ids {
-                out.push(Sample { feats: self.up_feats[ti].clone(), nrhs, secs: sink.secs(ti) });
+                out.push(Sample { feats: self.up_feats[ti].clone(), nrhs, pool: utags[ti], secs: sink.secs(ti) });
             }
         }
         let base = self.up_tasks.len();
         for ids in &sl.down_level_ids {
             for &ti in ids {
-                out.push(Sample { feats: self.down_feats[ti].clone(), nrhs, secs: sink.secs(base + ti) });
+                out.push(Sample { feats: self.down_feats[ti].clone(), nrhs, pool: dtags[ti], secs: sink.secs(base + ti) });
             }
         }
     }
 
     /// See [`HSchedule::observe_multi_slice`].
     fn observe_multi_slice(&self, sl: &H2Slice, sink: &TimingSink, nrhs: usize) -> (f64, f64) {
-        let gen = self.profile_gen.load(Ordering::Acquire);
+        let packed = self.slice_multi_packing(sl, nrhs);
         let prof = self.profile.read().unwrap().clone();
-        let packed = sl.multi.get(gen, nrhs, || {
-            let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, prof.as_deref(), nrhs);
-            let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, prof.as_deref(), nrhs);
-            (
-                balance_levels_for(&sl.up_level_ids, &up_costs, &self.up_pscratch, nrhs, sl.nshards),
-                balance_levels_for(&sl.down_level_ids, &down_costs, &self.down_pscratch, nrhs, sl.nshards),
-            )
-        });
         let predicted = match prof.as_deref() {
             Some(p) => {
-                let up_costs = model_costs(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(p), nrhs);
-                let down_costs = model_costs(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(p), nrhs);
-                costmodel::makespan(&packed.0, &up_costs) + costmodel::makespan(&packed.1, &down_costs)
+                let up_costs = LevelCosts::compute(&self.up_feats, &self.up_fixed, &self.up_per_rhs, Some(p), nrhs, sl.npools);
+                let down_costs = LevelCosts::compute(&self.down_feats, &self.down_fixed, &self.down_per_rhs, Some(p), nrhs, sl.npools);
+                up_costs.makespan(&packed.0) + down_costs.makespan(&packed.1)
             }
             None => 0.0,
         };
@@ -2639,11 +2779,11 @@ impl H2Plan {
     }
 
     /// Row-restricted slice of one schedule half (see [`HPlan::slice`]).
-    pub(crate) fn slice(&self, m: &H2Matrix, adjoint: bool, rows: &Range<usize>, nshards: usize) -> H2Slice {
+    pub(crate) fn slice(&self, m: &H2Matrix, adjoint: bool, rows: &Range<usize>, nshards: usize, npools: usize) -> H2Slice {
         if adjoint {
-            self.adj(m).slice(true, rows, nshards)
+            self.adj(m).slice(true, rows, nshards, npools)
         } else {
-            self.fwd(m).slice(false, rows, nshards)
+            self.fwd(m).slice(false, rows, nshards, npools)
         }
     }
 
@@ -2713,7 +2853,7 @@ impl H2Plan {
             sched.exec(m, false, 1.0, &x, &mut y, &mut arena, &*self.exec, Some(&sink), None);
         }
         let mut samples = Vec::new();
-        sched.push_samples(&sink, 1, rounds, &mut samples);
+        sched.push_samples(&sink, 1, rounds, false, &mut samples);
         let up = sched.up_levels.load();
         let down = sched.down_levels.load();
         let measured = (costmodel::sink_makespan(&up, 0, &sink) + costmodel::sink_makespan(&down, sched.up_tasks.len(), &sink)) / rounds as f64;
@@ -2724,8 +2864,8 @@ impl H2Plan {
         for _ in 0..rounds {
             sched.exec_multi(m, false, 1.0, &xm, &mut ym, &mut arena, &*self.exec, Some(&sink), None);
         }
-        sched.push_samples(&sink, CALIB_RHS, rounds, &mut samples);
-        let profile = costmodel::fit(&samples).unwrap_or_default();
+        sched.push_samples(&sink, CALIB_RHS, rounds, true, &mut samples);
+        let profile = costmodel::fit_pools(&samples, sched.npools).unwrap_or_default();
         self.rebalance(&profile);
         self.calib.lock().unwrap().measured = measured;
         profile
@@ -2749,7 +2889,7 @@ impl H2Plan {
     /// See [`HPlan::observe_multi`].
     pub fn observe_multi(&self, m: &H2Matrix, sink: &TimingSink, nrhs: usize, out: &mut Vec<Sample>) -> (f64, f64) {
         let sched = self.fwd(m);
-        sched.push_samples(sink, nrhs, 1, out);
+        sched.push_samples(sink, nrhs, 1, true, out);
         sched.observe_multi(sink, nrhs)
     }
 
@@ -2769,6 +2909,9 @@ impl H2Plan {
         }
         if let Some(f) = self.fwd.get() {
             st.levels = f.up_level_ids.len() + f.down_level_ids.len();
+        }
+        if let Some(p) = self.profile.lock().unwrap().as_deref() {
+            st.pool_cost_sources = p.pool_source_labels();
         }
         let c = self.calib.lock().unwrap();
         st.cost_source = c.source.clone();

@@ -21,10 +21,14 @@
 //!   packing cannot see.
 //! * [`ShardedExec`] (`sharded:K`) — the level's shards are partitioned
 //!   contiguously across `K` sub-pools with pinned shard→pool affinity and
-//!   per-shard scratch buffers grouped per pool: the NUMA-shaped layout.
-//!   (The arena is still allocated and zero-filled by the calling thread —
-//!   actual per-domain first-touch/pinning is a ROADMAP follow-on; what this
-//!   backend pins today is the task→pool mapping and the buffer grouping.)
+//!   per-shard scratch buffers grouped per pool: the NUMA layout. Each
+//!   sub-pool is homed on a NUMA node by [`crate::par::Topology`]
+//!   (round-robin across nodes, contiguous core slices within a node) and
+//!   its workers pin themselves with `sched_setaffinity` unless `HMATC_PIN=0`
+//!   or discovery fell back to the synthetic single node. The per-pool
+//!   node ids feed the per-pool cost coefficients
+//!   ([`super::costmodel::CostProfile`]) so packing sees each socket's own
+//!   decode/stream/flop rates.
 //!
 //! Selection: [`ExecutorKind::from_env`] reads `HMATC_EXEC`
 //! (`lpt|steal|sharded:K`, default `lpt`); the CLI forwards `--executor`.
@@ -34,7 +38,7 @@
 
 use super::schedule::{default_shards, part_range, Shard, STEAL_CHUNKS_PER_SLOT};
 use crate::mvm::SharedSlots;
-use crate::par::{StealSet, ThreadPool};
+use crate::par::{StealSet, ThreadPool, Topology};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -78,6 +82,25 @@ pub trait Executor: Send + Sync {
     /// (default); the stealing backend overrides with one per worker slot.
     fn buffers_needed(&self, max_shards: usize) -> usize {
         max_shards.max(1)
+    }
+
+    /// Number of distinct execution pools. Shard `s` of an `n`-shard level
+    /// runs on the pool whose [`part_range`] contains `s`, so this is the
+    /// granularity at which per-pool cost coefficients
+    /// ([`super::costmodel::CostProfile::pool_coeff`]) apply. Backends with a
+    /// single undifferentiated pool report 1.
+    fn pool_count(&self) -> usize {
+        1
+    }
+
+    /// NUMA node hosting pool `p` (sysfs id), when the backend placed it.
+    fn pool_node(&self, _p: usize) -> Option<usize> {
+        None
+    }
+
+    /// Whether pool `p`'s workers currently hold a cpu affinity.
+    fn pool_pinned(&self, _p: usize) -> bool {
+        false
     }
 }
 
@@ -275,13 +298,32 @@ impl Executor for WorkStealingExec {
 
 /// Sub-pool sets are created once per `K` and shared by every `sharded:K`
 /// executor in the process (a pool set owns OS threads).
-fn sharded_pools(k: usize, workers_per_pool: usize) -> Arc<Vec<ThreadPool>> {
+///
+/// Pool `p` gets the `part_range(global_slots(), k, p)` share of the
+/// machine's execution slots (so the sum never exceeds the
+/// `available_parallelism`-derived total — `K` pools of `ceil(slots/K)`
+/// workers used to oversubscribe containers), is homed on the node
+/// [`Topology::pool_placement`] assigns, and pins its workers to that
+/// placement's cpu slice when pinning is enabled. On the fallback topology
+/// the cpu slice is empty and the pools spawn unpinned, exactly as before.
+fn sharded_pools(k: usize) -> Arc<Vec<ThreadPool>> {
     static CACHE: OnceLock<Mutex<Vec<(usize, Arc<Vec<ThreadPool>>)>>> = OnceLock::new();
     let mut cache = CACHE.get_or_init(|| Mutex::new(Vec::new())).lock().unwrap();
     if let Some((_, pools)) = cache.iter().find(|(kk, _)| *kk == k) {
         return pools.clone();
     }
-    let pools = Arc::new((0..k).map(|_| ThreadPool::new(workers_per_pool)).collect::<Vec<_>>());
+    let topo = Topology::get();
+    let slots = global_slots();
+    let pools = Arc::new(
+        (0..k)
+            .map(|p| {
+                let workers = part_range(slots, k, p).len().max(1);
+                let (node, cpus) = topo.pool_placement(k, p);
+                let cpus = if topo.pin_enabled() { cpus } else { Vec::new() };
+                ThreadPool::with_affinity(workers, node, &cpus)
+            })
+            .collect::<Vec<_>>(),
+    );
     cache.push((k, pools.clone()));
     pools
 }
@@ -298,10 +340,11 @@ pub struct ShardedExec {
 impl ShardedExec {
     pub fn new(k: usize) -> ShardedExec {
         let k = k.max(1);
-        // every sub-pool gets an equal share of the machine's slots (at
-        // least one worker each; K > cores oversubscribes, which is allowed)
-        let per_pool = global_slots().div_ceil(k).max(1);
-        ShardedExec { pools: sharded_pools(k, per_pool), slots: k * per_pool }
+        let pools = sharded_pools(k);
+        // total slots = the machine share actually spawned (K > cores still
+        // oversubscribes minimally: one worker per pool)
+        let slots = pools.iter().map(|p| p.num_threads()).sum::<usize>().max(1);
+        ShardedExec { pools, slots }
     }
 
     pub fn k(&self) -> usize {
@@ -320,6 +363,18 @@ impl Executor for ShardedExec {
 
     fn shard_count(&self) -> usize {
         self.slots
+    }
+
+    fn pool_count(&self) -> usize {
+        self.pools.len()
+    }
+
+    fn pool_node(&self, p: usize) -> Option<usize> {
+        self.pools.get(p).and_then(|pool| pool.node())
+    }
+
+    fn pool_pinned(&self, p: usize) -> bool {
+        self.pools.get(p).is_some_and(|pool| pool.is_pinned())
     }
 
     fn run_level(&self, shards: &[Shard], bufs: &mut [Vec<f64>], run: &TaskFn) {
@@ -422,6 +477,26 @@ mod tests {
         assert_eq!("sharded".parse::<ExecutorKind>().unwrap(), ExecutorKind::Sharded(2));
         assert!("sharded:0".parse::<ExecutorKind>().is_err());
         assert!("bogus".parse::<ExecutorKind>().is_err());
+    }
+
+    #[test]
+    fn sharded_exposes_pools_and_never_oversubscribes() {
+        let e = ShardedExec::new(3);
+        assert_eq!(e.pool_count(), 3);
+        // total workers never exceed the machine share (satellite: K pools of
+        // ceil(slots/K) used to spawn up to K-1 extra threads)
+        assert!(e.concurrency() <= global_slots().max(3), "{} slots for {} global", e.concurrency(), global_slots());
+        // every pool reports a home node on any topology (real or fallback)
+        for p in 0..e.pool_count() {
+            assert!(e.pool_node(p).is_some() || Topology::get().num_nodes() == 0);
+        }
+        assert_eq!(e.pool_node(99), None);
+        assert!(!e.pool_pinned(99));
+        // single-pool backends report the trait defaults
+        let lpt = StaticLptExec::new();
+        assert_eq!(lpt.pool_count(), 1);
+        assert_eq!(lpt.pool_node(0), None);
+        assert!(!lpt.pool_pinned(0));
     }
 
     #[test]

@@ -104,19 +104,30 @@ fn prorated_leaf_loads(leaves: &[Range<usize>], loads: &[(Range<usize>, f64)]) -
 }
 
 /// Greedy quota split of consecutive leaves into `count` contiguous ranges:
-/// each shard takes leaves until it would exceed `remaining / shards_left`,
-/// the last shard takes the rest. Shards past the leaf supply get empty
-/// ranges pinned at `domain` so owned ranges stay pairwise disjoint.
-fn split_quota(leaves: &[Range<usize>], leaf_load: &[f64], count: usize, domain: usize) -> Vec<(Range<usize>, f64)> {
+/// each shard takes leaves until it would exceed its quota, the last shard
+/// takes the rest. With `weights: None` every shard targets
+/// `remaining / shards_left` (the historical equal split, bit-exact); with
+/// weights, shard `s` targets `remaining · w[s] / Σ w[s..]` so capacity-
+/// heavy NUMA nodes absorb proportionally more rows. Shards past the leaf
+/// supply get empty ranges pinned at `domain` so owned ranges stay pairwise
+/// disjoint.
+fn split_quota(leaves: &[Range<usize>], leaf_load: &[f64], count: usize, domain: usize, weights: Option<&[f64]>) -> Vec<(Range<usize>, f64)> {
     let mut remaining: f64 = leaf_load.iter().sum();
+    let mut wleft: f64 = weights.map_or(0.0, |w| w.iter().sum());
     let mut parts = Vec::with_capacity(count);
     let mut li = 0usize;
     for s in 0..count {
+        let ws = weights.map_or(0.0, |w| w[s]);
         if li >= leaves.len() {
+            wleft -= ws;
             parts.push((domain..domain, 0.0));
             continue;
         }
-        let target = remaining / (count - s) as f64;
+        let target = match weights {
+            Some(_) if wleft > 0.0 => remaining * (ws / wleft),
+            _ => remaining / (count - s) as f64,
+        };
+        wleft -= ws;
         let start = leaves[li].start;
         let mut acc = 0.0;
         while li < leaves.len() {
@@ -133,6 +144,20 @@ fn split_quota(leaves: &[Range<usize>], leaf_load: &[f64], count: usize, domain:
     parts
 }
 
+/// Per-shard capacity weights when the machine exposes more than one NUMA
+/// node with *unequal* memory sizes: shard `s` inherits the relative memory
+/// capacity of its home node (`s % nodes`, matching [`ShardPlan`] home
+/// assignment). Symmetric machines and single-node fallbacks return `None`
+/// — the partition then takes the historical equal-split path bit-for-bit.
+fn node_capacity_weights(count: usize) -> Option<Vec<f64>> {
+    let topo = crate::par::Topology::get();
+    let mems = topo.node_mem();
+    if mems.len() < 2 || mems.iter().any(|&m| m == 0) || mems.windows(2).all(|w| w[0] == w[1]) {
+        return None;
+    }
+    Some((0..count).map(|s| mems[s % mems.len()] as f64).collect())
+}
+
 /// Split the operator's output index space into `count` disjoint, contiguous
 /// [`ShardSpec`]s along cluster-tree leaf boundaries, balancing the modeled
 /// (calibrated, when a profile is active) per-task output work. Errors on a
@@ -147,8 +172,9 @@ pub fn row_partition(op: &PlannedOperator, count: usize) -> Result<Vec<ShardSpec
     if rl.is_empty() || cl.is_empty() {
         return Err("operator has no cluster-tree leaves to partition".to_string());
     }
-    let fwd = split_quota(&rl, &prorated_leaf_loads(&rl, &op.output_loads(false)), count, op.nrows());
-    let adj = split_quota(&cl, &prorated_leaf_loads(&cl, &op.output_loads(true)), count, op.ncols());
+    let weights = node_capacity_weights(count);
+    let fwd = split_quota(&rl, &prorated_leaf_loads(&rl, &op.output_loads(false)), count, op.nrows(), weights.as_deref());
+    let adj = split_quota(&cl, &prorated_leaf_loads(&cl, &op.output_loads(true)), count, op.ncols(), weights.as_deref());
     Ok((0..count)
         .map(|i| ShardSpec { index: i, count, rows: fwd[i].0.clone(), cols: adj[i].0.clone(), cost: fwd[i].1 })
         .collect())
@@ -175,8 +201,13 @@ pub struct ShardPlan {
     arena: Mutex<Arena>,
     /// Shard-local decode-once cache. When `None`, applies fall back to the
     /// parent plan's (shared) cache so `HMATC_SHARDS` routing preserves
-    /// [`PlannedOperator::set_hot_cache`] semantics transparently.
+    /// [`PlannedOperator::set_hot_cache`] semantics transparently. Per-shard
+    /// caches double as per-NUMA-node hot blob replicas: each shard decodes
+    /// into memory its own worker thread first-touched on its home node.
     hot: RwLock<Option<Arc<HotCache>>>,
+    /// NUMA node this shard's worker/arena/output memory should live on
+    /// (round-robin over discovered nodes; `None` on single-node machines).
+    home: Option<usize>,
     ybuf: Mutex<Vec<f64>>,
 }
 
@@ -186,18 +217,22 @@ impl ShardPlan {
     pub fn build(op: &PlannedOperator, spec: ShardSpec, kind: ExecutorKind) -> ShardPlan {
         let exec = kind.build();
         let n = exec.shard_count();
+        let p = exec.pool_count();
         let inner = op.inner().clone();
         let slices = match &*inner {
             Inner::H { m, plan } => {
-                Slices::H { fwd: plan.slice(m, false, &spec.rows, n), adj: plan.slice(m, true, &spec.cols, n) }
+                Slices::H { fwd: plan.slice(m, false, &spec.rows, n, p), adj: plan.slice(m, true, &spec.cols, n, p) }
             }
             Inner::Uniform { m, plan } => {
-                Slices::Uniform { fwd: plan.slice(m, false, &spec.rows, n), adj: plan.slice(m, true, &spec.cols, n) }
+                Slices::Uniform { fwd: plan.slice(m, false, &spec.rows, n, p), adj: plan.slice(m, true, &spec.cols, n, p) }
             }
             Inner::H2 { m, plan } => {
-                Slices::H2 { fwd: plan.slice(m, false, &spec.rows, n), adj: plan.slice(m, true, &spec.cols, n) }
+                Slices::H2 { fwd: plan.slice(m, false, &spec.rows, n, p), adj: plan.slice(m, true, &spec.cols, n, p) }
             }
         };
+        let topo = crate::par::Topology::get();
+        let nn = topo.num_nodes();
+        let home = if nn > 1 { Some(topo.nodes()[spec.index % nn].id) } else { None };
         ShardPlan {
             inner,
             spec,
@@ -205,8 +240,15 @@ impl ShardPlan {
             slices,
             arena: Mutex::new(Arena::new()),
             hot: RwLock::new(None),
+            home,
             ybuf: Mutex::new(Vec::new()),
         }
+    }
+
+    /// The NUMA node this shard's memory and worker should live on, when the
+    /// machine has more than one.
+    pub fn home_node(&self) -> Option<usize> {
+        self.home
     }
 
     /// The partition member this shard executes.

@@ -161,6 +161,20 @@ impl Segment {
         }
     }
 
+    /// Prefer NUMA node `node` for pages of this segment that are not yet
+    /// resident (`mbind(MPOL_PREFERRED)` via [`crate::par::topology`]).
+    /// Advisory and best-effort: already-faulted pages stay put, failures
+    /// return `false`, and byte contents are never affected. Only sensible
+    /// for a segment consumed by a single node-pinned shard — a `MappedStore`
+    /// shared by several shards must NOT be bound to any one node.
+    pub fn bind_to_node(&self, node: usize) -> bool {
+        let s = self.as_slice();
+        if s.is_empty() {
+            return false;
+        }
+        crate::par::topology::bind_region(s.as_ptr(), s.len(), node)
+    }
+
     /// Hint the OS that `range` will be read soon, then touch one byte per
     /// page so the readahead actually happens even where `madvise` is a
     /// no-op. Anonymous segments need neither.

@@ -184,6 +184,55 @@ fn calibrate_is_bitwise_output_invariant_all_formats() {
     }
 }
 
+/// Per-pool overlay coefficients (the NUMA cost model) price each sub-pool's
+/// bins under that pool's own rates, so the packer can hand a "slow" pool
+/// fewer bytes — but it still only moves tasks between shards, so products
+/// stay bitwise identical. Pools get deliberately divergent overlay rates
+/// (0.4× / 2.5× / 5×) to force genuinely asymmetric packings. The
+/// pinned-vs-unpinned half of the invariance is cross-process by nature
+/// (topology discovery is a process-wide `OnceLock`): CI re-runs this whole
+/// suite under `HMATC_PIN=0`, and pinning only moves threads, never work.
+#[test]
+fn per_pool_rebalance_is_bitwise_output_invariant() {
+    let h = build_h(2, 1e-7);
+    let n = h.nrows();
+    let cfg = CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true };
+    let mut hz = h.clone();
+    hz.compress(&cfg);
+    let mut uh = hmatc::uniform::build_from_h(&h, 1e-6, hmatc::uniform::CouplingKind::Combined);
+    uh.compress(&cfg);
+    let mut h2 = hmatc::h2::build_from_h(&h, 1e-6);
+    h2.compress(&cfg);
+    let (hz, uh, h2) = (Arc::new(hz), Arc::new(uh), Arc::new(h2));
+    for npools in [2usize, 3] {
+        let kind = ExecutorKind::Sharded(npools);
+        let ops: Vec<(&str, PlannedOperator)> = vec![
+            ("H", PlannedOperator::from_h_with(hz.clone(), kind)),
+            ("UH", PlannedOperator::from_uniform_with(uh.clone(), kind)),
+            ("H2", PlannedOperator::from_h2_with(h2.clone(), kind)),
+        ];
+        for (name, op) in &ops {
+            let (bf, ba, bm, bma) = run_all(op, n);
+            let base = skewed_profile(4242);
+            let overlays: Vec<_> = [0.4f64, 2.5, 5.0]
+                .iter()
+                .take(npools)
+                .map(|&f| base.coeffs().iter().map(|(c, v)| (*c, v * f)).collect())
+                .collect();
+            let profile = base.with_pools(overlays);
+            op.rebalance(&profile);
+            let st = op.plan_stats();
+            assert_eq!(st.cost_source, CostSource::Online, "{name} [{kind}]");
+            assert_eq!(st.pool_cost_sources, vec!["per-pool"; npools], "{name} [{kind}]");
+            let (f, a, m, ma) = run_all(op, n);
+            assert_bits_eq(&f, &bf, &format!("{name} fwd per-pool [{kind}]"));
+            assert_bits_eq(&a, &ba, &format!("{name} adj per-pool [{kind}]"));
+            assert_bits_eq(m.data(), bm.data(), &format!("{name} multi per-pool [{kind}]"));
+            assert_bits_eq(ma.data(), bma.data(), &format!("{name} multi-adj per-pool [{kind}]"));
+        }
+    }
+}
+
 /// The re-balancer keeps whichever packing models better, so on any cost
 /// distribution — here heavy-tailed skews the static model never saw — the
 /// modeled makespan cannot increase.

@@ -1,0 +1,253 @@
+//! NUMA execution contracts (integration level): single-node fallback,
+//! pin-failure degradation, the per-pool sample-floor fallback of
+//! [`fit_pools`], profile round-trips with topology fingerprints, and the
+//! shard→pool mapping invariants the pool-aware packers rely on.
+//!
+//! Everything here builds topologies **directly** ([`Topology::detect`] /
+//! [`Topology::from_nodes`]) — no `std::env::set_var`, which would race
+//! other tests in the same process.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::lowrank::AcaOptions;
+use hmatc::par::topology::{pin_current_thread, MAX_CPU_ID};
+use hmatc::par::{NodeInfo, Topology};
+use hmatc::plan::costmodel::{
+    fit_pools, pool_of_shard, CostProfile, KernelClass, Sample, TaskFeats, TopologyMeta, POOL_SAMPLE_FLOOR,
+};
+use hmatc::plan::{ExecutorKind, HOperator, PlannedOperator};
+use hmatc::util::Rng;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// single-node fallback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_numa_is_a_single_unpinnable_node() {
+    let t = Topology::detect(false, true);
+    assert_eq!(t.num_nodes(), 1);
+    assert_eq!(t.cores_per_node(), 0);
+    for k in 1..5 {
+        for p in 0..k {
+            let (node, cpus) = t.pool_placement(k, p);
+            assert_eq!(node, Some(0), "k={k} p={p}");
+            assert!(cpus.is_empty(), "fallback node must never yield pinnable cpus (k={k} p={p})");
+        }
+    }
+    // the "don't pin" sentinel really does not pin
+    assert!(!pin_current_thread(&[]));
+}
+
+#[test]
+fn empty_node_list_falls_back_too() {
+    let t = Topology::from_nodes(Vec::new(), true);
+    assert_eq!(t.num_nodes(), 1);
+    assert!(t.nodes()[0].cpus.is_empty());
+    assert_eq!(t.node_mem(), vec![0]);
+}
+
+// ---------------------------------------------------------------------------
+// pin-failure degradation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn failed_pin_degrades_without_breaking_products() {
+    // cpu id 1023 does not exist on any sane CI box: the pin must report
+    // failure (not panic) and the thread must keep computing correctly.
+    if std::thread::available_parallelism().map_or(0, |n| n.get()) >= 512 {
+        return; // machine big enough that the "bogus" cpu might be real
+    }
+    assert!(!pin_current_thread(&[MAX_CPU_ID]));
+
+    // products on the sharded backend — whose workers attempt pinning at
+    // startup — still match the unpinned lpt baseline bit for bit
+    let geom = icosphere(2);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    let h = Arc::new(HMatrix::build(&bt, &gen, &AcaOptions::with_eps(1e-7)));
+    let n = h.nrows();
+    let sharded = PlannedOperator::from_h_with(h.clone(), ExecutorKind::Sharded(3));
+    let lpt = PlannedOperator::from_h_with(h, ExecutorKind::StaticLpt);
+    let mut rng = Rng::new(7);
+    let x = rng.vector(n);
+    let (mut y1, mut y2) = (vec![0.0; n], vec![0.0; n]);
+    sharded.apply(1.0, &x, &mut y1);
+    lpt.apply(1.0, &x, &mut y2);
+    for (i, (a, b)) in y1.iter().zip(&y2).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "row {i}: {a:e} vs {b:e}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-pool fit: sample floor fallback
+// ---------------------------------------------------------------------------
+
+fn sample(pool: usize, amount: f64, secs: f64) -> Sample {
+    let mut feats = TaskFeats::default();
+    feats.add(KernelClass::DenseFlop, amount);
+    Sample { feats, nrhs: 1, pool, secs }
+}
+
+#[test]
+fn pool_below_sample_floor_falls_back_to_global() {
+    // pool 0: plenty of samples at 2 s per unit; pool 1: a handful at 10 s
+    // per unit — too few to earn an overlay
+    let mut samples = Vec::new();
+    for i in 0..POOL_SAMPLE_FLOOR + 16 {
+        let a = 1.0 + (i % 7) as f64;
+        samples.push(sample(0, a, 2.0 * a));
+    }
+    for i in 0..POOL_SAMPLE_FLOOR / 4 {
+        let a = 1.0 + (i % 5) as f64;
+        samples.push(sample(1, a, 10.0 * a));
+    }
+    let p = fit_pools(&samples, 2).unwrap();
+    assert!(p.has_pool_coeffs());
+    assert_eq!(p.pool_source_labels(), vec!["per-pool", "global"]);
+    // pool 0 keeps its own (fast) rate; pool 1 uses the pooled global fit
+    let c0 = p.pool_coeff(0, KernelClass::DenseFlop);
+    let c1 = p.pool_coeff(1, KernelClass::DenseFlop);
+    let g = p.cost(&sample(0, 1.0, 0.0).feats, 1);
+    assert!((c0 - 2.0).abs() < 1e-6, "pool 0 overlay rate: {c0}");
+    assert!((c1 - g).abs() < 1e-12, "pool 1 must fall back to the global coefficient");
+}
+
+#[test]
+fn both_pools_above_floor_get_their_own_rates() {
+    let mut samples = Vec::new();
+    for i in 0..POOL_SAMPLE_FLOOR + 8 {
+        let a = 1.0 + (i % 7) as f64;
+        samples.push(sample(0, a, 2.0 * a));
+        samples.push(sample(1, a, 6.0 * a));
+    }
+    let p = fit_pools(&samples, 2).unwrap();
+    assert_eq!(p.pool_source_labels(), vec!["per-pool", "per-pool"]);
+    assert!((p.pool_coeff(0, KernelClass::DenseFlop) - 2.0).abs() < 1e-6);
+    assert!((p.pool_coeff(1, KernelClass::DenseFlop) - 6.0).abs() < 1e-6);
+}
+
+#[test]
+fn single_pool_fit_has_no_pool_dimension() {
+    let samples: Vec<Sample> = (0..8).map(|i| sample(0, 1.0 + i as f64, 3.0 * (1.0 + i as f64))).collect();
+    let p = fit_pools(&samples, 1).unwrap();
+    assert!(!p.has_pool_coeffs());
+    assert!(p.pool_source_labels().is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// profile round-trip: topology fingerprint guards per-pool reuse
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mismatched_topology_drops_pool_overlays_on_load() {
+    let mut samples = Vec::new();
+    for i in 0..POOL_SAMPLE_FLOOR + 8 {
+        let a = 1.0 + (i % 7) as f64;
+        samples.push(sample(0, a, 2.0 * a));
+        samples.push(sample(1, a, 6.0 * a));
+    }
+    let mut p = fit_pools(&samples, 2).unwrap();
+    // a fingerprint no real machine running this test will match
+    p.topology = Some(TopologyMeta { nodes: 99, cores_per_node: 7, pinned: true });
+    let path = std::env::temp_dir().join(format!("hmatc-numa-prof-{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    p.save(&path).unwrap();
+    let loaded = CostProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    // per-pool overlays calibrated elsewhere must not skew packing here
+    assert!(!loaded.has_pool_coeffs(), "mismatched per-pool overlays must be dropped");
+    // ... but the global fit survives
+    assert!((loaded.pool_coeff(0, KernelClass::DenseFlop) - loaded.pool_coeff(1, KernelClass::DenseFlop)).abs() < 1e-12);
+    assert!(loaded.is_usable());
+}
+
+#[test]
+fn pool_overlays_without_fingerprint_are_dropped_on_load() {
+    let mut samples = Vec::new();
+    for i in 0..POOL_SAMPLE_FLOOR + 8 {
+        let a = 1.0 + (i % 7) as f64;
+        samples.push(sample(0, a, 2.0 * a));
+        samples.push(sample(1, a, 6.0 * a));
+    }
+    let p = fit_pools(&samples, 2).unwrap();
+    assert!(p.topology.is_none(), "fit_pools must not invent a fingerprint");
+    let path = std::env::temp_dir().join(format!("hmatc-numa-nofp-{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    p.save(&path).unwrap();
+    let loaded = CostProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(!loaded.has_pool_coeffs());
+}
+
+// ---------------------------------------------------------------------------
+// shard→pool mapping and placement invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_of_shard_partitions_shards_contiguously() {
+    for nshards in 1..12usize {
+        for npools in 1..6usize {
+            let pools: Vec<usize> = (0..nshards).map(|s| pool_of_shard(s, nshards, npools)).collect();
+            for (s, &p) in pools.iter().enumerate() {
+                assert!(p < npools, "nshards={nshards} npools={npools}");
+                // the inverse of the contiguous shard→pool dealing: shard s
+                // must lie inside its pool's part_range slice
+                let r = hmatc::plan::schedule::part_range(nshards, npools, p);
+                assert!(r.contains(&s), "shard {s} outside pool {p} range {r:?} (nshards={nshards} npools={npools})");
+            }
+            // monotone non-decreasing along the level
+            for w in pools.windows(2) {
+                assert!(w[1] >= w[0], "non-monotone: {pools:?}");
+            }
+            // with at least as many shards as pools, every pool gets work
+            // and shard 0 sits on pool 0
+            if nshards >= npools {
+                assert_eq!(pools[0], 0, "nshards={nshards} npools={npools}");
+                for p in 0..npools {
+                    assert!(pools.contains(&p), "pool {p} starved: {pools:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn placement_slices_are_disjoint_within_a_node() {
+    let t = Topology::from_nodes(
+        vec![
+            NodeInfo { id: 0, cpus: vec![0, 1, 2, 3], mem_bytes: 2 << 30 },
+            NodeInfo { id: 1, cpus: vec![4, 5, 6, 7], mem_bytes: 1 << 30 },
+        ],
+        true,
+    );
+    for k in 1..=8 {
+        let mut seen: Vec<Vec<usize>> = Vec::new();
+        for p in 0..k {
+            let (node, cpus) = t.pool_placement(k, p);
+            let node = node.unwrap();
+            assert!(!cpus.is_empty());
+            // every cpu belongs to the claimed node
+            let home = t.nodes().iter().find(|n| n.id == node).unwrap();
+            assert!(cpus.iter().all(|c| home.cpus.contains(c)), "k={k} p={p}");
+            seen.push(cpus);
+        }
+        // when no node is oversubscribed, slices never overlap
+        if k <= 8 {
+            let per_node_pools = (k + 1) / 2;
+            if per_node_pools <= 4 {
+                for i in 0..seen.len() {
+                    for j in i + 1..seen.len() {
+                        let overlap = seen[i].iter().any(|c| seen[j].contains(c));
+                        let same_node = seen[i][0] / 4 == seen[j][0] / 4;
+                        assert!(!overlap || !same_node, "k={k}: pools {i},{j} overlap: {seen:?}");
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(t.node_mem(), vec![2 << 30, 1 << 30]);
+}
