@@ -1,0 +1,134 @@
+//! Ablation — the cross-process shard fleet vs in-process serving:
+//!
+//! The same closed-loop request stream runs against three tiers built from
+//! one compressed H operator: the single-worker server, the in-process
+//! sharded scatter/gather tier, and the remote fleet (two `serve_worker`
+//! loops behind loopback TCP couriers — same wire protocol, heartbeats and
+//! reconnect machinery as a real deployment, minus the physical network).
+//! Every tier's responses are **bitwise-verified** against the unsharded
+//! plan in-bench, and the remote rows carry the courier network counters
+//! (bytes shipped, round trips) so the serialization overhead is visible
+//! next to the throughput it buys. Emits `BENCH_ablation_remote.json` plus
+//! the `bench_results/` archive copy. `--quick` shrinks the problem and the
+//! request count so CI can smoke-run it.
+
+use hmatc::bench::workloads::Problem;
+use hmatc::bench::{write_bench_json, write_result, Table};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::coordinator::{bind_listener, serve_worker, BatchPolicy, MvmServer, RemoteConfig};
+use hmatc::plan::{ExecutorKind, HOperator, PlannedOperator};
+use hmatc::util::json::Json;
+use hmatc::util::{fmt_bytes, fmt_secs, Rng, Timer};
+use std::sync::Arc;
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: entry {i}: {x:e} vs {y:e}");
+    }
+}
+
+/// One worker thread per fleet member, each on its own ephemeral loopback
+/// port — the in-bench stand-in for `hmatc shard-worker` processes.
+fn spawn_fleet(op: &Arc<PlannedOperator>, workers: usize) -> Vec<String> {
+    (0..workers)
+        .map(|_| {
+            let listener = bind_listener("127.0.0.1:0").expect("bind worker port");
+            let addr = listener.local_addr().expect("local addr").to_string();
+            let op = op.clone();
+            std::thread::spawn(move || serve_worker(listener, op, ExecutorKind::StaticLpt, None));
+            addr
+        })
+        .collect()
+}
+
+fn main() {
+    let args = hmatc::util::args::Args::from_env();
+    let quick = args.flag("quick");
+    let level = if quick { 2 } else { 3 };
+    let nreq = if quick { 32usize } else { 256 };
+    let workers = 2usize;
+
+    let p = Problem::new(level);
+    let mut h = p.build_h(1e-6);
+    h.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+    let n = p.n();
+    let op = Arc::new(PlannedOperator::from_h_with(Arc::new(h), ExecutorKind::StaticLpt));
+    println!("operator: H compressed, n = {n}, {}", fmt_bytes(op.byte_size()));
+
+    // the request stream and its ground truth, shared by every tier
+    let mut rng = Rng::new(31);
+    let xs: Vec<Vec<f64>> = (0..nreq).map(|_| rng.vector(n)).collect();
+    let want: Vec<Vec<f64>> = xs
+        .iter()
+        .map(|x| {
+            let mut y = vec![0.0; n];
+            op.apply(1.0, x, &mut y);
+            y
+        })
+        .collect();
+
+    let addrs = spawn_fleet(&op, workers);
+    let tiers: Vec<(&str, MvmServer)> = vec![
+        ("single", MvmServer::start(op.clone(), BatchPolicy::default())),
+        (
+            "sharded:2",
+            MvmServer::start_sharded(op.clone(), workers, ExecutorKind::StaticLpt, BatchPolicy::default()).expect("sharded tier"),
+        ),
+        (
+            "remote:2",
+            MvmServer::start_remote(op.clone(), &addrs, BatchPolicy::default(), RemoteConfig::default()).expect("remote fleet"),
+        ),
+    ];
+
+    println!("\n== Ablation: remote fleet vs in-process serving (n={n}, {nreq} requests) ==");
+    let mut t = Table::new(&["tier", "wall", "req/s", "vs single", "net tx", "net rx"]);
+    let mut rows = Vec::new();
+    let mut single_rps = None;
+    for (name, server) in &tiers {
+        let timer = Timer::start();
+        for (x, w) in xs.iter().zip(&want) {
+            let got = server.call(x.clone());
+            assert_bits_eq(&got.y, w, &format!("{name} response"));
+        }
+        let wall = timer.elapsed();
+        let rps = nreq as f64 / wall;
+        let speedup = match single_rps {
+            None => {
+                single_rps = Some(rps);
+                1.0
+            }
+            Some(base) => rps / base,
+        };
+        let (tx, rx, trips) = server.metrics.shard_counters().iter().fold((0u64, 0u64, 0u64), |acc, c| {
+            let s = c.snapshot();
+            (acc.0 + s.net_tx, acc.1 + s.net_rx, acc.2 + s.round_trips)
+        });
+        t.row(vec![
+            (*name).to_string(),
+            fmt_secs(wall),
+            format!("{rps:.1}"),
+            format!("{speedup:.2}x"),
+            if tx > 0 { fmt_bytes(tx as usize) } else { "-".to_string() },
+            if rx > 0 { fmt_bytes(rx as usize) } else { "-".to_string() },
+        ]);
+        rows.push(Json::obj(vec![
+            ("tier", (*name).into()),
+            ("n", n.into()),
+            ("requests", nreq.into()),
+            ("wall_seconds", wall.into()),
+            ("req_per_sec", rps.into()),
+            ("speedup_vs_single", speedup.into()),
+            ("net_tx_bytes", (tx as f64).into()),
+            ("net_rx_bytes", (rx as f64).into()),
+            ("net_round_trips", (trips as f64).into()),
+            ("bitwise_verified", true.into()),
+        ]));
+    }
+    t.print();
+    println!("\nall tiers bitwise-verified against the unsharded plan");
+
+    let doc = Json::obj(vec![("quick", quick.into()), ("workers", workers.into()), ("rows", Json::arr(rows))]);
+    write_result("ablation_remote", &doc);
+    write_bench_json("ablation_remote", &doc);
+}

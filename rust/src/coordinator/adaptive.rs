@@ -20,6 +20,13 @@
 //! `min_samples` samples. Noisy timings that straddle the threshold
 //! therefore trigger at most one swap per `hysteresis` observations, and
 //! alternating noise triggers none.
+//!
+//! The online loop is **in-process only**: [`Sample`] features and the
+//! timing sinks are not serialized by the [`super::wire`] protocol, so the
+//! cross-process fleet ([`crate::coordinator::MvmServer::start_remote`])
+//! serves static schedules — each `shard-worker` can still be launched with
+//! its own calibrated cost profile (`HMATC_COSTS`), which only re-balances
+//! its local packings and never changes served bits.
 
 use crate::plan::costmodel::{self, Sample};
 use crate::plan::PlannedOperator;

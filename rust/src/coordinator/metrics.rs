@@ -4,7 +4,7 @@
 //! backpressure, shard-local cache hit rate) with a
 //! [`crate::store::Residency`]-style one-line summary for the serve log.
 
-use crate::util::stats;
+use crate::util::{fmt_bytes, stats};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -64,6 +64,12 @@ pub struct ShardCounters {
     jobs: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    // network counters of the remote tier's couriers; all zero in-process
+    net_tx: AtomicU64,
+    net_rx: AtomicU64,
+    round_trips: AtomicU64,
+    reconnects: AtomicU64,
+    net_timeouts: AtomicU64,
 }
 
 impl ShardCounters {
@@ -101,6 +107,32 @@ impl ShardCounters {
         self.cache_misses.store(misses, Ordering::Relaxed);
     }
 
+    /// Bytes written to the shard's worker socket (jobs, heartbeats).
+    pub fn add_tx(&self, bytes: u64) {
+        self.net_tx.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Bytes read from the shard's worker socket (results, pongs).
+    pub fn add_rx(&self, bytes: u64) {
+        self.net_rx.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// One job/result round trip completed over the socket.
+    pub fn round_trip(&self) {
+        self.round_trips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One reconnect attempt to the shard's worker (every attempt after the
+    /// courier's very first connect counts, successful or not).
+    pub fn reconnect(&self) {
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One socket read/write deadline expired ([`super::RemoteConfig`]).
+    pub fn net_timeout(&self) {
+        self.net_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> ShardSnapshot {
         ShardSnapshot {
             queued: self.queued.load(Ordering::Relaxed),
@@ -109,6 +141,11 @@ impl ShardCounters {
             jobs: self.jobs.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            net_tx: self.net_tx.load(Ordering::Relaxed),
+            net_rx: self.net_rx.load(Ordering::Relaxed),
+            round_trips: self.round_trips.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            net_timeouts: self.net_timeouts.load(Ordering::Relaxed),
         }
     }
 }
@@ -122,6 +159,16 @@ pub struct ShardSnapshot {
     pub jobs: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Bytes shipped to the shard's remote worker (0 in-process).
+    pub net_tx: u64,
+    /// Bytes received from the shard's remote worker (0 in-process).
+    pub net_rx: u64,
+    /// Completed job/result socket round trips (0 in-process).
+    pub round_trips: u64,
+    /// Reconnect attempts after the courier's first connect (0 in-process).
+    pub reconnects: u64,
+    /// Expired socket deadlines (0 in-process).
+    pub net_timeouts: u64,
 }
 
 impl ShardSnapshot {
@@ -186,6 +233,31 @@ impl Metrics {
             self.rejected(),
             snaps.iter().map(|s| s.backpressure).sum::<u64>(),
             join(&|s| format!("{:.0}%", 100.0 * s.cache_hit_rate())),
+        ))
+    }
+
+    /// One-line network summary of the remote fleet for the serve log, e.g.
+    /// `net: tx 6.1 MiB | rx 3.2 MiB | round-trips 32/32 | reconnects 1 |
+    /// timeouts 0` (round trips per shard, byte/event totals summed).
+    /// `None` when unsharded or when no courier ever touched a socket
+    /// (in-process sharded serving).
+    pub fn net_summary(&self) -> Option<String> {
+        if self.shards.is_empty() {
+            return None;
+        }
+        let snaps: Vec<ShardSnapshot> = self.shards.iter().map(|s| s.snapshot()).collect();
+        let sum = |f: &dyn Fn(&ShardSnapshot) -> u64| -> u64 { snaps.iter().map(f).sum() };
+        let touched = sum(&|s| s.net_tx + s.net_rx + s.round_trips + s.reconnects + s.net_timeouts);
+        if touched == 0 {
+            return None;
+        }
+        Some(format!(
+            "net: tx {} | rx {} | round-trips {} | reconnects {} | timeouts {}",
+            fmt_bytes(sum(&|s| s.net_tx) as usize),
+            fmt_bytes(sum(&|s| s.net_rx) as usize),
+            snaps.iter().map(|s| s.round_trips.to_string()).collect::<Vec<_>>().join("/"),
+            sum(&|s| s.reconnects),
+            sum(&|s| s.net_timeouts),
         ))
     }
 
@@ -368,6 +440,26 @@ mod tests {
             None => assert_eq!((s.prefetch_issued, s.prefetch_deduped), (0, 0)),
             Some(line) => assert!(line.starts_with("prefetch: "), "unexpected summary: {line}"),
         }
+    }
+
+    #[test]
+    fn net_summary_appears_only_when_couriers_ran() {
+        assert!(Metrics::new().net_summary().is_none(), "unsharded: no net line");
+        let m = Metrics::with_shards(2);
+        assert!(m.net_summary().is_none(), "in-process sharded: no net line");
+        let sc = &m.shard_counters()[0];
+        sc.add_tx(2 * 1024 * 1024);
+        sc.add_rx(1024);
+        sc.round_trip();
+        sc.reconnect();
+        sc.net_timeout();
+        let s = sc.snapshot();
+        assert_eq!((s.net_tx, s.net_rx, s.round_trips, s.reconnects, s.net_timeouts), (2 * 1024 * 1024, 1024, 1, 1, 1));
+        let line = m.net_summary().expect("courier activity summarizes");
+        assert!(line.starts_with("net: tx 2.00 MiB"), "unexpected summary: {line}");
+        assert!(line.contains("round-trips 1/0"), "per-shard round trips: {line}");
+        assert!(line.contains("reconnects 1"), "unexpected summary: {line}");
+        assert!(line.contains("timeouts 1"), "unexpected summary: {line}");
     }
 
     #[test]

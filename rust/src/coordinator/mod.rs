@@ -22,12 +22,21 @@
 //! samples into the live cost model — re-balancing the packings whenever
 //! predicted and measured makespans drift apart, without changing a single
 //! served bit.
+//!
+//! With `--remote addr,addr,…` ([`MvmServer::start_remote`]) the shard
+//! workers move out of the process entirely: courier threads carry the
+//! scatter/gather messages over TCP ([`wire`]) to `hmatc shard-worker`
+//! processes, with heartbeats, capped-backoff reconnects, and in-flight
+//! replay ([`remote`]) — still bitwise identical to in-process serving.
 
 mod adaptive;
 mod metrics;
+mod remote;
 mod server;
 mod shard;
+pub mod wire;
 
 pub use adaptive::{OnlineCalibrator, OnlineConfig, OnlineStatus};
 pub use metrics::{Metrics, MetricsSnapshot, ShardCounters, ShardSnapshot};
+pub use remote::{bind_listener, bind_listener_retry, serve_worker, RemoteConfig, RemoteShardClient};
 pub use server::{BatchPolicy, MvmServer, Payload, Request, Response, ServeError, ServeResult};

@@ -1,0 +1,648 @@
+//! Cross-process shard fleet: the socket tier of the scatter/gather
+//! coordinator.
+//!
+//! The in-process sharded tier already speaks a message protocol —
+//! `ShardJob` down per-shard bounded queues, `ShardResult` back up FIFO
+//! channels. This module carries the same messages across a process
+//! boundary, one TCP connection per shard:
+//!
+//! ```text
+//!   dispatcher ── ShardJob ──▶ courier 0 ══ TCP ══▶ shard-worker process 0
+//!              ── ShardJob ──▶ courier 1 ══ TCP ══▶ shard-worker process 1
+//!   gather     ◀─ ShardResult ─ courier i ◀═══════  (owned rows of Y)
+//! ```
+//!
+//! Each **courier** thread replaces one in-process shard worker: it owns
+//! the connection to its worker, encodes each batch's Job frame **once**
+//! (the buffer is shared across shards through the job's `OnceLock`, and
+//! retained for replay), keeps up to [`RemoteConfig::pipeline`] jobs in
+//! flight so socket writes overlap worker compute, and forwards results to
+//! the gather thread — which cannot tell couriers from local workers, so
+//! the served Y stays **bitwise identical** to in-process sharded serving.
+//!
+//! Robustness is the courier's whole job: connect/read/write timeouts,
+//! capped exponential-backoff reconnect, Ping/Pong heartbeats on idle
+//! connections, and in-flight **job replay** after a reconnect (results are
+//! deterministic, so recomputing a lost job returns the same bits). Only
+//! after [`RemoteConfig::max_attempts`] consecutive failed connects does a
+//! batch surface as [`super::ServeError::ShardFailed`] — the remote
+//! generalization of the `catch_unwind` containment of the local tier.
+//!
+//! The **worker** side ([`serve_worker`], behind `hmatc shard-worker`) is a
+//! deliberately simple synchronous accept loop: one trusted coordinator at
+//! a time, handshake (version + operator dims), an Assign that pins the
+//! shard's row slice, then Job→Result until EOF. It keeps no read
+//! timeouts — the courier's heartbeats keep the link busy — and caches its
+//! built [`ShardPlan`] across reconnects of the same assignment.
+
+use super::metrics::ShardCounters;
+use super::shard::{panic_message, ShardJob, ShardResult};
+use super::wire::{
+    assign_frame, encode_frame, encode_job, read_frame, spec_from_assign, write_frame, Frame, WireError, WIRE_VERSION,
+};
+use crate::la::DMatrix;
+use crate::plan::{ExecutorKind, PlannedOperator, ShardPlan, ShardSpec};
+use crate::store::HotCache;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Timeout, backoff, and pipelining knobs of the remote tier.
+#[derive(Clone, Debug)]
+pub struct RemoteConfig {
+    /// TCP connect timeout per attempt.
+    pub connect_timeout: Duration,
+    /// Socket read/write timeout. Must exceed the worst-case batch compute
+    /// of one worker — a slower worker looks dead and triggers a reconnect.
+    pub io_timeout: Duration,
+    /// Idle heartbeat period: with no job in flight, the courier pings the
+    /// worker (or probes a reconnect) this often. Heartbeats never run with
+    /// jobs in flight, so long computes cause no spurious timeouts.
+    pub heartbeat: Duration,
+    /// Initial reconnect backoff, doubled per consecutive failure.
+    pub backoff: Duration,
+    /// Backoff cap.
+    pub backoff_max: Duration,
+    /// Consecutive failed connect attempts before the in-flight jobs fail
+    /// over to [`super::ServeError::ShardFailed`] (the courier then keeps
+    /// trying for subsequent jobs — a returning worker resumes service).
+    pub max_attempts: u32,
+    /// Jobs kept in flight per shard connection, overlapping socket writes
+    /// with worker compute (the worker computes them in order).
+    pub pipeline: usize,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(10),
+            heartbeat: Duration::from_millis(500),
+            backoff: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(2),
+            max_attempts: 5,
+            pipeline: 2,
+        }
+    }
+}
+
+/// All courier socket I/O goes through this wrapper so the per-shard
+/// network byte counters see every frame, handshake and heartbeat included.
+struct Meter<'a> {
+    s: &'a TcpStream,
+    counters: &'a ShardCounters,
+}
+
+impl Read for Meter<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.s.read(buf)?;
+        self.counters.add_rx(n as u64);
+        Ok(n)
+    }
+}
+
+impl Write for Meter<'_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.s.write(buf)?;
+        self.counters.add_tx(n as u64);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.s.flush()
+    }
+}
+
+/// Connect + handshake: Hello/HelloAck (version and operator dims validated
+/// both ways), then Assign/AssignAck pinning the shard's row slice.
+fn connect_handshake(addr: &str, spec: &ShardSpec, dims: (u64, u64), cfg: &RemoteConfig) -> Result<TcpStream, String> {
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("bad worker address {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("worker address {addr} resolves to nothing"))?;
+    let stream = TcpStream::connect_timeout(&sock, cfg.connect_timeout).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream.set_nodelay(true).map_err(|e| format!("set_nodelay {addr}: {e}"))?;
+    stream.set_read_timeout(Some(cfg.io_timeout)).map_err(|e| format!("set timeouts {addr}: {e}"))?;
+    stream.set_write_timeout(Some(cfg.io_timeout)).map_err(|e| format!("set timeouts {addr}: {e}"))?;
+    let mut s = &stream;
+    write_frame(&mut s, &Frame::Hello { version: WIRE_VERSION, nrows: dims.0, ncols: dims.1 })
+        .map_err(|e| format!("handshake write {addr}: {e}"))?;
+    match read_frame(&mut s) {
+        Ok(Frame::HelloAck { version, nrows, ncols }) => {
+            if version != WIRE_VERSION {
+                return Err(format!("worker {addr} speaks wire version {version}, this coordinator speaks {WIRE_VERSION}"));
+            }
+            if (nrows, ncols) != dims {
+                return Err(format!("worker {addr} serves a {nrows}x{ncols} operator, expected {}x{}", dims.0, dims.1));
+            }
+        }
+        Ok(f) => return Err(format!("worker {addr} answered the handshake with {f:?}")),
+        Err(e) => return Err(format!("handshake read {addr}: {e}")),
+    }
+    write_frame(&mut s, &assign_frame(spec)).map_err(|e| format!("assign write {addr}: {e}"))?;
+    match read_frame(&mut s) {
+        Ok(Frame::AssignAck) => Ok(stream),
+        Ok(f) => Err(format!("worker {addr} answered the assignment with {f:?}")),
+        Err(e) => Err(format!("assign read {addr}: {e}")),
+    }
+}
+
+/// One job the courier has admitted but not yet resolved. The encoded Job
+/// frame lives in the `ShardJob`'s `OnceLock`, shared by every shard's
+/// courier (the panel is encoded once per batch) and kept until the result
+/// arrives so a reconnect can replay it byte-identically.
+struct Pending {
+    seq: u64,
+    x: Arc<DMatrix>,
+    frame: Arc<std::sync::OnceLock<Vec<u8>>>,
+    /// Fault injection: ask the worker to drop the connection before this
+    /// job (one-shot — cleared after sending so the replay computes).
+    crash: bool,
+    sent: bool,
+}
+
+/// Courier thread of one remote shard: same channel contract as the
+/// in-process `shard_worker`, with the compute on the far side of a socket.
+pub(crate) fn courier_loop(
+    addr: String,
+    spec: ShardSpec,
+    dims: (u64, u64),
+    cfg: RemoteConfig,
+    jobs: Receiver<ShardJob>,
+    results: Sender<ShardResult>,
+    counters: Arc<ShardCounters>,
+) {
+    let owned = spec.rows.clone();
+    let mut conn: Option<TcpStream> = None;
+    let mut inflight: VecDeque<Pending> = VecDeque::new();
+    let mut backoff = cfg.backoff;
+    let mut fails = 0u32;
+    let mut first_attempt = true;
+    let mut draining = false;
+    let pipeline = cfg.pipeline.max(1);
+    loop {
+        // (A) admit: block for work when idle; the timeout doubles as the
+        // heartbeat tick (ping a live connection, probe a dead one).
+        if inflight.is_empty() && !draining {
+            match jobs.recv_timeout(cfg.heartbeat) {
+                Ok(job) => {
+                    counters.start();
+                    inflight.push_back(admit(job));
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    let dead = match &conn {
+                        Some(s) => match heartbeat(s, &counters) {
+                            Ok(()) => false,
+                            Err(e) => {
+                                if e.is_timeout() {
+                                    counters.net_timeout();
+                                }
+                                true
+                            }
+                        },
+                        None => false,
+                    };
+                    if dead {
+                        conn = None;
+                    }
+                    if conn.is_some() {
+                        continue;
+                    }
+                    // fall through with an empty inflight: the probe branch
+                    // below attempts one reconnect per heartbeat tick so a
+                    // restarted fleet is re-linked before the next batch
+                }
+                Err(RecvTimeoutError::Disconnected) => draining = true,
+            }
+        }
+        // top the pipeline up without blocking
+        while inflight.len() < pipeline && !draining {
+            match jobs.try_recv() {
+                Ok(job) => {
+                    counters.start();
+                    inflight.push_back(admit(job));
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => draining = true,
+            }
+        }
+        if inflight.is_empty() {
+            if draining {
+                return;
+            }
+            if conn.is_some() {
+                continue;
+            }
+            // idle probe: one connect attempt per heartbeat tick, no backoff
+            if !first_attempt {
+                counters.reconnect();
+            }
+            first_attempt = false;
+            if let Ok(s) = connect_handshake(&addr, &spec, dims, &cfg) {
+                conn = Some(s);
+                backoff = cfg.backoff;
+                fails = 0;
+            }
+            continue;
+        }
+        // (B) ensure a live connection; on repeated failure, fail the
+        // in-flight jobs over to the gather thread instead of wedging
+        if conn.is_none() {
+            if !first_attempt {
+                counters.reconnect();
+            }
+            first_attempt = false;
+            match connect_handshake(&addr, &spec, dims, &cfg) {
+                Ok(s) => {
+                    conn = Some(s);
+                    backoff = cfg.backoff;
+                    fails = 0;
+                    for p in &mut inflight {
+                        p.sent = false;
+                    }
+                }
+                Err(e) => {
+                    fails += 1;
+                    if fails >= cfg.max_attempts.max(1) {
+                        fails = 0;
+                        backoff = cfg.backoff;
+                        for p in inflight.drain(..) {
+                            counters.finish();
+                            let out = Err(format!("worker {addr} unreachable after {} attempts: {e}", cfg.max_attempts));
+                            if results.send(ShardResult { seq: p.seq, rows: owned.clone(), out, obs: None }).is_err() {
+                                return;
+                            }
+                        }
+                    } else {
+                        std::thread::sleep(backoff);
+                        backoff = (backoff * 2).min(cfg.backoff_max);
+                    }
+                    continue;
+                }
+            }
+        }
+        let stream = conn.take().expect("connection established above");
+        let mut alive = true;
+        // (C) send every unsent job in order (replays included)
+        for p in inflight.iter_mut().filter(|p| !p.sent) {
+            let mut m = Meter { s: &stream, counters: &counters };
+            if p.crash {
+                p.crash = false;
+                if write_frame(&mut m, &Frame::Crash).is_err() {
+                    alive = false;
+                    break;
+                }
+            }
+            let bytes = p.frame.get_or_init(|| encode_job(p.seq, false, &p.x));
+            if m.write_all(bytes).is_err() {
+                alive = false;
+                break;
+            }
+            p.sent = true;
+        }
+        if !alive {
+            continue;
+        }
+        // (D) read one frame; a timeout or error drops the connection and
+        // marks the in-flight jobs for replay
+        let mut m = Meter { s: &stream, counters: &counters };
+        match read_frame(&mut m) {
+            Ok(Frame::Result { seq, rows, out }) => {
+                let front = inflight.front().expect("inflight nonempty");
+                if seq == front.seq {
+                    let p = inflight.pop_front().expect("checked front");
+                    counters.round_trip();
+                    counters.finish();
+                    let rows = decode_rows(rows).unwrap_or_else(|| owned.clone());
+                    let out = out.map(|part| {
+                        debug_assert_eq!((part.nrows(), part.ncols()), (rows.len(), p.x.ncols()));
+                        part
+                    });
+                    if results.send(ShardResult { seq, rows, out, obs: None }).is_err() {
+                        return;
+                    }
+                } else {
+                    // worker answered out of order — protocol violation;
+                    // drop the connection and replay
+                    alive = false;
+                }
+            }
+            Ok(Frame::Pong) => {}
+            Ok(_) => alive = false,
+            Err(e) => {
+                if e.is_timeout() {
+                    counters.net_timeout();
+                }
+                alive = false;
+            }
+        }
+        if alive {
+            conn = Some(stream);
+        } else {
+            for p in &mut inflight {
+                p.sent = false;
+            }
+        }
+    }
+}
+
+fn admit(job: ShardJob) -> Pending {
+    Pending { seq: job.seq, x: job.x, frame: job.wire, crash: job.fail, sent: false }
+}
+
+fn decode_rows(rows: (u64, u64)) -> Option<Range<usize>> {
+    let start = usize::try_from(rows.0).ok()?;
+    let end = usize::try_from(rows.1).ok()?;
+    (start <= end).then_some(start..end)
+}
+
+/// Ping the worker and wait for the Pong (idle connections only).
+fn heartbeat(stream: &TcpStream, counters: &ShardCounters) -> Result<(), WireError> {
+    let mut m = Meter { s: stream, counters };
+    write_frame(&mut m, &Frame::Ping).map_err(WireError::Io)?;
+    match read_frame(&mut m) {
+        Ok(Frame::Pong) => Ok(()),
+        Ok(f) => Err(WireError::Protocol(format!("expected pong, got {f:?}"))),
+        Err(e) => Err(e),
+    }
+}
+
+/// Serve shard jobs over TCP until the process is killed (or, with
+/// `exit_after_jobs`, until the quota is reached — the deterministic
+/// crash-simulation hook of the fleet tests and the CI smoke). One trusted
+/// coordinator connection at a time; the built [`ShardPlan`] is cached
+/// across reconnects of the same assignment.
+pub fn serve_worker(
+    listener: TcpListener,
+    op: Arc<PlannedOperator>,
+    kind: ExecutorKind,
+    exit_after_jobs: Option<u64>,
+) -> Result<(), String> {
+    if op.is_external_ordering() {
+        return Err("shard workers take internal-ordering operators (drop with_external_ordering)".to_string());
+    }
+    let dims = (op.nrows() as u64, op.ncols() as u64);
+    let mut plan: Option<(ShardSpec, Arc<ShardPlan>)> = None;
+    let mut served = 0u64;
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("shard-worker: accept failed: {e}");
+                continue;
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        match serve_connection(&stream, &op, kind, dims, &mut plan, &mut served, exit_after_jobs) {
+            ConnExit::Quota => return Ok(()),
+            ConnExit::Dropped => {}
+            ConnExit::Rejected(why) => eprintln!("shard-worker: dropped connection: {why}"),
+        }
+    }
+    Ok(())
+}
+
+enum ConnExit {
+    /// `exit_after_jobs` reached: the worker process exits cleanly.
+    Quota,
+    /// Peer went away (EOF) or asked for a simulated crash.
+    Dropped,
+    /// Protocol violation — logged, connection dropped, worker keeps serving.
+    Rejected(String),
+}
+
+fn serve_connection(
+    stream: &TcpStream,
+    op: &Arc<PlannedOperator>,
+    kind: ExecutorKind,
+    dims: (u64, u64),
+    plan: &mut Option<(ShardSpec, Arc<ShardPlan>)>,
+    served: &mut u64,
+    exit_after_jobs: Option<u64>,
+) -> ConnExit {
+    let mut s = stream;
+    // handshake: a wrong-version or wrong-operator coordinator is rejected
+    // before any work frame is interpreted
+    match read_frame(&mut s) {
+        Ok(Frame::Hello { version, nrows, ncols }) => {
+            if version != WIRE_VERSION {
+                return ConnExit::Rejected(format!("peer speaks wire version {version}, this worker speaks {WIRE_VERSION}"));
+            }
+            if (nrows, ncols) != dims {
+                return ConnExit::Rejected(format!(
+                    "peer expects a {nrows}x{ncols} operator, this worker serves {}x{}",
+                    dims.0, dims.1
+                ));
+            }
+            if write_frame(&mut s, &Frame::HelloAck { version: WIRE_VERSION, nrows: dims.0, ncols: dims.1 }).is_err() {
+                return ConnExit::Dropped;
+            }
+        }
+        Ok(f) => return ConnExit::Rejected(format!("expected hello, got {f:?}")),
+        Err(WireError::Closed) => return ConnExit::Dropped,
+        Err(e) => return ConnExit::Rejected(e.to_string()),
+    }
+    loop {
+        match read_frame(&mut s) {
+            Ok(Frame::Assign { index, count, rows, cols }) => {
+                let spec = match spec_from_assign(index, count, rows, cols) {
+                    Ok(sp) => sp,
+                    Err(e) => return ConnExit::Rejected(e.to_string()),
+                };
+                if spec.rows.end > op.nrows() || spec.cols.end > op.ncols() {
+                    return ConnExit::Rejected(format!(
+                        "assignment {:?}/{:?} exceeds the {}x{} operator",
+                        spec.rows,
+                        spec.cols,
+                        op.nrows(),
+                        op.ncols()
+                    ));
+                }
+                let reuse = plan.as_ref().is_some_and(|(have, _)| {
+                    have.index == spec.index && have.count == spec.count && have.rows == spec.rows && have.cols == spec.cols
+                });
+                if !reuse {
+                    let built = Arc::new(ShardPlan::build(op, spec.clone(), kind));
+                    // shard-local decode-once cache, exactly like the
+                    // in-process tier
+                    built.set_hot_cache(HotCache::from_env());
+                    *plan = Some((spec, built));
+                }
+                if write_frame(&mut s, &Frame::AssignAck).is_err() {
+                    return ConnExit::Dropped;
+                }
+            }
+            Ok(Frame::Job { seq, adjoint, x }) => {
+                let Some((_, sp)) = plan.as_ref() else {
+                    return ConnExit::Rejected("job before assignment".to_string());
+                };
+                let want = if adjoint { op.nrows() } else { op.ncols() };
+                if x.nrows() != want {
+                    return ConnExit::Rejected(format!("job panel has {} rows, operator wants {want}", x.nrows()));
+                }
+                let rows = sp.owned(adjoint);
+                let sp = sp.clone();
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    let mut out = DMatrix::zeros(rows.len(), x.ncols());
+                    sp.apply_multi_owned(adjoint, 1.0, &x, None, &mut out);
+                    out
+                }))
+                .map_err(|p| panic_message(p.as_ref()));
+                let frame = Frame::Result { seq, rows: (rows.start as u64, rows.end as u64), out };
+                if s.write_all(&encode_frame(&frame)).is_err() {
+                    return ConnExit::Dropped;
+                }
+                *served += 1;
+                if exit_after_jobs.is_some_and(|quota| *served >= quota) {
+                    return ConnExit::Quota;
+                }
+            }
+            Ok(Frame::Ping) => {
+                if write_frame(&mut s, &Frame::Pong).is_err() {
+                    return ConnExit::Dropped;
+                }
+            }
+            Ok(Frame::Crash) => return ConnExit::Dropped,
+            Ok(f) => return ConnExit::Rejected(format!("unexpected frame {f:?}")),
+            Err(WireError::Closed) => return ConnExit::Dropped,
+            Err(e) => return ConnExit::Rejected(e.to_string()),
+        }
+    }
+}
+
+/// A direct single-shard client over the same handshake and Job/Result
+/// frames the couriers use — the protocol-level test surface (adjoint jobs,
+/// per-shard calls) without standing up a full coordinator.
+pub struct RemoteShardClient {
+    stream: TcpStream,
+    spec: ShardSpec,
+}
+
+impl RemoteShardClient {
+    /// Connect to a worker and assign it `spec`.
+    pub fn connect(addr: &str, spec: &ShardSpec, dims: (u64, u64), cfg: &RemoteConfig) -> Result<RemoteShardClient, String> {
+        let stream = connect_handshake(addr, spec, dims, cfg)?;
+        Ok(RemoteShardClient { stream, spec: spec.clone() })
+    }
+
+    /// The assigned shard spec.
+    pub fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    /// Run one job: ship the panel, return the worker's owned rows of the
+    /// product (row range + row-sliced panel, bitwise exact).
+    pub fn call(&mut self, seq: u64, x: &DMatrix, adjoint: bool) -> Result<(Range<usize>, DMatrix), String> {
+        let mut s = &self.stream;
+        s.write_all(&encode_job(seq, adjoint, x)).map_err(|e| format!("job write: {e}"))?;
+        match read_frame(&mut s) {
+            Ok(Frame::Result { seq: got, rows, out }) => {
+                if got != seq {
+                    return Err(format!("result for job {got}, expected {seq}"));
+                }
+                let rows = decode_rows(rows).ok_or_else(|| format!("bad result row range {rows:?}"))?;
+                out.map(|m| (rows, m))
+            }
+            Ok(f) => Err(format!("expected result, got {f:?}")),
+            Err(e) => Err(format!("result read: {e}")),
+        }
+    }
+}
+
+/// Bind a TCP listener with `SO_REUSEADDR`, so a restarted worker can
+/// rebind its address while the old connection sits in TIME_WAIT — std's
+/// `TcpListener::bind` does not set the option, which would make every
+/// health-checked restart fail for a kernel-imposed minute.
+pub fn bind_listener(addr: &str) -> Result<TcpListener, String> {
+    #[cfg(target_os = "linux")]
+    if let Ok(v4) = addr.parse::<std::net::SocketAddrV4>() {
+        return sys::bind_reuse(v4);
+    }
+    TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))
+}
+
+/// [`bind_listener`] with retry: keep attempting for up to `wait` (100 ms
+/// apart) before giving up — covers the restart race where the dying
+/// worker's socket is still bound.
+pub fn bind_listener_retry(addr: &str, wait: Duration) -> Result<TcpListener, String> {
+    let deadline = Instant::now() + wait;
+    loop {
+        match bind_listener(addr) {
+            Ok(l) => return Ok(l),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+// Raw Linux socket syscalls for the SO_REUSEADDR bind. std already links
+// libc, so plain `extern "C"` declarations suffice — same pattern as
+// `par::topology::sys` and `store::sys`.
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::net::{SocketAddrV4, TcpListener};
+    use std::os::fd::FromRawFd;
+
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, optname: i32, optval: *const i32, optlen: u32) -> i32;
+        fn bind(fd: i32, addr: *const SockaddrIn, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// `struct sockaddr_in`: port and address in network byte order.
+    #[repr(C)]
+    struct SockaddrIn {
+        family: u16,
+        port: u16,
+        addr: u32,
+        zero: [u8; 8],
+    }
+
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOCK_CLOEXEC: i32 = 0x80000;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEADDR: i32 = 2;
+
+    pub fn bind_reuse(v4: SocketAddrV4) -> Result<TcpListener, String> {
+        unsafe {
+            let fd = socket(AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0);
+            if fd < 0 {
+                return Err("socket() failed".to_string());
+            }
+            let one: i32 = 1;
+            if setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one, 4) != 0 {
+                close(fd);
+                return Err("setsockopt(SO_REUSEADDR) failed".to_string());
+            }
+            let sa = SockaddrIn {
+                family: AF_INET as u16,
+                port: v4.port().to_be(),
+                addr: u32::from(*v4.ip()).to_be(),
+                zero: [0; 8],
+            };
+            if bind(fd, &sa, std::mem::size_of::<SockaddrIn>() as u32) != 0 {
+                close(fd);
+                return Err(format!("bind {v4} failed (address in use?)"));
+            }
+            if listen(fd, 128) != 0 {
+                close(fd);
+                return Err(format!("listen {v4} failed"));
+            }
+            // from_raw_fd transfers ownership: the listener closes the fd
+            Ok(TcpListener::from_raw_fd(fd))
+        }
+    }
+}

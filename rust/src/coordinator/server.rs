@@ -45,6 +45,11 @@
 //! surfaces as [`ServeError::ShardFailed`] on every request of the affected
 //! batch; nothing hangs and the worker keeps serving.
 //!
+//! [`MvmServer::start_remote`] swaps the in-process shard workers for
+//! courier threads speaking the [`super::wire`] protocol to `hmatc
+//! shard-worker` processes ([`super::remote`]) — same pipeline, same
+//! bitwise-identical results, plus reconnect/replay fleet robustness.
+//!
 //! # Adaptive serving ([`MvmServer::start_adaptive`])
 //!
 //! The adaptive loop replaces the fixed [`BatchPolicy`] batcher with
@@ -61,6 +66,7 @@
 
 use super::adaptive::{OnlineCalibrator, OnlineConfig, OnlineStatus};
 use super::metrics::{Metrics, ShardCounters};
+use super::remote::{courier_loop, RemoteConfig};
 use super::shard::{shard_worker, ShardJob, ShardObservation, ShardResult};
 use crate::la::DMatrix;
 use crate::plan::costmodel::{Sample, TimingSink};
@@ -68,9 +74,9 @@ use crate::plan::{row_partition, ExecutorKind, HOperator, PlannedOperator, Shard
 use crate::store::HotCache;
 use crate::util::Timer;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 /// A request's right-hand side(s) in internal ordering: one vector or a
@@ -174,7 +180,9 @@ pub struct MvmServer {
     gather: Option<std::thread::JoinHandle<()>>,
     shard_workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
-    next_id: Mutex<u64>,
+    /// Lock-free request id tick: a plain atomic so a client thread that
+    /// panics mid-submit can never poison the front door for everyone else.
+    next_id: AtomicU64,
     /// Requests submitted but not yet replied to (admission control).
     pending: Arc<AtomicUsize>,
     queue_limit: usize,
@@ -206,7 +214,7 @@ impl MvmServer {
             gather: None,
             shard_workers: Vec::new(),
             metrics,
-            next_id: Mutex::new(0),
+            next_id: AtomicU64::new(0),
             pending,
             queue_limit: policy.queue_limit,
             fault: Arc::new(AtomicUsize::new(NO_FAULT)),
@@ -250,7 +258,7 @@ impl MvmServer {
             gather: None,
             shard_workers: Vec::new(),
             metrics,
-            next_id: Mutex::new(0),
+            next_id: AtomicU64::new(0),
             pending,
             queue_limit: policy.queue_limit,
             fault: Arc::new(AtomicUsize::new(NO_FAULT)),
@@ -354,11 +362,88 @@ impl MvmServer {
             gather: Some(gather),
             shard_workers,
             metrics,
-            next_id: Mutex::new(0),
+            next_id: AtomicU64::new(0),
             pending,
             queue_limit: policy.queue_limit,
             fault,
             calibrator,
+        })
+    }
+
+    /// Start the cross-process fleet tier: the same dispatcher → shards →
+    /// gather pipeline as [`MvmServer::start_sharded`], but each shard is a
+    /// **courier thread** speaking the [`super::wire`] protocol to a remote
+    /// `hmatc shard-worker` process — one worker per address, shard `i` of
+    /// the [`row_partition`] assigned to `addrs[i]`. The couriers encode
+    /// each batch's X panel once, pipeline jobs over the sockets so writes
+    /// overlap worker compute, heartbeat idle connections, and reconnect
+    /// with capped backoff + in-flight replay ([`RemoteConfig`]). The
+    /// gather thread cannot tell couriers from local workers: served
+    /// results are **bitwise identical** to in-process sharded serving, and
+    /// an unreachable worker surfaces as [`ServeError::ShardFailed`] after
+    /// [`RemoteConfig::max_attempts`], never as a hang.
+    pub fn start_remote(
+        op: Arc<PlannedOperator>,
+        addrs: &[String],
+        policy: BatchPolicy,
+        cfg: RemoteConfig,
+    ) -> Result<MvmServer, String> {
+        if op.is_external_ordering() {
+            return Err("remote serving takes internal-ordering operators (drop with_external_ordering)".to_string());
+        }
+        if addrs.is_empty() {
+            return Err("remote serving needs at least one worker address".to_string());
+        }
+        let specs = row_partition(&op, addrs.len())?;
+        let metrics = Arc::new(Metrics::with_shards(specs.len()));
+        let counters: Vec<Arc<ShardCounters>> = metrics.shard_counters().to_vec();
+        let pending = Arc::new(AtomicUsize::new(0));
+        let fault = Arc::new(AtomicUsize::new(NO_FAULT));
+        let dims = (op.nrows() as u64, op.ncols() as u64);
+
+        let (tx, rx) = channel::<Request>();
+        let (ticket_tx, ticket_rx) = channel::<Ticket>();
+        let mut job_txs = Vec::with_capacity(specs.len());
+        let mut result_rxs = Vec::with_capacity(specs.len());
+        let mut couriers = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.into_iter().enumerate() {
+            let (job_tx, job_rx) = sync_channel::<ShardJob>(policy.shard_queue.max(1));
+            let (res_tx, res_rx) = channel::<ShardResult>();
+            let (addr, ctr, c) = (addrs[i].clone(), counters[i].clone(), cfg.clone());
+            let handle = std::thread::Builder::new()
+                .name(format!("hmatc-courier-{i}"))
+                .spawn(move || courier_loop(addr, spec, dims, c, job_rx, res_tx, ctr))
+                .expect("spawn shard courier");
+            job_txs.push(job_tx);
+            result_rxs.push(res_rx);
+            couriers.push(handle);
+        }
+
+        let n_in = op.ncols();
+        let (disp_ctrs, disp_fault) = (counters.clone(), fault.clone());
+        let worker = std::thread::Builder::new()
+            .name("hmatc-mvm-dispatch".into())
+            .spawn(move || dispatch_loop(n_in, policy, None, rx, job_txs, ticket_tx, disp_ctrs, disp_fault))
+            .expect("spawn dispatcher");
+
+        let (n_out, bytes) = (op.nrows(), op.byte_size());
+        let (gather_met, gather_pend) = (metrics.clone(), pending.clone());
+        let gather = std::thread::Builder::new()
+            .name("hmatc-mvm-gather".into())
+            .spawn(move || gather_loop(n_out, bytes, ticket_rx, result_rxs, gather_met, gather_pend, None))
+            .expect("spawn gather");
+
+        Ok(MvmServer {
+            tx,
+            worker: Some(worker),
+            gather: Some(gather),
+            shard_workers: couriers,
+            metrics,
+            next_id: AtomicU64::new(0),
+            pending,
+            queue_limit: policy.queue_limit,
+            fault,
+            calibrator: None,
         })
     }
 
@@ -386,11 +471,7 @@ impl MvmServer {
             }
         }
         self.pending.fetch_add(1, Ordering::AcqRel);
-        let id = {
-            let mut g = self.next_id.lock().unwrap();
-            *g += 1;
-            *g
-        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         self.tx.send(Request { id, payload, submitted: Instant::now(), reply }).expect("server gone");
         rx
     }
@@ -422,9 +503,14 @@ impl MvmServer {
         self.calibrator.as_ref()
     }
 
-    /// Test hook: make shard `index` panic on the next batch it receives.
-    /// The affected requests must resolve to [`ServeError::ShardFailed`] —
-    /// no hang — and the shard keeps serving afterwards. No-op unsharded.
+    /// Fault-injection hook: make shard `index` fail its next batch — an
+    /// injected panic on the in-process tier, a simulated worker crash
+    /// (connection drop, then reconnect + replay) on the remote tier. The
+    /// affected requests must resolve to [`ServeError::ShardFailed`] or be
+    /// transparently replayed — no hang — and the tier keeps serving.
+    /// No-op unsharded. Compiled only into tests and `--features
+    /// fault-inject` builds; release servers have no kill switch.
+    #[cfg(any(test, feature = "fault-inject"))]
     pub fn inject_shard_fault(&self, index: usize) {
         self.fault.store(index, Ordering::Release);
     }
@@ -705,9 +791,12 @@ fn dispatch_loop(
             return;
         }
         let failing = fault.swap(NO_FAULT, Ordering::AcqRel);
+        // one wire-encoding slot per batch: remote couriers serialize the
+        // shared X panel into it once, whichever shard's courier is first
+        let wire = Arc::new(OnceLock::new());
         for (i, js) in jobs.iter().enumerate() {
             counters[i].enqueue();
-            let job = ShardJob { seq, x: x.clone(), timed: adaptive.is_some(), fail: i == failing };
+            let job = ShardJob { seq, x: x.clone(), timed: adaptive.is_some(), fail: i == failing, wire: wire.clone() };
             match js.try_send(job) {
                 Ok(()) => {}
                 Err(TrySendError::Full(job)) => {
@@ -1007,5 +1096,36 @@ mod tests {
         }
         let line = sharded.metrics.shard_summary().expect("sharded metrics");
         assert!(line.starts_with("shards: 2"), "unexpected summary: {line}");
+    }
+
+    #[test]
+    fn front_door_survives_panicking_clients() {
+        // regression: request ids were ticked under a Mutex, so one client
+        // thread panicking mid-submit poisoned the lock and every later
+        // submit panicked on `.lock().unwrap()`. The atomic front door must
+        // keep serving — and keep ids unique — after client panics.
+        let h = small_h();
+        let server = Arc::new(MvmServer::start(h.clone(), BatchPolicy::default()));
+        let mut rng = Rng::new(169);
+        let x = rng.vector(h.ncols());
+        for _ in 0..3 {
+            let (srv, xs) = (server.clone(), x.clone());
+            let client = std::thread::spawn(move || {
+                let _rx = srv.submit(xs);
+                panic!("client dies after submitting");
+            });
+            assert!(client.join().is_err(), "client thread must have panicked");
+        }
+        // concurrent well-behaved clients still get served, with unique ids
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let (srv, xs) = (server.clone(), x.clone());
+                std::thread::spawn(move || srv.try_call(xs).expect("front door must keep serving").id)
+            })
+            .collect();
+        let mut ids: Vec<u64> = handles.into_iter().map(|h| h.join().expect("no panic")).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 4, "request ids must stay unique");
     }
 }

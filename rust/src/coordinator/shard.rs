@@ -31,8 +31,14 @@ pub(crate) struct ShardJob {
     /// Record per-chunk timings and harvest an online-calibration
     /// observation for this job (adaptive serving only).
     pub timed: bool,
-    /// Test-only fault injection: panic instead of computing this job.
+    /// Fault injection: panic instead of computing this job (in-process
+    /// tier) or ask the worker to drop the connection (remote tier).
     pub fail: bool,
+    /// Encoded wire Job frame of this batch, shared across every remote
+    /// shard's courier: the X panel is serialized **once per batch**
+    /// ([`super::wire::encode_job`]), whichever courier gets there first.
+    /// Unused (never initialized) by the in-process tier.
+    pub wire: Arc<std::sync::OnceLock<Vec<u8>>>,
 }
 
 /// Per-chunk timing harvest of one timed shard job, folded into the online
@@ -110,8 +116,9 @@ pub(crate) fn shard_worker(shard: Arc<ShardPlan>, jobs: Receiver<ShardJob>, resu
     }
 }
 
-/// Best-effort extraction of a panic payload's message.
-fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+/// Best-effort extraction of a panic payload's message (shared with the
+/// remote worker's `catch_unwind` containment).
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = p.downcast_ref::<String>() {

@@ -1,0 +1,552 @@
+//! Wire codec of the cross-process shard fleet: the `ShardJob` /
+//! `ShardResult` channel protocol of the in-process tier, serialized.
+//!
+//! Every frame is length-prefixed, versioned at the handshake, and
+//! checksummed exactly like the `HMPK` pack header (FNV-1a over the frame
+//! payload) — a truncated, corrupted, or cross-protocol byte stream is
+//! rejected as a [`WireError`], never interpreted:
+//!
+//! ```text
+//!   offset  size   field
+//!   0       4      frame length (little-endian u32; kind + body + checksum)
+//!   4       1      kind (HELLO … CRASH)
+//!   5       n      body (kind-specific, little-endian fields)
+//!   5+n     8      FNV-1a checksum over kind + body
+//! ```
+//!
+//! The connection handshake carries the protocol version and the operator
+//! dimensions both ways ([`Frame::Hello`] / [`Frame::HelloAck`], each
+//! starting with the `HMRW` magic), then the coordinator assigns the
+//! worker its [`crate::plan::ShardSpec`] ([`Frame::Assign`]) so both sides
+//! build the identical row partition. Jobs ship the batch's X panel as raw
+//! little-endian `f64` bits — the round trip is bitwise exact, which is
+//! what keeps remote serving bitwise identical to the in-process tier.
+//! The panel is encoded **once per batch** ([`encode_frame`] returns the
+//! full frame bytes); the couriers of every shard write the same encoded
+//! buffer and retain it for replay after a worker restart.
+//!
+//! [`Frame::Crash`] asks the worker to simulate a crash (drop the
+//! connection without replying) — the remote half of the
+//! `inject_shard_fault` kill-a-worker fault hook.
+
+use crate::la::DMatrix;
+use crate::plan::ShardSpec;
+use crate::store::fnv1a;
+use std::io::{Read, Write};
+
+/// Wire protocol version, exchanged in the handshake.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Handshake magic, first bytes of the Hello/HelloAck bodies.
+pub const WIRE_MAGIC: &[u8; 4] = b"HMRW";
+
+/// Upper bound on a single frame (1 GiB) — a hostile length prefix is
+/// rejected before any allocation.
+pub const MAX_FRAME: usize = 1 << 30;
+
+const K_HELLO: u8 = 1;
+const K_HELLO_ACK: u8 = 2;
+const K_ASSIGN: u8 = 3;
+const K_ASSIGN_ACK: u8 = 4;
+const K_JOB: u8 = 5;
+const K_RESULT: u8 = 6;
+const K_PING: u8 = 7;
+const K_PONG: u8 = 8;
+const K_CRASH: u8 = 9;
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum WireError {
+    /// Clean EOF at a frame boundary: the peer closed the connection.
+    Closed,
+    /// Socket-level failure (timeouts land here as `WouldBlock`/`TimedOut`).
+    Io(std::io::Error),
+    /// Malformed bytes: bad length, checksum, kind, or body shape.
+    Protocol(String),
+}
+
+impl WireError {
+    /// True when the error is a read/write timeout (the socket stays
+    /// syntactically fine but the peer went quiet past the deadline).
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, WireError::Io(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock || e.kind() == std::io::ErrorKind::TimedOut)
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Io(e) => write!(f, "io error: {e}"),
+            WireError::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One protocol message.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Coordinator → worker, first frame on every connection.
+    Hello { version: u32, nrows: u64, ncols: u64 },
+    /// Worker → coordinator handshake reply; each side validates the other.
+    HelloAck { version: u32, nrows: u64, ncols: u64 },
+    /// Coordinator → worker: the shard of the row partition to serve.
+    Assign { index: u64, count: u64, rows: (u64, u64), cols: (u64, u64) },
+    /// Worker → coordinator: shard plan built, ready for jobs.
+    AssignAck,
+    /// One batch's X panel (raw little-endian f64 bits, bitwise exact).
+    Job { seq: u64, adjoint: bool, x: DMatrix },
+    /// The worker's owned rows of the batch product, or its error message.
+    Result { seq: u64, rows: (u64, u64), out: Result<DMatrix, String> },
+    /// Heartbeat probe (sent on idle connections).
+    Ping,
+    /// Heartbeat reply.
+    Pong,
+    /// Fault injection: simulate a worker crash (drop the connection).
+    Crash,
+}
+
+/// Build the Assign frame for a shard spec.
+pub fn assign_frame(spec: &ShardSpec) -> Frame {
+    Frame::Assign {
+        index: spec.index as u64,
+        count: spec.count as u64,
+        rows: (spec.rows.start as u64, spec.rows.end as u64),
+        cols: (spec.cols.start as u64, spec.cols.end as u64),
+    }
+}
+
+/// Rebuild the shard spec an Assign frame describes. The modeled cost share
+/// is not shipped — the worker's plan slices by row range, not by cost.
+pub fn spec_from_assign(index: u64, count: u64, rows: (u64, u64), cols: (u64, u64)) -> Result<ShardSpec, WireError> {
+    let u = |v: u64, what: &str| -> Result<usize, WireError> {
+        usize::try_from(v).map_err(|_| WireError::Protocol(format!("{what} {v} does not fit in memory")))
+    };
+    let spec = ShardSpec {
+        index: u(index, "shard index")?,
+        count: u(count, "shard count")?,
+        rows: u(rows.0, "row start")?..u(rows.1, "row end")?,
+        cols: u(cols.0, "col start")?..u(cols.1, "col end")?,
+        cost: 0.0,
+    };
+    if spec.rows.start > spec.rows.end || spec.cols.start > spec.cols.end || spec.index >= spec.count.max(1) {
+        return Err(WireError::Protocol(format!(
+            "inverted shard spec: index {index}/{count}, rows {rows:?}, cols {cols:?}"
+        )));
+    }
+    Ok(spec)
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &DMatrix) {
+    out.extend_from_slice(&(m.nrows() as u64).to_le_bytes());
+    out.extend_from_slice(&(m.ncols() as u64).to_le_bytes());
+    out.reserve(m.data().len() * 8);
+    for v in m.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn finish_frame(p: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + p.len() + 8);
+    out.extend_from_slice(&((p.len() + 8) as u32).to_le_bytes());
+    out.extend_from_slice(&p);
+    out.extend_from_slice(&fnv1a(&p).to_le_bytes());
+    out
+}
+
+/// Encode a Job frame straight from a borrowed panel — the encode-once path
+/// of the couriers: one buffer per batch, shared across shards, reconnects,
+/// and replays, without cloning the matrix into a [`Frame`].
+pub fn encode_job(seq: u64, adjoint: bool, x: &DMatrix) -> Vec<u8> {
+    let mut p = Vec::with_capacity(26 + x.data().len() * 8);
+    p.push(K_JOB);
+    p.extend_from_slice(&seq.to_le_bytes());
+    p.push(u8::from(adjoint));
+    put_matrix(&mut p, x);
+    finish_frame(p)
+}
+
+/// Encode a frame into its full wire bytes (length prefix, kind, body,
+/// checksum). Couriers encode each batch's Job frame once and reuse the
+/// buffer across shards, reconnects and replays.
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    // payload = kind byte + body
+    let mut p = Vec::with_capacity(64);
+    match f {
+        Frame::Hello { version, nrows, ncols } | Frame::HelloAck { version, nrows, ncols } => {
+            p.push(if matches!(f, Frame::Hello { .. }) { K_HELLO } else { K_HELLO_ACK });
+            p.extend_from_slice(WIRE_MAGIC);
+            p.extend_from_slice(&version.to_le_bytes());
+            p.extend_from_slice(&nrows.to_le_bytes());
+            p.extend_from_slice(&ncols.to_le_bytes());
+        }
+        Frame::Assign { index, count, rows, cols } => {
+            p.push(K_ASSIGN);
+            for v in [*index, *count, rows.0, rows.1, cols.0, cols.1] {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::AssignAck => p.push(K_ASSIGN_ACK),
+        Frame::Job { seq, adjoint, x } => {
+            p.push(K_JOB);
+            p.extend_from_slice(&seq.to_le_bytes());
+            p.push(u8::from(*adjoint));
+            put_matrix(&mut p, x);
+        }
+        Frame::Result { seq, rows, out } => {
+            p.push(K_RESULT);
+            p.extend_from_slice(&seq.to_le_bytes());
+            p.extend_from_slice(&rows.0.to_le_bytes());
+            p.extend_from_slice(&rows.1.to_le_bytes());
+            match out {
+                Ok(m) => {
+                    p.push(0);
+                    put_matrix(&mut p, m);
+                }
+                Err(msg) => {
+                    p.push(1);
+                    let b = msg.as_bytes();
+                    p.extend_from_slice(&(b.len() as u32).to_le_bytes());
+                    p.extend_from_slice(b);
+                }
+            }
+        }
+        Frame::Ping => p.push(K_PING),
+        Frame::Pong => p.push(K_PONG),
+        Frame::Crash => p.push(K_CRASH),
+    }
+    finish_frame(p)
+}
+
+/// Encode and write one frame.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode_frame(f))
+}
+
+/// Bounds-checked little-endian cursor over a frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.b.len());
+        match end {
+            Some(e) => {
+                let s = &self.b[self.pos..e];
+                self.pos = e;
+                Ok(s)
+            }
+            None => Err(WireError::Protocol(format!("truncated body reading {what}"))),
+        }
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn matrix(&mut self) -> Result<DMatrix, WireError> {
+        let nrows = usize::try_from(self.u64("matrix rows")?)
+            .map_err(|_| WireError::Protocol("matrix rows do not fit in memory".into()))?;
+        let ncols = usize::try_from(self.u64("matrix cols")?)
+            .map_err(|_| WireError::Protocol("matrix cols do not fit in memory".into()))?;
+        let n = nrows
+            .checked_mul(ncols)
+            .and_then(|n| n.checked_mul(8))
+            .ok_or_else(|| WireError::Protocol(format!("matrix size {nrows}x{ncols} overflows")))?;
+        let raw = self.take(n, "matrix data")?;
+        let data = raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        Ok(DMatrix::from_vec(nrows, ncols, data))
+    }
+
+    fn done(self, kind: &str) -> Result<(), WireError> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(WireError::Protocol(format!("{} trailing bytes after {kind} body", self.b.len() - self.pos)))
+        }
+    }
+}
+
+fn decode(kind: u8, body: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cur { b: body, pos: 0 };
+    let f = match kind {
+        K_HELLO | K_HELLO_ACK => {
+            let magic = c.take(4, "magic")?;
+            if magic != WIRE_MAGIC {
+                return Err(WireError::Protocol("bad handshake magic (not an hmatc wire peer)".into()));
+            }
+            let version = c.u32("version")?;
+            let nrows = c.u64("nrows")?;
+            let ncols = c.u64("ncols")?;
+            if kind == K_HELLO {
+                Frame::Hello { version, nrows, ncols }
+            } else {
+                Frame::HelloAck { version, nrows, ncols }
+            }
+        }
+        K_ASSIGN => Frame::Assign {
+            index: c.u64("index")?,
+            count: c.u64("count")?,
+            rows: (c.u64("rows.start")?, c.u64("rows.end")?),
+            cols: (c.u64("cols.start")?, c.u64("cols.end")?),
+        },
+        K_ASSIGN_ACK => Frame::AssignAck,
+        K_JOB => {
+            let seq = c.u64("seq")?;
+            let adjoint = match c.u8("adjoint flag")? {
+                0 => false,
+                1 => true,
+                other => return Err(WireError::Protocol(format!("bad adjoint flag {other}"))),
+            };
+            Frame::Job { seq, adjoint, x: c.matrix()? }
+        }
+        K_RESULT => {
+            let seq = c.u64("seq")?;
+            let rows = (c.u64("rows.start")?, c.u64("rows.end")?);
+            let out = match c.u8("status")? {
+                0 => Ok(c.matrix()?),
+                1 => {
+                    let len = c.u32("error length")? as usize;
+                    let raw = c.take(len, "error message")?;
+                    Err(String::from_utf8_lossy(raw).into_owned())
+                }
+                other => return Err(WireError::Protocol(format!("bad result status {other}"))),
+            };
+            Frame::Result { seq, rows, out }
+        }
+        K_PING => Frame::Ping,
+        K_PONG => Frame::Pong,
+        K_CRASH => Frame::Crash,
+        other => return Err(WireError::Protocol(format!("unknown frame kind {other}"))),
+    };
+    c.done(kind_name(kind))?;
+    Ok(f)
+}
+
+fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        K_HELLO => "hello",
+        K_HELLO_ACK => "hello-ack",
+        K_ASSIGN => "assign",
+        K_ASSIGN_ACK => "assign-ack",
+        K_JOB => "job",
+        K_RESULT => "result",
+        K_PING => "ping",
+        K_PONG => "pong",
+        K_CRASH => "crash",
+        _ => "unknown",
+    }
+}
+
+/// Read and validate one frame. EOF exactly between frames is
+/// [`WireError::Closed`]; EOF or a timeout mid-frame, a hostile length, a
+/// checksum mismatch, or a malformed body is an error — never UB, never a
+/// partial frame handed to the caller.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    WireError::Closed
+                } else {
+                    WireError::Protocol("connection closed mid frame header".into())
+                })
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if !(9..=MAX_FRAME).contains(&len) {
+        return Err(WireError::Protocol(format!("frame length {len} outside [9, {MAX_FRAME}]")));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Protocol("connection closed mid frame".into())
+        } else {
+            WireError::Io(e)
+        }
+    })?;
+    let (payload, check) = buf.split_at(len - 8);
+    let stored = u64::from_le_bytes(check.try_into().unwrap());
+    if fnv1a(payload) != stored {
+        return Err(WireError::Protocol("frame checksum mismatch".into()));
+    }
+    decode(payload[0], &payload[1..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = encode_frame(f);
+        let mut r = &bytes[..];
+        let back = read_frame(&mut r).expect("roundtrip decodes");
+        assert!(r.is_empty(), "decoder consumed the whole frame");
+        back
+    }
+
+    #[test]
+    fn frames_roundtrip_bitwise() {
+        let mut rng = Rng::new(99);
+        let x = DMatrix::random(7, 3, &mut rng);
+        match roundtrip(&Frame::Hello { version: WIRE_VERSION, nrows: 12, ncols: 34 }) {
+            Frame::Hello { version, nrows, ncols } => assert_eq!((version, nrows, ncols), (WIRE_VERSION, 12, 34)),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip(&Frame::Assign { index: 1, count: 3, rows: (5, 9), cols: (0, 4) }) {
+            Frame::Assign { index, count, rows, cols } => {
+                assert_eq!((index, count, rows, cols), (1, 3, (5, 9), (0, 4)));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip(&Frame::Job { seq: 42, adjoint: true, x: x.clone() }) {
+            Frame::Job { seq, adjoint, x: back } => {
+                assert_eq!((seq, adjoint), (42, true));
+                assert_eq!((back.nrows(), back.ncols()), (7, 3));
+                for (a, b) in back.data().iter().zip(x.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "f64 bits survive the wire");
+                }
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match roundtrip(&Frame::Result { seq: 7, rows: (3, 10), out: Err("boom".into()) }) {
+            Frame::Result { seq, rows, out } => {
+                assert_eq!((seq, rows), (7, (3, 10)));
+                assert_eq!(out.unwrap_err(), "boom");
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        for f in [Frame::AssignAck, Frame::Ping, Frame::Pong, Frame::Crash] {
+            let name = format!("{f:?}");
+            assert_eq!(format!("{:?}", roundtrip(&f)), name);
+        }
+    }
+
+    #[test]
+    fn encode_job_matches_the_frame_encoder_byte_for_byte() {
+        let mut rng = Rng::new(7);
+        let x = DMatrix::random(5, 2, &mut rng);
+        assert_eq!(encode_job(11, false, &x), encode_frame(&Frame::Job { seq: 11, adjoint: false, x: x.clone() }));
+        assert_eq!(encode_job(11, true, &x), encode_frame(&Frame::Job { seq: 11, adjoint: true, x }));
+    }
+
+    #[test]
+    fn clean_eof_is_closed_and_midframe_eof_is_not() {
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut empty), Err(WireError::Closed)));
+        let bytes = encode_frame(&Frame::Ping);
+        for cut in 1..bytes.len() {
+            let mut r = &bytes[..cut];
+            match read_frame(&mut r) {
+                Err(WireError::Protocol(_)) => {}
+                other => panic!("cut at {cut}: expected protocol error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_lengths_and_checksums_rejected() {
+        // hostile length prefix: rejected before any allocation
+        let mut r: &[u8] = &u32::MAX.to_le_bytes();
+        assert!(matches!(read_frame(&mut r), Err(WireError::Protocol(_))));
+        let mut r: &[u8] = &3u32.to_le_bytes();
+        assert!(matches!(read_frame(&mut r), Err(WireError::Protocol(_))));
+        // flipped payload byte: checksum mismatch
+        let mut bytes = encode_frame(&Frame::Assign { index: 0, count: 2, rows: (0, 5), cols: (0, 5) });
+        bytes[6] ^= 0xff;
+        let mut r = &bytes[..];
+        match read_frame(&mut r) {
+            Err(WireError::Protocol(m)) => assert!(m.contains("checksum"), "{m}"),
+            other => panic!("expected checksum error, got {other:?}"),
+        }
+        // unknown kind (checksum fixed up to isolate the kind check)
+        let payload = [200u8, 1, 2, 3];
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&((payload.len() + 8) as u32).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        let mut r = &bytes[..];
+        match read_frame(&mut r) {
+            Err(WireError::Protocol(m)) => assert!(m.contains("unknown frame kind"), "{m}"),
+            other => panic!("expected kind error, got {other:?}"),
+        }
+        // bad handshake magic
+        let mut bytes = encode_frame(&Frame::Hello { version: WIRE_VERSION, nrows: 1, ncols: 1 });
+        // recompute a valid checksum over a corrupted magic so only the magic
+        // check can fire
+        bytes[5] = b'X';
+        let n = bytes.len();
+        let sum = fnv1a(&bytes[4..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let mut r = &bytes[..];
+        match read_frame(&mut r) {
+            Err(WireError::Protocol(m)) => assert!(m.contains("magic"), "{m}"),
+            other => panic!("expected magic error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_matrix_dims_rejected() {
+        // a Job frame claiming a u64::MAX-sized matrix must fail the
+        // checked size math, not allocate or wrap
+        let mut p = vec![K_JOB];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.push(0);
+        p.extend_from_slice(&u64::MAX.to_le_bytes());
+        p.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&((p.len() + 8) as u32).to_le_bytes());
+        bytes.extend_from_slice(&p);
+        bytes.extend_from_slice(&fnv1a(&p).to_le_bytes());
+        let mut r = &bytes[..];
+        assert!(matches!(read_frame(&mut r), Err(WireError::Protocol(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let p = [K_PING, 0xAB];
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&((p.len() + 8) as u32).to_le_bytes());
+        bytes.extend_from_slice(&p);
+        bytes.extend_from_slice(&fnv1a(&p).to_le_bytes());
+        let mut r = &bytes[..];
+        match read_frame(&mut r) {
+            Err(WireError::Protocol(m)) => assert!(m.contains("trailing"), "{m}"),
+            other => panic!("expected trailing-bytes error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shard_spec_roundtrips_through_assign() {
+        let spec = ShardSpec { index: 1, count: 2, rows: 10..20, cols: 3..9, cost: 7.5 };
+        let Frame::Assign { index, count, rows, cols } = assign_frame(&spec) else {
+            panic!("assign_frame builds Assign");
+        };
+        let back = spec_from_assign(index, count, rows, cols).expect("valid spec");
+        assert_eq!((back.index, back.count), (spec.index, spec.count));
+        assert_eq!((back.rows, back.cols), (spec.rows, spec.cols));
+        // inverted ranges and out-of-range indices are rejected
+        assert!(spec_from_assign(0, 1, (5, 2), (0, 0)).is_err());
+        assert!(spec_from_assign(3, 2, (0, 1), (0, 1)).is_err());
+    }
+}

@@ -11,6 +11,8 @@
 //!                 [--online 1|key=value,…]
 //! hmatc calibrate [--level 3 --eps 1e-6 --fmt h|uh|h2 --rounds 8] [--quick] [--out costs.json]
 //! hmatc solve     --level 3 --eps 1e-6 [--compress]
+//! hmatc shard-worker --listen 127.0.0.1:7451 [--pack operator.hmpk.shard0] [--exit-after-jobs N]
+//!                 (same --level/--eps/--fmt/--compress/--codec flags as serve)
 //! hmatc roofline
 //! ```
 //!
@@ -42,11 +44,20 @@
 //! re-balanced packings when predicted and measured makespans drift apart
 //! (`cost_source` becomes `online`). Served bits are identical to the static
 //! loop; composes with `--shards N`.
+//!
+//! `serve --remote host:port,…` moves the shard workers out of the process:
+//! each address is one `hmatc shard-worker` serving its row shard over TCP,
+//! couriers carry the scatter/gather frames with heartbeats and
+//! capped-backoff reconnects (`--connect-timeout-ms --net-timeout-ms
+//! --heartbeat-ms --backoff-ms --backoff-max-ms --net-retries --pipeline`),
+//! and after the load a reference request is checked bit-for-bit against the
+//! local operator (`remote bitwise ok`). Workers rebuild the same operator
+//! from the same flags and may map a `pack --shards N` replica via `--pack`.
 
 use hmatc::bench::{bench_fn, measure_peak_bandwidth};
 use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
 use hmatc::compress::{Codec, CompressionConfig};
-use hmatc::coordinator::{BatchPolicy, MvmServer, OnlineConfig};
+use hmatc::coordinator::{BatchPolicy, MvmServer, OnlineConfig, RemoteConfig};
 use hmatc::geometry::icosphere;
 use hmatc::hmatrix::HMatrix;
 use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
@@ -70,9 +81,10 @@ fn main() {
         "serve" => serve_cmd(&args),
         "calibrate" => calibrate_cmd(&args),
         "solve" => solve_cmd(&args),
+        "shard-worker" => shard_worker_cmd(&args),
         "roofline" => roofline_cmd(),
         other => {
-            eprintln!("unknown command '{other}'. Commands: info build mvm pack serve calibrate solve roofline");
+            eprintln!("unknown command '{other}'. Commands: info build mvm pack serve calibrate solve shard-worker roofline");
             std::process::exit(2);
         }
     }
@@ -349,7 +361,25 @@ fn serve_cmd(args: &Args) {
         None if args.flag("online") => Some(OnlineConfig::default()),
         None => OnlineConfig::from_env(),
     };
-    let plan = args.flag("plan") || shards > 1 || online.is_some();
+    // --remote addr,addr,… serves through out-of-process shard workers; the
+    // courier tier replaces the in-process shard pool, so it excludes
+    // --shards and (workers run static schedules) --online
+    let remote: Vec<String> = args
+        .str_or("remote", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if !remote.is_empty() && shards > 1 {
+        eprintln!("--remote replaces the in-process shard pool; drop --shards (each address is one shard)");
+        std::process::exit(2);
+    }
+    if !remote.is_empty() && online.is_some() {
+        eprintln!("--remote serves static schedules; the online adaptation loop is in-process only (drop --online)");
+        std::process::exit(2);
+    }
+    let plan = args.flag("plan") || shards > 1 || online.is_some() || !remote.is_empty();
     let kind = args.parse_or("executor", ExecutorKind::from_env());
     // --costs beats HMATC_COSTS; bad files warn and keep the static costs
     let profile = load_costs(args);
@@ -439,7 +469,13 @@ fn serve_cmd(args: &Args) {
     };
     let kernels = hmatc::compress::dispatch::kernels_label();
     if plan {
-        let exec = if shards > 1 { format!("{kind} × {shards} shards") } else { kind.to_string() };
+        let exec = if !remote.is_empty() {
+            format!("remote × {} workers", remote.len())
+        } else if shards > 1 {
+            format!("{kind} × {shards} shards")
+        } else {
+            kind.to_string()
+        };
         println!("serving {} operator ({}), executor {exec}, codec kernels {kernels}, costs {cost_src}", op.format_name(), fmt_bytes(op.byte_size()));
     } else {
         println!("serving {} operator ({}), codec kernels {kernels}", op.format_name(), fmt_bytes(op.byte_size()));
@@ -456,7 +492,28 @@ fn serve_cmd(args: &Args) {
     };
     // kept aside to report the post-serve cost source of the adaptive loop
     let mut status_op: Option<Arc<PlannedOperator>> = None;
-    let server = if shards > 1 {
+    // kept aside as the local reference the remote fleet is checked against
+    let mut remote_ref: Option<Arc<PlannedOperator>> = None;
+    let server = if !remote.is_empty() {
+        let po = planned_slot.take().expect("--remote implies --plan");
+        remote_ref = Some(po.clone());
+        let rcfg = RemoteConfig {
+            connect_timeout: std::time::Duration::from_millis(args.num_or("connect-timeout-ms", 1_000u64)),
+            io_timeout: std::time::Duration::from_millis(args.num_or("net-timeout-ms", 10_000u64)),
+            heartbeat: std::time::Duration::from_millis(args.num_or("heartbeat-ms", 500u64)),
+            backoff: std::time::Duration::from_millis(args.num_or("backoff-ms", 50u64)),
+            backoff_max: std::time::Duration::from_millis(args.num_or("backoff-max-ms", 2_000u64)),
+            max_attempts: args.num_or("net-retries", 5u32),
+            pipeline: args.num_or("pipeline", 2usize),
+        };
+        match MvmServer::start_remote(po, &remote, policy, rcfg) {
+            Ok(s) => Arc::new(s),
+            Err(e) => {
+                eprintln!("--remote: {e}");
+                std::process::exit(2);
+            }
+        }
+    } else if shards > 1 {
         let po = planned_slot.take().expect("--shards implies --plan");
         if online.is_some() {
             status_op = Some(po.clone());
@@ -511,8 +568,9 @@ fn serve_cmd(args: &Args) {
         fmt_secs(m.p99_latency),
         m.effective_gbs
     );
-    // per-shard hit rates live in the shard summary below
-    if let Some((hits, misses)) = op_stats.cache_counters().filter(|_| shards <= 1) {
+    // per-shard hit rates live in the shard summary below; with --remote the
+    // hot caches live in the worker processes and are reported there
+    if let Some((hits, misses)) = op_stats.cache_counters().filter(|_| shards <= 1 && remote.is_empty()) {
         let total = hits + misses;
         let rate = if total == 0 { 0.0 } else { 100.0 * hits as f64 / total as f64 };
         println!("hot cache: {hits} hits / {misses} misses ({rate:.1}% hit rate)");
@@ -520,8 +578,34 @@ fn serve_cmd(args: &Args) {
     if let Some(line) = server.metrics.shard_summary() {
         println!("{line}");
     }
+    if let Some(line) = server.metrics.net_summary() {
+        println!("{line}");
+    }
     if let Some(line) = m.prefetch_summary() {
         println!("{line}");
+    }
+    // the remote acceptance gate: one more request through the fleet,
+    // checked bit-for-bit against the local operator it was built from
+    if let Some(po) = &remote_ref {
+        let mut rng = Rng::new(4242);
+        let x = rng.vector(n);
+        match server.try_call(x.clone()) {
+            Ok(r) => {
+                let mut want = vec![0.0; po.nrows()];
+                po.apply(1.0, &x, &mut want);
+                let same = r.y.len() == want.len() && r.y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                if same {
+                    println!("remote bitwise ok ({} workers)", remote.len());
+                } else {
+                    eprintln!("remote MISMATCH: fleet result differs from the local reference");
+                    std::process::exit(1);
+                }
+            }
+            Err(e) => {
+                eprintln!("remote reference check failed: {e}");
+                std::process::exit(1);
+            }
+        }
     }
     if let Some(st) = server.online_status() {
         println!(
@@ -552,6 +636,102 @@ fn load_costs(args: &Args) -> Option<CostProfile> {
             }
         },
         None => hmatc::plan::costmodel::costs_from_env(),
+    }
+}
+
+/// `hmatc shard-worker`: bind `--listen` (SO_REUSEADDR, retried for 10 s so
+/// a restarted worker can reclaim the port from its dead predecessor), build
+/// the same operator `serve` builds from the same flags, and serve shard
+/// jobs over TCP until killed. `--pack <file>` maps a `pack --shards N`
+/// replica (the worker's own inode and page-cache stream); `--exit-after-jobs`
+/// is the deterministic crash-simulation quota of the fleet tests and the CI
+/// smoke. The coordinator assigns the row range over the wire, so one binary
+/// invocation serves whichever shard it is handed.
+fn shard_worker_cmd(args: &Args) {
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    // bind before the (slow) operator build: the coordinator's connect then
+    // lands in the listen backlog instead of being refused
+    let listener = match hmatc::coordinator::bind_listener_retry(&listen, std::time::Duration::from_secs(10)) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("--listen {listen}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let local = listener.local_addr().map(|a| a.to_string()).unwrap_or(listen);
+    println!("shard-worker listening on {local}");
+    // scripts scrape the port from the line above before we spend seconds
+    // building — make sure it is out
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    let p = problem(args);
+    let h = build_h(args, &p);
+    let eps = args.num_or("eps", 1e-6f64);
+    let fmt = args.str_or("fmt", "h");
+    let compress = args.flag("compress");
+    let cfg = cfg_from(args);
+    let kind = args.parse_or("executor", ExecutorKind::from_env());
+    let store = args.get("pack").map(|path| match hmatc::store::MappedStore::open(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("--pack {path}: {e}");
+            std::process::exit(2);
+        }
+    });
+    let attach_or_die = |r: Result<(), String>| {
+        if let Err(e) = r {
+            eprintln!("--pack: {e} (pack and shard-worker must use the same build/compress flags)");
+            std::process::exit(2);
+        }
+    };
+    let op = match fmt.as_str() {
+        "h" => {
+            let mut h = h;
+            if compress {
+                h.compress(&cfg);
+            }
+            if let Some(store) = &store {
+                attach_or_die(hmatc::store::attach_h(&mut h, store));
+            }
+            PlannedOperator::from_h_with(Arc::new(h), kind)
+        }
+        "uh" => {
+            let mut uh = hmatc::uniform::build_from_h(&h, eps, hmatc::uniform::CouplingKind::Combined);
+            if compress {
+                uh.compress(&cfg);
+            }
+            if let Some(store) = &store {
+                attach_or_die(hmatc::store::attach_uh(&mut uh, store));
+            }
+            PlannedOperator::from_uniform_with(Arc::new(uh), kind)
+        }
+        "h2" => {
+            let mut h2 = hmatc::h2::build_from_h(&h, eps);
+            if compress {
+                h2.compress(&cfg);
+            }
+            if let Some(store) = &store {
+                attach_or_die(hmatc::store::attach_h2(&mut h2, store));
+            }
+            PlannedOperator::from_h2_with(Arc::new(h2), kind)
+        }
+        other => {
+            eprintln!("unknown format '{other}' (h|uh|h2)");
+            std::process::exit(2);
+        }
+    };
+    if let Some(profile) = load_costs(args) {
+        op.rebalance(&profile);
+    }
+    let quota = args.num_or("exit-after-jobs", 0u64);
+    println!("shard-worker ready: {} operator ({})", op.format_name(), fmt_bytes(op.byte_size()));
+    let _ = std::io::stdout().flush();
+    match hmatc::coordinator::serve_worker(listener, Arc::new(op), kind, (quota > 0).then_some(quota)) {
+        Ok(()) => println!("shard-worker: job quota reached, exiting"),
+        Err(e) => {
+            eprintln!("shard-worker: {e}");
+            std::process::exit(1);
+        }
     }
 }
 

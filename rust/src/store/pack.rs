@@ -83,8 +83,12 @@ impl MappedStore {
         if version != PACK_VERSION {
             return Err(format!("{path}: version mismatch (file v{version}, supported v{PACK_VERSION})"));
         }
-        let n = read_u64(b, 8) as usize;
-        let payload_len = read_u64(b, 16) as usize;
+        // All offset/length arithmetic below is checked: the header fields
+        // are attacker-controlled u64s, and a narrowing `as usize` (32-bit
+        // targets) or an unchecked add could wrap, pass the bounds check,
+        // and turn a hostile file into out-of-bounds payload reads.
+        let n = usize::try_from(read_u64(b, 8)).map_err(|_| format!("{path}: extent count overflow"))?;
+        let payload_len = usize::try_from(read_u64(b, 16)).map_err(|_| format!("{path}: payload length overflow"))?;
         let header_len = FIXED_HEADER.checked_add(n.checked_mul(EXTENT_BYTES).ok_or_else(|| format!("{path}: extent count overflow"))?).and_then(|h| h.checked_add(8)).ok_or_else(|| format!("{path}: header length overflow"))?;
         let total = header_len.checked_add(payload_len).ok_or_else(|| format!("{path}: file length overflow"))?;
         if b.len() != total {
@@ -99,11 +103,15 @@ impl MappedStore {
         for i in 0..n {
             let off = FIXED_HEADER + i * EXTENT_BYTES;
             let e = Extent { level: read_u32(b, off), off: read_u64(b, off + 4), len: read_u64(b, off + 12), checksum: read_u64(b, off + 20) };
-            let end = e.off.checked_add(e.len).ok_or_else(|| format!("{path}: extent {i} range overflow"))?;
-            if end as usize > payload_len {
-                return Err(format!("{path}: extent {i} [{}, {end}) outside payload ({payload_len} bytes)", e.off));
+            let e_off = usize::try_from(e.off).map_err(|_| format!("{path}: extent {i} offset overflow"))?;
+            let e_len = usize::try_from(e.len).map_err(|_| format!("{path}: extent {i} length overflow"))?;
+            let end = e_off.checked_add(e_len).ok_or_else(|| format!("{path}: extent {i} range overflow"))?;
+            if end > payload_len {
+                return Err(format!("{path}: extent {i} [{e_off}, {end}) outside payload ({payload_len} bytes)"));
             }
-            let data = &b[payload_base + e.off as usize..payload_base + end as usize];
+            let start = payload_base.checked_add(e_off).ok_or_else(|| format!("{path}: extent {i} range overflow"))?;
+            let stop = payload_base.checked_add(end).ok_or_else(|| format!("{path}: extent {i} range overflow"))?;
+            let data = b.get(start..stop).ok_or_else(|| format!("{path}: extent {i} escapes the mapping"))?;
             if fnv1a(data) != e.checksum {
                 return Err(format!("{path}: extent {i} checksum mismatch"));
             }
@@ -129,7 +137,11 @@ impl MappedStore {
 
     fn slice(&self, i: usize) -> BlobBytes {
         let e = self.extents[i];
-        BlobBytes::new(self.seg.clone(), self.payload_base + e.off as usize, e.len as usize)
+        // open() proved these conversions and the summed range fit — spell
+        // them out so a 32-bit build cannot silently wrap here either
+        let off = usize::try_from(e.off).expect("validated on open");
+        let len = usize::try_from(e.len).expect("validated on open");
+        BlobBytes::new(self.seg.clone(), self.payload_base + off, len)
     }
 
     /// Match the operator's traversal-order `(level, len)` blob shapes
@@ -452,6 +464,57 @@ mod tests {
         std::fs::write(&path, &bad).unwrap();
         let err = MappedStore::open(&path).unwrap_err();
         assert!(err.contains("checksum"), "{err}");
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Hand-build an `HMPK` file with a VALID header checksum but hostile
+    /// field values — the corruption tests above can't reach the arithmetic
+    /// checks, because the checksum rejects tampered headers first.
+    fn forge(n_extents: u64, payload_len: u64, extents: &[(u32, u64, u64, u64)], payload: &[u8]) -> Vec<u8> {
+        let mut h = Vec::new();
+        h.extend_from_slice(MAGIC);
+        h.extend_from_slice(&PACK_VERSION.to_le_bytes());
+        h.extend_from_slice(&n_extents.to_le_bytes());
+        h.extend_from_slice(&payload_len.to_le_bytes());
+        for &(level, off, len, sum) in extents {
+            h.extend_from_slice(&level.to_le_bytes());
+            h.extend_from_slice(&off.to_le_bytes());
+            h.extend_from_slice(&len.to_le_bytes());
+            h.extend_from_slice(&sum.to_le_bytes());
+        }
+        h.extend_from_slice(&fnv1a(&h).to_le_bytes());
+        h.extend_from_slice(payload);
+        h
+    }
+
+    #[test]
+    fn hostile_wraparound_offsets_rejected() {
+        let path = tmp("wraparound.hmpk");
+
+        // extent count near u64::MAX: n * EXTENT_BYTES must not wrap into a
+        // small header_len that happens to match the file size
+        std::fs::write(&path, forge(u64::MAX, 0, &[], &[])).unwrap();
+        let err = MappedStore::open(&path).unwrap_err();
+        assert!(err.contains("overflow"), "{err}");
+
+        // payload_len = u64::MAX: header_len + payload_len must not wrap
+        std::fs::write(&path, forge(0, u64::MAX, &[], &[])).unwrap();
+        let err = MappedStore::open(&path).unwrap_err();
+        assert!(err.contains("overflow"), "{err}");
+
+        // extent off + len wraps past u64::MAX: with narrowing arithmetic the
+        // wrapped end passes `end <= payload_len` and the slice reads out of
+        // bounds; the checked math must reject it instead
+        let payload = [7u8; 8];
+        std::fs::write(&path, forge(1, 8, &[(0, u64::MAX - 3, 8, fnv1a(&payload))], &payload)).unwrap();
+        let err = MappedStore::open(&path).unwrap_err();
+        assert!(err.contains("overflow") || err.contains("range"), "{err}");
+
+        // in-range arithmetic but the extent pokes past the payload
+        std::fs::write(&path, forge(1, 8, &[(0, 4, 8, fnv1a(&payload))], &payload)).unwrap();
+        let err = MappedStore::open(&path).unwrap_err();
+        assert!(err.contains("outside payload"), "{err}");
 
         std::fs::remove_file(&path).ok();
     }

@@ -1,0 +1,281 @@
+//! Remote fleet pinning: the cross-process scatter/gather tier (couriers ↔
+//! `serve_worker` over loopback TCP) must reproduce the in-process sharded
+//! server **bitwise** — all three formats, compressed and uncompressed,
+//! forward / adjoint / multi-RHS — and survive the failure paths: hostile
+//! frames are rejected without taking the worker down, a killed worker is
+//! replaced by a health-checked restart with in-flight replay, and the
+//! fault-injection hook simulates a mid-stream crash that replays
+//! transparently. Workers run as threads here (same binary, own sockets);
+//! the CI smoke covers the separate-process topology.
+
+use hmatc::cluster::{BlockTree, ClusterTree, StdAdmissibility};
+use hmatc::compress::{Codec, CompressionConfig};
+use hmatc::coordinator::{
+    bind_listener, bind_listener_retry, serve_worker, BatchPolicy, MvmServer, RemoteConfig, RemoteShardClient,
+};
+use hmatc::geometry::icosphere;
+use hmatc::hmatrix::HMatrix;
+use hmatc::kernelfn::{LaplaceSlp, MatrixGen};
+use hmatc::la::DMatrix;
+use hmatc::lowrank::AcaOptions;
+use hmatc::plan::{row_partition, ExecutorKind, HOperator, PlannedOperator, ShardPlan};
+use hmatc::util::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+fn build_h(level: usize, eps: f64) -> HMatrix {
+    let geom = icosphere(level);
+    let gen = LaplaceSlp::new(&geom);
+    let ct = Arc::new(ClusterTree::build(gen.points(), 16));
+    let bt = Arc::new(BlockTree::build(&ct, &ct, &StdAdmissibility::new(2.0)));
+    HMatrix::build(&bt, &gen, &AcaOptions::with_eps(eps))
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: row {i}: {x:e} vs {y:e}");
+    }
+}
+
+/// Test-speed knobs: tight heartbeat so reconnect probes come fast, many
+/// attempts so a restarting worker is always found before failover.
+fn fast_cfg() -> RemoteConfig {
+    RemoteConfig {
+        connect_timeout: Duration::from_millis(1_000),
+        io_timeout: Duration::from_secs(10),
+        heartbeat: Duration::from_millis(100),
+        backoff: Duration::from_millis(10),
+        backoff_max: Duration::from_millis(100),
+        max_attempts: 100,
+        pipeline: 2,
+    }
+}
+
+/// Bind an ephemeral loopback port and serve the operator from a thread —
+/// the in-test stand-in for one `hmatc shard-worker` process. Without a
+/// quota the accept loop never returns, so callers leak the handle.
+fn spawn_worker(op: Arc<PlannedOperator>, exit_after: Option<u64>) -> (String, JoinHandle<Result<(), String>>) {
+    let listener = bind_listener("127.0.0.1:0").expect("bind ephemeral worker port");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let h = std::thread::spawn(move || serve_worker(listener, op, ExecutorKind::StaticLpt, exit_after));
+    (addr, h)
+}
+
+fn start_fleet(op: &Arc<PlannedOperator>, workers: usize) -> (Vec<String>, MvmServer) {
+    let addrs: Vec<String> = (0..workers).map(|_| spawn_worker(op.clone(), None).0).collect();
+    let server = MvmServer::start_remote(op.clone(), &addrs, BatchPolicy::default(), fast_cfg()).expect("remote fleet starts");
+    (addrs, server)
+}
+
+/// Two-worker loopback fleet vs the in-process sharded server vs the
+/// unsharded plan: single calls and a multi-RHS panel, all bitwise.
+fn check_remote_matches_sharded(op: Arc<PlannedOperator>, tag: &str) {
+    let (nr, nc) = (op.nrows(), op.ncols());
+    let mut rng = Rng::new(777);
+    let xs: Vec<Vec<f64>> = (0..4).map(|_| rng.vector(nc)).collect();
+    let panel = DMatrix::random(nc, 3, &mut rng);
+
+    let sharded = MvmServer::start_sharded(op.clone(), 2, ExecutorKind::StaticLpt, BatchPolicy::default()).expect("sharded");
+    let want: Vec<Vec<f64>> = xs.iter().map(|x| sharded.call(x.clone()).y).collect();
+    let want_panel = sharded.call_panel(panel.clone()).y;
+    drop(sharded);
+
+    let (_addrs, remote) = start_fleet(&op, 2);
+    for (x, w) in xs.iter().zip(&want) {
+        let got = remote.call(x.clone());
+        assert_eq!(got.y.len(), nr, "{tag}: response length");
+        assert_bits_eq(&got.y, w, &format!("{tag} remote vs sharded"));
+        // and against the unsharded plan, the ground truth both tiers chase
+        let mut flat = vec![0.0; nr];
+        op.apply(1.0, x, &mut flat);
+        assert_bits_eq(&got.y, &flat, &format!("{tag} remote vs unsharded"));
+    }
+    let got_panel = remote.call_panel(panel.clone());
+    assert_eq!(got_panel.ncols, 3, "{tag}: panel columns");
+    assert_bits_eq(&got_panel.y, &want_panel, &format!("{tag} remote panel"));
+
+    // the fleet actually went over sockets: every shard shipped and
+    // received bytes and completed round trips
+    for (i, c) in remote.metrics.shard_counters().iter().enumerate() {
+        let s = c.snapshot();
+        assert!(s.net_tx > 0, "{tag}: shard {i} sent nothing");
+        assert!(s.net_rx > 0, "{tag}: shard {i} received nothing");
+        assert!(s.round_trips > 0, "{tag}: shard {i} completed no round trips");
+    }
+    let line = remote.metrics.net_summary().expect("net summary after remote serving");
+    assert!(line.starts_with("net: tx "), "unexpected net summary: {line}");
+    drop(remote); // must not hang
+}
+
+#[test]
+fn remote_fleet_matches_in_process_sharded_bitwise_h() {
+    let h0 = build_h(2, 1e-7);
+    for compress in [false, true] {
+        let mut h = h0.clone();
+        if compress {
+            h.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let op = Arc::new(PlannedOperator::from_h_with(Arc::new(h), ExecutorKind::StaticLpt));
+        check_remote_matches_sharded(op, &format!("H compress={compress}"));
+    }
+}
+
+#[test]
+fn remote_fleet_matches_in_process_sharded_bitwise_uh() {
+    let h0 = build_h(2, 1e-7);
+    for compress in [false, true] {
+        let mut uh = hmatc::uniform::build_from_h(&h0, 1e-6, hmatc::uniform::CouplingKind::Combined);
+        if compress {
+            uh.compress(&CompressionConfig { codec: Codec::Fpx, eps: 1e-9, valr: true });
+        }
+        let op = Arc::new(PlannedOperator::from_uniform_with(Arc::new(uh), ExecutorKind::StaticLpt));
+        check_remote_matches_sharded(op, &format!("UH compress={compress}"));
+    }
+}
+
+#[test]
+fn remote_fleet_matches_in_process_sharded_bitwise_h2() {
+    let h0 = build_h(2, 1e-7);
+    for compress in [false, true] {
+        let mut h2 = hmatc::h2::build_from_h(&h0, 1e-6);
+        if compress {
+            h2.compress(&CompressionConfig { codec: Codec::Aflp, eps: 1e-9, valr: true });
+        }
+        let op = Arc::new(PlannedOperator::from_h2_with(Arc::new(h2), ExecutorKind::StaticLpt));
+        check_remote_matches_sharded(op, &format!("H2 compress={compress}"));
+    }
+}
+
+/// The protocol-level client: forward and adjoint jobs against each shard
+/// worker individually must match the local [`ShardPlan`] bit for bit.
+#[test]
+fn remote_shard_client_forward_and_adjoint_match_shard_plans() {
+    let h = build_h(2, 1e-7);
+    let op = Arc::new(PlannedOperator::from_h_with(Arc::new(h), ExecutorKind::StaticLpt));
+    let dims = (op.nrows() as u64, op.ncols() as u64);
+    let mut rng = Rng::new(99);
+    let xf = DMatrix::random(op.ncols(), 2, &mut rng);
+    let xa = DMatrix::random(op.nrows(), 2, &mut rng);
+    for spec in row_partition(&op, 2).expect("partition") {
+        let local = ShardPlan::build(&op, spec.clone(), ExecutorKind::StaticLpt);
+        let (addr, _worker) = spawn_worker(op.clone(), None);
+        let mut client = RemoteShardClient::connect(&addr, &spec, dims, &fast_cfg()).expect("client connects");
+        for (adjoint, x) in [(false, &xf), (true, &xa)] {
+            let (rows, got) = client.call(7, x, adjoint).expect("remote job");
+            assert_eq!(rows, local.owned(adjoint), "shard {} owned rows", spec.index);
+            let mut want = DMatrix::zeros(rows.len(), x.ncols());
+            local.apply_multi_owned(adjoint, 1.0, x, None, &mut want);
+            assert_bits_eq(got.data(), want.data(), &format!("shard {} adjoint={adjoint}", spec.index));
+        }
+    }
+}
+
+/// Hostile frames must be rejected (connection dropped, clear reason) while
+/// the worker keeps serving well-formed clients — no UB, no wedge, no exit.
+#[test]
+fn hostile_frames_are_rejected_and_the_worker_keeps_serving() {
+    let h = build_h(1, 1e-6);
+    let op = Arc::new(PlannedOperator::from_h_with(Arc::new(h), ExecutorKind::StaticLpt));
+    let dims = (op.nrows() as u64, op.ncols() as u64);
+    let (addr, _worker) = spawn_worker(op.clone(), None);
+    let spec = row_partition(&op, 1).expect("partition").remove(0);
+
+    // a frame claiming to be 1 GiB + 1 (over MAX_FRAME)
+    let huge = (hmatc::coordinator::wire::MAX_FRAME as u32 + 1).to_le_bytes().to_vec();
+    // a hello frame with its checksum corrupted in the last byte
+    let mut bad_sum = hmatc::coordinator::wire::encode_frame(&hmatc::coordinator::wire::Frame::Hello {
+        version: hmatc::coordinator::wire::WIRE_VERSION,
+        nrows: dims.0,
+        ncols: dims.1,
+    });
+    *bad_sum.last_mut().unwrap() ^= 0xFF;
+    // a coordinator from the future
+    let wrong_version = hmatc::coordinator::wire::encode_frame(&hmatc::coordinator::wire::Frame::Hello {
+        version: hmatc::coordinator::wire::WIRE_VERSION + 1,
+        nrows: dims.0,
+        ncols: dims.1,
+    });
+    // a frame cut off mid-body (write, then slam the connection shut)
+    let truncated = {
+        let full = hmatc::coordinator::wire::encode_frame(&hmatc::coordinator::wire::Frame::Ping);
+        full[..full.len() - 2].to_vec()
+    };
+    for (what, bytes) in [("huge length", huge), ("bad checksum", bad_sum), ("wrong version", wrong_version), ("truncated", truncated)] {
+        let mut s = TcpStream::connect(&addr).unwrap_or_else(|e| panic!("{what}: connect: {e}"));
+        s.write_all(&bytes).unwrap_or_else(|e| panic!("{what}: write: {e}"));
+        // half-close so the mid-frame cases see EOF, not a silent stall;
+        // the worker must then close on us rather than hang or crash
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+    // after all that abuse, a proper client is served correctly
+    let mut rng = Rng::new(5);
+    let x = DMatrix::random(op.ncols(), 1, &mut rng);
+    let mut client = RemoteShardClient::connect(&addr, &spec, dims, &fast_cfg()).expect("client connects after abuse");
+    let (rows, got) = client.call(1, &x, false).expect("job after abuse");
+    let mut want = vec![0.0; op.nrows()];
+    op.apply(1.0, x.col(0), &mut want);
+    assert_bits_eq(got.data(), &want[rows], "post-abuse result");
+}
+
+/// Kill a worker mid-stream (job quota) and restart it on the same address:
+/// the courier must reconnect with backoff, replay the in-flight job, and
+/// every response must stay bitwise correct — and the reconnect shows up in
+/// the per-shard network counters.
+#[test]
+fn killed_worker_restart_replays_in_flight_jobs() {
+    let h = build_h(1, 1e-6);
+    let op = Arc::new(PlannedOperator::from_h_with(Arc::new(h), ExecutorKind::StaticLpt));
+    // worker 0 dies after 2 jobs; a supervisor thread restarts it on the
+    // same address (SO_REUSEADDR + bind retry cover the handoff race)
+    let (addr0, dying) = spawn_worker(op.clone(), Some(2));
+    let respawn_op = op.clone();
+    let respawn_addr = addr0.clone();
+    let supervisor = std::thread::spawn(move || {
+        dying.join().expect("worker thread").expect("worker exits its quota cleanly");
+        let listener = bind_listener_retry(&respawn_addr, Duration::from_secs(10)).expect("rebind after quota exit");
+        serve_worker(listener, respawn_op, ExecutorKind::StaticLpt, None)
+    });
+    let (addr1, _steady) = spawn_worker(op.clone(), None);
+    let server =
+        MvmServer::start_remote(op.clone(), &[addr0, addr1], BatchPolicy::default(), fast_cfg()).expect("remote fleet starts");
+    let mut rng = Rng::new(4242);
+    for i in 0..6 {
+        let x = rng.vector(op.ncols());
+        let mut want = vec![0.0; op.nrows()];
+        op.apply(1.0, &x, &mut want);
+        let got = server.try_call(x).unwrap_or_else(|e| panic!("call {i} through restart: {e}"));
+        assert_bits_eq(&got.y, &want, &format!("call {i} through worker restart"));
+    }
+    let snap = server.metrics.shard_counters()[0].snapshot();
+    assert!(snap.reconnects >= 1, "shard 0 must have reconnected, counters: {snap:?}");
+    drop(server);
+    drop(supervisor); // steady-state accept loop: leaked, not joined
+}
+
+/// The fault-injection hook on the remote tier: the courier asks the worker
+/// to drop the connection before the job (a simulated crash), then replays
+/// it on the reconnect — the caller sees a correct answer, not an error.
+#[test]
+fn injected_fault_is_replayed_transparently() {
+    let h = build_h(1, 1e-6);
+    let op = Arc::new(PlannedOperator::from_h_with(Arc::new(h), ExecutorKind::StaticLpt));
+    let (_addrs, server) = start_fleet(&op, 2);
+    let mut rng = Rng::new(11);
+    let x = rng.vector(op.ncols());
+    let healthy = server.try_call(x.clone()).expect("healthy call");
+    server.inject_shard_fault(1);
+    let replayed = server.try_call(x.clone()).expect("faulted call must replay, not fail");
+    assert_bits_eq(&replayed.y, &healthy.y, "replayed response");
+    let snap = server.metrics.shard_counters()[1].snapshot();
+    assert!(snap.reconnects >= 1, "shard 1 must have reconnected after the crash, counters: {snap:?}");
+    // and the tier keeps serving
+    let again = server.try_call(x).expect("post-crash call");
+    assert_bits_eq(&again.y, &healthy.y, "post-crash response");
+}
